@@ -1,0 +1,76 @@
+//! Quickstart: load the AOT artifacts, run mixed-signal inference, and do
+//! a few on-chip DFA training steps — the whole three-layer stack in ~60
+//! lines of user code.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use m2ru::config::{Manifest, NetConfig};
+use m2ru::coordinator::{Engine, HardwareEngine};
+use m2ru::device::DeviceParams;
+use m2ru::nn::SeqBatch;
+use m2ru::rng::GaussianRng;
+use m2ru::runtime::{ModelBundle, Runtime};
+
+/// Toy class-conditional sequences (the same recipe the tests use).
+fn toy_batch(cfg: &NetConfig, b: usize, seed: u64) -> SeqBatch {
+    let mut proto_rng = GaussianRng::new(99);
+    let protos: Vec<Vec<f32>> = (0..cfg.ny)
+        .map(|_| (0..cfg.nx).map(|_| proto_rng.normal()).collect())
+        .collect();
+    let mut rng = GaussianRng::new(seed);
+    let mut sb = SeqBatch::zeros(b, cfg.nt, cfg.nx);
+    for i in 0..b {
+        let label = rng.below(cfg.ny);
+        sb.labels[i] = label;
+        for t in 0..cfg.nt {
+            for j in 0..cfg.nx {
+                sb.sample_mut(i)[t * cfg.nx + j] =
+                    (0.25 * rng.normal() + 0.75 * protos[label][j]).clamp(-1.0, 1.0);
+            }
+        }
+    }
+    sb
+}
+
+fn main() -> Result<()> {
+    // Layer-3 runtime: PJRT CPU client + artifact manifest.
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+    println!("platform: {}", rt.platform());
+
+    // Compile the `small` network's executables (lowered from JAX/Pallas).
+    let cfg = NetConfig::SMALL;
+    let bundle = ModelBundle::load(&rt, &manifest, cfg)?;
+    println!("loaded artifacts for `{}` ({}x{}x{}, nT={})", cfg.name, cfg.nx, cfg.nh, cfg.ny, cfg.nt);
+
+    // A hardware engine: weights live in simulated memristive crossbars,
+    // inference runs the weighted-bit-streaming datapath.
+    let mut engine = HardwareEngine::new(&bundle, 0.5, 0.7, 0.3, DeviceParams::default(), 7);
+
+    let test = toy_batch(&cfg, cfg.b_eval, 0);
+    let acc = |engine: &mut HardwareEngine, test: &SeqBatch| -> Result<f32> {
+        let preds = engine.eval_batch(test)?;
+        Ok(preds.iter().zip(&test.labels).filter(|(a, b)| a == b).count() as f32
+            / test.b as f32)
+    };
+
+    println!("accuracy before training: {:.2}", acc(&mut engine, &test)?);
+    for step in 0..40 {
+        let batch = toy_batch(&cfg, cfg.b_train, 1 + step);
+        let loss = engine.train_batch(&batch)?;
+        if step % 10 == 0 {
+            println!("  step {step:>3}: loss {loss:.4}");
+        }
+    }
+    println!("accuracy after 40 on-chip DFA steps: {:.2}", acc(&mut engine, &test)?);
+    println!(
+        "memristor writes issued: {} ({:.0} per step — ζ keeps {:.0}% of deltas)",
+        engine.programmer.total.writes,
+        engine.programmer.writes_per_step(),
+        100.0 * f64::from(cfg.keep_frac)
+    );
+    println!("quickstart OK");
+    Ok(())
+}

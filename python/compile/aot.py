@@ -1,0 +1,135 @@
+"""AOT compiler: lower every Layer-2 entry point to HLO **text**.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. Text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO
+text parser reassigns ids and round-trips cleanly.
+
+Emits, per network config (see configs.py):
+
+    forward_<cfg>.hlo.txt         software inference
+    forward_hw_<cfg>.hlo.txt      mixed-signal WBS/ADC datapath inference
+    train_dfa_<cfg>.hlo.txt       DFA step with K-WTA-sparsified deltas
+    train_dfa_dense_<cfg>.hlo.txt (selected configs) dense-delta DFA step
+    train_adam_<cfg>.hlo.txt      BPTT+Adam software baseline step
+
+plus ``manifest.txt`` describing shapes — the contract checked by
+``rust/src/runtime/artifacts.rs`` at load time.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.configs import CONFIGS, DENSE_TRAIN, NetConfig
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_specs(c: NetConfig):
+    return [
+        _spec(c.nx, c.nh),  # wh
+        _spec(c.nh, c.nh),  # uh
+        _spec(c.nh),  # bh
+        _spec(c.nh, c.ny),  # wo
+        _spec(c.ny),  # bo
+    ]
+
+
+def entries_for(c: NetConfig):
+    """(name, fn, arg_specs) for every artifact of one config."""
+    p = _param_specs(c)
+    scalar = _spec()
+    x_ev = _spec(c.b_eval, c.nt, c.nx)
+    x_tr = _spec(c.b_train, c.nt, c.nx)
+    y_tr = _spec(c.b_train, c.ny)
+    psi = _spec(c.ny, c.nh)
+    n_par = model.param_count(c)
+
+    ent = [
+        (
+            f"forward_{c.name}",
+            model.forward,
+            p + [scalar, scalar, x_ev],
+        ),
+        (
+            f"forward_hw_{c.name}",
+            functools.partial(model.forward_hw, cfg=c),
+            p + [scalar, scalar, scalar, scalar, x_ev],
+        ),
+        (
+            f"train_dfa_{c.name}",
+            functools.partial(model.train_dfa, keep_frac=c.keep_frac),
+            p + [scalar, scalar, scalar, psi, x_tr, y_tr],
+        ),
+        (
+            f"train_adam_{c.name}",
+            model.train_adam,
+            p + [_spec(n_par), _spec(n_par), scalar, scalar, scalar, scalar, x_tr, y_tr],
+        ),
+    ]
+    if c.name in DENSE_TRAIN:
+        ent.append(
+            (
+                f"train_dfa_dense_{c.name}",
+                model.train_dfa_dense,
+                p + [scalar, scalar, scalar, psi, x_tr, y_tr],
+            )
+        )
+    return ent
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--configs",
+        default=",".join(CONFIGS),
+        help="comma-separated config names (default: all)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = ["format 1"]
+    for cname in args.configs.split(","):
+        c = CONFIGS[cname]
+        manifest.append(
+            f"config {c.name} nx={c.nx} nh={c.nh} ny={c.ny} nt={c.nt} "
+            f"btrain={c.b_train} beval={c.b_eval} nb={c.nb} adc={c.adc_bits} "
+            f"keep={c.keep_frac}"
+        )
+        for name, fn, specs in entries_for(c):
+            lowered = jax.jit(fn).lower(*specs)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(args.outdir, fname), "w") as f:
+                f.write(text)
+            manifest.append(f"artifact {name} file={fname} nargs={len(specs)}")
+            print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {args.outdir}/manifest.txt ({len(manifest)} lines)")
+
+
+if __name__ == "__main__":
+    main()

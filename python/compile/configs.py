@@ -1,0 +1,45 @@
+"""Network configurations shared between the AOT compiler and the rust
+coordinator.
+
+Every configuration is lowered to a fixed-shape set of HLO-text artifacts
+(see aot.py); the rust side mirrors these shapes in
+``rust/src/config/netcfg.rs``. Keep the two in sync — the emitted
+``artifacts/manifest.txt`` is the contract and is checked by rust at load
+time.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """One MiRU network instantiation (shapes are lowering-time static)."""
+
+    name: str
+    nx: int  # input features per time step
+    nh: int  # hidden MiRU units
+    ny: int  # output classes
+    nt: int  # sequence length (fixed, per paper footnote 1)
+    b_train: int  # training batch
+    b_eval: int  # evaluation batch
+    nb: int = 8  # weighted-bit-streaming input precision (bits)
+    adc_bits: int = 8  # ADC precision on the integrator read-out
+    keep_frac: float = 0.53  # K-WTA gradient keep fraction (~47% write cut)
+
+
+# The paper's evaluation points (§VI):
+#   * permuted sequential MNIST, 28x28 presented row-by-row  (28x{100,256}x10)
+#   * split CIFAR-10 through frozen ResNet-18 features (512-d), presented
+#     as a 16-step sequence of 32-d chunks; domain-incremental 2-way head.
+#   * `small` is a fast config for tests / quickstart.
+CONFIGS = {
+    "small": NetConfig("small", nx=8, nh=16, ny=4, nt=5, b_train=8, b_eval=16),
+    "pmnist100": NetConfig("pmnist100", nx=28, nh=100, ny=10, nt=28, b_train=32, b_eval=200),
+    "pmnist256": NetConfig("pmnist256", nx=28, nh=256, ny=10, nt=28, b_train=32, b_eval=200),
+    "cifar100": NetConfig("cifar100", nx=32, nh=100, ny=2, nt=16, b_train=32, b_eval=200),
+    "cifar256": NetConfig("cifar256", nx=32, nh=256, ny=2, nt=16, b_train=32, b_eval=200),
+}
+
+# Configs that additionally get a dense (no K-WTA) DFA train artifact, used
+# by the Fig. 5(b) endurance study (before/after sparsification).
+DENSE_TRAIN = ("small", "pmnist100")

@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernel: weighted-bit-streaming (WBS) crossbar VMM.
+
+This is the paper's compute hot-spot (§V-A): a multi-bit digital input
+vector is streamed into the memristive crossbar one bit-plane at a time;
+each plane's bitline current is weighted by the memristor-ratio gain
+(M_f/M_i)_k = 2^-k and accumulated on the integrator capacitor (Eq. 15).
+
+TPU adaptation (DESIGN.md §3): the crossbar's wordline/bitline structure
+maps onto a blocked matmul — the conductance slab for one tile of bitlines
+stays resident in VMEM while the innermost ``fori_loop`` replays the n_b
+bit-planes against it, i.e. the "integrator" is a VMEM accumulator. The
+bitline KCL sum is the contraction dimension and lands on the MXU.
+
+Bit convention: inputs are normalized to [-1, 1]; magnitude is quantized
+to n_b bits (m = round(|x| * (2^n_b - 1))) and streamed MSB-first with
+significance 2^-k, k = 1..n_b, so the analog sum reconstructs
+sign(x) * m / 2^n_b. The sign is carried by the pulse polarity (the paper's
+±0.1 V level shifter, Fig. 3-Left).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are validated against ``ref.py`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wbs_kernel_bit_serial(x_ref, g_ref, o_ref, *, nb: int):
+    """Bit-serial formulation: one grid step = all wordlines x one tile of
+    bitlines, accumulating the n_b bit-planes exactly as the hardware
+    streams them (the integrator is the VMEM accumulator). This is the
+    dataflow-faithful variant used by the kernel tests."""
+    x = x_ref[...]  # [B, n_in]  normalized analog inputs
+    g = g_ref[...]  # [n_in, T]  effective (differential) conductances
+    sign = jnp.sign(x)
+    # Digitization: n_b-bit magnitude, as the level shifter sees it.
+    mag = jnp.round(jnp.abs(x) * (2.0**nb - 1.0))
+
+    def bit_plane(k, acc):
+        # MSB-first: plane k carries bit value floor(m / 2^(nb-1-k)) mod 2
+        # with integrator gain (M_f/M_i) = 2^-(k+1).
+        bit = jnp.floor_divide(mag, 2.0 ** (nb - 1 - k)) % 2.0
+        pulses = bit * sign  # ±0.1 V pulse polarity encodes the sign
+        return acc + (2.0 ** -(k + 1)) * jnp.dot(
+            pulses, g, preferred_element_type=jnp.float32
+        )
+
+    acc0 = jnp.zeros((x.shape[0], g.shape[1]), jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, nb, bit_plane, acc0)
+
+
+def _wbs_kernel_folded(x_ref, g_ref, o_ref, *, nb: int):
+    """Folded formulation (§Perf): the WBS significance-weighted sum is
+    linear in the bit-planes — Σ_k 2^-k b_k = sign·m/2^nb — so the whole
+    bit stream collapses into a single MXU contraction over the resident
+    weight slab. Bit-exact with the bit-serial variant (same digitization,
+    same rounding); the temporal multiplexing is a hardware property, not
+    a numerical one. ~n_b× fewer dot passes on the CPU/MXU."""
+    x = x_ref[...]
+    g = g_ref[...]
+    mag = jnp.round(jnp.abs(x) * (2.0**nb - 1.0))
+    val = jnp.sign(x) * mag * (2.0**-nb)
+    o_ref[...] = jnp.dot(val, g, preferred_element_type=jnp.float32)
+
+
+def _col_tile(n_out: int) -> int:
+    """Largest bitline tile ≤128 that divides n_out (VMEM-friendly)."""
+    for t in (128, 64, 50, 32, 25, 16, 8, 5, 4, 2):
+        if n_out % t == 0 and t <= n_out:
+            return t
+    return n_out
+
+
+def wbs_vmm(
+    x: jax.Array, g: jax.Array, *, nb: int = 8, bit_serial: bool = False
+) -> jax.Array:
+    """Weighted-bit-streaming crossbar VMM.
+
+    Args:
+      x: [B, n_in] inputs in [-1, 1] (pre-normalized digital features).
+      g: [n_in, n_out] effective bipolar weights (G_tunable − G_ref, scaled).
+      nb: input bit precision streamed over the wordlines.
+      bit_serial: emulate the bit-planes one at a time (dataflow-faithful,
+        used by tests); False folds the linear bit sum into one
+        contraction (bit-exact, ~n_b× faster — see §Perf).
+
+    Returns:
+      [B, n_out] integrator voltages ≈ quantize_nb(x) @ g.
+    """
+    b, n_in = x.shape
+    n_in_g, n_out = g.shape
+    assert n_in == n_in_g, (x.shape, g.shape)
+    t = _col_tile(n_out)
+    kernel = _wbs_kernel_bit_serial if bit_serial else _wbs_kernel_folded
+    return pl.pallas_call(
+        functools.partial(kernel, nb=nb),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+        grid=(n_out // t,),
+        in_specs=[
+            pl.BlockSpec((b, n_in), lambda j: (0, 0)),
+            pl.BlockSpec((n_in, t), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, t), lambda j: (0, j)),
+        interpret=True,
+    )(x.astype(jnp.float32), g.astype(jnp.float32))
+
+
+def adc_quantize(v: jax.Array, *, bits: int, v_scale: jax.Array) -> jax.Array:
+    """Shared-ADC read-out of the integrator voltage (§IV-B1).
+
+    The accumulated voltage is clipped to the ADC full-scale range
+    (±v_scale) and quantized to `bits` signed levels; the digital shift
+    that restores the synaptic dynamic range is folded back in.
+    """
+    levels = 2.0 ** (bits - 1) - 1.0
+    x = jnp.clip(v / v_scale, -1.0, 1.0)
+    return jnp.round(x * levels) / levels * v_scale

@@ -1,0 +1,88 @@
+"""Layer-1 Pallas kernel: fused MiRU cell step.
+
+Implements Eqs. (1)-(2) of the paper as a single fused kernel:
+
+    h~_t = tanh(x_t W_h + (beta * h_{t-1}) U_h + b_h)
+    h_t  = lambda * h_{t-1} + (1 - lambda) * h~_t
+
+The reset (beta) and update (lambda) coefficients are *hyperparameters*
+(shared scalars, one register in hardware — paper footnote 2), passed as
+traced scalars so the rust coordinator can sweep them without recompiling.
+
+Tiling: one grid step computes all batch rows for a tile of hidden units;
+the W_h / U_h column slabs for that tile are VMEM-resident and both matmuls
+hit the MXU. The interpolation is fused behind the tanh so h_t never spills.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _miru_kernel(x_ref, h_ref, wh_ref, uh_ref, bh_ref, lam_ref, beta_ref, o_ref):
+    x = x_ref[...]  # [B, nx]
+    h = h_ref[...]  # [B, nh] (full previous state: U_h needs all of it)
+    wh = wh_ref[...]  # [nx, T]
+    uh = uh_ref[...]  # [nh, T]
+    bh = bh_ref[...]  # [1, T]
+    lam = lam_ref[0]
+    beta = beta_ref[0]
+    pre = (
+        jnp.dot(x, wh, preferred_element_type=jnp.float32)
+        + jnp.dot(beta * h, uh, preferred_element_type=jnp.float32)
+        + bh
+    )
+    cand = jnp.tanh(pre)
+    # h tile corresponding to this output tile for the interpolation:
+    j = pl.program_id(0)
+    t = o_ref.shape[1]
+    h_tile = jax.lax.dynamic_slice_in_dim(h, j * t, t, axis=1)
+    o_ref[...] = lam * h_tile + (1.0 - lam) * cand
+
+
+def _col_tile(n: int) -> int:
+    for t in (128, 64, 50, 32, 25, 16, 8, 5, 4, 2):
+        if n % t == 0 and t <= n:
+            return t
+    return n
+
+
+def miru_step(
+    x: jax.Array,
+    h: jax.Array,
+    wh: jax.Array,
+    uh: jax.Array,
+    bh: jax.Array,
+    lam: jax.Array,
+    beta: jax.Array,
+) -> jax.Array:
+    """One fused MiRU time step. Shapes: x [B,nx], h [B,nh] -> [B,nh]."""
+    b, nx = x.shape
+    nh = h.shape[1]
+    t = _col_tile(nh)
+    lam = jnp.asarray(lam, jnp.float32).reshape((1,))
+    beta = jnp.asarray(beta, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _miru_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, nh), jnp.float32),
+        grid=(nh // t,),
+        in_specs=[
+            pl.BlockSpec((b, nx), lambda j: (0, 0)),
+            pl.BlockSpec((b, nh), lambda j: (0, 0)),
+            pl.BlockSpec((nx, t), lambda j: (0, j)),
+            pl.BlockSpec((nh, t), lambda j: (0, j)),
+            pl.BlockSpec((1, t), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, t), lambda j: (0, j)),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        h.astype(jnp.float32),
+        wh.astype(jnp.float32),
+        uh.astype(jnp.float32),
+        bh.astype(jnp.float32).reshape(1, nh),
+        lam,
+        beta,
+    )

@@ -1,0 +1,47 @@
+"""Layer-1 Pallas kernel: stochastic quantizer (replay-path compression).
+
+Implements Eqs. (4)-(6): an 8-bit feature x in [0,1) is compressed to n_b
+bits with stochastic rounding — round up with probability equal to the
+fractional part, so the quantizer is unbiased (E[q/2^nb] = x up to the
+clip). The hardware uses an LFSR for r ~ U(0,1); here r is an explicit
+input tensor so the rust coordinator (which owns the LFSR) and the python
+oracle can be driven by the *same* random draw in tests.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _squant_kernel(x_ref, r_ref, o_ref, *, nb: int):
+    x = x_ref[...]
+    r = r_ref[...]
+    z = x * (2.0**nb)
+    fl = jnp.floor(z)
+    frac = z - fl
+    up = (r < frac) & (fl < 2.0**nb - 1.0)
+    o_ref[...] = jnp.where(up, fl + 1.0, fl)
+
+
+def stochastic_quantize(x: jax.Array, r: jax.Array, *, nb: int = 4) -> jax.Array:
+    """Quantize features in [0,1) to integer codes in [0, 2^nb - 1].
+
+    Args:
+      x: [..., n] features in [0, 1).
+      r: same shape, uniform(0,1) draws (the hardware LFSR output).
+      nb: target bit width (paper: 8-bit -> 4-bit, 2x replay compression).
+
+    Returns:
+      integer codes as float32 (dequantize with q / 2^nb).
+    """
+    assert x.shape == r.shape
+    flat = x.reshape(1, -1).astype(jnp.float32)
+    rflat = r.reshape(1, -1).astype(jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_squant_kernel, nb=nb),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, rflat)
+    return out.reshape(x.shape)

@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These implement the same mathematics with no pallas machinery; pytest
+(and hypothesis sweeps) assert allclose between kernel and oracle across
+shapes and precisions. They are also the executable spec the rust `nn`
+module's unit tests were written against (same constants, same rounding).
+"""
+
+import jax.numpy as jnp
+
+
+def wbs_input_quantize(x, nb: int):
+    """The digitization the WBS wordline drivers apply to an analog input
+    in [-1,1]: sign/magnitude, n_b-bit magnitude, reconstructed as m/2^nb."""
+    mag = jnp.round(jnp.abs(x) * (2.0**nb - 1.0))
+    return jnp.sign(x) * mag / (2.0**nb)
+
+
+def wbs_vmm_ref(x, g, nb: int = 8):
+    """Oracle for crossbar.wbs_vmm: quantized input times conductances."""
+    return wbs_input_quantize(x.astype(jnp.float32), nb) @ g.astype(jnp.float32)
+
+
+def adc_quantize_ref(v, bits: int, v_scale):
+    levels = 2.0 ** (bits - 1) - 1.0
+    x = jnp.clip(v / v_scale, -1.0, 1.0)
+    return jnp.round(x * levels) / levels * v_scale
+
+
+def miru_step_ref(x, h, wh, uh, bh, lam, beta):
+    """Oracle for miru.miru_step — Eqs. (1)-(2) verbatim."""
+    pre = x @ wh + (beta * h) @ uh + bh
+    cand = jnp.tanh(pre)
+    return lam * h + (1.0 - lam) * cand
+
+
+def stochastic_quantize_ref(x, r, nb: int = 4):
+    """Oracle for quantizer.stochastic_quantize — Eqs. (4)-(6) verbatim."""
+    z = x * (2.0**nb)
+    fl = jnp.floor(z)
+    frac = z - fl
+    up = (r < frac) & (fl < 2.0**nb - 1.0)
+    return jnp.where(up, fl + 1.0, fl)
+
+
+def uniform_quantize_ref(x, nb: int = 4):
+    """Plain truncation quantizer (the Fig. 5(a) baseline)."""
+    z = jnp.floor(x * (2.0**nb))
+    return jnp.clip(z, 0.0, 2.0**nb - 1.0)
+
+
+def kwta_ref(g, keep: int):
+    """K-winner-take-all gradient sparsifier ζ: keep the `keep` largest
+    |g| entries of the flattened tensor, zero the rest."""
+    flat = jnp.abs(g).reshape(-1)
+    if keep >= flat.shape[0]:
+        return g
+    thresh = jnp.sort(flat)[flat.shape[0] - keep]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)

@@ -1,0 +1,208 @@
+"""Layer-2: MiRU network forward/backward in JAX (build-time only).
+
+Defines every computation the rust coordinator executes at runtime:
+
+  * ``forward``        — software inference (pure jnp, XLA-fused).
+  * ``forward_hw``     — hardware-model inference: the WBS crossbar Pallas
+                         kernel (L1) + shared-ADC quantization on every
+                         VMM, exactly the §IV-B datapath. The conductance
+                         nonidealities (discretization, device variability)
+                         are applied by the rust device model *before* the
+                         weights are fed in, so device physics stays in one
+                         place (rust/src/device/).
+  * ``train_dfa``      — one DFA-through-time step (Algorithm 1): returns
+                         K-WTA-sparsified gradients. The rust coordinator
+                         applies them (Ziksa programming + endurance
+                         accounting own the actual write).
+  * ``train_dfa_dense``— same without the ζ sparsifier (Fig. 5(b) baseline).
+  * ``train_adam``     — BPTT + Adam software baseline (Fig. 4 curves).
+
+Parameter order is the contract with rust/src/runtime/artifacts.rs:
+  (wh [nx,nh], uh [nh,nh], bh [nh], wo [nh,ny], bo [ny]).
+
+All loss/readout is at the final time step (the paper trains the readout
+from x^{n_T} only, §IV-B2).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from compile.configs import NetConfig
+from compile.kernels.crossbar import adc_quantize, wbs_vmm
+
+
+# ---------------------------------------------------------------------------
+# Software forward (Eqs. 1-3)
+# ---------------------------------------------------------------------------
+
+
+def _scan_forward(wh, uh, bh, lam, beta, x):
+    """Run the MiRU layer over time. x: [B, nT, nx] -> hT, (h_prev, cand)."""
+    b = x.shape[0]
+    nh = uh.shape[0]
+    h0 = jnp.zeros((b, nh), jnp.float32)
+
+    def step(h, x_t):
+        pre = x_t @ wh + (beta * h) @ uh + bh
+        cand = jnp.tanh(pre)
+        h_new = lam * h + (1.0 - lam) * cand
+        return h_new, (h, cand)
+
+    h_t, (h_prevs, cands) = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+    return h_t, h_prevs, cands
+
+
+def forward(wh, uh, bh, wo, bo, lam, beta, x):
+    """Software inference: final-step logits. Returns (logits,)."""
+    h_t, _, _ = _scan_forward(wh, uh, bh, lam, beta, x)
+    return (h_t @ wo + bo,)
+
+
+# ---------------------------------------------------------------------------
+# Hardware-model forward (WBS crossbar + shared ADC, §IV-B1/B2)
+# ---------------------------------------------------------------------------
+
+
+def forward_hw(wh, uh, bh, wo, bo, lam, beta, vscale_h, vscale_o, x, *, cfg: NetConfig):
+    """Mixed-signal datapath: every VMM goes through the Pallas WBS kernel,
+    the integrator voltage is read by the shared ADC (adc_quantize), the
+    tanh is the digital piecewise-linear unit, and the interpolation is the
+    serialized digital stage. Returns (logits,)."""
+    b = x.shape[0]
+    nh = uh.shape[0]
+    g_hidden = jnp.concatenate([wh, uh], axis=0)  # [(nx+nh), nh] crossbar layout
+    h0 = jnp.zeros((b, nh), jnp.float32)
+
+    def step(h, x_t):
+        drive = jnp.concatenate([x_t, beta * h], axis=1)  # wordline voltages
+        v_int = wbs_vmm(drive, g_hidden, nb=cfg.nb)
+        acc = adc_quantize(v_int, bits=cfg.adc_bits, v_scale=vscale_h)
+        cand = jnp.tanh(acc + bh)
+        h_new = lam * h + (1.0 - lam) * cand
+        return h_new, None
+
+    h_t, _ = jax.lax.scan(step, h0, jnp.swapaxes(x, 0, 1))
+    v_out = wbs_vmm(h_t, wo, nb=cfg.nb)
+    logits = adc_quantize(v_out, bits=cfg.adc_bits, v_scale=vscale_o) + bo
+    return (logits,)
+
+
+# ---------------------------------------------------------------------------
+# DFA-through-time (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def _kwta(g, keep_frac: float):
+    """ζ: keep the top ``keep_frac`` fraction of entries by magnitude.
+
+    Implemented with ``jnp.sort`` rather than ``lax.top_k``: top_k lowers
+    to the HLO ``topk`` op whose text form the runtime's XLA (0.5.1)
+    parser rejects; ``sort`` round-trips fine.
+    """
+    flat = g.reshape(-1)
+    keep = max(1, math.ceil(keep_frac * flat.shape[0]))
+    if keep >= flat.shape[0]:
+        return g
+    thresh = jnp.sort(jnp.abs(flat))[flat.shape[0] - keep]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def _dfa_grads(wh, uh, bh, wo, bo, lam, beta, psi, x, y):
+    """Gradients per Algorithm 1 (final-step loss, error projected by Ψ)."""
+    b = x.shape[0]
+    h_t, h_prevs, cands = _scan_forward(wh, uh, bh, lam, beta, x)
+
+    logits = h_t @ wo + bo
+    p = jax.nn.softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(y * jax.nn.log_softmax(logits, axis=-1), axis=-1))
+    delta_o = (p - y) / b  # [B, ny]
+
+    d_wo = h_t.T @ delta_o
+    d_bo = jnp.sum(delta_o, axis=0)
+
+    # Line 13: project the output error straight to the hidden layer.
+    e = delta_o @ psi  # [B, nh], identical for every t (final-step loss)
+
+    # Lines 14-16, accumulated back over time. Note the paper's λ factor on
+    # the hidden delta (Line 14) — kept verbatim; DFA is not an exact
+    # gradient, the factor only rescales the effective hidden-layer lr.
+    gprime = 1.0 - cands**2  # [nT, B, nh]
+    dh = lam * e[None, :, :] * gprime
+    x_tbx = jnp.swapaxes(x, 0, 1)  # [nT, B, nx]
+    d_wh = jnp.einsum("tbi,tbj->ij", x_tbx, dh)
+    d_uh = jnp.einsum("tbi,tbj->ij", beta * h_prevs, dh)
+    d_bh = jnp.sum(dh, axis=(0, 1))
+    return d_wh, d_uh, d_bh, d_wo, d_bo, loss
+
+
+def train_dfa(wh, uh, bh, wo, bo, lam, beta, lr, psi, x, y, *, keep_frac: float):
+    """One DFA step. Returns the *scaled, sparsified* weight deltas that the
+    rust write-control logic programs into the crossbars, plus the loss:
+    (d_wh, d_uh, d_bh, d_wo, d_bo, loss). Deltas already include -lr."""
+    d_wh, d_uh, d_bh, d_wo, d_bo, loss = _dfa_grads(
+        wh, uh, bh, wo, bo, lam, beta, psi, x, y
+    )
+    d_wh = _kwta(d_wh, keep_frac)
+    d_uh = _kwta(d_uh, keep_frac)
+    d_wo = _kwta(d_wo, keep_frac)
+    # Biases live in digital registers (not memristors): never sparsified.
+    return (-lr * d_wh, -lr * d_uh, -lr * d_bh, -lr * d_wo, -lr * d_bo, loss)
+
+
+def train_dfa_dense(wh, uh, bh, wo, bo, lam, beta, lr, psi, x, y):
+    """DFA step without ζ — the Fig. 5(b) 'before sparsification' baseline."""
+    d_wh, d_uh, d_bh, d_wo, d_bo, loss = _dfa_grads(
+        wh, uh, bh, wo, bo, lam, beta, psi, x, y
+    )
+    return (-lr * d_wh, -lr * d_uh, -lr * d_bh, -lr * d_wo, -lr * d_bo, loss)
+
+
+# ---------------------------------------------------------------------------
+# BPTT + Adam software baseline
+# ---------------------------------------------------------------------------
+
+_ADAM_B1, _ADAM_B2, _ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def train_adam(wh, uh, bh, wo, bo, m, v, step, lam, beta, lr, x, y):
+    """One BPTT+Adam step (true gradients via jax.grad through the scan).
+
+    m, v: [P] flattened first/second moments (P = total param count),
+    step: scalar iteration counter (float). Returns
+    (wh', uh', bh', wo', bo', m', v', step', loss).
+    """
+
+    def loss_fn(params):
+        wh_, uh_, bh_, wo_, bo_ = params
+        h_t, _, _ = _scan_forward(wh_, uh_, bh_, lam, beta, x)
+        logits = h_t @ wo_ + bo_
+        return -jnp.mean(
+            jnp.sum(y * jax.nn.log_softmax(logits, axis=-1), axis=-1)
+        )
+
+    params = (wh, uh, bh, wo, bo)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+
+    flat = jnp.concatenate([g.reshape(-1) for g in grads])
+    t = step + 1.0
+    m_new = _ADAM_B1 * m + (1.0 - _ADAM_B1) * flat
+    v_new = _ADAM_B2 * v + (1.0 - _ADAM_B2) * flat**2
+    mhat = m_new / (1.0 - _ADAM_B1**t)
+    vhat = v_new / (1.0 - _ADAM_B2**t)
+    upd = lr * mhat / (jnp.sqrt(vhat) + _ADAM_EPS)
+
+    out, off = [], 0
+    for p in params:
+        n = p.size
+        out.append(p - upd[off : off + n].reshape(p.shape))
+        off += n
+    wh2, uh2, bh2, wo2, bo2 = out
+    return (wh2, uh2, bh2, wo2, bo2, m_new, v_new, t, loss)
+
+
+def param_count(cfg: NetConfig) -> int:
+    return (
+        cfg.nx * cfg.nh + cfg.nh * cfg.nh + cfg.nh + cfg.nh * cfg.ny + cfg.ny
+    )

@@ -1,0 +1,87 @@
+"""AOT path: every entry point lowers to parseable HLO text with the
+expected parameter/result arity, and the manifest matches configs.py."""
+
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS, DENSE_TRAIN
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = CONFIGS["small"]
+
+
+@pytest.fixture(scope="module")
+def small_entries():
+    return aot.entries_for(SMALL)
+
+
+def test_entry_names_cover_all_variants(small_entries):
+    names = {n for n, _, _ in small_entries}
+    assert names == {
+        "forward_small",
+        "forward_hw_small",
+        "train_dfa_small",
+        "train_adam_small",
+        "train_dfa_dense_small",
+    }
+
+
+def test_dense_only_for_selected_configs():
+    for cname, c in CONFIGS.items():
+        names = {n for n, _, _ in aot.entries_for(c)}
+        assert (f"train_dfa_dense_{cname}" in names) == (cname in DENSE_TRAIN)
+
+
+@pytest.mark.parametrize("idx", range(5))
+def test_lowering_produces_hlo_text(small_entries, idx):
+    name, fn, specs = small_entries[idx]
+    lowered = jax.jit(fn).lower(*specs)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "ROOT" in text, name
+    # entry arity must match the arg specs (scalars included)
+    header = text.split("entry_computation_layout={")[1].split("->")[0]
+    assert header.count("f32[") == len(specs), name
+
+
+def test_train_dfa_output_arity(small_entries):
+    name, fn, specs = [e for e in small_entries if e[0] == "train_dfa_small"][0]
+    out = jax.eval_shape(fn, *specs)
+    assert len(out) == 6  # 5 deltas + loss
+    assert out[0].shape == (SMALL.nx, SMALL.nh)
+    assert out[1].shape == (SMALL.nh, SMALL.nh)
+    assert out[5].shape == ()
+
+
+def test_train_adam_output_arity(small_entries):
+    name, fn, specs = [e for e in small_entries if e[0] == "train_adam_small"][0]
+    out = jax.eval_shape(fn, *specs)
+    assert len(out) == 9  # 5 params + m + v + step + loss
+    assert out[5].shape == (model.param_count(SMALL),)
+
+
+def test_manifest_written(tmp_path):
+    import subprocess, sys
+
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--outdir", str(tmp_path), "--configs", "small"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr
+    man = (tmp_path / "manifest.txt").read_text().splitlines()
+    assert man[0] == "format 1"
+    assert any(l.startswith("config small nx=8 nh=16") for l in man)
+    arts = [l.split()[1] for l in man if l.startswith("artifact")]
+    assert len(arts) == 5
+    for l in man:
+        if l.startswith("artifact"):
+            fname = [kv.split("=")[1] for kv in l.split() if kv.startswith("file=")][0]
+            assert (tmp_path / fname).exists()

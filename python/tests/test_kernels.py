@@ -1,0 +1,201 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and bit widths (the CORE correctness signal for
+the compute hot-spot); fixed-seed cases pin down exact constants.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.crossbar import adc_quantize, wbs_vmm
+from compile.kernels.miru import miru_step
+from compile.kernels.quantizer import stochastic_quantize
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, minval=lo, maxval=hi)
+
+
+# ---------------------------------------------------------------------------
+# WBS crossbar VMM
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    n_in=st.integers(1, 40),
+    n_out=st.sampled_from([1, 2, 4, 5, 8, 10, 16, 50, 100]),
+    nb=st.integers(1, 8),
+    bit_serial=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wbs_vmm_matches_ref(b, n_in, n_out, nb, bit_serial, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(k1, (b, n_in), minval=-1.0, maxval=1.0)
+    g = jax.random.normal(k2, (n_in, n_out))
+    got = wbs_vmm(x, g, nb=nb, bit_serial=bit_serial)
+    want = ref.wbs_vmm_ref(x, g, nb=nb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_wbs_folded_matches_bit_serial():
+    # §Perf: the folded contraction must be numerically equivalent to the
+    # dataflow-faithful bit-serial accumulation.
+    x = _rand(21, 6, 33)
+    g = _rand(22, 33, 10)
+    for nb in (1, 4, 8):
+        a = wbs_vmm(x, g, nb=nb, bit_serial=True)
+        b = wbs_vmm(x, g, nb=nb, bit_serial=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_wbs_vmm_exact_binary():
+    # nb=1: only the MSB streams, significance 1/2 -> output = round(|x|)*sign/2 @ g
+    x = jnp.array([[1.0, -1.0, 0.2, -0.2]])
+    g = jnp.eye(4)
+    got = wbs_vmm(x, g, nb=1)
+    np.testing.assert_allclose(np.asarray(got)[0], [0.5, -0.5, 0.0, -0.0], atol=1e-7)
+
+
+def test_wbs_vmm_full_precision_close_to_matmul():
+    x = _rand(0, 4, 32)
+    g = _rand(1, 32, 16, lo=-0.5, hi=0.5)
+    got = wbs_vmm(x, g, nb=8)
+    # 8-bit digitization error on |x|<=1 is <= 0.5/2^8 per element
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ g), atol=32 * 0.5 / 256 + 1e-5)
+
+
+def test_wbs_vmm_zero_input_zero_output():
+    out = wbs_vmm(jnp.zeros((3, 7)), _rand(2, 7, 5), nb=8)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((3, 5), np.float32))
+
+
+def test_wbs_vmm_linearity_in_g():
+    x = _rand(3, 2, 9)
+    g1, g2 = _rand(4, 9, 4), _rand(5, 9, 4)
+    lhs = wbs_vmm(x, g1 + g2, nb=6)
+    rhs = wbs_vmm(x, g1, nb=6) + wbs_vmm(x, g2, nb=6)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Shared-ADC quantization
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 12), seed=st.integers(0, 1000))
+def test_adc_matches_ref_and_bounds_error(bits, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (4, 16)) * 2.0
+    vs = jnp.float32(2.5)
+    got = adc_quantize(v, bits=bits, v_scale=vs)
+    want = ref.adc_quantize_ref(v, bits, vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+    # in-range values quantize to within 1/2 LSB
+    inr = np.abs(np.asarray(v)) <= 2.5
+    lsb = 2.5 / (2 ** (bits - 1) - 1)
+    err = np.abs(np.asarray(got) - np.asarray(v))
+    assert np.all(err[inr] <= lsb / 2 + 1e-6)
+
+
+def test_adc_clips_out_of_range():
+    v = jnp.array([10.0, -10.0])
+    got = np.asarray(adc_quantize(v, bits=8, v_scale=jnp.float32(1.0)))
+    np.testing.assert_allclose(got, [1.0, -1.0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Fused MiRU step
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    nx=st.integers(1, 30),
+    nh=st.sampled_from([2, 4, 5, 8, 16, 50, 100]),
+    lam=st.floats(0.0, 1.0),
+    beta=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_miru_step_matches_ref(b, nx, nh, lam, beta, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (b, nx))
+    h = jax.random.normal(ks[1], (b, nh))
+    wh = jax.random.normal(ks[2], (nx, nh)) * 0.3
+    uh = jax.random.normal(ks[3], (nh, nh)) * 0.3
+    bh = jax.random.normal(ks[4], (nh,)) * 0.1
+    got = miru_step(x, h, wh, uh, bh, lam, beta)
+    want = ref.miru_step_ref(x, h, wh, uh, bh, lam, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_miru_step_lambda_one_is_identity():
+    # λ=1: hidden state is frozen regardless of input.
+    h = _rand(7, 3, 8)
+    out = miru_step(_rand(8, 3, 4), h, _rand(9, 4, 8), _rand(10, 8, 8), jnp.zeros(8), 1.0, 0.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(h), rtol=1e-6, atol=1e-6)
+
+
+def test_miru_step_beta_zero_ignores_history_in_candidate():
+    # β=0, λ=0: output depends only on the current input.
+    x, wh, bh = _rand(11, 2, 4), _rand(12, 4, 8), jnp.zeros(8)
+    h1, h2 = _rand(13, 2, 8), _rand(14, 2, 8)
+    uh = _rand(15, 8, 8)
+    o1 = miru_step(x, h1, wh, uh, bh, 0.0, 0.0)
+    o2 = miru_step(x, h2, wh, uh, bh, 0.0, 0.0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic quantizer
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    nb=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_squant_matches_ref(n, nb, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(k1, (n,), maxval=0.999)
+    r = jax.random.uniform(k2, (n,))
+    got = stochastic_quantize(x, r, nb=nb)
+    want = ref.stochastic_quantize_ref(x, r, nb=nb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    codes = np.asarray(got)
+    assert codes.min() >= 0 and codes.max() <= 2**nb - 1
+
+
+def test_squant_unbiased():
+    # E[q/2^nb] == x up to the top-of-range clamp: check mean error ~ 0.
+    n = 20000
+    x = jax.random.uniform(jax.random.PRNGKey(0), (n,), maxval=0.9)
+    r = jax.random.uniform(jax.random.PRNGKey(1), (n,))
+    q = np.asarray(stochastic_quantize(x, r, nb=4)) / 16.0
+    bias = float(np.mean(q - np.asarray(x)))
+    assert abs(bias) < 2e-3, bias
+
+
+def test_squant_beats_truncation_in_bias():
+    x = jax.random.uniform(jax.random.PRNGKey(2), (20000,), maxval=0.9)
+    r = jax.random.uniform(jax.random.PRNGKey(3), (20000,))
+    q_s = np.asarray(stochastic_quantize(x, r, nb=4)) / 16.0
+    q_u = np.asarray(ref.uniform_quantize_ref(x, nb=4)) / 16.0
+    assert abs(np.mean(q_s - np.asarray(x))) < abs(np.mean(q_u - np.asarray(x)))
+
+
+def test_squant_exact_values_pass_through():
+    # exactly representable values never round.
+    x = jnp.arange(16.0) / 16.0
+    q = stochastic_quantize(x, jnp.zeros_like(x) + 0.5, nb=4)
+    np.testing.assert_array_equal(np.asarray(q), np.arange(16.0))

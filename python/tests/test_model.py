@@ -1,0 +1,159 @@
+"""L2 model semantics: forward shapes/behaviour, DFA and Adam training
+steps actually learn, hw datapath tracks the software one, K-WTA keeps
+exactly the configured fraction."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.configs import CONFIGS, NetConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["small"]
+
+
+def init_params(c: NetConfig, seed=0, scale=0.3):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    return (
+        jax.random.normal(ks[0], (c.nx, c.nh)) * scale / math.sqrt(c.nx),
+        jax.random.normal(ks[1], (c.nh, c.nh)) * scale / math.sqrt(c.nh),
+        jnp.zeros((c.nh,)),
+        jax.random.normal(ks[3], (c.nh, c.ny)) * scale / math.sqrt(c.nh),
+        jnp.zeros((c.ny,)),
+    )
+
+
+def toy_batch(c: NetConfig, b, seed=0):
+    """Linearly separable toy sequences: class j has mean pattern +mu_j."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    labels = jax.random.randint(k1, (b,), 0, c.ny)
+    protos = jax.random.normal(jax.random.PRNGKey(99), (c.ny, c.nx))
+    x = 0.25 * jax.random.normal(k2, (b, c.nt, c.nx)) + 0.75 * protos[labels][:, None, :]
+    x = jnp.clip(x, -1, 1)
+    y = jax.nn.one_hot(labels, c.ny)
+    return x, y, labels
+
+
+def test_forward_shapes_and_determinism():
+    p = init_params(CFG)
+    x, _, _ = toy_batch(CFG, CFG.b_eval)
+    (logits,) = model.forward(*p, 0.5, 0.7, x)
+    assert logits.shape == (CFG.b_eval, CFG.ny)
+    (logits2,) = model.forward(*p, 0.5, 0.7, x)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+
+
+def test_forward_lambda_one_freezes_state():
+    # λ=1 -> h stays 0 -> logits = bo for every input.
+    p = init_params(CFG)
+    x, _, _ = toy_batch(CFG, 4)
+    (logits,) = model.forward(*p, 1.0, 0.7, x)
+    np.testing.assert_allclose(np.asarray(logits), np.tile(np.asarray(p[4]), (4, 1)), atol=1e-6)
+
+
+def test_forward_matches_manual_loop():
+    p = init_params(CFG, seed=3)
+    wh, uh, bh, wo, bo = p
+    lam, beta = 0.4, 0.8
+    x, _, _ = toy_batch(CFG, 3, seed=5)
+    h = jnp.zeros((3, CFG.nh))
+    for t in range(CFG.nt):
+        cand = jnp.tanh(x[:, t, :] @ wh + (beta * h) @ uh + bh)
+        h = lam * h + (1 - lam) * cand
+    want = h @ wo + bo
+    (got,) = model.forward(*p, lam, beta, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_forward_hw_tracks_software():
+    # With 8-bit WBS + 8-bit ADC and a generous full-scale range, the
+    # mixed-signal path must stay close to the software logits.
+    p = init_params(CFG, seed=1)
+    x, _, _ = toy_batch(CFG, CFG.b_eval, seed=2)
+    (sw,) = model.forward(*p, 0.5, 0.7, x)
+    (hw,) = model.forward_hw(*p, 0.5, 0.7, 4.0, 4.0, x, cfg=CFG)
+    corr = np.corrcoef(np.asarray(sw).ravel(), np.asarray(hw).ravel())[0, 1]
+    assert corr > 0.98, corr
+    agree = np.mean(
+        np.argmax(np.asarray(sw), -1) == np.argmax(np.asarray(hw), -1)
+    )
+    assert agree > 0.9, agree
+
+
+def test_kwta_keeps_exact_fraction():
+    g = jax.random.normal(jax.random.PRNGKey(0), (40, 25))
+    out = model._kwta(g, 0.53)
+    keep = math.ceil(0.53 * g.size)
+    assert int(np.sum(np.asarray(out) != 0)) == keep
+    # surviving entries are the largest-magnitude ones, values unchanged
+    kept = np.abs(np.asarray(out))[np.asarray(out) != 0]
+    dropped_max = np.max(np.abs(np.asarray(g) * (np.asarray(out) == 0)))
+    assert kept.min() >= dropped_max
+
+
+def test_dfa_step_learns_toy_task():
+    c = CFG
+    p = list(init_params(c, seed=7))
+    psi = jax.random.normal(jax.random.PRNGKey(11), (c.ny, c.nh)) / math.sqrt(c.nh)
+    lam, beta, lr = 0.5, 0.7, 0.5
+    losses = []
+    for i in range(60):
+        x, y, _ = toy_batch(c, c.b_train, seed=i)
+        d = model.train_dfa(*p, lam, beta, lr, psi, x, y, keep_frac=c.keep_frac)
+        for j in range(5):
+            p[j] = p[j] + d[j]
+        losses.append(float(d[5]))
+    assert np.mean(losses[-10:]) < 0.6 * np.mean(losses[:10]), losses[::10]
+
+
+def test_dfa_dense_matches_sparse_direction():
+    c = CFG
+    p = init_params(c, seed=9)
+    psi = jax.random.normal(jax.random.PRNGKey(13), (c.ny, c.nh)) / math.sqrt(c.nh)
+    x, y, _ = toy_batch(c, c.b_train, seed=1)
+    ds = model.train_dfa(*p, 0.5, 0.7, 0.1, psi, x, y, keep_frac=c.keep_frac)
+    dd = model.train_dfa_dense(*p, 0.5, 0.7, 0.1, psi, x, y)
+    # sparse deltas are the dense deltas masked: wherever sparse != 0 they agree
+    for s, d in zip(ds[:5], dd[:5]):
+        s, d = np.asarray(s), np.asarray(d)
+        nz = s != 0
+        np.testing.assert_allclose(s[nz], d[nz], rtol=1e-5, atol=1e-7)
+    # same loss on the same batch
+    assert abs(float(ds[5]) - float(dd[5])) < 1e-6
+
+
+def test_adam_step_learns_toy_task():
+    c = CFG
+    p = list(init_params(c, seed=17))
+    n_par = model.param_count(c)
+    m = jnp.zeros((n_par,))
+    v = jnp.zeros((n_par,))
+    step = jnp.float32(0.0)
+    losses = []
+    for i in range(40):
+        x, y, _ = toy_batch(c, c.b_train, seed=100 + i)
+        out = model.train_adam(*p, m, v, step, 0.5, 0.7, 0.01, x, y)
+        p = list(out[:5])
+        m, v, step = out[5], out[6], out[7]
+        losses.append(float(out[8]))
+    assert np.mean(losses[-8:]) < 0.6 * np.mean(losses[:8]), losses[::8]
+    assert float(step) == 40.0
+
+
+def test_adam_moments_update():
+    c = CFG
+    p = init_params(c)
+    n_par = model.param_count(c)
+    x, y, _ = toy_batch(c, c.b_train)
+    out = model.train_adam(*p, jnp.zeros(n_par), jnp.zeros(n_par), 0.0, 0.5, 0.7, 0.01, x, y)
+    assert float(jnp.sum(jnp.abs(out[5]))) > 0  # m moved
+    assert float(jnp.min(out[6])) >= 0  # v nonnegative
+
+
+def test_param_count():
+    c = CONFIGS["pmnist100"]
+    assert model.param_count(c) == 28 * 100 + 100 * 100 + 100 + 100 * 10 + 10

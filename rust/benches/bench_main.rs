@@ -1,0 +1,207 @@
+//! Benchmark harness (`cargo bench`) — no criterion in the offline
+//! environment, so this is a self-contained harness with warm-up,
+//! repetition and mean/min/max reporting.
+//!
+//! Two families:
+//!  1. **Paper artifacts** — regenerates every table/figure (fig4 and
+//!     fig5b in scaled-down "quick" mode; fig5a/c/d, table1, headline in
+//!     full) and archives the reports under `results/bench_*`.
+//!  2. **Hot-path microbenches** — the numbers the §Perf pass optimizes:
+//!     XLA train/eval step latency, the pure-rust digital baseline step,
+//!     replay-pipeline throughput, crossbar programming.
+//!
+//! Select with `cargo bench -- <filter>` (substring match).
+
+use std::time::Instant;
+
+use m2ru::config::{Manifest, NetConfig, RunConfig};
+use m2ru::coordinator::{Engine, HardwareEngine, RustDfaEngine, XlaDfaEngine};
+use m2ru::data::{permuted_task_stream, synthetic_mnist, Example};
+use m2ru::device::{DeviceParams, DifferentialCrossbar, ZiksaProgrammer};
+use m2ru::experiments::{
+    run_fig4, run_fig5a, run_fig5b, run_fig5c, run_fig5d, run_headline, run_table1, Fig4Options,
+    Fig5bOptions,
+};
+use m2ru::linalg::Mat;
+use m2ru::nn::SeqBatch;
+use m2ru::replay::ReplayBuffer;
+use m2ru::rng::GaussianRng;
+use m2ru::runtime::{ModelBundle, Runtime};
+
+fn timeit<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warm-up
+    f();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = samples.iter().cloned().fold(0.0f64, f64::max);
+    println!("{name:<46} {mean:>10.3} ms/iter  (min {min:>8.3}, max {max:>8.3}, n={iters})");
+}
+
+fn batch_from(examples: &[Example], b: usize, nt: usize, nx: usize) -> SeqBatch {
+    let mut sb = SeqBatch::zeros(b, nt, nx);
+    for i in 0..b {
+        let e = &examples[i % examples.len()];
+        sb.sample_mut(i).copy_from_slice(&e.features);
+        sb.labels[i] = e.label;
+    }
+    sb
+}
+
+fn main() -> anyhow::Result<()> {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_default();
+    let runs = |name: &str| filter.is_empty() || name.contains(&filter);
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load("artifacts")?;
+
+    println!("== paper artifacts ==============================================");
+    if runs("table1") {
+        let t = Instant::now();
+        run_table1()?.save("results/bench")?;
+        println!("table1 regenerated in {:.2}s", t.elapsed().as_secs_f64());
+    }
+    if runs("headline") {
+        let t = Instant::now();
+        run_headline()?.save("results/bench")?;
+        println!("headline regenerated in {:.2}s", t.elapsed().as_secs_f64());
+    }
+    if runs("fig5c") {
+        let t = Instant::now();
+        run_fig5c()?.save("results/bench")?;
+        println!("fig5c regenerated in {:.2}s", t.elapsed().as_secs_f64());
+    }
+    if runs("fig5d") {
+        let t = Instant::now();
+        run_fig5d()?.save("results/bench")?;
+        println!("fig5d regenerated in {:.2}s", t.elapsed().as_secs_f64());
+    }
+    if runs("fig5a") {
+        let t = Instant::now();
+        run_fig5a(20, 0)?.save("results/bench")?;
+        println!("fig5a regenerated in {:.2}s", t.elapsed().as_secs_f64());
+    }
+    if runs("fig5b") {
+        let t = Instant::now();
+        let mut opts = Fig5bOptions::default();
+        opts.run.train_per_task = 160;
+        opts.run.test_per_task = 60;
+        opts.run.epochs = 1;
+        run_fig5b(&rt, &manifest, &opts)?.save("results/bench")?;
+        println!("fig5b (quick) regenerated in {:.2}s", t.elapsed().as_secs_f64());
+    }
+    if runs("fig4") {
+        let t = Instant::now();
+        let opts = Fig4Options {
+            dataset: "pmnist".into(),
+            nh: 100,
+            engines: vec!["dfa".into(), "hw".into()],
+            run: RunConfig {
+                num_tasks: 2,
+                train_per_task: 300,
+                test_per_task: 100,
+                epochs: 3,
+                replay_per_task: 150,
+                ..RunConfig::default()
+            },
+        };
+        let (rep, _) = run_fig4(&rt, &manifest, &opts)?;
+        rep.save("results/bench")?;
+        println!("fig4 (quick, pmnist/100) regenerated in {:.2}s", t.elapsed().as_secs_f64());
+    }
+
+    println!();
+    println!("== hot-path microbenches ========================================");
+    let cfg = NetConfig::PMNIST100;
+    let bundle = ModelBundle::load(&rt, &manifest, cfg)?;
+    let stream = permuted_task_stream(1, 64, 16, 0);
+    let train_b = batch_from(&stream.tasks[0].train, cfg.b_train, cfg.nt, cfg.nx);
+    let eval_b = batch_from(&stream.tasks[0].train, cfg.b_eval, cfg.nt, cfg.nx);
+
+    if runs("xla_train_step") {
+        let mut eng = XlaDfaEngine::new(&bundle, 0.96, 0.3, 0.3, 1);
+        timeit("xla_train_step (dfa, b=32, pmnist100)", 20, || {
+            eng.train_batch(&train_b).unwrap();
+        });
+    }
+    if runs("xla_eval") {
+        let mut eng = XlaDfaEngine::new(&bundle, 0.96, 0.3, 0.3, 1);
+        timeit("xla_eval (sw forward, b=200)", 20, || {
+            eng.eval_batch(&eval_b).unwrap();
+        });
+    }
+    if runs("hw_eval") {
+        let mut eng = HardwareEngine::new(&bundle, 0.96, 0.3, 0.3, DeviceParams::default(), 1);
+        timeit("hw_eval (WBS+ADC forward, b=200)", 5, || {
+            eng.eval_batch(&eval_b).unwrap();
+        });
+    }
+    if runs("hw_train_step") {
+        let mut eng = HardwareEngine::new(&bundle, 0.96, 0.3, 0.3, DeviceParams::default(), 1);
+        timeit("hw_train_step (dfa + ziksa writes, b=32)", 10, || {
+            eng.train_batch(&train_b).unwrap();
+        });
+    }
+    if runs("rust_train_step") {
+        let mut eng = RustDfaEngine::new(28, 100, 10, 0.96, 0.3, 0.3, Some(0.53), 1);
+        timeit("rust_train_step (digital baseline, b=32)", 10, || {
+            eng.train_batch(&train_b).unwrap();
+        });
+    }
+    if runs("l3_host_overhead") {
+        // host-side share of one train step: batch assembly + all
+        // literal uploads, with no XLA execution. Quantifies whether the
+        // coordinator (L3) is ever the bottleneck (paper: it must not be).
+        use m2ru::nn::{make_psi, MiruParams};
+        use m2ru::runtime::host_overhead_probe;
+        let p = MiruParams::init(cfg.nx, cfg.nh, cfg.ny, 1);
+        let psi = make_psi(cfg.ny, cfg.nh, 2);
+        timeit("l3_host_overhead (literals for 1 train step)", 50, || {
+            host_overhead_probe(&p, &psi, &train_b).unwrap();
+        });
+    }
+    if runs("replay_pipeline") {
+        let digits = synthetic_mnist(256, 0);
+        timeit("replay_pipeline (reservoir+squant, 256 imgs)", 20, || {
+            let mut buf = ReplayBuffer::new(64, 0.0, 1.0, 42);
+            buf.begin_task();
+            for e in &digits {
+                buf.offer(e);
+            }
+        });
+    }
+    if runs("replay_sample") {
+        let digits = synthetic_mnist(256, 0);
+        let mut buf = ReplayBuffer::new(128, 0.0, 1.0, 42);
+        buf.begin_task();
+        for e in &digits {
+            buf.offer(e);
+        }
+        buf.begin_task();
+        let mut rng = GaussianRng::new(1);
+        timeit("replay_sample (draw+dequant 32 examples)", 50, || {
+            let _ = buf.sample_past(32, &mut rng);
+        });
+    }
+    if runs("crossbar_program") {
+        let mut xb = DifferentialCrossbar::new(128, 100, 1.0, DeviceParams::default(), 0);
+        let w = Mat::from_fn(128, 100, |r, c| ((r + c) % 13) as f32 * 0.01);
+        let mut prog = ZiksaProgrammer::new();
+        timeit("crossbar_program (12.8k devices)", 20, || {
+            prog.apply(&mut xb, &w);
+        });
+    }
+    if runs("crossbar_read") {
+        let xb = DifferentialCrossbar::new(128, 100, 1.0, DeviceParams::default(), 0);
+        timeit("crossbar_read (12.8k devices)", 50, || {
+            let _ = xb.read_weights();
+        });
+    }
+    println!("\nbench_main done");
+    Ok(())
+}

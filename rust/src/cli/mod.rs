@@ -1,0 +1,154 @@
+//! Minimal command-line argument parser (no clap in the offline build).
+//!
+//! Grammar: `m2ru [global flags] <subcommand> [flags] [positionals]` with
+//! `--key value`, `--key=value` and boolean `--flag` forms. Unknown-flag
+//! detection is the caller's job via [`Args::finish`], which errors on
+//! unconsumed flags so typos never pass silently.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::collections::BTreeSet<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(flag.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
+    }
+
+    /// String flag with default.
+    pub fn get(&mut self, key: &str, default: &str) -> String {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn get_opt(&mut self, key: &str) -> Option<String> {
+        self.consumed.insert(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.insert(key.to_string());
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("flag --{key}={raw}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn get_bool(&mut self, key: &str) -> Result<bool> {
+        self.consumed.insert(key.to_string());
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(false),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(other) => bail!("flag --{key} expects a boolean, got `{other}`"),
+        }
+    }
+
+    /// Error on any flag that was never consumed (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        for k in self.flags.keys() {
+            if !self.consumed.contains(k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn subcommand(&self) -> Result<&str> {
+        self.subcommand.as_deref().context("missing subcommand (try `m2ru help`)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        let mut a = Args::parse(argv("experiment fig4 --nh 256 --dataset=pmnist --hw")).unwrap();
+        assert_eq!(a.subcommand().unwrap(), "experiment");
+        assert_eq!(a.positional(0), Some("fig4"));
+        assert_eq!(a.get_parse("nh", 100usize).unwrap(), 256);
+        assert_eq!(a.get("dataset", "x"), "pmnist");
+        assert!(a.get_bool("hw").unwrap());
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(argv("train")).unwrap();
+        assert_eq!(a.get_parse("seed", 42u64).unwrap(), 42);
+        assert_eq!(a.get("net", "small"), "small");
+        assert!(!a.get_bool("verbose").unwrap());
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flag_rejected_by_finish() {
+        let a = Args::parse(argv("train --typo 1")).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let mut a = Args::parse(argv("x --nh abc")).unwrap();
+        assert!(a.get_parse("nh", 1usize).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_at_end_of_argv() {
+        let mut a = Args::parse(argv("bench --quick")).unwrap();
+        assert!(a.get_bool("quick").unwrap());
+    }
+
+    #[test]
+    fn explicit_false_boolean() {
+        let mut a = Args::parse(argv("x --replay false")).unwrap();
+        assert!(!a.get_bool("replay").unwrap());
+    }
+}

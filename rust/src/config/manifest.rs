@@ -1,0 +1,187 @@
+//! Artifact manifest — the build-time contract with `python/compile/aot.py`.
+//!
+//! `artifacts/manifest.txt` records, per network config, the shapes the
+//! artifacts were lowered with. The runtime parses it and cross-checks
+//! against the compiled-in [`NetConfig`]s before loading any HLO, so a
+//! stale `make artifacts` fails loudly instead of feeding wrong shapes to
+//! PJRT.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::netcfg::NetConfig;
+
+#[derive(Clone, Debug)]
+pub struct ManifestArtifact {
+    pub name: String,
+    pub file: String,
+    pub nargs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, NetConfig>,
+    pub artifacts: BTreeMap<String, ManifestArtifact>,
+}
+
+fn kv(parts: &[&str], key: &str) -> Option<String> {
+    parts
+        .iter()
+        .find_map(|p| p.strip_prefix(&format!("{key}=")).map(str::to_string))
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt` and validate against compiled-in configs.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("format 1") => {}
+            other => bail!("unsupported manifest format line: {other:?}"),
+        }
+        let mut configs = BTreeMap::new();
+        let mut artifacts = BTreeMap::new();
+        for (i, line) in lines.enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            match parts.first() {
+                Some(&"config") => {
+                    let name = parts.get(1).context("config line missing name")?.to_string();
+                    let get = |k: &str| -> Result<f64> {
+                        kv(&parts, k)
+                            .with_context(|| format!("config {name}: missing {k}"))?
+                            .parse::<f64>()
+                            .with_context(|| format!("config {name}: bad {k}"))
+                    };
+                    let built = NetConfig::by_name(&name)
+                        .with_context(|| format!("manifest config `{name}` unknown to this binary"))?;
+                    // cross-check every shape field
+                    let checks = [
+                        ("nx", built.nx as f64),
+                        ("nh", built.nh as f64),
+                        ("ny", built.ny as f64),
+                        ("nt", built.nt as f64),
+                        ("btrain", built.b_train as f64),
+                        ("beval", built.b_eval as f64),
+                        ("nb", f64::from(built.nb)),
+                        ("adc", f64::from(built.adc_bits)),
+                    ];
+                    for (k, want) in checks {
+                        let got = get(k)?;
+                        if (got - want).abs() > 1e-9 {
+                            bail!("config {name}: manifest {k}={got} but binary expects {want} — rebuild artifacts");
+                        }
+                    }
+                    let keep = get("keep")?;
+                    if (keep - f64::from(built.keep_frac)).abs() > 1e-6 {
+                        bail!("config {name}: keep_frac mismatch");
+                    }
+                    configs.insert(name, built);
+                }
+                Some(&"artifact") => {
+                    let name = parts.get(1).context("artifact line missing name")?.to_string();
+                    let file = kv(&parts, "file")
+                        .with_context(|| format!("artifact {name}: missing file"))?;
+                    let nargs = kv(&parts, "nargs")
+                        .with_context(|| format!("artifact {name}: missing nargs"))?
+                        .parse()
+                        .context("bad nargs")?;
+                    if !dir.join(&file).exists() {
+                        bail!("artifact {name}: file {file} missing from {}", dir.display());
+                    }
+                    artifacts.insert(name.clone(), ManifestArtifact { name, file, nargs });
+                }
+                Some(other) => bail!("manifest line {}: unknown record `{other}`", i + 2),
+                None => {}
+            }
+        }
+        if configs.is_empty() {
+            bail!("manifest has no configs");
+        }
+        Ok(Manifest { dir, configs, artifacts })
+    }
+
+    /// Absolute path of an artifact by logical name (e.g. `forward_small`).
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let a = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))?;
+        Ok(self.dir.join(&a.file))
+    }
+
+    /// Names of all artifacts for one config.
+    pub fn artifacts_for(&self, cfg: &str) -> Vec<&ManifestArtifact> {
+        self.artifacts.values().filter(|a| a.name.ends_with(&format!("_{cfg}"))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.txt")).unwrap();
+        writeln!(f, "format 1").unwrap();
+        write!(f, "{body}").unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("m2ru_manifest_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const SMALL_LINE: &str = "config small nx=8 nh=16 ny=4 nt=5 btrain=8 beval=16 nb=8 adc=8 keep=0.53\n";
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmpdir("ok");
+        std::fs::write(d.join("forward_small.hlo.txt"), "HloModule x").unwrap();
+        write_manifest(&d, &format!("{SMALL_LINE}artifact forward_small file=forward_small.hlo.txt nargs=8\n"));
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.configs.len(), 1);
+        assert_eq!(m.artifacts["forward_small"].nargs, 8);
+        assert!(m.artifact_path("forward_small").unwrap().exists());
+        assert_eq!(m.artifacts_for("small").len(), 1);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let d = tmpdir("mismatch");
+        write_manifest(
+            &d,
+            "config small nx=9 nh=16 ny=4 nt=5 btrain=8 beval=16 nb=8 adc=8 keep=0.53\n",
+        );
+        let e = Manifest::load(&d).unwrap_err().to_string();
+        assert!(e.contains("rebuild artifacts"), "{e}");
+    }
+
+    #[test]
+    fn rejects_missing_artifact_file() {
+        let d = tmpdir("missing");
+        write_manifest(&d, &format!("{SMALL_LINE}artifact forward_small file=nope.hlo.txt nargs=8\n"));
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        let d = tmpdir("fmt");
+        std::fs::write(d.join("manifest.txt"), "format 99\n").unwrap();
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_config_name() {
+        let d = tmpdir("unknown");
+        write_manifest(&d, "config mystery nx=1 nh=1 ny=1 nt=1 btrain=1 beval=1 nb=8 adc=8 keep=0.5\n");
+        assert!(Manifest::load(&d).is_err());
+    }
+}

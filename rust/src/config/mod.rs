@@ -1,0 +1,16 @@
+//! Configuration system: network configs, the artifact manifest contract,
+//! and a TOML-subset parser for run configuration files.
+//!
+//! The offline build has no serde; `toml_lite` is a small hand-rolled
+//! parser covering the subset this project uses (tables, string / number /
+//! boolean scalars, comments) with proper error reporting.
+
+mod manifest;
+mod netcfg;
+mod runcfg;
+mod toml_lite;
+
+pub use manifest::{Manifest, ManifestArtifact};
+pub use netcfg::NetConfig;
+pub use runcfg::RunConfig;
+pub use toml_lite::{parse_toml, TomlError, TomlValue};

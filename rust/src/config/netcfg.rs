@@ -1,0 +1,115 @@
+//! Network configuration — the rust mirror of `python/compile/configs.py`.
+//!
+//! Shapes must agree with the lowered artifacts; `Manifest::check` verifies
+//! the contract at load time and refuses to run against stale artifacts.
+
+/// One MiRU network instantiation (shapes are lowering-time static).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetConfig {
+    pub name: &'static str,
+    pub nx: usize,
+    pub nh: usize,
+    pub ny: usize,
+    pub nt: usize,
+    pub b_train: usize,
+    pub b_eval: usize,
+    pub nb: u32,
+    pub adc_bits: u32,
+    pub keep_frac: f32,
+}
+
+impl NetConfig {
+    pub const SMALL: NetConfig = NetConfig {
+        name: "small",
+        nx: 8,
+        nh: 16,
+        ny: 4,
+        nt: 5,
+        b_train: 8,
+        b_eval: 16,
+        nb: 8,
+        adc_bits: 8,
+        keep_frac: 0.53,
+    };
+    pub const PMNIST100: NetConfig = NetConfig {
+        name: "pmnist100",
+        nx: 28,
+        nh: 100,
+        ny: 10,
+        nt: 28,
+        b_train: 32,
+        b_eval: 200,
+        nb: 8,
+        adc_bits: 8,
+        keep_frac: 0.53,
+    };
+    pub const PMNIST256: NetConfig =
+        NetConfig { name: "pmnist256", nh: 256, ..NetConfig::PMNIST100 };
+    pub const CIFAR100: NetConfig = NetConfig {
+        name: "cifar100",
+        nx: 32,
+        nh: 100,
+        ny: 2,
+        nt: 16,
+        b_train: 32,
+        b_eval: 200,
+        nb: 8,
+        adc_bits: 8,
+        keep_frac: 0.53,
+    };
+    pub const CIFAR256: NetConfig = NetConfig { name: "cifar256", nh: 256, ..NetConfig::CIFAR100 };
+
+    pub const ALL: [NetConfig; 5] = [
+        NetConfig::SMALL,
+        NetConfig::PMNIST100,
+        NetConfig::PMNIST256,
+        NetConfig::CIFAR100,
+        NetConfig::CIFAR256,
+    ];
+
+    pub fn by_name(name: &str) -> Option<NetConfig> {
+        NetConfig::ALL.into_iter().find(|c| c.name == name)
+    }
+
+    /// Total parameter count (matches `model.param_count`).
+    pub fn param_count(&self) -> usize {
+        self.nx * self.nh + self.nh * self.nh + self.nh + self.nh * self.ny + self.ny
+    }
+
+    /// Configs that ship a dense (no-ζ) DFA train artifact.
+    pub fn has_dense_train(&self) -> bool {
+        matches!(self.name, "small" | "pmnist100")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(NetConfig::by_name("pmnist256").unwrap().nh, 256);
+        assert!(NetConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn param_count_pmnist100() {
+        assert_eq!(NetConfig::PMNIST100.param_count(), 2800 + 10_000 + 100 + 1000 + 10);
+    }
+
+    #[test]
+    fn geometry_matches_python_configs() {
+        // keep in lock-step with python/compile/configs.py
+        let c = NetConfig::CIFAR100;
+        assert_eq!((c.nx, c.nt, c.ny), (32, 16, 2));
+        assert_eq!(c.nx * c.nt, 512);
+        assert_eq!(NetConfig::SMALL.b_train, 8);
+    }
+
+    #[test]
+    fn dense_train_flags() {
+        assert!(NetConfig::SMALL.has_dense_train());
+        assert!(NetConfig::PMNIST100.has_dense_train());
+        assert!(!NetConfig::PMNIST256.has_dense_train());
+    }
+}

@@ -1,0 +1,198 @@
+//! TOML-subset parser (no serde in the offline environment).
+//!
+//! Supported: `[table]` headers, `key = value` with string, integer,
+//! float, boolean scalars, `#` comments, blank lines. Keys inside a table
+//! are flattened to `"table.key"`. Errors carry line numbers.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn err(line: usize, message: impl Into<String>) -> TomlError {
+    TomlError { line, message: message.into() }
+}
+
+fn parse_scalar(raw: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(line, "embedded quote in string"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if raw.contains('.') || raw.contains('e') || raw.contains('E') {
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    Err(err(line, format!("unparseable value `{raw}`")))
+}
+
+/// Parse a TOML-subset document into flattened `table.key` → value.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut prefix = String::new();
+    for (i, raw_line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // strip comments (not inside strings — our strings forbid '#')
+        let line = match raw_line.find('#') {
+            Some(pos) if !raw_line[..pos].contains('"') => &raw_line[..pos],
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err(line_no, "unclosed table header"))?;
+            let name = name.trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '.')
+            {
+                return Err(err(line_no, format!("bad table name `{name}`")));
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err(line_no, "expected `key = value`"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_alphanumeric() || c == '_') {
+            return Err(err(line_no, format!("bad key `{key}`")));
+        }
+        let value = parse_scalar(&line[eq + 1..], line_no)?;
+        let full = format!("{prefix}{key}");
+        if out.insert(full.clone(), value).is_some() {
+            return Err(err(line_no, format!("duplicate key `{full}`")));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = r#"
+# run configuration
+seed = 42
+lr = 0.05
+name = "pmnist"
+verbose = true
+
+[replay]
+per_task = 1875
+enabled = false
+"#;
+        let m = parse_toml(doc).unwrap();
+        assert_eq!(m["seed"], TomlValue::Int(42));
+        assert_eq!(m["lr"], TomlValue::Float(0.05));
+        assert_eq!(m["name"], TomlValue::Str("pmnist".into()));
+        assert_eq!(m["verbose"], TomlValue::Bool(true));
+        assert_eq!(m["replay.per_task"], TomlValue::Int(1875));
+        assert_eq!(m["replay.enabled"], TomlValue::Bool(false));
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(TomlValue::Int(3).as_float(), Some(3.0));
+        assert_eq!(TomlValue::Str("x".into()).as_str(), Some("x"));
+        assert_eq!(TomlValue::Bool(true).as_bool(), Some(true));
+        assert_eq!(TomlValue::Float(0.5).as_int(), None);
+    }
+
+    #[test]
+    fn error_reports_line_numbers() {
+        let e = parse_toml("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_toml("a = \"unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let e = parse_toml("a = 1\na = 2\n").unwrap_err();
+        assert!(e.message.contains("duplicate"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let m = parse_toml("# only comments\n\n  \n").unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn scientific_notation_floats() {
+        let m = parse_toml("endurance = 1e9\n").unwrap();
+        assert_eq!(m["endurance"].as_float(), Some(1e9));
+    }
+
+    #[test]
+    fn bad_table_rejected() {
+        assert!(parse_toml("[ta ble]\n").is_err());
+        assert!(parse_toml("[open\n").is_err());
+    }
+}

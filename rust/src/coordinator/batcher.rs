@@ -1,0 +1,161 @@
+//! Batch assembly for fixed-shape artifacts.
+//!
+//! The AOT executables have static batch dimensions (b_train / b_eval), so
+//! the coordinator pads partial batches (cyclic repetition) and truncates
+//! the corresponding predictions. `TrainBatcher` additionally owns the
+//! replay mix: each training batch is `replay_mix` replayed examples from
+//! past tasks and the rest fresh stream data.
+
+use crate::data::Example;
+use crate::nn::SeqBatch;
+use crate::replay::ReplayBuffer;
+use crate::rng::GaussianRng;
+
+/// Assemble exactly `b` examples into a SeqBatch, padding cyclically from
+/// the given slice if it is short. Panics on an empty slice.
+pub fn make_seq_batch(examples: &[&Example], b: usize, nt: usize, nx: usize) -> SeqBatch {
+    assert!(!examples.is_empty(), "cannot batch zero examples");
+    let mut sb = SeqBatch::zeros(b, nt, nx);
+    for i in 0..b {
+        let e = examples[i % examples.len()];
+        assert_eq!(e.features.len(), nt * nx, "example geometry mismatch");
+        sb.sample_mut(i).copy_from_slice(&e.features);
+        sb.labels[i] = e.label;
+    }
+    sb
+}
+
+/// Split an evaluation set into fixed-size batches plus the number of
+/// valid rows in the final one.
+pub fn make_eval_batches(
+    examples: &[Example],
+    b_eval: usize,
+    nt: usize,
+    nx: usize,
+) -> Vec<(SeqBatch, usize)> {
+    let refs: Vec<&Example> = examples.iter().collect();
+    refs.chunks(b_eval)
+        .map(|chunk| (make_seq_batch(chunk, b_eval, nt, nx), chunk.len()))
+        .collect()
+}
+
+/// Iterates one task's training stream in epochs, mixing replay.
+pub struct TrainBatcher {
+    pub b_train: usize,
+    pub nt: usize,
+    pub nx: usize,
+    /// target fraction of the batch drawn from the replay buffer.
+    pub replay_mix: f32,
+    rng: GaussianRng,
+}
+
+impl TrainBatcher {
+    pub fn new(b_train: usize, nt: usize, nx: usize, replay_mix: f32, seed: u64) -> Self {
+        Self { b_train, nt, nx, replay_mix, rng: GaussianRng::new(seed) }
+    }
+
+    /// Build the batch schedule for one epoch over `task_data`: shuffled
+    /// indices chunked to `b_train` fresh slots per batch.
+    pub fn epoch_batches(
+        &mut self,
+        task_data: &[Example],
+        replay: Option<&ReplayBuffer>,
+    ) -> Vec<SeqBatch> {
+        let mut order: Vec<usize> = (0..task_data.len()).collect();
+        self.rng.shuffle(&mut order);
+
+        // how many replay slots per batch?
+        let n_replay = if replay.map_or(0, ReplayBuffer::num_tasks) > 1 {
+            ((self.b_train as f32) * self.replay_mix).round() as usize
+        } else {
+            0
+        };
+        let n_fresh = self.b_train - n_replay;
+
+        let mut batches = Vec::new();
+        for chunk in order.chunks(n_fresh.max(1)) {
+            let mut members: Vec<Example> =
+                chunk.iter().map(|&i| task_data[i].clone()).collect();
+            if let Some(buf) = replay {
+                if n_replay > 0 {
+                    members.extend(buf.sample_past(n_replay, &mut self.rng));
+                }
+            }
+            let refs: Vec<&Example> = members.iter().collect();
+            batches.push(make_seq_batch(&refs, self.b_train, self.nt, self.nx));
+        }
+        batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(v: f32, label: usize, n: usize) -> Example {
+        Example { features: vec![v; n], label }
+    }
+
+    #[test]
+    fn pads_cyclically() {
+        let e1 = ex(1.0, 1, 6);
+        let e2 = ex(2.0, 2, 6);
+        let sb = make_seq_batch(&[&e1, &e2], 5, 2, 3);
+        assert_eq!(sb.labels, vec![1, 2, 1, 2, 1]);
+        assert_eq!(sb.sample(4)[0], 1.0);
+    }
+
+    #[test]
+    fn eval_batches_cover_everything_once() {
+        let data: Vec<Example> = (0..23).map(|i| ex(i as f32, i % 4, 6)).collect();
+        let batches = make_eval_batches(&data, 10, 2, 3);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].1, 10);
+        assert_eq!(batches[2].1, 3);
+        let total: usize = batches.iter().map(|b| b.1).sum();
+        assert_eq!(total, 23);
+    }
+
+    #[test]
+    fn no_replay_slots_without_past_tasks() {
+        let data: Vec<Example> = (0..10).map(|i| ex(i as f32, 0, 6)).collect();
+        let mut buf = ReplayBuffer::new(4, 0.0, 1.0, 1);
+        buf.begin_task(); // only current task — no past segments
+        let mut tb = TrainBatcher::new(4, 2, 3, 0.5, 0);
+        let batches = tb.epoch_batches(&data, Some(&buf));
+        // all-fresh batches: 10 items / 4 per batch = 3 batches
+        assert_eq!(batches.len(), 3);
+    }
+
+    #[test]
+    fn replay_mix_injects_past_examples() {
+        let data: Vec<Example> = (0..8).map(|_| ex(0.25, 7, 6)).collect();
+        let mut buf = ReplayBuffer::new(4, 0.0, 1.0, 1);
+        buf.begin_task();
+        for _ in 0..8 {
+            buf.offer(&ex(0.5, 3, 6));
+        }
+        buf.begin_task(); // current task; past = segment with label 3
+        let mut tb = TrainBatcher::new(4, 2, 3, 0.5, 0);
+        let batches = tb.epoch_batches(&data, Some(&buf));
+        // each batch: 2 fresh (label 7) + 2 replay (label 3)
+        for b in &batches {
+            let replayed = b.labels.iter().filter(|&&l| l == 3).count();
+            assert_eq!(replayed, 2, "labels {:?}", b.labels);
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_fresh_examples() {
+        let data: Vec<Example> = (0..12).map(|i| ex(i as f32 + 1.0, i % 2, 6)).collect();
+        let mut tb = TrainBatcher::new(4, 2, 3, 0.0, 1);
+        let batches = tb.epoch_batches(&data, None);
+        let mut seen: Vec<f32> = batches
+            .iter()
+            .flat_map(|b| (0..b.b).map(move |i| b.sample(i)[0]))
+            .collect();
+        seen.sort_by(f32::total_cmp);
+        seen.dedup();
+        assert_eq!(seen.len(), 12, "every fresh example appears");
+    }
+}

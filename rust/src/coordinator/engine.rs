@@ -1,0 +1,397 @@
+//! Training/inference engines — the curves of Fig. 4.
+//!
+//! * [`RustDfaEngine`] / [`RustAdamEngine`] — pure-rust digital baselines
+//!   (no XLA), used by unit tests and the Table-I digital comparator.
+//! * [`XlaDfaEngine`] / [`XlaAdamEngine`] — the software models executed
+//!   through the AOT artifacts (the "software trained with DFA / Adam"
+//!   curves).
+//! * [`HardwareEngine`] — the M2RU model: DFA deltas are programmed into
+//!   memristive crossbars (Ziksa), evaluation runs the WBS/ADC datapath on
+//!   the *effective* device weights, and every write is endurance-counted.
+
+use anyhow::Result;
+
+use crate::device::{DeviceParams, DifferentialCrossbar, ZiksaProgrammer};
+use crate::linalg::{argmax_rows, Mat};
+use crate::nn::{bptt_grads, dfa_grads, make_psi, AdamState, MiruParams, SeqBatch};
+use crate::runtime::ModelBundle;
+
+/// A continual-learning engine: consumes fixed-shape batches.
+pub trait Engine {
+    /// One parameter update on a b_train batch; returns the loss.
+    fn train_batch(&mut self, x: &SeqBatch) -> Result<f32>;
+    /// Predictions for a b_eval batch.
+    fn eval_batch(&mut self, x: &SeqBatch) -> Result<Vec<usize>>;
+    /// Engine label for reports.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Pure-rust engines (digital baseline)
+// ---------------------------------------------------------------------------
+
+pub struct RustDfaEngine {
+    pub params: MiruParams,
+    pub psi: Mat,
+    pub lam: f32,
+    pub beta: f32,
+    pub lr: f32,
+    pub keep_frac: Option<f32>,
+}
+
+impl RustDfaEngine {
+    pub fn new(
+        nx: usize,
+        nh: usize,
+        ny: usize,
+        lam: f32,
+        beta: f32,
+        lr: f32,
+        keep_frac: Option<f32>,
+        seed: u64,
+    ) -> Self {
+        Self {
+            params: MiruParams::init(nx, nh, ny, seed),
+            psi: make_psi(ny, nh, seed ^ 0xD0F4),
+            lam,
+            beta,
+            lr,
+            keep_frac,
+        }
+    }
+}
+
+impl Engine for RustDfaEngine {
+    fn train_batch(&mut self, x: &SeqBatch) -> Result<f32> {
+        let d = dfa_grads(&self.params, x, self.lam, self.beta, self.lr, &self.psi, self.keep_frac);
+        self.params.apply(&d);
+        Ok(d.loss)
+    }
+
+    fn eval_batch(&mut self, x: &SeqBatch) -> Result<Vec<usize>> {
+        Ok(argmax_rows(&self.params.forward(x, self.lam, self.beta)))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-dfa"
+    }
+}
+
+pub struct RustAdamEngine {
+    pub params: MiruParams,
+    pub state: AdamState,
+    pub lam: f32,
+    pub beta: f32,
+    pub lr: f32,
+}
+
+impl RustAdamEngine {
+    pub fn new(nx: usize, nh: usize, ny: usize, lam: f32, beta: f32, lr: f32, seed: u64) -> Self {
+        let params = MiruParams::init(nx, nh, ny, seed);
+        let n = params.count();
+        Self { params, state: AdamState::new(n), lam, beta, lr }
+    }
+}
+
+impl Engine for RustAdamEngine {
+    fn train_batch(&mut self, x: &SeqBatch) -> Result<f32> {
+        let (g, loss) = bptt_grads(&self.params, x, self.lam, self.beta);
+        let upd = self.state.step(&g, self.lr);
+        self.params.apply_flat_update(&upd);
+        Ok(loss)
+    }
+
+    fn eval_batch(&mut self, x: &SeqBatch) -> Result<Vec<usize>> {
+        Ok(argmax_rows(&self.params.forward(x, self.lam, self.beta)))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-adam"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA software engines (the Fig. 4 software curves)
+// ---------------------------------------------------------------------------
+
+pub struct XlaDfaEngine<'a> {
+    pub bundle: &'a ModelBundle,
+    pub params: MiruParams,
+    pub psi: Mat,
+    pub lam: f32,
+    pub beta: f32,
+    pub lr: f32,
+}
+
+impl<'a> XlaDfaEngine<'a> {
+    pub fn new(bundle: &'a ModelBundle, lam: f32, beta: f32, lr: f32, seed: u64) -> Self {
+        let c = bundle.cfg;
+        Self {
+            bundle,
+            params: MiruParams::init(c.nx, c.nh, c.ny, seed),
+            psi: make_psi(c.ny, c.nh, seed ^ 0xD0F4),
+            lam,
+            beta,
+            lr,
+        }
+    }
+}
+
+impl Engine for XlaDfaEngine<'_> {
+    fn train_batch(&mut self, x: &SeqBatch) -> Result<f32> {
+        let d = self.bundle.train_step_dfa(&self.params, x, self.lam, self.beta, self.lr, &self.psi)?;
+        self.params.apply(&d);
+        Ok(d.loss)
+    }
+
+    fn eval_batch(&mut self, x: &SeqBatch) -> Result<Vec<usize>> {
+        Ok(argmax_rows(&self.bundle.eval_logits(&self.params, x, self.lam, self.beta)?))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-dfa"
+    }
+}
+
+pub struct XlaAdamEngine<'a> {
+    pub bundle: &'a ModelBundle,
+    pub params: MiruParams,
+    pub state: AdamState,
+    pub lam: f32,
+    pub beta: f32,
+    pub lr: f32,
+}
+
+impl<'a> XlaAdamEngine<'a> {
+    pub fn new(bundle: &'a ModelBundle, lam: f32, beta: f32, lr: f32, seed: u64) -> Self {
+        let c = bundle.cfg;
+        let params = MiruParams::init(c.nx, c.nh, c.ny, seed);
+        let n = params.count();
+        Self { bundle, params, state: AdamState::new(n), lam, beta, lr }
+    }
+}
+
+impl Engine for XlaAdamEngine<'_> {
+    fn train_batch(&mut self, x: &SeqBatch) -> Result<f32> {
+        self.bundle.train_step_adam(&mut self.params, &mut self.state, x, self.lam, self.beta, self.lr)
+    }
+
+    fn eval_batch(&mut self, x: &SeqBatch) -> Result<Vec<usize>> {
+        Ok(argmax_rows(&self.bundle.eval_logits(&self.params, x, self.lam, self.beta)?))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-adam"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hardware (M2RU) engine
+// ---------------------------------------------------------------------------
+
+/// Device-aware engine: weights live in two differential crossbars
+/// (hidden: (nx+nh)×nh holding [W_h; U_h]; readout: nh×ny holding W_o).
+/// Training computes DFA deltas from the *effective* weights, programs
+/// them via Ziksa (write-counted), and evaluation runs the mixed-signal
+/// forward artifact.
+pub struct HardwareEngine<'a> {
+    pub bundle: &'a ModelBundle,
+    pub psi: Mat,
+    pub lam: f32,
+    pub beta: f32,
+    pub lr: f32,
+    /// biases stay digital (registers)
+    pub bh: Vec<f32>,
+    pub bo: Vec<f32>,
+    pub xbar_hidden: DifferentialCrossbar,
+    pub xbar_out: DifferentialCrossbar,
+    pub programmer: ZiksaProgrammer,
+    /// ADC full-scale voltages for the two layers.
+    pub vscale_h: f32,
+    pub vscale_o: f32,
+    /// Use the dense (no-ζ) train artifact — the Fig. 5(b) baseline.
+    pub use_dense: bool,
+}
+
+impl<'a> HardwareEngine<'a> {
+    pub fn new(
+        bundle: &'a ModelBundle,
+        lam: f32,
+        beta: f32,
+        lr: f32,
+        device: DeviceParams,
+        seed: u64,
+    ) -> Self {
+        let c = bundle.cfg;
+        let init = MiruParams::init(c.nx, c.nh, c.ny, seed);
+        // w_max sized to the init distribution with training headroom
+        let w_max = 1.0;
+        let mut xbar_hidden =
+            DifferentialCrossbar::new(c.nx + c.nh, c.nh, w_max, device, seed ^ 0xBAD1);
+        let mut xbar_out = DifferentialCrossbar::new(c.nh, c.ny, w_max, device, seed ^ 0xBAD2);
+        xbar_hidden.program_weights(&Mat::vcat(&init.wh, &init.uh));
+        xbar_out.program_weights(&init.wo);
+        Self {
+            bundle,
+            psi: make_psi(c.ny, c.nh, seed ^ 0xD0F4),
+            lam,
+            beta,
+            lr,
+            bh: init.bh,
+            bo: init.bo,
+            xbar_hidden,
+            xbar_out,
+            programmer: ZiksaProgrammer::new(),
+            vscale_h: 4.0,
+            vscale_o: 4.0,
+            use_dense: false,
+        }
+    }
+
+    /// ADC full-scale ranges for the current weights — the paper's
+    /// "shift operation controlling the dynamic range of the synaptic
+    /// weights" (§IV-B1): the integrator swing is bounded by the L1 norm
+    /// of the heaviest bitline, and the ADC range follows it so training
+    /// growth never clips the read-out (clipped logits collapse argmax).
+    fn adaptive_vscales(&mut self, eff: &MiruParams) {
+        let l1max = |m: &Mat| -> f32 {
+            let mut best = 0.0f32;
+            for c in 0..m.cols {
+                let mut s = 0.0;
+                for r in 0..m.rows {
+                    s += m.at(r, c).abs();
+                }
+                best = best.max(s);
+            }
+            best
+        };
+        // hidden drive: |x| ≤ 1 on nx lines, |βh| ≤ β on nh lines; typical
+        // activity is far below the bound — half the bound keeps LSB fine
+        // while tanh saturation forgives the rare clip.
+        let bound_h = l1max(&Mat::vcat(&eff.wh, &eff.uh));
+        self.vscale_h = (0.3 * bound_h).max(1.0);
+        // readout: logits must never clip (argmax!), use the full bound.
+        let bound_o = l1max(&eff.wo);
+        self.vscale_o = bound_o.max(1.0);
+    }
+
+    /// Effective parameters as realized by the devices right now.
+    pub fn effective_params(&self) -> MiruParams {
+        let c = self.bundle.cfg;
+        let hidden = self.xbar_hidden.read_weights();
+        let wh = Mat::from_fn(c.nx, c.nh, |r, col| hidden.at(r, col));
+        let uh = Mat::from_fn(c.nh, c.nh, |r, col| hidden.at(c.nx + r, col));
+        MiruParams {
+            wh,
+            uh,
+            bh: self.bh.clone(),
+            wo: self.xbar_out.read_weights(),
+            bo: self.bo.clone(),
+        }
+    }
+
+    /// Write counters of every memristor (for the endurance report).
+    pub fn write_counts(&self) -> Vec<u64> {
+        let mut c = self.xbar_hidden.write_counts();
+        c.extend(self.xbar_out.write_counts());
+        c
+    }
+}
+
+impl Engine for HardwareEngine<'_> {
+    fn train_batch(&mut self, x: &SeqBatch) -> Result<f32> {
+        let eff = self.effective_params();
+        let d = if self.use_dense {
+            self.bundle.train_step_dfa_dense(&eff, x, self.lam, self.beta, self.lr, &self.psi)?
+        } else {
+            self.bundle.train_step_dfa(&eff, x, self.lam, self.beta, self.lr, &self.psi)?
+        };
+        // program the crossbars (write-counted, quantized, noisy)
+        let hidden_delta = Mat::vcat(&d.d_wh, &d.d_uh);
+        self.programmer.apply(&mut self.xbar_hidden, &hidden_delta);
+        self.programmer.apply(&mut self.xbar_out, &d.d_wo);
+        // biases update digitally
+        for (b, &v) in self.bh.iter_mut().zip(&d.d_bh) {
+            *b += v;
+        }
+        for (b, &v) in self.bo.iter_mut().zip(&d.d_bo) {
+            *b += v;
+        }
+        Ok(d.loss)
+    }
+
+    fn eval_batch(&mut self, x: &SeqBatch) -> Result<Vec<usize>> {
+        let eff = self.effective_params();
+        self.adaptive_vscales(&eff);
+        let logits = self.bundle.eval_logits_hw(
+            &eff,
+            x,
+            self.lam,
+            self.beta,
+            self.vscale_h,
+            self.vscale_o,
+        )?;
+        Ok(argmax_rows(&logits))
+    }
+
+    fn name(&self) -> &'static str {
+        "m2ru-hw"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::GaussianRng;
+
+    fn toy_batch(b: usize, nt: usize, nx: usize, ny: usize, seed: u64) -> SeqBatch {
+        let mut proto_rng = GaussianRng::new(99);
+        let protos: Vec<Vec<f32>> =
+            (0..ny).map(|_| (0..nx).map(|_| proto_rng.normal()).collect()).collect();
+        let mut rng = GaussianRng::new(seed);
+        let mut sb = SeqBatch::zeros(b, nt, nx);
+        for i in 0..b {
+            let label = rng.below(ny);
+            sb.labels[i] = label;
+            for t in 0..nt {
+                for j in 0..nx {
+                    sb.sample_mut(i)[t * nx + j] =
+                        (0.25 * rng.normal() + 0.75 * protos[label][j]).clamp(-1.0, 1.0);
+                }
+            }
+        }
+        sb
+    }
+
+    #[test]
+    fn rust_dfa_engine_improves_accuracy() {
+        let mut e = RustDfaEngine::new(8, 16, 4, 0.5, 0.7, 0.5, Some(0.53), 1);
+        let test = toy_batch(64, 5, 8, 4, 0);
+        let acc = |e: &mut RustDfaEngine, t: &SeqBatch| -> f32 {
+            let preds = e.eval_batch(t).unwrap();
+            preds.iter().zip(&t.labels).filter(|(a, b)| a == b).count() as f32 / t.b as f32
+        };
+        let before = acc(&mut e, &test);
+        for i in 0..50 {
+            e.train_batch(&toy_batch(8, 5, 8, 4, 10 + i)).unwrap();
+        }
+        let after = acc(&mut e, &test);
+        assert!(after > before + 0.2, "before {before} after {after}");
+    }
+
+    #[test]
+    fn rust_adam_engine_improves_accuracy() {
+        let mut e = RustAdamEngine::new(8, 16, 4, 0.5, 0.7, 0.01, 2);
+        let test = toy_batch(64, 5, 8, 4, 0);
+        let preds0 = e.eval_batch(&test).unwrap();
+        let acc0 =
+            preds0.iter().zip(&test.labels).filter(|(a, b)| a == b).count() as f32 / test.b as f32;
+        for i in 0..50 {
+            e.train_batch(&toy_batch(8, 5, 8, 4, 200 + i)).unwrap();
+        }
+        let preds1 = e.eval_batch(&test).unwrap();
+        let acc1 =
+            preds1.iter().zip(&test.labels).filter(|(a, b)| a == b).count() as f32 / test.b as f32;
+        assert!(acc1 > acc0 + 0.2, "{acc0} -> {acc1}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Continual-learning metrics (§VI-A, Eq. 20).
+
+/// R[t][i] = accuracy on task i after finishing training task t (i ≤ t).
+#[derive(Clone, Debug, Default)]
+pub struct AccuracyMatrix {
+    pub r: Vec<Vec<f32>>,
+}
+
+impl AccuracyMatrix {
+    pub fn push_row(&mut self, row: Vec<f32>) {
+        assert_eq!(row.len(), self.r.len() + 1, "row t must cover tasks 0..=t");
+        self.r.push(row);
+    }
+
+    /// Mean accuracy after task t (Eq. 20 restricted to seen tasks).
+    pub fn mean_after(&self, t: usize) -> f32 {
+        let row = &self.r[t];
+        row.iter().sum::<f32>() / row.len() as f32
+    }
+
+    /// Final mean accuracy (Eq. 20).
+    pub fn mean_final(&self) -> f32 {
+        self.mean_after(self.r.len() - 1)
+    }
+
+    /// Average forgetting: max past accuracy minus final accuracy, over
+    /// tasks 0..T-1.
+    pub fn forgetting(&self) -> f32 {
+        let t_last = self.r.len() - 1;
+        if t_last == 0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for i in 0..t_last {
+            let best = (i..=t_last).map(|t| self.r[t][i]).fold(f32::MIN, f32::max);
+            total += best - self.r[t_last][i];
+        }
+        total / t_last as f32
+    }
+
+    /// The "average test accuracy after each task" series of Fig. 4.
+    pub fn curve(&self) -> Vec<f32> {
+        (0..self.r.len()).map(|t| self.mean_after(t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> AccuracyMatrix {
+        let mut m = AccuracyMatrix::default();
+        m.push_row(vec![0.9]);
+        m.push_row(vec![0.8, 0.85]);
+        m.push_row(vec![0.7, 0.75, 0.88]);
+        m
+    }
+
+    #[test]
+    fn mean_after_each_task() {
+        let m = demo();
+        assert!((m.mean_after(0) - 0.9).abs() < 1e-6);
+        assert!((m.mean_after(1) - 0.825).abs() < 1e-6);
+        assert!((m.mean_final() - (0.7 + 0.75 + 0.88) / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn forgetting_uses_peak_accuracy() {
+        let m = demo();
+        // task0: peak 0.9, final 0.7 → 0.2; task1: peak 0.85, final 0.75 → 0.1
+        assert!((m.forgetting() - 0.15).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curve_matches_means() {
+        let m = demo();
+        let c = m.curve();
+        assert_eq!(c.len(), 3);
+        assert!((c[2] - m.mean_final()).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_row_length_panics() {
+        let mut m = AccuracyMatrix::default();
+        m.push_row(vec![0.9, 0.8]);
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer-3 coordinator — the continual-learning runtime around the
+//! crossbar (the paper's system contribution).
+//!
+//! * [`batcher`] — fixed-shape batch assembly + replay mixing (the
+//!   artifacts are lowered with static batch sizes; the batcher owns
+//!   padding and truncation).
+//! * [`engine`] — the training/inference engines: pure-rust digital
+//!   baseline, XLA software (DFA and Adam), and the device-aware hardware
+//!   engine that routes every update through the memristive crossbars.
+//! * [`trainer`] — the domain-incremental training loop: stream tasks,
+//!   feed the data-preparation unit, mix replay, evaluate after each task.
+//! * [`tiles`] — the hidden-layer tile scheduler (SIPO/SISO dataflow).
+//! * [`metrics`] — accuracy matrices, mean accuracy, forgetting.
+
+mod batcher;
+mod engine;
+mod metrics;
+mod tiles;
+mod trainer;
+
+pub use batcher::{make_eval_batches, make_seq_batch, TrainBatcher};
+pub use engine::{
+    Engine, HardwareEngine, RustAdamEngine, RustDfaEngine, XlaAdamEngine, XlaDfaEngine,
+};
+pub use metrics::AccuracyMatrix;
+pub use tiles::TileScheduler;
+pub use trainer::{ContinualTrainer, TaskResult};

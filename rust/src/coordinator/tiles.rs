@@ -1,0 +1,103 @@
+//! Hidden-layer tile scheduler (§IV-B1).
+//!
+//! The final MiRU interpolation h_t = λh_{t-1} + (1-λ)h̃_t is computed
+//! hybrid-style: tiles work concurrently at the layer level and
+//! sequentially within a tile, fed by shift registers in SIPO mode during
+//! candidate computation and SISO otherwise. This scheduler produces the
+//! per-cycle unit assignment the datapath would execute; `hw_model`
+//! consumes only its cycle count, the tests check the functional
+//! guarantees (every unit exactly once, ≤16 cycles when tiled per paper).
+
+/// Static schedule: `plan[cycle][tile]` = hidden unit index (or None when
+/// a tile has run out of units).
+#[derive(Clone, Debug)]
+pub struct TileScheduler {
+    pub nh: usize,
+    pub tiles: usize,
+    pub plan: Vec<Vec<Option<usize>>>,
+}
+
+impl TileScheduler {
+    pub fn new(nh: usize, tiles: usize) -> Self {
+        assert!(tiles >= 1);
+        let per_tile = nh.div_ceil(tiles);
+        let mut plan = Vec::with_capacity(per_tile);
+        for cycle in 0..per_tile {
+            let row: Vec<Option<usize>> = (0..tiles)
+                .map(|t| {
+                    let unit = t * per_tile + cycle;
+                    (unit < nh && cycle < per_tile).then_some(unit).filter(|&u| u / per_tile == t)
+                })
+                .collect();
+            plan.push(row);
+        }
+        Self { nh, tiles, plan }
+    }
+
+    /// Cycles to interpolate the whole layer.
+    pub fn cycles(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Execute the schedule functionally: interpolate `cand` into `h`.
+    pub fn interpolate(&self, h: &mut [f32], cand: &[f32], lam: f32) {
+        assert_eq!(h.len(), self.nh);
+        assert_eq!(cand.len(), self.nh);
+        for row in &self.plan {
+            for &slot in row {
+                if let Some(u) = slot {
+                    h[u] = lam * h[u] + (1.0 - lam) * cand[u];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_unit_scheduled_exactly_once() {
+        for (nh, tiles) in [(100, 8), (256, 16), (10, 3), (16, 16), (7, 1)] {
+            let s = TileScheduler::new(nh, tiles);
+            let mut seen = vec![0u32; nh];
+            for row in &s.plan {
+                for &slot in row {
+                    if let Some(u) = slot {
+                        seen[u] += 1;
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "nh={nh} tiles={tiles}: {seen:?}");
+        }
+    }
+
+    #[test]
+    fn cycles_equal_ceil_nh_over_tiles() {
+        assert_eq!(TileScheduler::new(100, 8).cycles(), 13);
+        assert_eq!(TileScheduler::new(256, 16).cycles(), 16);
+        assert_eq!(TileScheduler::new(100, 1).cycles(), 100);
+    }
+
+    #[test]
+    fn paper_cap_16_cycles_with_right_tile_count() {
+        for nh in [64usize, 100, 256, 512] {
+            let tiles = nh.div_ceil(16);
+            assert!(TileScheduler::new(nh, tiles).cycles() <= 16, "nh={nh}");
+        }
+    }
+
+    #[test]
+    fn interpolation_matches_direct_formula() {
+        let s = TileScheduler::new(10, 3);
+        let mut h: Vec<f32> = (0..10).map(|i| i as f32 * 0.1).collect();
+        let cand: Vec<f32> = (0..10).map(|i| 1.0 - i as f32 * 0.1).collect();
+        let want: Vec<f32> =
+            h.iter().zip(&cand).map(|(&a, &b)| 0.4 * a + 0.6 * b).collect();
+        s.interpolate(&mut h, &cand, 0.4);
+        for (a, b) in h.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Split-feature task stream — the split CIFAR-10 / frozen ResNet-18
+//! stand-in (DESIGN.md §4).
+//!
+//! The paper feeds *precomputed frozen features* to MiRU: the learner
+//! never sees an image. We therefore synthesize class-conditional
+//! Gaussian embeddings (512-d, presented as a 16×32 sequence), split the
+//! 10 classes into 5 two-class tasks with a shared binary head (the
+//! domain-incremental protocol: no task identity at inference).
+
+use crate::rng::GaussianRng;
+
+use super::{Example, TaskData, TaskStream};
+
+const DIM: usize = 512;
+const NT: usize = 16;
+const NX: usize = 32;
+
+/// Build the 5-task split stream. `sep` controls class separability
+/// (≈0.8 gives the paper-like noisy regime).
+pub fn feature_task_stream(
+    num_tasks: usize,
+    n_train: usize,
+    n_test: usize,
+    sep: f32,
+    seed: u64,
+) -> TaskStream {
+    assert!(num_tasks <= 5, "split CIFAR-10 has 5 two-class tasks");
+    let mut proto_rng = GaussianRng::new(seed ^ 0x0C1F_A210);
+    // 10 class prototype embeddings
+    let protos: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..DIM).map(|_| proto_rng.normal() * sep).collect())
+        .collect();
+
+    let mut tasks = Vec::with_capacity(num_tasks);
+    for t in 0..num_tasks {
+        let classes = [2 * t, 2 * t + 1];
+        let mut rng = GaussianRng::new(seed.wrapping_add(77 + t as u64));
+        let mut gen = |n: usize| -> Vec<Example> {
+            (0..n)
+                .map(|i| {
+                    let which = i % 2; // balanced binary labels
+                    let proto = &protos[classes[which]];
+                    let features = proto
+                        .iter()
+                        .map(|&m| (m + rng.normal()).clamp(-1.0, 1.0) * 0.999)
+                        .collect();
+                    Example { features, label: which }
+                })
+                .collect()
+        };
+        tasks.push(TaskData { train: gen(n_train), test: gen(n_test) });
+    }
+    TaskStream {
+        name: "split-cifar10-features".into(),
+        nx: NX,
+        nt: NT,
+        ny: 2,
+        tasks,
+        feat_offset: -1.0,
+        feat_scale: 2.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_is_16x32_eq_512() {
+        let s = feature_task_stream(5, 10, 10, 0.8, 0);
+        assert_eq!(s.nx * s.nt, DIM);
+        assert_eq!(s.ny, 2);
+        assert_eq!(s.num_tasks(), 5);
+    }
+
+    #[test]
+    fn features_clamped_to_unit_ball() {
+        let s = feature_task_stream(2, 20, 10, 1.5, 1);
+        for t in &s.tasks {
+            for e in &t.train {
+                assert!(e.features.iter().all(|&v| v.abs() < 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn binary_labels_balanced() {
+        let s = feature_task_stream(3, 40, 20, 0.8, 2);
+        for t in &s.tasks {
+            let ones = t.train.iter().filter(|e| e.label == 1).count();
+            assert_eq!(ones, 20);
+        }
+    }
+
+    #[test]
+    fn tasks_use_distinct_class_pairs() {
+        // a centroid classifier trained on task 0 should be ~chance on
+        // task 1 (different underlying classes ⇒ domain shift is real).
+        let s = feature_task_stream(2, 100, 100, 1.0, 3);
+        let centroid = |ex: &[Example], lbl: usize| -> Vec<f32> {
+            let sel: Vec<_> = ex.iter().filter(|e| e.label == lbl).collect();
+            let mut c = vec![0.0f32; DIM];
+            for e in &sel {
+                for (a, &b) in c.iter_mut().zip(&e.features) {
+                    *a += b;
+                }
+            }
+            for a in &mut c {
+                *a /= sel.len() as f32;
+            }
+            c
+        };
+        let c0 = centroid(&s.tasks[0].train, 0);
+        let c1 = centroid(&s.tasks[0].train, 1);
+        let acc = |ex: &[Example]| -> f32 {
+            let d = |a: &[f32], b: &[f32]| -> f32 {
+                a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum()
+            };
+            ex.iter()
+                .filter(|e| {
+                    let pred = usize::from(d(&e.features, &c1) < d(&e.features, &c0));
+                    pred == e.label
+                })
+                .count() as f32
+                / ex.len() as f32
+        };
+        assert!(acc(&s.tasks[0].test) > 0.9, "same-task acc {}", acc(&s.tasks[0].test));
+        let cross = acc(&s.tasks[1].test);
+        assert!((0.2..0.8).contains(&cross), "cross-task acc {cross}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = feature_task_stream(2, 5, 5, 0.8, 9);
+        let b = feature_task_stream(2, 5, 5, 0.8, 9);
+        assert_eq!(a.tasks[1].test[0].features, b.tasks[1].test[0].features);
+    }
+}

@@ -1,0 +1,74 @@
+//! Synthetic workload generators (DESIGN.md §4 substitutions).
+//!
+//! The paper evaluates on permuted sequential MNIST and split CIFAR-10
+//! through frozen ResNet-18 features. Neither raw dataset is available in
+//! this offline environment, so we build generators that preserve what the
+//! continual-learning evaluation actually exercises:
+//!
+//! * [`synthetic_mnist`] — procedural 28×28 grayscale digits (stroke
+//!   templates + jitter + noise), presented row-by-row as 28-step
+//!   sequences;
+//! * [`permuted`] — fixed per-task pixel permutations over those digits
+//!   (the paper's permuted-MNIST protocol, verbatim);
+//! * [`feature_tasks`] — class-conditional Gaussian features standing in
+//!   for frozen ResNet-18 embeddings, split into 2-class tasks with a
+//!   shared binary head (domain-incremental, §VI-A).
+
+mod feature_tasks;
+mod permuted;
+mod synthetic_mnist;
+
+pub use feature_tasks::feature_task_stream;
+pub use permuted::permuted_task_stream;
+pub use synthetic_mnist::{render_digit, synthetic_mnist};
+
+/// One labeled sequence sample: `features` is nt*nx, row-major in time.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub features: Vec<f32>,
+    pub label: usize,
+}
+
+/// Train/test split for one task.
+#[derive(Clone, Debug)]
+pub struct TaskData {
+    pub train: Vec<Example>,
+    pub test: Vec<Example>,
+}
+
+/// A domain-incremental task stream with fixed sequence geometry.
+#[derive(Clone, Debug)]
+pub struct TaskStream {
+    pub name: String,
+    pub nx: usize,
+    pub nt: usize,
+    pub ny: usize,
+    pub tasks: Vec<TaskData>,
+    /// Feature range for replay-buffer quantization: (offset, scale) such
+    /// that stored = (x - offset) / scale ∈ [0, 1].
+    pub feat_offset: f32,
+    pub feat_scale: f32,
+}
+
+impl TaskStream {
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_have_consistent_geometry() {
+        let s = permuted_task_stream(3, 40, 20, 0);
+        assert_eq!(s.nx * s.nt, 784);
+        for t in &s.tasks {
+            for e in t.train.iter().chain(&t.test) {
+                assert_eq!(e.features.len(), s.nx * s.nt);
+                assert!(e.label < s.ny);
+            }
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Permuted-MNIST task stream (the paper's §VI-A protocol).
+//!
+//! Task i applies a fixed random pixel permutation π_i to every image;
+//! task 0 is the identity (plain digits). All tasks share the 10-way
+//! output head and no task identity is revealed — domain-incremental.
+
+use crate::rng::GaussianRng;
+
+use super::synthetic_mnist::synthetic_mnist;
+use super::{Example, TaskData, TaskStream};
+
+/// Build `num_tasks` permuted tasks with `n_train`/`n_test` samples each.
+pub fn permuted_task_stream(
+    num_tasks: usize,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> TaskStream {
+    let mut perm_rng = GaussianRng::new(seed ^ 0xA5A5_5A5A);
+    let mut tasks = Vec::with_capacity(num_tasks);
+    for t in 0..num_tasks {
+        // every task gets its own permutation; task 0 keeps the identity
+        // (plain digits) exactly as the paper's first task.
+        let perm: Vec<usize> = if t == 0 {
+            (0..784).collect()
+        } else {
+            perm_rng.permutation(784)
+        };
+        let apply = |ex: Vec<Example>| -> Vec<Example> {
+            ex.into_iter()
+                .map(|e| Example {
+                    features: perm.iter().map(|&p| e.features[p]).collect(),
+                    label: e.label,
+                })
+                .collect()
+        };
+        // fresh digit draws per task (a new data distribution arriving)
+        let train = apply(synthetic_mnist(n_train, seed.wrapping_add(1000 + t as u64)));
+        let test = apply(synthetic_mnist(n_test, seed.wrapping_add(2000 + t as u64)));
+        tasks.push(TaskData { train, test });
+    }
+    TaskStream {
+        name: "permuted-mnist".into(),
+        nx: 28,
+        nt: 28,
+        ny: 10,
+        tasks,
+        feat_offset: 0.0,
+        feat_scale: 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_zero_is_identity_permutation() {
+        let s = permuted_task_stream(2, 10, 5, 0);
+        let raw = synthetic_mnist(10, 1000);
+        assert_eq!(s.tasks[0].train[0].features, raw[0].features);
+    }
+
+    #[test]
+    fn later_tasks_are_permuted_but_preserve_pixel_multiset() {
+        let s = permuted_task_stream(3, 10, 5, 0);
+        let a = &s.tasks[0].train[0].features;
+        let b = &s.tasks[1].train[0].features;
+        // same underlying digit draw seed differs; instead check within
+        // task 1: pixel multiset of a permuted image equals the unpermuted
+        // draw it came from.
+        let raw = synthetic_mnist(10, 1001);
+        let mut x: Vec<_> = b.iter().map(|v| v.to_bits()).collect();
+        let mut y: Vec<_> = raw[0].features.iter().map(|v| v.to_bits()).collect();
+        x.sort_unstable();
+        y.sort_unstable();
+        assert_eq!(x, y);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn permutations_differ_across_tasks() {
+        let s = permuted_task_stream(4, 5, 5, 0);
+        // images from the same generator seed but different tasks must
+        // differ (different permutations).
+        let imgs: Vec<_> = (1..4).map(|t| s.tasks[t].train[0].features.clone()).collect();
+        assert_ne!(imgs[0], imgs[1]);
+        assert_ne!(imgs[1], imgs[2]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = permuted_task_stream(2, 5, 5, 42);
+        let b = permuted_task_stream(2, 5, 5, 42);
+        assert_eq!(a.tasks[1].train[0].features, b.tasks[1].train[0].features);
+    }
+
+    #[test]
+    fn labels_span_all_classes() {
+        let s = permuted_task_stream(1, 50, 20, 0);
+        let mut seen = [false; 10];
+        for e in &s.tasks[0].train {
+            seen[e.label] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

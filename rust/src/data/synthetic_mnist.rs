@@ -1,0 +1,210 @@
+//! Procedural 28×28 digit generator — the MNIST stand-in.
+//!
+//! Each class is a set of stroke segments on the 28×28 grid; a sample is
+//! rendered by drawing the strokes with ~2 px width, then applying a
+//! per-sample random translation, stroke-intensity variation and pixel
+//! noise. The result is a linearly-separable-ish 10-class image problem
+//! with the same geometry and value range ([0,1]) as MNIST — which is all
+//! the permutation/replay/forgetting machinery observes.
+
+use crate::rng::GaussianRng;
+
+use super::Example;
+
+const W: usize = 28;
+
+/// Stroke endpoints (x0, y0, x1, y1) in a 0..28 coordinate box per digit.
+fn strokes(class: usize) -> &'static [(f32, f32, f32, f32)] {
+    match class {
+        // 0: ring
+        0 => &[
+            (8.0, 5.0, 19.0, 5.0),
+            (19.0, 5.0, 21.0, 22.0),
+            (21.0, 22.0, 8.0, 22.0),
+            (8.0, 22.0, 6.0, 5.0),
+            (6.0, 5.0, 8.0, 5.0),
+        ],
+        // 1: vertical bar with serif
+        1 => &[(13.0, 4.0, 14.0, 23.0), (9.0, 8.0, 13.0, 4.0), (9.0, 23.0, 19.0, 23.0)],
+        // 2
+        2 => &[
+            (7.0, 7.0, 13.0, 4.0),
+            (13.0, 4.0, 20.0, 8.0),
+            (20.0, 8.0, 7.0, 22.0),
+            (7.0, 22.0, 21.0, 22.0),
+        ],
+        // 3
+        3 => &[
+            (7.0, 5.0, 20.0, 5.0),
+            (20.0, 5.0, 12.0, 13.0),
+            (12.0, 13.0, 20.0, 19.0),
+            (20.0, 19.0, 8.0, 23.0),
+        ],
+        // 4
+        4 => &[(16.0, 4.0, 6.0, 16.0), (6.0, 16.0, 21.0, 16.0), (16.0, 4.0, 16.0, 24.0)],
+        // 5
+        5 => &[
+            (20.0, 4.0, 7.0, 4.0),
+            (7.0, 4.0, 7.0, 13.0),
+            (7.0, 13.0, 19.0, 14.0),
+            (19.0, 14.0, 18.0, 23.0),
+            (18.0, 23.0, 7.0, 22.0),
+        ],
+        // 6
+        6 => &[
+            (18.0, 4.0, 9.0, 12.0),
+            (9.0, 12.0, 8.0, 21.0),
+            (8.0, 21.0, 19.0, 22.0),
+            (19.0, 22.0, 19.0, 14.0),
+            (19.0, 14.0, 9.0, 14.0),
+        ],
+        // 7
+        7 => &[(7.0, 5.0, 21.0, 5.0), (21.0, 5.0, 11.0, 23.0), (10.0, 13.0, 18.0, 13.0)],
+        // 8
+        8 => &[
+            (13.0, 4.0, 8.0, 8.0),
+            (8.0, 8.0, 19.0, 14.0),
+            (19.0, 14.0, 8.0, 20.0),
+            (8.0, 20.0, 13.0, 24.0),
+            (13.0, 24.0, 20.0, 20.0),
+            (13.0, 4.0, 19.0, 8.0),
+            (19.0, 8.0, 8.0, 14.0),
+            (8.0, 14.0, 20.0, 20.0),
+        ],
+        // 9
+        _ => &[
+            (19.0, 10.0, 12.0, 4.0),
+            (12.0, 4.0, 8.0, 10.0),
+            (8.0, 10.0, 19.0, 12.0),
+            (19.0, 10.0, 18.0, 23.0),
+        ],
+    }
+}
+
+/// Render one digit sample: 784 pixels in [0,1].
+pub fn render_digit(class: usize, rng: &mut GaussianRng) -> Vec<f32> {
+    let mut img = vec![0.0f32; W * W];
+    let dx = rng.uniform_in(-2.0, 2.0);
+    let dy = rng.uniform_in(-2.0, 2.0);
+    let intensity = rng.uniform_in(0.75, 1.0);
+    let thickness = rng.uniform_in(1.2, 1.9);
+
+    for &(x0, y0, x1, y1) in strokes(class) {
+        // jitter stroke endpoints slightly for within-class variety
+        let (x0, y0) = (x0 + dx + rng.normal() * 0.4, y0 + dy + rng.normal() * 0.4);
+        let (x1, y1) = (x1 + dx + rng.normal() * 0.4, y1 + dy + rng.normal() * 0.4);
+        let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt().max(1e-3);
+        let steps = (len * 3.0) as usize + 2;
+        for s in 0..=steps {
+            let t = s as f32 / steps as f32;
+            let cx = x0 + t * (x1 - x0);
+            let cy = y0 + t * (y1 - y0);
+            // splat a soft disc of radius `thickness`
+            let r = thickness.ceil() as i32;
+            for oy in -r..=r {
+                for ox in -r..=r {
+                    let px = cx + ox as f32;
+                    let py = cy + oy as f32;
+                    if px < 0.0 || py < 0.0 || px >= W as f32 || py >= W as f32 {
+                        continue;
+                    }
+                    let d2 = ((px - cx).powi(2) + (py - cy).powi(2)) / (thickness * thickness);
+                    if d2 <= 1.0 {
+                        let idx = py as usize * W + px as usize;
+                        img[idx] = img[idx].max(intensity * (1.0 - 0.5 * d2));
+                    }
+                }
+            }
+        }
+    }
+    // pixel noise, clamped to [0,1)
+    for p in &mut img {
+        *p = (*p + 0.04 * rng.normal().abs()).clamp(0.0, 0.999);
+    }
+    img
+}
+
+/// Generate a balanced labeled set of `n` synthetic digits.
+pub fn synthetic_mnist(n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = GaussianRng::new(seed);
+    (0..n)
+        .map(|i| {
+            let label = i % 10;
+            Example { features: render_digit(label, &mut rng), label }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_are_28x28_in_unit_range() {
+        let ex = synthetic_mnist(20, 0);
+        for e in &ex {
+            assert_eq!(e.features.len(), 784);
+            assert!(e.features.iter().all(|&p| (0.0..1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn digits_have_ink() {
+        for e in synthetic_mnist(10, 1) {
+            let ink: f32 = e.features.iter().sum();
+            assert!(ink > 20.0, "class {} has ink {ink}", e.label);
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable_by_template() {
+        // mean images of different classes should differ clearly more than
+        // samples within a class differ from their own mean.
+        let n = 400;
+        let ex = synthetic_mnist(n, 2);
+        let mut means = vec![vec![0.0f32; 784]; 10];
+        let mut counts = [0usize; 10];
+        for e in &ex {
+            counts[e.label] += 1;
+            for (m, &p) in means[e.label].iter_mut().zip(&e.features) {
+                *m += p;
+            }
+        }
+        for (c, m) in means.iter_mut().enumerate() {
+            for v in m.iter_mut() {
+                *v /= counts[c] as f32;
+            }
+        }
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f32>().sqrt()
+        };
+        let mut min_between = f32::INFINITY;
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                min_between = min_between.min(dist(&means[i], &means[j]));
+            }
+        }
+        let mut max_within = 0.0f32;
+        for e in &ex {
+            max_within = max_within.max(dist(&e.features, &means[e.label]) / 3.0);
+        }
+        assert!(min_between > max_within, "between {min_between} within*3 {max_within}");
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let ex = synthetic_mnist(100, 3);
+        for c in 0..10 {
+            assert_eq!(ex.iter().filter(|e| e.label == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = synthetic_mnist(5, 7);
+        let b = synthetic_mnist(5, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.features, y.features);
+        }
+    }
+}

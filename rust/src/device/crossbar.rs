@@ -1,0 +1,221 @@
+//! Differential memristive crossbar (Fig. 2-Left, Eq. 7).
+//!
+//! Each synaptic weight maps to one tunable device against a fixed
+//! reference column initialized at the mid-window conductance; the bipolar
+//! weight is the conductance difference. The crossbar exposes:
+//!
+//! * `program_weights` — full (re)programming, one write per device;
+//! * `apply_deltas` — incremental training writes, one write per *changed*
+//!   device (this is the endurance accounting hook for Fig. 5b);
+//! * `read_weights` — the weights the analog VMM actually realizes, with
+//!   conductance discretization and device variability folded in;
+//! * `vmm` — the ideal analog dot product over the read weights (used by
+//!   the Fig. 5a replay-error study).
+
+use crate::linalg::Mat;
+use crate::rng::GaussianRng;
+
+use super::memristor::{DeviceParams, Memristor};
+
+/// A rows×cols differential crossbar storing weights in [-w_max, +w_max].
+#[derive(Clone, Debug)]
+pub struct DifferentialCrossbar {
+    pub rows: usize,
+    pub cols: usize,
+    pub params: DeviceParams,
+    /// Weight magnitude that maps to the full conductance swing.
+    pub w_max: f32,
+    devices: Vec<Memristor>,
+    rng: GaussianRng,
+}
+
+impl DifferentialCrossbar {
+    pub fn new(rows: usize, cols: usize, w_max: f32, params: DeviceParams, seed: u64) -> Self {
+        let mut rng = GaussianRng::new(seed);
+        let devices = (0..rows * cols).map(|_| Memristor::new(&params, &mut rng)).collect();
+        Self { rows, cols, params, w_max, devices, rng }
+    }
+
+    #[inline]
+    fn idx(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.rows && c < self.cols);
+        r * self.cols + c
+    }
+
+    /// Map a weight to a target conductance: g_ref + (w/w_max)·(swing/2).
+    fn weight_to_g(&self, w: f32) -> f64 {
+        let half_swing = 0.5 * (self.params.g_max() - self.params.g_min());
+        self.params.g_ref() + f64::from((w / self.w_max).clamp(-1.0, 1.0)) * half_swing
+    }
+
+    /// Inverse map on the *read* conductance (reference column is ideal).
+    fn g_to_weight(&self, g: f64) -> f32 {
+        let half_swing = 0.5 * (self.params.g_max() - self.params.g_min());
+        ((g - self.params.g_ref()) / half_swing) as f32 * self.w_max
+    }
+
+    /// Program every device to realize `w` (ex-situ load). One write each.
+    pub fn program_weights(&mut self, w: &Mat) {
+        assert_eq!((w.rows, w.cols), (self.rows, self.cols));
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let target = self.weight_to_g(w.at(r, c));
+                let i = self.idx(r, c);
+                self.devices[i].program(target, &self.params.clone(), &mut self.rng);
+            }
+        }
+    }
+
+    /// In-situ training update: program only the devices whose delta is
+    /// non-zero (the K-WTA-sparsified write set). Returns the number of
+    /// write operations issued.
+    pub fn apply_deltas(&mut self, delta: &Mat) -> u64 {
+        assert_eq!((delta.rows, delta.cols), (self.rows, self.cols));
+        let mut writes = 0;
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let d = delta.at(r, c);
+                if d == 0.0 {
+                    continue;
+                }
+                let i = self.idx(r, c);
+                let current_w = self.g_to_weight(self.devices[i].g);
+                let target = self.weight_to_g(current_w + d);
+                self.devices[i].program(target, &self.params.clone(), &mut self.rng);
+                writes += 1;
+            }
+        }
+        writes
+    }
+
+    /// The weights the analog computation realizes right now:
+    /// discretization and c2c noise are baked in by programming; the d2d
+    /// deviation acts on the *differential* conductance (tunable and
+    /// reference devices drift together to first order, so the net weight
+    /// sees a ~10% relative error — the paper's variability bound).
+    pub fn read_weights(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| {
+            let dev = &self.devices[self.idx(r, c)];
+            self.g_to_weight(dev.g) * dev.d2d as f32
+        })
+    }
+
+    /// Ideal analog VMM over the realized weights: x[b,rows] → [b,cols].
+    pub fn vmm(&self, x: &Mat) -> Mat {
+        x.matmul(&self.read_weights())
+    }
+
+    /// Per-device write counters (row-major), for endurance analysis.
+    pub fn write_counts(&self) -> Vec<u64> {
+        self.devices.iter().map(|d| d.writes).collect()
+    }
+
+    /// Fault injection: freeze a random fraction of devices at their
+    /// current conductance (endurance exhaustion / stuck-at faults). The
+    /// frozen devices still read, but no longer program — the §VI-B
+    /// "loss of elasticity" failure mode, injected on demand for the
+    /// fault-tolerance study.
+    pub fn freeze_fraction(&mut self, frac: f64) -> usize {
+        let n = self.devices.len();
+        let target = ((frac.clamp(0.0, 1.0)) * n as f64).round() as usize;
+        let mut order: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut order);
+        let mut frozen = 0;
+        for &i in &order {
+            if frozen >= target {
+                break;
+            }
+            if !self.devices[i].frozen {
+                self.devices[i].frozen = true;
+                frozen += 1;
+            }
+        }
+        frozen
+    }
+
+    /// Fraction of devices that lost elasticity.
+    pub fn frozen_fraction(&self) -> f64 {
+        self.devices.iter().filter(|d| d.frozen).count() as f64 / self.devices.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_xbar(seed: u64) -> DifferentialCrossbar {
+        DifferentialCrossbar::new(8, 6, 1.0, DeviceParams::default(), seed)
+    }
+
+    #[test]
+    fn program_then_read_roundtrips_within_quantization() {
+        let mut xb = small_xbar(0);
+        let w = Mat::from_fn(8, 6, |r, c| ((r * 6 + c) as f32 / 47.0) * 1.6 - 0.8);
+        xb.program_weights(&w);
+        let got = xb.read_weights();
+        // error budget: 1 level of discretization + c2c + d2d (σ=10%,
+        // allow ~3.5σ tails on the relative term)
+        let lvl = 2.0 / 63.0; // one level in weight units (w_max=1)
+        for (a, b) in got.data.iter().zip(&w.data) {
+            assert!((a - b).abs() < 0.5 * lvl + 0.35 * b.abs() + 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn weights_clamp_to_w_max() {
+        let mut xb = small_xbar(1);
+        let w = Mat::from_fn(8, 6, |_, _| 5.0);
+        xb.program_weights(&w);
+        let got = xb.read_weights();
+        for &v in &got.data {
+            assert!(v <= 1.0 * 1.5, "{v}"); // w_max + d2d headroom
+        }
+    }
+
+    #[test]
+    fn apply_deltas_counts_only_nonzero() {
+        let mut xb = small_xbar(2);
+        xb.program_weights(&Mat::zeros(8, 6));
+        let mut delta = Mat::zeros(8, 6);
+        *delta.at_mut(0, 0) = 0.1;
+        *delta.at_mut(3, 4) = -0.2;
+        let writes = xb.apply_deltas(&delta);
+        assert_eq!(writes, 2);
+        let counts = xb.write_counts();
+        assert_eq!(counts.iter().filter(|&&c| c == 2).count(), 2);
+        assert_eq!(counts.iter().filter(|&&c| c == 1).count(), 46);
+    }
+
+    #[test]
+    fn deltas_move_weights_in_right_direction() {
+        let mut xb = small_xbar(3);
+        xb.program_weights(&Mat::zeros(8, 6));
+        let before = xb.read_weights().at(2, 2);
+        let mut delta = Mat::zeros(8, 6);
+        *delta.at_mut(2, 2) = 0.4;
+        xb.apply_deltas(&delta);
+        let after = xb.read_weights().at(2, 2);
+        assert!(after > before + 0.2, "{before} -> {after}");
+    }
+
+    #[test]
+    fn vmm_matches_read_weights_matmul() {
+        let mut xb = small_xbar(4);
+        let w = Mat::from_fn(8, 6, |r, c| (r as f32 - c as f32) * 0.1);
+        xb.program_weights(&w);
+        let x = Mat::from_fn(3, 8, |r, c| (r + c) as f32 * 0.05);
+        let got = xb.vmm(&x);
+        let want = x.matmul(&xb.read_weights());
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = small_xbar(7);
+        let mut b = small_xbar(7);
+        let w = Mat::from_fn(8, 6, |r, _| r as f32 * 0.1 - 0.3);
+        a.program_weights(&w);
+        b.program_weights(&w);
+        assert_eq!(a.read_weights().data, b.read_weights().data);
+    }
+}

@@ -1,0 +1,191 @@
+//! Behavioural memristor model (VTEAM-lite).
+//!
+//! We model what the architecture observes: a programmable conductance in
+//! [1/R_off, 1/R_on], discretized to a finite number of programmable
+//! levels, with cycle-to-cycle write noise, a fixed per-device
+//! device-to-device deviation, and a finite write endurance after which
+//! the device loses elasticity (freezes at its last conductance — the
+//! paper's "loss of elasticity feature", §VI-B).
+
+use crate::rng::GaussianRng;
+
+/// Published device parameters (§V-B): TaOx-fitted VTEAM model.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceParams {
+    /// Low-resistance state, Ω (R_on = 2 MΩ → g_max = 500 nS).
+    pub r_on: f64,
+    /// High-resistance state, Ω (R_off = 20 MΩ → g_min = 50 nS).
+    pub r_off: f64,
+    /// Programmable conductance levels between g_min and g_max.
+    pub levels: u32,
+    /// Cycle-to-cycle write variability (σ as a fraction of the target
+    /// conductance step; paper: 10%).
+    pub c2c_sigma: f64,
+    /// Device-to-device variability (σ as a fraction of conductance).
+    pub d2d_sigma: f64,
+    /// Write endurance in cycles (paper sweep 1e6–1e12; 1e9 default).
+    pub endurance: u64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        Self {
+            r_on: 2.0e6,
+            r_off: 20.0e6,
+            // 8-bit multilevel programming (Ziksa): coarser grids swallow
+            // the ζ-sparsified DFA deltas and stall on-chip learning —
+            // see EXPERIMENTS.md §Calibration.
+            levels: 256,
+            c2c_sigma: 0.10,
+            d2d_sigma: 0.10,
+            endurance: 1_000_000_000,
+        }
+    }
+}
+
+impl DeviceParams {
+    pub fn g_min(&self) -> f64 {
+        1.0 / self.r_off
+    }
+    pub fn g_max(&self) -> f64 {
+        1.0 / self.r_on
+    }
+    /// Mid-window conductance — the fixed reference devices of Fig. 2.
+    pub fn g_ref(&self) -> f64 {
+        0.5 * (self.g_min() + self.g_max())
+    }
+    /// One programmable conductance step.
+    pub fn g_step(&self) -> f64 {
+        (self.g_max() - self.g_min()) / f64::from(self.levels - 1)
+    }
+    /// Snap a conductance to the nearest programmable level.
+    pub fn quantize_g(&self, g: f64) -> f64 {
+        let clamped = g.clamp(self.g_min(), self.g_max());
+        let level = ((clamped - self.g_min()) / self.g_step()).round();
+        self.g_min() + level * self.g_step()
+    }
+}
+
+/// One tunable device in a crossbar.
+#[derive(Clone, Debug)]
+pub struct Memristor {
+    /// Current (true) conductance, S.
+    pub g: f64,
+    /// Fixed multiplicative device-to-device deviation (≈ N(1, d2d_sigma)).
+    pub d2d: f64,
+    /// Accumulated write operations.
+    pub writes: u64,
+    /// Elasticity lost (writes exceeded endurance): further programming
+    /// is a no-op, reads still work.
+    pub frozen: bool,
+}
+
+impl Memristor {
+    /// Fresh device at the reference conductance with sampled d2d factor.
+    pub fn new(params: &DeviceParams, rng: &mut GaussianRng) -> Self {
+        Self {
+            g: params.g_ref(),
+            d2d: (1.0 + params.d2d_sigma * f64::from(rng.normal())).max(0.5),
+            writes: 0,
+            frozen: false,
+        }
+    }
+
+    /// Program toward `target` conductance. Counts one write cycle, snaps
+    /// to the level grid and adds cycle-to-cycle noise. No-op (except for
+    /// the attempt) once the device is frozen.
+    pub fn program(&mut self, target: f64, params: &DeviceParams, rng: &mut GaussianRng) {
+        if self.frozen {
+            return;
+        }
+        self.writes += 1;
+        if self.writes > params.endurance {
+            self.frozen = true;
+            return;
+        }
+        let ideal = params.quantize_g(target);
+        let noise = params.g_step() * params.c2c_sigma * f64::from(rng.normal());
+        self.g = (ideal + noise).clamp(params.g_min(), params.g_max());
+    }
+
+    /// Conductance as the read circuit sees it (d2d deviation applied).
+    pub fn read(&self) -> f64 {
+        self.g * self.d2d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_window() {
+        let p = DeviceParams::default();
+        assert!((p.g_min() - 5.0e-8).abs() < 1e-12);
+        assert!((p.g_max() - 5.0e-7).abs() < 1e-12);
+        assert!(p.g_ref() > p.g_min() && p.g_ref() < p.g_max());
+    }
+
+    #[test]
+    fn quantize_snaps_to_grid_and_clamps() {
+        let p = DeviceParams::default();
+        let q = p.quantize_g(p.g_min() + 1.4 * p.g_step());
+        assert!((q - (p.g_min() + p.g_step())).abs() < 1e-15);
+        assert_eq!(p.quantize_g(1.0), p.g_max());
+        assert_eq!(p.quantize_g(0.0), p.g_min());
+    }
+
+    #[test]
+    fn program_counts_writes_and_stays_in_window() {
+        let p = DeviceParams::default();
+        let mut rng = GaussianRng::new(0);
+        let mut m = Memristor::new(&p, &mut rng);
+        for i in 0..1000 {
+            let t = p.g_min() + (i as f64 / 999.0) * (p.g_max() - p.g_min());
+            m.program(t, &p, &mut rng);
+            assert!(m.g >= p.g_min() && m.g <= p.g_max());
+        }
+        assert_eq!(m.writes, 1000);
+    }
+
+    #[test]
+    fn endurance_freezes_device() {
+        let p = DeviceParams { endurance: 10, ..DeviceParams::default() };
+        let mut rng = GaussianRng::new(1);
+        let mut m = Memristor::new(&p, &mut rng);
+        for _ in 0..20 {
+            m.program(p.g_max(), &p, &mut rng);
+        }
+        assert!(m.frozen);
+        let g_before = m.g;
+        m.program(p.g_min(), &p, &mut rng);
+        assert_eq!(m.g, g_before, "frozen device must not move");
+        assert_eq!(m.writes, 11, "writes stop accumulating after freeze");
+    }
+
+    #[test]
+    fn c2c_noise_is_bounded_relative_to_step() {
+        let p = DeviceParams::default();
+        let mut rng = GaussianRng::new(2);
+        let mut m = Memristor::new(&p, &mut rng);
+        let target = p.g_ref();
+        let mut max_dev: f64 = 0.0;
+        for _ in 0..500 {
+            m.program(target, &p, &mut rng);
+            max_dev = max_dev.max((m.g - p.quantize_g(target)).abs());
+        }
+        // 5 sigma of 10% of a step
+        assert!(max_dev < 5.0 * p.c2c_sigma * p.g_step(), "{max_dev}");
+    }
+
+    #[test]
+    fn d2d_is_fixed_per_device() {
+        let p = DeviceParams::default();
+        let mut rng = GaussianRng::new(3);
+        let m = Memristor::new(&p, &mut rng);
+        let r1 = m.read();
+        let r2 = m.read();
+        assert_eq!(r1, r2);
+        assert!((m.read() / m.g - m.d2d).abs() < 1e-12);
+    }
+}

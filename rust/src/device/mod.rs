@@ -1,0 +1,21 @@
+//! Memristor device and crossbar substrate (§IV, §V-B device setup).
+//!
+//! The paper's evaluation used a Verilog-A VTEAM model fitted to TaOx
+//! devices; this module is the behavioural equivalent with the same
+//! published parameters: R_on = 2 MΩ, R_off = 20 MΩ, set/reset ≤ 1.2 V,
+//! ±1 V threshold, 10% cycle-to-cycle and device-to-device variability,
+//! endurance 10⁶–10¹² cycles (10⁹ default for the lifespan study).
+
+mod crossbar;
+mod endurance;
+mod integrator;
+mod memristor;
+mod programming;
+mod vteam;
+
+pub use crossbar::DifferentialCrossbar;
+pub use endurance::{lifespan_years, EnduranceReport, SECONDS_PER_YEAR};
+pub use integrator::{IntegratorSpec, RetentionReport};
+pub use memristor::{DeviceParams, Memristor};
+pub use programming::{WriteEvent, ZiksaProgrammer};
+pub use vteam::{VteamDevice, VteamParams};

@@ -1,0 +1,114 @@
+//! Ziksa-style write scheduling (§IV-B2, ref. [34]).
+//!
+//! The training module turns gradient deltas into device programming: the
+//! write-control logic walks the sparsified delta matrices, schedules
+//! set/reset pulses per device, and reports write events for endurance
+//! accounting and energy estimation. We model the scheduler's observable
+//! behaviour: pulse counts per update, per-crossbar write tallies, and the
+//! write-energy hook consumed by `hw_model::power`.
+
+use crate::linalg::Mat;
+
+use super::crossbar::DifferentialCrossbar;
+
+/// One crossbar update event (per train step, per crossbar).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WriteEvent {
+    /// Devices programmed this step.
+    pub writes: u64,
+    /// Devices skipped because the delta was ζ-zeroed.
+    pub skipped: u64,
+    /// Sum of |Δw| actually applied (energy model input).
+    pub delta_magnitude: f64,
+}
+
+/// Write controller wrapping the three weight crossbars of one MiRU layer
+/// stack (W_h, U_h stacked on the hidden crossbar; W_o on the readout).
+pub struct ZiksaProgrammer {
+    /// Cumulative events, for reporting.
+    pub total: WriteEvent,
+    /// Events of the last `apply` call.
+    pub last: WriteEvent,
+    /// Update steps issued.
+    pub steps: u64,
+}
+
+impl Default for ZiksaProgrammer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ZiksaProgrammer {
+    pub fn new() -> Self {
+        Self { total: WriteEvent::default(), last: WriteEvent::default(), steps: 0 }
+    }
+
+    /// Apply one delta matrix to one crossbar, recording write pressure.
+    pub fn apply(&mut self, xbar: &mut DifferentialCrossbar, delta: &Mat) -> WriteEvent {
+        let writes = xbar.apply_deltas(delta);
+        let nonzero_mag: f64 =
+            delta.data.iter().filter(|&&d| d != 0.0).map(|&d| f64::from(d.abs())).sum();
+        let ev = WriteEvent {
+            writes,
+            skipped: (delta.data.len() as u64).saturating_sub(writes),
+            delta_magnitude: nonzero_mag,
+        };
+        self.last = ev;
+        self.total.writes += ev.writes;
+        self.total.skipped += ev.skipped;
+        self.total.delta_magnitude += ev.delta_magnitude;
+        self.steps += 1;
+        ev
+    }
+
+    /// Mean writes per step so far.
+    pub fn writes_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.total.writes as f64 / self.steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceParams;
+
+    #[test]
+    fn sparse_delta_reduces_writes() {
+        let mut xb = DifferentialCrossbar::new(10, 10, 1.0, DeviceParams::default(), 0);
+        xb.program_weights(&Mat::zeros(10, 10));
+        let mut prog = ZiksaProgrammer::new();
+
+        let dense = Mat::from_fn(10, 10, |_, _| 0.01);
+        let ev_dense = prog.apply(&mut xb, &dense);
+        assert_eq!(ev_dense.writes, 100);
+        assert_eq!(ev_dense.skipped, 0);
+
+        let mut sparse = Mat::zeros(10, 10);
+        for i in 0..53 {
+            sparse.data[i] = 0.01;
+        }
+        let ev_sparse = prog.apply(&mut xb, &sparse);
+        assert_eq!(ev_sparse.writes, 53);
+        assert_eq!(ev_sparse.skipped, 47);
+
+        assert_eq!(prog.steps, 2);
+        assert_eq!(prog.total.writes, 153);
+        assert!((prog.writes_per_step() - 76.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_magnitude_accumulates_abs() {
+        let mut xb = DifferentialCrossbar::new(2, 2, 1.0, DeviceParams::default(), 1);
+        xb.program_weights(&Mat::zeros(2, 2));
+        let mut prog = ZiksaProgrammer::new();
+        let delta = Mat::from_vec(2, 2, vec![0.1, -0.2, 0.0, 0.3]);
+        let ev = prog.apply(&mut xb, &delta);
+        assert!((ev.delta_magnitude - 0.6).abs() < 1e-6);
+        assert_eq!(ev.writes, 3);
+    }
+}

@@ -1,0 +1,168 @@
+//! VTEAM memristor dynamics (Kvatinsky et al. [38]), fitted to the TaOx
+//! device of [39] — the model the paper simulates in Verilog-A.
+//!
+//! State variable w ∈ [0, 1] (normalized filament position):
+//!
+//!   dw/dt = k_off · (v/v_off − 1)^α    for v > v_off  (reset → R_off)
+//!   dw/dt = −k_on · (v/v_on − 1)^α     for v < v_on   (set  → R_on)
+//!   dw/dt = 0 otherwise                 (|v| below threshold)
+//!
+//! with conductance linear in the state: G(w) = g_max − w·(g_max − g_min).
+//! The paper's constraints (§V-B): set/reset ≤ 1.2 V, threshold ±1 V —
+//! reads at 0.1 V (WBS pulses) must never disturb the state, and a 1.2 V
+//! Ziksa pulse train programs the device incrementally. `ZiksaProgrammer`
+//! can drive this model as the pulse-level alternative to the behavioural
+//! `Memristor::program` (same observable: conductance + write count).
+
+/// VTEAM parameters, TaOx fit.
+#[derive(Clone, Copy, Debug)]
+pub struct VteamParams {
+    /// Threshold voltages, V (paper: ±1.0).
+    pub v_on: f64,
+    pub v_off: f64,
+    /// Rate constants, 1/s — fitted so one 1.2 V / 1 µs pulse moves the
+    /// state by ≈1/64 of the window (≈64-pulse full traversal, multilevel).
+    pub k_on: f64,
+    pub k_off: f64,
+    /// Nonlinearity exponent.
+    pub alpha: f64,
+    /// Conductance window (shared with `DeviceParams`).
+    pub g_min: f64,
+    pub g_max: f64,
+}
+
+impl Default for VteamParams {
+    fn default() -> Self {
+        Self {
+            v_on: -1.0,
+            v_off: 1.0,
+            // (1.2/1.0 − 1)^1 = 0.2 ⇒ k·0.2·1µs = 1/64 ⇒ k = 78_125
+            k_on: 78_125.0,
+            k_off: 78_125.0,
+            alpha: 1.0,
+            g_min: 5.0e-8,
+            g_max: 5.0e-7,
+        }
+    }
+}
+
+/// One VTEAM device.
+#[derive(Clone, Debug)]
+pub struct VteamDevice {
+    /// Normalized state: 0 = fully ON (g_max), 1 = fully OFF (g_min).
+    pub w: f64,
+    pub params: VteamParams,
+}
+
+impl VteamDevice {
+    pub fn at_state(w: f64, params: VteamParams) -> Self {
+        Self { w: w.clamp(0.0, 1.0), params }
+    }
+
+    /// Current conductance.
+    pub fn conductance(&self) -> f64 {
+        self.params.g_max - self.w * (self.params.g_max - self.params.g_min)
+    }
+
+    /// Apply a voltage for `dt` seconds (explicit Euler — fine for the
+    /// pulse widths used here).
+    pub fn apply(&mut self, v: f64, dt: f64) {
+        let p = &self.params;
+        let dwdt = if v > p.v_off {
+            p.k_off * (v / p.v_off - 1.0).powf(p.alpha)
+        } else if v < p.v_on {
+            -p.k_on * (v / p.v_on - 1.0).powf(p.alpha)
+        } else {
+            0.0
+        };
+        self.w = (self.w + dwdt * dt).clamp(0.0, 1.0);
+    }
+
+    /// One Ziksa programming pulse: ±1.2 V for 1 µs. `toward_off` raises
+    /// resistance (reset), otherwise lowers it (set).
+    pub fn ziksa_pulse(&mut self, toward_off: bool) {
+        self.apply(if toward_off { 1.2 } else { -1.2 }, 1.0e-6);
+    }
+
+    /// Pulses needed to move from the current conductance to `target`
+    /// (the write-energy / write-latency unit the scheduler bills).
+    pub fn pulses_to(&self, target_g: f64) -> u32 {
+        let span = self.params.g_max - self.params.g_min;
+        let delta_w = ((self.conductance() - target_g) / span).abs();
+        // one pulse ≈ 1/64 of the window (see k fit)
+        (delta_w * 64.0).ceil() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_voltage_never_disturbs_state() {
+        // WBS pulses are 0.1 V — far below the ±1 V threshold.
+        let mut d = VteamDevice::at_state(0.5, VteamParams::default());
+        for _ in 0..1_000_000 {
+            d.apply(0.1, 50e-9);
+            d.apply(-0.1, 50e-9);
+        }
+        assert_eq!(d.w, 0.5);
+    }
+
+    #[test]
+    fn sub_threshold_exactly_at_1v_is_safe() {
+        let mut d = VteamDevice::at_state(0.3, VteamParams::default());
+        d.apply(1.0, 1.0);
+        d.apply(-1.0, 1.0);
+        assert_eq!(d.w, 0.3);
+    }
+
+    #[test]
+    fn ziksa_pulse_moves_one_level() {
+        let mut d = VteamDevice::at_state(0.5, VteamParams::default());
+        d.ziksa_pulse(true);
+        assert!((d.w - 0.5 - 1.0 / 64.0).abs() < 1e-9, "{}", d.w);
+        d.ziksa_pulse(false);
+        assert!((d.w - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_window_traversal_in_64_pulses() {
+        let mut d = VteamDevice::at_state(0.0, VteamParams::default());
+        for _ in 0..64 {
+            d.ziksa_pulse(true);
+        }
+        assert!((d.w - 1.0).abs() < 1e-9);
+        assert!((d.conductance() - d.params.g_min).abs() < 1e-15);
+    }
+
+    #[test]
+    fn state_clamps_at_window_edges() {
+        let mut d = VteamDevice::at_state(0.99, VteamParams::default());
+        for _ in 0..10 {
+            d.ziksa_pulse(true);
+        }
+        assert_eq!(d.w, 1.0);
+    }
+
+    #[test]
+    fn conductance_is_linear_in_state() {
+        let p = VteamParams::default();
+        let g0 = VteamDevice::at_state(0.0, p).conductance();
+        let g5 = VteamDevice::at_state(0.5, p).conductance();
+        let g1 = VteamDevice::at_state(1.0, p).conductance();
+        assert!((g0 - p.g_max).abs() < 1e-15);
+        assert!((g1 - p.g_min).abs() < 1e-15);
+        assert!((g5 - 0.5 * (p.g_max + p.g_min)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pulses_to_target_counts_levels() {
+        let p = VteamParams::default();
+        let d = VteamDevice::at_state(0.0, p);
+        let span = p.g_max - p.g_min;
+        assert_eq!(d.pulses_to(p.g_max - 0.25 * span), 16);
+        assert_eq!(d.pulses_to(p.g_max), 0);
+        assert_eq!(d.pulses_to(p.g_min), 64);
+    }
+}

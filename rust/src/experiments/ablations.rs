@@ -1,0 +1,159 @@
+//! Ablations called out in DESIGN.md §5: replay on/off (catastrophic
+//! forgetting), ζ sparsification on/off (accuracy cost of the write
+//! savings), and the xorshift-vs-LFSR reservoir-index study that backs
+//! the paper's §IV-A1 design choice.
+
+use anyhow::Result;
+
+use crate::config::{Manifest, NetConfig, RunConfig};
+use crate::coordinator::{ContinualTrainer, HardwareEngine, XlaDfaEngine};
+use crate::data::permuted_task_stream;
+use crate::device::DeviceParams;
+use crate::replay::{ReservoirDecision, ReservoirSampler};
+use crate::rng::Lfsr16;
+use crate::runtime::{ModelBundle, Runtime};
+
+use super::Report;
+
+/// Replay on/off on the permuted stream (software DFA engine).
+pub fn run_ablation_replay(
+    rt: &Runtime,
+    manifest: &Manifest,
+    run: &RunConfig,
+) -> Result<Report> {
+    let cfg = NetConfig::PMNIST100;
+    let bundle = ModelBundle::load(rt, manifest, cfg)?;
+    let stream =
+        permuted_task_stream(run.num_tasks, run.train_per_task, run.test_per_task, run.seed);
+    let mut report = Report::new("ablation_replay");
+    report.line(format!(
+        "Ablation: experience replay on/off (sw-DFA, pmnist100, {} tasks x {})",
+        run.num_tasks, run.train_per_task
+    ));
+    for replay in [true, false] {
+        let mut eng = XlaDfaEngine::new(&bundle, run.lam, run.beta, run.lr, run.seed);
+        let mut tr = ContinualTrainer::new(
+            &stream,
+            RunConfig { replay, ..run.clone() },
+            cfg.b_train,
+            cfg.b_eval,
+        );
+        tr.run_all(&mut eng)?;
+        report.line(format!(
+            "  replay={replay:<5} curve={:?} final MA={:.3} forgetting={:.3}",
+            tr.matrix.curve().iter().map(|a| (a * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+            tr.matrix.mean_final(),
+            tr.matrix.forgetting()
+        ));
+    }
+    report.line("paper: replay buffers are what keep degradation graceful (§VI-A)".to_string());
+    Ok(report)
+}
+
+/// ζ on/off on the *hardware* engine: accuracy cost of the 47% write cut.
+pub fn run_ablation_zeta(rt: &Runtime, manifest: &Manifest, run: &RunConfig) -> Result<Report> {
+    let cfg = NetConfig::PMNIST100;
+    let bundle = ModelBundle::load(rt, manifest, cfg)?;
+    let stream =
+        permuted_task_stream(run.num_tasks, run.train_per_task, run.test_per_task, run.seed);
+    let mut report = Report::new("ablation_zeta");
+    report.line(format!(
+        "Ablation: ζ gradient sparsification on the hardware engine ({} tasks x {})",
+        run.num_tasks, run.train_per_task
+    ));
+    for (label, dense) in [("zeta(keep=0.53)", false), ("dense", true)] {
+        let mut eng =
+            HardwareEngine::new(&bundle, run.lam, run.beta, run.lr, DeviceParams::default(), run.seed);
+        eng.use_dense = dense;
+        let mut tr = ContinualTrainer::new(&stream, run.clone(), cfg.b_train, cfg.b_eval);
+        tr.run_all(&mut eng)?;
+        report.line(format!(
+            "  {label:<16} final MA={:.3} forgetting={:.3} writes={} ({:.0}/step)",
+            tr.matrix.mean_final(),
+            tr.matrix.forgetting(),
+            eng.programmer.total.writes,
+            eng.programmer.writes_per_step()
+        ));
+    }
+    report.line(
+        "paper: ζ at ~47% write reduction costs no accuracy; cutting to keep≈0.30 costs 3–4% MA"
+            .to_string(),
+    );
+    Ok(report)
+}
+
+/// Reservoir-index uniformity: xorshift (the paper's choice) vs an LFSR
+/// driving the same modulus unit. Measures the worst per-position survival
+/// deviation over many small streams.
+pub fn sampler_bias(runs: u32, k: usize, n: usize) -> (f64, f64) {
+    let survival_dev = |use_lfsr: bool| -> f64 {
+        let mut survive = vec![0u32; n];
+        for seed in 0..runs {
+            let mut lfsr = Lfsr16::new(1 + seed as u16);
+            let mut xs = ReservoirSampler::new(k, 1000 + seed);
+            let mut slots: Vec<usize> = vec![usize::MAX; k];
+            for pos in 0..n {
+                let dec = if use_lfsr {
+                    // LFSR word folded by the same modulus unit
+                    let i = (pos + 1) as u32;
+                    if pos < k {
+                        ReservoirDecision::Store(pos)
+                    } else {
+                        let j = (u32::from(lfsr.next_u16()) % i) + 1;
+                        if (j as usize) <= k {
+                            ReservoirDecision::Store((j - 1) as usize)
+                        } else {
+                            ReservoirDecision::Discard
+                        }
+                    }
+                } else {
+                    xs.offer()
+                };
+                if let ReservoirDecision::Store(j) = dec {
+                    slots[j] = pos;
+                }
+            }
+            for &p in &slots {
+                if p != usize::MAX {
+                    survive[p] += 1;
+                }
+            }
+        }
+        let expect = f64::from(runs) * k as f64 / n as f64;
+        survive
+            .iter()
+            .map(|&c| (f64::from(c) - expect).abs() / expect)
+            .fold(0.0, f64::max)
+    };
+    (survival_dev(false), survival_dev(true))
+}
+
+pub fn run_ablation_sampler() -> Result<Report> {
+    let mut report = Report::new("ablation_sampler");
+    report.line("Ablation: reservoir index source — xorshift32 vs 16-bit LFSR (§IV-A1)");
+    let (xs, lf) = sampler_bias(4000, 8, 40);
+    report.line(format!(
+        "  max per-position survival deviation over 4000 streams (k=8, n=40):"
+    ));
+    report.line(format!("    xorshift32: {:.3}", xs));
+    report.line(format!("    LFSR16:     {:.3}", lf));
+    report.line(format!(
+        "  paper: xorshift produces decorrelated, uniform, unbiased indices, unlike LFSR ({})",
+        if lf > xs { "confirmed" } else { "not reproduced at this scale" }
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_is_at_least_as_uniform_as_lfsr() {
+        let (xs, lf) = sampler_bias(1500, 8, 40);
+        // xorshift should not be *worse*; typically the LFSR's correlated
+        // low-period structure shows a larger worst-position deviation.
+        assert!(xs <= lf + 0.05, "xorshift {xs} vs lfsr {lf}");
+        assert!(xs < 0.2, "xorshift deviation too large: {xs}");
+    }
+}

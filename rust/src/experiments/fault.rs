@@ -1,0 +1,61 @@
+//! Fault-tolerance study: on-chip learning under frozen (elasticity-lost)
+//! devices — the paper's §VI-B failure mode and its future-work lever
+//! ("one could extend the lifespan ... if frozen memristors are used for
+//! learning"). Sweeps the frozen fraction injected *before* training and
+//! measures how much of the learning capability survives.
+
+use anyhow::Result;
+
+use crate::config::{Manifest, NetConfig, RunConfig};
+use crate::coordinator::{ContinualTrainer, HardwareEngine};
+use crate::data::permuted_task_stream;
+use crate::device::DeviceParams;
+use crate::runtime::{ModelBundle, Runtime};
+
+use super::Report;
+
+/// Train the hardware engine with `frac` of devices frozen; return MA.
+pub fn accuracy_with_frozen(
+    rt: &Runtime,
+    manifest: &Manifest,
+    run: &RunConfig,
+    frac: f64,
+) -> Result<f32> {
+    let cfg = NetConfig::PMNIST100;
+    let bundle = ModelBundle::load(rt, manifest, cfg)?;
+    let stream =
+        permuted_task_stream(run.num_tasks, run.train_per_task, run.test_per_task, run.seed);
+    let mut eng =
+        HardwareEngine::new(&bundle, run.lam, run.beta, run.lr, DeviceParams::default(), run.seed);
+    eng.xbar_hidden.freeze_fraction(frac);
+    eng.xbar_out.freeze_fraction(frac);
+    let mut tr = ContinualTrainer::new(&stream, run.clone(), cfg.b_train, cfg.b_eval);
+    tr.run_all(&mut eng)?;
+    Ok(tr.matrix.mean_final())
+}
+
+pub fn run_fault(rt: &Runtime, manifest: &Manifest, run: &RunConfig) -> Result<Report> {
+    let mut report = Report::new("fault");
+    report.line(format!(
+        "Fault tolerance: frozen-device sweep (hw engine, pmnist100, {} task(s) x {})",
+        run.num_tasks, run.train_per_task
+    ));
+    report.line(format!("{:>10} {:>10}", "frozen", "final MA"));
+    let mut accs = Vec::new();
+    for frac in [0.0, 0.1, 0.25, 0.5] {
+        let ma = accuracy_with_frozen(rt, manifest, run, frac)?;
+        report.line(format!("{:>9.0}% {:>10.3}", frac * 100.0, ma));
+        accs.push((frac, ma));
+    }
+    let (f0, a0) = accs[0];
+    let degraded = accs.iter().find(|(_, a)| *a < 0.7 * a0).map(|(f, _)| *f);
+    report.blank();
+    report.line(format!(
+        "graceful degradation: {} (baseline {:.3} at {:.0}% frozen; first >30% drop at {})",
+        if degraded.map_or(true, |f| f >= 0.25) { "yes" } else { "no" },
+        a0,
+        f0 * 100.0,
+        degraded.map_or("never".to_string(), |f| format!("{:.0}%", f * 100.0)),
+    ));
+    Ok(report)
+}

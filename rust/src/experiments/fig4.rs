@@ -1,0 +1,120 @@
+//! Fig. 4 — average test accuracy after each task, for the software models
+//! (Adam, DFA) and the M2RU hardware model, on permuted MNIST and split
+//! CIFAR-10 features, with n_h ∈ {100, 256}.
+
+use anyhow::{bail, Result};
+
+use crate::config::{Manifest, NetConfig, RunConfig};
+use crate::coordinator::{ContinualTrainer, Engine, HardwareEngine, XlaAdamEngine, XlaDfaEngine};
+use crate::data::{feature_task_stream, permuted_task_stream, TaskStream};
+use crate::device::DeviceParams;
+use crate::runtime::{ModelBundle, Runtime};
+
+use super::Report;
+
+#[derive(Clone, Debug)]
+pub struct Fig4Options {
+    pub dataset: String,
+    pub nh: usize,
+    /// comma-set of curves: adam,dfa,hw
+    pub engines: Vec<String>,
+    pub run: RunConfig,
+}
+
+impl Default for Fig4Options {
+    fn default() -> Self {
+        Self {
+            dataset: "pmnist".into(),
+            nh: 100,
+            engines: vec!["adam".into(), "dfa".into(), "hw".into()],
+            run: RunConfig::default(),
+        }
+    }
+}
+
+pub fn stream_for(opts: &Fig4Options) -> Result<(TaskStream, NetConfig)> {
+    let cfg_name = match (opts.dataset.as_str(), opts.nh) {
+        ("pmnist", 100) => "pmnist100",
+        ("pmnist", 256) => "pmnist256",
+        ("cifarfeat", 100) => "cifar100",
+        ("cifarfeat", 256) => "cifar256",
+        (d, nh) => bail!("no artifact config for dataset={d} nh={nh}"),
+    };
+    let cfg = NetConfig::by_name(cfg_name).unwrap();
+    let r = &opts.run;
+    let stream = match opts.dataset.as_str() {
+        "pmnist" => permuted_task_stream(r.num_tasks, r.train_per_task, r.test_per_task, r.seed),
+        "cifarfeat" => {
+            feature_task_stream(r.num_tasks, r.train_per_task, r.test_per_task, 0.8, r.seed)
+        }
+        other => bail!("unknown dataset {other}"),
+    };
+    Ok((stream, cfg))
+}
+
+fn run_curve(
+    report: &mut Report,
+    label: &str,
+    engine: &mut dyn Engine,
+    stream: &TaskStream,
+    cfg: &NetConfig,
+    run: &RunConfig,
+) -> Result<Vec<f32>> {
+    let mut trainer = ContinualTrainer::new(stream, run.clone(), cfg.b_train, cfg.b_eval);
+    let results = trainer.run_all(engine)?;
+    let curve: Vec<f32> = results.iter().map(|r| r.mean_acc).collect();
+    let pts: Vec<String> = curve.iter().enumerate().map(|(t, a)| format!("T{}={:.3}", t + 1, a)).collect();
+    report.line(format!(
+        "  {label:<10} MA: {}  final={:.3} forgetting={:.3}",
+        pts.join(" "),
+        curve.last().copied().unwrap_or(0.0),
+        trainer.matrix.forgetting()
+    ));
+    Ok(curve)
+}
+
+/// Run the Fig. 4 panel selected by `opts`. Returns (report, curves by
+/// engine label) so integration tests can assert the shapes.
+pub fn run_fig4(
+    rt: &Runtime,
+    manifest: &Manifest,
+    opts: &Fig4Options,
+) -> Result<(Report, Vec<(String, Vec<f32>)>)> {
+    let (stream, cfg) = stream_for(opts)?;
+    let mut report = Report::new(format!("fig4_{}_{}", opts.dataset, opts.nh));
+    report.line(format!(
+        "Fig.4 [{} n_h={}] tasks={} train/task={} replay/task={} epochs={} (paper protocol: DIL, shared head)",
+        opts.dataset, opts.nh, opts.run.num_tasks, opts.run.train_per_task,
+        opts.run.replay_per_task, opts.run.epochs
+    ));
+    let bundle = ModelBundle::load(rt, manifest, cfg)?;
+    let r = &opts.run;
+    let mut curves = Vec::new();
+    for eng in &opts.engines {
+        let curve = match eng.as_str() {
+            "adam" => {
+                // BPTT+Adam wants a smaller lr than DFA-SGD
+                let mut e = XlaAdamEngine::new(&bundle, r.lam, r.beta, r.lr * 0.05, r.seed);
+                run_curve(&mut report, "sw-adam", &mut e, &stream, &cfg, r)?
+            }
+            "dfa" => {
+                let mut e = XlaDfaEngine::new(&bundle, r.lam, r.beta, r.lr, r.seed);
+                run_curve(&mut report, "sw-dfa", &mut e, &stream, &cfg, r)?
+            }
+            "hw" => {
+                let mut e = HardwareEngine::new(
+                    &bundle,
+                    r.lam,
+                    r.beta,
+                    r.lr,
+                    DeviceParams::default(),
+                    r.seed,
+                );
+                run_curve(&mut report, "m2ru-hw", &mut e, &stream, &cfg, r)?
+            }
+            other => bail!("unknown engine `{other}` (adam|dfa|hw)"),
+        };
+        curves.push((eng.clone(), curve));
+    }
+    Ok((report, curves))
+}

@@ -1,0 +1,143 @@
+//! Fig. 5(b) — CDF of memristor writes before/after gradient
+//! sparsification, overstressed fraction at the endurance horizon, and the
+//! projected lifespan (paper: 6.9 → 12.2 years at 1 ms updates, 10⁹
+//! endurance, ~47% write reduction at ζ keep ≈ 53%).
+
+use anyhow::Result;
+
+use crate::config::{NetConfig, RunConfig};
+use crate::coordinator::{ContinualTrainer, HardwareEngine};
+use crate::data::permuted_task_stream;
+use crate::device::{lifespan_years, DeviceParams, EnduranceReport, SECONDS_PER_YEAR};
+use crate::runtime::{ModelBundle, Runtime};
+
+use super::Report;
+
+#[derive(Clone, Debug)]
+pub struct Fig5bOptions {
+    pub run: RunConfig,
+    /// endurance used for the overstress projection.
+    pub endurance: u64,
+    /// learning-event rate (paper: 1 kHz, "1 ms").
+    pub update_rate_hz: f64,
+}
+
+impl Default for Fig5bOptions {
+    fn default() -> Self {
+        Self {
+            run: RunConfig {
+                num_tasks: 2,
+                train_per_task: 320,
+                test_per_task: 100,
+                epochs: 1,
+                ..RunConfig::default()
+            },
+            endurance: 1_000_000_000,
+            update_rate_hz: 1000.0,
+        }
+    }
+}
+
+/// Run the continual workload once with dense deltas and once with ζ,
+/// collecting per-device write counters from the hardware engine.
+pub fn measure_writes(
+    rt: &Runtime,
+    manifest: &crate::config::Manifest,
+    opts: &Fig5bOptions,
+) -> Result<(EnduranceReport, EnduranceReport)> {
+    let cfg = NetConfig::PMNIST100;
+    let bundle = ModelBundle::load(rt, manifest, cfg)?;
+    let r = &opts.run;
+    let stream = permuted_task_stream(r.num_tasks, r.train_per_task, r.test_per_task, r.seed);
+
+    let run_once = |dense: bool| -> Result<EnduranceReport> {
+        let mut eng =
+            HardwareEngine::new(&bundle, r.lam, r.beta, r.lr, DeviceParams::default(), r.seed);
+        eng.use_dense = dense;
+        let mut trainer = ContinualTrainer::new(&stream, r.clone(), cfg.b_train, cfg.b_eval);
+        trainer.run_all(&mut eng)?;
+        // subtract the single initial programming write per device
+        let counts: Vec<u64> =
+            eng.write_counts().into_iter().map(|c| c.saturating_sub(1)).collect();
+        Ok(EnduranceReport::from_counts(counts, eng.programmer.steps / 2))
+    };
+
+    Ok((run_once(true)?, run_once(false)?))
+}
+
+pub fn run_fig5b(
+    rt: &Runtime,
+    manifest: &crate::config::Manifest,
+    opts: &Fig5bOptions,
+) -> Result<Report> {
+    let (dense, sparse) = measure_writes(rt, manifest, opts)?;
+    let mut report = Report::new("fig5b");
+    report.line("Fig.5(b) — memristor write CDF before/after gradient sparsification (ζ keep=0.53)");
+    report.line(format!(
+        "updates measured: dense={} sparse={}",
+        dense.updates, sparse.updates
+    ));
+    report.line(format!(
+        "mean writes/device: dense={:.1} sparse={:.1}  reduction={:.1}% (paper: ~47%)",
+        dense.mean_writes,
+        sparse.mean_writes,
+        100.0 * (1.0 - sparse.mean_writes / dense.mean_writes)
+    ));
+
+    report.blank();
+    report.line("write-count CDF (fraction of devices ≤ w):");
+    report.line(format!("{:>12} {:>10} | {:>12} {:>10}", "dense w", "cdf", "sparse w", "cdf"));
+    let dc = dense.cdf(10);
+    let sc = sparse.cdf(10);
+    for (d, s) in dc.iter().zip(&sc) {
+        report.line(format!("{:>12} {:>10.3} | {:>12} {:>10.3}", d.0, d.1, s.0, s.1));
+    }
+
+    // Overstress projection: the paper plots the distributions forward to
+    // the endurance limit; in the dense run most of the array crosses it
+    // together (abrupt loss of elasticity — 58.28% overstressed at their
+    // horizon), while the sparsified run crosses gradually. We project at
+    // a horizon 2% past the dense-mean crossing and also report the
+    // spread (p90−p10)/mean, which quantifies abrupt-vs-gradual.
+    let horizon =
+        (1.02 * opts.endurance as f64 / dense.writes_per_update().max(1e-12)) as u64;
+    let over_dense = dense.overstressed_fraction(opts.endurance, horizon);
+    let over_sparse = sparse.overstressed_fraction(opts.endurance, horizon);
+    let spread = |r: &EnduranceReport| {
+        let n = r.sorted_writes.len();
+        let p10 = r.sorted_writes[n / 10] as f64;
+        let p90 = r.sorted_writes[n * 9 / 10] as f64;
+        (p90 - p10) / r.mean_writes.max(1e-12)
+    };
+    report.blank();
+    report.line(format!(
+        "projected overstressed fraction just past the dense-mean horizon: dense={:.1}% sparse={:.1}% (paper: 58.28% abrupt vs gradual)",
+        100.0 * over_dense,
+        100.0 * over_sparse
+    ));
+    report.line(format!(
+        "write-count spread (p90-p10)/mean: dense={:.3} (abrupt step) sparse={:.3} (gradual)",
+        spread(&dense),
+        spread(&sparse)
+    ));
+
+    // Lifespan: the paper anchors the dense run at 6.9 years (1 ms events,
+    // 1e9 endurance); the sparsification gain follows from the measured
+    // write-pressure ratio. We report both the anchored projection and the
+    // raw formula output for our measured pressures.
+    let anchor_pressure = opts.endurance as f64 / (6.9 * SECONDS_PER_YEAR) / opts.update_rate_hz;
+    let ratio = sparse.writes_per_update() / dense.writes_per_update().max(1e-12);
+    let life_dense = lifespan_years(opts.endurance, anchor_pressure, opts.update_rate_hz);
+    let life_sparse = lifespan_years(opts.endurance, anchor_pressure * ratio, opts.update_rate_hz);
+    report.blank();
+    report.line(format!(
+        "lifespan (anchored at paper's 6.9y dense operating point): dense={life_dense:.1}y sparse={life_sparse:.1}y (paper: 6.9y → 12.2y)"
+    ));
+    report.line(format!(
+        "raw measured write pressure: dense={:.3} sparse={:.3} writes/device/update (ratio {:.3})",
+        dense.writes_per_update(),
+        sparse.writes_per_update(),
+        ratio
+    ));
+    Ok(report)
+}

@@ -1,0 +1,95 @@
+//! Fig. 5(c) — impact of network scaling (n_h) and bit precision (n_b) on
+//! per-step latency, with and without hidden-layer tiling.
+
+use anyhow::Result;
+
+use crate::hw_model::{step_latency_s, ArchConfig};
+
+use super::Report;
+
+pub fn run_fig5c() -> Result<Report> {
+    let mut report = Report::new("fig5c");
+    report.line("Fig.5(c) — step latency (µs) vs hidden size and bit precision");
+    report.line("(dotted lines of the paper = untiled: serialized interpolation dominates)");
+    report.blank();
+
+    let nhs = [64usize, 100, 128, 256, 512];
+    let nbs = [2u32, 4, 6, 8];
+
+    report.line("tiled (tiles = ceil(nh/16), interpolation capped at 16 cycles):");
+    report.line(format!(
+        "{:>6} {}",
+        "nh",
+        nbs.iter().map(|nb| format!("{:>9}", format!("nb={nb}"))).collect::<String>()
+    ));
+    for &nh in &nhs {
+        let row: String = nbs
+            .iter()
+            .map(|&nb| {
+                let a = ArchConfig::paper_default()
+                    .with_nh(nh)
+                    .with_nb(nb)
+                    .with_tiles(nh.div_ceil(16), true);
+                format!("{:>9.2}", step_latency_s(&a) * 1e6)
+            })
+            .collect();
+        report.line(format!("{nh:>6} {row}"));
+    }
+
+    report.blank();
+    report.line("untiled (single interpolation unit, dotted lines):");
+    report.line(format!(
+        "{:>6} {}",
+        "nh",
+        nbs.iter().map(|nb| format!("{:>9}", format!("nb={nb}"))).collect::<String>()
+    ));
+    for &nh in &nhs {
+        let row: String = nbs
+            .iter()
+            .map(|&nb| {
+                let a = ArchConfig::paper_default().with_nh(nh).with_nb(nb).with_tiles(1, false);
+                format!("{:>9.2}", step_latency_s(&a) * 1e6)
+            })
+            .collect();
+        report.line(format!("{nh:>6} {row}"));
+    }
+
+    // headline shape checks, reported inline
+    let tiled = ArchConfig::paper_default();
+    let frac = f64::from(tiled.nb) / crate::hw_model::step_cycles(&tiled).total() as f64;
+    report.blank();
+    report.line(format!(
+        "at the paper's operating point: step latency {:.2} µs, WBS bits are {:.0}% of the step (paper: ~one-third when tiled)",
+        step_latency_s(&tiled) * 1e6,
+        100.0 * frac
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw_model::{step_cycles, ArchConfig};
+
+    #[test]
+    fn tiling_flattens_nh_scaling() {
+        // untiled latency grows ~linearly in nh; tiled stays near-flat.
+        let lat = |nh: usize, tiled: bool| {
+            let tiles = if tiled { nh.div_ceil(16) } else { 1 };
+            step_latency_s(&ArchConfig::paper_default().with_nh(nh).with_tiles(tiles, tiled))
+        };
+        let untiled_ratio = lat(512, false) / lat(64, false);
+        let tiled_ratio = lat(512, true) / lat(64, true);
+        assert!(untiled_ratio > 4.0, "{untiled_ratio}");
+        assert!(tiled_ratio < 1.5, "{tiled_ratio}");
+    }
+
+    #[test]
+    fn precision_fraction_larger_when_tiled() {
+        let frac = |tiled: bool| {
+            let a = ArchConfig::paper_default().with_tiles(if tiled { 8 } else { 1 }, tiled);
+            f64::from(a.nb) / step_cycles(&a).total() as f64
+        };
+        assert!(frac(true) > 2.0 * frac(false));
+    }
+}

@@ -1,0 +1,40 @@
+//! Fig. 5(d) — power breakdown across the core units of the accelerator
+//! (n_h = 100, 20 MHz).
+
+use anyhow::Result;
+
+use crate::hw_model::{ArchConfig, PowerBreakdown, PowerMode};
+
+use super::Report;
+
+pub fn run_fig5d() -> Result<Report> {
+    let mut report = Report::new("fig5d");
+    let a = ArchConfig::paper_default();
+    report.line("Fig.5(d) — power breakdown, n_h=100 @ 20 MHz, 65 nm");
+    for (mode, label, paper) in [
+        (PowerMode::Inference, "inference", 48.62),
+        (PowerMode::Training, "training", 56.97),
+    ] {
+        let p = PowerBreakdown::for_config(&a, mode);
+        report.blank();
+        report.line(format!("{label} (paper total: {paper} mW):"));
+        for (name, mw, frac) in p.rows() {
+            report.line(format!("  {name:<42} {mw:>9.3} mW  {:>5.1}%", 100.0 * frac));
+        }
+        report.line(format!("  {:<42} {:>9.3} mW", "TOTAL", p.total_mw()));
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_contains_both_modes() {
+        let r = run_fig5d().unwrap();
+        let text = r.lines.join("\n");
+        assert!(text.contains("inference") && text.contains("training"));
+        assert!(text.contains("ADC"));
+    }
+}

@@ -1,0 +1,80 @@
+//! The paper's headline metrics: 15 GOPS @ 48.62 mW → 312 GOPS/W
+//! (3.21 pJ/op), 19,305 seq/s, 29× over the digital CMOS MiRU, and the
+//! 12.2-year device-aware lifespan.
+
+use anyhow::Result;
+
+use crate::device::{lifespan_years, SECONDS_PER_YEAR};
+use crate::hw_model::{
+    digital_energy_per_op_pj, digital_gops_per_watt, efficiency_gain, gops, gops_per_watt,
+    pj_per_op, seqs_per_second, step_latency_s, ArchConfig, PowerBreakdown, PowerMode,
+};
+
+use super::Report;
+
+pub fn run_headline() -> Result<Report> {
+    let a = ArchConfig::paper_default();
+    let mut report = Report::new("headline");
+    report.line("M2RU headline metrics (28x100x10 @ 20 MHz, 65 nm)");
+    report.line(format!("{:<38} {:>12} {:>12}", "metric", "paper", "this repo"));
+
+    let rows: Vec<(&str, String, String)> = vec![
+        ("throughput (GOPS)", "15".into(), format!("{:.2}", gops(&a))),
+        (
+            "inference power (mW)",
+            "48.62".into(),
+            format!("{:.2}", PowerBreakdown::for_config(&a, PowerMode::Inference).total_mw()),
+        ),
+        (
+            "training power (mW)",
+            "56.97".into(),
+            format!("{:.2}", PowerBreakdown::for_config(&a, PowerMode::Training).total_mw()),
+        ),
+        (
+            "energy efficiency (GOPS/W)",
+            "312".into(),
+            format!("{:.1}", gops_per_watt(&a, PowerMode::Inference)),
+        ),
+        ("energy (pJ/op)", "3.21".into(), format!("{:.2}", pj_per_op(&a, PowerMode::Inference))),
+        ("step latency (µs)", "1.85".into(), format!("{:.2}", step_latency_s(&a) * 1e6)),
+        ("sequences/s", "19305".into(), format!("{:.0}", seqs_per_second(&a))),
+        (
+            "digital baseline (pJ/op)",
+            "~93".into(),
+            format!("{:.1}", digital_energy_per_op_pj()),
+        ),
+        (
+            "digital baseline (GOPS/W)",
+            "~10.8".into(),
+            format!("{:.2}", digital_gops_per_watt()),
+        ),
+        ("efficiency gain vs digital", "29x".into(), format!("{:.1}x", efficiency_gain(&a))),
+    ];
+    for (m, paper, ours) in rows {
+        report.line(format!("{m:<38} {paper:>12} {ours:>12}"));
+    }
+
+    // lifespan arithmetic at the paper's anchor
+    let anchor = 1.0e9 / (6.9 * SECONDS_PER_YEAR) / 1000.0;
+    report.blank();
+    report.line(format!(
+        "lifespan @1ms updates, 1e9 endurance: dense {:.1}y; with ζ (measured ~47% write cut) {:.1}y (paper: 6.9y → 12.2y)",
+        lifespan_years(1_000_000_000, anchor, 1000.0),
+        lifespan_years(1_000_000_000, anchor * 0.53, 1000.0),
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_values_within_five_percent_of_paper() {
+        let a = ArchConfig::paper_default();
+        assert!((gops(&a) - 15.0).abs() / 15.0 < 0.05);
+        assert!((gops_per_watt(&a, PowerMode::Inference) - 312.0).abs() / 312.0 < 0.05);
+        assert!((seqs_per_second(&a) - 19305.0).abs() / 19305.0 < 0.01);
+        assert!((efficiency_gain(&a) - 29.0).abs() / 29.0 < 0.06);
+    }
+}

@@ -1,0 +1,83 @@
+//! Regeneration of every figure and table in the paper's evaluation
+//! (DESIGN.md §5 experiment index).
+//!
+//! Each submodule produces the rows/series of one paper artifact and
+//! returns a [`Report`]; the CLI (`m2ru experiment <id>`) and the bench
+//! harness both dispatch here. Reports are printed and archived under
+//! `results/`.
+
+mod ablations;
+mod fault;
+mod fig4;
+mod fig5a;
+mod fig5b;
+mod fig5c;
+mod fig5d;
+mod headline;
+mod table1;
+
+pub use ablations::{run_ablation_replay, run_ablation_sampler, run_ablation_zeta, sampler_bias};
+pub use fault::{accuracy_with_frozen, run_fault};
+pub use fig4::{run_fig4, Fig4Options};
+pub use fig5a::run_fig5a;
+pub use fig5b::{run_fig5b, Fig5bOptions};
+pub use fig5c::run_fig5c;
+pub use fig5d::run_fig5d;
+pub use headline::run_headline;
+pub use table1::run_table1;
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A text report: printed to stdout and archived under `results/<id>.txt`.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub id: String,
+    pub lines: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: impl Into<String>) -> Self {
+        Self { id: id.into(), lines: Vec::new() }
+    }
+
+    pub fn line(&mut self, s: impl Into<String>) {
+        let s = s.into();
+        println!("{s}");
+        self.lines.push(s);
+    }
+
+    pub fn blank(&mut self) {
+        self.line("");
+    }
+
+    /// Write the archived copy.
+    pub fn save(&self, results_dir: impl AsRef<Path>) -> Result<std::path::PathBuf> {
+        let dir = results_dir.as_ref();
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(format!("{}.txt", self.id));
+        let mut f = std::fs::File::create(&path)?;
+        for l in &self.lines {
+            writeln!(f, "{l}")?;
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_saves_lines() {
+        let mut r = Report::new("unit_test_report");
+        r.line("alpha");
+        r.line("beta");
+        let dir = std::env::temp_dir().join(format!("m2ru_results_{}", std::process::id()));
+        let path = r.save(&dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text, "alpha\nbeta\n");
+    }
+}

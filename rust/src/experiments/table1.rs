@@ -1,0 +1,131 @@
+//! Table I — comparison with prior memristor-based RNN accelerators.
+//!
+//! The prior-work rows are literature values (the paper itself calls the
+//! table "a high-level reference template ... rather than an absolute
+//! comparison"); the "This work" row is *computed* from our hardware
+//! model.
+
+use anyhow::Result;
+
+use crate::hw_model::{
+    seqs_per_second, step_latency_s, ArchConfig, PowerBreakdown, PowerMode,
+};
+
+use super::Report;
+
+struct Row {
+    algorithm: &'static str,
+    freq: &'static str,
+    network: &'static str,
+    power: String,
+    dataset: &'static str,
+    latency: String,
+    topology: &'static str,
+    node: &'static str,
+    cl: &'static str,
+    training: &'static str,
+}
+
+pub fn run_table1() -> Result<Report> {
+    let a = ArchConfig::paper_default();
+    let p = PowerBreakdown::for_config(&a, PowerMode::Inference);
+
+    let rows = vec![
+        Row {
+            algorithm: "M-GRU [42]",
+            freq: "-",
+            network: "6x8k x36",
+            power: "173.65 mW".into(),
+            dataset: "CASIA",
+            latency: "45 ns/cell".into(),
+            topology: "GRU",
+            node: "40 nm",
+            cl: "No",
+            training: "Off-chip",
+        },
+        Row {
+            algorithm: "MDGN [43]",
+            freq: "200 MHz",
+            network: "3x150x1",
+            power: "25.07 mW".into(),
+            dataset: "CALCE",
+            latency: "1.22 s".into(),
+            topology: "GRU",
+            node: "-",
+            cl: "No",
+            training: "Off-chip",
+        },
+        Row {
+            algorithm: "HGRU [10]",
+            freq: "-",
+            network: "28x128x10",
+            power: "-".into(),
+            dataset: "MNIST & IMDB",
+            latency: "5.14 us".into(),
+            topology: "Minimal GRU",
+            node: "-",
+            cl: "No",
+            training: "Off-chip",
+        },
+        Row {
+            algorithm: "MBLSTM [11]",
+            freq: "-",
+            network: "-",
+            power: "<1.5 W".into(),
+            dataset: "MNIST & IMDB",
+            latency: "-".into(),
+            topology: "LSTM",
+            node: "-",
+            cl: "No",
+            training: "On-chip",
+        },
+        Row {
+            algorithm: "This work",
+            freq: "20 MHz",
+            network: "28x100x10",
+            power: format!("{:.2} mW", p.total_mw()),
+            dataset: "MNIST & CIFAR-10 (synthetic)",
+            latency: format!("{:.2} us", step_latency_s(&a) * 1e6),
+            topology: "MiRU",
+            node: "65 nm",
+            cl: "DIL-CL",
+            training: "On-chip",
+        },
+    ];
+
+    let mut report = Report::new("table1");
+    report.line("Table I — comparison with memristor-based RNN ASIC accelerators");
+    report.line(format!(
+        "{:<12} {:>8} {:>11} {:>11} {:>28} {:>11} {:>12} {:>6} {:>7} {:>9}",
+        "Algorithm", "Freq", "Network", "Power", "Dataset", "Latency", "Topology", "Node", "CL", "Training"
+    ));
+    for r in &rows {
+        report.line(format!(
+            "{:<12} {:>8} {:>11} {:>11} {:>28} {:>11} {:>12} {:>6} {:>7} {:>9}",
+            r.algorithm, r.freq, r.network, r.power, r.dataset, r.latency, r.topology, r.node, r.cl, r.training
+        ));
+    }
+    report.blank();
+    report.line(format!(
+        "'This work' row computed from hw_model: {:.2} mW, {:.2} µs/step, {:.0} seq/s",
+        p.total_mw(),
+        step_latency_s(&a) * 1e6,
+        seqs_per_second(&a)
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn this_work_row_matches_paper_operating_point() {
+        let r = run_table1().unwrap();
+        let text = r.lines.join("\n");
+        assert!(text.contains("48.6"), "{text}"); // 48.62 mW
+        assert!(text.contains("1.85 us"), "{text}");
+        assert!(text.contains("DIL-CL"));
+        assert!(text.contains("On-chip"));
+    }
+}

@@ -1,0 +1,76 @@
+//! Component-level constants of the 65 nm @ 20 MHz implementation.
+//!
+//! Each constant is a per-unit power (mW) or timing figure; the totals are
+//! calibrated so that the paper's published operating points come out of
+//! the *formulas*, not hard-coded: 48.62 mW inference / 56.97 mW training
+//! at 28×100×10, 1.85 µs per feature set, 312 GOPS/W, 29× over digital.
+//! See `EXPERIMENTS.md` §Calibration for the audit trail.
+
+/// System clock period at 20 MHz, seconds.
+pub const T_CYCLE_S: f64 = 50.0e-9;
+
+/// WBS pulse duration T_s (§V-A): one clock cycle.
+pub const T_PULSE_S: f64 = 50.0e-9;
+
+/// Shared high-speed ADC: 1.28 GSps ⇒ ~2 ns per channel (§IV-B1).
+pub const ADC_NS_PER_CHANNEL: f64 = 2.0;
+
+/// Power of one 1.28 GSps 8-bit SAR ADC, mW (dominant analog block).
+pub const P_ADC_MW: f64 = 8.75;
+
+/// One neuron circuit: inverting op-amp + integrator + hold switches, mW.
+pub const P_NEURON_MW: f64 = 0.169;
+
+/// One wordline driver + level shifter (Fig. 3-Left), mW.
+pub const P_DRIVER_MW: f64 = 0.0215;
+
+/// Digital control base: FSM, counters, clocking, mW.
+pub const P_CTRL_BASE_MW: f64 = 2.6;
+
+/// One tile's interpolation datapath (multiplier + adder + muxing), mW.
+pub const P_INTERP_TILE_MW: f64 = 0.35;
+
+/// FIFO + shift-register storage per hidden unit, mW.
+pub const P_SREG_PER_UNIT_MW: f64 = 0.022;
+
+/// Piecewise-linear tanh unit, mW (paper: ~3.74 µW, shared).
+pub const P_TANH_MW: f64 = 0.00374;
+
+/// Average crossbar read power per device at 0.1 V drive, mW
+/// (V²·G_avg ≈ 0.01 · 275 nS = 2.75 nW), with ~50% bit activity.
+pub const P_XBAR_PER_DEVICE_MW: f64 = 2.75e-6 * 0.5;
+
+// --- training-only blocks (§VI-D: +8.35 mW during training) -------------
+
+/// DFA projection circuit (Ψ MAC datapath), mW.
+pub const P_PROJECTION_MW: f64 = 3.1;
+
+/// Write drivers + Ziksa programming control, mW.
+pub const P_WRITE_CTRL_MW: f64 = 4.0;
+
+/// Error-computing unit (§IV-B2), mW.
+pub const P_ERROR_UNIT_MW: f64 = 1.25;
+
+// --- latency model -------------------------------------------------------
+
+/// Fixed per-step control overhead, cycles: buffer load, FIFO transfer,
+/// wordline setup (calibrated to the 1.85 µs operating point).
+pub const C_CTRL_CYCLES: u64 = 12;
+
+/// Upper bound on tiled interpolation latency, cycles (§VI-C: "no more
+/// than 16 cycles ... regardless of the hidden layer size").
+pub const INTERP_CYCLE_CAP: u64 = 16;
+
+// --- digital CMOS MiRU baseline (Table I comparator) ---------------------
+
+/// Digital MAC (multiplier + adder + pipeline regs), pJ/op at 65 nm.
+pub const E_DIG_MAC_PJ: f64 = 4.5;
+
+/// Weight SRAM read per op (no crossbar: every MAC refetches), pJ/op.
+pub const E_DIG_SRAM_PJ: f64 = 60.0;
+
+/// Activation buffering + movement per op, pJ/op.
+pub const E_DIG_MOVE_PJ: f64 = 18.0;
+
+/// Control/clocking overhead per op, pJ/op.
+pub const E_DIG_CTRL_PJ: f64 = 10.6;

@@ -1,0 +1,50 @@
+//! Digital CMOS MiRU baseline — the "29× improvement" comparator (§VI-D).
+//!
+//! A fully digital 65 nm MiRU pays, per MAC-op, for the multiplier itself
+//! plus the weight SRAM fetch, activation movement and control that the
+//! crossbar design amortizes away. The per-op energy terms live in
+//! `components`; their sum calibrates to the paper's implied 93 pJ/op
+//! (3.21 pJ/op × 29).
+
+use super::components::*;
+use super::power::PowerMode;
+use super::throughput::gops_per_watt;
+use super::ArchConfig;
+
+/// Energy per operation of the digital 65 nm MiRU, pJ.
+pub fn digital_energy_per_op_pj() -> f64 {
+    E_DIG_MAC_PJ + E_DIG_SRAM_PJ + E_DIG_MOVE_PJ + E_DIG_CTRL_PJ
+}
+
+/// Digital baseline efficiency, GOPS/W.
+pub fn digital_gops_per_watt() -> f64 {
+    1000.0 / digital_energy_per_op_pj()
+}
+
+/// M2RU energy-efficiency gain over the digital baseline (paper: 29×).
+pub fn efficiency_gain(a: &ArchConfig) -> f64 {
+    gops_per_watt(a, PowerMode::Inference) / digital_gops_per_watt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digital_energy_is_93_pj_per_op() {
+        let e = digital_energy_per_op_pj();
+        assert!((e - 93.1).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn gain_is_about_29x() {
+        let gain = efficiency_gain(&ArchConfig::paper_default());
+        assert!((gain - 29.0).abs() < 1.5, "{gain}");
+    }
+
+    #[test]
+    fn sram_fetch_dominates_digital_energy() {
+        // the architectural argument for in-memory computing
+        assert!(E_DIG_SRAM_PJ > 0.5 * digital_energy_per_op_pj());
+    }
+}

@@ -1,0 +1,130 @@
+//! Step/sequence latency model (Fig. 5c, §VI-C).
+//!
+//! One time step of the MiRU layer costs, in 20 MHz cycles:
+//!
+//!   control overhead            (fixed)
+//! + n_b WBS pulses              (bit-serial input streaming)
+//! + ADC scan of the bitlines    (shared 1.28 GSps ADC, 2 ns/channel)
+//! + hidden-state interpolation  (serialized; tiled ⇒ ≤ 16 cycles)
+//!
+//! Without tiling the interpolation serializes over all n_h units and
+//! dominates — the dotted lines of Fig. 5(c) where bit precision barely
+//! matters. With tiling the cap is 16 cycles and n_b becomes roughly a
+//! third of the step (§VI-C).
+
+use super::components::*;
+use super::ArchConfig;
+
+/// Cycle-level breakdown of one MiRU time step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CycleBreakdown {
+    pub control: u64,
+    pub wbs: u64,
+    pub adc_scan: u64,
+    pub interpolation: u64,
+}
+
+impl CycleBreakdown {
+    pub fn total(&self) -> u64 {
+        self.control + self.wbs + self.adc_scan + self.interpolation
+    }
+}
+
+/// ADC scan cycles: n_h channels at 2 ns each, split across the layer's
+/// shared ADCs, rounded up to whole clock cycles.
+fn adc_scan_cycles(a: &ArchConfig) -> u64 {
+    let adcs_hidden = a.nh.div_ceil(128) as f64;
+    let scan_ns = a.nh as f64 * ADC_NS_PER_CHANNEL / adcs_hidden;
+    (scan_ns / (T_CYCLE_S * 1e9)).ceil() as u64
+}
+
+/// Cycles to compute one MiRU time step.
+pub fn step_cycles(a: &ArchConfig) -> CycleBreakdown {
+    let interpolation = if a.tiling {
+        (a.nh.div_ceil(a.tiles) as u64).min(INTERP_CYCLE_CAP)
+    } else {
+        a.nh as u64
+    };
+    CycleBreakdown {
+        control: C_CTRL_CYCLES,
+        wbs: u64::from(a.nb),
+        adc_scan: adc_scan_cycles(a),
+        interpolation,
+    }
+}
+
+/// Latency of one time step ("one set of features"), seconds.
+pub fn step_latency_s(a: &ArchConfig) -> f64 {
+    step_cycles(a).total() as f64 / a.clock_hz
+}
+
+/// Latency of one full sequence (n_T steps), seconds.
+pub fn seq_latency_s(a: &ArchConfig) -> f64 {
+    step_latency_s(a) * a.nt as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_operating_point_is_1_85_us() {
+        let a = ArchConfig::paper_default();
+        let bd = step_cycles(&a);
+        // 12 ctrl + 8 wbs + 4 adc + ceil(100/8)=13 interp = 37 cycles
+        assert_eq!(bd, CycleBreakdown { control: 12, wbs: 8, adc_scan: 4, interpolation: 13 });
+        assert!((step_latency_s(&a) - 1.85e-6).abs() < 1e-9, "{}", step_latency_s(&a));
+    }
+
+    #[test]
+    fn sequence_latency_and_seqs_per_second() {
+        let a = ArchConfig::paper_default();
+        let seq = seq_latency_s(&a);
+        assert!((seq - 51.8e-6).abs() < 1e-9);
+        let sps = 1.0 / seq;
+        assert!((sps - 19305.0).abs() < 10.0, "{sps}");
+    }
+
+    #[test]
+    fn untiled_interpolation_dominates_and_masks_precision() {
+        let a = ArchConfig::paper_default().with_tiles(1, false);
+        let bd = step_cycles(&a);
+        assert_eq!(bd.interpolation, 100);
+        // doubling nb changes total by < 10% when untiled (Fig 5c dotted)
+        let t8 = step_cycles(&a).total() as f64;
+        let t16 = step_cycles(&a.with_nb(16)).total() as f64;
+        assert!((t16 - t8) / t8 < 0.10);
+        // but by ~20%+ when tiled
+        let a_t = ArchConfig::paper_default();
+        let s8 = step_cycles(&a_t).total() as f64;
+        let s16 = step_cycles(&a_t.with_nb(16)).total() as f64;
+        assert!((s16 - s8) / s8 > 0.18);
+    }
+
+    #[test]
+    fn tiling_caps_interpolation_at_16_cycles() {
+        for nh in [64, 128, 256, 512, 1024] {
+            let a = ArchConfig::paper_default().with_nh(nh).with_tiles(nh.div_ceil(16), true);
+            assert!(step_cycles(&a).interpolation <= 16, "nh={nh}");
+        }
+    }
+
+    #[test]
+    fn latency_linear_in_nb_when_tiled() {
+        let a = ArchConfig::paper_default();
+        let deltas: Vec<u64> = (2..8)
+            .map(|nb| step_cycles(&a.with_nb(nb + 1)).total() - step_cycles(&a.with_nb(nb)).total())
+            .collect();
+        assert!(deltas.iter().all(|&d| d == 1), "{deltas:?}");
+    }
+
+    #[test]
+    fn scaling_nh_without_tiling_is_linear() {
+        let base = ArchConfig::paper_default().with_tiles(1, false);
+        let t100 = step_cycles(&base).total();
+        let t200 = step_cycles(&base.with_nh(200)).total();
+        // interpolation grows by exactly 100 cycles; the ADC scan stays
+        // flat because a second shared ADC is provisioned past 128 lines
+        assert_eq!(t200 - t100, 100);
+    }
+}

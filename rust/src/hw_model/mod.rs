@@ -1,0 +1,114 @@
+//! Analytical 65 nm @ 20 MHz architecture model (§VI-C, §VI-D).
+//!
+//! The paper measures latency/power from a Cadence Genus + Virtuoso
+//! mixed-signal simulation of the synthesized design; we rebuild that
+//! evaluation as an explicit component-level model: every term is a
+//! named constant (`components`) times an architecture count, and the
+//! calibration anchors — the published operating points — are asserted by
+//! tests:
+//!
+//! * step latency 1.85 µs and throughput 19,305 seq/s (28×100×10, 8-bit,
+//!   tiled) — `latency`;
+//! * 15 GOPS, 48.62 mW inference / 56.97 mW training, 312 GOPS/W —
+//!   `power` + `throughput`;
+//! * 29× energy-efficiency over the digital CMOS MiRU — `digital_baseline`.
+//!
+//! The *shapes* (scaling trends, tiling crossovers, breakdown proportions)
+//! then follow from the counts, which is what Fig. 5(c,d) plot.
+
+pub mod components;
+mod digital_baseline;
+mod latency;
+mod power;
+mod throughput;
+mod wbs;
+
+pub use digital_baseline::{digital_energy_per_op_pj, digital_gops_per_watt, efficiency_gain};
+pub use latency::{step_cycles, step_latency_s, seq_latency_s, CycleBreakdown};
+pub use power::{PowerBreakdown, PowerMode};
+pub use throughput::{gops, gops_per_watt, ops_per_step, pj_per_op, seqs_per_second};
+pub use wbs::WbsDesign;
+
+/// Architecture instantiation the model evaluates (mirrors `NetConfig`
+/// plus the physical knobs of §VI).
+#[derive(Clone, Copy, Debug)]
+pub struct ArchConfig {
+    pub nx: usize,
+    pub nh: usize,
+    pub ny: usize,
+    pub nt: usize,
+    /// WBS input precision (bits streamed per step).
+    pub nb: u32,
+    /// ADC resolution.
+    pub adc_bits: u32,
+    /// Hidden-layer tiles working concurrently (paper: 4–16).
+    pub tiles: usize,
+    /// Whether hidden-state interpolation is tiled at all (Fig. 5c dotted
+    /// lines are `false`).
+    pub tiling: bool,
+    /// System clock, Hz (paper: 20 MHz).
+    pub clock_hz: f64,
+}
+
+impl ArchConfig {
+    /// The paper's primary operating point: 28×100×10 @ 20 MHz, 8-bit.
+    pub fn paper_default() -> Self {
+        Self {
+            nx: 28,
+            nh: 100,
+            ny: 10,
+            nt: 28,
+            nb: 8,
+            adc_bits: 8,
+            tiles: 8,
+            tiling: true,
+            clock_hz: 20.0e6,
+        }
+    }
+
+    pub fn with_nh(mut self, nh: usize) -> Self {
+        self.nh = nh;
+        self
+    }
+    pub fn with_nb(mut self, nb: u32) -> Self {
+        self.nb = nb;
+        self
+    }
+    pub fn with_tiles(mut self, tiles: usize, tiling: bool) -> Self {
+        self.tiles = tiles;
+        self.tiling = tiling;
+        self
+    }
+
+    /// Total tunable memristors: differential pairs over both crossbars,
+    /// 2·[(nx+nh)·nh + nh·ny] (§IV-B1).
+    pub fn memristor_count(&self) -> usize {
+        2 * ((self.nx + self.nh) * self.nh + self.nh * self.ny)
+    }
+
+    /// Shared high-speed ADCs per layer: one when the layer has < 128
+    /// bitlines (§VI-D), else one per 128.
+    pub fn adc_count(&self) -> usize {
+        let per_layer = |n: usize| n.div_ceil(128);
+        per_layer(self.nh) + per_layer(self.ny)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memristor_count_matches_section_iv() {
+        let a = ArchConfig::paper_default();
+        assert_eq!(a.memristor_count(), 2 * ((28 + 100) * 100 + 100 * 10));
+    }
+
+    #[test]
+    fn adc_policy() {
+        let a = ArchConfig::paper_default();
+        assert_eq!(a.adc_count(), 2); // one per layer under 128 bitlines
+        assert_eq!(a.with_nh(256).adc_count(), 3); // 2 for hidden + 1 readout
+        assert_eq!(a.with_nh(512).adc_count(), 5);
+    }
+}

@@ -1,0 +1,121 @@
+//! Power model and Fig. 5(d) breakdown (§VI-D).
+//!
+//! Every term = unit power × architecture count. Inference at the paper's
+//! operating point must total 48.62 mW; training activates the projection
+//! circuit, write-control logic and error unit (+8.35 mW → 56.97 mW).
+
+use super::components::*;
+use super::ArchConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PowerMode {
+    Inference,
+    Training,
+}
+
+/// Per-unit power breakdown, mW (the Fig. 5d pie).
+#[derive(Clone, Debug)]
+pub struct PowerBreakdown {
+    pub adc: f64,
+    pub neurons: f64,
+    pub drivers: f64,
+    pub digital: f64,
+    pub tanh: f64,
+    pub crossbar: f64,
+    /// Projection + write control + error unit (0 in inference).
+    pub training: f64,
+}
+
+impl PowerBreakdown {
+    pub fn for_config(a: &ArchConfig, mode: PowerMode) -> Self {
+        let adc = a.adc_count() as f64 * P_ADC_MW;
+        let neurons = (a.nh + a.ny) as f64 * P_NEURON_MW;
+        // wordlines: hidden crossbar (nx+nh) + readout crossbar (nh)
+        let drivers = ((a.nx + a.nh) + a.nh) as f64 * P_DRIVER_MW;
+        let digital = P_CTRL_BASE_MW
+            + a.tiles as f64 * P_INTERP_TILE_MW
+            + a.nh as f64 * P_SREG_PER_UNIT_MW;
+        let crossbar = a.memristor_count() as f64 * P_XBAR_PER_DEVICE_MW;
+        let training = match mode {
+            PowerMode::Inference => 0.0,
+            PowerMode::Training => P_PROJECTION_MW + P_WRITE_CTRL_MW + P_ERROR_UNIT_MW,
+        };
+        Self { adc, neurons, drivers, digital, tanh: P_TANH_MW, crossbar, training }
+    }
+
+    /// Total power, mW.
+    pub fn total_mw(&self) -> f64 {
+        self.adc + self.neurons + self.drivers + self.digital + self.tanh + self.crossbar
+            + self.training
+    }
+
+    /// Named rows for reporting, (label, mW, fraction).
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        let t = self.total_mw();
+        let mut rows = vec![
+            ("ADC (shared, 1.28 GSps)", self.adc, self.adc / t),
+            ("Neuron circuits (op-amp + integrator)", self.neurons, self.neurons / t),
+            ("Wordline drivers + level shifters", self.drivers, self.drivers / t),
+            ("Digital control / FIFO / interpolation", self.digital, self.digital / t),
+            ("tanh PWL unit", self.tanh, self.tanh / t),
+            ("Crossbar read", self.crossbar, self.crossbar / t),
+        ];
+        if self.training > 0.0 {
+            rows.push(("Training logic (Ψ, Ziksa, error unit)", self.training, self.training / t));
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inference_totals_48_62_mw_at_paper_point() {
+        let p = PowerBreakdown::for_config(&ArchConfig::paper_default(), PowerMode::Inference);
+        let total = p.total_mw();
+        assert!((total - 48.62).abs() < 48.62 * 0.01, "total {total}");
+    }
+
+    #[test]
+    fn training_totals_56_97_mw() {
+        let p = PowerBreakdown::for_config(&ArchConfig::paper_default(), PowerMode::Training);
+        let total = p.total_mw();
+        assert!((total - 56.97).abs() < 56.97 * 0.01, "total {total}");
+        assert!((p.training - 8.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analog_front_end_dominates() {
+        // §VI-D: "most of the power is directed towards the analog
+        // front-end circuits, particularly the ADCs and Op-Amps".
+        let p = PowerBreakdown::for_config(&ArchConfig::paper_default(), PowerMode::Inference);
+        assert!(p.adc + p.neurons > 0.6 * p.total_mw());
+        assert!(p.adc > p.drivers && p.neurons > p.digital);
+    }
+
+    #[test]
+    fn tanh_is_microwatts() {
+        let p = PowerBreakdown::for_config(&ArchConfig::paper_default(), PowerMode::Inference);
+        assert!((p.tanh - 0.00374).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let p = PowerBreakdown::for_config(&ArchConfig::paper_default(), PowerMode::Training);
+        let s: f64 = p.rows().iter().map(|r| r.2).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_scales_with_network_size() {
+        let base = PowerBreakdown::for_config(&ArchConfig::paper_default(), PowerMode::Inference);
+        let big = PowerBreakdown::for_config(
+            &ArchConfig::paper_default().with_nh(256),
+            PowerMode::Inference,
+        );
+        assert!(big.total_mw() > base.total_mw() * 1.5);
+        assert!(big.adc > base.adc); // extra shared ADC kicks in past 128
+    }
+}

@@ -1,0 +1,72 @@
+//! Throughput / efficiency metrics (§VI-C headline numbers).
+
+use super::latency::{seq_latency_s, step_latency_s};
+use super::power::{PowerBreakdown, PowerMode};
+use super::ArchConfig;
+
+/// Operations per MiRU time step: the two crossbar VMMs as MACs
+/// (2 ops each) — the dominant compute the paper counts.
+pub fn ops_per_step(a: &ArchConfig) -> u64 {
+    (2 * ((a.nx + a.nh) * a.nh + a.nh * a.ny)) as u64
+}
+
+/// Sustained compute throughput, GOPS.
+pub fn gops(a: &ArchConfig) -> f64 {
+    ops_per_step(a) as f64 / step_latency_s(a) / 1e9
+}
+
+/// Sequences classified per second.
+pub fn seqs_per_second(a: &ArchConfig) -> f64 {
+    1.0 / seq_latency_s(a)
+}
+
+/// Energy efficiency, GOPS/W, in the given power mode.
+pub fn gops_per_watt(a: &ArchConfig, mode: PowerMode) -> f64 {
+    gops(a) / (PowerBreakdown::for_config(a, mode).total_mw() / 1000.0)
+}
+
+/// Energy per operation, pJ/op.
+pub fn pj_per_op(a: &ArchConfig, mode: PowerMode) -> f64 {
+    1000.0 / gops_per_watt(a, mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_15_gops() {
+        let a = ArchConfig::paper_default();
+        let g = gops(&a);
+        assert!((g - 15.0).abs() < 0.3, "{g}"); // 27600 ops / 1.85 µs = 14.92
+    }
+
+    #[test]
+    fn headline_19305_seqs_per_second() {
+        let a = ArchConfig::paper_default();
+        assert!((seqs_per_second(&a) - 19305.0).abs() < 10.0);
+    }
+
+    #[test]
+    fn headline_312_gops_per_watt() {
+        let a = ArchConfig::paper_default();
+        let e = gops_per_watt(&a, PowerMode::Inference);
+        // paper: 312 GOPS/W (3.21 pJ/op); our formulas give ~307
+        assert!((e - 312.0).abs() < 312.0 * 0.05, "{e}");
+        let pj = pj_per_op(&a, PowerMode::Inference);
+        assert!((pj - 3.21).abs() < 0.2, "{pj}");
+    }
+
+    #[test]
+    fn ops_count_matches_hand_arithmetic() {
+        let a = ArchConfig::paper_default();
+        assert_eq!(ops_per_step(&a), 2 * (128 * 100 + 100 * 10));
+    }
+
+    #[test]
+    fn efficiency_degrades_without_tiling() {
+        let a = ArchConfig::paper_default();
+        let untiled = a.with_tiles(1, false);
+        assert!(gops(&untiled) < 0.5 * gops(&a));
+    }
+}

@@ -1,0 +1,51 @@
+//! # M2RU — Memristive Minion Recurrent Unit, full-system reproduction
+//!
+//! This crate is the Layer-3 runtime of a three-layer reproduction of
+//! *"M2RU: Memristive Minion Recurrent Unit for On-Chip Continual Learning
+//! at the Edge"* (Zyarah & Kudithipudi, 2025/2026):
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the weighted-bit-
+//!   streaming crossbar VMM and fused MiRU cell, validated against pure-jnp
+//!   oracles.
+//! * **L2** — the JAX MiRU model and DFA/Adam training steps
+//!   (`python/compile/model.py`), AOT-lowered once to HLO text.
+//! * **L3** — this crate: the continual-learning coordinator. It owns the
+//!   data-preparation unit (reservoir sampler → stochastic quantizer →
+//!   replay buffer), the replay-mixed training loop, the memristor device
+//!   and endurance models, the 65 nm @ 20 MHz architectural power/latency
+//!   model, and the PJRT runtime that executes the AOT artifacts. Python
+//!   is never on the request path.
+//!
+//! Module map (see `DESIGN.md` for the paper-subsystem ↔ module table):
+//!
+//! | module        | paper subsystem |
+//! |---------------|-----------------|
+//! | [`rng`]       | xorshift sampler core, LFSR of the stochastic quantizer |
+//! | [`linalg`]    | dense matrix substrate for the digital baseline |
+//! | [`nn`]        | MiRU Eqs. (1)–(3), DFA Algorithm 1, K-WTA ζ, Adam baseline |
+//! | [`quant`]     | WBS input digitization, ADC model, replay quantizers |
+//! | [`device`]    | memristor model, differential crossbar, endurance, Ziksa |
+//! | [`hw_model`]  | §VI-C/D: latency, throughput, power, digital baseline |
+//! | [`data`]      | synthetic permuted-MNIST / split-feature task streams |
+//! | [`replay`]    | §IV-A data-preparation unit |
+//! | [`runtime`]   | PJRT client; loads `artifacts/*.hlo.txt` |
+//! | [`coordinator`]| trainer, batcher, tile scheduler, metrics |
+//! | [`config`]    | network configs + TOML-subset loader |
+//! | [`cli`]       | argument parsing for the `m2ru` binary |
+//! | [`experiments`]| regenerates every paper figure/table |
+//! | [`proptest`]  | in-tree property-testing mini-framework |
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod experiments;
+pub mod hw_model;
+pub mod linalg;
+pub mod nn;
+pub mod proptest;
+pub mod quant;
+pub mod replay;
+pub mod rng;
+pub mod runtime;

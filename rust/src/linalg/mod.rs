@@ -1,0 +1,286 @@
+//! Minimal dense-matrix substrate (row-major `f32`).
+//!
+//! Backs the digital CMOS baseline (`nn`), the device crossbar simulator
+//! and the host-side glue around the PJRT executables. Deliberately small:
+//! only the operations the MiRU/DFA math needs, each with explicit shape
+//! checks (panics are programming errors, not data errors).
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape {rows}x{cols} vs len {}", data.len());
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// self @ other: [m,k] x [k,n] -> [m,n]. ikj loop order (row-major
+    /// friendly; the hot path of the digital baseline).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// selfᵀ @ other: [k,m]ᵀ x [k,n] -> [m,n] without materializing the
+    /// transpose (gradient outer-product accumulation).
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn");
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for p in 0..k {
+            let arow = &self.data[p * m..(p + 1) * m];
+            let brow = &other.data[p * n..(p + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
+    }
+
+    /// self += alpha * other (elementwise).
+    pub fn add_scaled(&mut self, other: &Mat, alpha: f32) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Add a row-vector bias to every row.
+    pub fn add_row_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            for (x, &b) in self.row_mut(r).iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Vertical concat: [a; b] (crossbar layout: x-rows above h-rows).
+    pub fn vcat(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols, b.cols);
+        let mut data = Vec::with_capacity((a.rows + b.rows) * a.cols);
+        data.extend_from_slice(&a.data);
+        data.extend_from_slice(&b.data);
+        Mat { rows: a.rows + b.rows, cols: a.cols, data }
+    }
+
+    /// Horizontal concat per row: [a | b].
+    pub fn hcat(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.rows, b.rows);
+        let mut out = Mat::zeros(a.rows, a.cols + b.cols);
+        for r in 0..a.rows {
+            out.row_mut(r)[..a.cols].copy_from_slice(a.row(r));
+            out.row_mut(r)[a.cols..].copy_from_slice(b.row(r));
+        }
+        out
+    }
+}
+
+/// Row-wise softmax (numerically stable).
+pub fn softmax_rows(m: &Mat) -> Mat {
+    let mut out = m.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - max).exp();
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    out
+}
+
+/// Mean cross-entropy of softmax(logits) against one-hot labels.
+pub fn cross_entropy(logits: &Mat, labels: &[usize]) -> f32 {
+    assert_eq!(logits.rows, labels.len());
+    let p = softmax_rows(logits);
+    let mut loss = 0.0;
+    for (r, &y) in labels.iter().enumerate() {
+        loss -= p.at(r, y).max(1e-12).ln();
+    }
+    loss / logits.rows as f32
+}
+
+/// Row-wise argmax.
+pub fn argmax_rows(m: &Mat) -> Vec<usize> {
+    (0..m.rows)
+        .map(|r| {
+            m.row(r)
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_tn_equals_transpose_then_matmul() {
+        let a = Mat::from_fn(5, 3, |r, c| (r * 3 + c) as f32 * 0.1);
+        let b = Mat::from_fn(5, 4, |r, c| (r + c) as f32 * 0.2 - 0.3);
+        let got = a.matmul_tn(&b);
+        let want = a.transpose().matmul(&b);
+        for (x, y) in got.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 7, |r, c| (r * 7 + c) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_order_preserved() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, 0.0, 100.0]);
+        let p = softmax_rows(&m);
+        for r in 0..2 {
+            let s: f32 = p.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(p.at(0, 2) > p.at(0, 1) && p.at(0, 1) > p.at(0, 0));
+        assert!(p.at(1, 2) > 0.99);
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_near_zero() {
+        let logits = Mat::from_vec(1, 3, vec![100.0, 0.0, 0.0]);
+        assert!(cross_entropy(&logits, &[0]) < 1e-6);
+        assert!(cross_entropy(&logits, &[1]) > 10.0);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let m = Mat::from_vec(2, 3, vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]);
+        assert_eq!(argmax_rows(&m), vec![1, 0]);
+    }
+
+    #[test]
+    fn vcat_hcat_shapes() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::from_fn(4, 3, |_, _| 1.0);
+        let v = Mat::vcat(&a, &b);
+        assert_eq!((v.rows, v.cols), (6, 3));
+        assert_eq!(v.at(3, 0), 1.0);
+        let c = Mat::from_fn(2, 2, |_, _| 2.0);
+        let h = Mat::hcat(&a, &c);
+        assert_eq!((h.rows, h.cols), (2, 5));
+        assert_eq!(h.at(1, 4), 2.0);
+    }
+
+    #[test]
+    fn add_row_bias_and_scale() {
+        let mut m = Mat::zeros(2, 2);
+        m.add_row_bias(&[1.0, 2.0]);
+        m.scale(2.0);
+        assert_eq!(m.data, vec![2.0, 4.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,310 @@
+//! `m2ru` — leader binary of the M2RU reproduction.
+//!
+//! Subcommands:
+//!   info                         runtime + artifact + hw-model summary
+//!   train        [flags]         one continual-learning run
+//!   experiment <id> [flags]      regenerate a paper figure/table
+//!   help
+//!
+//! Run `m2ru help` for flags. Artifacts must exist (`make artifacts`).
+
+use anyhow::{bail, Context, Result};
+
+use m2ru::cli::Args;
+use m2ru::config::{Manifest, NetConfig, RunConfig};
+use m2ru::coordinator::{
+    ContinualTrainer, Engine, HardwareEngine, RustAdamEngine, RustDfaEngine, XlaAdamEngine,
+    XlaDfaEngine,
+};
+use m2ru::device::DeviceParams;
+use m2ru::experiments::{
+    run_ablation_replay, run_ablation_sampler, run_ablation_zeta, run_fault, run_fig4, run_fig5a,
+    run_fig5b, run_fig5c, run_fig5d, run_headline, run_table1, Fig4Options, Fig5bOptions,
+};
+use m2ru::runtime::{ModelBundle, Runtime};
+
+const HELP: &str = "\
+m2ru — Memristive Minion Recurrent Unit (full-system reproduction)
+
+USAGE: m2ru [--artifacts DIR] [--results DIR] <subcommand> [flags]
+
+SUBCOMMANDS
+  info                      platform, manifest and hw-model summary
+  train                     one continual-learning run
+      --net NAME            network config (small|pmnist100|pmnist256|cifar100|cifar256)
+      --engine NAME         adam|dfa|hw|rust-dfa|rust-adam   [dfa]
+      --dataset NAME        pmnist|cifarfeat (must match --net geometry)
+      --config FILE         TOML run configuration
+      --tasks N --train-per-task N --test-per-task N --epochs N
+      --replay BOOL --replay-per-task N --seed N --lr F --lam F --beta F
+  experiment ID             fig4|fig5a|fig5b|fig5c|fig5d|table1|headline|all
+                            |ablation-replay|ablation-zeta|ablation-sampler|fault
+      fig4:  --dataset pmnist|cifarfeat  --nh 100|256  --engines adam,dfa,hw
+      plus the train flags above for workload scaling
+  help
+";
+
+fn apply_run_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
+    if let Some(path) = args.get_opt("config") {
+        *run = RunConfig::load(&path)?;
+    }
+    run.num_tasks = args.get_parse("tasks", run.num_tasks)?;
+    run.train_per_task = args.get_parse("train-per-task", run.train_per_task)?;
+    run.test_per_task = args.get_parse("test-per-task", run.test_per_task)?;
+    run.epochs = args.get_parse("epochs", run.epochs)?;
+    run.replay_per_task = args.get_parse("replay-per-task", run.replay_per_task)?;
+    run.seed = args.get_parse("seed", run.seed)?;
+    run.lr = args.get_parse("lr", run.lr)?;
+    run.lam = args.get_parse("lam", run.lam)?;
+    run.beta = args.get_parse("beta", run.beta)?;
+    if let Some(r) = args.get_opt("replay") {
+        run.replay = r.parse().context("--replay expects true/false")?;
+    }
+    run.validate()
+}
+
+fn cmd_info(rt: &Runtime, manifest: &Manifest) -> Result<()> {
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {} ({} configs, {} executables)", manifest.dir.display(),
+             manifest.configs.len(), manifest.artifacts.len());
+    for (name, _) in &manifest.configs {
+        let arts = manifest.artifacts_for(name);
+        println!("  {name}: {} artifacts", arts.len());
+    }
+    let report = run_headline()?;
+    drop(report);
+    Ok(())
+}
+
+fn cmd_train(rt: &Runtime, manifest: &Manifest, args: &mut Args) -> Result<()> {
+    let net = args.get("net", "pmnist100");
+    let engine_name = args.get("engine", "dfa");
+    let cfg = NetConfig::by_name(&net).with_context(|| format!("unknown net `{net}`"))?;
+    let default_ds = if net.starts_with("cifar") { "cifarfeat" } else { "pmnist" };
+    let dataset = args.get("dataset", default_ds);
+    let levels_flag = args.get_parse("levels", DeviceParams::default().levels)?;
+    let mut run = RunConfig::default();
+    apply_run_flags(args, &mut run)?;
+    args.finish()?;
+
+    let stream = match dataset.as_str() {
+        "pmnist" => {
+            anyhow::ensure!(cfg.nx == 28, "net `{net}` does not match pmnist geometry");
+            m2ru::data::permuted_task_stream(run.num_tasks, run.train_per_task, run.test_per_task, run.seed)
+        }
+        "cifarfeat" => {
+            anyhow::ensure!(cfg.nx == 32, "net `{net}` does not match cifarfeat geometry");
+            m2ru::data::feature_task_stream(run.num_tasks, run.train_per_task, run.test_per_task, 0.8, run.seed)
+        }
+        other => bail!("unknown dataset `{other}`"),
+    };
+
+    println!("training `{engine_name}` on {dataset} with net {net} ({} tasks)", run.num_tasks);
+    let mut trainer = ContinualTrainer::new(&stream, run.clone(), cfg.b_train, cfg.b_eval);
+
+    let run_engine = |trainer: &mut ContinualTrainer, eng: &mut dyn Engine| -> Result<()> {
+        for t in 0..run.num_tasks.min(stream.num_tasks()) {
+            let res = trainer.run_task(eng, t)?;
+            println!(
+                "task {}: loss={:.4} acc/task={:?} MA={:.3}",
+                t + 1,
+                res.mean_loss,
+                res.acc_per_task.iter().map(|a| (a * 1000.0).round() / 1000.0).collect::<Vec<_>>(),
+                res.mean_acc
+            );
+        }
+        Ok(())
+    };
+
+    match engine_name.as_str() {
+        "rust-dfa" => {
+            let mut e = RustDfaEngine::new(
+                cfg.nx, cfg.nh, cfg.ny, run.lam, run.beta, run.lr, Some(cfg.keep_frac), run.seed,
+            );
+            run_engine(&mut trainer, &mut e)?;
+        }
+        "rust-adam" => {
+            let mut e =
+                RustAdamEngine::new(cfg.nx, cfg.nh, cfg.ny, run.lam, run.beta, run.lr * 0.05, run.seed);
+            run_engine(&mut trainer, &mut e)?;
+        }
+        "dfa" => {
+            let bundle = ModelBundle::load(rt, manifest, cfg)?;
+            let mut e = XlaDfaEngine::new(&bundle, run.lam, run.beta, run.lr, run.seed);
+            run_engine(&mut trainer, &mut e)?;
+        }
+        "adam" => {
+            let bundle = ModelBundle::load(rt, manifest, cfg)?;
+            let mut e = XlaAdamEngine::new(&bundle, run.lam, run.beta, run.lr * 0.05, run.seed);
+            run_engine(&mut trainer, &mut e)?;
+        }
+        "hw" => {
+            let bundle = ModelBundle::load(rt, manifest, cfg)?;
+            let device = DeviceParams { levels: levels_flag, ..DeviceParams::default() };
+            let mut e = HardwareEngine::new(&bundle, run.lam, run.beta, run.lr, device, run.seed);
+            run_engine(&mut trainer, &mut e)?;
+            println!(
+                "device writes: total={} mean/step={:.1}",
+                e.programmer.total.writes,
+                e.programmer.writes_per_step()
+            );
+        }
+        other => bail!("unknown engine `{other}`"),
+    }
+    println!("final MA={:.3} forgetting={:.3}", trainer.matrix.mean_final(), trainer.matrix.forgetting());
+    Ok(())
+}
+
+fn cmd_experiment(rt: &Runtime, manifest: &Manifest, args: &mut Args, results: &str) -> Result<()> {
+    let id = args.positional(0).context("experiment id required (fig4|fig5a|fig5b|fig5c|fig5d|table1|headline|all)")?.to_string();
+    let mut reports = Vec::new();
+    let quick = args.get_bool("quick")?;
+
+    let fig4_opts = |args: &mut Args, dataset: String, nh: usize| -> Result<Fig4Options> {
+        let mut o = Fig4Options { dataset, nh, ..Fig4Options::default() };
+        if quick {
+            o.run.num_tasks = 2;
+            o.run.train_per_task = 200;
+            o.run.test_per_task = 100;
+            o.run.epochs = 1;
+            o.run.replay_per_task = 100;
+        }
+        apply_run_flags(args, &mut o.run)?;
+        let engines = args.get("engines", "adam,dfa,hw");
+        o.engines = engines.split(',').map(str::to_string).collect();
+        Ok(o)
+    };
+
+    match id.as_str() {
+        "fig4" => {
+            let dataset = args.get("dataset", "pmnist");
+            let nh = args.get_parse("nh", 100usize)?;
+            let opts = fig4_opts(args, dataset, nh)?;
+            args.finish()?;
+            let (rep, _) = run_fig4(rt, manifest, &opts)?;
+            reports.push(rep);
+        }
+        "fig5a" => {
+            let n = args.get_parse("samples", 40usize)?;
+            let seed = args.get_parse("seed", 0u64)?;
+            args.finish()?;
+            reports.push(run_fig5a(n, seed)?);
+        }
+        "fig5b" => {
+            let mut opts = Fig5bOptions::default();
+            if quick {
+                opts.run.train_per_task = 160;
+                opts.run.test_per_task = 60;
+            }
+            apply_run_flags(args, &mut opts.run)?;
+            args.finish()?;
+            reports.push(run_fig5b(rt, manifest, &opts)?);
+        }
+        "fig5c" => {
+            args.finish()?;
+            reports.push(run_fig5c()?);
+        }
+        "fig5d" => {
+            args.finish()?;
+            reports.push(run_fig5d()?);
+        }
+        "table1" => {
+            args.finish()?;
+            reports.push(run_table1()?);
+        }
+        "headline" => {
+            args.finish()?;
+            reports.push(run_headline()?);
+        }
+        "ablation-replay" | "ablation-zeta" => {
+            let mut run = RunConfig::default();
+            if quick {
+                run.num_tasks = 2;
+                run.train_per_task = 300;
+                run.test_per_task = 100;
+                run.epochs = 3;
+                run.replay_per_task = 150;
+            }
+            apply_run_flags(args, &mut run)?;
+            args.finish()?;
+            reports.push(if id == "ablation-replay" {
+                run_ablation_replay(rt, manifest, &run)?
+            } else {
+                run_ablation_zeta(rt, manifest, &run)?
+            });
+        }
+        "ablation-sampler" => {
+            args.finish()?;
+            reports.push(run_ablation_sampler()?);
+        }
+        "fault" => {
+            let mut run = RunConfig {
+                num_tasks: 1,
+                train_per_task: 600,
+                test_per_task: 150,
+                epochs: 5,
+                ..RunConfig::default()
+            };
+            apply_run_flags(args, &mut run)?;
+            args.finish()?;
+            reports.push(run_fault(rt, manifest, &run)?);
+        }
+        "all" => {
+            // analytical ones always; workload ones in quick mode
+            reports.push(run_fig5c()?);
+            reports.push(run_fig5d()?);
+            reports.push(run_table1()?);
+            reports.push(run_headline()?);
+            reports.push(run_fig5a(30, 0)?);
+            let mut o5b = Fig5bOptions::default();
+            o5b.run.train_per_task = 160;
+            o5b.run.test_per_task = 60;
+            reports.push(run_fig5b(rt, manifest, &o5b)?);
+            for (ds, nh) in [("pmnist", 100), ("pmnist", 256), ("cifarfeat", 100), ("cifarfeat", 256)]
+            {
+                let opts = fig4_opts(args, ds.to_string(), nh)?;
+                let (rep, _) = run_fig4(rt, manifest, &opts)?;
+                reports.push(rep);
+            }
+            args.finish()?;
+        }
+        other => bail!("unknown experiment `{other}`"),
+    }
+    // quick (scaled-down) runs must never clobber archived full results
+    let dir = if quick { format!("{results}/quick") } else { results.to_string() };
+    for rep in &reports {
+        let path = rep.save(&dir)?;
+        eprintln!("[saved {}]", path.display());
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let results = args.get("results", "results");
+
+    match args.subcommand()? {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "info" => {
+            args.finish()?;
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            cmd_info(&rt, &manifest)
+        }
+        "train" => {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            cmd_train(&rt, &manifest, &mut args)
+        }
+        "experiment" => {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(&artifacts)?;
+            cmd_experiment(&rt, &manifest, &mut args, &results)
+        }
+        other => bail!("unknown subcommand `{other}` (try `m2ru help`)"),
+    }
+}

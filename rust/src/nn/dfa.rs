@@ -1,0 +1,219 @@
+//! Direct Feedback Alignment through time — Algorithm 1 of the paper.
+//!
+//! The error at the readout is projected straight to the hidden layer by a
+//! fixed random matrix Ψ (no transposed forward weights, no backward
+//! locking) and accumulated back over the sequence. Mirrors
+//! `model._dfa_grads` exactly, including the paper's λ factor on the hidden
+//! delta (line 14 — kept verbatim; it only rescales the effective lr).
+
+use crate::linalg::{softmax_rows, Mat};
+use crate::nn::{kwta_inplace, MiruParams, SeqBatch};
+use crate::rng::GaussianRng;
+
+/// Scaled parameter deltas (already include −lr) plus the batch loss.
+#[derive(Clone, Debug)]
+pub struct DfaDeltas {
+    pub d_wh: Mat,
+    pub d_uh: Mat,
+    pub d_bh: Vec<f32>,
+    pub d_wo: Mat,
+    pub d_bo: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Fixed random projection Ψ ∈ [ny, nh], scaled 1/sqrt(nh) like the python
+/// harness.
+pub fn make_psi(ny: usize, nh: usize, seed: u64) -> Mat {
+    let mut rng = GaussianRng::new(seed);
+    let s = 1.0 / (nh as f32).sqrt();
+    Mat::from_fn(ny, nh, |_, _| rng.normal() * s)
+}
+
+/// One DFA step. `keep_frac = None` → dense deltas (Fig. 5b baseline);
+/// `Some(f)` → ζ-sparsified weight deltas (biases always dense — they live
+/// in digital registers, not memristors).
+pub fn dfa_grads(
+    p: &MiruParams,
+    x: &SeqBatch,
+    lam: f32,
+    beta: f32,
+    lr: f32,
+    psi: &Mat,
+    keep_frac: Option<f32>,
+) -> DfaDeltas {
+    let b = x.b;
+    let ny = p.ny();
+    assert_eq!((psi.rows, psi.cols), (ny, p.nh()));
+
+    let trace = p.forward_trace(x, lam, beta);
+    let logits = p.logits(&trace);
+    let probs = softmax_rows(&logits);
+
+    // loss + delta_o = (softmax - onehot)/B
+    let y = x.one_hot(ny);
+    let mut loss = 0.0;
+    for (i, &l) in x.labels.iter().enumerate() {
+        loss -= probs.at(i, l).max(1e-12).ln();
+    }
+    loss /= b as f32;
+    let mut delta_o = probs;
+    delta_o.add_scaled(&y, -1.0);
+    delta_o.scale(1.0 / b as f32);
+
+    // Output layer (lines 9-10): only the final hidden state is used.
+    let d_wo = trace.h_final.matmul_tn(&delta_o);
+    let mut d_bo = vec![0.0; ny];
+    for r in 0..b {
+        for (s, &v) in d_bo.iter_mut().zip(delta_o.row(r)) {
+            *s += v;
+        }
+    }
+
+    // Line 13: e = delta_o @ Psi (same for all t — final-step loss).
+    let e = delta_o.matmul(psi); // [b, nh]
+
+    // Lines 14-16 accumulated over time.
+    let mut d_wh = Mat::zeros(p.nx(), p.nh());
+    let mut d_uh = Mat::zeros(p.nh(), p.nh());
+    let mut d_bh = vec![0.0; p.nh()];
+    for t in 0..x.nt {
+        let cand = &trace.cand[t];
+        // dh = lam * e ⊙ (1 - cand²)
+        let mut dh = Mat::zeros(b, p.nh());
+        for r in 0..b {
+            for c in 0..p.nh() {
+                *dh.at_mut(r, c) = lam * e.at(r, c) * (1.0 - cand.at(r, c) * cand.at(r, c));
+            }
+        }
+        let xt = x.step(t);
+        d_wh.add_scaled(&xt.matmul_tn(&dh), 1.0);
+        let mut hp = trace.h_prev[t].clone();
+        hp.scale(beta);
+        d_uh.add_scaled(&hp.matmul_tn(&dh), 1.0);
+        for r in 0..b {
+            for (s, &v) in d_bh.iter_mut().zip(dh.row(r)) {
+                *s += v;
+            }
+        }
+    }
+
+    // ζ sparsification on the memristor-backed matrices, then −lr scaling.
+    let mut d_wo = d_wo;
+    if let Some(f) = keep_frac {
+        kwta_inplace(&mut d_wh, f);
+        kwta_inplace(&mut d_uh, f);
+        kwta_inplace(&mut d_wo, f);
+    }
+    d_wh.scale(-lr);
+    d_uh.scale(-lr);
+    d_wo.scale(-lr);
+    for v in &mut d_bh {
+        *v *= -lr;
+    }
+    for v in &mut d_bo {
+        *v *= -lr;
+    }
+    DfaDeltas { d_wh, d_uh, d_bh, d_wo, d_bo, loss }
+}
+
+impl MiruParams {
+    /// Apply deltas (the "ideal write" path; the device-aware path goes
+    /// through `device::programming` instead).
+    pub fn apply(&mut self, d: &DfaDeltas) {
+        self.wh.add_scaled(&d.d_wh, 1.0);
+        self.uh.add_scaled(&d.d_uh, 1.0);
+        self.wo.add_scaled(&d.d_wo, 1.0);
+        for (b, &v) in self.bh.iter_mut().zip(&d.d_bh) {
+            *b += v;
+        }
+        for (b, &v) in self.bo.iter_mut().zip(&d.d_bo) {
+            *b += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_task_batch(c: (usize, usize, usize, usize), b: usize, seed: u64) -> SeqBatch {
+        // class-conditional prototype sequences, same recipe as the python
+        // toy_batch: x = 0.25*noise + 0.75*proto[label]
+        let (nx, _nh, ny, nt) = c;
+        let mut proto_rng = GaussianRng::new(99);
+        let protos: Vec<Vec<f32>> =
+            (0..ny).map(|_| (0..nx).map(|_| proto_rng.normal()).collect()).collect();
+        let mut rng = GaussianRng::new(seed);
+        let mut sb = SeqBatch::zeros(b, nt, nx);
+        for i in 0..b {
+            let label = rng.below(ny);
+            sb.labels[i] = label;
+            for t in 0..nt {
+                for j in 0..nx {
+                    let v = 0.25 * rng.normal() + 0.75 * protos[label][j];
+                    sb.sample_mut(i)[t * nx + j] = v.clamp(-1.0, 1.0);
+                }
+            }
+        }
+        sb
+    }
+
+    #[test]
+    fn shapes_are_correct() {
+        let p = MiruParams::init(8, 16, 4, 0);
+        let psi = make_psi(4, 16, 1);
+        let x = toy_task_batch((8, 16, 4, 5), 8, 2);
+        let d = dfa_grads(&p, &x, 0.5, 0.7, 0.1, &psi, Some(0.53));
+        assert_eq!((d.d_wh.rows, d.d_wh.cols), (8, 16));
+        assert_eq!((d.d_uh.rows, d.d_uh.cols), (16, 16));
+        assert_eq!((d.d_wo.rows, d.d_wo.cols), (16, 4));
+        assert_eq!(d.d_bh.len(), 16);
+        assert_eq!(d.d_bo.len(), 4);
+        assert!(d.loss.is_finite());
+    }
+
+    #[test]
+    fn learns_toy_task() {
+        let mut p = MiruParams::init(8, 16, 4, 7);
+        let psi = make_psi(4, 16, 11);
+        let mut losses = Vec::new();
+        for i in 0..60 {
+            let x = toy_task_batch((8, 16, 4, 5), 8, i);
+            let d = dfa_grads(&p, &x, 0.5, 0.7, 0.5, &psi, Some(0.53));
+            p.apply(&d);
+            losses.push(d.loss);
+        }
+        let head: f32 = losses[..10].iter().sum::<f32>() / 10.0;
+        let tail: f32 = losses[50..].iter().sum::<f32>() / 10.0;
+        assert!(tail < 0.6 * head, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn sparse_deltas_are_masked_dense_deltas() {
+        let p = MiruParams::init(8, 16, 4, 9);
+        let psi = make_psi(4, 16, 13);
+        let x = toy_task_batch((8, 16, 4, 5), 8, 1);
+        let ds = dfa_grads(&p, &x, 0.5, 0.7, 0.1, &psi, Some(0.53));
+        let dd = dfa_grads(&p, &x, 0.5, 0.7, 0.1, &psi, None);
+        for (s, d) in ds.d_wh.data.iter().zip(&dd.d_wh.data) {
+            assert!(*s == 0.0 || (s - d).abs() < 1e-7);
+        }
+        assert!((ds.loss - dd.loss).abs() < 1e-7);
+        assert!(ds.d_wh.count_nonzero() < dd.d_wh.count_nonzero());
+        // biases always dense (digital registers)
+        assert_eq!(
+            ds.d_bh.iter().filter(|v| **v != 0.0).count(),
+            dd.d_bh.iter().filter(|v| **v != 0.0).count()
+        );
+    }
+
+    #[test]
+    fn zero_lr_means_zero_deltas() {
+        let p = MiruParams::init(8, 16, 4, 3);
+        let psi = make_psi(4, 16, 5);
+        let x = toy_task_batch((8, 16, 4, 5), 4, 0);
+        let d = dfa_grads(&p, &x, 0.5, 0.7, 0.0, &psi, None);
+        assert!(d.d_wh.data.iter().all(|&v| v == 0.0));
+        assert!(d.loss > 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! MiRU forward pass — Eqs. (1)–(3) of the paper.
+
+use crate::linalg::Mat;
+use crate::nn::SeqBatch;
+use crate::rng::GaussianRng;
+
+/// MiRU network parameters. Order matches the AOT artifact contract:
+/// (wh [nx,nh], uh [nh,nh], bh [nh], wo [nh,ny], bo [ny]).
+#[derive(Clone, Debug)]
+pub struct MiruParams {
+    pub wh: Mat,
+    pub uh: Mat,
+    pub bh: Vec<f32>,
+    pub wo: Mat,
+    pub bo: Vec<f32>,
+}
+
+/// Per-step activations recorded during the forward pass; the DFA backward
+/// consumes them (the hardware recomputes instead of storing — same math).
+pub struct MiruTrace {
+    /// h^{t-1} entering step t: nt matrices of [b, nh].
+    pub h_prev: Vec<Mat>,
+    /// candidate h~^t at step t.
+    pub cand: Vec<Mat>,
+    /// final hidden state h^{nT}.
+    pub h_final: Mat,
+}
+
+impl MiruParams {
+    /// Glorot-style init, matching the python test harness scale.
+    pub fn init(nx: usize, nh: usize, ny: usize, seed: u64) -> Self {
+        let mut rng = GaussianRng::new(seed);
+        let sx = 0.3 / (nx as f32).sqrt();
+        let sh = 0.3 / (nh as f32).sqrt();
+        Self {
+            wh: Mat::from_fn(nx, nh, |_, _| rng.normal() * sx),
+            uh: Mat::from_fn(nh, nh, |_, _| rng.normal() * sh),
+            bh: vec![0.0; nh],
+            wo: Mat::from_fn(nh, ny, |_, _| rng.normal() * sh),
+            bo: vec![0.0; ny],
+        }
+    }
+
+    pub fn nx(&self) -> usize {
+        self.wh.rows
+    }
+    pub fn nh(&self) -> usize {
+        self.uh.rows
+    }
+    pub fn ny(&self) -> usize {
+        self.wo.cols
+    }
+
+    /// Total parameter count (matches `model.param_count`).
+    pub fn count(&self) -> usize {
+        self.wh.data.len() + self.uh.data.len() + self.bh.len() + self.wo.data.len() + self.bo.len()
+    }
+
+    /// Flatten in artifact order (wh, uh, bh, wo, bo).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.count());
+        v.extend_from_slice(&self.wh.data);
+        v.extend_from_slice(&self.uh.data);
+        v.extend_from_slice(&self.bh);
+        v.extend_from_slice(&self.wo.data);
+        v.extend_from_slice(&self.bo);
+        v
+    }
+
+    /// Run the MiRU layer over a sequence batch, recording the trace.
+    pub fn forward_trace(&self, x: &SeqBatch, lam: f32, beta: f32) -> MiruTrace {
+        assert_eq!(x.nx, self.nx());
+        let nh = self.nh();
+        let mut h = Mat::zeros(x.b, nh);
+        let mut h_prev = Vec::with_capacity(x.nt);
+        let mut cand_v = Vec::with_capacity(x.nt);
+        for t in 0..x.nt {
+            let xt = x.step(t);
+            // pre = x_t @ Wh + (beta*h) @ Uh + bh
+            let mut bh_scaled = h.clone();
+            bh_scaled.scale(beta);
+            let mut pre = xt.matmul(&self.wh);
+            pre.add_scaled(&bh_scaled.matmul(&self.uh), 1.0);
+            pre.add_row_bias(&self.bh);
+            let cand = pre.map(f32::tanh);
+            let mut h_new = h.clone();
+            h_new.scale(lam);
+            h_new.add_scaled(&cand, 1.0 - lam);
+            h_prev.push(h);
+            cand_v.push(cand);
+            h = h_new;
+        }
+        MiruTrace { h_prev, cand: cand_v, h_final: h }
+    }
+
+    /// Final-step logits: h^{nT} @ Wo + bo.
+    pub fn logits(&self, trace: &MiruTrace) -> Mat {
+        let mut l = trace.h_final.matmul(&self.wo);
+        l.add_row_bias(&self.bo);
+        l
+    }
+
+    /// Convenience: forward + logits.
+    pub fn forward(&self, x: &SeqBatch, lam: f32, beta: f32) -> Mat {
+        let tr = self.forward_trace(x, lam, beta);
+        self.logits(&tr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::argmax_rows;
+
+    fn toy_batch(b: usize, nt: usize, nx: usize, seed: u64) -> SeqBatch {
+        let mut rng = GaussianRng::new(seed);
+        let mut sb = SeqBatch::zeros(b, nt, nx);
+        for v in &mut sb.data {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+        sb
+    }
+
+    #[test]
+    fn lambda_one_freezes_state() {
+        let p = MiruParams::init(4, 8, 3, 0);
+        let x = toy_batch(2, 5, 4, 1);
+        let logits = p.forward(&x, 1.0, 0.7);
+        // h stays zero -> logits == bo == 0
+        for v in &logits.data {
+            assert!(v.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn forward_matches_manual_single_step() {
+        let p = MiruParams::init(3, 4, 2, 2);
+        let x = toy_batch(1, 1, 3, 3);
+        let (lam, beta) = (0.4, 0.8);
+        let logits = p.forward(&x, lam, beta);
+        // manual: h0=0 -> cand=tanh(x@Wh+bh), h=(1-lam)*cand
+        let xt = x.step(0);
+        let mut pre = xt.matmul(&p.wh);
+        pre.add_row_bias(&p.bh);
+        let cand = pre.map(f32::tanh);
+        let mut h = cand.clone();
+        h.scale(1.0 - lam);
+        let mut want = h.matmul(&p.wo);
+        want.add_row_bias(&p.bo);
+        for (a, b) in logits.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn trace_shapes() {
+        let p = MiruParams::init(5, 7, 3, 4);
+        let x = toy_batch(4, 6, 5, 5);
+        let tr = p.forward_trace(&x, 0.5, 0.7);
+        assert_eq!(tr.h_prev.len(), 6);
+        assert_eq!(tr.cand.len(), 6);
+        assert_eq!((tr.h_final.rows, tr.h_final.cols), (4, 7));
+        // h_prev[0] must be zeros
+        assert!(tr.h_prev[0].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn hidden_state_stays_bounded() {
+        // |h| <= 1 always: tanh-bounded candidate, convex interpolation.
+        let p = MiruParams::init(4, 6, 2, 6);
+        let x = toy_batch(3, 50, 4, 7);
+        let tr = p.forward_trace(&x, 0.9, 0.9);
+        assert!(tr.h_final.data.iter().all(|&v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = MiruParams::init(4, 6, 3, 42);
+        let q = MiruParams::init(4, 6, 3, 42);
+        assert_eq!(p.wh, q.wh);
+        let x = toy_batch(2, 3, 4, 9);
+        assert_eq!(p.forward(&x, 0.5, 0.7).data, q.forward(&x, 0.5, 0.7).data);
+    }
+
+    #[test]
+    fn flatten_roundtrip_len() {
+        let p = MiruParams::init(28, 100, 10, 0);
+        assert_eq!(p.count(), 28 * 100 + 100 * 100 + 100 + 100 * 10 + 10);
+        assert_eq!(p.flatten().len(), p.count());
+        let _ = argmax_rows(&p.wo); // silence unused import in some cfgs
+    }
+}

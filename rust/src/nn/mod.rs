@@ -1,0 +1,91 @@
+//! Pure-rust MiRU network — the *digital CMOS baseline* of Table I and the
+//! second correctness oracle for the AOT artifacts.
+//!
+//! Semantics mirror `python/compile/model.py` exactly (same parameter
+//! order, same final-step loss, same DFA Algorithm 1 including the paper's
+//! λ factor on the hidden delta, same ζ keep rule) so integration tests can
+//! diff rust-vs-XLA outputs numerically.
+
+mod adam;
+mod dfa;
+mod kwta;
+mod miru;
+
+pub use adam::{bptt_grads, AdamState};
+pub use dfa::{dfa_grads, make_psi, DfaDeltas};
+pub use kwta::{kwta_inplace, kwta_keep_count};
+pub use miru::{MiruParams, MiruTrace};
+
+use crate::linalg::Mat;
+
+/// Batch of fixed-length sequences: x[b][t] is an `nx`-length feature row.
+#[derive(Clone, Debug)]
+pub struct SeqBatch {
+    pub b: usize,
+    pub nt: usize,
+    pub nx: usize,
+    /// [b * nt * nx], sequence-major per sample.
+    pub data: Vec<f32>,
+    pub labels: Vec<usize>,
+}
+
+impl SeqBatch {
+    pub fn zeros(b: usize, nt: usize, nx: usize) -> Self {
+        Self { b, nt, nx, data: vec![0.0; b * nt * nx], labels: vec![0; b] }
+    }
+
+    #[inline]
+    pub fn step(&self, t: usize) -> Mat {
+        // Gather time slice t across the batch: [b, nx].
+        let mut m = Mat::zeros(self.b, self.nx);
+        for i in 0..self.b {
+            let src = &self.data[(i * self.nt + t) * self.nx..(i * self.nt + t + 1) * self.nx];
+            m.row_mut(i).copy_from_slice(src);
+        }
+        m
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.data[i * self.nt * self.nx..(i + 1) * self.nt * self.nx]
+    }
+
+    pub fn sample_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.nt * self.nx..(i + 1) * self.nt * self.nx]
+    }
+
+    /// One-hot label matrix [b, ny].
+    pub fn one_hot(&self, ny: usize) -> Mat {
+        let mut y = Mat::zeros(self.b, ny);
+        for (i, &l) in self.labels.iter().enumerate() {
+            *y.at_mut(i, l) = 1.0;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seqbatch_step_slices_correctly() {
+        let mut sb = SeqBatch::zeros(2, 3, 4);
+        for i in 0..sb.data.len() {
+            sb.data[i] = i as f32;
+        }
+        let t1 = sb.step(1);
+        // sample 0, t=1 starts at 4; sample 1, t=1 starts at (1*3+1)*4=16
+        assert_eq!(t1.row(0), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(t1.row(1), &[16.0, 17.0, 18.0, 19.0]);
+    }
+
+    #[test]
+    fn one_hot_rows() {
+        let mut sb = SeqBatch::zeros(3, 1, 1);
+        sb.labels = vec![2, 0, 1];
+        let y = sb.one_hot(3);
+        assert_eq!(y.row(0), &[0.0, 0.0, 1.0]);
+        assert_eq!(y.row(1), &[1.0, 0.0, 0.0]);
+        assert_eq!(y.row(2), &[0.0, 1.0, 0.0]);
+    }
+}

@@ -1,0 +1,225 @@
+//! In-tree property-testing mini-framework.
+//!
+//! The offline environment has no `proptest` crate, so this module
+//! provides the 20% that covers our needs: seeded generators, a runner
+//! that executes N random cases, and greedy input shrinking on failure
+//! (halving numeric values / truncating vectors) so failures are reported
+//! at (near-)minimal inputs. Used by `rust/tests/proptests.rs` for the
+//! coordinator invariants.
+
+use crate::rng::GaussianRng;
+
+/// A seeded test-case generator.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut GaussianRng) -> Self::Value;
+    /// Candidate smaller versions of a failing value (greedy shrink).
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult<V> {
+    Pass { cases: usize },
+    Fail { seed: u64, original: V, shrunk: V, message: String },
+}
+
+/// Run `prop` on `cases` random inputs from `gen`. On failure, shrink.
+pub fn check<G, F>(seed: u64, cases: usize, gen: &G, prop: F) -> PropResult<G::Value>
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = GaussianRng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(message) = prop(&value) {
+            // greedy shrink loop
+            let original = value.clone();
+            let mut current = value;
+            let mut current_msg = message;
+            'outer: loop {
+                for cand in gen.shrink(&current) {
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        current_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            let _ = case;
+            return PropResult::Fail { seed, original, shrunk: current, message: current_msg };
+        }
+    }
+    PropResult::Pass { cases }
+}
+
+/// Assert a property holds; panics with the shrunk counterexample.
+pub fn assert_prop<G, F>(seed: u64, cases: usize, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    match check(seed, cases, gen, prop) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail { seed, original, shrunk, message } => {
+            panic!(
+                "property failed (seed {seed}): {message}\n  original: {original:?}\n  shrunk:   {shrunk:?}"
+            );
+        }
+    }
+}
+
+// ---- stock generators -----------------------------------------------------
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut GaussianRng) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1); // last-resort linear walk toward the boundary
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f32 in [lo, hi).
+pub struct F32In(pub f32, pub f32);
+
+impl Gen for F32In {
+    type Value = f32;
+    fn generate(&self, rng: &mut GaussianRng) -> f32 {
+        rng.uniform_in(self.0, self.1)
+    }
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mid = 0.5 * (self.0 + v);
+        if (mid - v).abs() > 1e-6 {
+            vec![self.0, mid]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vector of f32 with random length in [1, max_len].
+pub struct VecF32 {
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut GaussianRng) -> Vec<f32> {
+        let len = 1 + rng.below(self.max_len);
+        (0..len).map(|_| rng.uniform_in(self.lo, self.hi)).collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > 1 {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        // also try zeroing values
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut GaussianRng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(a).into_iter().map(|a2| (a2, b.clone())).collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        match check(0, 200, &UsizeIn(1, 100), |&n| {
+            if n >= 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        }) {
+            PropResult::Pass { cases } => assert_eq!(cases, 200),
+            PropResult::Fail { .. } => panic!("should pass"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_toward_minimum() {
+        // property: n < 50 — minimal counterexample is 50.
+        match check(1, 500, &UsizeIn(1, 100), |&n| {
+            if n < 50 {
+                Ok(())
+            } else {
+                Err(format!("{n} >= 50"))
+            }
+        }) {
+            PropResult::Pass { .. } => panic!("should fail"),
+            PropResult::Fail { shrunk, .. } => {
+                assert_eq!(shrunk, 50, "minimal counterexample");
+            }
+        }
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let g = VecF32 { max_len: 10, lo: -1.0, hi: 1.0 };
+        let mut rng = GaussianRng::new(3);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((1..=10).contains(&v.len()));
+            assert!(v.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn pair_shrinks_each_side() {
+        let g = Pair(UsizeIn(0, 10), UsizeIn(0, 10));
+        let shrinks = g.shrink(&(10, 10));
+        assert!(shrinks.iter().any(|&(a, b)| a < 10 && b == 10));
+        assert!(shrinks.iter().any(|&(a, b)| a == 10 && b < 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn assert_prop_panics_with_counterexample() {
+        assert_prop(2, 100, &UsizeIn(0, 100), |&n| {
+            if n < 10 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+}

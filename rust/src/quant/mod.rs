@@ -1,0 +1,162 @@
+//! Quantization primitives — the digital/analog boundary of the paper.
+//!
+//! Mirrors `python/compile/kernels/ref.py` bit-for-bit so the rust digital
+//! baseline, the device simulator and the AOT artifacts agree on rounding:
+//!
+//! * [`wbs_input_quantize`] — the n_b-bit sign/magnitude digitization the
+//!   WBS wordline drivers apply (§V-A).
+//! * [`adc_quantize`] — the shared-ADC read-out of the integrator (§IV-B1).
+//! * [`stochastic_round`] / [`uniform_truncate`] — the replay-path feature
+//!   compression of Eqs. (4)–(6) and its biased baseline (Fig. 5a).
+
+use crate::rng::Lfsr16;
+
+/// n_b-bit sign/magnitude digitization of an analog value in [-1, 1]:
+/// `sign(x) * round(|x| * (2^nb - 1)) / 2^nb` — exactly what the bit-serial
+/// WBS stream reconstructs on the integrator.
+#[inline]
+pub fn wbs_input_quantize(x: f32, nb: u32) -> f32 {
+    let full = (1u32 << nb) as f32;
+    let mag = (x.abs() * (full - 1.0)).round();
+    x.signum() * mag / full
+}
+
+/// Shared-ADC quantization: clip to ±v_scale, `bits`-bit signed levels.
+#[inline]
+pub fn adc_quantize(v: f32, bits: u32, v_scale: f32) -> f32 {
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let x = (v / v_scale).clamp(-1.0, 1.0);
+    (x * levels).round() / levels * v_scale
+}
+
+/// Stochastic rounding of a feature in [0,1) to an `nb`-bit integer code
+/// (Eqs. 4–6). `r` is the uniform draw — in hardware, the LFSR word.
+#[inline]
+pub fn stochastic_round(x: f32, r: f32, nb: u32) -> u8 {
+    let full = (1u32 << nb) as f32;
+    let z = x * full;
+    let fl = z.floor();
+    let frac = z - fl;
+    if r < frac && fl < full - 1.0 {
+        (fl + 1.0) as u8
+    } else {
+        fl as u8
+    }
+}
+
+/// Plain truncation to an `nb`-bit code — the biased baseline of Fig. 5(a).
+#[inline]
+pub fn uniform_truncate(x: f32, nb: u32) -> u8 {
+    let full = (1u32 << nb) as f32;
+    (x * full).floor().clamp(0.0, full - 1.0) as u8
+}
+
+/// Dequantize an `nb`-bit code back to [0,1): `q / 2^nb`.
+#[inline]
+pub fn dequantize(q: u8, nb: u32) -> f32 {
+    f32::from(q) / (1u32 << nb) as f32
+}
+
+/// The hardware stochastic quantizer: LFSR + comparator + incrementer
+/// (§IV-A2), quantizing whole feature vectors for the replay buffer.
+#[derive(Clone, Debug)]
+pub struct StochasticQuantizer {
+    lfsr: Lfsr16,
+    pub nb: u32,
+}
+
+impl StochasticQuantizer {
+    pub fn new(seed: u16, nb: u32) -> Self {
+        assert!(nb >= 1 && nb <= 8);
+        Self { lfsr: Lfsr16::new(seed), nb }
+    }
+
+    pub fn quantize(&mut self, x: f32) -> u8 {
+        let r = self.lfsr.next_unit();
+        stochastic_round(x.clamp(0.0, 0.999_999), r, self.nb)
+    }
+
+    pub fn quantize_vec(&mut self, xs: &[f32]) -> Vec<u8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wbs_quantize_endpoints() {
+        assert_eq!(wbs_input_quantize(1.0, 8), 255.0 / 256.0);
+        assert_eq!(wbs_input_quantize(-1.0, 8), -255.0 / 256.0);
+        assert_eq!(wbs_input_quantize(0.0, 8), 0.0);
+    }
+
+    #[test]
+    fn wbs_quantize_error_bound() {
+        // |err| <= 0.5/(2^nb - 1) + |x|/2^nb  (round + scale) — loose bound 1/2^nb.
+        for nb in 1..=8u32 {
+            for i in 0..1000 {
+                let x = -1.0 + 2.0 * (i as f32 / 999.0);
+                let q = wbs_input_quantize(x, nb);
+                assert!((q - x).abs() <= 1.5 / (1u32 << nb) as f32, "nb={nb} x={x} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn adc_quantize_half_lsb_and_clip() {
+        let lsb = 2.0 / 127.0;
+        for i in 0..100 {
+            let v = -2.0 + 4.0 * (i as f32 / 99.0);
+            let q = adc_quantize(v, 8, 2.0);
+            assert!((q - v).abs() <= lsb / 2.0 + 1e-6);
+        }
+        assert_eq!(adc_quantize(99.0, 8, 2.0), 2.0);
+        assert_eq!(adc_quantize(-99.0, 8, 2.0), -2.0);
+    }
+
+    #[test]
+    fn stochastic_round_matches_python_oracle_rules() {
+        // frac = 0.75 with r below/above.
+        let x = (4.0 + 0.75) / 16.0; // z = 4.75 at nb=4
+        assert_eq!(stochastic_round(x, 0.5, 4), 5);
+        assert_eq!(stochastic_round(x, 0.9, 4), 4);
+        // never exceeds 2^nb - 1
+        assert_eq!(stochastic_round(0.999, 0.0, 4), 15);
+    }
+
+    #[test]
+    fn stochastic_quantizer_is_unbiased() {
+        let mut q = StochasticQuantizer::new(0x1234, 4);
+        let n = 40_000;
+        let mut bias = 0.0f64;
+        for i in 0..n {
+            let x = 0.9 * (i as f32 / n as f32);
+            let code = q.quantize(x);
+            bias += f64::from(dequantize(code, 4)) - f64::from(x);
+        }
+        assert!((bias / f64::from(n)).abs() < 3e-3, "bias {}", bias / f64::from(n));
+    }
+
+    #[test]
+    fn truncation_is_biased_low() {
+        let n = 10_000;
+        let mut bias = 0.0f64;
+        for i in 0..n {
+            let x = 0.9 * (i as f32 / n as f32);
+            bias += f64::from(dequantize(uniform_truncate(x, 4), 4)) - f64::from(x);
+        }
+        // truncation loses ~half an LSB on average: 0.5/16 ≈ 0.031
+        assert!(bias / f64::from(n) < -0.02);
+    }
+
+    #[test]
+    fn round_trip_exact_codes() {
+        for code in 0u8..16 {
+            let x = dequantize(code, 4);
+            assert_eq!(uniform_truncate(x, 4), code);
+            assert_eq!(stochastic_round(x, 0.99, 4), code);
+        }
+    }
+}

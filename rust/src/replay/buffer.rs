@@ -1,0 +1,222 @@
+//! Replay buffer with 4-bit packed storage (§IV-A2, Fig. 5a).
+//!
+//! Features are stored as stochastically-rounded 4-bit codes, two per
+//! byte — the 2× compression the paper cites. The buffer is segmented per
+//! task (the paper provisions e.g. 1875 examples/task for pMNIST); each
+//! segment is fed by its own reservoir sampler while that task streams.
+
+use crate::data::Example;
+use crate::quant::{dequantize, StochasticQuantizer};
+use crate::rng::GaussianRng;
+
+use super::reservoir::{ReservoirDecision, ReservoirSampler};
+
+/// One stored example: packed 4-bit codes + label.
+#[derive(Clone, Debug)]
+pub struct QuantizedExample {
+    /// Two 4-bit codes per byte, low nibble first.
+    pub packed: Vec<u8>,
+    /// Feature count (may be odd).
+    pub len: usize,
+    pub label: usize,
+}
+
+impl QuantizedExample {
+    pub fn quantize(features: &[f32], label: usize, q: &mut StochasticQuantizer) -> Self {
+        assert_eq!(q.nb, 4, "replay path is 4-bit by design");
+        let mut packed = vec![0u8; features.len().div_ceil(2)];
+        for (i, &f) in features.iter().enumerate() {
+            let code = q.quantize(f);
+            if i % 2 == 0 {
+                packed[i / 2] |= code & 0x0F;
+            } else {
+                packed[i / 2] |= (code & 0x0F) << 4;
+            }
+        }
+        Self { packed, len: features.len(), label }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        (0..self.len)
+            .map(|i| {
+                let byte = self.packed[i / 2];
+                let code = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                dequantize(code, 4)
+            })
+            .collect()
+    }
+
+    /// Storage bytes used (the 2× claim: len/2 vs len at 8-bit).
+    pub fn bytes(&self) -> usize {
+        self.packed.len()
+    }
+}
+
+/// Per-task-segmented replay buffer fed by reservoir samplers.
+pub struct ReplayBuffer {
+    /// capacity per task segment.
+    pub per_task: usize,
+    /// feature normalization into [0,1]: stored = (x - offset)/scale.
+    pub offset: f32,
+    pub scale: f32,
+    segments: Vec<Vec<QuantizedExample>>,
+    sampler: ReservoirSampler,
+    quantizer: StochasticQuantizer,
+}
+
+impl ReplayBuffer {
+    pub fn new(per_task: usize, offset: f32, scale: f32, seed: u32) -> Self {
+        Self {
+            per_task,
+            offset,
+            scale,
+            segments: Vec::new(),
+            sampler: ReservoirSampler::new(per_task, seed),
+            quantizer: StochasticQuantizer::new((seed >> 16) as u16 ^ 0x5EED, 4),
+        }
+    }
+
+    /// Open a new task segment (resets the reservoir stream counter).
+    pub fn begin_task(&mut self) {
+        self.segments.push(Vec::with_capacity(self.per_task));
+        self.sampler.reset_stream();
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn stored_examples(&self) -> usize {
+        self.segments.iter().map(Vec::len).sum()
+    }
+
+    pub fn stored_bytes(&self) -> usize {
+        self.segments.iter().flatten().map(QuantizedExample::bytes).sum()
+    }
+
+    /// Offer a streaming example to the current task's reservoir.
+    pub fn offer(&mut self, ex: &Example) {
+        assert!(!self.segments.is_empty(), "begin_task before offering");
+        match self.sampler.offer() {
+            ReservoirDecision::Discard => {}
+            ReservoirDecision::Store(slot) => {
+                let norm: Vec<f32> = ex
+                    .features
+                    .iter()
+                    .map(|&x| ((x - self.offset) / self.scale).clamp(0.0, 0.999))
+                    .collect();
+                let q = QuantizedExample::quantize(&norm, ex.label, &mut self.quantizer);
+                let seg = self.segments.last_mut().unwrap();
+                if slot < seg.len() {
+                    seg[slot] = q;
+                } else {
+                    seg.push(q);
+                }
+            }
+        }
+    }
+
+    /// Draw `n` replay examples uniformly from *previous* tasks' segments
+    /// (the current, still-filling segment is excluded: the paper replays
+    /// old knowledge against the new stream).
+    pub fn sample_past(&self, n: usize, rng: &mut GaussianRng) -> Vec<Example> {
+        let past = self.segments.len().saturating_sub(1);
+        let pool: Vec<&QuantizedExample> = self.segments[..past].iter().flatten().collect();
+        if pool.is_empty() {
+            return Vec::new();
+        }
+        (0..n)
+            .map(|_| {
+                let q = pool[rng.below(pool.len())];
+                let features =
+                    q.dequantize().iter().map(|&v| v * self.scale + self.offset).collect();
+                Example { features, label: q.label }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(vals: &[f32], label: usize) -> Example {
+        Example { features: vals.to_vec(), label }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_within_lsb() {
+        let mut q = StochasticQuantizer::new(1, 4);
+        let feats: Vec<f32> = (0..9).map(|i| i as f32 / 9.0).collect();
+        let qe = QuantizedExample::quantize(&feats, 3, &mut q);
+        assert_eq!(qe.bytes(), 5); // ceil(9/2)
+        let back = qe.dequantize();
+        assert_eq!(back.len(), 9);
+        for (a, b) in back.iter().zip(&feats) {
+            assert!((a - b).abs() <= 1.0 / 16.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn storage_is_half_of_8bit() {
+        let mut q = StochasticQuantizer::new(2, 4);
+        let feats = vec![0.5f32; 784];
+        let qe = QuantizedExample::quantize(&feats, 0, &mut q);
+        assert_eq!(qe.bytes(), 392);
+    }
+
+    #[test]
+    fn segments_fill_to_capacity() {
+        let mut buf = ReplayBuffer::new(10, 0.0, 1.0, 42);
+        buf.begin_task();
+        for i in 0..100 {
+            buf.offer(&ex(&[i as f32 / 100.0; 4], i % 3));
+        }
+        assert_eq!(buf.num_tasks(), 1);
+        assert_eq!(buf.stored_examples(), 10);
+    }
+
+    #[test]
+    fn sample_past_excludes_current_task() {
+        let mut buf = ReplayBuffer::new(5, 0.0, 1.0, 7);
+        buf.begin_task();
+        for _ in 0..20 {
+            buf.offer(&ex(&[0.25; 4], 1));
+        }
+        buf.begin_task();
+        for _ in 0..20 {
+            buf.offer(&ex(&[0.75; 4], 2));
+        }
+        let mut rng = GaussianRng::new(0);
+        let got = buf.sample_past(50, &mut rng);
+        assert_eq!(got.len(), 50);
+        assert!(got.iter().all(|e| e.label == 1), "only task-1 examples may appear");
+    }
+
+    #[test]
+    fn sample_past_empty_before_second_task() {
+        let mut buf = ReplayBuffer::new(5, 0.0, 1.0, 7);
+        buf.begin_task();
+        buf.offer(&ex(&[0.5; 4], 0));
+        let mut rng = GaussianRng::new(0);
+        assert!(buf.sample_past(8, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn offset_scale_roundtrip_for_signed_features() {
+        // cifar-features live in [-1,1]: offset -1, scale 2.
+        let mut buf = ReplayBuffer::new(4, -1.0, 2.0, 9);
+        buf.begin_task();
+        for _ in 0..4 {
+            buf.offer(&ex(&[-0.5, 0.0, 0.5, 0.9], 1));
+        }
+        buf.begin_task();
+        let mut rng = GaussianRng::new(1);
+        let got = buf.sample_past(4, &mut rng);
+        for e in got {
+            for (a, b) in e.features.iter().zip(&[-0.5f32, 0.0, 0.5, 0.9]) {
+                assert!((a - b).abs() <= 2.0 / 16.0 + 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Data-preparation unit (§IV-A): reservoir sampler → stochastic
+//! quantizer → replay buffer.
+//!
+//! This is the hardware-integrated experience-replay mechanism that keeps
+//! continual learning stable under domain shift: examples are captured
+//! from the non-stationary stream with uniform probability (reservoir
+//! sampling over an unknown-length stream), compressed 8-bit → 4-bit with
+//! unbiased stochastic rounding (2× memory), and mixed back into every
+//! training batch.
+
+mod buffer;
+mod reservoir;
+
+pub use buffer::{QuantizedExample, ReplayBuffer};
+pub use reservoir::{ReservoirDecision, ReservoirSampler};

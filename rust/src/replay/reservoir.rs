@@ -1,0 +1,150 @@
+//! Reservoir sampler (§IV-A1) — Algorithm R on the xorshift + modulus
+//! circuit of Fig. 1.
+//!
+//! The buffer of length k fills with the first k examples; for example
+//! i > k (1-based), a random j ∈ 1..=i is drawn by the xorshift + modulus
+//! unit, and if j ≤ k the j-th slot is overwritten. Every element of the
+//! stream ends up in the buffer with probability k/i — the property the
+//! uniformity test below checks end-to-end through the hardware RNG.
+
+use crate::rng::Xorshift32;
+
+/// What to do with the incoming example.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReservoirDecision {
+    /// Store into slot `usize` (0-based).
+    Store(usize),
+    /// Do not store.
+    Discard,
+}
+
+/// Hardware-shaped reservoir sampler: counter + xorshift + modulus + index
+/// checker.
+#[derive(Clone, Debug)]
+pub struct ReservoirSampler {
+    k: usize,
+    /// Stream position counter (the hardware counter), 1-based.
+    count: u64,
+    rng: Xorshift32,
+}
+
+impl ReservoirSampler {
+    pub fn new(k: usize, seed: u32) -> Self {
+        assert!(k > 0);
+        Self { k, count: 0, rng: Xorshift32::new(seed) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.k
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.count
+    }
+
+    /// Present the next stream example; returns the slot decision.
+    pub fn offer(&mut self) -> ReservoirDecision {
+        self.count += 1;
+        if self.count <= self.k as u64 {
+            return ReservoirDecision::Store((self.count - 1) as usize);
+        }
+        // xorshift word folded to 1..=count by the modulus unit
+        let i = u32::try_from(self.count).expect("stream longer than 2^32");
+        let j = self.rng.next_index(i);
+        if (j as usize) <= self.k {
+            ReservoirDecision::Store((j - 1) as usize)
+        } else {
+            ReservoirDecision::Discard
+        }
+    }
+
+    /// Reset the counter for a new stream (buffer contents untouched —
+    /// the paper's buffer persists across tasks).
+    pub fn reset_stream(&mut self) {
+        self.count = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_k_fill_in_order() {
+        let mut s = ReservoirSampler::new(4, 1);
+        for i in 0..4 {
+            assert_eq!(s.offer(), ReservoirDecision::Store(i));
+        }
+    }
+
+    #[test]
+    fn later_offers_store_with_probability_k_over_i() {
+        let k = 32;
+        let trials = 4000u32;
+        let mut stores = 0u32;
+        let mut s = ReservoirSampler::new(k, 7);
+        for _ in 0..k {
+            s.offer();
+        }
+        // at position i, P(store) = k/i; accumulate over i = k+1..k+trials
+        let mut expected = 0.0f64;
+        for t in 0..trials {
+            let i = (k as u32 + 1 + t) as f64;
+            expected += k as f64 / i;
+            if matches!(s.offer(), ReservoirDecision::Store(_)) {
+                stores += 1;
+            }
+        }
+        let dev = (f64::from(stores) - expected).abs() / expected;
+        assert!(dev < 0.07, "stores {stores} expected {expected:.1}");
+    }
+
+    #[test]
+    fn every_element_equally_likely_to_survive() {
+        // run many small streams; count survival per position.
+        let k = 8;
+        let n = 40; // stream length
+        let runs = 3000;
+        let mut survive = vec![0u32; n];
+        for seed in 0..runs {
+            let mut s = ReservoirSampler::new(k, 1000 + seed);
+            let mut slots: Vec<usize> = vec![usize::MAX; k];
+            for pos in 0..n {
+                if let ReservoirDecision::Store(j) = s.offer() {
+                    slots[j] = pos;
+                }
+            }
+            for &p in &slots {
+                if p != usize::MAX {
+                    survive[p] += 1;
+                }
+            }
+        }
+        let expect = f64::from(runs) * k as f64 / n as f64;
+        for (pos, &c) in survive.iter().enumerate() {
+            let dev = (f64::from(c) - expect).abs() / expect;
+            assert!(dev < 0.12, "position {pos}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn store_slots_always_in_range() {
+        let mut s = ReservoirSampler::new(5, 99);
+        for _ in 0..10_000 {
+            if let ReservoirDecision::Store(j) = s.offer() {
+                assert!(j < 5);
+            }
+        }
+    }
+
+    #[test]
+    fn reset_stream_restarts_counter_only() {
+        let mut s = ReservoirSampler::new(3, 5);
+        for _ in 0..10 {
+            s.offer();
+        }
+        s.reset_stream();
+        assert_eq!(s.seen(), 0);
+        assert_eq!(s.offer(), ReservoirDecision::Store(0));
+    }
+}

@@ -1,0 +1,97 @@
+//! 16-bit LFSR — the stochastic quantizer's uniform source (§IV-A2).
+//!
+//! A Fibonacci LFSR with the maximal-length polynomial
+//! x^16 + x^15 + x^13 + x^4 + 1 (taps 16, 15, 13, 4), period 2^16 − 1.
+//! The quantizer compares the register word against the fractional part of
+//! the scaled pixel (Eqs. 4–6); an LFSR is fine *here* because each draw
+//! only gates one rounding decision — the bias the paper worries about for
+//! the reservoir sampler does not apply.
+
+/// Maximal-length 16-bit Fibonacci LFSR.
+#[derive(Clone, Debug)]
+pub struct Lfsr16 {
+    state: u16,
+}
+
+impl Lfsr16 {
+    pub fn new(seed: u16) -> Self {
+        Self { state: if seed == 0 { 0xACE1 } else { seed } }
+    }
+
+    /// One shift: feedback = bit16 ^ bit15 ^ bit13 ^ bit4 (1-indexed from
+    /// the output end, the classic 0xB400 Fibonacci form).
+    #[inline]
+    pub fn step(&mut self) -> u16 {
+        let lsb = self.state & 1;
+        self.state >>= 1;
+        if lsb != 0 {
+            self.state ^= 0xB400;
+        }
+        self.state
+    }
+
+    /// A fresh 16-bit word (16 shifts in hardware; one step here since the
+    /// register is full-width readable).
+    #[inline]
+    pub fn next_u16(&mut self) -> u16 {
+        self.step()
+    }
+
+    /// Uniform in [0,1) with 16-bit resolution — the comparator reference.
+    #[inline]
+    pub fn next_unit(&mut self) -> f32 {
+        f32::from(self.next_u16()) * (1.0 / 65536.0)
+    }
+
+    pub fn state(&self) -> u16 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_seed_remapped() {
+        let mut l = Lfsr16::new(0);
+        assert_ne!(l.state(), 0);
+        l.step();
+        assert_ne!(l.state(), 0);
+    }
+
+    #[test]
+    fn maximal_period() {
+        // 0xB400 is a maximal polynomial: period must be 2^16 - 1.
+        let mut l = Lfsr16::new(1);
+        let start = l.state();
+        let mut n = 0u32;
+        loop {
+            l.step();
+            n += 1;
+            if l.state() == start {
+                break;
+            }
+            assert!(n < 70_000, "no cycle found");
+        }
+        assert_eq!(n, 65_535);
+    }
+
+    #[test]
+    fn unit_outputs_in_range_and_spread() {
+        let mut l = Lfsr16::new(0x1234);
+        let xs: Vec<f32> = (0..10_000).map(|_| l.next_unit()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn never_zero_state() {
+        let mut l = Lfsr16::new(0xBEEF);
+        for _ in 0..65_536 {
+            l.step();
+            assert_ne!(l.state(), 0);
+        }
+    }
+}

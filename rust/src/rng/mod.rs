@@ -1,0 +1,178 @@
+//! Random-number substrates.
+//!
+//! The paper's hardware uses two distinct generators and the distinction is
+//! load-bearing (§IV-A1): the reservoir sampler needs *decorrelated,
+//! uniform, unbiased* indices — a 32-bit **xorshift** — while the stochastic
+//! quantizer only needs cheap uniform bits — an **LFSR**. Both are
+//! implemented exactly as the circuits would be, plus a [`SplitMix64`]
+//! seeder and Gaussian sampling used by the software-side substrates
+//! (data generation, weight init, device variability).
+
+mod lfsr;
+mod xorshift;
+
+pub use lfsr::Lfsr16;
+pub use xorshift::Xorshift32;
+
+/// SplitMix64: seed expander (Steele et al.). Used to derive uncorrelated
+/// seeds for the many per-subsystem RNG instances from one CLI seed.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Non-zero 32-bit seed (xorshift/LFSR must never be seeded with 0).
+    pub fn next_seed32(&mut self) -> u32 {
+        loop {
+            let s = (self.next_u64() >> 32) as u32;
+            if s != 0 {
+                return s;
+            }
+        }
+    }
+}
+
+/// Uniform f32 in [0, 1) from any u32 source (24-bit mantissa path,
+/// matching what a hardware comparator against an LFSR word sees).
+pub fn u32_to_unit_f32(x: u32) -> f32 {
+    (x >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+}
+
+/// Software-side Gaussian sampler (Box–Muller over a SplitMix64 stream).
+/// Used for weight init, synthetic data and device variability — never in
+/// the modeled hardware datapath.
+#[derive(Clone, Debug)]
+pub struct GaussianRng {
+    src: SplitMix64,
+    spare: Option<f32>,
+}
+
+impl GaussianRng {
+    pub fn new(seed: u64) -> Self {
+        Self { src: SplitMix64::new(seed), spare: None }
+    }
+
+    pub fn uniform(&mut self) -> f32 {
+        u32_to_unit_f32((self.src.next_u64() >> 32) as u32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f32 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f32::consts::PI * u2;
+            self.spare = Some(r * th.sin());
+            return r * th.cos();
+        }
+    }
+
+    /// Integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.src.next_u64() % n as u64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic_and_nondegenerate() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert!(xs.windows(2).all(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn seed32_never_zero() {
+        let mut s = SplitMix64::new(0);
+        for _ in 0..1000 {
+            assert_ne!(s.next_seed32(), 0);
+        }
+    }
+
+    #[test]
+    fn unit_f32_in_range() {
+        for x in [0u32, 1, u32::MAX, 0xDEAD_BEEF] {
+            let f = u32_to_unit_f32(x);
+            assert!((0.0..1.0).contains(&f), "{f}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut g = GaussianRng::new(7);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| g.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn permutation_is_a_bijection() {
+        let mut g = GaussianRng::new(3);
+        let p = g.permutation(784);
+        let mut seen = vec![false; 784];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn uniform_in_bounds() {
+        let mut g = GaussianRng::new(11);
+        for _ in 0..1000 {
+            let v = g.uniform_in(-0.5, 2.0);
+            assert!((-0.5..2.0).contains(&v));
+        }
+    }
+}

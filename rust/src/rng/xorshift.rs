@@ -1,0 +1,111 @@
+//! 32-bit xorshift — the reservoir sampler's random index source (§IV-A1).
+//!
+//! The paper selects xorshift over an LFSR *specifically* because the
+//! sampler's uniformity guarantee (every stream element equally likely to
+//! be retained) requires decorrelated, unbiased indices. This is
+//! Marsaglia's (13, 17, 5) triple — the exact "32-bit xorshift circuit"
+//! of Fig. 1 — with period 2^32 − 1 over non-zero states.
+
+/// Marsaglia xorshift32. `state` must be non-zero (zero is a fixed point).
+#[derive(Clone, Debug)]
+pub struct Xorshift32 {
+    state: u32,
+}
+
+impl Xorshift32 {
+    /// Create from a non-zero seed. A zero seed is remapped (hardware
+    /// reset value): the register is never all-zeros in the circuit.
+    pub fn new(seed: u32) -> Self {
+        Self { state: if seed == 0 { 0x1u32 } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        self.state = x;
+        x
+    }
+
+    /// The modulus unit of Fig. 1: fold the 32-bit word into `1..=i`.
+    ///
+    /// The hardware computes `(x mod i) + 1`; the tiny modulo bias
+    /// (≤ i/2^32) is part of the modeled circuit and is what the
+    /// reservoir-uniformity property test bounds.
+    #[inline]
+    pub fn next_index(&mut self, i: u32) -> u32 {
+        debug_assert!(i > 0);
+        (self.next_u32() % i) + 1
+    }
+
+    pub fn state(&self) -> u32 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut r = Xorshift32::new(0);
+        assert_ne!(r.next_u32(), 0);
+    }
+
+    #[test]
+    fn known_sequence_from_seed_1() {
+        // First outputs of Marsaglia (13,17,5) from state 1.
+        let mut r = Xorshift32::new(1);
+        assert_eq!(r.next_u32(), 270_369);
+        assert_eq!(r.next_u32(), 67_634_689);
+    }
+
+    #[test]
+    fn never_hits_zero() {
+        let mut r = Xorshift32::new(0xDEAD_BEEF);
+        for _ in 0..100_000 {
+            assert_ne!(r.next_u32(), 0);
+        }
+    }
+
+    #[test]
+    fn index_in_range() {
+        let mut r = Xorshift32::new(42);
+        for i in 1..200u32 {
+            for _ in 0..20 {
+                let j = r.next_index(i);
+                assert!((1..=i).contains(&j), "j={j} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn indices_are_roughly_uniform() {
+        // chi-square-ish sanity over 1..=16 — the property the paper buys
+        // by choosing xorshift over an LFSR.
+        let mut r = Xorshift32::new(7);
+        let mut counts = [0u32; 16];
+        let n = 160_000;
+        for _ in 0..n {
+            counts[(r.next_index(16) - 1) as usize] += 1;
+        }
+        let expect = n as f64 / 16.0;
+        for (k, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.05, "bucket {k}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn long_period_no_short_cycle() {
+        let mut r = Xorshift32::new(123);
+        let start = r.state();
+        for _ in 0..1_000_000 {
+            r.next_u32();
+            assert_ne!(r.state(), start);
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Typed façade over the per-config artifact set.
+//!
+//! `ModelBundle` owns the compiled executables of one network config and
+//! exposes the exact L2 entry-point signatures (see `model.py` for the
+//! parameter-order contract). All shape checking happens here, before
+//! anything reaches PJRT.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{Manifest, NetConfig};
+use crate::linalg::Mat;
+use crate::nn::{AdamState, DfaDeltas, MiruParams, SeqBatch};
+
+use super::executable::{
+    lit_mat, lit_scalar, lit_seq, lit_vec, mat_from, scalar_from, vec_from, Executable,
+};
+use super::Runtime;
+
+/// All compiled entry points for one `NetConfig`.
+pub struct ModelBundle {
+    pub cfg: NetConfig,
+    forward: Executable,
+    forward_hw: Executable,
+    train_dfa: Executable,
+    train_adam: Executable,
+    train_dfa_dense: Option<Executable>,
+}
+
+impl ModelBundle {
+    /// Compile every artifact of `cfg` listed in the manifest.
+    pub fn load(rt: &Runtime, manifest: &Manifest, cfg: NetConfig) -> Result<ModelBundle> {
+        ensure!(
+            manifest.configs.contains_key(cfg.name),
+            "config `{}` not present in artifact manifest — re-run `make artifacts`",
+            cfg.name
+        );
+        let get = |stem: &str| -> Result<Executable> {
+            let name = format!("{stem}_{}", cfg.name);
+            let a = manifest
+                .artifacts
+                .get(&name)
+                .with_context(|| format!("artifact `{name}` missing from manifest"))?;
+            rt.load(&manifest.artifact_path(&name)?, &name, a.nargs)
+        };
+        let train_dfa_dense =
+            if cfg.has_dense_train() { Some(get("train_dfa_dense")?) } else { None };
+        Ok(ModelBundle {
+            cfg,
+            forward: get("forward")?,
+            forward_hw: get("forward_hw")?,
+            train_dfa: get("train_dfa")?,
+            train_adam: get("train_adam")?,
+            train_dfa_dense,
+        })
+    }
+
+    fn check_params(&self, p: &MiruParams) -> Result<()> {
+        ensure!(
+            p.nx() == self.cfg.nx && p.nh() == self.cfg.nh && p.ny() == self.cfg.ny,
+            "params {}x{}x{} do not match config `{}`",
+            p.nx(),
+            p.nh(),
+            p.ny(),
+            self.cfg.name
+        );
+        Ok(())
+    }
+
+    fn param_lits(&self, p: &MiruParams) -> Result<Vec<xla::Literal>> {
+        Ok(vec![
+            lit_mat(&p.wh)?,
+            lit_mat(&p.uh)?,
+            lit_vec(&p.bh),
+            lit_mat(&p.wo)?,
+            lit_vec(&p.bo),
+        ])
+    }
+
+    fn check_batch(&self, x: &SeqBatch, want_b: usize) -> Result<()> {
+        ensure!(
+            x.b == want_b && x.nt == self.cfg.nt && x.nx == self.cfg.nx,
+            "batch [{},{},{}] does not match artifact shape [{},{},{}]",
+            x.b,
+            x.nt,
+            x.nx,
+            want_b,
+            self.cfg.nt,
+            self.cfg.nx
+        );
+        Ok(())
+    }
+
+    /// Software inference: logits [b_eval, ny].
+    pub fn eval_logits(&self, p: &MiruParams, x: &SeqBatch, lam: f32, beta: f32) -> Result<Mat> {
+        self.check_params(p)?;
+        self.check_batch(x, self.cfg.b_eval)?;
+        let mut args = self.param_lits(p)?;
+        args.push(lit_scalar(lam));
+        args.push(lit_scalar(beta));
+        args.push(lit_seq(x)?);
+        let out = self.forward.run(&args)?;
+        mat_from(&out[0], self.cfg.b_eval, self.cfg.ny)
+    }
+
+    /// Mixed-signal inference through the WBS/ADC datapath. The params
+    /// should be the *device-perturbed* weights from `device::crossbar`.
+    pub fn eval_logits_hw(
+        &self,
+        p: &MiruParams,
+        x: &SeqBatch,
+        lam: f32,
+        beta: f32,
+        vscale_h: f32,
+        vscale_o: f32,
+    ) -> Result<Mat> {
+        self.check_params(p)?;
+        self.check_batch(x, self.cfg.b_eval)?;
+        let mut args = self.param_lits(p)?;
+        args.push(lit_scalar(lam));
+        args.push(lit_scalar(beta));
+        args.push(lit_scalar(vscale_h));
+        args.push(lit_scalar(vscale_o));
+        args.push(lit_seq(x)?);
+        let out = self.forward_hw.run(&args)?;
+        mat_from(&out[0], self.cfg.b_eval, self.cfg.ny)
+    }
+
+    fn run_dfa(
+        &self,
+        exe: &Executable,
+        p: &MiruParams,
+        x: &SeqBatch,
+        lam: f32,
+        beta: f32,
+        lr: f32,
+        psi: &Mat,
+    ) -> Result<DfaDeltas> {
+        self.check_params(p)?;
+        self.check_batch(x, self.cfg.b_train)?;
+        ensure!(
+            psi.rows == self.cfg.ny && psi.cols == self.cfg.nh,
+            "psi shape {}x{} != {}x{}",
+            psi.rows,
+            psi.cols,
+            self.cfg.ny,
+            self.cfg.nh
+        );
+        let mut args = self.param_lits(p)?;
+        args.push(lit_scalar(lam));
+        args.push(lit_scalar(beta));
+        args.push(lit_scalar(lr));
+        args.push(lit_mat(psi)?);
+        args.push(lit_seq(x)?);
+        args.push(lit_mat(&x.one_hot(self.cfg.ny))?);
+        let out = exe.run(&args)?;
+        Ok(DfaDeltas {
+            d_wh: mat_from(&out[0], self.cfg.nx, self.cfg.nh)?,
+            d_uh: mat_from(&out[1], self.cfg.nh, self.cfg.nh)?,
+            d_bh: vec_from(&out[2], self.cfg.nh)?,
+            d_wo: mat_from(&out[3], self.cfg.nh, self.cfg.ny)?,
+            d_bo: vec_from(&out[4], self.cfg.ny)?,
+            loss: scalar_from(&out[5])?,
+        })
+    }
+
+    /// One DFA step with ζ-sparsified deltas (Algorithm 1).
+    pub fn train_step_dfa(
+        &self,
+        p: &MiruParams,
+        x: &SeqBatch,
+        lam: f32,
+        beta: f32,
+        lr: f32,
+        psi: &Mat,
+    ) -> Result<DfaDeltas> {
+        self.run_dfa(&self.train_dfa, p, x, lam, beta, lr, psi)
+    }
+
+    /// Dense (no-ζ) DFA step — Fig. 5(b) baseline; only selected configs.
+    pub fn train_step_dfa_dense(
+        &self,
+        p: &MiruParams,
+        x: &SeqBatch,
+        lam: f32,
+        beta: f32,
+        lr: f32,
+        psi: &Mat,
+    ) -> Result<DfaDeltas> {
+        let exe = self
+            .train_dfa_dense
+            .as_ref()
+            .with_context(|| format!("config `{}` has no dense train artifact", self.cfg.name))?;
+        self.run_dfa(exe, p, x, lam, beta, lr, psi)
+    }
+
+    /// One BPTT+Adam step; updates `p` and `st` in place, returns the loss.
+    pub fn train_step_adam(
+        &self,
+        p: &mut MiruParams,
+        st: &mut AdamState,
+        x: &SeqBatch,
+        lam: f32,
+        beta: f32,
+        lr: f32,
+    ) -> Result<f32> {
+        self.check_params(p)?;
+        self.check_batch(x, self.cfg.b_train)?;
+        ensure!(st.m.len() == self.cfg.param_count(), "adam state size mismatch");
+        let mut args = self.param_lits(p)?;
+        args.push(lit_vec(&st.m));
+        args.push(lit_vec(&st.v));
+        args.push(lit_scalar(st.t));
+        args.push(lit_scalar(lam));
+        args.push(lit_scalar(beta));
+        args.push(lit_scalar(lr));
+        args.push(lit_seq(x)?);
+        args.push(lit_mat(&x.one_hot(self.cfg.ny))?);
+        let out = self.train_adam.run(&args)?;
+        p.wh = mat_from(&out[0], self.cfg.nx, self.cfg.nh)?;
+        p.uh = mat_from(&out[1], self.cfg.nh, self.cfg.nh)?;
+        p.bh = vec_from(&out[2], self.cfg.nh)?;
+        p.wo = mat_from(&out[3], self.cfg.nh, self.cfg.ny)?;
+        p.bo = vec_from(&out[4], self.cfg.ny)?;
+        st.m = vec_from(&out[5], self.cfg.param_count())?;
+        st.v = vec_from(&out[6], self.cfg.param_count())?;
+        st.t = scalar_from(&out[7])?;
+        scalar_from(&out[8])
+    }
+}

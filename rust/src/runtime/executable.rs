@@ -1,0 +1,96 @@
+//! One compiled HLO computation plus the host↔device literal plumbing.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::linalg::Mat;
+use crate::nn::SeqBatch;
+
+/// A compiled AOT artifact. All artifacts are lowered with
+/// `return_tuple=True`, so every execution returns a tuple literal that we
+/// immediately unpack.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub nargs: usize,
+}
+
+impl Executable {
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        name: &str,
+        nargs: usize,
+    ) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{name}`"))?;
+        Ok(Executable { exe, name: name.to_string(), nargs })
+    }
+
+    /// Execute with positional literal args; unpack the result tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        ensure!(
+            args.len() == self.nargs,
+            "artifact `{}` expects {} args, got {}",
+            self.name,
+            self.nargs,
+            args.len()
+        );
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing `{}`", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of `{}`", self.name))?;
+        lit.to_tuple().with_context(|| format!("unpacking result tuple of `{}`", self.name))
+    }
+}
+
+// ---- host <-> literal conversions ----------------------------------------
+
+/// Rank-0 f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// Rank-1 f32 literal.
+pub fn lit_vec(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Rank-2 f32 literal from a row-major matrix.
+pub fn lit_mat(m: &Mat) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+/// Rank-3 f32 literal [b, nt, nx] from a sequence batch.
+pub fn lit_seq(x: &SeqBatch) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&x.data).reshape(&[x.b as i64, x.nt as i64, x.nx as i64])?)
+}
+
+/// Read a rank-2 literal back into a matrix of known shape.
+pub fn mat_from(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let data = lit.to_vec::<f32>()?;
+    ensure!(data.len() == rows * cols, "literal size {} != {rows}x{cols}", data.len());
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Read a rank-1 literal back.
+pub fn vec_from(lit: &xla::Literal, len: usize) -> Result<Vec<f32>> {
+    let data = lit.to_vec::<f32>()?;
+    ensure!(data.len() == len, "literal size {} != {len}", data.len());
+    Ok(data)
+}
+
+/// Read a rank-0 literal back.
+pub fn scalar_from(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.to_vec::<f32>()?[0])
+}

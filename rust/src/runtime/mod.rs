@@ -1,0 +1,67 @@
+//! PJRT runtime — loads the AOT artifacts and executes them on the hot
+//! path. Python is build-time only; after `make artifacts` this module is
+//! the only thing that touches the compute graphs.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file` → compile
+//! on the CPU PJRT client): jax ≥ 0.5 emits serialized protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and `aot.py`).
+
+mod artifacts;
+mod executable;
+
+pub use artifacts::ModelBundle;
+pub use executable::Executable;
+
+/// §Perf probe: build every host literal one DFA train step needs (params,
+/// scalars, Ψ, batch, one-hot labels) without executing. Benchmarked to
+/// bound the coordinator's share of the step.
+pub fn host_overhead_probe(
+    p: &crate::nn::MiruParams,
+    psi: &crate::linalg::Mat,
+    x: &crate::nn::SeqBatch,
+) -> Result<usize> {
+    use executable::{lit_mat, lit_scalar, lit_seq, lit_vec};
+    let lits = [
+        lit_mat(&p.wh)?,
+        lit_mat(&p.uh)?,
+        lit_vec(&p.bh),
+        lit_mat(&p.wo)?,
+        lit_vec(&p.bo),
+        lit_scalar(0.9),
+        lit_scalar(0.3),
+        lit_scalar(0.3),
+        lit_mat(psi)?,
+        lit_seq(x)?,
+        lit_mat(&x.one_hot(p.ny()))?,
+    ];
+    Ok(lits.len())
+}
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT CPU client. One per process; executables borrow it via the
+/// xla crate's internal refcount.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(&self, path: &std::path::Path, name: &str, nargs: usize) -> Result<Executable> {
+        Executable::load(&self.client, path, name, nargs)
+    }
+}

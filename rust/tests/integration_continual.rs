@@ -1,0 +1,100 @@
+//! End-to-end continual-learning behaviour through the XLA engines:
+//! replay vs catastrophic forgetting, hardware-vs-software gap, and the
+//! full trainer/batcher/replay pipeline. Scaled-down workloads (wallclock)
+//! but the same code paths as the paper experiments. Requires artifacts.
+
+use m2ru::config::{Manifest, NetConfig, RunConfig};
+use m2ru::coordinator::{ContinualTrainer, HardwareEngine, XlaDfaEngine};
+use m2ru::data::permuted_task_stream;
+use m2ru::device::DeviceParams;
+use m2ru::runtime::{ModelBundle, Runtime};
+
+fn quick_run() -> RunConfig {
+    RunConfig {
+        num_tasks: 2,
+        train_per_task: 320,
+        test_per_task: 80,
+        epochs: 4,
+        replay_per_task: 160,
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn replay_prevents_catastrophic_forgetting_xla() {
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
+    let cfg = NetConfig::PMNIST100;
+    let bundle = ModelBundle::load(&rt, &manifest, cfg).unwrap();
+    let run = quick_run();
+    let stream =
+        permuted_task_stream(run.num_tasks, run.train_per_task, run.test_per_task, run.seed);
+
+    let go = |replay: bool| {
+        let mut eng = XlaDfaEngine::new(&bundle, run.lam, run.beta, run.lr, run.seed);
+        let mut tr = ContinualTrainer::new(
+            &stream,
+            RunConfig { replay, ..run.clone() },
+            cfg.b_train,
+            cfg.b_eval,
+        );
+        let res = tr.run_all(&mut eng).unwrap();
+        (res.last().unwrap().mean_acc, tr.matrix.forgetting(), tr.matrix.r[0][0])
+    };
+
+    let (ma_replay, forget_replay, first_acc) = go(true);
+    let (ma_none, forget_none, _) = go(false);
+
+    assert!(first_acc > 0.5, "task 1 must learn: {first_acc}");
+    assert!(forget_replay < forget_none, "replay {forget_replay} vs none {forget_none}");
+    assert!(ma_replay > ma_none, "MA replay {ma_replay} vs none {ma_none}");
+}
+
+#[test]
+fn hardware_engine_stays_within_gap_of_software() {
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
+    let cfg = NetConfig::PMNIST100;
+    let bundle = ModelBundle::load(&rt, &manifest, cfg).unwrap();
+    let run = RunConfig { num_tasks: 1, epochs: 4, train_per_task: 300, test_per_task: 100, ..quick_run() };
+    let stream =
+        permuted_task_stream(run.num_tasks, run.train_per_task, run.test_per_task, run.seed);
+
+    let mut sw = XlaDfaEngine::new(&bundle, run.lam, run.beta, run.lr, run.seed);
+    let mut tr_sw = ContinualTrainer::new(&stream, run.clone(), cfg.b_train, cfg.b_eval);
+    tr_sw.run_all(&mut sw).unwrap();
+    let ma_sw = tr_sw.matrix.mean_final();
+
+    let mut hw =
+        HardwareEngine::new(&bundle, run.lam, run.beta, run.lr, DeviceParams::default(), run.seed);
+    let mut tr_hw = ContinualTrainer::new(&stream, run.clone(), cfg.b_train, cfg.b_eval);
+    tr_hw.run_all(&mut hw).unwrap();
+    let ma_hw = tr_hw.matrix.mean_final();
+
+    assert!(ma_sw > 0.5, "software must learn: {ma_sw}");
+    // the paper's nonideality gap is ~5%; allow slack on the short run
+    assert!(ma_sw - ma_hw < 0.15, "hw gap too large: sw {ma_sw} hw {ma_hw}");
+    // device writes must have been sparsified by ζ: strictly fewer writes
+    // than devices*steps
+    let steps = hw.programmer.steps;
+    assert!(hw.programmer.total.writes < hw.write_counts().len() as u64 * steps / 2);
+}
+
+#[test]
+fn replay_buffer_fills_to_capacity_during_training() {
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
+    let cfg = NetConfig::PMNIST100;
+    let bundle = ModelBundle::load(&rt, &manifest, cfg).unwrap();
+    let run = RunConfig { num_tasks: 2, epochs: 1, ..quick_run() };
+    let stream =
+        permuted_task_stream(run.num_tasks, run.train_per_task, run.test_per_task, run.seed);
+    let mut eng = XlaDfaEngine::new(&bundle, run.lam, run.beta, run.lr, run.seed);
+    let mut tr = ContinualTrainer::new(&stream, run.clone(), cfg.b_train, cfg.b_eval);
+    tr.run_all(&mut eng).unwrap();
+    let buf = tr.buffer.as_ref().unwrap();
+    assert_eq!(buf.num_tasks(), 2);
+    assert_eq!(buf.stored_examples(), 2 * run.replay_per_task.min(run.train_per_task));
+    // 4-bit packing: bytes = examples * 784/2
+    assert_eq!(buf.stored_bytes(), buf.stored_examples() * 392);
+}

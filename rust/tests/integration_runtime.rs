@@ -1,0 +1,202 @@
+//! Cross-layer numerical contract: the AOT artifacts (JAX/Pallas → HLO →
+//! PJRT) must agree with the pure-rust oracles on the same inputs.
+//! Requires `make artifacts`.
+
+use m2ru::config::{Manifest, NetConfig};
+use m2ru::nn::{bptt_grads, dfa_grads, make_psi, AdamState, MiruParams, SeqBatch};
+use m2ru::rng::GaussianRng;
+use m2ru::runtime::{ModelBundle, Runtime};
+
+fn toy_batch(cfg: &NetConfig, b: usize, seed: u64) -> SeqBatch {
+    let mut proto_rng = GaussianRng::new(99);
+    let protos: Vec<Vec<f32>> =
+        (0..cfg.ny).map(|_| (0..cfg.nx).map(|_| proto_rng.normal()).collect()).collect();
+    let mut rng = GaussianRng::new(seed);
+    let mut sb = SeqBatch::zeros(b, cfg.nt, cfg.nx);
+    for i in 0..b {
+        let label = rng.below(cfg.ny);
+        sb.labels[i] = label;
+        for t in 0..cfg.nt {
+            for j in 0..cfg.nx {
+                sb.sample_mut(i)[t * cfg.nx + j] =
+                    (0.25 * rng.normal() + 0.75 * protos[label][j]).clamp(-1.0, 1.0);
+            }
+        }
+    }
+    sb
+}
+
+struct Ctx {
+    bundle: ModelBundle,
+    cfg: NetConfig,
+}
+
+fn ctx() -> Ctx {
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
+    let cfg = NetConfig::SMALL;
+    let bundle = ModelBundle::load(&rt, &manifest, cfg).expect("loading small bundle");
+    Ctx { bundle, cfg }
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol + tol * x.abs().max(y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn manifest_covers_all_configs_and_files() {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
+    for cfg in NetConfig::ALL {
+        assert!(manifest.configs.contains_key(cfg.name), "{} in manifest", cfg.name);
+        let expected = if cfg.has_dense_train() { 5 } else { 4 };
+        assert_eq!(manifest.artifacts_for(cfg.name).len(), expected, "{}", cfg.name);
+    }
+}
+
+#[test]
+fn xla_forward_matches_rust_forward() {
+    let c = ctx();
+    let p = MiruParams::init(c.cfg.nx, c.cfg.nh, c.cfg.ny, 3);
+    let x = toy_batch(&c.cfg, c.cfg.b_eval, 5);
+    let (lam, beta) = (0.7, 0.4);
+    let xla = c.bundle.eval_logits(&p, &x, lam, beta).unwrap();
+    let rust = p.forward(&x, lam, beta);
+    assert_close(&xla.data, &rust.data, 1e-4, "forward logits");
+}
+
+#[test]
+fn xla_dfa_deltas_match_rust_oracle() {
+    let c = ctx();
+    let p = MiruParams::init(c.cfg.nx, c.cfg.nh, c.cfg.ny, 7);
+    let psi = make_psi(c.cfg.ny, c.cfg.nh, 11);
+    let x = toy_batch(&c.cfg, c.cfg.b_train, 9);
+    let (lam, beta, lr) = (0.5, 0.7, 0.25);
+    let xla = c.bundle.train_step_dfa(&p, &x, lam, beta, lr, &psi).unwrap();
+    let rust = dfa_grads(&p, &x, lam, beta, lr, &psi, Some(c.cfg.keep_frac));
+    assert!((xla.loss - rust.loss).abs() < 1e-4, "{} vs {}", xla.loss, rust.loss);
+    assert_close(&xla.d_wh.data, &rust.d_wh.data, 2e-4, "d_wh");
+    assert_close(&xla.d_uh.data, &rust.d_uh.data, 2e-4, "d_uh");
+    assert_close(&xla.d_wo.data, &rust.d_wo.data, 2e-4, "d_wo");
+    assert_close(&xla.d_bh, &rust.d_bh, 2e-4, "d_bh");
+    assert_close(&xla.d_bo, &rust.d_bo, 2e-4, "d_bo");
+    // ζ sparsity: the same entries survive
+    let nz_x = xla.d_wh.data.iter().filter(|v| **v != 0.0).count();
+    let nz_r = rust.d_wh.data.iter().filter(|v| **v != 0.0).count();
+    assert_eq!(nz_x, nz_r, "surviving entries after ζ");
+}
+
+#[test]
+fn xla_dense_dfa_matches_rust_dense() {
+    let c = ctx();
+    let p = MiruParams::init(c.cfg.nx, c.cfg.nh, c.cfg.ny, 13);
+    let psi = make_psi(c.cfg.ny, c.cfg.nh, 17);
+    let x = toy_batch(&c.cfg, c.cfg.b_train, 19);
+    let xla = c.bundle.train_step_dfa_dense(&p, &x, 0.6, 0.5, 0.1, &psi).unwrap();
+    let rust = dfa_grads(&p, &x, 0.6, 0.5, 0.1, &psi, None);
+    assert_close(&xla.d_wh.data, &rust.d_wh.data, 2e-4, "dense d_wh");
+    assert_eq!(xla.d_uh.data.iter().filter(|v| **v != 0.0).count() > 0, true);
+}
+
+#[test]
+fn xla_adam_step_matches_rust_adam() {
+    let c = ctx();
+    let mut p_xla = MiruParams::init(c.cfg.nx, c.cfg.nh, c.cfg.ny, 23);
+    let mut p_rust = p_xla.clone();
+    let mut st_xla = AdamState::new(p_xla.count());
+    let mut st_rust = AdamState::new(p_rust.count());
+    let (lam, beta, lr) = (0.5, 0.7, 0.01);
+    for seed in 0..3 {
+        let x = toy_batch(&c.cfg, c.cfg.b_train, 100 + seed);
+        let loss_xla = c
+            .bundle
+            .train_step_adam(&mut p_xla, &mut st_xla, &x, lam, beta, lr)
+            .unwrap();
+        let (g, loss_rust) = bptt_grads(&p_rust, &x, lam, beta);
+        let upd = st_rust.step(&g, lr);
+        p_rust.apply_flat_update(&upd);
+        assert!((loss_xla - loss_rust).abs() < 1e-4, "step {seed}: {loss_xla} vs {loss_rust}");
+    }
+    assert_close(&p_xla.wh.data, &p_rust.wh.data, 5e-4, "adam wh after 3 steps");
+    assert_close(&p_xla.wo.data, &p_rust.wo.data, 5e-4, "adam wo after 3 steps");
+    assert_eq!(st_xla.t, 3.0);
+}
+
+#[test]
+fn hw_forward_tracks_sw_forward() {
+    let c = ctx();
+    let p = MiruParams::init(c.cfg.nx, c.cfg.nh, c.cfg.ny, 29);
+    let x = toy_batch(&c.cfg, c.cfg.b_eval, 31);
+    let (lam, beta) = (0.5, 0.7);
+    let sw = c.bundle.eval_logits(&p, &x, lam, beta).unwrap();
+    let hw = c.bundle.eval_logits_hw(&p, &x, lam, beta, 4.0, 4.0).unwrap();
+    // 8-bit WBS + 8-bit ADC: same argmax on >90% of rows
+    let agree = sw
+        .data
+        .chunks(c.cfg.ny)
+        .zip(hw.data.chunks(c.cfg.ny))
+        .filter(|(a, b)| {
+            let am = a.iter().enumerate().max_by(|x, y| x.1.partial_cmp(y.1).unwrap()).unwrap().0;
+            let bm = b.iter().enumerate().max_by(|x, y| x.1.partial_cmp(y.1).unwrap()).unwrap().0;
+            am == bm
+        })
+        .count();
+    // untrained params give near-tie logits; ADC quantization may flip a
+    // couple of rows in a 16-row batch — require 80% plus tight numerics
+    assert!(agree as f32 / c.cfg.b_eval as f32 >= 0.8, "argmax agreement {agree}/{}", c.cfg.b_eval);
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (a, b) in sw.data.iter().zip(&hw.data) {
+        dot += f64::from(a * b);
+        na += f64::from(a * a);
+        nb += f64::from(b * b);
+    }
+    let corr = dot / (na.sqrt() * nb.sqrt());
+    assert!(corr > 0.97, "logit correlation {corr}");
+}
+
+#[test]
+fn shape_mismatches_are_rejected() {
+    let c = ctx();
+    let p = MiruParams::init(c.cfg.nx, c.cfg.nh, c.cfg.ny, 1);
+    // wrong batch size
+    let x = toy_batch(&c.cfg, 3, 1);
+    assert!(c.bundle.eval_logits(&p, &x, 0.5, 0.5).is_err());
+    // wrong params
+    let p_bad = MiruParams::init(c.cfg.nx + 1, c.cfg.nh, c.cfg.ny, 1);
+    let x_ok = toy_batch(&c.cfg, c.cfg.b_eval, 1);
+    assert!(c.bundle.eval_logits(&p_bad, &x_ok, 0.5, 0.5).is_err());
+}
+
+#[test]
+fn cifar_bundle_loads_and_runs() {
+    // a second geometry (32×…×2, nT=16) through the same loader path
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
+    let cfg = NetConfig::CIFAR100;
+    let bundle = ModelBundle::load(&rt, &manifest, cfg).unwrap();
+    let p = MiruParams::init(cfg.nx, cfg.nh, cfg.ny, 1);
+    let x = toy_batch(&cfg, cfg.b_eval, 2);
+    let logits = bundle.eval_logits(&p, &x, 0.96, 0.3).unwrap();
+    assert_eq!((logits.rows, logits.cols), (cfg.b_eval, cfg.ny));
+    let rust = p.forward(&x, 0.96, 0.3);
+    assert_close(&logits.data, &rust.data, 1e-4, "cifar forward");
+    // dense train artifact must NOT exist for this config
+    assert!(bundle
+        .train_step_dfa_dense(&p, &toy_batch(&cfg, cfg.b_train, 3), 0.9, 0.3, 0.1, &make_psi(cfg.ny, cfg.nh, 4))
+        .is_err());
+}
+
+#[test]
+fn executions_are_deterministic() {
+    let c = ctx();
+    let p = MiruParams::init(c.cfg.nx, c.cfg.nh, c.cfg.ny, 37);
+    let x = toy_batch(&c.cfg, c.cfg.b_eval, 41);
+    let a = c.bundle.eval_logits(&p, &x, 0.5, 0.7).unwrap();
+    let b = c.bundle.eval_logits(&p, &x, 0.5, 0.7).unwrap();
+    assert_eq!(a.data, b.data);
+}

@@ -1,0 +1,277 @@
+//! Property-based tests on coordinator invariants, via the in-tree
+//! `proptest` mini-framework (seeded generators + shrinking).
+
+use m2ru::coordinator::{make_eval_batches, make_seq_batch, TileScheduler, TrainBatcher};
+use m2ru::data::Example;
+use m2ru::linalg::Mat;
+use m2ru::nn::{kwta_inplace, kwta_keep_count};
+use m2ru::proptest::{assert_prop, F32In, Pair, UsizeIn, VecF32};
+use m2ru::quant::{dequantize, stochastic_round, uniform_truncate, StochasticQuantizer};
+use m2ru::replay::{ReplayBuffer, ReservoirDecision, ReservoirSampler};
+use m2ru::rng::GaussianRng;
+
+// --- replay / reservoir ----------------------------------------------------
+
+#[test]
+fn prop_reservoir_slots_always_in_capacity() {
+    // ∀ (k, stream length): every Store decision targets a slot < k.
+    assert_prop(1, 60, &Pair(UsizeIn(1, 64), UsizeIn(1, 2000)), |&(k, n)| {
+        let mut s = ReservoirSampler::new(k, (k * 31 + n) as u32 | 1);
+        for _ in 0..n {
+            if let ReservoirDecision::Store(j) = s.offer() {
+                if j >= k {
+                    return Err(format!("slot {j} >= k {k}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reservoir_first_k_always_stored_in_order() {
+    assert_prop(2, 60, &UsizeIn(1, 128), |&k| {
+        let mut s = ReservoirSampler::new(k, 7);
+        for i in 0..k {
+            match s.offer() {
+                ReservoirDecision::Store(j) if j == i => {}
+                other => return Err(format!("offer {i}: {other:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_buffer_never_exceeds_capacity() {
+    assert_prop(3, 30, &Pair(UsizeIn(1, 32), UsizeIn(1, 300)), |&(cap, n)| {
+        let mut buf = ReplayBuffer::new(cap, 0.0, 1.0, 99);
+        buf.begin_task();
+        for i in 0..n {
+            buf.offer(&Example { features: vec![0.5; 8], label: i % 3 });
+        }
+        if buf.stored_examples() > cap.min(n) {
+            return Err(format!("stored {} > cap {cap}", buf.stored_examples()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_roundtrip_error_bounded_by_lsb() {
+    // ∀ features in [0,1): store→sample error ≤ 1 LSB of 4-bit codes.
+    let gen = VecF32 { max_len: 64, lo: 0.0, hi: 0.999 };
+    assert_prop(4, 40, &gen, |v| {
+        let mut buf = ReplayBuffer::new(4, 0.0, 1.0, 5);
+        buf.begin_task();
+        for _ in 0..4 {
+            buf.offer(&Example { features: v.clone(), label: 1 });
+        }
+        buf.begin_task();
+        let mut rng = GaussianRng::new(0);
+        let got = buf.sample_past(1, &mut rng);
+        let e = &got[0];
+        for (a, b) in e.features.iter().zip(v) {
+            if (a - b).abs() > 1.0 / 16.0 + 1e-5 {
+                return Err(format!("roundtrip err {} vs {}", a, b));
+            }
+        }
+        Ok(())
+    });
+}
+
+// --- quantization ------------------------------------------------------------
+
+#[test]
+fn prop_stochastic_round_brackets_value() {
+    // q is always floor(z) or floor(z)+1 and within the code range.
+    let gen = Pair(F32In(0.0, 0.999), Pair(F32In(0.0, 1.0), UsizeIn(1, 8)));
+    assert_prop(5, 300, &gen, |&(x, (r, nb))| {
+        let nb = nb as u32;
+        let q = stochastic_round(x, r, nb);
+        let z = x * (1u32 << nb) as f32;
+        let fl = z.floor() as i64;
+        if i64::from(q) != fl && i64::from(q) != fl + 1 {
+            return Err(format!("q={q} z={z}"));
+        }
+        if u32::from(q) > (1u32 << nb) - 1 {
+            return Err(format!("q={q} out of range"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncation_never_rounds_up() {
+    let gen = Pair(F32In(0.0, 0.999), UsizeIn(1, 8));
+    assert_prop(6, 300, &gen, |&(x, nb)| {
+        let nb = nb as u32;
+        let q = dequantize(uniform_truncate(x, nb), nb);
+        if q > x + 1e-6 {
+            return Err(format!("truncation rounded up: {q} > {x}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantizer_vec_matches_scalar_path() {
+    let gen = VecF32 { max_len: 32, lo: 0.0, hi: 0.999 };
+    assert_prop(7, 50, &gen, |v| {
+        let mut q1 = StochasticQuantizer::new(0x1234, 4);
+        let mut q2 = StochasticQuantizer::new(0x1234, 4);
+        let a = q1.quantize_vec(v);
+        let b: Vec<u8> = v.iter().map(|&x| q2.quantize(x)).collect();
+        if a != b {
+            return Err("vec path diverged from scalar path".into());
+        }
+        Ok(())
+    });
+}
+
+// --- K-WTA ζ -----------------------------------------------------------------
+
+#[test]
+fn prop_kwta_survivor_count_and_magnitudes() {
+    let gen = Pair(UsizeIn(1, 400), F32In(0.05, 1.0));
+    assert_prop(8, 60, &gen, |&(n, keep)| {
+        let mut rng = GaussianRng::new(n as u64);
+        let mut g = Mat::from_fn(1, n, |_, _| rng.normal());
+        let orig = g.clone();
+        let survived = kwta_inplace(&mut g, keep);
+        let want = kwta_keep_count(n, keep);
+        // distinct gaussian values: survivor count == keep count
+        if survived != want {
+            return Err(format!("survived {survived} != keep {want}"));
+        }
+        // every survivor ≥ every casualty (by |.|)
+        let min_kept = g.data.iter().filter(|v| **v != 0.0).map(|v| v.abs()).fold(f32::MAX, f32::min);
+        for (a, b) in g.data.iter().zip(&orig.data) {
+            if *a == 0.0 && b.abs() > min_kept {
+                return Err(format!("dropped {} but kept {}", b, min_kept));
+            }
+        }
+        Ok(())
+    });
+}
+
+// --- batcher -----------------------------------------------------------------
+
+#[test]
+fn prop_seq_batch_always_full_and_labels_preserved() {
+    let gen = Pair(UsizeIn(1, 40), UsizeIn(1, 64));
+    assert_prop(9, 50, &gen, |&(n_ex, b)| {
+        let nt = 3;
+        let nx = 4;
+        let examples: Vec<Example> = (0..n_ex)
+            .map(|i| Example { features: vec![i as f32; nt * nx], label: i % 5 })
+            .collect();
+        let refs: Vec<&Example> = examples.iter().collect();
+        let sb = make_seq_batch(&refs, b, nt, nx);
+        if sb.b != b {
+            return Err("batch not full".into());
+        }
+        for i in 0..b {
+            let want = &examples[i % n_ex];
+            if sb.labels[i] != want.label || sb.sample(i)[0] != want.features[0] {
+                return Err(format!("row {i} mismatched"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eval_batches_partition_exactly() {
+    let gen = Pair(UsizeIn(1, 300), UsizeIn(1, 64));
+    assert_prop(10, 50, &gen, |&(n, b)| {
+        let examples: Vec<Example> =
+            (0..n).map(|i| Example { features: vec![0.0; 6], label: i % 2 }).collect();
+        let batches = make_eval_batches(&examples, b, 2, 3);
+        let total: usize = batches.iter().map(|(_, v)| v).sum();
+        if total != n {
+            return Err(format!("covered {total} != {n}"));
+        }
+        for (sb, valid) in &batches {
+            if sb.b != b || *valid > b {
+                return Err("bad batch geometry".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_epoch_batches_cover_every_fresh_example() {
+    let gen = Pair(UsizeIn(1, 100), UsizeIn(2, 32));
+    assert_prop(11, 30, &gen, |&(n, b)| {
+        let nt = 2;
+        let nx = 3;
+        let examples: Vec<Example> = (0..n)
+            .map(|i| Example { features: vec![i as f32 + 1.0; nt * nx], label: 0 })
+            .collect();
+        let mut tb = TrainBatcher::new(b, nt, nx, 0.0, 1);
+        let batches = tb.epoch_batches(&examples, None);
+        let mut seen: Vec<bool> = vec![false; n + 1];
+        for sb in &batches {
+            for i in 0..sb.b {
+                let v = sb.sample(i)[0] as usize;
+                if v >= 1 && v <= n {
+                    seen[v] = true;
+                }
+            }
+        }
+        if !seen[1..].iter().all(|&s| s) {
+            return Err("an example never appeared in the epoch".into());
+        }
+        Ok(())
+    });
+}
+
+// --- tile scheduler ----------------------------------------------------------
+
+#[test]
+fn prop_tile_scheduler_covers_each_unit_once() {
+    let gen = Pair(UsizeIn(1, 600), UsizeIn(1, 32));
+    assert_prop(12, 80, &gen, |&(nh, tiles)| {
+        let s = TileScheduler::new(nh, tiles);
+        let mut seen = vec![0u32; nh];
+        for row in &s.plan {
+            for &slot in row {
+                if let Some(u) = slot {
+                    if u >= nh {
+                        return Err(format!("unit {u} out of range"));
+                    }
+                    seen[u] += 1;
+                }
+            }
+        }
+        if seen.iter().any(|&c| c != 1) {
+            return Err(format!("coverage {seen:?}"));
+        }
+        if s.cycles() != nh.div_ceil(tiles) {
+            return Err(format!("cycles {} != ceil({nh}/{tiles})", s.cycles()));
+        }
+        Ok(())
+    });
+}
+
+// --- linalg ------------------------------------------------------------------
+
+#[test]
+fn prop_matmul_tn_equals_explicit_transpose() {
+    let gen = Pair(UsizeIn(1, 12), Pair(UsizeIn(1, 12), UsizeIn(1, 12)));
+    assert_prop(13, 60, &gen, |&(k, (m, n))| {
+        let mut rng = GaussianRng::new((k * 1000 + m * 10 + n) as u64);
+        let a = Mat::from_fn(k, m, |_, _| rng.normal());
+        let b = Mat::from_fn(k, n, |_, _| rng.normal());
+        let fast = a.matmul_tn(&b);
+        let slow = a.transpose().matmul(&b);
+        for (x, y) in fast.data.iter().zip(&slow.data) {
+            if (x - y).abs() > 1e-4 {
+                return Err(format!("{x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
