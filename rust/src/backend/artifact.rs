@@ -1,0 +1,148 @@
+//! Artifact backend — the AOT-compiled XLA path through the PJRT runtime.
+//!
+//! Wraps [`crate::runtime::ModelBundle`]: forward and train steps execute
+//! the HLO artifacts lowered by `python/compile/aot.py`. Construction
+//! fails gracefully (factory returns an error) when the artifacts are
+//! missing or when the build links the offline `xla` stub
+//! (`vendor/xla-stub`) instead of a real PJRT client — the registry
+//! surfaces that error to the CLI instead of crashing.
+//!
+//! The artifacts are lowered with static batch shapes, so this backend
+//! reports [`ComputeBackend::prefers_whole_batch`] and the parallel
+//! engine never row-shards it.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Manifest;
+use crate::linalg::Mat;
+use crate::nn::{dfa_grads, make_psi, AdamState, DfaDeltas, MiruParams, SeqBatch};
+use crate::runtime::{ModelBundle, Runtime};
+
+use super::{BackendCtx, ComputeBackend, LayerSel, TrainHyper};
+
+/// PJRT-executed backend over one config's artifact set.
+pub struct ArtifactBackend {
+    bundle: ModelBundle,
+    params: MiruParams,
+    psi: Mat,
+    adam: AdamState,
+    hyper: TrainHyper,
+    /// Keeps the PJRT client alive for the executables.
+    _rt: Runtime,
+}
+
+impl ArtifactBackend {
+    pub fn new(ctx: &BackendCtx) -> Result<ArtifactBackend> {
+        let rt = Runtime::cpu().context("creating PJRT client for the artifact backend")?;
+        let manifest = Manifest::load(&ctx.artifacts_dir)
+            .context("artifact backend needs `make artifacts`")?;
+        let bundle = ModelBundle::load(&rt, &manifest, ctx.net)?;
+        let c = ctx.net;
+        let params = MiruParams::init(c.nx, c.nh, c.ny, ctx.seed);
+        let n = params.count();
+        Ok(ArtifactBackend {
+            bundle,
+            params,
+            psi: make_psi(c.ny, c.nh, ctx.seed ^ 0xD0F4),
+            adam: AdamState::new(n),
+            hyper: TrainHyper {
+                lam: ctx.lam,
+                beta: ctx.beta,
+                lr: ctx.lr,
+                keep_frac: ctx.keep_frac,
+            },
+            _rt: rt,
+        })
+    }
+
+    /// Registry factory.
+    pub fn factory(ctx: &BackendCtx) -> Result<Box<dyn ComputeBackend>> {
+        Ok(Box::new(ArtifactBackend::new(ctx)?))
+    }
+}
+
+impl ComputeBackend for ArtifactBackend {
+    fn name(&self) -> &'static str {
+        "artifact"
+    }
+
+    fn hyper(&self) -> TrainHyper {
+        self.hyper
+    }
+
+    fn effective_params(&self) -> MiruParams {
+        self.params.clone()
+    }
+
+    fn forward(&self, x: &SeqBatch) -> Result<Mat> {
+        // shape checking (b == b_eval) happens inside the bundle
+        self.bundle.eval_logits(&self.params, x, self.hyper.lam, self.hyper.beta)
+    }
+
+    fn vmm(&self, x: &Mat, layer: LayerSel) -> Result<Mat> {
+        // no standalone VMM artifact is lowered; the software semantics of
+        // the artifact graphs are the exact product, computed host-side
+        match layer {
+            LayerSel::Hidden => {
+                anyhow::ensure!(
+                    x.cols == self.params.nx() + self.params.nh(),
+                    "hidden vmm drive width {}",
+                    x.cols
+                );
+                Ok(x.matmul(&Mat::vcat(&self.params.wh, &self.params.uh)))
+            }
+            LayerSel::Readout => {
+                anyhow::ensure!(x.cols == self.params.nh(), "readout vmm drive width {}", x.cols);
+                Ok(x.matmul(&self.params.wo))
+            }
+        }
+    }
+
+    fn dfa_raw_grads_from(&self, p: &MiruParams, x: &SeqBatch) -> Result<DfaDeltas> {
+        // dense unit-lr deltas; host math accepts any shard shape (the
+        // dense train artifact is only lowered for selected configs and
+        // only at b_train)
+        Ok(dfa_grads(p, x, self.hyper.lam, self.hyper.beta, 1.0, &self.psi, None))
+    }
+
+    fn apply_update(&mut self, d: &DfaDeltas) -> Result<()> {
+        self.params.apply(d);
+        Ok(())
+    }
+
+    fn train_dfa(&mut self, x: &SeqBatch) -> Result<f32> {
+        // fused in-graph step: forward, DFA, ζ and lr all inside the artifact
+        let d = self.bundle.train_step_dfa(
+            &self.params,
+            x,
+            self.hyper.lam,
+            self.hyper.beta,
+            self.hyper.lr,
+            &self.psi,
+        )?;
+        self.params.apply(&d);
+        Ok(d.loss)
+    }
+
+    fn train_adam(&mut self, x: &SeqBatch) -> Result<f32> {
+        self.bundle.train_step_adam(
+            &mut self.params,
+            &mut self.adam,
+            x,
+            self.hyper.lam,
+            self.hyper.beta,
+            self.hyper.lr,
+        )
+    }
+
+    fn fork(&self) -> Result<Box<dyn ComputeBackend>> {
+        Err(anyhow!(
+            "artifact backend holds compiled executables and cannot fork; \
+             run with --workers 1"
+        ))
+    }
+
+    fn prefers_whole_batch(&self) -> bool {
+        true
+    }
+}

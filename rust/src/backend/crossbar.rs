@@ -1,0 +1,351 @@
+//! Memristive crossbar backend — the M2RU substrate, entirely in rust.
+//!
+//! Weights live in two differential crossbars (hidden: `(nx+nh)×nh`
+//! holding `[W_h; U_h]`; readout: `nh×ny` holding `W_o`); biases stay in
+//! digital registers. The forward pass is the mixed-signal datapath of
+//! §IV-B1 exactly as `model.forward_hw` lowers it: WBS `n_b`-bit input
+//! digitization → analog VMM over the *effective* (discretized, noisy)
+//! conductances → shared-ADC read-out with the adaptive full-scale shift
+//! → digital tanh and interpolation. Training computes DFA deltas from
+//! the effective weights and programs them through the write-counted
+//! Ziksa scheduler, so endurance accounting comes for free.
+
+use anyhow::{ensure, Result};
+
+use crate::device::{DeviceParams, DifferentialCrossbar, ZiksaProgrammer};
+use crate::linalg::Mat;
+use crate::nn::{bptt_grads, dfa_grads, make_psi, AdamState, DfaDeltas, MiruParams, SeqBatch};
+use crate::quant::{adc_quantize, wbs_input_quantize};
+
+use super::{BackendCtx, ComputeBackend, LayerSel, TrainHyper};
+
+/// Device-aware backend: every weight read goes through the crossbar
+/// conductances, every weight write through Ziksa programming.
+#[derive(Clone)]
+pub struct CrossbarBackend {
+    nx: usize,
+    nh: usize,
+    ny: usize,
+    nb: u32,
+    adc_bits: u32,
+    hyper: TrainHyper,
+    psi: Mat,
+    /// biases stay digital (registers)
+    bh: Vec<f32>,
+    bo: Vec<f32>,
+    xbar_hidden: DifferentialCrossbar,
+    xbar_out: DifferentialCrossbar,
+    programmer: ZiksaProgrammer,
+    adam: AdamState,
+}
+
+/// ADC full-scale ranges for the current weights — the paper's "shift
+/// operation controlling the dynamic range of the synaptic weights"
+/// (§IV-B1): the integrator swing is bounded by the L1 norm of the
+/// heaviest bitline, and the ADC range follows it so training growth
+/// never clips the read-out (clipped logits collapse argmax).
+/// `g_hidden` is the stacked `[W_h; U_h]` crossbar readout.
+fn adaptive_vscales(g_hidden: &Mat, wo: &Mat) -> (f32, f32) {
+    let l1max = |m: &Mat| -> f32 {
+        let mut best = 0.0f32;
+        for c in 0..m.cols {
+            let mut s = 0.0;
+            for r in 0..m.rows {
+                s += m.at(r, c).abs();
+            }
+            best = best.max(s);
+        }
+        best
+    };
+    // hidden drive: |x| ≤ 1 on nx lines, |βh| ≤ β on nh lines; typical
+    // activity is far below the bound — a third of the bound keeps the
+    // LSB fine while tanh saturation forgives the rare clip.
+    let vscale_h = (0.3 * l1max(g_hidden)).max(1.0);
+    // readout: logits must never clip (argmax!), use the full bound.
+    let vscale_o = l1max(wo).max(1.0);
+    (vscale_h, vscale_o)
+}
+
+impl CrossbarBackend {
+    pub fn new(ctx: &BackendCtx) -> CrossbarBackend {
+        let c = ctx.net;
+        let init = MiruParams::init(c.nx, c.nh, c.ny, ctx.seed);
+        // w_max sized to the init distribution with training headroom
+        let w_max = 1.0;
+        let mut xbar_hidden =
+            DifferentialCrossbar::new(c.nx + c.nh, c.nh, w_max, ctx.device, ctx.seed ^ 0xBAD1);
+        let mut xbar_out =
+            DifferentialCrossbar::new(c.nh, c.ny, w_max, ctx.device, ctx.seed ^ 0xBAD2);
+        xbar_hidden.program_weights(&Mat::vcat(&init.wh, &init.uh));
+        xbar_out.program_weights(&init.wo);
+        let n = init.count();
+        CrossbarBackend {
+            nx: c.nx,
+            nh: c.nh,
+            ny: c.ny,
+            nb: c.nb,
+            adc_bits: c.adc_bits,
+            hyper: TrainHyper {
+                lam: ctx.lam,
+                beta: ctx.beta,
+                lr: ctx.lr,
+                keep_frac: ctx.keep_frac,
+            },
+            psi: make_psi(c.ny, c.nh, ctx.seed ^ 0xD0F4),
+            bh: init.bh,
+            bo: init.bo,
+            xbar_hidden,
+            xbar_out,
+            programmer: ZiksaProgrammer::new(),
+            adam: AdamState::new(n),
+        }
+    }
+
+    /// Registry factory.
+    pub fn factory(ctx: &BackendCtx) -> Result<Box<dyn ComputeBackend>> {
+        Ok(Box::new(CrossbarBackend::new(ctx)))
+    }
+
+    /// Device parameters the backend was built with (via the hidden
+    /// crossbar — both crossbars share them).
+    pub fn device(&self) -> DeviceParams {
+        self.xbar_hidden.params
+    }
+
+    /// WBS-digitize a drive matrix in place (what the wordline level
+    /// shifters see).
+    fn digitize(&self, m: &mut Mat) {
+        for v in &mut m.data {
+            *v = wbs_input_quantize(*v, self.nb);
+        }
+    }
+}
+
+impl ComputeBackend for CrossbarBackend {
+    fn name(&self) -> &'static str {
+        "crossbar"
+    }
+
+    fn hyper(&self) -> TrainHyper {
+        self.hyper
+    }
+
+    fn effective_params(&self) -> MiruParams {
+        let hidden = self.xbar_hidden.read_weights();
+        let wh = Mat::from_fn(self.nx, self.nh, |r, col| hidden.at(r, col));
+        let uh = Mat::from_fn(self.nh, self.nh, |r, col| hidden.at(self.nx + r, col));
+        MiruParams {
+            wh,
+            uh,
+            bh: self.bh.clone(),
+            wo: self.xbar_out.read_weights(),
+            bo: self.bo.clone(),
+        }
+    }
+
+    /// The mixed-signal forward of `model.forward_hw`, in rust.
+    fn forward(&self, x: &SeqBatch) -> Result<Mat> {
+        ensure!(x.nx == self.nx, "batch nx {} != net nx {}", x.nx, self.nx);
+        // read each crossbar once; the hidden readout is already the
+        // stacked [W_h; U_h] layout the datapath drives
+        let g_hidden = self.xbar_hidden.read_weights();
+        let wo = self.xbar_out.read_weights();
+        let (vscale_h, vscale_o) = adaptive_vscales(&g_hidden, &wo);
+        let (lam, beta) = (self.hyper.lam, self.hyper.beta);
+        let mut h = Mat::zeros(x.b, self.nh);
+        for t in 0..x.nt {
+            let xt = x.step(t);
+            let mut bh_scaled = h.clone();
+            bh_scaled.scale(beta);
+            let mut drive = Mat::hcat(&xt, &bh_scaled); // wordline voltages
+            self.digitize(&mut drive);
+            let mut acc = drive.matmul(&g_hidden); // integrator voltages
+            for v in &mut acc.data {
+                *v = adc_quantize(*v, self.adc_bits, vscale_h);
+            }
+            acc.add_row_bias(&self.bh);
+            let cand = acc.map(f32::tanh);
+            h.scale(lam);
+            h.add_scaled(&cand, 1.0 - lam);
+        }
+        let mut hq = h;
+        self.digitize(&mut hq);
+        let mut logits = hq.matmul(&wo);
+        for v in &mut logits.data {
+            *v = adc_quantize(*v, self.adc_bits, vscale_o);
+        }
+        logits.add_row_bias(&self.bo);
+        Ok(logits)
+    }
+
+    /// Integrator voltages of one crossbar (pre-ADC), after WBS input
+    /// digitization — the `wbs_vmm` primitive.
+    fn vmm(&self, x: &Mat, layer: LayerSel) -> Result<Mat> {
+        let (xbar, want) = match layer {
+            LayerSel::Hidden => (&self.xbar_hidden, self.nx + self.nh),
+            LayerSel::Readout => (&self.xbar_out, self.nh),
+        };
+        ensure!(x.cols == want, "{layer:?} vmm drive width {} != {want}", x.cols);
+        let mut xq = x.clone();
+        self.digitize(&mut xq);
+        Ok(xbar.vmm(&xq))
+    }
+
+    fn dfa_raw_grads_from(&self, p: &MiruParams, x: &SeqBatch) -> Result<DfaDeltas> {
+        // DFA deltas from the weights the devices actually realize (`p`
+        // should come from `effective_params`)
+        Ok(dfa_grads(p, x, self.hyper.lam, self.hyper.beta, 1.0, &self.psi, None))
+    }
+
+    fn apply_update(&mut self, d: &DfaDeltas) -> Result<()> {
+        // program the crossbars (write-counted, quantized, noisy)
+        let hidden_delta = Mat::vcat(&d.d_wh, &d.d_uh);
+        self.programmer.apply(&mut self.xbar_hidden, &hidden_delta);
+        self.programmer.apply(&mut self.xbar_out, &d.d_wo);
+        // biases update digitally
+        for (b, &v) in self.bh.iter_mut().zip(&d.d_bh) {
+            *b += v;
+        }
+        for (b, &v) in self.bo.iter_mut().zip(&d.d_bo) {
+            *b += v;
+        }
+        Ok(())
+    }
+
+    fn train_adam(&mut self, x: &SeqBatch) -> Result<f32> {
+        let eff = self.effective_params();
+        let (g, loss) = bptt_grads(&eff, x, self.hyper.lam, self.hyper.beta);
+        let upd = self.adam.step(&g, self.hyper.lr);
+        // the update vector is *subtracted* from the flattened params —
+        // negate it into programming deltas (artifact order)
+        let (nx, nh, ny) = (self.nx, self.nh, self.ny);
+        let (wh_n, uh_n, wo_n) = (nx * nh, nh * nh, nh * ny);
+        let mut off = 0;
+        let mut take = |n: usize| {
+            let s: Vec<f32> = upd[off..off + n].iter().map(|v| -v).collect();
+            off += n;
+            s
+        };
+        let d = DfaDeltas {
+            d_wh: Mat::from_vec(nx, nh, take(wh_n)),
+            d_uh: Mat::from_vec(nh, nh, take(uh_n)),
+            d_bh: take(nh),
+            d_wo: Mat::from_vec(nh, ny, take(wo_n)),
+            d_bo: take(ny),
+            loss,
+        };
+        self.apply_update(&d)?;
+        Ok(loss)
+    }
+
+    fn fork(&self) -> Result<Box<dyn ComputeBackend>> {
+        Ok(Box::new(self.clone()))
+    }
+
+    fn stats(&self) -> Vec<String> {
+        vec![
+            format!(
+                "device writes: total={} mean/step={:.1} skipped={}",
+                self.programmer.total.writes,
+                self.programmer.writes_per_step(),
+                self.programmer.total.skipped
+            ),
+            format!(
+                "frozen devices: hidden {:.4} readout {:.4}",
+                self.xbar_hidden.frozen_fraction(),
+                self.xbar_out.frozen_fraction()
+            ),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::tests::toy_batch;
+    use crate::config::NetConfig;
+    use crate::linalg::argmax_rows;
+
+    fn quiet_ctx(seed: u64) -> BackendCtx {
+        // noise-free, fine-grained devices: isolates the WBS/ADC
+        // quantization error from programming stochasticity
+        BackendCtx {
+            lam: 0.5,
+            beta: 0.7,
+            lr: 0.5,
+            seed,
+            device: DeviceParams {
+                levels: 4096,
+                c2c_sigma: 0.0,
+                d2d_sigma: 0.0,
+                ..DeviceParams::default()
+            },
+            ..BackendCtx::new(NetConfig::SMALL)
+        }
+    }
+
+    #[test]
+    fn forward_tracks_ideal_math_on_effective_weights() {
+        let net = NetConfig::SMALL;
+        let be = CrossbarBackend::new(&quiet_ctx(1));
+        let x = toy_batch(&net, 16, 2);
+        let got = be.forward(&x).unwrap();
+        let eff = be.effective_params();
+        let ideal = eff.forward(&x, 0.5, 0.7);
+        for (a, b) in got.data.iter().zip(&ideal.data) {
+            assert!((a - b).abs() < 0.2, "quantization error budget exceeded: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn training_improves_accuracy_through_devices() {
+        let net = NetConfig::SMALL;
+        let mut be = CrossbarBackend::new(&quiet_ctx(1));
+        let test = toy_batch(&net, 64, 0);
+        let acc = |be: &CrossbarBackend| {
+            let preds = argmax_rows(&be.forward(&test).unwrap());
+            preds.iter().zip(&test.labels).filter(|(a, b)| a == b).count() as f32 / 64.0
+        };
+        let before = acc(&be);
+        for i in 0..60 {
+            be.train_dfa(&toy_batch(&net, 8, 10 + i)).unwrap();
+        }
+        let after = acc(&be);
+        assert!(after > before + 0.15, "before {before} after {after}");
+        assert!(be.programmer.total.writes > 0, "training must issue device writes");
+    }
+
+    #[test]
+    fn zeta_sparsification_skips_writes() {
+        let net = NetConfig::SMALL;
+        let x = toy_batch(&net, 8, 3);
+        let mut sparse = CrossbarBackend::new(&quiet_ctx(5));
+        sparse.train_dfa(&x).unwrap();
+        let mut dense = CrossbarBackend::new(&BackendCtx {
+            keep_frac: None,
+            ..quiet_ctx(5)
+        });
+        dense.train_dfa(&x).unwrap();
+        assert!(
+            sparse.programmer.total.writes < dense.programmer.total.writes,
+            "ζ must reduce write pressure: {} vs {}",
+            sparse.programmer.total.writes,
+            dense.programmer.total.writes
+        );
+    }
+
+    #[test]
+    fn vmm_digitizes_then_multiplies() {
+        let be = CrossbarBackend::new(&quiet_ctx(7));
+        let nin = be.nx + be.nh;
+        let x = Mat::from_fn(2, nin, |r, c| ((r * nin + c) % 7) as f32 / 7.0 - 0.5);
+        let got = be.vmm(&x, LayerSel::Hidden).unwrap();
+        let mut xq = x.clone();
+        for v in &mut xq.data {
+            *v = wbs_input_quantize(*v, be.nb);
+        }
+        let want = xq.matmul(&be.xbar_hidden.read_weights());
+        assert_eq!(got.data, want.data);
+        assert!(be.vmm(&x, LayerSel::Readout).is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Dense digital backend — the CMOS baseline substrate.
+//!
+//! Exact f32 math over [`crate::linalg::Mat`] (the blocked matmul is the
+//! hot path): the same network the Table-I digital comparator models.
+//! This is the default serving backend and the numerical reference the
+//! crossbar backend is parity-tested against.
+
+use anyhow::{ensure, Result};
+
+use crate::linalg::Mat;
+use crate::nn::{bptt_grads, dfa_grads, make_psi, AdamState, DfaDeltas, MiruParams, SeqBatch};
+
+use super::{BackendCtx, ComputeBackend, LayerSel, TrainHyper};
+
+/// Weights live in plain matrices; updates are exact adds.
+#[derive(Clone)]
+pub struct DenseBackend {
+    params: MiruParams,
+    psi: Mat,
+    adam: AdamState,
+    hyper: TrainHyper,
+}
+
+impl DenseBackend {
+    pub fn new(ctx: &BackendCtx) -> DenseBackend {
+        let c = ctx.net;
+        let params = MiruParams::init(c.nx, c.nh, c.ny, ctx.seed);
+        let n = params.count();
+        DenseBackend {
+            params,
+            psi: make_psi(c.ny, c.nh, ctx.seed ^ 0xD0F4),
+            adam: AdamState::new(n),
+            hyper: TrainHyper {
+                lam: ctx.lam,
+                beta: ctx.beta,
+                lr: ctx.lr,
+                keep_frac: ctx.keep_frac,
+            },
+        }
+    }
+
+    /// Registry factory.
+    pub fn factory(ctx: &BackendCtx) -> Result<Box<dyn ComputeBackend>> {
+        Ok(Box::new(DenseBackend::new(ctx)))
+    }
+}
+
+impl ComputeBackend for DenseBackend {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn hyper(&self) -> TrainHyper {
+        self.hyper
+    }
+
+    fn effective_params(&self) -> MiruParams {
+        self.params.clone()
+    }
+
+    fn forward(&self, x: &SeqBatch) -> Result<Mat> {
+        ensure!(x.nx == self.params.nx(), "batch nx {} != net nx {}", x.nx, self.params.nx());
+        Ok(self.params.forward(x, self.hyper.lam, self.hyper.beta))
+    }
+
+    fn vmm(&self, x: &Mat, layer: LayerSel) -> Result<Mat> {
+        match layer {
+            LayerSel::Hidden => {
+                let nin = self.params.nx() + self.params.nh();
+                ensure!(x.cols == nin, "hidden vmm drive width {} != {nin}", x.cols);
+                Ok(x.matmul(&Mat::vcat(&self.params.wh, &self.params.uh)))
+            }
+            LayerSel::Readout => {
+                ensure!(x.cols == self.params.nh(), "readout vmm drive width {}", x.cols);
+                Ok(x.matmul(&self.params.wo))
+            }
+        }
+    }
+
+    fn dfa_raw_grads_from(&self, p: &MiruParams, x: &SeqBatch) -> Result<DfaDeltas> {
+        Ok(dfa_grads(p, x, self.hyper.lam, self.hyper.beta, 1.0, &self.psi, None))
+    }
+
+    fn dfa_raw_grads(&self, x: &SeqBatch) -> Result<DfaDeltas> {
+        // skip the effective_params clone of the default implementation
+        Ok(dfa_grads(&self.params, x, self.hyper.lam, self.hyper.beta, 1.0, &self.psi, None))
+    }
+
+    fn apply_update(&mut self, d: &DfaDeltas) -> Result<()> {
+        self.params.apply(d);
+        Ok(())
+    }
+
+    fn train_adam(&mut self, x: &SeqBatch) -> Result<f32> {
+        let (g, loss) = bptt_grads(&self.params, x, self.hyper.lam, self.hyper.beta);
+        let upd = self.adam.step(&g, self.hyper.lr);
+        self.params.apply_flat_update(&upd);
+        Ok(loss)
+    }
+
+    fn fork(&self) -> Result<Box<dyn ComputeBackend>> {
+        Ok(Box::new(self.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::tests::toy_batch;
+    use crate::config::NetConfig;
+    use crate::linalg::argmax_rows;
+
+    fn ctx() -> BackendCtx {
+        BackendCtx {
+            lam: 0.5,
+            beta: 0.7,
+            lr: 0.5,
+            seed: 1,
+            ..BackendCtx::new(NetConfig::SMALL)
+        }
+    }
+
+    #[test]
+    fn dfa_training_improves_accuracy() {
+        let net = NetConfig::SMALL;
+        let mut be = DenseBackend::new(&ctx());
+        let test = toy_batch(&net, 64, 0);
+        let acc = |be: &DenseBackend| {
+            let preds = argmax_rows(&be.forward(&test).unwrap());
+            preds.iter().zip(&test.labels).filter(|(a, b)| a == b).count() as f32 / 64.0
+        };
+        let before = acc(&be);
+        for i in 0..50 {
+            be.train_dfa(&toy_batch(&net, 8, 10 + i)).unwrap();
+        }
+        let after = acc(&be);
+        assert!(after > before + 0.2, "before {before} after {after}");
+    }
+
+    #[test]
+    fn fork_is_independent_and_identical() {
+        let net = NetConfig::SMALL;
+        let mut be = DenseBackend::new(&ctx());
+        let x = toy_batch(&net, 16, 3);
+        let fork = be.fork().unwrap();
+        assert_eq!(fork.forward(&x).unwrap().data, be.forward(&x).unwrap().data);
+        // training the original must not affect the fork
+        let frozen = fork.forward(&x).unwrap();
+        be.train_dfa(&toy_batch(&net, 8, 4)).unwrap();
+        assert_eq!(fork.forward(&x).unwrap().data, frozen.data);
+        assert_ne!(be.forward(&x).unwrap().data, frozen.data);
+    }
+
+    #[test]
+    fn vmm_matches_manual_product() {
+        let be = DenseBackend::new(&ctx());
+        let p = be.effective_params();
+        let nin = p.nx() + p.nh();
+        let x = Mat::from_fn(3, nin, |r, c| ((r + c) % 5) as f32 * 0.1 - 0.2);
+        let got = be.vmm(&x, LayerSel::Hidden).unwrap();
+        let want = x.matmul(&Mat::vcat(&p.wh, &p.uh));
+        assert_eq!(got.data, want.data);
+        assert!(be.vmm(&x, LayerSel::Readout).is_err(), "wrong drive width must error");
+    }
+}

@@ -1,0 +1,262 @@
+//! Pluggable compute backends — the execution substrates behind the
+//! serving engine (DESIGN.md §6).
+//!
+//! The paper's central comparison is *the same MiRU/DFA math on different
+//! substrates*: a dense digital CMOS baseline, the memristive
+//! crossbar datapath (WBS digitization → analog VMM → shared ADC), and
+//! the AOT-compiled XLA artifacts. This module factors that comparison
+//! into a trait so the coordinator, CLI and benchmarks select the
+//! substrate at runtime instead of hard-wiring one path:
+//!
+//! * [`ComputeBackend`] — the substrate contract: forward pass, VMM
+//!   primitive, DFA/Adam train steps, raw-gradient hooks for the
+//!   multi-worker engine, and forking for per-worker instances.
+//! * [`BackendRegistry`] — name → factory table with the three built-in
+//!   backends registered ([`DenseBackend`], [`CrossbarBackend`],
+//!   [`ArtifactBackend`]); `m2ru train --backend <name>` resolves here.
+//! * [`BackendCtx`] — everything a factory needs to instantiate a
+//!   backend (network shapes, hyper-parameters, seed, device model).
+//!
+//! Adding a backend is: implement [`ComputeBackend`], write a
+//! `fn(&BackendCtx) -> Result<Box<dyn ComputeBackend>>` factory, and
+//! `registry.register("name", factory)` — see DESIGN.md §6 for the
+//! walkthrough.
+
+mod artifact;
+mod crossbar;
+mod dense;
+mod registry;
+
+pub use artifact::ArtifactBackend;
+pub use crossbar::CrossbarBackend;
+pub use dense::DenseBackend;
+pub use registry::{BackendFactory, BackendRegistry};
+
+use anyhow::Result;
+
+use crate::config::{NetConfig, RunConfig};
+use crate::device::DeviceParams;
+use crate::linalg::Mat;
+use crate::nn::{kwta_inplace, DfaDeltas, MiruParams, SeqBatch};
+
+/// Which crossbar (weight matrix) a [`ComputeBackend::vmm`] call targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerSel {
+    /// The hidden-layer crossbar holding `[W_h; U_h]`, driven by
+    /// `[x_t | β·h]` wordline vectors of width `nx + nh`.
+    Hidden,
+    /// The readout crossbar holding `W_o`, driven by `h` (width `nh`).
+    Readout,
+}
+
+/// Training hyper-parameters a backend applies internally (and that the
+/// multi-worker engine needs to finalize externally-merged gradients the
+/// same way).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainHyper {
+    pub lam: f32,
+    pub beta: f32,
+    pub lr: f32,
+    /// ζ keep fraction for the memristor-backed weight deltas
+    /// (`None` → dense updates, the Fig. 5b baseline).
+    pub keep_frac: Option<f32>,
+}
+
+/// Everything a backend factory needs to build an instance.
+#[derive(Clone, Debug)]
+pub struct BackendCtx {
+    pub net: NetConfig,
+    pub lam: f32,
+    pub beta: f32,
+    pub lr: f32,
+    pub seed: u64,
+    pub keep_frac: Option<f32>,
+    /// Memristor model for device-aware backends.
+    pub device: DeviceParams,
+    /// Where the AOT artifacts live (artifact backend only).
+    pub artifacts_dir: String,
+}
+
+impl BackendCtx {
+    /// Context at the default operating point (see `RunConfig::default`).
+    pub fn new(net: NetConfig) -> BackendCtx {
+        BackendCtx::from_run(net, &RunConfig::default())
+    }
+
+    /// Context from a run configuration (the CLI path).
+    pub fn from_run(net: NetConfig, run: &RunConfig) -> BackendCtx {
+        BackendCtx {
+            net,
+            lam: run.lam,
+            beta: run.beta,
+            lr: run.lr,
+            seed: run.seed,
+            keep_frac: Some(net.keep_frac),
+            device: DeviceParams::default(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+
+    fn hyper(&self) -> TrainHyper {
+        TrainHyper { lam: self.lam, beta: self.beta, lr: self.lr, keep_frac: self.keep_frac }
+    }
+}
+
+/// One execution substrate for the MiRU network.
+///
+/// The gradient contract: [`ComputeBackend::dfa_raw_grads`] returns
+/// *dense unit-lr deltas* (`d = −g`, no ζ, no learning-rate scaling) so
+/// the multi-worker engine can merge shard gradients before
+/// sparsification; [`finalize_update`] then applies ζ and the learning
+/// rate, and [`ComputeBackend::apply_update`] commits the result to the
+/// substrate (ideal adds for digital weights, Ziksa programming for
+/// crossbars). The provided [`ComputeBackend::train_dfa`] composes
+/// exactly these three steps, so a single-worker parallel engine and a
+/// sequential backend step are bit-identical.
+pub trait ComputeBackend: Send + Sync {
+    /// Registry name ("dense", "crossbar", "artifact", ...).
+    fn name(&self) -> &'static str;
+
+    /// The hyper-parameters this backend trains with.
+    fn hyper(&self) -> TrainHyper;
+
+    /// The weights as this substrate currently realizes them (for the
+    /// dense backend the stored weights; for crossbars the read-out
+    /// conductances with discretization and variability folded in).
+    fn effective_params(&self) -> MiruParams;
+
+    /// Final-step logits `[b, ny]` through this backend's datapath.
+    fn forward(&self, x: &SeqBatch) -> Result<Mat>;
+
+    /// The VMM primitive on this substrate: `x` rows drive the selected
+    /// layer's weight matrix. Crossbar backends digitize the drive (WBS)
+    /// and return integrator voltages; digital backends return the exact
+    /// product.
+    fn vmm(&self, x: &Mat, layer: LayerSel) -> Result<Mat>;
+
+    /// Dense unit-lr DFA deltas (`−g`) from an already-materialized
+    /// weight snapshot. Pure (`&self`) so train shards can run on worker
+    /// threads against one shared snapshot — the parallel engine reads
+    /// the substrate once per step instead of once per worker.
+    fn dfa_raw_grads_from(&self, p: &MiruParams, x: &SeqBatch) -> Result<DfaDeltas>;
+
+    /// Dense unit-lr DFA deltas from the current effective weights.
+    fn dfa_raw_grads(&self, x: &SeqBatch) -> Result<DfaDeltas> {
+        self.dfa_raw_grads_from(&self.effective_params(), x)
+    }
+
+    /// Commit finalized deltas to the substrate.
+    fn apply_update(&mut self, d: &DfaDeltas) -> Result<()>;
+
+    /// One whole-batch DFA train step; returns the batch loss.
+    fn train_dfa(&mut self, x: &SeqBatch) -> Result<f32> {
+        let mut d = self.dfa_raw_grads(x)?;
+        finalize_update(&mut d, &self.hyper());
+        self.apply_update(&d)?;
+        Ok(d.loss)
+    }
+
+    /// One BPTT + Adam train step; returns the batch loss.
+    fn train_adam(&mut self, x: &SeqBatch) -> Result<f32>;
+
+    /// An independent instance with identical current weights, for
+    /// per-worker evaluation. Errors if the substrate cannot be cloned
+    /// (compiled executables).
+    fn fork(&self) -> Result<Box<dyn ComputeBackend>>;
+
+    /// Backends lowered with static batch shapes (XLA artifacts) cannot
+    /// profit from row-sharding; the parallel engine falls back to
+    /// whole-batch execution when this is true.
+    fn prefers_whole_batch(&self) -> bool {
+        false
+    }
+
+    /// Human-readable substrate statistics (write pressure, endurance).
+    fn stats(&self) -> Vec<String> {
+        Vec::new()
+    }
+}
+
+/// Turn merged unit-lr deltas into the committed update: ζ-sparsify the
+/// memristor-backed matrices (biases stay dense — they live in digital
+/// registers), then scale everything by the learning rate. Applying this
+/// to the output of [`ComputeBackend::dfa_raw_grads`] reproduces the
+/// fused `dfa_grads(.., lr, keep_frac)` step exactly.
+pub fn finalize_update(d: &mut DfaDeltas, hyper: &TrainHyper) {
+    if let Some(f) = hyper.keep_frac {
+        kwta_inplace(&mut d.d_wh, f);
+        kwta_inplace(&mut d.d_uh, f);
+        kwta_inplace(&mut d.d_wo, f);
+    }
+    d.d_wh.scale(hyper.lr);
+    d.d_uh.scale(hyper.lr);
+    d.d_wo.scale(hyper.lr);
+    for v in &mut d.d_bh {
+        *v *= hyper.lr;
+    }
+    for v in &mut d.d_bo {
+        *v *= hyper.lr;
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::nn::{dfa_grads, make_psi};
+    use crate::rng::GaussianRng;
+
+    pub(crate) fn toy_batch(net: &NetConfig, b: usize, seed: u64) -> SeqBatch {
+        let mut proto_rng = GaussianRng::new(99);
+        let protos: Vec<Vec<f32>> =
+            (0..net.ny).map(|_| (0..net.nx).map(|_| proto_rng.normal()).collect()).collect();
+        let mut rng = GaussianRng::new(seed);
+        let mut sb = SeqBatch::zeros(b, net.nt, net.nx);
+        for i in 0..b {
+            let label = rng.below(net.ny);
+            sb.labels[i] = label;
+            for t in 0..net.nt {
+                for j in 0..net.nx {
+                    sb.sample_mut(i)[t * net.nx + j] =
+                        (0.25 * rng.normal() + 0.75 * protos[label][j]).clamp(-1.0, 1.0);
+                }
+            }
+        }
+        sb
+    }
+
+    #[test]
+    fn finalize_matches_fused_dfa_step() {
+        let net = NetConfig::SMALL;
+        let p = MiruParams::init(net.nx, net.nh, net.ny, 3);
+        let psi = make_psi(net.ny, net.nh, 5);
+        let x = toy_batch(&net, 8, 7);
+        let (lam, beta, lr) = (0.5, 0.7, 0.25);
+        let hyper = TrainHyper { lam, beta, lr, keep_frac: Some(0.53) };
+
+        let mut raw = dfa_grads(&p, &x, lam, beta, 1.0, &psi, None);
+        finalize_update(&mut raw, &hyper);
+        let fused = dfa_grads(&p, &x, lam, beta, lr, &psi, Some(0.53));
+
+        for (a, b) in raw.d_wh.data.iter().zip(&fused.d_wh.data) {
+            assert_eq!(a, b, "finalized raw grads must equal the fused step");
+        }
+        for (a, b) in raw.d_uh.data.iter().zip(&fused.d_uh.data) {
+            assert_eq!(a, b);
+        }
+        for (a, b) in raw.d_bh.iter().zip(&fused.d_bh) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(raw.loss, fused.loss);
+    }
+
+    #[test]
+    fn ctx_carries_run_operating_point() {
+        let run = RunConfig { lam: 0.8, beta: 0.2, lr: 0.1, seed: 9, ..RunConfig::default() };
+        let ctx = BackendCtx::from_run(NetConfig::SMALL, &run);
+        assert_eq!(ctx.lam, 0.8);
+        assert_eq!(ctx.seed, 9);
+        assert_eq!(ctx.keep_frac, Some(NetConfig::SMALL.keep_frac));
+        let h = ctx.hyper();
+        assert_eq!(h.lr, 0.1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Runtime backend selection: a name → factory table, so the CLI, the
+//! serving engine and the benchmarks all pick an execution substrate the
+//! same way (`m2ru train --backend crossbar`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::{ArtifactBackend, BackendCtx, ComputeBackend, CrossbarBackend, DenseBackend};
+
+/// Builds one backend instance from a context. Factories are plain `fn`
+/// pointers so a registry is cheap to clone and `Send + Sync` for free.
+pub type BackendFactory = fn(&BackendCtx) -> Result<Box<dyn ComputeBackend>>;
+
+/// Name → factory table with runtime lookup.
+#[derive(Clone)]
+pub struct BackendRegistry {
+    entries: BTreeMap<String, BackendFactory>,
+}
+
+impl BackendRegistry {
+    /// An empty registry (use [`BackendRegistry::with_defaults`] for the
+    /// built-in set).
+    pub fn new() -> BackendRegistry {
+        BackendRegistry { entries: BTreeMap::new() }
+    }
+
+    /// The three built-in execution paths: `dense` (digital CMOS
+    /// baseline), `crossbar` (memristive device simulator), `artifact`
+    /// (AOT XLA via PJRT).
+    pub fn with_defaults() -> BackendRegistry {
+        let mut r = BackendRegistry::new();
+        r.register("dense", DenseBackend::factory);
+        r.register("crossbar", CrossbarBackend::factory);
+        r.register("artifact", ArtifactBackend::factory);
+        r
+    }
+
+    /// Register (or replace) a backend factory under `name`.
+    pub fn register(&mut self, name: impl Into<String>, factory: BackendFactory) {
+        self.entries.insert(name.into(), factory);
+    }
+
+    /// Look up a factory by name; the error lists what is available.
+    ///
+    /// ```
+    /// use m2ru::backend::{BackendCtx, BackendRegistry, ComputeBackend};
+    /// use m2ru::config::NetConfig;
+    ///
+    /// let registry = BackendRegistry::with_defaults();
+    /// let factory = registry.get("dense").unwrap();
+    /// let backend = factory(&BackendCtx::new(NetConfig::SMALL)).unwrap();
+    /// assert_eq!(backend.name(), "dense");
+    /// assert!(registry.get("tpu").is_err());
+    /// ```
+    pub fn get(&self, name: &str) -> Result<BackendFactory> {
+        self.entries.get(name).copied().ok_or_else(|| {
+            anyhow!("unknown backend `{name}` (available: {})", self.names().join(", "))
+        })
+    }
+
+    /// Look up and instantiate in one step.
+    pub fn create(&self, name: &str, ctx: &BackendCtx) -> Result<Box<dyn ComputeBackend>> {
+        (self.get(name)?)(ctx)
+    }
+
+    /// Registered backend names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+}
+
+impl Default for BackendRegistry {
+    fn default() -> BackendRegistry {
+        BackendRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+
+    #[test]
+    fn defaults_cover_the_three_paths() {
+        let r = BackendRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["artifact", "crossbar", "dense"]);
+    }
+
+    #[test]
+    fn create_dense_and_crossbar() {
+        let r = BackendRegistry::with_defaults();
+        let ctx = BackendCtx::new(NetConfig::SMALL);
+        assert_eq!(r.create("dense", &ctx).unwrap().name(), "dense");
+        assert_eq!(r.create("crossbar", &ctx).unwrap().name(), "crossbar");
+    }
+
+    #[test]
+    fn unknown_name_lists_available() {
+        let r = BackendRegistry::with_defaults();
+        let err = r.get("gpu").unwrap_err().to_string();
+        assert!(err.contains("unknown backend `gpu`"), "{err}");
+        assert!(err.contains("dense") && err.contains("crossbar"), "{err}");
+    }
+
+    #[test]
+    fn artifact_factory_fails_gracefully_without_artifacts() {
+        // offline build: no artifacts directory and a stub PJRT — the
+        // factory must return an error, not panic
+        let r = BackendRegistry::with_defaults();
+        let ctx = BackendCtx {
+            artifacts_dir: "/nonexistent/artifacts".to_string(),
+            ..BackendCtx::new(NetConfig::SMALL)
+        };
+        assert!(r.create("artifact", &ctx).is_err());
+    }
+
+    #[test]
+    fn custom_backend_registration() {
+        let mut r = BackendRegistry::new();
+        r.register("dense2", crate::backend::DenseBackend::factory);
+        assert_eq!(r.create("dense2", &BackendCtx::new(NetConfig::SMALL)).unwrap().name(), "dense");
+    }
+}

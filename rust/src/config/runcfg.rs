@@ -32,6 +32,12 @@ pub struct RunConfig {
     pub replay: bool,
     /// Master seed.
     pub seed: u64,
+    /// Compute backend name resolved through
+    /// [`crate::backend::BackendRegistry`] (`dense`, `crossbar`,
+    /// `artifact`, or a custom registration).
+    pub backend: String,
+    /// Worker threads for the parallel serving engine (1 = sequential).
+    pub workers: usize,
 }
 
 impl Default for RunConfig {
@@ -52,6 +58,8 @@ impl Default for RunConfig {
             replay_mix: 0.5,
             replay: true,
             seed: 42,
+            backend: "dense".to_string(),
+            workers: 1,
         }
     }
 }
@@ -75,6 +83,11 @@ impl RunConfig {
                 "test_per_task" => self.test_per_task = iget()?,
                 "epochs" => self.epochs = iget()?,
                 "seed" => self.seed = v.as_int().context("seed: integer")? as u64,
+                "backend" => {
+                    self.backend =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
+                "workers" => self.workers = iget()?,
                 "replay.per_task" => self.replay_per_task = iget()?,
                 "replay.mix" => self.replay_mix = fget()? as f32,
                 "replay.enabled" => {
@@ -101,6 +114,8 @@ impl RunConfig {
         anyhow::ensure!(self.lr > 0.0, "lr must be positive");
         anyhow::ensure!((0.0..=1.0).contains(&self.replay_mix), "replay.mix in [0,1]");
         anyhow::ensure!(self.num_tasks >= 1, "need at least one task");
+        anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
+        anyhow::ensure!(!self.backend.is_empty(), "backend name must be non-empty");
         Ok(())
     }
 }
@@ -128,6 +143,17 @@ mod tests {
         assert_eq!(cfg.replay_per_task, 312);
         assert_eq!(cfg.replay_mix, 0.25);
         assert!(!cfg.replay);
+    }
+
+    #[test]
+    fn backend_and_workers_from_toml() {
+        let map = parse_toml("backend = \"crossbar\"\nworkers = 4\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.backend, "crossbar");
+        assert_eq!(cfg.workers, 4);
+        let bad = parse_toml("workers = 0\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
     }
 
     #[test]

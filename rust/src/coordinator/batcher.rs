@@ -40,6 +40,33 @@ pub fn make_eval_batches(
 }
 
 /// Iterates one task's training stream in epochs, mixing replay.
+///
+/// The replay mix only activates once the buffer holds *past* task
+/// segments (mixing current-task examples back in would be a no-op):
+///
+/// ```
+/// use m2ru::coordinator::TrainBatcher;
+/// use m2ru::data::Example;
+/// use m2ru::replay::ReplayBuffer;
+///
+/// // past task, captured by the data-preparation unit
+/// let mut buf = ReplayBuffer::new(4, 0.0, 1.0, 1);
+/// buf.begin_task();
+/// for _ in 0..8 {
+///     buf.offer(&Example { features: vec![0.5; 6], label: 3 });
+/// }
+/// buf.begin_task(); // current task opens; stored examples become "past"
+///
+/// // fresh stream for the current task
+/// let fresh: Vec<Example> =
+///     (0..8).map(|_| Example { features: vec![0.25; 6], label: 7 }).collect();
+///
+/// // replay_mix = 0.5: every 4-row batch is 2 fresh + 2 replayed rows
+/// let mut tb = TrainBatcher::new(4, 2, 3, 0.5, 0);
+/// for batch in tb.epoch_batches(&fresh, Some(&buf)) {
+///     assert_eq!(batch.labels.iter().filter(|&&l| l == 3).count(), 2);
+/// }
+/// ```
 pub struct TrainBatcher {
     pub b_train: usize,
     pub nt: usize,

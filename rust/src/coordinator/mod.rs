@@ -7,6 +7,9 @@
 //! * [`engine`] — the training/inference engines: pure-rust digital
 //!   baseline, XLA software (DFA and Adam), and the device-aware hardware
 //!   engine that routes every update through the memristive crossbars.
+//! * [`parallel`] — the multi-worker serving engine: drives any
+//!   [`crate::backend::ComputeBackend`] and shards eval/train batches
+//!   across `std::thread` workers with deterministic merging.
 //! * [`trainer`] — the domain-incremental training loop: stream tasks,
 //!   feed the data-preparation unit, mix replay, evaluate after each task.
 //! * [`tiles`] — the hidden-layer tile scheduler (SIPO/SISO dataflow).
@@ -15,6 +18,7 @@
 mod batcher;
 mod engine;
 mod metrics;
+mod parallel;
 mod tiles;
 mod trainer;
 
@@ -23,5 +27,6 @@ pub use engine::{
     Engine, HardwareEngine, RustAdamEngine, RustDfaEngine, XlaAdamEngine, XlaDfaEngine,
 };
 pub use metrics::AccuracyMatrix;
+pub use parallel::ParallelEngine;
 pub use tiles::TileScheduler;
 pub use trainer::{ContinualTrainer, TaskResult};

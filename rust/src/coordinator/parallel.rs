@@ -1,0 +1,280 @@
+//! Multi-worker serving engine: shards batches across `std::thread`
+//! workers with per-worker backend instances and merges the results
+//! deterministically (DESIGN.md §7).
+//!
+//! * **Eval** — rows are split into contiguous shards, one per worker;
+//!   each worker runs the forward pass on its own forked backend
+//!   instance and predictions are concatenated in shard order. Because
+//!   the forward math is row-independent, the merged predictions are
+//!   *identical* for every worker count.
+//! * **Train** — workers compute dense unit-lr DFA gradients on their
+//!   row shards from the same (read-shared) backend; the master merges
+//!   them weighted by shard size in shard order, applies ζ and the
+//!   learning rate once on the merged tensor (sparsifying per-shard
+//!   would change which entries win), and commits a single update. The
+//!   math is exactly the whole-batch step; results differ from
+//!   single-worker only by f32 re-association across the shard sums.
+//! * Backends lowered with static batch shapes
+//!   ([`ComputeBackend::prefers_whole_batch`]) are never sharded.
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::{finalize_update, ComputeBackend};
+use crate::linalg::argmax_rows;
+use crate::nn::{DfaDeltas, SeqBatch};
+
+use super::engine::Engine;
+
+/// An [`Engine`] that drives one [`ComputeBackend`] with a worker pool.
+/// `workers == 1` is the plain sequential path.
+pub struct ParallelEngine {
+    backend: Box<dyn ComputeBackend>,
+    workers: usize,
+    /// Cached per-worker instances for eval sharding; refreshed after
+    /// every weight update.
+    forks: Vec<Box<dyn ComputeBackend>>,
+    forks_stale: bool,
+}
+
+impl ParallelEngine {
+    pub fn new(backend: Box<dyn ComputeBackend>, workers: usize) -> ParallelEngine {
+        ParallelEngine { backend, workers: workers.max(1), forks: Vec::new(), forks_stale: true }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Resize the worker pool (fork cache is rebuilt lazily). Metrics are
+    /// worker-count-invariant, so this is purely a throughput knob.
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+        self.forks_stale = true;
+    }
+
+    /// The wrapped backend (current weights, substrate statistics).
+    pub fn backend(&self) -> &dyn ComputeBackend {
+        &*self.backend
+    }
+
+    /// Substrate statistics (write pressure, endurance) for reports.
+    pub fn stats(&self) -> Vec<String> {
+        self.backend.stats()
+    }
+
+    fn use_sharding(&self, b: usize) -> bool {
+        self.workers > 1 && !self.backend.prefers_whole_batch() && b >= 2 * self.workers
+    }
+
+    /// Contiguous row shards, one per worker (first `b % workers` shards
+    /// take the extra row).
+    fn shard(x: &SeqBatch, parts: usize) -> Vec<SeqBatch> {
+        let base = x.b / parts;
+        let rem = x.b % parts;
+        let row = x.nt * x.nx;
+        let mut out = Vec::with_capacity(parts);
+        let mut start = 0;
+        for w in 0..parts {
+            let len = base + usize::from(w < rem);
+            if len == 0 {
+                continue;
+            }
+            let mut sb = SeqBatch::zeros(len, x.nt, x.nx);
+            sb.data.copy_from_slice(&x.data[start * row..(start + len) * row]);
+            sb.labels.copy_from_slice(&x.labels[start..start + len]);
+            out.push(sb);
+            start += len;
+        }
+        out
+    }
+
+    fn refresh_forks(&mut self) -> Result<()> {
+        if !self.forks_stale && self.forks.len() == self.workers {
+            return Ok(());
+        }
+        self.forks.clear();
+        for _ in 0..self.workers {
+            self.forks.push(self.backend.fork()?);
+        }
+        self.forks_stale = false;
+        Ok(())
+    }
+}
+
+fn scale_deltas(d: &mut DfaDeltas, w: f32) {
+    d.d_wh.scale(w);
+    d.d_uh.scale(w);
+    d.d_wo.scale(w);
+    for v in &mut d.d_bh {
+        *v *= w;
+    }
+    for v in &mut d.d_bo {
+        *v *= w;
+    }
+    d.loss *= w;
+}
+
+fn add_deltas(acc: &mut DfaDeltas, d: &DfaDeltas) {
+    acc.d_wh.add_scaled(&d.d_wh, 1.0);
+    acc.d_uh.add_scaled(&d.d_uh, 1.0);
+    acc.d_wo.add_scaled(&d.d_wo, 1.0);
+    for (a, &v) in acc.d_bh.iter_mut().zip(&d.d_bh) {
+        *a += v;
+    }
+    for (a, &v) in acc.d_bo.iter_mut().zip(&d.d_bo) {
+        *a += v;
+    }
+    acc.loss += d.loss;
+}
+
+impl Engine for ParallelEngine {
+    fn train_batch(&mut self, x: &SeqBatch) -> Result<f32> {
+        self.forks_stale = true;
+        if !self.use_sharding(x.b) {
+            return self.backend.train_dfa(x);
+        }
+        let shards = Self::shard(x, self.workers);
+        // one substrate read per step, shared by all workers (a crossbar
+        // read walks every memristor — doing it per worker would erode
+        // the sharding speedup)
+        let snapshot = self.backend.effective_params();
+        let grads: Vec<Result<DfaDeltas>> = std::thread::scope(|s| {
+            let backend: &dyn ComputeBackend = &*self.backend;
+            let snapshot = &snapshot;
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|sh| s.spawn(move || backend.dfa_raw_grads_from(snapshot, sh)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("train worker panicked"))))
+                .collect()
+        });
+        // merge weighted by shard size, in shard order (deterministic)
+        let b_total = x.b as f32;
+        let mut merged: Option<DfaDeltas> = None;
+        for (sh, g) in shards.iter().zip(grads) {
+            let mut g = g?;
+            scale_deltas(&mut g, sh.b as f32 / b_total);
+            match merged.as_mut() {
+                None => merged = Some(g),
+                Some(m) => add_deltas(m, &g),
+            }
+        }
+        let mut d = merged.expect("sharding produced no shards");
+        finalize_update(&mut d, &self.backend.hyper());
+        self.backend.apply_update(&d)?;
+        Ok(d.loss)
+    }
+
+    fn eval_batch(&mut self, x: &SeqBatch) -> Result<Vec<usize>> {
+        if !self.use_sharding(x.b) {
+            return Ok(argmax_rows(&self.backend.forward(x)?));
+        }
+        self.refresh_forks()?;
+        let shards = Self::shard(x, self.workers);
+        let results: Vec<Result<Vec<usize>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .forks
+                .iter()
+                .zip(&shards)
+                .map(|(f, sh)| {
+                    s.spawn(move || -> Result<Vec<usize>> {
+                        Ok(argmax_rows(&f.forward(sh)?))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("eval worker panicked"))))
+                .collect()
+        });
+        let mut preds = Vec::with_capacity(x.b);
+        for r in results {
+            preds.extend(r?);
+        }
+        Ok(preds)
+    }
+
+    fn name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::tests::toy_batch;
+    use crate::backend::{BackendCtx, BackendRegistry};
+    use crate::config::NetConfig;
+
+    fn engine(workers: usize, seed: u64) -> ParallelEngine {
+        let ctx = BackendCtx { lam: 0.5, beta: 0.7, lr: 0.5, seed, ..BackendCtx::new(NetConfig::SMALL) };
+        let be = BackendRegistry::with_defaults().create("dense", &ctx).unwrap();
+        ParallelEngine::new(be, workers)
+    }
+
+    #[test]
+    fn shard_partitions_rows_in_order() {
+        let net = NetConfig::SMALL;
+        let mut x = toy_batch(&net, 11, 1);
+        x.labels = (0..11).map(|i| i % net.ny).collect();
+        let shards = ParallelEngine::shard(&x, 3);
+        assert_eq!(shards.iter().map(|s| s.b).collect::<Vec<_>>(), vec![4, 4, 3]);
+        let relabels: Vec<usize> = shards.iter().flat_map(|s| s.labels.clone()).collect();
+        assert_eq!(relabels, x.labels);
+        assert_eq!(shards[1].sample(0), x.sample(4));
+        assert_eq!(shards[2].sample(2), x.sample(10));
+    }
+
+    #[test]
+    fn single_worker_matches_direct_backend() {
+        let net = NetConfig::SMALL;
+        let mut par = engine(1, 3);
+        let ctx = BackendCtx { lam: 0.5, beta: 0.7, lr: 0.5, seed: 3, ..BackendCtx::new(NetConfig::SMALL) };
+        let mut direct = BackendRegistry::with_defaults().create("dense", &ctx).unwrap();
+        for i in 0..5 {
+            let b = toy_batch(&net, 8, 20 + i);
+            let l1 = par.train_batch(&b).unwrap();
+            let l2 = direct.train_dfa(&b).unwrap();
+            assert_eq!(l1, l2, "step {i}");
+        }
+        let test = toy_batch(&net, 32, 0);
+        assert_eq!(
+            par.eval_batch(&test).unwrap(),
+            argmax_rows(&direct.forward(&test).unwrap())
+        );
+    }
+
+    #[test]
+    fn sharded_eval_is_identical_to_sequential() {
+        let net = NetConfig::SMALL;
+        let test = toy_batch(&net, 37, 5);
+        let baseline = engine(1, 7).eval_batch(&test).unwrap();
+        for workers in [2, 3, 4] {
+            let preds = engine(workers, 7).eval_batch(&test).unwrap();
+            assert_eq!(preds, baseline, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn sharded_train_first_step_loss_matches() {
+        let net = NetConfig::SMALL;
+        let b = toy_batch(&net, 16, 9);
+        // the loss is computed on the pre-update weights, so across
+        // worker counts it differs only by f32 re-association
+        let l1 = engine(1, 11).train_batch(&b).unwrap();
+        let l4 = engine(4, 11).train_batch(&b).unwrap();
+        assert!((l1 - l4).abs() < 1e-4, "losses {l1} vs {l4}");
+    }
+
+    #[test]
+    fn small_batches_skip_sharding() {
+        let net = NetConfig::SMALL;
+        let mut e = engine(4, 13);
+        // b < 2*workers: whole-batch path must be taken (and still work)
+        let b = toy_batch(&net, 5, 1);
+        e.train_batch(&b).unwrap();
+        assert_eq!(e.eval_batch(&b).unwrap().len(), 5);
+    }
+}

@@ -24,6 +24,7 @@ pub struct WriteEvent {
 
 /// Write controller wrapping the three weight crossbars of one MiRU layer
 /// stack (W_h, U_h stacked on the hidden crossbar; W_o on the readout).
+#[derive(Clone, Debug)]
 pub struct ZiksaProgrammer {
     /// Cumulative events, for reporting.
     pub total: WriteEvent,

@@ -21,20 +21,22 @@
 //! | module        | paper subsystem |
 //! |---------------|-----------------|
 //! | [`rng`]       | xorshift sampler core, LFSR of the stochastic quantizer |
-//! | [`linalg`]    | dense matrix substrate for the digital baseline |
+//! | [`linalg`]    | dense matrix substrate (blocked matmul serving kernel) |
 //! | [`nn`]        | MiRU Eqs. (1)–(3), DFA Algorithm 1, K-WTA ζ, Adam baseline |
 //! | [`quant`]     | WBS input digitization, ADC model, replay quantizers |
 //! | [`device`]    | memristor model, differential crossbar, endurance, Ziksa |
+//! | [`backend`]   | pluggable compute substrates: dense CMOS baseline, crossbar datapath, AOT artifacts (Table I comparison) |
 //! | [`hw_model`]  | §VI-C/D: latency, throughput, power, digital baseline |
 //! | [`data`]      | synthetic permuted-MNIST / split-feature task streams |
 //! | [`replay`]    | §IV-A data-preparation unit |
 //! | [`runtime`]   | PJRT client; loads `artifacts/*.hlo.txt` |
-//! | [`coordinator`]| trainer, batcher, tile scheduler, metrics |
-//! | [`config`]    | network configs + TOML-subset loader |
+//! | [`coordinator`]| trainer, batcher, parallel serving engine, tile scheduler, metrics |
+//! | [`config`]    | network configs + run/backend selection + TOML-subset loader |
 //! | [`cli`]       | argument parsing for the `m2ru` binary |
 //! | [`experiments`]| regenerates every paper figure/table |
 //! | [`proptest`]  | in-tree property-testing mini-framework |
 
+pub mod backend;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -10,11 +10,12 @@
 
 use anyhow::{bail, Context, Result};
 
+use m2ru::backend::{BackendCtx, BackendRegistry};
 use m2ru::cli::Args;
 use m2ru::config::{Manifest, NetConfig, RunConfig};
 use m2ru::coordinator::{
-    ContinualTrainer, Engine, HardwareEngine, RustAdamEngine, RustDfaEngine, XlaAdamEngine,
-    XlaDfaEngine,
+    ContinualTrainer, Engine, HardwareEngine, ParallelEngine, RustAdamEngine, RustDfaEngine,
+    XlaAdamEngine, XlaDfaEngine,
 };
 use m2ru::device::DeviceParams;
 use m2ru::experiments::{
@@ -30,9 +31,13 @@ USAGE: m2ru [--artifacts DIR] [--results DIR] <subcommand> [flags]
 
 SUBCOMMANDS
   info                      platform, manifest and hw-model summary
+  backends                  list the registered compute backends
   train                     one continual-learning run
       --net NAME            network config (small|pmnist100|pmnist256|cifar100|cifar256)
-      --engine NAME         adam|dfa|hw|rust-dfa|rust-adam   [dfa]
+      --backend NAME        dense|crossbar|artifact (BackendRegistry)  [dense]
+      --workers N           worker threads for the serving engine      [1]
+      --engine NAME         legacy engine path: adam|dfa|hw|rust-dfa|rust-adam
+                            (overrides --backend; dfa/adam/hw need artifacts)
       --dataset NAME        pmnist|cifarfeat (must match --net geometry)
       --config FILE         TOML run configuration
       --tasks N --train-per-task N --test-per-task N --epochs N
@@ -76,16 +81,27 @@ fn cmd_info(rt: &Runtime, manifest: &Manifest) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(rt: &Runtime, manifest: &Manifest, args: &mut Args) -> Result<()> {
+fn cmd_train(artifacts: &str, args: &mut Args) -> Result<()> {
     let net = args.get("net", "pmnist100");
-    let engine_name = args.get("engine", "dfa");
+    let engine_flag = args.get_opt("engine");
     let cfg = NetConfig::by_name(&net).with_context(|| format!("unknown net `{net}`"))?;
     let default_ds = if net.starts_with("cifar") { "cifarfeat" } else { "pmnist" };
     let dataset = args.get("dataset", default_ds);
     let levels_flag = args.get_parse("levels", DeviceParams::default().levels)?;
     let mut run = RunConfig::default();
     apply_run_flags(args, &mut run)?;
+    if let Some(b) = args.get_opt("backend") {
+        run.backend = b;
+    }
+    run.workers = args.get_parse("workers", run.workers)?;
+    run.validate()?;
     args.finish()?;
+    if engine_flag.is_some() && run.workers > 1 {
+        eprintln!(
+            "note: --workers applies to the backend serving path; \
+             legacy --engine runs single-threaded"
+        );
+    }
 
     let stream = match dataset.as_str() {
         "pmnist" => {
@@ -99,7 +115,6 @@ fn cmd_train(rt: &Runtime, manifest: &Manifest, args: &mut Args) -> Result<()> {
         other => bail!("unknown dataset `{other}`"),
     };
 
-    println!("training `{engine_name}` on {dataset} with net {net} ({} tasks)", run.num_tasks);
     let mut trainer = ContinualTrainer::new(&stream, run.clone(), cfg.b_train, cfg.b_eval);
 
     let run_engine = |trainer: &mut ContinualTrainer, eng: &mut dyn Engine| -> Result<()> {
@@ -116,32 +131,64 @@ fn cmd_train(rt: &Runtime, manifest: &Manifest, args: &mut Args) -> Result<()> {
         Ok(())
     };
 
-    match engine_name.as_str() {
-        "rust-dfa" => {
+    match engine_flag.as_deref() {
+        // The serving path: backend selected through the registry, batches
+        // sharded across workers by the parallel engine. Needs no XLA or
+        // artifacts unless `--backend artifact` is chosen.
+        None => {
+            println!(
+                "training backend `{}` ({} worker{}) on {dataset} with net {net} ({} tasks)",
+                run.backend,
+                run.workers,
+                if run.workers == 1 { "" } else { "s" },
+                run.num_tasks
+            );
+            let mut ctx = BackendCtx::from_run(cfg, &run);
+            ctx.device = DeviceParams { levels: levels_flag, ..DeviceParams::default() };
+            ctx.artifacts_dir = artifacts.to_string();
+            let backend = BackendRegistry::with_defaults().create(&run.backend, &ctx)?;
+            let mut e = ParallelEngine::new(backend, run.workers);
+            run_engine(&mut trainer, &mut e)?;
+            for line in e.stats() {
+                println!("{line}");
+            }
+        }
+        Some("rust-dfa") => {
             let mut e = RustDfaEngine::new(
                 cfg.nx, cfg.nh, cfg.ny, run.lam, run.beta, run.lr, Some(cfg.keep_frac), run.seed,
             );
+            println!("training `rust-dfa` on {dataset} with net {net} ({} tasks)", run.num_tasks);
             run_engine(&mut trainer, &mut e)?;
         }
-        "rust-adam" => {
+        Some("rust-adam") => {
             let mut e =
                 RustAdamEngine::new(cfg.nx, cfg.nh, cfg.ny, run.lam, run.beta, run.lr * 0.05, run.seed);
+            println!("training `rust-adam` on {dataset} with net {net} ({} tasks)", run.num_tasks);
             run_engine(&mut trainer, &mut e)?;
         }
-        "dfa" => {
-            let bundle = ModelBundle::load(rt, manifest, cfg)?;
+        Some("dfa") => {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(artifacts)?;
+            let bundle = ModelBundle::load(&rt, &manifest, cfg)?;
             let mut e = XlaDfaEngine::new(&bundle, run.lam, run.beta, run.lr, run.seed);
+            println!("training `dfa` on {dataset} with net {net} ({} tasks)", run.num_tasks);
             run_engine(&mut trainer, &mut e)?;
         }
-        "adam" => {
-            let bundle = ModelBundle::load(rt, manifest, cfg)?;
+        Some("adam") => {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(artifacts)?;
+            let bundle = ModelBundle::load(&rt, &manifest, cfg)?;
             let mut e = XlaAdamEngine::new(&bundle, run.lam, run.beta, run.lr * 0.05, run.seed);
+            println!("training `adam` on {dataset} with net {net} ({} tasks)", run.num_tasks);
             run_engine(&mut trainer, &mut e)?;
         }
-        "hw" => {
-            let bundle = ModelBundle::load(rt, manifest, cfg)?;
+        Some("hw") => {
+            let rt = Runtime::cpu()?;
+            let manifest = Manifest::load(artifacts)?;
+            let bundle = ModelBundle::load(&rt, &manifest, cfg)?;
             let device = DeviceParams { levels: levels_flag, ..DeviceParams::default() };
             let mut e = HardwareEngine::new(&bundle, run.lam, run.beta, run.lr, device, run.seed);
+            println!("training `hw` on {dataset} with net {net} ({} tasks)", run.num_tasks);
             run_engine(&mut trainer, &mut e)?;
             println!(
                 "device writes: total={} mean/step={:.1}",
@@ -149,7 +196,7 @@ fn cmd_train(rt: &Runtime, manifest: &Manifest, args: &mut Args) -> Result<()> {
                 e.programmer.writes_per_step()
             );
         }
-        other => bail!("unknown engine `{other}`"),
+        Some(other) => bail!("unknown engine `{other}`"),
     }
     println!("final MA={:.3} forgetting={:.3}", trainer.matrix.mean_final(), trainer.matrix.forgetting());
     Ok(())
@@ -295,11 +342,14 @@ fn main() -> Result<()> {
             let manifest = Manifest::load(&artifacts)?;
             cmd_info(&rt, &manifest)
         }
-        "train" => {
-            let rt = Runtime::cpu()?;
-            let manifest = Manifest::load(&artifacts)?;
-            cmd_train(&rt, &manifest, &mut args)
+        "backends" => {
+            args.finish()?;
+            for name in BackendRegistry::with_defaults().names() {
+                println!("{name}");
+            }
+            Ok(())
         }
+        "train" => cmd_train(&artifacts, &mut args),
         "experiment" => {
             let rt = Runtime::cpu()?;
             let manifest = Manifest::load(&artifacts)?;

@@ -1,7 +1,10 @@
 //! End-to-end continual-learning behaviour through the XLA engines:
 //! replay vs catastrophic forgetting, hardware-vs-software gap, and the
 //! full trainer/batcher/replay pipeline. Scaled-down workloads (wallclock)
-//! but the same code paths as the paper experiments. Requires artifacts.
+//! but the same code paths as the paper experiments. Requires artifacts
+//! and a real PJRT runtime: build with `--features xla-runtime` after
+//! swapping `vendor/xla-stub` for the real `xla` crate.
+#![cfg(feature = "xla-runtime")]
 
 use m2ru::config::{Manifest, NetConfig, RunConfig};
 use m2ru::coordinator::{ContinualTrainer, HardwareEngine, XlaDfaEngine};

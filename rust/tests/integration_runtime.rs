@@ -1,6 +1,9 @@
 //! Cross-layer numerical contract: the AOT artifacts (JAX/Pallas → HLO →
 //! PJRT) must agree with the pure-rust oracles on the same inputs.
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and a real PJRT runtime: build with
+//! `--features xla-runtime` after swapping `vendor/xla-stub` for the real
+//! `xla` crate (the offline stub cannot execute artifacts).
+#![cfg(feature = "xla-runtime")]
 
 use m2ru::config::{Manifest, NetConfig};
 use m2ru::nn::{bptt_grads, dfa_grads, make_psi, AdamState, MiruParams, SeqBatch};

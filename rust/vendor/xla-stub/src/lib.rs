@@ -1,0 +1,168 @@
+//! Offline stub of the `xla` PJRT binding surface the m2ru runtime links
+//! against. Host-side literal plumbing ([`Literal`]) is fully functional
+//! so it can be unit-tested; everything that would need the real XLA
+//! runtime (HLO parsing, compilation, execution) returns a descriptive
+//! [`XlaError`] instead. Swap this path dependency for the real `xla`
+//! crate to execute AOT artifacts (see DESIGN.md §6).
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `anyhow` interop.
+#[derive(Clone, Debug)]
+pub struct XlaError {
+    pub msg: String,
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError {
+        msg: format!(
+            "{what} is unavailable: this build links the offline `xla` stub \
+             (vendor/xla-stub); link the real xla crate to execute artifacts"
+        ),
+    }
+}
+
+/// Element types the stub can read back out of a literal.
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+/// Host literal: flat f32 buffer plus dimensions. The constructors and
+/// reshape/readback paths are real; device transfer is not.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl From<f32> for Literal {
+    fn from(v: f32) -> Literal {
+        Literal { data: vec![v], dims: vec![] }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), dims: vec![v.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.data.len() {
+            return Err(XlaError {
+                msg: format!("reshape {:?} -> {:?}: element count mismatch", self.dims, dims),
+            });
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements back to the host.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Unpack a tuple literal. The stub never produces tuples, so this is
+    /// only reachable through a (stubbed-out) execution path.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple (tuple results only come from execution)"))
+    }
+}
+
+/// Parsed HLO module handle (parsing needs the real runtime).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation handle wrapping a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. Construction succeeds (so `m2ru info` can report
+/// the platform); compilation is where the stub stops.
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu (no XLA runtime linked)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Device buffer handle returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        let s = Literal::from(7.5);
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn runtime_paths_error_descriptively() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        assert!(client.compile(&XlaComputation).is_err());
+        let err = PjRtLoadedExecutable.execute::<Literal>(&[]).unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+}
