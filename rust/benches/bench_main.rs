@@ -16,11 +16,15 @@
 //!     artifacts/PJRT runtime are present.
 //!
 //! Select with `cargo bench -- <filter>` (substring match).
+//!
+//! Machine-readable output: every pure-rust microbench also lands in
+//! `results/BENCH_serve.json` as `{name, iters, ns_per_iter, throughput}`
+//! records, so the perf trajectory is trackable across PRs.
 
 use std::time::Instant;
 
 use m2ru::backend::{BackendCtx, BackendRegistry, ComputeBackend};
-use m2ru::config::{Manifest, NetConfig, RunConfig};
+use m2ru::config::{Manifest, NetConfig, RunConfig, ServeConfig};
 use m2ru::coordinator::{Engine, HardwareEngine, ParallelEngine, RustDfaEngine, XlaDfaEngine};
 use m2ru::data::{permuted_task_stream, synthetic_mnist, Example};
 use m2ru::device::{DeviceParams, DifferentialCrossbar, ZiksaProgrammer};
@@ -33,8 +37,23 @@ use m2ru::nn::SeqBatch;
 use m2ru::replay::ReplayBuffer;
 use m2ru::rng::GaussianRng;
 use m2ru::runtime::{ModelBundle, Runtime};
+use m2ru::serve::{run_serve, DynamicBatcher, ServeOptions, SessionStore, StepRequest};
 
-fn timeit<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+/// One benchmark result, serialized to `results/BENCH_serve.json`.
+struct BenchRecord {
+    name: String,
+    iters: usize,
+    ns_per_iter: f64,
+}
+
+impl BenchRecord {
+    /// Iterations per second.
+    fn throughput(&self) -> f64 {
+        1e9 / self.ns_per_iter.max(1e-9)
+    }
+}
+
+fn timeit<F: FnMut()>(recs: &mut Vec<BenchRecord>, name: &str, iters: usize, mut f: F) {
     // warm-up
     f();
     let mut samples = Vec::with_capacity(iters);
@@ -47,6 +66,28 @@ fn timeit<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
     let max = samples.iter().cloned().fold(0.0f64, f64::max);
     println!("{name:<46} {mean:>10.3} ms/iter  (min {min:>8.3}, max {max:>8.3}, n={iters})");
+    recs.push(BenchRecord { name: name.to_string(), iters, ns_per_iter: mean * 1e6 });
+}
+
+/// Hand-rolled JSON (no serde in the offline build); bench names contain
+/// no characters needing escapes.
+fn write_bench_json(path: &str, recs: &[BenchRecord]) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in recs.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"iters\": {}, \"ns_per_iter\": {:.1}, \"throughput\": {:.3}}}{}\n",
+            r.name,
+            r.iters,
+            r.ns_per_iter,
+            r.throughput(),
+            if i + 1 < recs.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s)
 }
 
 fn batch_from(examples: &[Example], b: usize, nt: usize, nx: usize) -> SeqBatch {
@@ -62,6 +103,7 @@ fn batch_from(examples: &[Example], b: usize, nt: usize, nx: usize) -> SeqBatch 
 fn main() -> anyhow::Result<()> {
     let filter = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_default();
     let runs = |name: &str| filter.is_empty() || name.contains(&filter);
+    let mut recs: Vec<BenchRecord> = Vec::new();
 
     let cfg = NetConfig::PMNIST100;
     let stream = permuted_task_stream(1, 64, 16, 0);
@@ -77,10 +119,10 @@ fn main() -> anyhow::Result<()> {
             let a = Mat::from_fn(n, n, |r, c| ((r * 31 + c * 7) % 13) as f32 * 0.1 - 0.6);
             let b = Mat::from_fn(n, n, |r, c| ((r * 17 + c * 3) % 11) as f32 * 0.1 - 0.5);
             let iters = if n >= 512 { 8 } else { 20 };
-            timeit(&format!("matmul_ikj ({n}x{n})"), iters, || {
+            timeit(&mut recs, &format!("matmul_ikj ({n}x{n})"), iters, || {
                 let _ = a.matmul_ikj(&b);
             });
-            timeit(&format!("matmul_blocked ({n}x{n})"), iters, || {
+            timeit(&mut recs, &format!("matmul_blocked ({n}x{n})"), iters, || {
                 let _ = a.matmul_blocked(&b);
             });
         }
@@ -88,7 +130,7 @@ fn main() -> anyhow::Result<()> {
     if runs("backend_train_step") {
         for name in ["dense", "crossbar"] {
             let mut be = registry.create(name, &ctx)?;
-            timeit(&format!("backend_train_step ({name}, b=32, pmnist100)"), 10, || {
+            timeit(&mut recs, &format!("backend_train_step ({name}, b=32, pmnist100)"), 10, || {
                 be.train_dfa(&train_b).unwrap();
             });
         }
@@ -96,7 +138,7 @@ fn main() -> anyhow::Result<()> {
     if runs("backend_eval") {
         for name in ["dense", "crossbar"] {
             let be = registry.create(name, &ctx)?;
-            timeit(&format!("backend_eval ({name}, b=200, pmnist100)"), 10, || {
+            timeit(&mut recs, &format!("backend_eval ({name}, b=200, pmnist100)"), 10, || {
                 be.forward(&eval_b).unwrap();
             });
         }
@@ -107,14 +149,14 @@ fn main() -> anyhow::Result<()> {
         for workers in [1usize, 2, 4] {
             let be = registry.create("crossbar", &ctx)?;
             let mut eng = ParallelEngine::new(be, workers);
-            timeit(&format!("parallel_eval (crossbar, b=200, workers={workers})"), 10, || {
+            timeit(&mut recs, &format!("parallel_eval (crossbar, b=200, workers={workers})"), 10, || {
                 eng.eval_batch(&eval_b).unwrap();
             });
         }
     }
     if runs("rust_train_step") {
         let mut eng = RustDfaEngine::new(28, 100, 10, 0.96, 0.3, 0.3, Some(0.53), 1);
-        timeit("rust_train_step (digital baseline, b=32)", 10, || {
+        timeit(&mut recs, "rust_train_step (digital baseline, b=32)", 10, || {
             eng.train_batch(&train_b).unwrap();
         });
     }
@@ -126,13 +168,13 @@ fn main() -> anyhow::Result<()> {
         use m2ru::runtime::host_overhead_probe;
         let p = MiruParams::init(cfg.nx, cfg.nh, cfg.ny, 1);
         let psi = make_psi(cfg.ny, cfg.nh, 2);
-        timeit("l3_host_overhead (literals for 1 train step)", 50, || {
+        timeit(&mut recs, "l3_host_overhead (literals for 1 train step)", 50, || {
             host_overhead_probe(&p, &psi, &train_b).unwrap();
         });
     }
     if runs("replay_pipeline") {
         let digits = synthetic_mnist(256, 0);
-        timeit("replay_pipeline (reservoir+squant, 256 imgs)", 20, || {
+        timeit(&mut recs, "replay_pipeline (reservoir+squant, 256 imgs)", 20, || {
             let mut buf = ReplayBuffer::new(64, 0.0, 1.0, 42);
             buf.begin_task();
             for e in &digits {
@@ -149,7 +191,7 @@ fn main() -> anyhow::Result<()> {
         }
         buf.begin_task();
         let mut rng = GaussianRng::new(1);
-        timeit("replay_sample (draw+dequant 32 examples)", 50, || {
+        timeit(&mut recs, "replay_sample (draw+dequant 32 examples)", 50, || {
             let _ = buf.sample_past(32, &mut rng);
         });
     }
@@ -157,16 +199,81 @@ fn main() -> anyhow::Result<()> {
         let mut xb = DifferentialCrossbar::new(128, 100, 1.0, DeviceParams::default(), 0);
         let w = Mat::from_fn(128, 100, |r, c| ((r + c) % 13) as f32 * 0.01);
         let mut prog = ZiksaProgrammer::new();
-        timeit("crossbar_program (12.8k devices)", 20, || {
+        timeit(&mut recs, "crossbar_program (12.8k devices)", 20, || {
             prog.apply(&mut xb, &w);
         });
     }
     if runs("crossbar_read") {
         let xb = DifferentialCrossbar::new(128, 100, 1.0, DeviceParams::default(), 0);
-        timeit("crossbar_read (12.8k devices)", 50, || {
+        timeit(&mut recs, "crossbar_read (12.8k devices)", 50, || {
             let _ = xb.read_weights();
         });
     }
+    if runs("serve_session_store") {
+        let mut store = SessionStore::new(cfg.nh, cfg.nx, cfg.nt, 4096, 0);
+        let row = vec![0.1f32; cfg.nx];
+        let mut tick = 0u64;
+        timeit(&mut recs, "serve_session_store (1k lookups+history)", 50, || {
+            for u in 0..1000u64 {
+                let slot = store.get_or_create(u % 5000, tick);
+                store.push_history(slot, &row);
+                tick += 1;
+            }
+        });
+    }
+    if runs("serve_dynamic_batcher") {
+        timeit(&mut recs, "serve_dynamic_batcher (1k reqs, b=32)", 50, || {
+            let mut b = DynamicBatcher::new(32, 4);
+            for i in 0..1000u64 {
+                b.push(StepRequest {
+                    session: i % 200,
+                    x: vec![0.0; 4],
+                    label: None,
+                    enqueued_tick: i / 32,
+                    enqueued_at: Instant::now(),
+                });
+            }
+            let mut tick = 0;
+            while b.drain(tick).is_some() {
+                tick += 1;
+            }
+        });
+    }
+    if runs("serve_step_batch") {
+        // the serving hot path: one padded single-timestep dispatch
+        for (name, workers) in [("dense", 1usize), ("dense", 4), ("crossbar", 4)] {
+            let be = registry.create(name, &ctx)?;
+            let eng = ParallelEngine::new(be, workers);
+            let h = Mat::zeros(32, cfg.nh);
+            let x = Mat::from_fn(32, cfg.nx, |r, c| ((r * 13 + c) % 9) as f32 * 0.1 - 0.4);
+            timeit(
+                &mut recs,
+                &format!("serve_step_batch ({name}, b=32, workers={workers})"),
+                50,
+                || {
+                    eng.step_sessions(&h, &x).unwrap();
+                },
+            );
+        }
+    }
+    if runs("serve_e2e") {
+        // whole serve loop: batcher + store + sharded stepping (workers=4,
+        // padded b=32) + online commits (16 sessions x ~32 steps each on
+        // nt=28 yields ~16 labels => several update_every=4 commits)
+        let mut run = RunConfig::default();
+        run.workers = 4;
+        run.serve =
+            ServeConfig { max_batch: 32, capacity: 256, update_every: 4, ..ServeConfig::default() };
+        let mut opts = ServeOptions::new(NetConfig::PMNIST100, run);
+        opts.requests = 512;
+        opts.sessions = 16;
+        timeit(&mut recs, "serve_e2e (dense, 512 reqs, 16 sessions, workers=4)", 5, || {
+            run_serve(&opts).unwrap();
+        });
+    }
+
+    write_bench_json("results/BENCH_serve.json", &recs)?;
+    println!("[wrote results/BENCH_serve.json: {} records]", recs.len());
 
     // everything below needs a real PJRT runtime + `make artifacts`;
     // probing all the way through ModelBundle::load also catches the
@@ -248,28 +355,30 @@ fn main() -> anyhow::Result<()> {
     println!("== XLA hot-path microbenches ====================================");
     if runs("xla_train_step") {
         let mut eng = XlaDfaEngine::new(&bundle, 0.96, 0.3, 0.3, 1);
-        timeit("xla_train_step (dfa, b=32, pmnist100)", 20, || {
+        timeit(&mut recs, "xla_train_step (dfa, b=32, pmnist100)", 20, || {
             eng.train_batch(&train_b).unwrap();
         });
     }
     if runs("xla_eval") {
         let mut eng = XlaDfaEngine::new(&bundle, 0.96, 0.3, 0.3, 1);
-        timeit("xla_eval (sw forward, b=200)", 20, || {
+        timeit(&mut recs, "xla_eval (sw forward, b=200)", 20, || {
             eng.eval_batch(&eval_b).unwrap();
         });
     }
     if runs("hw_eval") {
         let mut eng = HardwareEngine::new(&bundle, 0.96, 0.3, 0.3, DeviceParams::default(), 1);
-        timeit("hw_eval (WBS+ADC forward, b=200)", 5, || {
+        timeit(&mut recs, "hw_eval (WBS+ADC forward, b=200)", 5, || {
             eng.eval_batch(&eval_b).unwrap();
         });
     }
     if runs("hw_train_step") {
         let mut eng = HardwareEngine::new(&bundle, 0.96, 0.3, 0.3, DeviceParams::default(), 1);
-        timeit("hw_train_step (dfa + ziksa writes, b=32)", 10, || {
+        timeit(&mut recs, "hw_train_step (dfa + ziksa writes, b=32)", 10, || {
             eng.train_batch(&train_b).unwrap();
         });
     }
+    // refresh the JSON so the XLA records land too
+    write_bench_json("results/BENCH_serve.json", &recs)?;
     println!("\nbench_main done");
     Ok(())
 }

@@ -44,26 +44,30 @@ pub struct CrossbarBackend {
 /// (§IV-B1): the integrator swing is bounded by the L1 norm of the
 /// heaviest bitline, and the ADC range follows it so training growth
 /// never clips the read-out (clipped logits collapse argmax).
-/// `g_hidden` is the stacked `[W_h; U_h]` crossbar readout.
-fn adaptive_vscales(g_hidden: &Mat, wo: &Mat) -> (f32, f32) {
-    let l1max = |m: &Mat| -> f32 {
-        let mut best = 0.0f32;
-        for c in 0..m.cols {
-            let mut s = 0.0;
-            for r in 0..m.rows {
-                s += m.at(r, c).abs();
-            }
-            best = best.max(s);
+fn l1max(m: &Mat) -> f32 {
+    let mut best = 0.0f32;
+    for c in 0..m.cols {
+        let mut s = 0.0;
+        for r in 0..m.rows {
+            s += m.at(r, c).abs();
         }
-        best
-    };
-    // hidden drive: |x| ≤ 1 on nx lines, |βh| ≤ β on nh lines; typical
-    // activity is far below the bound — a third of the bound keeps the
-    // LSB fine while tanh saturation forgives the rare clip.
-    let vscale_h = (0.3 * l1max(g_hidden)).max(1.0);
-    // readout: logits must never clip (argmax!), use the full bound.
-    let vscale_o = l1max(wo).max(1.0);
-    (vscale_h, vscale_o)
+        best = best.max(s);
+    }
+    best
+}
+
+/// Hidden-layer ADC full-scale: the drive is |x| ≤ 1 on nx lines and
+/// |βh| ≤ β on nh lines; typical activity is far below the bound — a
+/// third of the bound keeps the LSB fine while tanh saturation forgives
+/// the rare clip. `g_hidden` is the stacked `[W_h; U_h]` crossbar readout.
+fn vscale_hidden(g_hidden: &Mat) -> f32 {
+    (0.3 * l1max(g_hidden)).max(1.0)
+}
+
+/// Readout ADC full-scale: logits must never clip (argmax!), use the
+/// full bound.
+fn vscale_readout(wo: &Mat) -> f32 {
+    l1max(wo).max(1.0)
 }
 
 impl CrossbarBackend {
@@ -119,6 +123,45 @@ impl CrossbarBackend {
             *v = wbs_input_quantize(*v, self.nb);
         }
     }
+
+    /// One mixed-signal recurrent step against an already-read hidden
+    /// crossbar: WBS-digitized `[x | βh]` drive → analog VMM → shared ADC
+    /// at `vscale_h` → digital bias/tanh/interpolation. Both
+    /// [`ComputeBackend::forward`] and [`ComputeBackend::step_hidden`]
+    /// route through here, so streaming and whole-sequence execution are
+    /// bitwise-identical (crossbar reads are deterministic between
+    /// programming events).
+    fn step_with(&self, g_hidden: &Mat, vscale_h: f32, h: &Mat, xt: &Mat) -> Mat {
+        let (lam, beta) = (self.hyper.lam, self.hyper.beta);
+        let mut bh_scaled = h.clone();
+        bh_scaled.scale(beta);
+        let mut drive = Mat::hcat(xt, &bh_scaled); // wordline voltages
+        self.digitize(&mut drive);
+        let mut acc = drive.matmul(g_hidden); // integrator voltages
+        for v in &mut acc.data {
+            *v = adc_quantize(*v, self.adc_bits, vscale_h);
+        }
+        acc.add_row_bias(&self.bh);
+        let cand = acc.map(f32::tanh);
+        let mut h_new = h.clone();
+        h_new.scale(lam);
+        h_new.add_scaled(&cand, 1.0 - lam);
+        h_new
+    }
+
+    /// Readout half of the datapath against an already-read output
+    /// crossbar: digitized hidden state → analog VMM → ADC at `vscale_o`
+    /// → digital bias add.
+    fn readout_with(&self, wo: &Mat, vscale_o: f32, h: &Mat) -> Mat {
+        let mut hq = h.clone();
+        self.digitize(&mut hq);
+        let mut logits = hq.matmul(wo);
+        for v in &mut logits.data {
+            *v = adc_quantize(*v, self.adc_bits, vscale_o);
+        }
+        logits.add_row_bias(&self.bo);
+        logits
+    }
 }
 
 impl ComputeBackend for CrossbarBackend {
@@ -150,32 +193,48 @@ impl ComputeBackend for CrossbarBackend {
         // stacked [W_h; U_h] layout the datapath drives
         let g_hidden = self.xbar_hidden.read_weights();
         let wo = self.xbar_out.read_weights();
-        let (vscale_h, vscale_o) = adaptive_vscales(&g_hidden, &wo);
-        let (lam, beta) = (self.hyper.lam, self.hyper.beta);
+        let vscale_h = vscale_hidden(&g_hidden);
+        let vscale_o = vscale_readout(&wo);
         let mut h = Mat::zeros(x.b, self.nh);
         for t in 0..x.nt {
-            let xt = x.step(t);
-            let mut bh_scaled = h.clone();
-            bh_scaled.scale(beta);
-            let mut drive = Mat::hcat(&xt, &bh_scaled); // wordline voltages
-            self.digitize(&mut drive);
-            let mut acc = drive.matmul(&g_hidden); // integrator voltages
-            for v in &mut acc.data {
-                *v = adc_quantize(*v, self.adc_bits, vscale_h);
-            }
-            acc.add_row_bias(&self.bh);
-            let cand = acc.map(f32::tanh);
-            h.scale(lam);
-            h.add_scaled(&cand, 1.0 - lam);
+            h = self.step_with(&g_hidden, vscale_h, &h, &x.step(t));
         }
-        let mut hq = h;
-        self.digitize(&mut hq);
-        let mut logits = hq.matmul(&wo);
-        for v in &mut logits.data {
-            *v = adc_quantize(*v, self.adc_bits, vscale_o);
-        }
-        logits.add_row_bias(&self.bo);
-        Ok(logits)
+        Ok(self.readout_with(&wo, vscale_o, &h))
+    }
+
+    fn step_hidden(&self, h: &Mat, x: &Mat) -> Result<Mat> {
+        ensure!(x.cols == self.nx, "step nx {} != net nx {}", x.cols, self.nx);
+        ensure!(h.cols == self.nh, "step nh {} != net nh {}", h.cols, self.nh);
+        ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
+        let g_hidden = self.xbar_hidden.read_weights();
+        let vscale_h = vscale_hidden(&g_hidden);
+        Ok(self.step_with(&g_hidden, vscale_h, h, x))
+    }
+
+    fn readout(&self, h: &Mat) -> Result<Mat> {
+        ensure!(h.cols == self.nh, "readout nh {} != net nh {}", h.cols, self.nh);
+        let wo = self.xbar_out.read_weights();
+        let vscale_o = vscale_readout(&wo);
+        Ok(self.readout_with(&wo, vscale_o, h))
+    }
+
+    /// Snapshot variant: `p` is the `effective_params` readout, so
+    /// re-stacking `[W_h; U_h]` reproduces the hidden crossbar's read
+    /// bit-for-bit without touching the devices again — one read per
+    /// dispatched serve batch instead of one per worker shard.
+    fn step_hidden_from(&self, p: &MiruParams, h: &Mat, x: &Mat) -> Result<Mat> {
+        ensure!(x.cols == self.nx, "step nx {} != net nx {}", x.cols, self.nx);
+        ensure!(h.cols == self.nh, "step nh {} != net nh {}", h.cols, self.nh);
+        ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
+        let g_hidden = Mat::vcat(&p.wh, &p.uh);
+        let vscale_h = vscale_hidden(&g_hidden);
+        Ok(self.step_with(&g_hidden, vscale_h, h, x))
+    }
+
+    fn readout_from(&self, p: &MiruParams, h: &Mat) -> Result<Mat> {
+        ensure!(h.cols == self.nh, "readout nh {} != net nh {}", h.cols, self.nh);
+        let vscale_o = vscale_readout(&p.wo);
+        Ok(self.readout_with(&p.wo, vscale_o, h))
     }
 
     /// Integrator voltages of one crossbar (pre-ADC), after WBS input

@@ -77,6 +77,28 @@ impl ComputeBackend for DenseBackend {
         }
     }
 
+    fn step_hidden(&self, h: &Mat, x: &Mat) -> Result<Mat> {
+        self.step_hidden_from(&self.params, h, x)
+    }
+
+    fn readout(&self, h: &Mat) -> Result<Mat> {
+        self.readout_from(&self.params, h)
+    }
+
+    fn step_hidden_from(&self, p: &MiruParams, h: &Mat, x: &Mat) -> Result<Mat> {
+        ensure!(x.cols == p.nx(), "step nx {} != net nx {}", x.cols, p.nx());
+        ensure!(h.cols == p.nh(), "step nh {} != net nh {}", h.cols, p.nh());
+        ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
+        Ok(p.step(h, x, self.hyper.lam, self.hyper.beta).1)
+    }
+
+    fn readout_from(&self, p: &MiruParams, h: &Mat) -> Result<Mat> {
+        ensure!(h.cols == p.nh(), "readout nh {} != net nh {}", h.cols, p.nh());
+        let mut logits = h.matmul(&p.wo);
+        logits.add_row_bias(&p.bo);
+        Ok(logits)
+    }
+
     fn dfa_raw_grads_from(&self, p: &MiruParams, x: &SeqBatch) -> Result<DfaDeltas> {
         Ok(dfa_grads(p, x, self.hyper.lam, self.hyper.beta, 1.0, &self.psi, None))
     }

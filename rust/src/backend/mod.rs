@@ -32,7 +32,7 @@ pub use crossbar::CrossbarBackend;
 pub use dense::DenseBackend;
 pub use registry::{BackendFactory, BackendRegistry};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::{NetConfig, RunConfig};
 use crate::device::DeviceParams;
@@ -133,6 +133,44 @@ pub trait ComputeBackend: Send + Sync {
     /// and return integrator voltages; digital backends return the exact
     /// product.
     fn vmm(&self, x: &Mat, layer: LayerSel) -> Result<Mat>;
+
+    /// Advance caller-owned hidden state by one timestep: `h` is `[b, nh]`
+    /// (one row per session), `x` is `[b, nx]`, and the result is the new
+    /// `[b, nh]` hidden state through this substrate's datapath. The
+    /// serving contract: driving a sequence one timestep at a time through
+    /// `step_hidden` from a zero state, then calling
+    /// [`ComputeBackend::readout`], must produce *bitwise-identical*
+    /// logits to [`ComputeBackend::forward`] on the whole sequence.
+    /// Backends lowered with whole-sequence static graphs cannot offer a
+    /// single-step entry point and report an error.
+    fn step_hidden(&self, _h: &Mat, _x: &Mat) -> Result<Mat> {
+        Err(anyhow!("backend `{}` has no single-step serving entry point", self.name()))
+    }
+
+    /// Final-layer logits `[b, ny]` from a caller-owned hidden state
+    /// `[b, nh]` — the readout half of the streaming contract (see
+    /// [`ComputeBackend::step_hidden`]).
+    fn readout(&self, _h: &Mat) -> Result<Mat> {
+        Err(anyhow!("backend `{}` has no single-step serving entry point", self.name()))
+    }
+
+    /// [`ComputeBackend::step_hidden`] against an already-materialized
+    /// weight snapshot (`p` should come from
+    /// [`ComputeBackend::effective_params`]). The serving engine reads
+    /// the substrate once per dispatched batch and shares the snapshot
+    /// across worker shards — for crossbars that is one device read per
+    /// batch instead of one per shard per step (the same discipline as
+    /// [`ComputeBackend::dfa_raw_grads_from`] on the train path).
+    /// Bitwise-identical to `step_hidden` on an unchanged substrate.
+    fn step_hidden_from(&self, _p: &MiruParams, h: &Mat, x: &Mat) -> Result<Mat> {
+        self.step_hidden(h, x)
+    }
+
+    /// [`ComputeBackend::readout`] against an already-materialized weight
+    /// snapshot.
+    fn readout_from(&self, _p: &MiruParams, h: &Mat) -> Result<Mat> {
+        self.readout(h)
+    }
 
     /// Dense unit-lr DFA deltas (`−g`) from an already-materialized
     /// weight snapshot. Pure (`&self`) so train shards can run on worker

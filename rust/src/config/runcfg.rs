@@ -38,6 +38,63 @@ pub struct RunConfig {
     pub backend: String,
     /// Worker threads for the parallel serving engine (1 = sequential).
     pub workers: usize,
+    /// Streaming-session server policy (`m2ru serve` / `m2ru loadgen`).
+    pub serve: ServeConfig,
+}
+
+/// Policy knobs of the streaming session server (`rust/src/serve/`):
+/// session-store sizing, dynamic-batcher dispatch, and the online
+/// continual-learning commit cadence. Time-like fields are in *logical
+/// ticks* of the serve loop, so runs are deterministic and testable under
+/// a mock clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Requests coalesced into one padded dispatch batch.
+    pub max_batch: usize,
+    /// Ticks the oldest pending request may wait before a partial batch
+    /// dispatches anyway.
+    pub max_wait: u64,
+    /// Session-store slots; at capacity the least-recently-used session
+    /// is evicted.
+    pub capacity: usize,
+    /// Idle ticks before a session expires (0 = never).
+    pub ttl: u64,
+    /// Labeled steps per online DFA commit (0 = inference only).
+    pub update_every: usize,
+    /// Reservoir capacity of each online replay segment.
+    pub replay_cap: usize,
+    /// Fraction of each online training batch drawn from replay.
+    pub replay_mix: f32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: 4,
+            capacity: 1024,
+            ttl: 0,
+            update_every: 64,
+            replay_cap: 256,
+            replay_mix: 0.5,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.max_batch >= 1, "serve.max_batch must be >= 1");
+        anyhow::ensure!(
+            self.capacity >= self.max_batch,
+            "serve.capacity must be >= serve.max_batch (a dispatch batch holds distinct live sessions)"
+        );
+        anyhow::ensure!(self.replay_cap >= 1, "serve.replay_cap must be >= 1");
+        anyhow::ensure!(
+            (0.0..=0.9).contains(&self.replay_mix),
+            "serve.replay_mix must be in [0, 0.9]"
+        );
+        Ok(())
+    }
 }
 
 impl Default for RunConfig {
@@ -60,6 +117,7 @@ impl Default for RunConfig {
             seed: 42,
             backend: "dense".to_string(),
             workers: 1,
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -93,6 +151,13 @@ impl RunConfig {
                 "replay.enabled" => {
                     self.replay = v.as_bool().context("replay.enabled: bool")?;
                 }
+                "serve.max_batch" => self.serve.max_batch = iget()?,
+                "serve.max_wait" => self.serve.max_wait = iget()? as u64,
+                "serve.capacity" => self.serve.capacity = iget()?,
+                "serve.ttl" => self.serve.ttl = iget()? as u64,
+                "serve.update_every" => self.serve.update_every = iget()?,
+                "serve.replay_cap" => self.serve.replay_cap = iget()?,
+                "serve.replay_mix" => self.serve.replay_mix = fget()? as f32,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -116,7 +181,7 @@ impl RunConfig {
         anyhow::ensure!(self.num_tasks >= 1, "need at least one task");
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
         anyhow::ensure!(!self.backend.is_empty(), "backend name must be non-empty");
-        Ok(())
+        self.serve.validate()
     }
 }
 
@@ -168,6 +233,31 @@ mod tests {
         assert!(RunConfig::default().apply(&map).is_err());
         let map = parse_toml("lr = -0.1\n").unwrap();
         assert!(RunConfig::default().apply(&map).is_err());
+    }
+
+    #[test]
+    fn serve_keys_from_toml() {
+        let map = parse_toml(
+            "[serve]\nmax_batch = 16\nmax_wait = 2\ncapacity = 64\nttl = 100\nupdate_every = 8\nreplay_cap = 32\nreplay_mix = 0.25\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.serve.max_batch, 16);
+        assert_eq!(cfg.serve.max_wait, 2);
+        assert_eq!(cfg.serve.capacity, 64);
+        assert_eq!(cfg.serve.ttl, 100);
+        assert_eq!(cfg.serve.update_every, 8);
+        assert_eq!(cfg.serve.replay_cap, 32);
+        assert_eq!(cfg.serve.replay_mix, 0.25);
+    }
+
+    #[test]
+    fn serve_capacity_below_batch_rejected() {
+        let map = parse_toml("[serve]\nmax_batch = 64\ncapacity = 8\n").unwrap();
+        assert!(RunConfig::default().apply(&map).is_err());
+        let bad_mix = parse_toml("[serve]\nreplay_mix = 0.95\n").unwrap();
+        assert!(RunConfig::default().apply(&bad_mix).is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::backend::{finalize_update, ComputeBackend};
-use crate::linalg::argmax_rows;
+use crate::linalg::{argmax_rows, Mat};
 use crate::nn::{DfaDeltas, SeqBatch};
 
 use super::engine::Engine;
@@ -66,12 +66,11 @@ impl ParallelEngine {
         self.workers > 1 && !self.backend.prefers_whole_batch() && b >= 2 * self.workers
     }
 
-    /// Contiguous row shards, one per worker (first `b % workers` shards
-    /// take the extra row).
-    fn shard(x: &SeqBatch, parts: usize) -> Vec<SeqBatch> {
-        let base = x.b / parts;
-        let rem = x.b % parts;
-        let row = x.nt * x.nx;
+    /// Contiguous `(start, len)` row ranges, one per worker (first
+    /// `b % parts` ranges take the extra row); empty ranges are dropped.
+    fn shard_ranges(b: usize, parts: usize) -> Vec<(usize, usize)> {
+        let base = b / parts;
+        let rem = b % parts;
         let mut out = Vec::with_capacity(parts);
         let mut start = 0;
         for w in 0..parts {
@@ -79,13 +78,92 @@ impl ParallelEngine {
             if len == 0 {
                 continue;
             }
-            let mut sb = SeqBatch::zeros(len, x.nt, x.nx);
-            sb.data.copy_from_slice(&x.data[start * row..(start + len) * row]);
-            sb.labels.copy_from_slice(&x.labels[start..start + len]);
-            out.push(sb);
+            out.push((start, len));
             start += len;
         }
         out
+    }
+
+    /// Contiguous row shards, one per worker.
+    fn shard(x: &SeqBatch, parts: usize) -> Vec<SeqBatch> {
+        let row = x.nt * x.nx;
+        Self::shard_ranges(x.b, parts)
+            .into_iter()
+            .map(|(start, len)| {
+                let mut sb = SeqBatch::zeros(len, x.nt, x.nx);
+                sb.data.copy_from_slice(&x.data[start * row..(start + len) * row]);
+                sb.labels.copy_from_slice(&x.labels[start..start + len]);
+                sb
+            })
+            .collect()
+    }
+
+    /// Advance many independent per-session hidden-state rows by one
+    /// timestep and read out logits — the streaming-serving analogue of
+    /// [`Engine::eval_batch`]. `h` is `[b, nh]` (one session per row), `x`
+    /// is `[b, nx]`; returns `(new_h, logits)`. The substrate is read
+    /// *once* per dispatch (a crossbar read walks every memristor — the
+    /// same snapshot discipline as the train path) and shared by all
+    /// workers; rows are sharded with the same range discipline as
+    /// eval/train sharding. The step math is row-independent, so the
+    /// merged result is identical for every worker count.
+    pub fn step_sessions(&self, h: &Mat, x: &Mat) -> Result<(Mat, Mat)> {
+        anyhow::ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
+        let b = h.rows;
+        let snapshot = self.backend.effective_params();
+        if !self.use_sharding(b) {
+            let hn = self.backend.step_hidden_from(&snapshot, h, x)?;
+            let logits = self.backend.readout_from(&snapshot, &hn)?;
+            return Ok((hn, logits));
+        }
+        let shards: Vec<(Mat, Mat)> = Self::shard_ranges(b, self.workers)
+            .into_iter()
+            .map(|(start, len)| (h.rows_copy(start, len), x.rows_copy(start, len)))
+            .collect();
+        let results: Vec<Result<(Mat, Mat)>> = std::thread::scope(|s| {
+            let backend: &dyn ComputeBackend = &*self.backend;
+            let snapshot = &snapshot;
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|(hs, xs)| {
+                    s.spawn(move || -> Result<(Mat, Mat)> {
+                        let hn = backend.step_hidden_from(snapshot, hs, xs)?;
+                        let logits = backend.readout_from(snapshot, &hn)?;
+                        Ok((hn, logits))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("step worker panicked"))))
+                .collect()
+        });
+        let mut outs = Vec::with_capacity(results.len());
+        for r in results {
+            outs.push(r?);
+        }
+        let ny = outs[0].1.cols;
+        let mut hn = Mat::zeros(b, h.cols);
+        let mut logits = Mat::zeros(b, ny);
+        let mut row = 0;
+        for (hs, ls) in &outs {
+            for r in 0..hs.rows {
+                hn.row_mut(row).copy_from_slice(hs.row(r));
+                logits.row_mut(row).copy_from_slice(ls.row(r));
+                row += 1;
+            }
+        }
+        Ok((hn, logits))
+    }
+
+    /// One whole-batch DFA step with **no sharding**, regardless of the
+    /// worker count — the online-serving commit path. The weight snapshot
+    /// is read once, gradients are computed once, and a single writer
+    /// commits, so serve metrics stay bit-identical for any `--workers`
+    /// (sharded training merges differ by f32 re-association).
+    pub fn train_whole(&mut self, x: &SeqBatch) -> Result<f32> {
+        self.forks_stale = true;
+        self.backend.train_dfa(x)
     }
 
     fn refresh_forks(&mut self) -> Result<()> {
@@ -266,6 +344,37 @@ mod tests {
         let l1 = engine(1, 11).train_batch(&b).unwrap();
         let l4 = engine(4, 11).train_batch(&b).unwrap();
         assert!((l1 - l4).abs() < 1e-4, "losses {l1} vs {l4}");
+    }
+
+    #[test]
+    fn step_sessions_identical_across_worker_counts() {
+        let net = NetConfig::SMALL;
+        let x = Mat::from_fn(16, net.nx, |r, c| ((r * 7 + c * 3) % 11) as f32 * 0.1 - 0.5);
+        let h0 = Mat::zeros(16, net.nh);
+        let e1 = engine(1, 21);
+        let (h1, l1) = e1.step_sessions(&h0, &x).unwrap();
+        let direct_h = e1.backend().step_hidden(&h0, &x).unwrap();
+        assert_eq!(h1.data, direct_h.data, "engine must match the direct backend step");
+        for workers in [2, 4] {
+            let ew = engine(workers, 21);
+            let (hw, lw) = ew.step_sessions(&h0, &x).unwrap();
+            assert_eq!(hw.data, h1.data, "hidden state, workers={workers}");
+            assert_eq!(lw.data, l1.data, "logits, workers={workers}");
+        }
+    }
+
+    #[test]
+    fn train_whole_matches_direct_backend_step() {
+        let net = NetConfig::SMALL;
+        let mut par = engine(4, 33);
+        let ctx =
+            BackendCtx { lam: 0.5, beta: 0.7, lr: 0.5, seed: 33, ..BackendCtx::new(net) };
+        let mut direct = BackendRegistry::with_defaults().create("dense", &ctx).unwrap();
+        for i in 0..3 {
+            let b = toy_batch(&net, 16, 40 + i);
+            // whole-batch commits must be bit-identical regardless of workers
+            assert_eq!(par.train_whole(&b).unwrap(), direct.train_dfa(&b).unwrap(), "step {i}");
+        }
     }
 
     #[test]

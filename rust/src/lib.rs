@@ -31,6 +31,7 @@
 //! | [`replay`]    | §IV-A data-preparation unit |
 //! | [`runtime`]   | PJRT client; loads `artifacts/*.hlo.txt` |
 //! | [`coordinator`]| trainer, batcher, parallel serving engine, tile scheduler, metrics |
+//! | [`serve`]     | streaming session server: per-user state, dynamic batching, online learning |
 //! | [`config`]    | network configs + run/backend selection + TOML-subset loader |
 //! | [`cli`]       | argument parsing for the `m2ru` binary |
 //! | [`experiments`]| regenerates every paper figure/table |
@@ -51,3 +52,4 @@ pub mod quant;
 pub mod replay;
 pub mod rng;
 pub mod runtime;
+pub mod serve;

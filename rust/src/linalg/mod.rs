@@ -53,6 +53,17 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Copy of the contiguous row range `[start, start + len)` — row
+    /// sharding for the parallel engines.
+    pub fn rows_copy(&self, start: usize, len: usize) -> Mat {
+        assert!(start + len <= self.rows, "rows_copy {start}+{len} > {}", self.rows);
+        Mat {
+            rows: len,
+            cols: self.cols,
+            data: self.data[start * self.cols..(start + len) * self.cols].to_vec(),
+        }
+    }
+
     /// self @ other: [m,k] x [k,n] -> [m,n].
     ///
     /// Dispatches between the simple ikj kernel ([`Mat::matmul_ikj`], best

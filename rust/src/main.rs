@@ -3,10 +3,13 @@
 //! Subcommands:
 //!   info                         runtime + artifact + hw-model summary
 //!   train        [flags]         one continual-learning run
+//!   serve        [flags]         streaming session server, synthetic open-loop traffic
+//!   loadgen      [flags]         closed-loop load generator against the same server
 //!   experiment <id> [flags]      regenerate a paper figure/table
 //!   help
 //!
-//! Run `m2ru help` for flags. Artifacts must exist (`make artifacts`).
+//! Run `m2ru help` for flags. Only `experiment` (and `--backend artifact`)
+//! needs artifacts (`make artifacts`); everything else runs offline.
 
 use anyhow::{bail, Context, Result};
 
@@ -23,6 +26,7 @@ use m2ru::experiments::{
     run_fig5b, run_fig5c, run_fig5d, run_headline, run_table1, Fig4Options, Fig5bOptions,
 };
 use m2ru::runtime::{ModelBundle, Runtime};
+use m2ru::serve::{run_serve, ServeOptions};
 
 const HELP: &str = "\
 m2ru — Memristive Minion Recurrent Unit (full-system reproduction)
@@ -42,6 +46,21 @@ SUBCOMMANDS
       --config FILE         TOML run configuration
       --tasks N --train-per-task N --test-per-task N --epochs N
       --replay BOOL --replay-per-task N --seed N --lr F --lam F --beta F
+  serve                     streaming session server on synthetic traffic (open loop)
+      --net NAME            network config                               [pmnist100]
+      --backend NAME        dense|crossbar (artifact graphs are lowered
+                            whole-sequence and cannot serve streams)     [dense]
+      --workers N           worker threads for batched step dispatch     [1]
+      --requests N          requests to complete                         [2000]
+      --sessions K          simulated users                              [128]
+      --arrivals N          requests admitted per tick                   [max-batch]
+      --max-batch N --max-wait T   batcher policy (T in ticks)           [32 / 4]
+      --capacity N --ttl T  session slots / idle-tick expiry (0=never)   [1024 / 0]
+      --update-every N      labeled steps per online DFA commit (0=off)  [64]
+      --replay-cap N --replay-mix F   online replay reservoir / mix      [256 / 0.5]
+      --config FILE --seed N --lr F --lam F --beta F
+  loadgen                   closed-loop load generator (same flags as serve)
+      --concurrency C       outstanding-request target                   [4*max-batch]
   experiment ID             fig4|fig5a|fig5b|fig5c|fig5d|table1|headline|all
                             |ablation-replay|ablation-zeta|ablation-sampler|fault
       fig4:  --dataset pmnist|cifarfeat  --nh 100|256  --engines adam,dfa,hw
@@ -68,13 +87,24 @@ fn apply_run_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
     run.validate()
 }
 
-fn cmd_info(rt: &Runtime, manifest: &Manifest) -> Result<()> {
+fn cmd_info(rt: &Runtime, manifest: Option<&Manifest>) -> Result<()> {
     println!("platform: {}", rt.platform());
-    println!("artifacts: {} ({} configs, {} executables)", manifest.dir.display(),
-             manifest.configs.len(), manifest.artifacts.len());
-    for (name, _) in &manifest.configs {
-        let arts = manifest.artifacts_for(name);
-        println!("  {name}: {} artifacts", arts.len());
+    match manifest {
+        Some(manifest) => {
+            println!("artifacts: {} ({} configs, {} executables)", manifest.dir.display(),
+                     manifest.configs.len(), manifest.artifacts.len());
+            for (name, _) in &manifest.configs {
+                let arts = manifest.artifacts_for(name);
+                println!("  {name}: {} artifacts", arts.len());
+            }
+        }
+        // fresh clone: no artifacts is a normal state, not a failure —
+        // everything except `--backend artifact` and the XLA experiment
+        // paths works without them
+        None => println!(
+            "artifacts: none (run `make artifacts` to enable the artifact backend \
+             and XLA experiments)"
+        ),
     }
     let report = run_headline()?;
     drop(report);
@@ -199,6 +229,53 @@ fn cmd_train(artifacts: &str, args: &mut Args) -> Result<()> {
         Some(other) => bail!("unknown engine `{other}`"),
     }
     println!("final MA={:.3} forgetting={:.3}", trainer.matrix.mean_final(), trainer.matrix.forgetting());
+    Ok(())
+}
+
+/// `m2ru serve` (open loop) and `m2ru loadgen` (closed loop): drive the
+/// streaming session server on deterministic synthetic traffic and print
+/// the throughput/latency/batching/eviction report.
+fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
+    let net_name = args.get("net", "pmnist100");
+    let net = NetConfig::by_name(&net_name).with_context(|| format!("unknown net `{net_name}`"))?;
+    let mut run = RunConfig::default();
+    apply_run_flags(args, &mut run)?;
+    if let Some(b) = args.get_opt("backend") {
+        run.backend = b;
+    }
+    run.workers = args.get_parse("workers", run.workers)?;
+    run.serve.max_batch = args.get_parse("max-batch", run.serve.max_batch)?;
+    run.serve.max_wait = args.get_parse("max-wait", run.serve.max_wait)?;
+    run.serve.capacity = args.get_parse("capacity", run.serve.capacity)?;
+    run.serve.ttl = args.get_parse("ttl", run.serve.ttl)?;
+    run.serve.update_every = args.get_parse("update-every", run.serve.update_every)?;
+    run.serve.replay_cap = args.get_parse("replay-cap", run.serve.replay_cap)?;
+    run.serve.replay_mix = args.get_parse("replay-mix", run.serve.replay_mix)?;
+    run.validate()?;
+    let mut opts = ServeOptions::new(net, run);
+    opts.requests = args.get_parse("requests", opts.requests)?;
+    opts.sessions = args.get_parse("sessions", opts.sessions)?;
+    opts.arrivals = args.get_parse("arrivals", opts.arrivals)?;
+    if closed_loop {
+        opts.concurrency = args.get_parse("concurrency", 4 * opts.run.serve.max_batch)?;
+        // 0 is the driver's open-loop sentinel — an explicit 0 here would
+        // silently measure the wrong thing
+        anyhow::ensure!(opts.concurrency >= 1, "--concurrency must be >= 1 for loadgen");
+    }
+    args.finish()?;
+    println!(
+        "{}: backend `{}` ({} worker{}), {} requests over {} sessions",
+        if closed_loop { "loadgen" } else { "serve" },
+        opts.run.backend,
+        opts.run.workers,
+        if opts.run.workers == 1 { "" } else { "s" },
+        opts.requests,
+        opts.sessions
+    );
+    let report = run_serve(&opts)?;
+    for line in report.lines() {
+        println!("{line}");
+    }
     Ok(())
 }
 
@@ -339,8 +416,15 @@ fn main() -> Result<()> {
         "info" => {
             args.finish()?;
             let rt = Runtime::cpu()?;
-            let manifest = Manifest::load(&artifacts)?;
-            cmd_info(&rt, &manifest)
+            // a missing artifacts directory must not make `info` unusable
+            // on a fresh clone — degrade to a "no artifacts" summary. A
+            // *present but broken* manifest still surfaces its error.
+            if std::path::Path::new(&artifacts).join("manifest.txt").exists() {
+                let manifest = Manifest::load(&artifacts)?;
+                cmd_info(&rt, Some(&manifest))
+            } else {
+                cmd_info(&rt, None)
+            }
         }
         "backends" => {
             args.finish()?;
@@ -350,6 +434,8 @@ fn main() -> Result<()> {
             Ok(())
         }
         "train" => cmd_train(&artifacts, &mut args),
+        "serve" => cmd_serve(&mut args, false),
+        "loadgen" => cmd_serve(&mut args, true),
         "experiment" => {
             let rt = Runtime::cpu()?;
             let manifest = Manifest::load(&artifacts)?;

@@ -67,6 +67,25 @@ impl MiruParams {
         v
     }
 
+    /// One recurrent update on a caller-owned hidden state (Eqs. 1–2):
+    /// `cand = tanh(x_t @ Wh + (β·h) @ Uh + bh)`, `h' = λ·h + (1−λ)·cand`.
+    /// Returns `(cand, h')`. [`MiruParams::forward_trace`] composes exactly
+    /// this function, so streaming a sequence one timestep at a time is
+    /// bitwise-identical to the whole-sequence forward pass — the contract
+    /// the serving session store relies on.
+    pub fn step(&self, h: &Mat, xt: &Mat, lam: f32, beta: f32) -> (Mat, Mat) {
+        let mut bh_scaled = h.clone();
+        bh_scaled.scale(beta);
+        let mut pre = xt.matmul(&self.wh);
+        pre.add_scaled(&bh_scaled.matmul(&self.uh), 1.0);
+        pre.add_row_bias(&self.bh);
+        let cand = pre.map(f32::tanh);
+        let mut h_new = h.clone();
+        h_new.scale(lam);
+        h_new.add_scaled(&cand, 1.0 - lam);
+        (cand, h_new)
+    }
+
     /// Run the MiRU layer over a sequence batch, recording the trace.
     pub fn forward_trace(&self, x: &SeqBatch, lam: f32, beta: f32) -> MiruTrace {
         assert_eq!(x.nx, self.nx());
@@ -76,16 +95,7 @@ impl MiruParams {
         let mut cand_v = Vec::with_capacity(x.nt);
         for t in 0..x.nt {
             let xt = x.step(t);
-            // pre = x_t @ Wh + (beta*h) @ Uh + bh
-            let mut bh_scaled = h.clone();
-            bh_scaled.scale(beta);
-            let mut pre = xt.matmul(&self.wh);
-            pre.add_scaled(&bh_scaled.matmul(&self.uh), 1.0);
-            pre.add_row_bias(&self.bh);
-            let cand = pre.map(f32::tanh);
-            let mut h_new = h.clone();
-            h_new.scale(lam);
-            h_new.add_scaled(&cand, 1.0 - lam);
+            let (cand, h_new) = self.step(&h, &xt, lam, beta);
             h_prev.push(h);
             cand_v.push(cand);
             h = h_new;
@@ -171,6 +181,18 @@ mod tests {
         let x = toy_batch(3, 50, 4, 7);
         let tr = p.forward_trace(&x, 0.9, 0.9);
         assert!(tr.h_final.data.iter().all(|&v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn streaming_steps_match_forward_trace() {
+        let p = MiruParams::init(4, 6, 3, 11);
+        let x = toy_batch(3, 7, 4, 12);
+        let tr = p.forward_trace(&x, 0.6, 0.8);
+        let mut h = Mat::zeros(3, 6);
+        for t in 0..7 {
+            h = p.step(&h, &x.step(t), 0.6, 0.8).1;
+        }
+        assert_eq!(h.data, tr.h_final.data);
     }
 
     #[test]

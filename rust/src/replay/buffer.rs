@@ -116,6 +116,17 @@ impl ReplayBuffer {
         }
     }
 
+    /// Drop the oldest segments until at most `keep` remain. The
+    /// streaming server rolls one segment per online commit and bounds
+    /// its replay history this way; the offline task protocol never
+    /// needs it (one segment per task, tasks are few).
+    pub fn retain_recent_segments(&mut self, keep: usize) {
+        if self.segments.len() > keep {
+            let drop = self.segments.len() - keep;
+            self.segments.drain(..drop);
+        }
+    }
+
     /// Draw `n` replay examples uniformly from *previous* tasks' segments
     /// (the current, still-filling segment is excluded: the paper replays
     /// old knowledge against the new stream).
@@ -200,6 +211,27 @@ mod tests {
         buf.offer(&ex(&[0.5; 4], 0));
         let mut rng = GaussianRng::new(0);
         assert!(buf.sample_past(8, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn retain_recent_segments_drops_oldest() {
+        let mut buf = ReplayBuffer::new(4, 0.0, 1.0, 3);
+        for task in 0..5 {
+            buf.begin_task();
+            for _ in 0..4 {
+                buf.offer(&ex(&[0.2; 4], task));
+            }
+        }
+        assert_eq!(buf.num_tasks(), 5);
+        buf.retain_recent_segments(2);
+        assert_eq!(buf.num_tasks(), 2);
+        // survivors are the *newest* segments (labels 3 and 4)
+        let mut rng = GaussianRng::new(0);
+        let got = buf.sample_past(20, &mut rng);
+        assert!(got.iter().all(|e| e.label == 3), "past pool is segment 3 only: {:?}",
+                got.iter().map(|e| e.label).collect::<Vec<_>>());
+        buf.retain_recent_segments(8); // no-op when under the cap
+        assert_eq!(buf.num_tasks(), 2);
     }
 
     #[test]

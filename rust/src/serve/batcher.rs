@@ -1,0 +1,195 @@
+//! Dynamic request batching: coalesce pending single-timestep requests
+//! from many sessions into one padded dispatch batch.
+//!
+//! Policy (the classic max-batch/max-wait tradeoff): a batch dispatches
+//! as soon as `max_batch` requests are pending, or when the *oldest*
+//! pending request has waited `max_wait` logical ticks — so throughput
+//! comes from full batches under load and latency stays bounded when
+//! traffic is sparse. A batch never contains the same session twice
+//! (two queued steps for one user must see each other's state), so
+//! duplicates defer to the next dispatch in FIFO order.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::time::Instant;
+
+/// One single-timestep serving request.
+pub struct StepRequest {
+    /// Session this step belongs to (see
+    /// [`super::session_id_for_user`]).
+    pub session: u64,
+    /// One input row, length nx.
+    pub x: Vec<f32>,
+    /// Ground-truth label riding along on this step (feeds the online
+    /// learner and the accuracy counters).
+    pub label: Option<usize>,
+    /// Logical tick at enqueue (drives the max-wait policy).
+    pub enqueued_tick: u64,
+    /// Wall clock at enqueue (drives the reported latency percentiles —
+    /// never the dispatch decision, which must stay deterministic).
+    pub enqueued_at: Instant,
+}
+
+/// Dispatch counters for the serve report.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BatcherStats {
+    pub enqueued: u64,
+    pub batches: u64,
+    pub dispatched: u64,
+    /// Same-session duplicates pushed back to the queue front.
+    pub deferred_dups: u64,
+}
+
+/// FIFO queue with max-batch/max-wait dispatch.
+pub struct DynamicBatcher {
+    max_batch: usize,
+    max_wait: u64,
+    queue: VecDeque<StepRequest>,
+    pub stats: BatcherStats,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, max_wait: u64) -> DynamicBatcher {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        DynamicBatcher { max_batch, max_wait, queue: VecDeque::new(), stats: BatcherStats::default() }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn push(&mut self, r: StepRequest) {
+        self.stats.enqueued += 1;
+        self.queue.push_back(r);
+    }
+
+    /// Dispatch policy: ready when a full batch is pending, or the oldest
+    /// pending request has waited at least `max_wait` ticks.
+    pub fn ready(&self, now_tick: u64) -> bool {
+        if self.queue.len() >= self.max_batch {
+            return true;
+        }
+        self.queue
+            .front()
+            .map_or(false, |r| now_tick.saturating_sub(r.enqueued_tick) >= self.max_wait)
+    }
+
+    /// Take up to `max_batch` requests with *distinct* sessions, in FIFO
+    /// order, if the policy says dispatch. Same-session duplicates stay
+    /// at the queue front (still FIFO) for the next batch.
+    pub fn drain(&mut self, now_tick: u64) -> Option<Vec<StepRequest>> {
+        if !self.ready(now_tick) {
+            return None;
+        }
+        self.take_batch()
+    }
+
+    /// Drain regardless of the dispatch policy — the end-of-run tail
+    /// flush, once the traffic source is exhausted and no further
+    /// arrivals can fill the batch.
+    pub fn flush(&mut self) -> Option<Vec<StepRequest>> {
+        self.take_batch()
+    }
+
+    fn take_batch(&mut self) -> Option<Vec<StepRequest>> {
+        let mut batch = Vec::with_capacity(self.max_batch);
+        let mut deferred: Vec<StepRequest> = Vec::new();
+        let mut seen = BTreeSet::new();
+        while batch.len() < self.max_batch {
+            let Some(r) = self.queue.pop_front() else { break };
+            if seen.insert(r.session) {
+                batch.push(r);
+            } else {
+                self.stats.deferred_dups += 1;
+                deferred.push(r);
+            }
+        }
+        for r in deferred.into_iter().rev() {
+            self.queue.push_front(r);
+        }
+        if batch.is_empty() {
+            return None;
+        }
+        self.stats.batches += 1;
+        self.stats.dispatched += batch.len() as u64;
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(session: u64, tick: u64) -> StepRequest {
+        StepRequest {
+            session,
+            x: vec![0.0; 3],
+            label: None,
+            enqueued_tick: tick,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately() {
+        let mut b = DynamicBatcher::new(4, 100);
+        for i in 0..4 {
+            b.push(req(i, 0));
+        }
+        assert!(b.ready(0));
+        let batch = b.drain(0).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_until_max_wait() {
+        let mut b = DynamicBatcher::new(8, 3);
+        b.push(req(1, 10));
+        b.push(req(2, 11));
+        assert!(!b.ready(12), "oldest has waited only 2 ticks");
+        assert!(b.drain(12).is_none());
+        assert!(b.ready(13), "oldest has waited 3 ticks");
+        let batch = b.drain(13).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].session, 1, "FIFO order");
+    }
+
+    #[test]
+    fn duplicate_sessions_defer_to_next_batch_in_order() {
+        let mut b = DynamicBatcher::new(4, 0);
+        for s in [7u64, 7, 8, 7, 9] {
+            b.push(req(s, 0));
+        }
+        let first = b.drain(0).unwrap();
+        let sessions: Vec<u64> = first.iter().map(|r| r.session).collect();
+        assert_eq!(sessions, vec![7, 8, 9]);
+        assert_eq!(b.stats.deferred_dups, 2);
+        // the two deferred 7s drain one per batch, FIFO
+        assert_eq!(b.drain(0).unwrap().len(), 1);
+        assert_eq!(b.drain(0).unwrap().len(), 1);
+        assert!(b.drain(0).is_none());
+        assert_eq!(b.stats.dispatched, 5);
+        assert_eq!(b.stats.batches, 3);
+    }
+
+    #[test]
+    fn empty_queue_is_never_ready() {
+        let b = DynamicBatcher::new(1, 0);
+        assert!(!b.ready(1_000_000));
+    }
+
+    #[test]
+    fn flush_ignores_the_wait_policy() {
+        let mut b = DynamicBatcher::new(8, 1_000_000);
+        b.push(req(1, 0));
+        b.push(req(2, 0));
+        assert!(b.drain(5).is_none(), "policy says wait");
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.flush().is_none());
+    }
+}

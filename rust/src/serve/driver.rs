@@ -1,0 +1,374 @@
+//! Synthetic workload driver for the streaming session server: the
+//! engine behind `m2ru serve` (open-loop, fixed arrivals per tick) and
+//! `m2ru loadgen` (closed-loop, fixed concurrency).
+//!
+//! The simulated tick loop is fully deterministic given the seed: which
+//! user issues each request, every feature value, every batch boundary,
+//! every eviction and every online commit depend only on the seed and
+//! the serve policy — wall time is measured but never consulted. That is
+//! what lets the test suite assert byte-identical serve signatures for
+//! `--workers 1` vs `--workers 4`.
+//!
+//! Workload model: `sessions` synthetic users, each streaming timestep
+//! rows of a class-conditional pattern (the class is the user's fixed
+//! label). Every `nt`-th step of a user completes one sequence window
+//! and carries the label, so the server's prediction at that step can be
+//! scored and the window fed to the online learner — accuracy on labeled
+//! steps is the live continual-learning signal.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::backend::{BackendCtx, BackendRegistry};
+use crate::config::{NetConfig, RunConfig};
+use crate::coordinator::ParallelEngine;
+use crate::linalg::{argmax_rows, Mat};
+use crate::rng::{GaussianRng, SplitMix64};
+
+use super::batcher::{BatcherStats, DynamicBatcher, StepRequest};
+use super::metrics::ServeMetrics;
+use super::online::OnlineLearner;
+use super::session::{session_id_for_user, SessionStats, SessionStore};
+
+/// One serve run, fully specified.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub net: NetConfig,
+    /// Backend, workers, seed and the `serve` policy block are read from
+    /// here (`RunConfig::serve`).
+    pub run: RunConfig,
+    /// Total requests to complete.
+    pub requests: u64,
+    /// Simulated users (distinct sessions the workload draws from).
+    pub sessions: usize,
+    /// Open loop: new requests admitted per tick.
+    pub arrivals: usize,
+    /// Closed loop: outstanding-request target; 0 selects open loop.
+    pub concurrency: usize,
+}
+
+impl ServeOptions {
+    /// Open-loop defaults at the standard operating point.
+    pub fn new(net: NetConfig, run: RunConfig) -> ServeOptions {
+        let arrivals = run.serve.max_batch;
+        ServeOptions { net, run, requests: 2000, sessions: 128, arrivals, concurrency: 0 }
+    }
+}
+
+/// Outcome of a serve run.
+pub struct ServeReport {
+    pub metrics: ServeMetrics,
+    pub store: SessionStats,
+    pub batcher: BatcherStats,
+    pub backend: String,
+    pub workers: usize,
+    pub sessions: usize,
+    /// Substrate statistics (device write pressure etc.).
+    pub backend_stats: Vec<String>,
+}
+
+impl ServeReport {
+    /// Human-readable report.
+    pub fn lines(&self) -> Vec<String> {
+        let mut out = vec![format!(
+            "serve: backend={} workers={} sessions={}",
+            self.backend, self.workers, self.sessions
+        )];
+        out.extend(self.metrics.summary_lines(&self.store, &self.batcher));
+        out.extend(self.backend_stats.iter().cloned());
+        out.push(format!("signature: {}", self.signature()));
+        out
+    }
+
+    /// The deterministic signature (see [`ServeMetrics::signature`]).
+    pub fn signature(&self) -> String {
+        self.metrics.signature(&self.store)
+    }
+}
+
+/// Class-conditional per-user feature streams (same family as the
+/// backend test workload: `0.25·noise + 0.75·proto[label]`, clamped to
+/// the replay quantizer's [-1, 1] range).
+struct SyntheticWorkload {
+    protos: Vec<Vec<f32>>,
+    users: Vec<UserState>,
+    pick_rng: GaussianRng,
+    nt: usize,
+    nx: usize,
+}
+
+struct UserState {
+    label: usize,
+    rng: GaussianRng,
+    step_in_seq: usize,
+}
+
+impl SyntheticWorkload {
+    fn new(net: &NetConfig, sessions: usize, seed: u64) -> SyntheticWorkload {
+        let mut proto_rng = GaussianRng::new(seed ^ 0x9907_A11C);
+        let protos: Vec<Vec<f32>> =
+            (0..net.ny).map(|_| (0..net.nx).map(|_| proto_rng.normal()).collect()).collect();
+        let mut seeder = SplitMix64::new(seed ^ 0x05E5_510F);
+        let users = (0..sessions)
+            .map(|u| UserState {
+                label: u % net.ny,
+                rng: GaussianRng::new(seeder.next_u64()),
+                step_in_seq: 0,
+            })
+            .collect();
+        SyntheticWorkload {
+            protos,
+            users,
+            pick_rng: GaussianRng::new(seed ^ 0x71CC_E7),
+            nt: net.nt,
+            nx: net.nx,
+        }
+    }
+
+    /// Next request: a uniformly drawn user streams one timestep; the
+    /// user's label rides along on the final step of each nt-window.
+    fn next(&mut self) -> (u64, Vec<f32>, Option<usize>) {
+        let u = self.pick_rng.below(self.users.len());
+        let user = &mut self.users[u];
+        let proto = &self.protos[user.label];
+        let x: Vec<f32> = (0..self.nx)
+            .map(|j| (0.25 * user.rng.normal() + 0.75 * proto[j]).clamp(-1.0, 1.0))
+            .collect();
+        user.step_in_seq += 1;
+        let label = (user.step_in_seq % self.nt == 0).then_some(user.label);
+        (u as u64, x, label)
+    }
+}
+
+/// Run the streaming session server against the synthetic workload.
+pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport> {
+    let cfg = opts.run.serve.clone();
+    opts.run.validate()?;
+    ensure!(opts.sessions >= 1, "need at least one simulated session");
+    ensure!(opts.concurrency > 0 || opts.arrivals >= 1, "open loop needs arrivals >= 1");
+
+    let ctx = BackendCtx::from_run(opts.net, &opts.run);
+    let backend = BackendRegistry::with_defaults()
+        .create(&opts.run.backend, &ctx)
+        .with_context(|| format!("creating serve backend `{}`", opts.run.backend))?;
+    let mut engine = ParallelEngine::new(backend, opts.run.workers);
+
+    let (nh, nx) = (opts.net.nh, opts.net.nx);
+    let mut store = SessionStore::new(nh, nx, opts.net.nt, cfg.capacity, cfg.ttl);
+    let mut batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
+    let mut learner = OnlineLearner::new(opts.net.nt, nx, &cfg, opts.run.seed);
+    let mut workload = SyntheticWorkload::new(&opts.net, opts.sessions, opts.run.seed);
+    let mut metrics = ServeMetrics::default();
+
+    let start = Instant::now();
+    let mut tick: u64 = 0;
+    let mut issued: u64 = 0;
+    let mut completed: u64 = 0;
+    while completed < opts.requests {
+        // admission: open loop admits a fixed arrival rate; closed loop
+        // tops outstanding requests back up to the concurrency target
+        let want = if opts.concurrency > 0 {
+            opts.concurrency.saturating_sub((issued - completed) as usize)
+        } else {
+            opts.arrivals
+        };
+        for _ in 0..want {
+            if issued >= opts.requests {
+                break;
+            }
+            let (user, x, label) = workload.next();
+            batcher.push(StepRequest {
+                session: session_id_for_user(user),
+                x,
+                label,
+                enqueued_tick: tick,
+                enqueued_at: Instant::now(),
+            });
+            issued += 1;
+        }
+        while let Some(batch) = batcher.drain(tick) {
+            completed += batch.len() as u64;
+            process_batch(
+                &mut engine,
+                &mut store,
+                &mut learner,
+                &mut metrics,
+                batch,
+                tick,
+                cfg.max_batch,
+                nh,
+                nx,
+            )?;
+        }
+        // traffic source exhausted: flush the tail regardless of the
+        // wait policy (no future arrival can fill the batch)
+        if issued >= opts.requests {
+            while let Some(batch) = batcher.flush() {
+                completed += batch.len() as u64;
+                process_batch(
+                    &mut engine,
+                    &mut store,
+                    &mut learner,
+                    &mut metrics,
+                    batch,
+                    tick,
+                    cfg.max_batch,
+                    nh,
+                    nx,
+                )?;
+            }
+        }
+        tick += 1;
+    }
+    metrics.wall = start.elapsed();
+
+    Ok(ServeReport {
+        metrics,
+        store: store.stats.clone(),
+        batcher: batcher.stats.clone(),
+        backend: opts.run.backend.clone(),
+        workers: engine.workers(),
+        sessions: opts.sessions,
+        backend_stats: engine.stats(),
+    })
+}
+
+/// Dispatch one padded batch: gather per-session hidden states, advance
+/// them one timestep through the engine (row-sharded across workers),
+/// write the states back, score/record every request, and feed labeled
+/// windows to the online learner.
+#[allow(clippy::too_many_arguments)]
+fn process_batch(
+    engine: &mut ParallelEngine,
+    store: &mut SessionStore,
+    learner: &mut OnlineLearner,
+    metrics: &mut ServeMetrics,
+    batch: Vec<StepRequest>,
+    tick: u64,
+    max_batch: usize,
+    nh: usize,
+    nx: usize,
+) -> Result<()> {
+    // sweep idle sessions as of the *earliest arrival* in this batch,
+    // not the dispatch tick: a session whose user was active within the
+    // TTL must never lose its state to queueing delay (any batch member
+    // idle beyond the TTL at this sweep point was already idle beyond
+    // the TTL when its own request arrived)
+    let sweep_at = batch.iter().map(|r| r.enqueued_tick).min().unwrap_or(tick);
+    store.expire_idle(sweep_at);
+    let valid = batch.len();
+    // padded dispatch shapes: rows beyond `valid` are zero-state dummies
+    let mut h = Mat::zeros(max_batch, nh);
+    let mut x = Mat::zeros(max_batch, nx);
+    let mut slots = Vec::with_capacity(valid);
+    for (i, r) in batch.iter().enumerate() {
+        let slot = store.get_or_create(r.session, tick);
+        h.row_mut(i).copy_from_slice(store.hidden(slot));
+        x.row_mut(i).copy_from_slice(&r.x);
+        slots.push(slot);
+    }
+    let (hn, logits) = engine.step_sessions(&h, &x)?;
+    let preds = argmax_rows(&logits);
+    metrics.batches += 1;
+    metrics.padded_rows += max_batch as u64;
+    metrics.valid_rows += valid as u64;
+    for (i, r) in batch.iter().enumerate() {
+        let slot = slots[i];
+        store.set_hidden(slot, hn.row(i));
+        store.push_history(slot, &r.x);
+        metrics.requests += 1;
+        metrics.wait_ticks_sum += tick - r.enqueued_tick;
+        metrics.latencies_us.push(r.enqueued_at.elapsed().as_micros() as u64);
+        metrics.record_pred(preds[i]);
+        if let Some(label) = r.label {
+            metrics.labeled += 1;
+            if preds[i] == label {
+                metrics.labeled_correct += 1;
+            }
+            let seq = store.history_seq(slot);
+            if let Some(loss) = learner.observe(engine, seq, label)? {
+                metrics.online_updates += 1;
+                metrics.online_loss_sum += f64::from(loss);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+
+    fn opts(workers: usize, backend: &str, requests: u64) -> ServeOptions {
+        let mut run = RunConfig::default();
+        run.backend = backend.to_string();
+        run.workers = workers;
+        run.serve = ServeConfig {
+            max_batch: 8,
+            max_wait: 2,
+            capacity: 8,
+            ttl: 0,
+            update_every: 12,
+            replay_cap: 64,
+            replay_mix: 0.5,
+        };
+        ServeOptions {
+            net: NetConfig::SMALL,
+            run,
+            requests,
+            sessions: 16,
+            arrivals: 8,
+            concurrency: 0,
+        }
+    }
+
+    #[test]
+    fn serves_every_request_exactly_once() {
+        let rep = run_serve(&opts(1, "dense", 200)).unwrap();
+        assert_eq!(rep.metrics.requests, 200);
+        assert_eq!(rep.metrics.latencies_us.len(), 200);
+        assert_eq!(rep.batcher.dispatched, 200);
+        assert!(rep.metrics.batches >= 25, "max_batch 8 needs >= 25 batches");
+        assert!(rep.metrics.batch_fill() > 0.0 && rep.metrics.batch_fill() <= 1.0);
+    }
+
+    #[test]
+    fn capacity_pressure_forces_lru_evictions() {
+        // 16 users into 8 slots: misses and LRU evictions are guaranteed
+        let rep = run_serve(&opts(1, "dense", 400)).unwrap();
+        assert!(rep.store.evicted_lru > 0, "expected evictions: {:?}", rep.store);
+        assert_eq!(rep.store.created, rep.store.misses);
+        assert_eq!(rep.store.hits + rep.store.misses, 400);
+    }
+
+    #[test]
+    fn online_learner_commits_during_serving() {
+        // SMALL nt=5: ~1 in 5 requests is labeled; 400 requests => ~80
+        // labels => several update_every=12 commits
+        let rep = run_serve(&opts(1, "dense", 400)).unwrap();
+        assert!(rep.metrics.labeled > 40, "labeled={}", rep.metrics.labeled);
+        assert!(rep.metrics.online_updates >= 2, "updates={}", rep.metrics.online_updates);
+    }
+
+    #[test]
+    fn closed_loop_reaches_full_batches() {
+        let mut o = opts(1, "dense", 300);
+        o.concurrency = 32;
+        o.arrivals = 0;
+        let rep = run_serve(&o).unwrap();
+        assert_eq!(rep.metrics.requests, 300);
+        // concurrency 4x max_batch keeps the batcher saturated
+        assert!(rep.metrics.batch_fill() > 0.8, "fill={}", rep.metrics.batch_fill());
+    }
+
+    #[test]
+    fn report_lines_render() {
+        let rep = run_serve(&opts(2, "dense", 100)).unwrap();
+        let text = rep.lines().join("\n");
+        assert!(text.contains("throughput:"));
+        assert!(text.contains("latency: p50="));
+        assert!(text.contains("signature: req=100"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Serving metrics: throughput, latency percentiles, batch fill, and a
+//! deterministic signature for worker-count-invariance tests.
+//!
+//! Two strictly separated kinds of measurement:
+//!
+//! * **deterministic** — request/batch/fill counters, the prediction
+//!   fingerprint, labeled-step accuracy, online-update count and loss.
+//!   These depend only on the seed and the serve policy, never on wall
+//!   time or the worker count, and [`ServeMetrics::signature`] folds
+//!   them into one comparable line.
+//! * **timing** — wall-clock latency percentiles and requests/second.
+//!   Reported for humans, excluded from the signature.
+
+use std::time::Duration;
+
+use super::batcher::BatcherStats;
+use super::session::SessionStats;
+
+/// Accumulated over one serve run (see `serve::run_serve`).
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    /// Rows dispatched including padding (`batches * max_batch`).
+    pub padded_rows: u64,
+    /// Rows carrying a real request.
+    pub valid_rows: u64,
+    /// Total ticks requests spent queued (deterministic latency proxy).
+    pub wait_ticks_sum: u64,
+    /// Wall-clock enqueue→completion latency per request, microseconds.
+    pub latencies_us: Vec<u64>,
+    /// FNV-style fold of every prediction in completion order.
+    pub pred_fingerprint: u64,
+    pub labeled: u64,
+    pub labeled_correct: u64,
+    pub online_updates: u64,
+    pub online_loss_sum: f64,
+    pub wall: Duration,
+}
+
+impl ServeMetrics {
+    /// Fold one prediction into the deterministic fingerprint.
+    pub fn record_pred(&mut self, pred: usize) {
+        self.pred_fingerprint =
+            self.pred_fingerprint.wrapping_mul(0x0000_0100_0000_01B3) ^ (pred as u64 + 1);
+    }
+
+    /// Mean fraction of dispatched rows that carried a real request.
+    pub fn batch_fill(&self) -> f64 {
+        self.valid_rows as f64 / self.padded_rows.max(1) as f64
+    }
+
+    /// Mean queueing delay in ticks.
+    pub fn mean_wait_ticks(&self) -> f64 {
+        self.wait_ticks_sum as f64 / self.requests.max(1) as f64
+    }
+
+    /// Latency percentile (nearest-rank on the sorted samples), µs.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    /// Completed requests per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Accuracy on labeled steps (prediction at the step the label
+    /// arrived, before the online learner saw it).
+    pub fn labeled_accuracy(&self) -> f64 {
+        self.labeled_correct as f64 / self.labeled.max(1) as f64
+    }
+
+    /// Everything deterministic folded into one comparable line: two runs
+    /// with the same seed and policy must produce byte-identical
+    /// signatures for *any* worker count.
+    pub fn signature(&self, store: &SessionStats) -> String {
+        format!(
+            "req={} batches={} valid={} fill={:.4} fp={:016x} labeled={} correct={} \
+             updates={} loss={:.4} created={} lru={} ttl={} hits={} misses={}",
+            self.requests,
+            self.batches,
+            self.valid_rows,
+            self.batch_fill(),
+            self.pred_fingerprint,
+            self.labeled,
+            self.labeled_correct,
+            self.online_updates,
+            self.online_loss_sum,
+            store.created,
+            store.evicted_lru,
+            store.expired_ttl,
+            store.hits,
+            store.misses,
+        )
+    }
+
+    /// Human-readable report block.
+    pub fn summary_lines(&self, store: &SessionStats, bat: &BatcherStats) -> Vec<String> {
+        vec![
+            format!(
+                "throughput: {:.0} req/s ({} requests in {:.3} s)",
+                self.throughput(),
+                self.requests,
+                self.wall.as_secs_f64()
+            ),
+            format!(
+                "latency: p50={} us p99={} us max={} us mean_wait={:.2} ticks",
+                self.percentile_us(50.0),
+                self.percentile_us(99.0),
+                self.latencies_us.iter().copied().max().unwrap_or(0),
+                self.mean_wait_ticks()
+            ),
+            format!(
+                "batching: {} batches, fill {:.3} ({} valid / {} padded rows), deferred_dups={}",
+                self.batches,
+                self.batch_fill(),
+                self.valid_rows,
+                self.padded_rows,
+                bat.deferred_dups
+            ),
+            format!(
+                "sessions: created={} evicted_lru={} expired_ttl={} hits={} misses={}",
+                store.created, store.evicted_lru, store.expired_ttl, store.hits, store.misses
+            ),
+            format!(
+                "online: labeled={} acc={:.3} updates={} mean_loss={:.4}",
+                self.labeled,
+                self.labeled_accuracy(),
+                self.online_updates,
+                self.online_loss_sum / self.online_updates.max(1) as f64
+            ),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_on_known_samples() {
+        let mut m = ServeMetrics::default();
+        m.latencies_us = (1..=100).collect();
+        assert_eq!(m.percentile_us(50.0), 51); // nearest-rank on 0-indexed 99*0.5
+        assert_eq!(m.percentile_us(99.0), 99);
+        assert_eq!(m.percentile_us(100.0), 100);
+        assert_eq!(ServeMetrics::default().percentile_us(99.0), 0);
+    }
+
+    #[test]
+    fn fingerprint_is_order_sensitive() {
+        let mut a = ServeMetrics::default();
+        let mut b = ServeMetrics::default();
+        a.record_pred(1);
+        a.record_pred(2);
+        b.record_pred(2);
+        b.record_pred(1);
+        assert_ne!(a.pred_fingerprint, b.pred_fingerprint);
+    }
+
+    #[test]
+    fn signature_ignores_wall_time() {
+        let mut a = ServeMetrics::default();
+        a.requests = 10;
+        a.wall = Duration::from_secs(5);
+        a.latencies_us = vec![1, 2, 3];
+        let mut b = a.clone();
+        b.wall = Duration::from_secs(50);
+        b.latencies_us = vec![900, 900, 900];
+        let stats = SessionStats::default();
+        assert_eq!(a.signature(&stats), b.signature(&stats));
+    }
+}

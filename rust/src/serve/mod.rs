@@ -1,0 +1,42 @@
+//! Streaming session server (DESIGN.md §8): per-user recurrent state,
+//! dynamic batching, and online continual learning on the serve path.
+//!
+//! The offline experiments run whole sequences through a batch forward;
+//! serving a temporal model to live users is a different shape of
+//! problem — each request is *one timestep* of one user's stream, and
+//! the user's MiRU hidden state must persist between requests. This
+//! subsystem is that missing layer:
+//!
+//! * [`SessionStore`] — slab-allocated per-user hidden states with LRU
+//!   eviction, idle-TTL expiry under a logical clock, and deterministic
+//!   session ids ([`session_id_for_user`]).
+//! * [`DynamicBatcher`] — coalesces pending step requests from many
+//!   sessions into one padded batch per tick (max-batch/max-wait
+//!   policy, same-session dedup).
+//! * [`OnlineLearner`] — labeled steps feed the reservoir
+//!   [`crate::replay::ReplayBuffer`]; every N labels one replay-mixed
+//!   DFA update commits through the single-writer whole-batch path.
+//! * [`run_serve`] — the deterministic synthetic workload driver behind
+//!   `m2ru serve` (open loop) and `m2ru loadgen` (closed loop),
+//!   reporting throughput, p50/p99 latency, batch fill and eviction
+//!   counters ([`ServeMetrics`]).
+//!
+//! Dispatch goes through [`crate::coordinator::ParallelEngine`]'s
+//! row-sharded `step_sessions` path against any registered
+//! [`crate::backend::ComputeBackend`] that implements the streaming
+//! contract (`step_hidden`/`readout`): feeding a sequence one timestep
+//! at a time produces bitwise-identical logits to the whole-sequence
+//! forward pass, and serve metrics are byte-identical for every worker
+//! count.
+
+mod batcher;
+mod driver;
+mod metrics;
+mod online;
+mod session;
+
+pub use batcher::{BatcherStats, DynamicBatcher, StepRequest};
+pub use driver::{run_serve, ServeOptions, ServeReport};
+pub use metrics::ServeMetrics;
+pub use online::OnlineLearner;
+pub use session::{session_id_for_user, SessionStats, SessionStore};

@@ -1,0 +1,216 @@
+//! Online continual learning on the serve path: labeled steps feed the
+//! reservoir replay buffer, and every `update_every` labels one
+//! replay-mixed DFA batch commits through the engine.
+//!
+//! The commit protocol keeps serving deterministic and race-free:
+//!
+//! * **snapshot read** — `train_dfa` reads the substrate's effective
+//!   weights once, computes gradients against that snapshot, and only
+//!   then programs the update;
+//! * **single writer** — commits go through
+//!   [`ParallelEngine::train_whole`], the unsharded whole-batch path, so
+//!   exactly one writer touches the weights and the committed update is
+//!   bit-identical for every `--workers` count;
+//! * **replay stabilization** — each commit mixes the fresh window with
+//!   examples replayed from *earlier* windows (reservoir-sampled,
+//!   4-bit-quantized — the paper's §IV-A data-preparation unit), so the
+//!   stream's drift does not erase earlier behavior. After a commit the
+//!   buffer rolls to a fresh reservoir segment and the committed window
+//!   becomes replayable history.
+
+use anyhow::Result;
+
+use crate::config::ServeConfig;
+use crate::coordinator::ParallelEngine;
+use crate::data::Example;
+use crate::nn::SeqBatch;
+use crate::replay::ReplayBuffer;
+use crate::rng::GaussianRng;
+
+/// Replay segments retained (newest-first) across commits. One segment
+/// rolls per commit, so this bounds the online learner's memory and the
+/// per-commit `sample_past` pool on long-lived serve loops.
+const MAX_REPLAY_SEGMENTS: usize = 16;
+
+/// Accumulates labeled sequences and commits replay-mixed DFA updates.
+pub struct OnlineLearner {
+    nt: usize,
+    nx: usize,
+    /// Labeled steps per commit; 0 disables training (inference-only).
+    update_every: usize,
+    /// Fraction of each commit batch drawn from replay.
+    mix: f32,
+    buffer: ReplayBuffer,
+    rng: GaussianRng,
+    pending: Vec<Example>,
+    pub observed: u64,
+    pub updates: u64,
+}
+
+impl OnlineLearner {
+    /// Features are expected in [-1, 1] (the synthetic serve workload's
+    /// range), matching the replay quantizer's offset/scale.
+    pub fn new(nt: usize, nx: usize, cfg: &ServeConfig, seed: u64) -> OnlineLearner {
+        let mut buffer = ReplayBuffer::new(cfg.replay_cap, -1.0, 2.0, seed as u32 ^ 0x0911_CE5E);
+        buffer.begin_task();
+        OnlineLearner {
+            nt,
+            nx,
+            update_every: cfg.update_every,
+            // programmatic construction bypasses ServeConfig::validate;
+            // mix = 1.0 would make the replay-share formula divide by
+            // zero, so enforce the same [0, 0.9] bound here
+            mix: cfg.replay_mix.clamp(0.0, 0.9),
+            buffer,
+            rng: GaussianRng::new(seed ^ 0x0911_0B5E),
+            pending: Vec::new(),
+            observed: 0,
+            updates: 0,
+        }
+    }
+
+    /// Record one labeled `nt*nx` sequence. Returns `Some(loss)` when
+    /// this observation filled the window and triggered a commit.
+    pub fn observe(
+        &mut self,
+        engine: &mut ParallelEngine,
+        features: Vec<f32>,
+        label: usize,
+    ) -> Result<Option<f32>> {
+        debug_assert_eq!(features.len(), self.nt * self.nx);
+        self.observed += 1;
+        if self.update_every == 0 {
+            // inference-only mode: don't quantize into the reservoir or
+            // grow `pending` for data that will never be trained on
+            return Ok(None);
+        }
+        let ex = Example { features, label };
+        self.buffer.offer(&ex);
+        self.pending.push(ex);
+        if self.pending.len() < self.update_every {
+            return Ok(None);
+        }
+        self.commit(engine).map(Some)
+    }
+
+    /// Labeled sequences waiting for the next commit window to fill.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Replay segments accumulated so far (one per committed window).
+    pub fn replay_segments(&self) -> usize {
+        self.buffer.num_tasks()
+    }
+
+    fn commit(&mut self, engine: &mut ParallelEngine) -> Result<f32> {
+        // replay share: mix = r/(fresh+r)  =>  r = fresh * mix/(1-mix)
+        let n_replay = if self.mix > 0.0 {
+            ((self.pending.len() as f32) * self.mix / (1.0 - self.mix)).round() as usize
+        } else {
+            0
+        };
+        let replayed = self.buffer.sample_past(n_replay, &mut self.rng);
+        let b = self.pending.len() + replayed.len();
+        let mut sb = SeqBatch::zeros(b, self.nt, self.nx);
+        for (i, ex) in self.pending.iter().chain(replayed.iter()).enumerate() {
+            sb.sample_mut(i).copy_from_slice(&ex.features);
+            sb.labels[i] = ex.label;
+        }
+        let loss = engine.train_whole(&sb)?;
+        // roll the reservoir: this window's examples become replayable
+        // history for the next commit; drop the oldest window beyond the
+        // retention cap so a long-lived server stays bounded
+        self.buffer.begin_task();
+        self.buffer.retain_recent_segments(MAX_REPLAY_SEGMENTS);
+        self.pending.clear();
+        self.updates += 1;
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendCtx, BackendRegistry};
+    use crate::config::NetConfig;
+
+    fn engine(seed: u64) -> ParallelEngine {
+        let ctx = BackendCtx { seed, ..BackendCtx::new(NetConfig::SMALL) };
+        ParallelEngine::new(BackendRegistry::with_defaults().create("dense", &ctx).unwrap(), 1)
+    }
+
+    fn seq(net: &NetConfig, label: usize, seed: u64) -> Vec<f32> {
+        let mut rng = GaussianRng::new(seed);
+        (0..net.nt * net.nx)
+            .map(|_| (0.5 * rng.normal() + 0.2 * label as f32).clamp(-1.0, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn commits_every_update_every_labels() {
+        let net = NetConfig::SMALL;
+        let cfg = ServeConfig { update_every: 4, ..ServeConfig::default() };
+        let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 1);
+        let mut eng = engine(1);
+        let mut commits = 0;
+        for i in 0..12u64 {
+            let label = (i % net.ny as u64) as usize;
+            if learner.observe(&mut eng, seq(&net, label, 100 + i), label).unwrap().is_some() {
+                commits += 1;
+            }
+        }
+        assert_eq!(commits, 3);
+        assert_eq!(learner.updates, 3);
+        assert_eq!(learner.observed, 12);
+        assert_eq!(learner.pending(), 0);
+        // 3 committed windows rolled + 1 live segment
+        assert_eq!(learner.replay_segments(), 4);
+    }
+
+    #[test]
+    fn replay_history_stays_bounded_across_many_commits() {
+        let net = NetConfig::SMALL;
+        let cfg = ServeConfig { update_every: 1, ..ServeConfig::default() };
+        let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 3);
+        let mut eng = engine(3);
+        for i in 0..(MAX_REPLAY_SEGMENTS as u64 + 20) {
+            learner.observe(&mut eng, seq(&net, 0, i), 0).unwrap();
+        }
+        assert_eq!(learner.updates, MAX_REPLAY_SEGMENTS as u64 + 20);
+        assert_eq!(learner.replay_segments(), MAX_REPLAY_SEGMENTS);
+    }
+
+    #[test]
+    fn update_every_zero_disables_training() {
+        let net = NetConfig::SMALL;
+        let cfg = ServeConfig { update_every: 0, ..ServeConfig::default() };
+        let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 2);
+        let mut eng = engine(2);
+        let before = eng.backend().effective_params().flatten();
+        for i in 0..10u64 {
+            assert!(learner.observe(&mut eng, seq(&net, 0, i), 0).unwrap().is_none());
+        }
+        let after = eng.backend().effective_params().flatten();
+        assert_eq!(before, after, "inference-only mode must never touch weights");
+    }
+
+    #[test]
+    fn commits_change_weights_deterministically() {
+        let net = NetConfig::SMALL;
+        let cfg = ServeConfig { update_every: 3, ..ServeConfig::default() };
+        let run = |eng_seed: u64| -> Vec<f32> {
+            let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 7);
+            let mut eng = engine(eng_seed);
+            for i in 0..6u64 {
+                let label = (i % net.ny as u64) as usize;
+                learner.observe(&mut eng, seq(&net, label, 50 + i), label).unwrap();
+            }
+            eng.backend().effective_params().flatten()
+        };
+        let a = run(5);
+        let b = run(5);
+        assert_ne!(a, engine(5).backend().effective_params().flatten(), "weights moved");
+        assert_eq!(a, b, "online training must be deterministic given the seed");
+    }
+}

@@ -1,0 +1,336 @@
+//! Per-user session state: slab-allocated recurrent hidden states with
+//! LRU eviction and idle-TTL expiry.
+//!
+//! A session owns the MiRU hidden state `h` of one user plus a ring of
+//! the last `nt` input rows (the window the online learner trains on
+//! when a label arrives). Slots live in a slab (`Vec<Option<Slot>>` +
+//! free list) so eviction/recreation never reallocates per-session
+//! buffers' container; lookups go through an id → slot index, and
+//! recency through an ordered touch-counter → slot map, so both hit and
+//! evict are `O(log n)`.
+//!
+//! Time is a *logical tick* supplied by the caller — the store never
+//! reads a wall clock, which makes TTL expiry deterministic and testable
+//! under a mock clock.
+
+use std::collections::BTreeMap;
+
+use crate::rng::SplitMix64;
+
+/// Deterministic session id for a synthetic user index: one SplitMix64
+/// mix, so ids are stable across runs, well spread, and collision-free
+/// for distinct users.
+pub fn session_id_for_user(user: u64) -> u64 {
+    SplitMix64::new(user ^ 0x5E55_10E5_D00D_F00D).next_u64()
+}
+
+/// Lifecycle counters, reported by `m2ru serve` and asserted by the
+/// eviction/determinism tests.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    pub created: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evicted_lru: u64,
+    pub expired_ttl: u64,
+}
+
+struct Slot {
+    id: u64,
+    /// MiRU hidden state, length nh.
+    h: Vec<f32>,
+    /// Ring buffer of the last `nt` input rows (nt × nx), for online
+    /// training sequences.
+    hist: Vec<f32>,
+    /// Rows currently stored (saturates at nt).
+    hist_rows: usize,
+    /// Next ring row to write.
+    hist_head: usize,
+    /// Unique LRU counter value at last access (key into `lru`).
+    last_touch: u64,
+    /// Logical tick at last access (TTL).
+    last_tick: u64,
+    steps: u64,
+}
+
+/// Slab of live sessions with LRU + idle-TTL eviction.
+pub struct SessionStore {
+    nh: usize,
+    nx: usize,
+    nt: usize,
+    capacity: usize,
+    /// Idle ticks before expiry; 0 disables TTL.
+    ttl: u64,
+    slots: Vec<Option<Slot>>,
+    free: Vec<usize>,
+    index: BTreeMap<u64, usize>,
+    /// last_touch → slot index; first entry is the LRU victim.
+    lru: BTreeMap<u64, usize>,
+    touch_counter: u64,
+    pub stats: SessionStats,
+}
+
+impl SessionStore {
+    pub fn new(nh: usize, nx: usize, nt: usize, capacity: usize, ttl: u64) -> SessionStore {
+        assert!(capacity >= 1, "session store needs at least one slot");
+        SessionStore {
+            nh,
+            nx,
+            nt,
+            capacity,
+            ttl,
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: BTreeMap::new(),
+            lru: BTreeMap::new(),
+            touch_counter: 0,
+            stats: SessionStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    fn slot(&self, idx: usize) -> &Slot {
+        self.slots[idx].as_ref().expect("stale slot index")
+    }
+
+    fn slot_mut(&mut self, idx: usize) -> &mut Slot {
+        self.slots[idx].as_mut().expect("stale slot index")
+    }
+
+    fn touch(&mut self, idx: usize, now_tick: u64) {
+        self.touch_counter += 1;
+        let counter = self.touch_counter;
+        let slot = self.slots[idx].as_mut().expect("stale slot index");
+        let old = slot.last_touch;
+        slot.last_touch = counter;
+        slot.last_tick = now_tick;
+        self.lru.remove(&old);
+        self.lru.insert(counter, idx);
+    }
+
+    fn remove_slot(&mut self, idx: usize) {
+        let slot = self.slots[idx].take().expect("stale slot index");
+        self.index.remove(&slot.id);
+        self.lru.remove(&slot.last_touch);
+        self.free.push(idx);
+    }
+
+    /// Expire sessions idle for more than `ttl` ticks. The LRU order is
+    /// also last-tick order (touches are monotone in time), so only the
+    /// map front needs scanning. No-op when TTL is disabled.
+    pub fn expire_idle(&mut self, now_tick: u64) -> usize {
+        if self.ttl == 0 {
+            return 0;
+        }
+        let mut expired = 0;
+        while let Some((&_, &idx)) = self.lru.iter().next() {
+            if now_tick.saturating_sub(self.slot(idx).last_tick) <= self.ttl {
+                break;
+            }
+            self.remove_slot(idx);
+            self.stats.expired_ttl += 1;
+            expired += 1;
+        }
+        expired
+    }
+
+    /// Look up `id`, creating a fresh zero-state session on miss (evicting
+    /// the LRU session first when at capacity). Returns the slot index,
+    /// valid until the next eviction/expiry. Touches the session.
+    pub fn get_or_create(&mut self, id: u64, now_tick: u64) -> usize {
+        if let Some(&idx) = self.index.get(&id) {
+            self.stats.hits += 1;
+            self.touch(idx, now_tick);
+            return idx;
+        }
+        self.stats.misses += 1;
+        if self.index.len() >= self.capacity {
+            let (&_, &victim) = self.lru.iter().next().expect("capacity >= 1 but LRU empty");
+            self.remove_slot(victim);
+            self.stats.evicted_lru += 1;
+        }
+        let slot = Slot {
+            id,
+            h: vec![0.0; self.nh],
+            hist: vec![0.0; self.nt * self.nx],
+            hist_rows: 0,
+            hist_head: 0,
+            last_touch: 0,
+            last_tick: now_tick,
+            steps: 0,
+        };
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(slot);
+                i
+            }
+            None => {
+                self.slots.push(Some(slot));
+                self.slots.len() - 1
+            }
+        };
+        self.index.insert(id, idx);
+        self.stats.created += 1;
+        self.touch(idx, now_tick);
+        idx
+    }
+
+    /// The session's hidden state (length nh).
+    pub fn hidden(&self, idx: usize) -> &[f32] {
+        &self.slot(idx).h
+    }
+
+    /// Overwrite the hidden state after a step.
+    pub fn set_hidden(&mut self, idx: usize, h: &[f32]) {
+        let nh = self.nh;
+        let slot = self.slot_mut(idx);
+        assert_eq!(h.len(), nh, "hidden width mismatch");
+        slot.h.copy_from_slice(h);
+        slot.steps += 1;
+    }
+
+    /// Record one input row in the session's history ring.
+    pub fn push_history(&mut self, idx: usize, row: &[f32]) {
+        let (nx, nt) = (self.nx, self.nt);
+        let slot = self.slot_mut(idx);
+        assert_eq!(row.len(), nx, "input width mismatch");
+        let at = slot.hist_head * nx;
+        slot.hist[at..at + nx].copy_from_slice(row);
+        slot.hist_head = (slot.hist_head + 1) % nt;
+        slot.hist_rows = (slot.hist_rows + 1).min(nt);
+    }
+
+    /// The last `nt` input rows in chronological order as one `nt*nx`
+    /// training sequence, zero-padded at the front when fewer than `nt`
+    /// rows have streamed (e.g. right after eviction).
+    pub fn history_seq(&self, idx: usize) -> Vec<f32> {
+        let s = self.slot(idx);
+        let (nx, nt) = (self.nx, self.nt);
+        let mut out = vec![0.0; nt * nx];
+        for k in 0..s.hist_rows {
+            // k-th oldest row lives at ring row (head - rows + k) mod nt
+            let src = ((s.hist_head + nt - s.hist_rows + k) % nt) * nx;
+            let dst = (nt - s.hist_rows + k) * nx;
+            out[dst..dst + nx].copy_from_slice(&s.hist[src..src + nx]);
+        }
+        out
+    }
+
+    /// Timesteps this session has been advanced.
+    pub fn steps(&self, idx: usize) -> u64 {
+        self.slot(idx).steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(capacity: usize, ttl: u64) -> SessionStore {
+        SessionStore::new(4, 3, 5, capacity, ttl)
+    }
+
+    #[test]
+    fn session_ids_are_deterministic_and_distinct() {
+        assert_eq!(session_id_for_user(7), session_id_for_user(7));
+        let ids: Vec<u64> = (0..1000).map(session_id_for_user).collect();
+        let mut dedup = ids.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "ids must be collision-free");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_at_capacity() {
+        let mut s = store(3, 0);
+        for (tick, id) in [(0u64, 10u64), (1, 20), (2, 30)] {
+            s.get_or_create(id, tick);
+        }
+        // refresh 10: the LRU victim becomes 20
+        s.get_or_create(10, 3);
+        s.get_or_create(40, 4);
+        assert!(s.contains(10) && s.contains(30) && s.contains(40));
+        assert!(!s.contains(20), "20 was least recently used");
+        assert_eq!(s.stats.evicted_lru, 1);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn ttl_expires_idle_sessions_under_mock_clock() {
+        let mut s = store(8, 10);
+        s.get_or_create(1, 0);
+        s.get_or_create(2, 5);
+        assert_eq!(s.expire_idle(9), 0, "nothing idle beyond 10 ticks yet");
+        assert_eq!(s.expire_idle(11), 1, "session 1 idle for 11 > 10 ticks");
+        assert!(!s.contains(1) && s.contains(2));
+        assert_eq!(s.expire_idle(16), 1, "session 2 idle for 11 > 10 ticks");
+        assert_eq!(s.stats.expired_ttl, 2);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn touching_resets_the_ttl_window() {
+        let mut s = store(8, 10);
+        s.get_or_create(1, 0);
+        s.get_or_create(1, 8); // hit, refreshes last_tick
+        assert_eq!(s.expire_idle(15), 0, "idle only 7 ticks since refresh");
+        assert_eq!(s.stats.hits, 1);
+    }
+
+    #[test]
+    fn evicted_sessions_restart_from_zero_state() {
+        let mut s = store(1, 0);
+        let a = s.get_or_create(1, 0);
+        s.set_hidden(a, &[1.0, 2.0, 3.0, 4.0]);
+        s.push_history(a, &[0.5, 0.5, 0.5]);
+        s.get_or_create(2, 1); // evicts 1
+        let b = s.get_or_create(1, 2); // recreated
+        assert_eq!(s.hidden(b), &[0.0; 4]);
+        assert_eq!(s.steps(b), 0);
+        assert_eq!(s.history_seq(b), vec![0.0; 15]);
+    }
+
+    #[test]
+    fn history_ring_is_chronological_and_zero_padded() {
+        let mut s = store(2, 0);
+        let idx = s.get_or_create(9, 0);
+        // 7 rows through an nt=5 ring: rows 3..=7 survive
+        for i in 1..=7 {
+            s.push_history(idx, &[i as f32, 0.0, 0.0]);
+        }
+        let seq = s.history_seq(idx);
+        let firsts: Vec<f32> = (0..5).map(|t| seq[t * 3]).collect();
+        assert_eq!(firsts, vec![3.0, 4.0, 5.0, 6.0, 7.0]);
+        // partial fill zero-pads the *front*
+        let j = s.get_or_create(11, 1);
+        s.push_history(j, &[9.0, 0.0, 0.0]);
+        let seq = s.history_seq(j);
+        assert_eq!(seq[..12], vec![0.0; 12][..]);
+        assert_eq!(seq[12], 9.0);
+    }
+
+    #[test]
+    fn slab_reuses_freed_slots() {
+        let mut s = store(2, 0);
+        s.get_or_create(1, 0);
+        s.get_or_create(2, 1);
+        s.get_or_create(3, 2); // evicts 1, reusing its slab slot
+        assert_eq!(s.slots.len(), 2, "slab must not grow past capacity");
+        assert_eq!(s.stats.created, 3);
+    }
+}
