@@ -36,8 +36,12 @@ use m2ru::linalg::Mat;
 use m2ru::nn::SeqBatch;
 use m2ru::replay::ReplayBuffer;
 use m2ru::rng::GaussianRng;
+use m2ru::net::{decode_frame, encode_frame, Message, FLAG_TICK};
 use m2ru::runtime::{ModelBundle, Runtime};
-use m2ru::serve::{run_serve, DynamicBatcher, ServeOptions, SessionStore, StepRequest};
+use m2ru::serve::{
+    run_serve, save_checkpoint, session_id_for_user, DynamicBatcher, ServeCore, ServeOptions,
+    SessionStore, StepRequest, SyntheticWorkload,
+};
 
 /// One benchmark result, serialized to `results/BENCH_serve.json`.
 struct BenchRecord {
@@ -231,6 +235,7 @@ fn main() -> anyhow::Result<()> {
                     label: None,
                     enqueued_tick: i / 32,
                     enqueued_at: Instant::now(),
+                    tag: 0,
                 });
             }
             let mut tick = 0;
@@ -255,6 +260,47 @@ fn main() -> anyhow::Result<()> {
                 },
             );
         }
+    }
+    if runs("net_encode") {
+        // wire-codec encode cost per 1k Step frames at serving width
+        let x: Vec<f32> = (0..cfg.nx).map(|i| (i as f32 * 0.37).sin()).collect();
+        timeit(&mut recs, "net_encode (1k Step frames, nx=28)", 50, || {
+            for s in 0..1000u64 {
+                let _ = encode_frame(FLAG_TICK, &Message::Step { session: s, x: x.clone() });
+            }
+        });
+    }
+    if runs("net_decode") {
+        let x: Vec<f32> = (0..cfg.nx).map(|i| (i as f32 * 0.37).cos()).collect();
+        let buf = encode_frame(FLAG_TICK, &Message::Step { session: 7, x });
+        timeit(&mut recs, "net_decode (1k Step frames, nx=28)", 50, || {
+            for _ in 0..1000 {
+                let _ = decode_frame(&buf).unwrap();
+            }
+        });
+    }
+    if runs("checkpoint_write") {
+        // snapshot cost for a pmnist100 core with 64 live sessions and
+        // some replay history (the durability hot path)
+        let mut run = RunConfig::default();
+        run.serve.max_batch = 16;
+        run.serve.update_every = 16;
+        let mut core = ServeCore::new(cfg, &run).unwrap();
+        let mut wl = SyntheticWorkload::new(&cfg, 64, 1);
+        for _ in 0..40 {
+            for _ in 0..16 {
+                let (u, x, label) = wl.next();
+                core.submit(session_id_for_user(u), x, label, 0);
+            }
+            core.drain_ready().unwrap();
+            core.advance_tick();
+        }
+        core.flush_all().unwrap();
+        let dir = std::env::temp_dir().join(format!("m2ru_bench_ckpt_{}", std::process::id()));
+        timeit(&mut recs, "checkpoint_write (pmnist100, 64 sessions)", 20, || {
+            save_checkpoint(&core, &dir).unwrap();
+        });
+        let _ = std::fs::remove_dir_all(&dir);
     }
     if runs("serve_e2e") {
         // whole serve loop: batcher + store + sharded stepping (workers=4,

@@ -301,6 +301,54 @@ impl ComputeBackend for CrossbarBackend {
         Ok(Box::new(self.clone()))
     }
 
+    /// Reprogram every device to realize the checkpointed weights (the
+    /// ex-situ reload path). Conductance discretization and write noise
+    /// apply — exactly what reloading a physical chip costs — so the
+    /// restored *effective* weights track the snapshot within device
+    /// tolerances rather than bit-exactly. Biases restore exactly (they
+    /// live in digital registers).
+    fn restore_params(&mut self, p: &MiruParams) -> Result<()> {
+        ensure!(
+            p.nx() == self.nx && p.nh() == self.nh && p.ny() == self.ny,
+            "checkpoint shapes ({}, {}, {}) do not match net ({}, {}, {})",
+            p.nx(),
+            p.nh(),
+            p.ny(),
+            self.nx,
+            self.nh,
+            self.ny
+        );
+        self.xbar_hidden.program_weights(&Mat::vcat(&p.wh, &p.uh));
+        self.xbar_out.program_weights(&p.wo);
+        self.bh = p.bh.clone();
+        self.bo = p.bo.clone();
+        Ok(())
+    }
+
+    fn column_write_counts(&self) -> Option<super::ColumnWear> {
+        Some(super::ColumnWear {
+            hidden: self.xbar_hidden.column_write_counts(),
+            readout: self.xbar_out.column_write_counts(),
+        })
+    }
+
+    /// Mean per-device writes per committed update, projected through the
+    /// endurance model at the paper's 1 kHz ("learning at a rate of 1 ms")
+    /// commit cadence. Infinite before the first training commit.
+    fn projected_lifespan_years(&self) -> Option<f64> {
+        let n_dev = (self.xbar_hidden.rows * self.xbar_hidden.cols
+            + self.xbar_out.rows * self.xbar_out.cols) as f64;
+        // the Ziksa programmer is invoked once per crossbar per train
+        // step, so commits = steps / 2
+        let commits = (self.programmer.steps / 2).max(1) as f64;
+        let writes_per_device_per_commit = self.programmer.total.writes as f64 / n_dev / commits;
+        Some(crate::device::lifespan_years(
+            self.device().endurance,
+            writes_per_device_per_commit,
+            1000.0,
+        ))
+    }
+
     fn stats(&self) -> Vec<String> {
         vec![
             format!(

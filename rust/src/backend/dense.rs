@@ -123,6 +123,23 @@ impl ComputeBackend for DenseBackend {
     fn fork(&self) -> Result<Box<dyn ComputeBackend>> {
         Ok(Box::new(self.clone()))
     }
+
+    /// Digital weights restore bit-exactly: a checkpointed dense serve
+    /// loop resumes with identical effective parameters.
+    fn restore_params(&mut self, p: &MiruParams) -> Result<()> {
+        ensure!(
+            p.nx() == self.params.nx() && p.nh() == self.params.nh() && p.ny() == self.params.ny(),
+            "checkpoint shapes ({}, {}, {}) do not match net ({}, {}, {})",
+            p.nx(),
+            p.nh(),
+            p.ny(),
+            self.params.nx(),
+            self.params.nh(),
+            self.params.ny()
+        );
+        self.params = p.clone();
+        Ok(())
+    }
 }
 
 #[cfg(test)]

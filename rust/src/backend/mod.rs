@@ -49,6 +49,17 @@ pub enum LayerSel {
     Readout,
 }
 
+/// Per-column cumulative device write counts of a substrate's two weight
+/// crossbars — the wear signal behind the serve-path write-rationing
+/// policy ([`crate::coordinator::ParallelEngine::train_whole_guarded`]).
+/// `hidden` has one entry per hidden unit (the stacked `[W_h; U_h]`
+/// crossbar's bitlines), `readout` one per class.
+#[derive(Clone, Debug, Default)]
+pub struct ColumnWear {
+    pub hidden: Vec<u64>,
+    pub readout: Vec<u64>,
+}
+
 /// Training hyper-parameters a backend applies internally (and that the
 /// multi-worker engine needs to finalize externally-merged gradients the
 /// same way).
@@ -212,6 +223,28 @@ pub trait ComputeBackend: Send + Sync {
     /// Human-readable substrate statistics (write pressure, endurance).
     fn stats(&self) -> Vec<String> {
         Vec::new()
+    }
+
+    /// Overwrite the substrate's weights from a checkpointed snapshot.
+    /// Digital backends restore bit-exactly; crossbar backends reprogram
+    /// the devices (discretization and write noise apply, exactly as an
+    /// ex-situ reload of a physical chip would). Backends that cannot
+    /// load weights (compiled executables) report an error.
+    fn restore_params(&mut self, _p: &MiruParams) -> Result<()> {
+        Err(anyhow!("backend `{}` cannot restore checkpointed weights", self.name()))
+    }
+
+    /// Per-column device write counts, for wear-aware write rationing.
+    /// `None` on substrates without wear (digital weights never degrade).
+    fn column_write_counts(&self) -> Option<ColumnWear> {
+        None
+    }
+
+    /// Projected device lifespan in years at the paper's 1 kHz commit
+    /// rate, from mean per-device write pressure and the endurance limit.
+    /// `None` on substrates without an endurance model.
+    fn projected_lifespan_years(&self) -> Option<f64> {
+        None
     }
 }
 

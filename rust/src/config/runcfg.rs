@@ -40,6 +40,8 @@ pub struct RunConfig {
     pub workers: usize,
     /// Streaming-session server policy (`m2ru serve` / `m2ru loadgen`).
     pub serve: ServeConfig,
+    /// Network transport + durability policy (`m2ru serve --listen`).
+    pub net: TransportConfig,
 }
 
 /// Policy knobs of the streaming session server (`rust/src/serve/`):
@@ -65,6 +67,45 @@ pub struct ServeConfig {
     pub replay_cap: usize,
     /// Fraction of each online training batch drawn from replay.
     pub replay_mix: f32,
+    /// Wear-aware write rationing: columns whose cumulative device writes
+    /// exceed `wear_ratio ×` the column mean skip the commit's programming
+    /// pulses (0 disables; only substrates with wear accounting ration).
+    pub wear_ratio: f32,
+}
+
+/// Network transport and durability policy of the TCP serving frontend
+/// (`rust/src/net/`, DESIGN.md §9): where to listen, how deep the bounded
+/// reader→serve queue is, and where/how often session snapshots land.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    /// TCP listen address (`host:port`; port 0 picks a free port). Empty
+    /// selects the in-process synthetic driver instead of the transport.
+    pub listen: String,
+    /// Bounded depth of the per-connection-reader → serve-thread queue
+    /// (back-pressure: readers block when the serve loop falls behind).
+    pub queue_depth: usize,
+    /// Snapshot directory for checkpoint/restore (empty = durability off).
+    pub checkpoint_dir: String,
+    /// Logical ticks between periodic snapshots (0 = only at shutdown).
+    pub checkpoint_every: u64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        Self {
+            listen: String::new(),
+            queue_depth: 256,
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
+        }
+    }
+}
+
+impl TransportConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.queue_depth >= 1, "net.queue_depth must be >= 1");
+        Ok(())
+    }
 }
 
 impl Default for ServeConfig {
@@ -77,6 +118,7 @@ impl Default for ServeConfig {
             update_every: 64,
             replay_cap: 256,
             replay_mix: 0.5,
+            wear_ratio: 4.0,
         }
     }
 }
@@ -92,6 +134,10 @@ impl ServeConfig {
         anyhow::ensure!(
             (0.0..=0.9).contains(&self.replay_mix),
             "serve.replay_mix must be in [0, 0.9]"
+        );
+        anyhow::ensure!(
+            self.wear_ratio == 0.0 || self.wear_ratio >= 1.0,
+            "serve.wear_ratio must be 0 (off) or >= 1 (columns above ratio x mean writes ration)"
         );
         Ok(())
     }
@@ -118,6 +164,7 @@ impl Default for RunConfig {
             backend: "dense".to_string(),
             workers: 1,
             serve: ServeConfig::default(),
+            net: TransportConfig::default(),
         }
     }
 }
@@ -158,6 +205,17 @@ impl RunConfig {
                 "serve.update_every" => self.serve.update_every = iget()?,
                 "serve.replay_cap" => self.serve.replay_cap = iget()?,
                 "serve.replay_mix" => self.serve.replay_mix = fget()? as f32,
+                "serve.wear_ratio" => self.serve.wear_ratio = fget()? as f32,
+                "net.listen" => {
+                    self.net.listen =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
+                "net.queue_depth" => self.net.queue_depth = iget()?,
+                "net.checkpoint_dir" => {
+                    self.net.checkpoint_dir =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
+                "net.checkpoint_every" => self.net.checkpoint_every = iget()? as u64,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -181,7 +239,8 @@ impl RunConfig {
         anyhow::ensure!(self.num_tasks >= 1, "need at least one task");
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
         anyhow::ensure!(!self.backend.is_empty(), "backend name must be non-empty");
-        self.serve.validate()
+        self.serve.validate()?;
+        self.net.validate()
     }
 }
 
@@ -258,6 +317,35 @@ mod tests {
         assert!(RunConfig::default().apply(&map).is_err());
         let bad_mix = parse_toml("[serve]\nreplay_mix = 0.95\n").unwrap();
         assert!(RunConfig::default().apply(&bad_mix).is_err());
+    }
+
+    #[test]
+    fn net_keys_from_toml() {
+        let map = parse_toml(
+            "[net]\nlisten = \"127.0.0.1:7432\"\nqueue_depth = 64\ncheckpoint_dir = \"ckpt\"\ncheckpoint_every = 500\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.net.listen, "127.0.0.1:7432");
+        assert_eq!(cfg.net.queue_depth, 64);
+        assert_eq!(cfg.net.checkpoint_dir, "ckpt");
+        assert_eq!(cfg.net.checkpoint_every, 500);
+        let bad = parse_toml("[net]\nqueue_depth = 0\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
+    }
+
+    #[test]
+    fn wear_ratio_validation() {
+        let ok = parse_toml("[serve]\nwear_ratio = 2.5\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&ok).unwrap();
+        assert_eq!(cfg.serve.wear_ratio, 2.5);
+        let off = parse_toml("[serve]\nwear_ratio = 0\n").unwrap();
+        RunConfig::default().apply(&off).unwrap();
+        // ratios in (0, 1) would ration *under*-stressed columns — rejected
+        let bad = parse_toml("[serve]\nwear_ratio = 0.5\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
     }
 
     #[test]

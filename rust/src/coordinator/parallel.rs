@@ -19,9 +19,9 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::backend::{finalize_update, ComputeBackend};
+use crate::backend::{finalize_update, ColumnWear, ComputeBackend};
 use crate::linalg::{argmax_rows, Mat};
-use crate::nn::{DfaDeltas, SeqBatch};
+use crate::nn::{DfaDeltas, MiruParams, SeqBatch};
 
 use super::engine::Engine;
 
@@ -166,6 +166,45 @@ impl ParallelEngine {
         self.backend.train_dfa(x)
     }
 
+    /// [`ParallelEngine::train_whole`] with wear-aware write rationing:
+    /// before committing, consult the substrate's per-column device write
+    /// counts and zero the finalized deltas of every column whose
+    /// cumulative writes exceed `wear_ratio ×` the column mean — those
+    /// bitlines skip this commit's programming pulses entirely, letting
+    /// the rest of the array catch up. Returns `(loss, rationed columns)`.
+    /// A `wear_ratio` of 0 or a substrate without wear accounting (dense
+    /// weights) falls through to the plain commit, bit-identical to
+    /// `train_whole`.
+    pub fn train_whole_guarded(&mut self, x: &SeqBatch, wear_ratio: f32) -> Result<(f32, u64)> {
+        self.forks_stale = true;
+        if wear_ratio > 0.0 {
+            if let Some(wear) = self.backend.column_write_counts() {
+                let mut d = self.backend.dfa_raw_grads(x)?;
+                finalize_update(&mut d, &self.backend.hyper());
+                let rationed = ration_overstressed(&mut d, &wear, wear_ratio);
+                self.backend.apply_update(&d)?;
+                return Ok((d.loss, rationed));
+            }
+        }
+        Ok((self.backend.train_dfa(x)?, 0))
+    }
+
+    /// Overwrite the backend's weights from a checkpointed snapshot (see
+    /// [`ComputeBackend::restore_params`]) and invalidate the fork cache.
+    pub fn restore_params(&mut self, p: &MiruParams) -> Result<()> {
+        self.forks_stale = true;
+        self.backend.restore_params(p)
+    }
+
+    /// Shutdown/drain hook: release the cached per-worker backend forks
+    /// (each holds a full substrate copy) and mark them stale, so a
+    /// stopping serve loop frees per-worker memory before checkpointing
+    /// and a restarted loop re-forks from the restored master weights.
+    pub fn drain(&mut self) {
+        self.forks.clear();
+        self.forks_stale = true;
+    }
+
     fn refresh_forks(&mut self) -> Result<()> {
         if !self.forks_stale && self.forks.len() == self.workers {
             return Ok(());
@@ -177,6 +216,43 @@ impl ParallelEngine {
         self.forks_stale = false;
         Ok(())
     }
+}
+
+/// Zero the delta columns of over-stressed bitlines. The hidden crossbar
+/// stacks `[W_h; U_h]`, so a hidden wear column maps to the same column
+/// of both delta matrices; readout wear maps to `W_o` columns. Biases
+/// live in digital registers and are never rationed.
+fn ration_overstressed(d: &mut DfaDeltas, wear: &ColumnWear, ratio: f32) -> u64 {
+    let mut rationed = 0;
+    rationed += ration_cols(&mut [&mut d.d_wh, &mut d.d_uh], &wear.hidden, ratio);
+    rationed += ration_cols(&mut [&mut d.d_wo], &wear.readout, ratio);
+    rationed
+}
+
+/// Zero column `c` of every matrix when `counts[c] > ratio × mean(counts)`.
+/// Returns the number of rationed columns.
+fn ration_cols(mats: &mut [&mut Mat], counts: &[u64], ratio: f32) -> u64 {
+    if counts.is_empty() {
+        return 0;
+    }
+    let mean = counts.iter().sum::<u64>() as f64 / counts.len() as f64;
+    if mean <= 0.0 {
+        return 0;
+    }
+    let cut = mean * f64::from(ratio);
+    let mut rationed = 0;
+    for (c, &w) in counts.iter().enumerate() {
+        if w as f64 > cut {
+            for m in mats.iter_mut() {
+                debug_assert_eq!(m.cols, counts.len(), "wear column count mismatch");
+                for r in 0..m.rows {
+                    *m.at_mut(r, c) = 0.0;
+                }
+            }
+            rationed += 1;
+        }
+    }
+    rationed
 }
 
 fn scale_deltas(d: &mut DfaDeltas, w: f32) {
@@ -375,6 +451,74 @@ mod tests {
             // whole-batch commits must be bit-identical regardless of workers
             assert_eq!(par.train_whole(&b).unwrap(), direct.train_dfa(&b).unwrap(), "step {i}");
         }
+    }
+
+    #[test]
+    fn ration_zeroes_only_overstressed_columns() {
+        let net = NetConfig::SMALL;
+        let mut d = DfaDeltas {
+            d_wh: Mat::from_fn(net.nx, net.nh, |_, _| 1.0),
+            d_uh: Mat::from_fn(net.nh, net.nh, |_, _| 1.0),
+            d_bh: vec![1.0; net.nh],
+            d_wo: Mat::from_fn(net.nh, net.ny, |_, _| 1.0),
+            d_bo: vec![1.0; net.ny],
+            loss: 0.5,
+        };
+        // hidden column nh-1 at 10x the rest; readout column 0 likewise
+        let mut hidden = vec![1u64; net.nh];
+        hidden[net.nh - 1] = 100;
+        let mut readout = vec![1u64; net.ny];
+        readout[0] = 100;
+        let wear = ColumnWear { hidden, readout };
+        let rationed = ration_overstressed(&mut d, &wear, 4.0);
+        assert_eq!(rationed, 2);
+        for r in 0..net.nx {
+            assert_eq!(d.d_wh.at(r, net.nh - 1), 0.0);
+            assert_eq!(d.d_wh.at(r, 0), 1.0, "healthy columns untouched");
+        }
+        for r in 0..net.nh {
+            assert_eq!(d.d_uh.at(r, net.nh - 1), 0.0);
+            assert_eq!(d.d_wo.at(r, 0), 0.0);
+            assert_eq!(d.d_wo.at(r, net.ny - 1), 1.0);
+        }
+        assert!(d.d_bh.iter().all(|&v| v == 1.0), "biases are never rationed");
+        // uniform wear rations nothing
+        let uniform = ColumnWear { hidden: vec![5; net.nh], readout: vec![5; net.ny] };
+        assert_eq!(ration_overstressed(&mut d, &uniform, 1.5), 0);
+    }
+
+    #[test]
+    fn guarded_train_on_dense_matches_train_whole() {
+        let net = NetConfig::SMALL;
+        let b = toy_batch(&net, 8, 17);
+        let mut plain = engine(1, 19);
+        let mut guarded = engine(1, 19);
+        let l1 = plain.train_whole(&b).unwrap();
+        // dense backends have no wear accounting: guarded falls through
+        let (l2, rationed) = guarded.train_whole_guarded(&b, 4.0).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(rationed, 0);
+        assert_eq!(
+            plain.backend().effective_params().flatten(),
+            guarded.backend().effective_params().flatten()
+        );
+    }
+
+    #[test]
+    fn restore_params_roundtrips_dense_weights() {
+        let net = NetConfig::SMALL;
+        let mut src = engine(1, 23);
+        src.train_whole(&toy_batch(&net, 8, 2)).unwrap();
+        let snapshot = src.backend().effective_params();
+        let mut dst = engine(2, 99);
+        assert_ne!(dst.backend().effective_params().flatten(), snapshot.flatten());
+        dst.restore_params(&snapshot).unwrap();
+        assert_eq!(
+            dst.backend().effective_params().flatten(),
+            snapshot.flatten(),
+            "dense restore must be bit-exact"
+        );
+        dst.drain(); // shutdown hook is callable any time
     }
 
     #[test]

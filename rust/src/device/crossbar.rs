@@ -110,6 +110,19 @@ impl DifferentialCrossbar {
         self.devices.iter().map(|d| d.writes).collect()
     }
 
+    /// Cumulative writes per bitline column (summed over the column's
+    /// devices) — the wear signal the serve-path write-rationing policy
+    /// consults before each online commit.
+    pub fn column_write_counts(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[c] += self.devices[r * self.cols + c].writes;
+            }
+        }
+        out
+    }
+
     /// Fault injection: freeze a random fraction of devices at their
     /// current conductance (endurance exhaustion / stuck-at faults). The
     /// frozen devices still read, but no longer program — the §VI-B

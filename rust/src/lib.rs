@@ -31,7 +31,8 @@
 //! | [`replay`]    | §IV-A data-preparation unit |
 //! | [`runtime`]   | PJRT client; loads `artifacts/*.hlo.txt` |
 //! | [`coordinator`]| trainer, batcher, parallel serving engine, tile scheduler, metrics |
-//! | [`serve`]     | streaming session server: per-user state, dynamic batching, online learning |
+//! | [`serve`]     | streaming session server: per-user state, dynamic batching, online learning, checkpoint/restore |
+//! | [`net`]       | TCP serving frontend: wire protocol, accept loop, client + load generator |
 //! | [`config`]    | network configs + run/backend selection + TOML-subset loader |
 //! | [`cli`]       | argument parsing for the `m2ru` binary |
 //! | [`experiments`]| regenerates every paper figure/table |
@@ -46,6 +47,7 @@ pub mod device;
 pub mod experiments;
 pub mod hw_model;
 pub mod linalg;
+pub mod net;
 pub mod nn;
 pub mod proptest;
 pub mod quant;

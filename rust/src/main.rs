@@ -3,8 +3,10 @@
 //! Subcommands:
 //!   info                         runtime + artifact + hw-model summary
 //!   train        [flags]         one continual-learning run
-//!   serve        [flags]         streaming session server, synthetic open-loop traffic
+//!   serve        [flags]         streaming session server (synthetic open loop, or
+//!                                `--listen ADDR` for the TCP frontend with durable sessions)
 //!   loadgen      [flags]         closed-loop load generator against the same server
+//!   connect      [flags]         closed-loop TCP load generator against `serve --listen`
 //!   experiment <id> [flags]      regenerate a paper figure/table
 //!   help
 //!
@@ -25,6 +27,7 @@ use m2ru::experiments::{
     run_ablation_replay, run_ablation_sampler, run_ablation_zeta, run_fault, run_fig4, run_fig5a,
     run_fig5b, run_fig5c, run_fig5d, run_headline, run_table1, Fig4Options, Fig5bOptions,
 };
+use m2ru::net::{run_connect, ConnectOptions, NetServeOptions, NetServer};
 use m2ru::runtime::{ModelBundle, Runtime};
 use m2ru::serve::{run_serve, ServeOptions};
 
@@ -58,9 +61,28 @@ SUBCOMMANDS
       --capacity N --ttl T  session slots / idle-tick expiry (0=never)   [1024 / 0]
       --update-every N      labeled steps per online DFA commit (0=off)  [64]
       --replay-cap N --replay-mix F   online replay reservoir / mix      [256 / 0.5]
+      --wear-ratio F        ration commit writes to columns above F x
+                            mean device wear (0=off; crossbar only)      [4.0]
+      --listen ADDR         serve real clients over TCP instead of the
+                            synthetic driver (host:port; port 0 = auto).
+                            Prints `listening on ADDR`, runs until a
+                            client sends Shutdown (see `connect`)
+      --checkpoint-dir DIR  durable sessions: restore snapshot on boot,
+                            write on shutdown (and every --checkpoint-every
+                            T ticks); kill/restart resumes every session
+      --queue-depth N       bounded reader->serve queue (back-pressure)   [256]
       --config FILE --seed N --lr F --lam F --beta F
   loadgen                   closed-loop load generator (same flags as serve)
       --concurrency C       outstanding-request target                   [4*max-batch]
+  connect                   closed-loop TCP load generator against `serve --listen`
+      --addr HOST:PORT      server address (required)
+      --net NAME            network shapes (must match the server)       [pmnist100]
+      --requests N --sessions K --arrivals N --seed N   workload (same
+                            schedule as the in-process driver: identical
+                            seed/policy => bit-identical logits)
+      --skip N              fast-forward the workload N requests (resume
+                            against a server restored from a checkpoint)
+      --keep-alive          do not send Shutdown when done
   experiment ID             fig4|fig5a|fig5b|fig5c|fig5d|table1|headline|all
                             |ablation-replay|ablation-zeta|ablation-sampler|fault
       fig4:  --dataset pmnist|cifarfeat  --nh 100|256  --engines adam,dfa,hw
@@ -232,9 +254,9 @@ fn cmd_train(artifacts: &str, args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// `m2ru serve` (open loop) and `m2ru loadgen` (closed loop): drive the
-/// streaming session server on deterministic synthetic traffic and print
-/// the throughput/latency/batching/eviction report.
+/// `m2ru serve` (open loop), `m2ru serve --listen` (TCP frontend) and
+/// `m2ru loadgen` (closed loop): drive the streaming session server and
+/// print the throughput/latency/batching/eviction report.
 fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
     let net_name = args.get("net", "pmnist100");
     let net = NetConfig::by_name(&net_name).with_context(|| format!("unknown net `{net_name}`"))?;
@@ -251,7 +273,43 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
     run.serve.update_every = args.get_parse("update-every", run.serve.update_every)?;
     run.serve.replay_cap = args.get_parse("replay-cap", run.serve.replay_cap)?;
     run.serve.replay_mix = args.get_parse("replay-mix", run.serve.replay_mix)?;
+    run.serve.wear_ratio = args.get_parse("wear-ratio", run.serve.wear_ratio)?;
+    if let Some(listen) = args.get_opt("listen") {
+        run.net.listen = listen;
+    }
+    if let Some(dir) = args.get_opt("checkpoint-dir") {
+        run.net.checkpoint_dir = dir;
+    }
+    run.net.checkpoint_every = args.get_parse("checkpoint-every", run.net.checkpoint_every)?;
+    run.net.queue_depth = args.get_parse("queue-depth", run.net.queue_depth)?;
     run.validate()?;
+
+    // transport-backed event loop: serve real clients over TCP
+    if !closed_loop && !run.net.listen.is_empty() {
+        // accepted for flag-compatibility with the synthetic driver, but
+        // real clients decide the workload over TCP
+        let _ = args.get_parse("requests", 0u64)?;
+        let _ = args.get_parse("sessions", 0usize)?;
+        let _ = args.get_parse("arrivals", 0usize)?;
+        args.finish()?;
+        let server = NetServer::bind(NetServeOptions::new(net, run.clone(), run.net.listen.clone()))?;
+        println!("listening on {}", server.local_addr()?);
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        let rep = server.run()?;
+        println!("connections: {}", rep.connections);
+        if rep.restored_sessions > 0 {
+            println!("restored sessions: {}", rep.restored_sessions);
+        }
+        for line in rep.report.lines() {
+            println!("{line}");
+        }
+        if let Some(path) = rep.checkpoint_path {
+            println!("checkpoint: {}", path.display());
+        }
+        return Ok(());
+    }
+
     let mut opts = ServeOptions::new(net, run);
     opts.requests = args.get_parse("requests", opts.requests)?;
     opts.sessions = args.get_parse("sessions", opts.sessions)?;
@@ -275,6 +333,42 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
     let report = run_serve(&opts)?;
     for line in report.lines() {
         println!("{line}");
+    }
+    Ok(())
+}
+
+/// `m2ru connect`: closed-loop TCP load generator against a
+/// `m2ru serve --listen` server.
+fn cmd_connect(args: &mut Args) -> Result<()> {
+    let addr = args.get_opt("addr").context("--addr HOST:PORT is required")?;
+    let net_name = args.get("net", "pmnist100");
+    let net = NetConfig::by_name(&net_name).with_context(|| format!("unknown net `{net_name}`"))?;
+    let mut opts = ConnectOptions::new(addr, net);
+    opts.requests = args.get_parse("requests", opts.requests)?;
+    opts.sessions = args.get_parse("sessions", opts.sessions)?;
+    opts.arrivals = args.get_parse("arrivals", opts.arrivals)?;
+    opts.seed = args.get_parse("seed", opts.seed)?;
+    opts.skip = args.get_parse("skip", opts.skip)?;
+    opts.shutdown = !args.get_bool("keep-alive")?;
+    args.finish()?;
+    println!(
+        "connect: {} requests over {} sessions to {} (arrivals {}, seed {})",
+        opts.requests, opts.sessions, opts.addr, opts.arrivals, opts.seed
+    );
+    let rep = run_connect(&opts)?;
+    println!(
+        "connect: completed {} requests in {:.3} s ({:.0} req/s), {} labeled",
+        rep.completed.len(),
+        rep.wall.as_secs_f64(),
+        rep.throughput(),
+        rep.labeled
+    );
+    println!("server stats:");
+    for line in rep.stats_text.lines() {
+        println!("  {line}");
+    }
+    if let Some(total) = rep.server_total {
+        println!("shutdown: server acknowledged {total} total requests");
     }
     Ok(())
 }
@@ -436,6 +530,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&artifacts, &mut args),
         "serve" => cmd_serve(&mut args, false),
         "loadgen" => cmd_serve(&mut args, true),
+        "connect" => cmd_connect(&mut args),
         "experiment" => {
             let rt = Runtime::cpu()?;
             let manifest = Manifest::load(&artifacts)?;

@@ -1,0 +1,254 @@
+//! `NetClient` — the Rust client of the TCP serving protocol — and the
+//! closed-loop load generator behind `m2ru connect`.
+//!
+//! The client splits its socket: the calling thread writes frames, a
+//! reader thread drains responses into a channel. That makes pipelined
+//! waves deadlock-free (the server's writes are always consumed, so its
+//! serve thread never blocks on a full socket while the client is still
+//! writing) and keeps the synchronous request/response helpers trivial.
+//!
+//! [`run_connect`] replays the synthetic driver's admission schedule
+//! over the wire: `arrivals` steps per wave, `FLAG_TICK` on each wave's
+//! last frame, `FLAG_FLUSH` on the run's last frame. Against a loopback
+//! server with the same seed and policy this produces bit-identical
+//! logits to `m2ru serve`'s in-process run — asserted by
+//! `tests/net_roundtrip.rs`.
+
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::NetConfig;
+use crate::serve::{session_id_for_user, SyntheticWorkload};
+
+use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
+
+/// A connected protocol client.
+pub struct NetClient {
+    writer: TcpStream,
+    rx: Receiver<Frame>,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetClient {
+    /// Connect and start the response-reader thread.
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let writer = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let _ = writer.set_nodelay(true);
+        let mut read_half = writer.try_clone().context("cloning socket for the reader")?;
+        let (tx, rx) = channel::<Frame>();
+        let reader = std::thread::spawn(move || loop {
+            match wire::read_frame(&mut read_half) {
+                Ok(Some(frame)) => {
+                    if tx.send(frame).is_err() {
+                        return;
+                    }
+                }
+                // clean EOF or any read error: the connection is done
+                _ => return,
+            }
+        });
+        Ok(NetClient { writer, rx, reader: Some(reader) })
+    }
+
+    /// Send one frame.
+    pub fn send(&mut self, flags: u8, msg: &Message) -> Result<()> {
+        wire::write_frame(&mut self.writer, flags, msg)
+    }
+
+    /// Block for the next response message.
+    pub fn recv(&mut self) -> Result<Message> {
+        match self.rx.recv() {
+            Ok(frame) => Ok(frame.msg),
+            Err(_) => bail!("server closed the connection"),
+        }
+    }
+
+    /// Non-blocking response poll.
+    pub fn try_recv(&mut self) -> Option<Message> {
+        self.rx.try_recv().ok().map(|f| f.msg)
+    }
+
+    /// Handshake: register `user` and return its server-side session id.
+    pub fn hello(&mut self, user: u64) -> Result<u64> {
+        self.send(0, &Message::Hello { user })?;
+        match self.recv()? {
+            Message::Ack { value } => Ok(value),
+            other => bail!("expected Ack to Hello, got {other:?}"),
+        }
+    }
+
+    /// Synchronous single step: send one (optionally labeled) timestep
+    /// and wait for its logits. Flags force immediate dispatch, so this
+    /// is the low-latency interactive path (one tick per request).
+    pub fn step(&mut self, session: u64, x: Vec<f32>, label: Option<u32>) -> Result<(u32, Vec<f32>)> {
+        let msg = match label {
+            Some(l) => Message::StepLabeled { session, label: l, x },
+            None => Message::Step { session, x },
+        };
+        self.send(FLAG_TICK | FLAG_FLUSH, &msg)?;
+        match self.recv()? {
+            Message::Logits { pred, logits, .. } => Ok((pred, logits)),
+            other => bail!("expected Logits, got {other:?}"),
+        }
+    }
+
+    /// Fetch the server's serve-report text.
+    pub fn stats(&mut self) -> Result<String> {
+        self.send(0, &Message::Stats { text: String::new() })?;
+        match self.recv()? {
+            Message::Stats { text } => Ok(text),
+            other => bail!("expected Stats, got {other:?}"),
+        }
+    }
+
+    /// Ask the server to drain, checkpoint and exit; returns its total
+    /// served request count.
+    pub fn shutdown_server(&mut self) -> Result<u64> {
+        self.send(0, &Message::Shutdown)?;
+        match self.recv()? {
+            Message::Ack { value } => Ok(value),
+            other => bail!("expected Ack to Shutdown, got {other:?}"),
+        }
+    }
+}
+
+impl Drop for NetClient {
+    fn drop(&mut self) {
+        // unblock and reap the reader thread
+        let _ = self.writer.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One `m2ru connect` run, fully specified.
+#[derive(Clone, Debug)]
+pub struct ConnectOptions {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Network shapes — must match the server's `--net`.
+    pub net: NetConfig,
+    /// Requests to stream.
+    pub requests: u64,
+    /// Simulated users.
+    pub sessions: usize,
+    /// Requests per wave (one wave = one server tick).
+    pub arrivals: usize,
+    /// Workload seed; with the server's seed and policy equal to an
+    /// `m2ru serve` run, logits are bit-identical to the in-process
+    /// driver.
+    pub seed: u64,
+    /// Fast-forward the workload past this many requests first (resume
+    /// traffic against a server restarted from a checkpoint).
+    pub skip: u64,
+    /// Send `Shutdown` when done (the server drains, checkpoints, exits).
+    pub shutdown: bool,
+}
+
+impl ConnectOptions {
+    pub fn new(addr: impl Into<String>, net: NetConfig) -> ConnectOptions {
+        ConnectOptions {
+            addr: addr.into(),
+            net,
+            requests: 2000,
+            sessions: 128,
+            arrivals: 32,
+            seed: 42,
+            skip: 0,
+            shutdown: true,
+        }
+    }
+}
+
+/// Outcome of a `m2ru connect` run.
+pub struct ConnectReport {
+    /// `(session, prediction, logits)` per response, in completion order.
+    pub completed: Vec<(u64, u32, Vec<f32>)>,
+    /// Labeled requests issued (scored server-side).
+    pub labeled: u64,
+    /// Wall-clock time from first wave to last response.
+    pub wall: Duration,
+    /// The server's serve report, fetched after the run.
+    pub stats_text: String,
+    /// The server's total served count from the shutdown Ack (only when
+    /// `shutdown` was requested).
+    pub server_total: Option<u64>,
+}
+
+impl ConnectReport {
+    pub fn throughput(&self) -> f64 {
+        self.completed.len() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Closed-loop load generator: replay the synthetic workload over TCP in
+/// driver-equivalent waves and collect every response.
+pub fn run_connect(opts: &ConnectOptions) -> Result<ConnectReport> {
+    anyhow::ensure!(opts.requests >= 1, "need at least one request");
+    anyhow::ensure!(opts.sessions >= 1, "need at least one session");
+    anyhow::ensure!(opts.arrivals >= 1, "need at least one request per wave");
+    let mut client = NetClient::connect(&opts.addr)?;
+    // handshake validates protocol/version compatibility up front
+    let _ = client.hello(0)?;
+
+    let mut workload = SyntheticWorkload::new(&opts.net, opts.sessions, opts.seed);
+    workload.skip(opts.skip);
+
+    let mut completed: Vec<(u64, u32, Vec<f32>)> = Vec::with_capacity(opts.requests as usize);
+    let mut labeled: u64 = 0;
+    let collect = |completed: &mut Vec<(u64, u32, Vec<f32>)>, msg: Message| -> Result<()> {
+        match msg {
+            Message::Logits { session, pred, logits } => {
+                completed.push((session, pred, logits));
+                Ok(())
+            }
+            other => bail!("expected Logits during the run, got {other:?}"),
+        }
+    };
+
+    let start = Instant::now();
+    let mut issued: u64 = 0;
+    while issued < opts.requests {
+        let wave = (opts.arrivals as u64).min(opts.requests - issued) as usize;
+        for i in 0..wave {
+            let (user, x, label) = workload.next();
+            let session = session_id_for_user(user);
+            if label.is_some() {
+                labeled += 1;
+            }
+            let last_of_wave = i + 1 == wave;
+            let last_of_run = issued + 1 == opts.requests;
+            let mut flags = 0u8;
+            if last_of_wave {
+                flags |= FLAG_TICK;
+            }
+            if last_of_run {
+                // the driver's end-of-traffic tail flush, same tick
+                flags |= FLAG_FLUSH;
+            }
+            let msg = match label {
+                Some(l) => Message::StepLabeled { session, label: l as u32, x },
+                None => Message::Step { session, x },
+            };
+            client.send(flags, &msg)?;
+            issued += 1;
+        }
+        // opportunistically drain responses to bound in-flight buffering
+        while let Some(msg) = client.try_recv() {
+            collect(&mut completed, msg)?;
+        }
+    }
+    while (completed.len() as u64) < opts.requests {
+        let msg = client.recv()?;
+        collect(&mut completed, msg)?;
+    }
+    let wall = start.elapsed();
+
+    let stats_text = client.stats()?;
+    let server_total = if opts.shutdown { Some(client.shutdown_server()?) } else { None };
+    Ok(ConnectReport { completed, labeled, wall, stats_text, server_total })
+}

@@ -1,0 +1,29 @@
+//! Network transport: the TCP serving frontend of the streaming session
+//! server (DESIGN.md §9) — where the server meets the outside world.
+//!
+//! * [`wire`] — the versioned length-prefixed binary protocol
+//!   (Hello/Step/StepLabeled/Ack/Logits/Stats/Shutdown frames, explicit
+//!   little-endian layout, malformed-frame rejection without panics).
+//! * [`NetServer`] — `std::net::TcpListener` accept loop, one reader
+//!   thread per connection, a bounded `std::sync::mpsc` channel into the
+//!   single deterministic serve thread driving
+//!   [`crate::serve::ServeCore`], and checkpoint/restore wiring
+//!   (`m2ru serve --listen ADDR --checkpoint-dir DIR`).
+//! * [`NetClient`] / [`run_connect`] — the protocol client and the
+//!   closed-loop load generator (`m2ru connect`), which replays the
+//!   synthetic driver's admission schedule over loopback with
+//!   bit-identical results.
+//!
+//! No dependencies beyond `std`: the frame codec, threading and
+//! durability are all plain `std::net` + `std::sync`.
+
+mod client;
+mod server;
+pub mod wire;
+
+pub use client::{run_connect, ConnectOptions, ConnectReport, NetClient};
+pub use server::{run_net_serve, snapshot_path, NetServeOptions, NetServeReport, NetServer};
+pub use wire::{
+    decode_frame, encode_frame, read_frame, write_frame, Frame, Message, FLAG_FLUSH, FLAG_TICK,
+    HEADER_LEN, MAGIC, MAX_PAYLOAD, VERSION,
+};

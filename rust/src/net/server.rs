@@ -1,0 +1,391 @@
+//! TCP serving frontend: a multi-client accept loop feeding one
+//! deterministic serve thread over a bounded channel (DESIGN.md §9).
+//!
+//! ## Threading
+//!
+//! ```text
+//! acceptor thread ──spawns──> reader thread (per connection)
+//!                                   │  wire::read_frame
+//!                                   ▼
+//!                  std::sync::mpsc::sync_channel (bounded: back-pressure)
+//!                                   │
+//!                                   ▼
+//!                   serve thread: ServeCore (store/batcher/learner)
+//!                                   │  writes Logits/Ack/Stats frames
+//!                                   ▼
+//!                    per-connection cloned TcpStream writers
+//! ```
+//!
+//! Readers block when the serve loop falls behind (`net.queue_depth`
+//! frames in flight), which propagates back-pressure to clients through
+//! TCP flow control instead of buffering unboundedly.
+//!
+//! ## Determinism
+//!
+//! The serve thread is the only thread touching serving state, and it
+//! advances the logical clock exactly when a frame carries `FLAG_TICK` —
+//! so a single client replaying the synthetic driver's admission
+//! schedule (one wave per tick, `FLAG_TICK` on the wave's last frame,
+//! `FLAG_FLUSH` on the run's last frame) reproduces the in-process
+//! driver's batches, commits and logits bit-for-bit. The loopback test
+//! in `tests/net_roundtrip.rs` asserts exactly that.
+//!
+//! ## Durability
+//!
+//! With a checkpoint directory configured, the server restores the last
+//! snapshot on boot (corrupt snapshots warn and boot fresh), snapshots
+//! every `net.checkpoint_every` ticks, and always snapshots on shutdown —
+//! a kill/restart resumes every live session's hidden state bitwise.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{NetConfig, RunConfig};
+use crate::serve::{
+    save_checkpoint, session_id_for_user, try_restore, CompletedStep, RestoreOutcome, ServeCore,
+    ServeReport,
+};
+
+use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
+
+/// One network serve run, fully specified.
+#[derive(Clone, Debug)]
+pub struct NetServeOptions {
+    /// Network shapes (must match what clients stream).
+    pub net: NetConfig,
+    /// Backend, workers, seed, `[serve]` policy and `[net]` transport
+    /// policy (queue depth, checkpointing).
+    pub run: RunConfig,
+    /// Listen address (`host:port`; port 0 picks a free port).
+    pub listen: String,
+}
+
+impl NetServeOptions {
+    pub fn new(net: NetConfig, run: RunConfig, listen: impl Into<String>) -> NetServeOptions {
+        NetServeOptions { net, run, listen: listen.into() }
+    }
+}
+
+/// Outcome of a network serve run (after a client sent `Shutdown`).
+pub struct NetServeReport {
+    /// The usual serve report (metrics include any restored history).
+    pub report: ServeReport,
+    /// Connections accepted over the run.
+    pub connections: u64,
+    /// Where the final snapshot landed (durability enabled only).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Sessions restored from a snapshot at boot.
+    pub restored_sessions: usize,
+}
+
+/// Events the connection threads feed the serve thread.
+enum Event {
+    Connected { conn: u64, writer: TcpStream },
+    Frame { conn: u64, frame: Frame },
+    Disconnected { conn: u64 },
+    Malformed { conn: u64, error: String },
+}
+
+/// A bound TCP serving frontend. `bind` then `run`; `local_addr` exposes
+/// the picked port so tests and scripts can use `--listen 127.0.0.1:0`.
+pub struct NetServer {
+    listener: TcpListener,
+    opts: NetServeOptions,
+}
+
+impl NetServer {
+    pub fn bind(opts: NetServeOptions) -> Result<NetServer> {
+        opts.run.validate()?;
+        let listener = TcpListener::bind(&opts.listen)
+            .with_context(|| format!("binding {}", opts.listen))?;
+        Ok(NetServer { listener, opts })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until a client sends `Shutdown`. Blocking; spawn a thread to
+    /// run it in the background.
+    pub fn run(self) -> Result<NetServeReport> {
+        let NetServer { listener, opts } = self;
+        let mut core = ServeCore::new(opts.net, &opts.run)?;
+
+        // durable boot: restore the last snapshot if one exists
+        let ckpt_dir: Option<PathBuf> = if opts.run.net.checkpoint_dir.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(&opts.run.net.checkpoint_dir))
+        };
+        let mut restored_sessions = 0;
+        if let Some(dir) = &ckpt_dir {
+            match try_restore(&mut core, dir)? {
+                RestoreOutcome::Restored { sessions, tick } => {
+                    restored_sessions = sessions;
+                    eprintln!("restored {sessions} session(s) at tick {tick} from {}", dir.display());
+                }
+                RestoreOutcome::Corrupt { error } => {
+                    eprintln!("warning: ignoring corrupt checkpoint ({error}); booting fresh");
+                }
+                RestoreOutcome::Fresh => {}
+            }
+        }
+
+        // acceptor + per-connection readers feed one bounded channel
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = sync_channel::<Event>(opts.run.net.queue_depth.max(1));
+        let acceptor = spawn_acceptor(listener.try_clone()?, tx.clone(), stop.clone());
+        drop(tx);
+
+        // ---- the serve thread (this thread) -----------------------------
+        let start = Instant::now();
+        let mut conns: HashMap<u64, TcpStream> = HashMap::new();
+        let mut total_conns: u64 = 0;
+        let nx = opts.net.nx;
+        let checkpoint_every = opts.run.net.checkpoint_every;
+        let serve_result = (|| -> Result<()> {
+            while let Ok(ev) = rx.recv() {
+                match ev {
+                    Event::Connected { conn, writer } => {
+                        conns.insert(conn, writer);
+                        total_conns += 1;
+                    }
+                    Event::Disconnected { conn } => {
+                        conns.remove(&conn);
+                    }
+                    Event::Malformed { conn, error } => {
+                        eprintln!("net: dropping connection {conn}: {error}");
+                        if let Some(s) = conns.remove(&conn) {
+                            let _ = s.shutdown(std::net::Shutdown::Both);
+                        }
+                    }
+                    Event::Frame { conn, frame } => {
+                        let Frame { flags, msg } = frame;
+                        // 1. steps enqueue before their flags act. A
+                        //    protocol-violating frame drops its own
+                        //    connection but its flags still drive the
+                        //    clock below — one client's bad frame must
+                        //    not stall other clients' queued requests.
+                        let mut shutdown = false;
+                        match msg {
+                            Message::Step { session, x } => {
+                                if x.len() != nx {
+                                    drop_protocol_violation(&mut conns, conn, x.len(), nx);
+                                } else {
+                                    core.submit(session, x, None, conn);
+                                }
+                            }
+                            Message::StepLabeled { session, label, x } => {
+                                if x.len() != nx {
+                                    drop_protocol_violation(&mut conns, conn, x.len(), nx);
+                                } else {
+                                    core.submit(session, x, Some(label as usize), conn);
+                                }
+                            }
+                            Message::Hello { user } => {
+                                let sid = session_id_for_user(user);
+                                send_to(&mut conns, conn, &Message::Ack { value: sid });
+                            }
+                            Message::Stats { .. } => {
+                                let text =
+                                    core.report(core.store().len()).lines().join("\n");
+                                send_to(&mut conns, conn, &Message::Stats { text });
+                            }
+                            Message::Shutdown => shutdown = true,
+                            Message::Ack { .. } | Message::Logits { .. } => {
+                                eprintln!(
+                                    "net: client {conn} sent a server-only message; dropping it"
+                                );
+                                if let Some(s) = conns.remove(&conn) {
+                                    let _ = s.shutdown(std::net::Shutdown::Both);
+                                }
+                            }
+                        }
+                        // 2. flags drive the deterministic clock, exactly
+                        //    one driver-loop iteration per FLAG_TICK wave
+                        let mut done: Vec<CompletedStep> = Vec::new();
+                        if flags & FLAG_TICK != 0 {
+                            done.extend(core.drain_ready()?);
+                        }
+                        if shutdown || flags & FLAG_FLUSH != 0 {
+                            done.extend(core.flush_all()?);
+                        }
+                        route_logits(&mut conns, done);
+                        if flags & FLAG_TICK != 0 {
+                            core.advance_tick();
+                            if checkpoint_every > 0 && core.tick() % checkpoint_every == 0 {
+                                if let Some(dir) = &ckpt_dir {
+                                    save_checkpoint(&core, dir)?;
+                                }
+                            }
+                        }
+                        if shutdown {
+                            send_to(
+                                &mut conns,
+                                conn,
+                                &Message::Ack { value: core.metrics().requests },
+                            );
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        })();
+
+        // ---- teardown ---------------------------------------------------
+        stop.store(true, Ordering::SeqCst);
+        // drop the receiver FIRST: any acceptor/reader blocked in send()
+        // on the full bounded channel errors out immediately instead of
+        // deadlocking the acceptor join below
+        drop(rx);
+        // wake the blocking accept with a throwaway connection; when
+        // bound to an unspecified address (0.0.0.0 / ::), connect via
+        // loopback instead. If the wake fails, do NOT join — shutdown
+        // (and the final checkpoint) must not hang on a blocked accept;
+        // the acceptor dies with the process.
+        let woke = match listener.local_addr() {
+            Ok(mut addr) => {
+                if addr.ip().is_unspecified() {
+                    let ip = match addr.ip() {
+                        std::net::IpAddr::V4(_) => {
+                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                        }
+                        std::net::IpAddr::V6(_) => {
+                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                        }
+                    };
+                    addr.set_ip(ip);
+                }
+                TcpStream::connect(addr).is_ok()
+            }
+            Err(_) => false,
+        };
+        if woke {
+            let _ = acceptor.join();
+        }
+        // closing the write halves unblocks client readers
+        for (_, s) in conns.drain() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        serve_result?;
+
+        core.set_wall(start.elapsed());
+        core.drain_engine();
+        let checkpoint_path = match &ckpt_dir {
+            Some(dir) => Some(save_checkpoint(&core, dir)?),
+            None => None,
+        };
+        let report = core.report(core.store().len());
+        Ok(NetServeReport { report, connections: total_conns, checkpoint_path, restored_sessions })
+    }
+}
+
+/// Accept connections until stopped; one reader thread per connection.
+fn spawn_acceptor(
+    listener: TcpListener,
+    tx: SyncSender<Event>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut next_conn: u64 = 1;
+        for stream in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let _ = stream.set_nodelay(true);
+            let conn = next_conn;
+            next_conn += 1;
+            let writer = match stream.try_clone() {
+                Ok(w) => w,
+                Err(_) => continue,
+            };
+            // bounded writes: a client that stops reading its socket must
+            // not freeze the single serve thread — after the timeout the
+            // write errors and the connection is dropped
+            let _ = writer.set_write_timeout(Some(std::time::Duration::from_secs(10)));
+            if tx.send(Event::Connected { conn, writer }).is_err() {
+                return;
+            }
+            let reader_tx = tx.clone();
+            let mut reader = stream;
+            std::thread::spawn(move || loop {
+                match wire::read_frame(&mut reader) {
+                    Ok(Some(frame)) => {
+                        if reader_tx.send(Event::Frame { conn, frame }).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(None) => {
+                        let _ = reader_tx.send(Event::Disconnected { conn });
+                        return;
+                    }
+                    Err(e) => {
+                        let _ = reader_tx.send(Event::Malformed { conn, error: e.to_string() });
+                        return;
+                    }
+                }
+            });
+        }
+    })
+}
+
+/// Return each completed step's logits to the connection it arrived on
+/// (consumes the steps — the logits rows move into the frames).
+fn route_logits(conns: &mut HashMap<u64, TcpStream>, done: Vec<CompletedStep>) {
+    for step in done {
+        let msg = Message::Logits {
+            session: step.session,
+            pred: step.pred as u32,
+            logits: step.logits,
+        };
+        send_to(conns, step.tag, &msg);
+    }
+}
+
+/// Best-effort frame write; a dead peer just drops out of the conn map
+/// (its reader thread reports the disconnect separately).
+fn send_to(conns: &mut HashMap<u64, TcpStream>, conn: u64, msg: &Message) {
+    if let Some(s) = conns.get_mut(&conn) {
+        let buf = wire::encode_frame(0, msg);
+        if s.write_all(&buf).is_err() {
+            conns.remove(&conn);
+        }
+    }
+}
+
+fn drop_protocol_violation(conns: &mut HashMap<u64, TcpStream>, conn: u64, got: usize, want: usize) {
+    eprintln!("net: connection {conn} sent a step of width {got} (net expects {want}); dropping");
+    if let Some(s) = conns.remove(&conn) {
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Convenience wrapper: bind, print nothing, serve until shutdown.
+pub fn run_net_serve(opts: &NetServeOptions) -> Result<NetServeReport> {
+    NetServer::bind(opts.clone())?.run()
+}
+
+// Integration coverage lives in `tests/net_roundtrip.rs` (loopback
+// equivalence against the in-process driver, restart resumption, codec
+// fuzz cases); unit tests here would need real sockets too and would
+// duplicate that.
+
+/// The snapshot a checkpoint directory holds — see
+/// [`crate::serve::checkpoint`] for the format.
+pub fn snapshot_path(dir: &Path) -> PathBuf {
+    dir.join(crate::serve::SNAPSHOT_FILE)
+}

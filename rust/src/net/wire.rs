@@ -1,0 +1,397 @@
+//! Wire codec: the length-prefixed binary protocol of the TCP serving
+//! frontend (DESIGN.md §9).
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic    "M2RU"
+//! 4       2     version  1
+//! 6       1     kind     message discriminant (1..=7)
+//! 7       1     flags    FLAG_TICK | FLAG_FLUSH
+//! 8       4     len      payload byte count (<= MAX_PAYLOAD)
+//! 12      len   payload  per-kind layout below
+//! ```
+//!
+//! Per-kind payloads: `Hello{user u64}`, `Step{session u64, n u32,
+//! n×f32}`, `StepLabeled{session u64, label u32, n u32, n×f32}`,
+//! `Ack{value u64}`, `Logits{session u64, pred u32, n u32, n×f32}`,
+//! `Stats{utf-8 bytes}` (the header's payload length delimits the
+//! text), `Shutdown{}` (empty).
+//!
+//! Flags drive the server's deterministic logical clock: `FLAG_TICK`
+//! marks the end of an admission wave (dispatch per the max-batch/
+//! max-wait policy, then advance the tick — exactly one driver loop
+//! iteration), `FLAG_FLUSH` forces the end-of-traffic tail flush. A
+//! client that pipelines waves with these flags reproduces the
+//! in-process driver's batch boundaries bit-for-bit.
+//!
+//! Malformed input — bad magic, unknown version or kind, oversized or
+//! truncated payloads, trailing bytes — decodes to an error, never a
+//! panic; the server drops the offending connection.
+
+use std::io::Read;
+
+use anyhow::{bail, ensure, Result};
+
+/// `"M2RU"`.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"M2RU");
+pub const VERSION: u16 = 1;
+pub const HEADER_LEN: usize = 12;
+/// Upper bound on one frame's payload; larger length fields are rejected
+/// before any allocation happens.
+pub const MAX_PAYLOAD: u32 = 1 << 20;
+
+/// End of an admission wave: dispatch ready batches, advance the tick.
+pub const FLAG_TICK: u8 = 0b01;
+/// Traffic source exhausted: flush queued requests past the wait policy.
+pub const FLAG_FLUSH: u8 = 0b10;
+
+/// One protocol message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Client handshake; the server replies `Ack{session id}` for the
+    /// given user key.
+    Hello { user: u64 },
+    /// One unlabeled timestep of `session`'s stream.
+    Step { session: u64, x: Vec<f32> },
+    /// One labeled timestep (feeds the online learner when dispatched).
+    StepLabeled { session: u64, label: u32, x: Vec<f32> },
+    /// Generic acknowledgement carrying one value.
+    Ack { value: u64 },
+    /// Served logits for one completed step.
+    Logits { session: u64, pred: u32, logits: Vec<f32> },
+    /// Stats request (client → server, empty text) and response
+    /// (server → client, the serve report).
+    Stats { text: String },
+    /// Drain everything, checkpoint, and stop the server.
+    Shutdown,
+}
+
+impl Message {
+    /// Wire discriminant.
+    pub fn kind(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => 1,
+            Message::Step { .. } => 2,
+            Message::StepLabeled { .. } => 3,
+            Message::Ack { .. } => 4,
+            Message::Logits { .. } => 5,
+            Message::Stats { .. } => 6,
+            Message::Shutdown => 7,
+        }
+    }
+}
+
+/// One decoded frame: header flags + message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub flags: u8,
+    pub msg: Message,
+}
+
+// ---------------------------------------------------------------- encoding
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn encode_payload(msg: &Message) -> Vec<u8> {
+    let mut p = Vec::new();
+    match msg {
+        Message::Hello { user } => put_u64(&mut p, *user),
+        Message::Step { session, x } => {
+            put_u64(&mut p, *session);
+            put_f32s(&mut p, x);
+        }
+        Message::StepLabeled { session, label, x } => {
+            put_u64(&mut p, *session);
+            put_u32(&mut p, *label);
+            put_f32s(&mut p, x);
+        }
+        Message::Ack { value } => put_u64(&mut p, *value),
+        Message::Logits { session, pred, logits } => {
+            put_u64(&mut p, *session);
+            put_u32(&mut p, *pred);
+            put_f32s(&mut p, logits);
+        }
+        Message::Stats { text } => p.extend_from_slice(text.as_bytes()),
+        Message::Shutdown => {}
+    }
+    p
+}
+
+/// Encode one frame (header + payload) to bytes.
+pub fn encode_frame(flags: u8, msg: &Message) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    debug_assert!(payload.len() <= MAX_PAYLOAD as usize, "payload exceeds protocol bound");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(msg.kind());
+    out.push(flags);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---------------------------------------------------------------- decoding
+
+/// Bounds-checked little-endian cursor. (`serve::checkpoint` keeps a
+/// sibling reader/writer pair with the same truncation semantics for the
+/// snapshot format — if you change bounds handling here, mirror it
+/// there.)
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.b.len() - self.p >= n, "payload truncated at byte {}", self.p);
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // divide instead of multiplying: `n * 4` could wrap on 32-bit
+        // targets, and a hostile count must never reach the allocator
+        ensure!((self.b.len() - self.p) / 4 >= n, "float array truncated");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let s = self.take(4)?;
+            out.push(f32::from_le_bytes([s[0], s[1], s[2], s[3]]));
+        }
+        Ok(out)
+    }
+    fn done(&self) -> Result<()> {
+        ensure!(self.p == self.b.len(), "frame has {} trailing payload bytes", self.b.len() - self.p);
+        Ok(())
+    }
+}
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message> {
+    let mut c = Cur { b: payload, p: 0 };
+    let msg = match kind {
+        1 => Message::Hello { user: c.u64()? },
+        2 => Message::Step { session: c.u64()?, x: c.f32s()? },
+        3 => Message::StepLabeled { session: c.u64()?, label: c.u32()?, x: c.f32s()? },
+        4 => Message::Ack { value: c.u64()? },
+        5 => Message::Logits { session: c.u64()?, pred: c.u32()?, logits: c.f32s()? },
+        6 => {
+            // the frame header's length delimits the text — no inner count
+            let bytes = c.take(c.b.len() - c.p)?.to_vec();
+            let text = String::from_utf8(bytes).map_err(|_| anyhow::anyhow!("stats text not utf-8"))?;
+            Message::Stats { text }
+        }
+        7 => Message::Shutdown,
+        other => bail!("unknown message kind {other}"),
+    };
+    c.done()?;
+    Ok(msg)
+}
+
+/// Parse the 12-byte header; returns `(kind, flags, payload_len)`.
+fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(u8, u8, usize)> {
+    let magic = u32::from_le_bytes([h[0], h[1], h[2], h[3]]);
+    ensure!(magic == MAGIC, "bad magic {magic:#010x} (expected {MAGIC:#010x})");
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    ensure!(version == VERSION, "unsupported protocol version {version}");
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    ensure!(len <= MAX_PAYLOAD, "oversized payload ({len} > {MAX_PAYLOAD} bytes)");
+    Ok((h[6], h[7], len as usize))
+}
+
+/// Decode one frame from a byte slice; returns the frame and the bytes
+/// consumed. Errors (never panics) on truncation, bad magic/version,
+/// oversized length, unknown kind, or trailing payload bytes.
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize)> {
+    ensure!(buf.len() >= HEADER_LEN, "truncated header ({} of {HEADER_LEN} bytes)", buf.len());
+    let mut h = [0u8; HEADER_LEN];
+    h.copy_from_slice(&buf[..HEADER_LEN]);
+    let (kind, flags, len) = decode_header(&h)?;
+    ensure!(
+        buf.len() >= HEADER_LEN + len,
+        "truncated payload ({} of {} frame bytes)",
+        buf.len(),
+        HEADER_LEN + len
+    );
+    let msg = decode_payload(kind, &buf[HEADER_LEN..HEADER_LEN + len])?;
+    Ok((Frame { flags, msg }, HEADER_LEN + len))
+}
+
+/// Fill `buf` from the reader. `Ok(false)` on clean EOF before the first
+/// byte (a frame boundary); an EOF mid-buffer is an error (truncated
+/// frame).
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-frame ({filled} of {} bytes)", buf.len());
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame from a stream. `Ok(None)` on clean EOF at a frame
+/// boundary; errors on malformed frames or mid-frame disconnects.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    if !read_full(r, &mut header)? {
+        return Ok(None);
+    }
+    let (kind, flags, len) = decode_header(&header)?;
+    let mut payload = vec![0u8; len];
+    if len > 0 && !read_full(r, &mut payload)? {
+        bail!("connection closed before payload");
+    }
+    let msg = decode_payload(kind, &payload)?;
+    Ok(Some(Frame { flags, msg }))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame<Wr: std::io::Write>(w: &mut Wr, flags: u8, msg: &Message) -> Result<()> {
+    let buf = encode_frame(flags, msg);
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(flags: u8, msg: Message) {
+        let buf = encode_frame(flags, &msg);
+        let (frame, consumed) = decode_frame(&buf).unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(frame.flags, flags);
+        assert_eq!(frame.msg, msg);
+        // stream path agrees with the slice path
+        let mut cursor = &buf[..];
+        let streamed = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(streamed.msg, frame.msg);
+    }
+
+    #[test]
+    fn every_message_kind_roundtrips() {
+        roundtrip(0, Message::Hello { user: 0xDEAD_BEEF });
+        roundtrip(FLAG_TICK, Message::Step { session: 7, x: vec![0.5, -0.25, 1.0] });
+        roundtrip(
+            FLAG_TICK | FLAG_FLUSH,
+            Message::StepLabeled { session: 9, label: 3, x: vec![-1.0, 0.0] },
+        );
+        roundtrip(0, Message::Ack { value: 42 });
+        roundtrip(0, Message::Logits { session: 1, pred: 2, logits: vec![0.1, 0.9, -3.5] });
+        roundtrip(0, Message::Stats { text: "req=10 batches=2".to_string() });
+        roundtrip(FLAG_FLUSH, Message::Shutdown);
+    }
+
+    #[test]
+    fn empty_vectors_and_strings_roundtrip() {
+        roundtrip(0, Message::Step { session: 0, x: vec![] });
+        roundtrip(0, Message::Stats { text: String::new() });
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = encode_frame(0, &Message::Shutdown);
+        buf[0] ^= 0xFF;
+        assert!(decode_frame(&buf).unwrap_err().to_string().contains("bad magic"));
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let mut buf = encode_frame(0, &Message::Shutdown);
+        buf[4] = 99;
+        assert!(decode_frame(&buf).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut buf = encode_frame(0, &Message::Shutdown);
+        buf[6] = 200;
+        assert!(decode_frame(&buf).unwrap_err().to_string().contains("unknown message kind"));
+    }
+
+    #[test]
+    fn truncated_frames_rejected_without_panic() {
+        let buf = encode_frame(0, &Message::Step { session: 3, x: vec![1.0, 2.0] });
+        for cut in 0..buf.len() {
+            assert!(decode_frame(&buf[..cut]).is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn oversized_length_field_rejected_before_allocation() {
+        let mut buf = encode_frame(0, &Message::Shutdown);
+        buf[8..12].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(decode_frame(&buf).unwrap_err().to_string().contains("oversized"));
+        // stream path too
+        let mut cursor = &buf[..];
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn trailing_payload_bytes_rejected() {
+        // declare a 9-byte payload for an Ack (8 bytes used)
+        let mut buf = encode_frame(0, &Message::Ack { value: 5 });
+        buf[8..12].copy_from_slice(&9u32.to_le_bytes());
+        buf.push(0xAB);
+        assert!(decode_frame(&buf).unwrap_err().to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn float_count_beyond_payload_rejected() {
+        // Step with a declared float count far past the payload end
+        let mut p = Vec::new();
+        p.extend_from_slice(&7u64.to_le_bytes());
+        p.extend_from_slice(&1000u32.to_le_bytes()); // claims 1000 floats, provides none
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.push(2);
+        buf.push(0);
+        buf.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&p);
+        assert!(decode_frame(&buf).unwrap_err().to_string().contains("truncated"));
+    }
+
+    #[test]
+    fn clean_eof_at_boundary_is_none() {
+        let empty: &[u8] = &[];
+        let mut r = empty;
+        assert!(read_frame(&mut r).unwrap().is_none());
+        // EOF mid-header is an error, not None
+        let partial = encode_frame(0, &Message::Shutdown);
+        let mut r = &partial[..5];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

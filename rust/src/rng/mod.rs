@@ -43,6 +43,12 @@ impl SplitMix64 {
             }
         }
     }
+
+    /// Current generator state. `SplitMix64::new(state)` reconstructs the
+    /// generator exactly — the checkpoint/restore hook.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
 }
 
 /// Uniform f32 in [0, 1) from any u32 source (24-bit mantissa path,
@@ -63,6 +69,17 @@ pub struct GaussianRng {
 impl GaussianRng {
     pub fn new(seed: u64) -> Self {
         Self { src: SplitMix64::new(seed), spare: None }
+    }
+
+    /// Serializable generator state: the SplitMix64 word plus the cached
+    /// Box–Muller spare (checkpoint/restore hook).
+    pub fn state(&self) -> (u64, Option<f32>) {
+        (self.src.state(), self.spare)
+    }
+
+    /// Reconstruct a generator mid-stream from [`GaussianRng::state`].
+    pub fn from_state(state: u64, spare: Option<f32>) -> Self {
+        Self { src: SplitMix64::new(state), spare }
     }
 
     pub fn uniform(&mut self) -> f32 {

@@ -27,6 +27,10 @@ pub struct StepRequest {
     /// Wall clock at enqueue (drives the reported latency percentiles —
     /// never the dispatch decision, which must stay deterministic).
     pub enqueued_at: Instant,
+    /// Opaque routing tag carried through to the completed step — the TCP
+    /// frontend stores the connection id here so logits return to the
+    /// socket the request arrived on. The synthetic driver passes 0.
+    pub tag: u64,
 }
 
 /// Dispatch counters for the serve report.
@@ -130,6 +134,7 @@ mod tests {
             label: None,
             enqueued_tick: tick,
             enqueued_at: Instant::now(),
+            tag: 0,
         }
     }
 

@@ -1,0 +1,645 @@
+//! Durable sessions: serialize the entire serve-loop state to a single
+//! versioned binary snapshot and restore it on boot, so a killed and
+//! restarted server resumes every live session with bitwise-identical
+//! hidden state (DESIGN.md §9).
+//!
+//! ## Snapshot file (`snapshot.m2ck`, all integers little-endian)
+//!
+//! ```text
+//! magic    u32   "M2CK"
+//! version  u32   1
+//! len      u64   payload byte count
+//! payload  [len] sections below
+//! checksum u64   FNV-1a 64 over the payload
+//! ```
+//!
+//! Payload sections, in order: network shapes (nh, nx, nt, ny — refused
+//! on mismatch), model weights in artifact order (wh, uh, bh, wo, bo),
+//! the logical tick, deterministic serve metrics, batcher counters, the
+//! session store (touch counter, lifecycle stats, then every live slot in
+//! LRU order: id, ticks, history cursor, hidden state, history ring), and
+//! the online learner (counters, pending window, Box–Muller stream, 4-bit
+//! replay segments, reservoir + LFSR states).
+//!
+//! Writes go to a temp file in the same directory followed by an atomic
+//! rename, so a crash mid-write can never destroy the previous good
+//! snapshot. Loads verify magic, version, length and checksum; any
+//! corruption makes [`try_restore`] report [`RestoreOutcome::Corrupt`]
+//! and the server boots fresh with a warning instead of dying.
+//!
+//! A snapshot holds *state*, not configuration: restore assumes the
+//! server boots with the same run configuration (seed, shapes, serve
+//! policy), from which config-derived constants — notably the DFA
+//! feedback matrix ψ — are reconstructed identically. Shapes are
+//! verified; the rest is the operator's contract, like any database's
+//! config file.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::Example;
+use crate::linalg::Mat;
+use crate::nn::MiruParams;
+use crate::replay::QuantizedExample;
+
+use super::batcher::BatcherStats;
+use super::core::ServeCore;
+use super::metrics::ServeMetrics;
+use super::online::LearnerState;
+use super::session::{SessionSnapshot, SessionStats};
+
+const MAGIC: u32 = u32::from_le_bytes(*b"M2CK");
+const VERSION: u32 = 1;
+/// Snapshot file name inside `--checkpoint-dir`.
+pub const SNAPSHOT_FILE: &str = "snapshot.m2ck";
+const TMP_FILE: &str = "snapshot.m2ck.tmp";
+
+/// Everything a snapshot holds, decoded.
+pub struct Snapshot {
+    pub nh: usize,
+    pub nx: usize,
+    pub nt: usize,
+    pub ny: usize,
+    pub params: MiruParams,
+    pub tick: u64,
+    pub metrics: ServeMetrics,
+    pub batcher: BatcherStats,
+    pub touch_counter: u64,
+    pub store_stats: SessionStats,
+    pub sessions: Vec<SessionSnapshot>,
+    pub learner: LearnerState,
+}
+
+/// What booting against a checkpoint directory found.
+#[derive(Debug)]
+pub enum RestoreOutcome {
+    /// No snapshot present — fresh boot.
+    Fresh,
+    /// Snapshot restored; every live session resumes its hidden state.
+    Restored { sessions: usize, tick: u64 },
+    /// Snapshot present but unusable (bad checksum, truncation, shape
+    /// mismatch) — the server boots fresh; the caller should warn.
+    Corrupt { error: String },
+}
+
+// ---------------------------------------------------------------- encoding
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Little-endian byte sink.
+struct W {
+    buf: Vec<u8>,
+}
+
+impl W {
+    fn new() -> W {
+        W { buf: Vec::new() }
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+    fn bytes(&mut self, vs: &[u8]) {
+        self.u32(vs.len() as u32);
+        self.buf.extend_from_slice(vs);
+    }
+}
+
+/// Little-endian cursor with hard bounds checks (malformed snapshots must
+/// error, never panic).
+struct R<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> R<'a> {
+    fn new(b: &'a [u8]) -> R<'a> {
+        R { b, p: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.b.len() - self.p >= n, "snapshot truncated at byte {}", self.p);
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        let s = self.take(8)?;
+        Ok(f64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+    fn byte_vec(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn done(&self) -> Result<()> {
+        ensure!(self.p == self.b.len(), "snapshot has {} trailing bytes", self.b.len() - self.p);
+        Ok(())
+    }
+}
+
+fn encode_payload(core: &ServeCore) -> Vec<u8> {
+    let net = core.net;
+    let p = core.engine.backend().effective_params();
+    let m = &core.metrics;
+    let learner = core.learner.snapshot();
+    let mut w = W::new();
+    // shapes
+    w.u32(net.nh as u32);
+    w.u32(net.nx as u32);
+    w.u32(net.nt as u32);
+    w.u32(net.ny as u32);
+    // weights, artifact order
+    w.f32s(&p.wh.data);
+    w.f32s(&p.uh.data);
+    w.f32s(&p.bh);
+    w.f32s(&p.wo.data);
+    w.f32s(&p.bo);
+    // clock
+    w.u64(core.tick);
+    // deterministic metrics (wall clock and latency samples are not state)
+    w.u64(m.requests);
+    w.u64(m.batches);
+    w.u64(m.padded_rows);
+    w.u64(m.valid_rows);
+    w.u64(m.wait_ticks_sum);
+    w.u64(m.pred_fingerprint);
+    w.u64(m.labeled);
+    w.u64(m.labeled_correct);
+    w.u64(m.online_updates);
+    w.f64(m.online_loss_sum);
+    w.u64(m.wear_rationed);
+    // batcher counters
+    let b = &core.batcher.stats;
+    w.u64(b.enqueued);
+    w.u64(b.batches);
+    w.u64(b.dispatched);
+    w.u64(b.deferred_dups);
+    // session store
+    w.u64(core.store.touch_counter());
+    let s = &core.store.stats;
+    w.u64(s.created);
+    w.u64(s.hits);
+    w.u64(s.misses);
+    w.u64(s.evicted_lru);
+    w.u64(s.expired_ttl);
+    let slots = core.store.snapshot_slots();
+    w.u32(slots.len() as u32);
+    for slot in &slots {
+        w.u64(slot.id);
+        w.u64(slot.last_tick);
+        w.u64(slot.steps);
+        w.u32(slot.hist_rows as u32);
+        w.u32(slot.hist_head as u32);
+        w.f32s(&slot.h);
+        w.f32s(&slot.hist);
+    }
+    // online learner
+    w.u64(learner.observed);
+    w.u64(learner.updates);
+    w.u64(learner.rationed_cols);
+    w.u32(learner.pending.len() as u32);
+    for ex in &learner.pending {
+        w.u32(ex.label as u32);
+        w.f32s(&ex.features);
+    }
+    w.u64(learner.rng_state);
+    match learner.rng_spare {
+        Some(v) => {
+            w.buf.push(1);
+            w.f32(v);
+        }
+        None => w.buf.push(0),
+    }
+    w.u32(learner.segments.len() as u32);
+    for seg in &learner.segments {
+        w.u32(seg.len() as u32);
+        for q in seg {
+            w.u32(q.label as u32);
+            w.u32(q.len as u32);
+            w.bytes(&q.packed);
+        }
+    }
+    w.u64(learner.sampler_seen);
+    w.u32(learner.sampler_rng);
+    w.u16(learner.quant_lfsr);
+    w.buf
+}
+
+fn decode_payload(buf: &[u8]) -> Result<Snapshot> {
+    let mut r = R::new(buf);
+    let nh = r.u32()? as usize;
+    let nx = r.u32()? as usize;
+    let nt = r.u32()? as usize;
+    let ny = r.u32()? as usize;
+    ensure!(nh >= 1 && nx >= 1 && nt >= 1 && ny >= 1, "degenerate snapshot shapes");
+    let wh = r.f32s()?;
+    let uh = r.f32s()?;
+    let bh = r.f32s()?;
+    let wo = r.f32s()?;
+    let bo = r.f32s()?;
+    ensure!(
+        wh.len() == nx * nh && uh.len() == nh * nh && bh.len() == nh && wo.len() == nh * ny
+            && bo.len() == ny,
+        "weight section sizes inconsistent with shapes"
+    );
+    let params = MiruParams {
+        wh: Mat::from_vec(nx, nh, wh),
+        uh: Mat::from_vec(nh, nh, uh),
+        bh,
+        wo: Mat::from_vec(nh, ny, wo),
+        bo,
+    };
+    let tick = r.u64()?;
+    let mut metrics = ServeMetrics::default();
+    metrics.requests = r.u64()?;
+    metrics.batches = r.u64()?;
+    metrics.padded_rows = r.u64()?;
+    metrics.valid_rows = r.u64()?;
+    metrics.wait_ticks_sum = r.u64()?;
+    metrics.pred_fingerprint = r.u64()?;
+    metrics.labeled = r.u64()?;
+    metrics.labeled_correct = r.u64()?;
+    metrics.online_updates = r.u64()?;
+    metrics.online_loss_sum = r.f64()?;
+    metrics.wear_rationed = r.u64()?;
+    let batcher = BatcherStats {
+        enqueued: r.u64()?,
+        batches: r.u64()?,
+        dispatched: r.u64()?,
+        deferred_dups: r.u64()?,
+    };
+    let touch_counter = r.u64()?;
+    let store_stats = SessionStats {
+        created: r.u64()?,
+        hits: r.u64()?,
+        misses: r.u64()?,
+        evicted_lru: r.u64()?,
+        expired_ttl: r.u64()?,
+    };
+    let n_sessions = r.u32()? as usize;
+    let mut sessions = Vec::with_capacity(n_sessions.min(1 << 20));
+    for _ in 0..n_sessions {
+        let id = r.u64()?;
+        let last_tick = r.u64()?;
+        let steps = r.u64()?;
+        let hist_rows = r.u32()? as usize;
+        let hist_head = r.u32()? as usize;
+        let h = r.f32s()?;
+        let hist = r.f32s()?;
+        ensure!(h.len() == nh, "session hidden width {} != nh {nh}", h.len());
+        ensure!(hist.len() == nt * nx, "session history size {} != nt*nx", hist.len());
+        sessions.push(SessionSnapshot { id, h, hist, hist_rows, hist_head, last_tick, steps });
+    }
+    let observed = r.u64()?;
+    let updates = r.u64()?;
+    let rationed_cols = r.u64()?;
+    let n_pending = r.u32()? as usize;
+    let mut pending = Vec::with_capacity(n_pending.min(1 << 20));
+    for _ in 0..n_pending {
+        let label = r.u32()? as usize;
+        let features = r.f32s()?;
+        ensure!(features.len() == nt * nx, "pending window size {} != nt*nx", features.len());
+        pending.push(Example { features, label });
+    }
+    let rng_state = r.u64()?;
+    let rng_spare = match r.take(1)?[0] {
+        0 => None,
+        1 => Some(r.f32()?),
+        other => bail!("bad rng spare flag {other}"),
+    };
+    let n_segs = r.u32()? as usize;
+    let mut segments = Vec::with_capacity(n_segs.min(1 << 20));
+    for _ in 0..n_segs {
+        let n_ex = r.u32()? as usize;
+        let mut seg = Vec::with_capacity(n_ex.min(1 << 20));
+        for _ in 0..n_ex {
+            let label = r.u32()? as usize;
+            let len = r.u32()? as usize;
+            let packed = r.byte_vec()?;
+            ensure!(packed.len() == len.div_ceil(2), "packed length inconsistent with len");
+            seg.push(QuantizedExample { packed, len, label });
+        }
+        segments.push(seg);
+    }
+    let sampler_seen = r.u64()?;
+    let sampler_rng = r.u32()?;
+    let quant_lfsr = r.u16()?;
+    r.done()?;
+    let learner = LearnerState {
+        observed,
+        updates,
+        rationed_cols,
+        pending,
+        rng_state,
+        rng_spare,
+        segments,
+        sampler_seen,
+        sampler_rng,
+        quant_lfsr,
+    };
+    Ok(Snapshot {
+        nh,
+        nx,
+        nt,
+        ny,
+        params,
+        tick,
+        metrics,
+        batcher,
+        touch_counter,
+        store_stats,
+        sessions,
+        learner,
+    })
+}
+
+// ------------------------------------------------------------------- file IO
+
+/// Serialize the core's durable state and atomically replace the snapshot
+/// in `dir` (write to temp + rename; a crash mid-write never destroys the
+/// previous good snapshot). Returns the snapshot path.
+pub fn save_checkpoint(core: &ServeCore, dir: &Path) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let payload = encode_payload(core);
+    let mut file = Vec::with_capacity(payload.len() + 24);
+    file.extend_from_slice(&MAGIC.to_le_bytes());
+    file.extend_from_slice(&VERSION.to_le_bytes());
+    file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    file.extend_from_slice(&payload);
+    file.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    let tmp = dir.join(TMP_FILE);
+    let path = dir.join(SNAPSHOT_FILE);
+    std::fs::write(&tmp, &file).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(path)
+}
+
+/// Read and fully validate the snapshot in `dir`. `Ok(None)` when no
+/// snapshot exists; `Err` on I/O failure or any corruption (bad
+/// magic/version, short file, checksum mismatch, malformed payload).
+pub fn read_snapshot(dir: &Path) -> Result<Option<Snapshot>> {
+    let path = dir.join(SNAPSHOT_FILE);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let raw = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    Ok(Some(parse_snapshot(&raw)?))
+}
+
+/// Validate and decode raw snapshot bytes.
+fn parse_snapshot(raw: &[u8]) -> Result<Snapshot> {
+    ensure!(raw.len() >= 24, "snapshot shorter than its header");
+    let magic = u32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]);
+    ensure!(magic == MAGIC, "bad snapshot magic {magic:#010x}");
+    let version = u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
+    ensure!(version == VERSION, "unsupported snapshot version {version}");
+    let len64 =
+        u64::from_le_bytes([raw[8], raw[9], raw[10], raw[11], raw[12], raw[13], raw[14], raw[15]]);
+    // bounds-check before any arithmetic: a hostile length field must not
+    // overflow or allocate
+    ensure!(
+        len64 == (raw.len() as u64).saturating_sub(24),
+        "snapshot length field inconsistent with file size"
+    );
+    let len = len64 as usize;
+    let payload = &raw[16..16 + len];
+    let stored = u64::from_le_bytes([
+        raw[16 + len],
+        raw[17 + len],
+        raw[18 + len],
+        raw[19 + len],
+        raw[20 + len],
+        raw[21 + len],
+        raw[22 + len],
+        raw[23 + len],
+    ]);
+    let computed = fnv1a64(payload);
+    ensure!(stored == computed, "snapshot checksum mismatch ({stored:#x} != {computed:#x})");
+    decode_payload(payload)
+}
+
+/// Boot-time restore: load the snapshot in `dir` (if any) into `core`.
+/// A corrupt or shape-mismatched snapshot is reported as
+/// [`RestoreOutcome::Corrupt`] so the server can boot fresh with a
+/// warning. Filesystem read failures and a failing weight restore
+/// (substrate cannot load weights) are hard errors instead: a transient
+/// I/O hiccup must not silently discard a valid snapshot that the next
+/// checkpoint would then overwrite.
+pub fn try_restore(core: &mut ServeCore, dir: &Path) -> Result<RestoreOutcome> {
+    let path = dir.join(SNAPSHOT_FILE);
+    if !path.exists() {
+        return Ok(RestoreOutcome::Fresh);
+    }
+    let raw = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let snap = match parse_snapshot(&raw) {
+        Ok(s) => s,
+        Err(e) => return Ok(RestoreOutcome::Corrupt { error: e.to_string() }),
+    };
+    let net = core.net;
+    if snap.nh != net.nh || snap.nx != net.nx || snap.nt != net.nt || snap.ny != net.ny {
+        return Ok(RestoreOutcome::Corrupt {
+            error: format!(
+                "snapshot shapes (nh={}, nx={}, nt={}, ny={}) do not match net `{}`",
+                snap.nh, snap.nx, snap.nt, snap.ny, net.name
+            ),
+        });
+    }
+    core.engine.restore_params(&snap.params)?;
+    core.tick = snap.tick;
+    let wall = core.metrics.wall;
+    core.metrics = snap.metrics;
+    core.metrics.wall = wall;
+    core.batcher.stats = snap.batcher;
+    let restored = snap.sessions.len();
+    core.store.restore(snap.touch_counter, snap.store_stats, snap.sessions);
+    core.learner.restore(snap.learner);
+    Ok(RestoreOutcome::Restored { sessions: restored, tick: snap.tick })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NetConfig, RunConfig, ServeConfig};
+    use crate::serve::session_id_for_user;
+    use crate::serve::workload::SyntheticWorkload;
+
+    fn dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("m2ru_ckpt_{}_{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_core(seed: u64) -> ServeCore {
+        let mut run = RunConfig::default();
+        run.seed = seed;
+        run.serve = ServeConfig {
+            max_batch: 4,
+            max_wait: 1,
+            capacity: 8,
+            update_every: 5,
+            ..ServeConfig::default()
+        };
+        ServeCore::new(NetConfig::SMALL, &run).unwrap()
+    }
+
+    fn feed(core: &mut ServeCore, workload: &mut SyntheticWorkload, requests: u64) {
+        let mut issued = 0;
+        while issued < requests {
+            for _ in 0..4 {
+                if issued >= requests {
+                    break;
+                }
+                let (u, x, label) = workload.next();
+                core.submit(session_id_for_user(u), x, label, 0);
+                issued += 1;
+            }
+            core.drain_ready().unwrap();
+            if issued >= requests {
+                core.flush_all().unwrap();
+            }
+            core.advance_tick();
+        }
+    }
+
+    #[test]
+    fn save_restore_roundtrips_sessions_bitwise() {
+        let d = dir("roundtrip");
+        let net = NetConfig::SMALL;
+        let mut a = small_core(3);
+        let mut w = SyntheticWorkload::new(&net, 6, 3);
+        feed(&mut a, &mut w, 80);
+        let path = save_checkpoint(&a, &d).unwrap();
+        assert!(path.exists());
+
+        let mut b = small_core(3);
+        match try_restore(&mut b, &d).unwrap() {
+            RestoreOutcome::Restored { sessions, tick } => {
+                assert!(sessions > 0);
+                assert_eq!(tick, a.tick());
+            }
+            other => panic!("expected restore, got {other:?}"),
+        }
+        // hidden states, history rings and recency restore bitwise
+        assert_eq!(b.store().snapshot_slots(), a.store().snapshot_slots());
+        assert_eq!(b.metrics().signature(&b.store().stats), a.metrics().signature(&a.store().stats));
+        // continuing identical traffic produces identical behavior
+        let mut wa = SyntheticWorkload::new(&net, 6, 3);
+        wa.skip(80);
+        let mut wb = SyntheticWorkload::new(&net, 6, 3);
+        wb.skip(80);
+        feed(&mut a, &mut wa, 60);
+        feed(&mut b, &mut wb, 60);
+        assert_eq!(
+            b.metrics().signature(&b.store().stats),
+            a.metrics().signature(&a.store().stats),
+            "restored core must continue bit-identically"
+        );
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn missing_snapshot_boots_fresh() {
+        let d = dir("fresh");
+        let mut c = small_core(1);
+        assert!(matches!(try_restore(&mut c, &d).unwrap(), RestoreOutcome::Fresh));
+    }
+
+    #[test]
+    fn corrupted_snapshot_reports_corrupt_not_panic() {
+        let d = dir("corrupt");
+        std::fs::create_dir_all(&d).unwrap();
+        // garbage file
+        std::fs::write(d.join(SNAPSHOT_FILE), b"not a snapshot at all").unwrap();
+        let mut c = small_core(1);
+        match try_restore(&mut c, &d).unwrap() {
+            RestoreOutcome::Corrupt { error } => assert!(!error.is_empty()),
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+        // valid snapshot with one payload byte flipped: checksum catches it
+        let net = NetConfig::SMALL;
+        let mut a = small_core(2);
+        let mut w = SyntheticWorkload::new(&net, 4, 2);
+        feed(&mut a, &mut w, 30);
+        save_checkpoint(&a, &d).unwrap();
+        let mut raw = std::fs::read(d.join(SNAPSHOT_FILE)).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        std::fs::write(d.join(SNAPSHOT_FILE), &raw).unwrap();
+        match try_restore(&mut c, &d).unwrap() {
+            RestoreOutcome::Corrupt { error } => {
+                assert!(error.contains("checksum") || error.contains("truncated"), "{error}")
+            }
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn shape_mismatch_is_corrupt_not_fatal() {
+        let d = dir("shapes");
+        let net = NetConfig::SMALL;
+        let mut a = small_core(5);
+        let mut w = SyntheticWorkload::new(&net, 4, 5);
+        feed(&mut a, &mut w, 20);
+        save_checkpoint(&a, &d).unwrap();
+        // a core with different shapes must refuse the snapshot gracefully
+        let run = RunConfig::default();
+        let mut other = ServeCore::new(NetConfig::PMNIST100, &run).unwrap();
+        match try_restore(&mut other, &d).unwrap() {
+            RestoreOutcome::Corrupt { error } => assert!(error.contains("shapes"), "{error}"),
+            out => panic!("expected corrupt, got {out:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,288 @@
+//! The transport-agnostic serve engine: session store + dynamic batcher +
+//! online learner + parallel step dispatch behind one deterministic
+//! tick-driven surface.
+//!
+//! Both frontends drive exactly this object — the in-process synthetic
+//! driver ([`super::run_serve`]) and the TCP server
+//! ([`crate::net::NetServer`]) — so a request produces bit-identical
+//! logits whether it arrives through a function call or a socket. The
+//! protocol every frontend must follow per logical tick:
+//!
+//! 1. [`ServeCore::submit`] each request admitted this tick;
+//! 2. [`ServeCore::drain_ready`] — dispatch per the max-batch/max-wait
+//!    policy (and [`ServeCore::flush_all`] once the traffic source is
+//!    exhausted — no future arrival can fill a batch);
+//! 3. [`ServeCore::advance_tick`].
+//!
+//! Checkpoint/restore (`serve::checkpoint`) snapshots everything behind
+//! this surface: weights, session slabs, history rings, the learner's
+//! replay segments and RNG streams, deterministic metrics, and the tick.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::backend::{BackendCtx, BackendRegistry};
+use crate::config::{NetConfig, RunConfig};
+use crate::coordinator::ParallelEngine;
+use crate::linalg::{argmax_rows, Mat};
+
+use super::batcher::{DynamicBatcher, StepRequest};
+use super::metrics::ServeMetrics;
+use super::online::OnlineLearner;
+use super::session::SessionStore;
+
+/// One served request, reported back to the frontend for delivery.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletedStep {
+    /// Session the step belonged to.
+    pub session: u64,
+    /// Argmax prediction over the logits.
+    pub pred: usize,
+    /// Full logits row (`ny` values) — what the TCP frontend returns to
+    /// the client, and what the loopback-equivalence test compares.
+    pub logits: Vec<f32>,
+    /// Label that rode along on the request, if any.
+    pub label: Option<usize>,
+    /// Routing tag the request carried (connection id; 0 from the driver).
+    pub tag: u64,
+}
+
+/// The serve loop's entire mutable state.
+pub struct ServeCore {
+    pub(crate) engine: ParallelEngine,
+    pub(crate) store: SessionStore,
+    pub(crate) batcher: DynamicBatcher,
+    pub(crate) learner: OnlineLearner,
+    pub(crate) metrics: ServeMetrics,
+    pub(crate) net: NetConfig,
+    pub(crate) backend_name: String,
+    pub(crate) max_batch: usize,
+    pub(crate) tick: u64,
+    /// Copy each completed step's logits row into [`CompletedStep`].
+    /// The TCP frontend needs them (they go back over the wire); the
+    /// synthetic driver turns this off unless it records steps, keeping
+    /// the per-request cost of the benchmarked hot path flat.
+    pub(crate) collect_logits: bool,
+}
+
+impl ServeCore {
+    /// Build the full serve stack from a run configuration (backend via
+    /// the registry, store/batcher/learner from the `[serve]` policy).
+    pub fn new(net: NetConfig, run: &RunConfig) -> Result<ServeCore> {
+        run.validate()?;
+        let cfg = run.serve.clone();
+        let ctx = BackendCtx::from_run(net, run);
+        let backend = BackendRegistry::with_defaults()
+            .create(&run.backend, &ctx)
+            .with_context(|| format!("creating serve backend `{}`", run.backend))?;
+        let engine = ParallelEngine::new(backend, run.workers);
+        Ok(ServeCore {
+            engine,
+            store: SessionStore::new(net.nh, net.nx, net.nt, cfg.capacity, cfg.ttl),
+            batcher: DynamicBatcher::new(cfg.max_batch, cfg.max_wait),
+            learner: OnlineLearner::new(net.nt, net.nx, &cfg, run.seed),
+            metrics: ServeMetrics::default(),
+            net,
+            backend_name: run.backend.clone(),
+            max_batch: cfg.max_batch,
+            tick: 0,
+            collect_logits: true,
+        })
+    }
+
+    /// Toggle logits collection in completed steps (see `collect_logits`).
+    pub fn set_collect_logits(&mut self, on: bool) {
+        self.collect_logits = on;
+    }
+
+    /// Current logical tick.
+    pub fn tick(&self) -> u64 {
+        self.tick
+    }
+
+    /// Advance the logical clock by one tick (end of a frontend wave).
+    pub fn advance_tick(&mut self) {
+        self.tick += 1;
+    }
+
+    /// The network shapes this core serves.
+    pub fn net(&self) -> NetConfig {
+        self.net
+    }
+
+    /// The session store (inspection / tests).
+    pub fn store(&self) -> &SessionStore {
+        &self.store
+    }
+
+    /// Deterministic + timing metrics accumulated so far.
+    pub fn metrics(&self) -> &ServeMetrics {
+        &self.metrics
+    }
+
+    /// Record the run's wall-clock time (timing metrics only — never
+    /// consulted by the dispatch logic).
+    pub fn set_wall(&mut self, wall: Duration) {
+        self.metrics.wall = wall;
+    }
+
+    /// Release per-worker engine resources (fork cache) ahead of a
+    /// checkpoint or shutdown.
+    pub fn drain_engine(&mut self) {
+        self.engine.drain();
+    }
+
+    /// Enqueue one single-timestep request at the current tick.
+    pub fn submit(&mut self, session: u64, x: Vec<f32>, label: Option<usize>, tag: u64) {
+        self.batcher.push(StepRequest {
+            session,
+            x,
+            label,
+            enqueued_tick: self.tick,
+            enqueued_at: Instant::now(),
+            tag,
+        });
+    }
+
+    /// Dispatch every batch the max-batch/max-wait policy considers ready
+    /// at the current tick.
+    pub fn drain_ready(&mut self) -> Result<Vec<CompletedStep>> {
+        let mut out = Vec::new();
+        while let Some(batch) = self.batcher.drain(self.tick) {
+            self.process_batch(batch, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Dispatch everything still queued regardless of the wait policy —
+    /// the end-of-traffic tail flush (and the shutdown path).
+    pub fn flush_all(&mut self) -> Result<Vec<CompletedStep>> {
+        let mut out = Vec::new();
+        while let Some(batch) = self.batcher.flush() {
+            self.process_batch(batch, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Assemble the serve report (used by both frontends).
+    pub fn report(&self, sessions: usize) -> super::ServeReport {
+        super::ServeReport {
+            metrics: self.metrics.clone(),
+            store: self.store.stats.clone(),
+            batcher: self.batcher.stats.clone(),
+            backend: self.backend_name.clone(),
+            workers: self.engine.workers(),
+            sessions,
+            backend_stats: self.engine.stats(),
+            lifespan_years: self.engine.backend().projected_lifespan_years(),
+            completed: Vec::new(),
+        }
+    }
+
+    /// Dispatch one padded batch: gather per-session hidden states,
+    /// advance them one timestep through the engine (row-sharded across
+    /// workers), write the states back, score/record every request, and
+    /// feed labeled windows to the online learner.
+    fn process_batch(&mut self, batch: Vec<StepRequest>, out: &mut Vec<CompletedStep>) -> Result<()> {
+        let (nh, nx) = (self.net.nh, self.net.nx);
+        // sweep idle sessions as of the *earliest arrival* in this batch,
+        // not the dispatch tick: a session whose user was active within
+        // the TTL must never lose its state to queueing delay (any batch
+        // member idle beyond the TTL at this sweep point was already idle
+        // beyond the TTL when its own request arrived)
+        let sweep_at = batch.iter().map(|r| r.enqueued_tick).min().unwrap_or(self.tick);
+        self.store.expire_idle(sweep_at);
+        let valid = batch.len();
+        // padded dispatch shapes: rows beyond `valid` are zero-state dummies
+        let mut h = Mat::zeros(self.max_batch, nh);
+        let mut x = Mat::zeros(self.max_batch, nx);
+        let mut slots = Vec::with_capacity(valid);
+        for (i, r) in batch.iter().enumerate() {
+            let slot = self.store.get_or_create(r.session, self.tick);
+            h.row_mut(i).copy_from_slice(self.store.hidden(slot));
+            x.row_mut(i).copy_from_slice(&r.x);
+            slots.push(slot);
+        }
+        let (hn, logits) = self.engine.step_sessions(&h, &x)?;
+        let preds = argmax_rows(&logits);
+        self.metrics.batches += 1;
+        self.metrics.padded_rows += self.max_batch as u64;
+        self.metrics.valid_rows += valid as u64;
+        for (i, r) in batch.iter().enumerate() {
+            let slot = slots[i];
+            self.store.set_hidden(slot, hn.row(i));
+            self.store.push_history(slot, &r.x);
+            self.metrics.requests += 1;
+            self.metrics.wait_ticks_sum += self.tick - r.enqueued_tick;
+            self.metrics.record_latency_us(r.enqueued_at.elapsed().as_micros() as u64);
+            self.metrics.record_pred(preds[i]);
+            if let Some(label) = r.label {
+                self.metrics.labeled += 1;
+                if preds[i] == label {
+                    self.metrics.labeled_correct += 1;
+                }
+                let seq = self.store.history_seq(slot);
+                if let Some(loss) = self.learner.observe(&mut self.engine, seq, label)? {
+                    self.metrics.online_updates += 1;
+                    self.metrics.online_loss_sum += f64::from(loss);
+                }
+            }
+            out.push(CompletedStep {
+                session: r.session,
+                pred: preds[i],
+                logits: if self.collect_logits { logits.row(i).to_vec() } else { Vec::new() },
+                label: r.label,
+                tag: r.tag,
+            });
+        }
+        self.metrics.wear_rationed = self.learner.rationed_cols;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::serve::session_id_for_user;
+
+    fn core() -> ServeCore {
+        let mut run = RunConfig::default();
+        run.serve = ServeConfig { max_batch: 4, max_wait: 1, capacity: 8, ..ServeConfig::default() };
+        ServeCore::new(NetConfig::SMALL, &run).unwrap()
+    }
+
+    #[test]
+    fn submit_drain_flush_cover_every_request() {
+        let mut c = core();
+        let nx = NetConfig::SMALL.nx;
+        for u in 0..6u64 {
+            c.submit(session_id_for_user(u), vec![0.1; nx], None, u);
+        }
+        // 6 pending, max_batch 4: one full batch is ready immediately
+        let done = c.drain_ready().unwrap();
+        assert_eq!(done.len(), 4);
+        // the remaining partial batch waits for the policy…
+        assert!(c.drain_ready().unwrap().is_empty());
+        // …but the tail flush takes it regardless
+        let tail = c.flush_all().unwrap();
+        assert_eq!(tail.len(), 2);
+        assert_eq!(c.metrics().requests, 6);
+        // routing tags survive the trip
+        assert_eq!(done[0].tag, 0);
+        assert_eq!(tail[1].tag, 5);
+        assert_eq!(done[0].logits.len(), NetConfig::SMALL.ny);
+    }
+
+    #[test]
+    fn ticks_gate_the_wait_policy() {
+        let mut c = core();
+        let nx = NetConfig::SMALL.nx;
+        c.submit(session_id_for_user(1), vec![0.2; nx], None, 0);
+        assert!(c.drain_ready().unwrap().is_empty(), "partial batch, no wait yet");
+        c.advance_tick();
+        let done = c.drain_ready().unwrap();
+        assert_eq!(done.len(), 1, "max_wait=1 tick elapsed");
+    }
+}

@@ -7,29 +7,25 @@
 //! every eviction and every online commit depend only on the seed and
 //! the serve policy — wall time is measured but never consulted. That is
 //! what lets the test suite assert byte-identical serve signatures for
-//! `--workers 1` vs `--workers 4`.
+//! `--workers 1` vs `--workers 4`, and what lets the TCP loopback test
+//! assert bit-identical logits against `m2ru connect` (the network load
+//! generator replays exactly this admission schedule over a socket).
 //!
-//! Workload model: `sessions` synthetic users, each streaming timestep
-//! rows of a class-conditional pattern (the class is the user's fixed
-//! label). Every `nt`-th step of a user completes one sequence window
-//! and carries the label, so the server's prediction at that step can be
-//! scored and the window fed to the online learner — accuracy on labeled
-//! steps is the live continual-learning signal.
+//! All serving state and dispatch logic live in [`ServeCore`]; this
+//! driver only owns traffic admission (open vs closed loop) and
+//! reporting.
 
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
 
-use crate::backend::{BackendCtx, BackendRegistry};
 use crate::config::{NetConfig, RunConfig};
-use crate::coordinator::ParallelEngine;
-use crate::linalg::{argmax_rows, Mat};
-use crate::rng::{GaussianRng, SplitMix64};
 
-use super::batcher::{BatcherStats, DynamicBatcher, StepRequest};
+use super::batcher::BatcherStats;
+use super::core::{CompletedStep, ServeCore};
 use super::metrics::ServeMetrics;
-use super::online::OnlineLearner;
-use super::session::{session_id_for_user, SessionStats, SessionStore};
+use super::session::{session_id_for_user, SessionStats};
+use super::workload::SyntheticWorkload;
 
 /// One serve run, fully specified.
 #[derive(Clone, Debug)]
@@ -46,13 +42,26 @@ pub struct ServeOptions {
     pub arrivals: usize,
     /// Closed loop: outstanding-request target; 0 selects open loop.
     pub concurrency: usize,
+    /// Record every completed step (session, prediction, logits) into
+    /// `ServeReport::completed` — the loopback-equivalence tests compare
+    /// this log bitwise against the TCP client's responses. Off by
+    /// default: a long run's log is large.
+    pub record_steps: bool,
 }
 
 impl ServeOptions {
     /// Open-loop defaults at the standard operating point.
     pub fn new(net: NetConfig, run: RunConfig) -> ServeOptions {
         let arrivals = run.serve.max_batch;
-        ServeOptions { net, run, requests: 2000, sessions: 128, arrivals, concurrency: 0 }
+        ServeOptions {
+            net,
+            run,
+            requests: 2000,
+            sessions: 128,
+            arrivals,
+            concurrency: 0,
+            record_steps: false,
+        }
     }
 }
 
@@ -66,6 +75,12 @@ pub struct ServeReport {
     pub sessions: usize,
     /// Substrate statistics (device write pressure etc.).
     pub backend_stats: Vec<String>,
+    /// Projected device lifespan in years at a 1 kHz commit rate (`None`
+    /// on substrates without an endurance model; infinite before the
+    /// first online commit).
+    pub lifespan_years: Option<f64>,
+    /// Per-request completion log (only when `ServeOptions::record_steps`).
+    pub completed: Vec<CompletedStep>,
 }
 
 impl ServeReport {
@@ -77,6 +92,11 @@ impl ServeReport {
         )];
         out.extend(self.metrics.summary_lines(&self.store, &self.batcher));
         out.extend(self.backend_stats.iter().cloned());
+        if let Some(years) = self.lifespan_years {
+            if years.is_finite() {
+                out.push(format!("projected lifespan: {years:.2} years @ 1 kHz commits"));
+            }
+        }
         out.push(format!("signature: {}", self.signature()));
         out
     }
@@ -87,82 +107,18 @@ impl ServeReport {
     }
 }
 
-/// Class-conditional per-user feature streams (same family as the
-/// backend test workload: `0.25·noise + 0.75·proto[label]`, clamped to
-/// the replay quantizer's [-1, 1] range).
-struct SyntheticWorkload {
-    protos: Vec<Vec<f32>>,
-    users: Vec<UserState>,
-    pick_rng: GaussianRng,
-    nt: usize,
-    nx: usize,
-}
-
-struct UserState {
-    label: usize,
-    rng: GaussianRng,
-    step_in_seq: usize,
-}
-
-impl SyntheticWorkload {
-    fn new(net: &NetConfig, sessions: usize, seed: u64) -> SyntheticWorkload {
-        let mut proto_rng = GaussianRng::new(seed ^ 0x9907_A11C);
-        let protos: Vec<Vec<f32>> =
-            (0..net.ny).map(|_| (0..net.nx).map(|_| proto_rng.normal()).collect()).collect();
-        let mut seeder = SplitMix64::new(seed ^ 0x05E5_510F);
-        let users = (0..sessions)
-            .map(|u| UserState {
-                label: u % net.ny,
-                rng: GaussianRng::new(seeder.next_u64()),
-                step_in_seq: 0,
-            })
-            .collect();
-        SyntheticWorkload {
-            protos,
-            users,
-            pick_rng: GaussianRng::new(seed ^ 0x71CC_E7),
-            nt: net.nt,
-            nx: net.nx,
-        }
-    }
-
-    /// Next request: a uniformly drawn user streams one timestep; the
-    /// user's label rides along on the final step of each nt-window.
-    fn next(&mut self) -> (u64, Vec<f32>, Option<usize>) {
-        let u = self.pick_rng.below(self.users.len());
-        let user = &mut self.users[u];
-        let proto = &self.protos[user.label];
-        let x: Vec<f32> = (0..self.nx)
-            .map(|j| (0.25 * user.rng.normal() + 0.75 * proto[j]).clamp(-1.0, 1.0))
-            .collect();
-        user.step_in_seq += 1;
-        let label = (user.step_in_seq % self.nt == 0).then_some(user.label);
-        (u as u64, x, label)
-    }
-}
-
 /// Run the streaming session server against the synthetic workload.
 pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport> {
-    let cfg = opts.run.serve.clone();
-    opts.run.validate()?;
     ensure!(opts.sessions >= 1, "need at least one simulated session");
     ensure!(opts.concurrency > 0 || opts.arrivals >= 1, "open loop needs arrivals >= 1");
 
-    let ctx = BackendCtx::from_run(opts.net, &opts.run);
-    let backend = BackendRegistry::with_defaults()
-        .create(&opts.run.backend, &ctx)
-        .with_context(|| format!("creating serve backend `{}`", opts.run.backend))?;
-    let mut engine = ParallelEngine::new(backend, opts.run.workers);
-
-    let (nh, nx) = (opts.net.nh, opts.net.nx);
-    let mut store = SessionStore::new(nh, nx, opts.net.nt, cfg.capacity, cfg.ttl);
-    let mut batcher = DynamicBatcher::new(cfg.max_batch, cfg.max_wait);
-    let mut learner = OnlineLearner::new(opts.net.nt, nx, &cfg, opts.run.seed);
+    let mut core = ServeCore::new(opts.net, &opts.run)?;
+    // without a step log, skip the per-request logits copy entirely
+    core.set_collect_logits(opts.record_steps);
     let mut workload = SyntheticWorkload::new(&opts.net, opts.sessions, opts.run.seed);
-    let mut metrics = ServeMetrics::default();
+    let mut log: Vec<CompletedStep> = Vec::new();
 
     let start = Instant::now();
-    let mut tick: u64 = 0;
     let mut issued: u64 = 0;
     let mut completed: u64 = 0;
     while completed < opts.requests {
@@ -178,122 +134,30 @@ pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport> {
                 break;
             }
             let (user, x, label) = workload.next();
-            batcher.push(StepRequest {
-                session: session_id_for_user(user),
-                x,
-                label,
-                enqueued_tick: tick,
-                enqueued_at: Instant::now(),
-            });
+            core.submit(session_id_for_user(user), x, label, 0);
             issued += 1;
         }
-        while let Some(batch) = batcher.drain(tick) {
-            completed += batch.len() as u64;
-            process_batch(
-                &mut engine,
-                &mut store,
-                &mut learner,
-                &mut metrics,
-                batch,
-                tick,
-                cfg.max_batch,
-                nh,
-                nx,
-            )?;
+        let done = core.drain_ready()?;
+        completed += done.len() as u64;
+        if opts.record_steps {
+            log.extend(done);
         }
         // traffic source exhausted: flush the tail regardless of the
         // wait policy (no future arrival can fill the batch)
         if issued >= opts.requests {
-            while let Some(batch) = batcher.flush() {
-                completed += batch.len() as u64;
-                process_batch(
-                    &mut engine,
-                    &mut store,
-                    &mut learner,
-                    &mut metrics,
-                    batch,
-                    tick,
-                    cfg.max_batch,
-                    nh,
-                    nx,
-                )?;
+            let tail = core.flush_all()?;
+            completed += tail.len() as u64;
+            if opts.record_steps {
+                log.extend(tail);
             }
         }
-        tick += 1;
+        core.advance_tick();
     }
-    metrics.wall = start.elapsed();
+    core.set_wall(start.elapsed());
 
-    Ok(ServeReport {
-        metrics,
-        store: store.stats.clone(),
-        batcher: batcher.stats.clone(),
-        backend: opts.run.backend.clone(),
-        workers: engine.workers(),
-        sessions: opts.sessions,
-        backend_stats: engine.stats(),
-    })
-}
-
-/// Dispatch one padded batch: gather per-session hidden states, advance
-/// them one timestep through the engine (row-sharded across workers),
-/// write the states back, score/record every request, and feed labeled
-/// windows to the online learner.
-#[allow(clippy::too_many_arguments)]
-fn process_batch(
-    engine: &mut ParallelEngine,
-    store: &mut SessionStore,
-    learner: &mut OnlineLearner,
-    metrics: &mut ServeMetrics,
-    batch: Vec<StepRequest>,
-    tick: u64,
-    max_batch: usize,
-    nh: usize,
-    nx: usize,
-) -> Result<()> {
-    // sweep idle sessions as of the *earliest arrival* in this batch,
-    // not the dispatch tick: a session whose user was active within the
-    // TTL must never lose its state to queueing delay (any batch member
-    // idle beyond the TTL at this sweep point was already idle beyond
-    // the TTL when its own request arrived)
-    let sweep_at = batch.iter().map(|r| r.enqueued_tick).min().unwrap_or(tick);
-    store.expire_idle(sweep_at);
-    let valid = batch.len();
-    // padded dispatch shapes: rows beyond `valid` are zero-state dummies
-    let mut h = Mat::zeros(max_batch, nh);
-    let mut x = Mat::zeros(max_batch, nx);
-    let mut slots = Vec::with_capacity(valid);
-    for (i, r) in batch.iter().enumerate() {
-        let slot = store.get_or_create(r.session, tick);
-        h.row_mut(i).copy_from_slice(store.hidden(slot));
-        x.row_mut(i).copy_from_slice(&r.x);
-        slots.push(slot);
-    }
-    let (hn, logits) = engine.step_sessions(&h, &x)?;
-    let preds = argmax_rows(&logits);
-    metrics.batches += 1;
-    metrics.padded_rows += max_batch as u64;
-    metrics.valid_rows += valid as u64;
-    for (i, r) in batch.iter().enumerate() {
-        let slot = slots[i];
-        store.set_hidden(slot, hn.row(i));
-        store.push_history(slot, &r.x);
-        metrics.requests += 1;
-        metrics.wait_ticks_sum += tick - r.enqueued_tick;
-        metrics.latencies_us.push(r.enqueued_at.elapsed().as_micros() as u64);
-        metrics.record_pred(preds[i]);
-        if let Some(label) = r.label {
-            metrics.labeled += 1;
-            if preds[i] == label {
-                metrics.labeled_correct += 1;
-            }
-            let seq = store.history_seq(slot);
-            if let Some(loss) = learner.observe(engine, seq, label)? {
-                metrics.online_updates += 1;
-                metrics.online_loss_sum += f64::from(loss);
-            }
-        }
-    }
-    Ok(())
+    let mut report = core.report(opts.sessions);
+    report.completed = log;
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -313,6 +177,7 @@ mod tests {
             update_every: 12,
             replay_cap: 64,
             replay_mix: 0.5,
+            ..ServeConfig::default()
         };
         ServeOptions {
             net: NetConfig::SMALL,
@@ -321,6 +186,7 @@ mod tests {
             sessions: 16,
             arrivals: 8,
             concurrency: 0,
+            record_steps: false,
         }
     }
 
@@ -370,5 +236,35 @@ mod tests {
         assert!(text.contains("throughput:"));
         assert!(text.contains("latency: p50="));
         assert!(text.contains("signature: req=100"));
+    }
+
+    #[test]
+    fn record_steps_logs_every_completion_in_order() {
+        let mut o = opts(1, "dense", 120);
+        o.record_steps = true;
+        let rep = run_serve(&o).unwrap();
+        assert_eq!(rep.completed.len(), 120);
+        assert!(rep.completed.iter().all(|c| c.logits.len() == NetConfig::SMALL.ny));
+        // recording must not perturb the deterministic signature
+        let plain = run_serve(&opts(1, "dense", 120)).unwrap();
+        assert_eq!(rep.signature(), plain.signature());
+        assert!(plain.completed.is_empty());
+    }
+
+    #[test]
+    fn crossbar_serve_reports_finite_lifespan_after_commits() {
+        // update_every=12 over 400 requests commits several times through
+        // the Ziksa programmer, so write pressure is non-zero and the
+        // endurance projection becomes finite
+        let rep = run_serve(&opts(1, "crossbar", 400)).unwrap();
+        let years = rep.lifespan_years.expect("crossbar substrate has an endurance model");
+        assert!(years.is_finite() && years > 0.0, "lifespan {years}");
+        assert!(rep.lines().iter().any(|l| l.contains("projected lifespan")));
+    }
+
+    #[test]
+    fn dense_serve_has_no_lifespan_projection() {
+        let rep = run_serve(&opts(1, "dense", 100)).unwrap();
+        assert!(rep.lifespan_years.is_none());
     }
 }

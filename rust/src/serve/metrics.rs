@@ -28,21 +28,45 @@ pub struct ServeMetrics {
     /// Total ticks requests spent queued (deterministic latency proxy).
     pub wait_ticks_sum: u64,
     /// Wall-clock enqueue→completion latency per request, microseconds.
+    /// Bounded: past [`ServeMetrics::LATENCY_SAMPLE_CAP`] samples the
+    /// oldest are overwritten ring-style, so an indefinitely-running
+    /// server (`m2ru serve --listen`) keeps a sliding window rather than
+    /// growing without bound. Percentiles are order-insensitive, so the
+    /// ring needs no unwinding.
     pub latencies_us: Vec<u64>,
+    /// Next ring slot to overwrite once the sample cap is reached.
+    pub latency_cursor: usize,
     /// FNV-style fold of every prediction in completion order.
     pub pred_fingerprint: u64,
     pub labeled: u64,
     pub labeled_correct: u64,
     pub online_updates: u64,
     pub online_loss_sum: f64,
+    /// Columns whose commit writes were rationed by the wear guard
+    /// (cumulative; 0 on substrates without wear accounting).
+    pub wear_rationed: u64,
     pub wall: Duration,
 }
 
 impl ServeMetrics {
+    /// Latency samples retained for the percentile report (a sliding
+    /// window on long-lived servers).
+    pub const LATENCY_SAMPLE_CAP: usize = 65_536;
+
     /// Fold one prediction into the deterministic fingerprint.
     pub fn record_pred(&mut self, pred: usize) {
         self.pred_fingerprint =
             self.pred_fingerprint.wrapping_mul(0x0000_0100_0000_01B3) ^ (pred as u64 + 1);
+    }
+
+    /// Record one request's wall-clock latency (ring-bounded).
+    pub fn record_latency_us(&mut self, us: u64) {
+        if self.latencies_us.len() < Self::LATENCY_SAMPLE_CAP {
+            self.latencies_us.push(us);
+        } else {
+            self.latencies_us[self.latency_cursor] = us;
+            self.latency_cursor = (self.latency_cursor + 1) % Self::LATENCY_SAMPLE_CAP;
+        }
     }
 
     /// Mean fraction of dispatched rows that carried a real request.
@@ -130,11 +154,12 @@ impl ServeMetrics {
                 store.created, store.evicted_lru, store.expired_ttl, store.hits, store.misses
             ),
             format!(
-                "online: labeled={} acc={:.3} updates={} mean_loss={:.4}",
+                "online: labeled={} acc={:.3} updates={} mean_loss={:.4} rationed_cols={}",
                 self.labeled,
                 self.labeled_accuracy(),
                 self.online_updates,
-                self.online_loss_sum / self.online_updates.max(1) as f64
+                self.online_loss_sum / self.online_updates.max(1) as f64,
+                self.wear_rationed
             ),
         ]
     }
@@ -152,6 +177,19 @@ mod tests {
         assert_eq!(m.percentile_us(99.0), 99);
         assert_eq!(m.percentile_us(100.0), 100);
         assert_eq!(ServeMetrics::default().percentile_us(99.0), 0);
+    }
+
+    #[test]
+    fn latency_samples_are_ring_bounded() {
+        let mut m = ServeMetrics::default();
+        for i in 0..(ServeMetrics::LATENCY_SAMPLE_CAP as u64 + 100) {
+            m.record_latency_us(i);
+        }
+        assert_eq!(m.latencies_us.len(), ServeMetrics::LATENCY_SAMPLE_CAP);
+        // the newest samples overwrote the oldest slots
+        assert_eq!(m.latencies_us[0], ServeMetrics::LATENCY_SAMPLE_CAP as u64);
+        assert_eq!(m.latencies_us[99], ServeMetrics::LATENCY_SAMPLE_CAP as u64 + 99);
+        assert_eq!(m.latencies_us[100], 100);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Streaming session server (DESIGN.md §8): per-user recurrent state,
-//! dynamic batching, and online continual learning on the serve path.
+//! Streaming session server (DESIGN.md §8–§9): per-user recurrent state,
+//! dynamic batching, online continual learning, and durable
+//! checkpoint/restore on the serve path.
 //!
 //! The offline experiments run whole sequences through a batch forward;
 //! serving a temporal model to live users is a different shape of
@@ -15,7 +16,16 @@
 //!   policy, same-session dedup).
 //! * [`OnlineLearner`] — labeled steps feed the reservoir
 //!   [`crate::replay::ReplayBuffer`]; every N labels one replay-mixed
-//!   DFA update commits through the single-writer whole-batch path.
+//!   DFA update commits through the single-writer whole-batch path,
+//!   wear-rationed on crossbar substrates and with old replay segments
+//!   reservoir-merged instead of dropped.
+//! * [`ServeCore`] — the transport-agnostic serve engine every frontend
+//!   drives: submit → drain per tick, identical logits whether requests
+//!   arrive by function call or socket ([`crate::net`]).
+//! * [`checkpoint`] — versioned binary snapshots of the whole core
+//!   (weights, session slabs, history rings, replay segments, RNG
+//!   streams); a killed server restarts with every live session's hidden
+//!   state bitwise intact.
 //! * [`run_serve`] — the deterministic synthetic workload driver behind
 //!   `m2ru serve` (open loop) and `m2ru loadgen` (closed loop),
 //!   reporting throughput, p50/p99 latency, batch fill and eviction
@@ -30,13 +40,21 @@
 //! count.
 
 mod batcher;
+pub mod checkpoint;
+mod core;
 mod driver;
 mod metrics;
 mod online;
 mod session;
+mod workload;
 
 pub use batcher::{BatcherStats, DynamicBatcher, StepRequest};
+pub use checkpoint::{
+    read_snapshot, save_checkpoint, try_restore, RestoreOutcome, Snapshot, SNAPSHOT_FILE,
+};
+pub use self::core::{CompletedStep, ServeCore};
 pub use driver::{run_serve, ServeOptions, ServeReport};
 pub use metrics::ServeMetrics;
-pub use online::OnlineLearner;
-pub use session::{session_id_for_user, SessionStats, SessionStore};
+pub use online::{LearnerState, OnlineLearner};
+pub use session::{session_id_for_user, SessionSnapshot, SessionStats, SessionStore};
+pub use workload::SyntheticWorkload;

@@ -24,12 +24,14 @@ use crate::config::ServeConfig;
 use crate::coordinator::ParallelEngine;
 use crate::data::Example;
 use crate::nn::SeqBatch;
-use crate::replay::ReplayBuffer;
+use crate::replay::{QuantizedExample, ReplayBuffer};
 use crate::rng::GaussianRng;
 
 /// Replay segments retained (newest-first) across commits. One segment
-/// rolls per commit, so this bounds the online learner's memory and the
-/// per-commit `sample_past` pool on long-lived serve loops.
+/// rolls per commit; beyond the cap the two **oldest** segments are
+/// reservoir-merged into one ([`ReplayBuffer::merge_oldest_pair`]), so the
+/// learner's memory and per-commit `sample_past` pool stay bounded while
+/// the replayable history span keeps growing on long-lived serve loops.
 const MAX_REPLAY_SEGMENTS: usize = 16;
 
 /// Accumulates labeled sequences and commits replay-mixed DFA updates.
@@ -40,11 +42,34 @@ pub struct OnlineLearner {
     update_every: usize,
     /// Fraction of each commit batch drawn from replay.
     mix: f32,
+    /// Wear guard: columns beyond `wear_ratio ×` mean writes skip commits
+    /// (0 disables; only wear-accounting substrates ration).
+    wear_ratio: f32,
     buffer: ReplayBuffer,
     rng: GaussianRng,
     pending: Vec<Example>,
     pub observed: u64,
     pub updates: u64,
+    /// Cumulative columns rationed by the wear guard.
+    pub rationed_cols: u64,
+}
+
+/// The learner's full durable state, as serialized by `serve::checkpoint`:
+/// counters, the not-yet-committed window, the Box–Muller sampling stream,
+/// and the replay buffer's segments plus both hardware RNG states. A
+/// learner restored from this continues bit-identically.
+#[derive(Clone, Debug)]
+pub struct LearnerState {
+    pub observed: u64,
+    pub updates: u64,
+    pub rationed_cols: u64,
+    pub pending: Vec<Example>,
+    pub rng_state: u64,
+    pub rng_spare: Option<f32>,
+    pub segments: Vec<Vec<QuantizedExample>>,
+    pub sampler_seen: u64,
+    pub sampler_rng: u32,
+    pub quant_lfsr: u16,
 }
 
 impl OnlineLearner {
@@ -61,12 +86,43 @@ impl OnlineLearner {
             // mix = 1.0 would make the replay-share formula divide by
             // zero, so enforce the same [0, 0.9] bound here
             mix: cfg.replay_mix.clamp(0.0, 0.9),
+            wear_ratio: if cfg.wear_ratio >= 1.0 { cfg.wear_ratio } else { 0.0 },
             buffer,
             rng: GaussianRng::new(seed ^ 0x0911_0B5E),
             pending: Vec::new(),
             observed: 0,
             updates: 0,
+            rationed_cols: 0,
         }
+    }
+
+    /// Capture the learner's durable state for a checkpoint.
+    pub fn snapshot(&self) -> LearnerState {
+        let (rng_state, rng_spare) = self.rng.state();
+        let (sampler_seen, sampler_rng) = self.buffer.sampler_state();
+        LearnerState {
+            observed: self.observed,
+            updates: self.updates,
+            rationed_cols: self.rationed_cols,
+            pending: self.pending.clone(),
+            rng_state,
+            rng_spare,
+            segments: self.buffer.segments().to_vec(),
+            sampler_seen,
+            sampler_rng,
+            quant_lfsr: self.buffer.quantizer_state(),
+        }
+    }
+
+    /// Restore from [`OnlineLearner::snapshot`]; policy knobs
+    /// (`update_every`, mix, wear ratio, capacities) stay as configured.
+    pub fn restore(&mut self, s: LearnerState) {
+        self.observed = s.observed;
+        self.updates = s.updates;
+        self.rationed_cols = s.rationed_cols;
+        self.pending = s.pending;
+        self.rng = GaussianRng::from_state(s.rng_state, s.rng_spare);
+        self.buffer.restore_state(s.segments, s.sampler_seen, s.sampler_rng, s.quant_lfsr);
     }
 
     /// Record one labeled `nt*nx` sequence. Returns `Some(loss)` when
@@ -117,12 +173,16 @@ impl OnlineLearner {
             sb.sample_mut(i).copy_from_slice(&ex.features);
             sb.labels[i] = ex.label;
         }
-        let loss = engine.train_whole(&sb)?;
+        let (loss, rationed) = engine.train_whole_guarded(&sb, self.wear_ratio)?;
+        self.rationed_cols += rationed;
         // roll the reservoir: this window's examples become replayable
-        // history for the next commit; drop the oldest window beyond the
-        // retention cap so a long-lived server stays bounded
+        // history for the next commit; beyond the retention cap the two
+        // oldest segments reservoir-merge into one, so a long-lived server
+        // stays bounded without forgetting its oldest windows outright
         self.buffer.begin_task();
-        self.buffer.retain_recent_segments(MAX_REPLAY_SEGMENTS);
+        while self.buffer.num_tasks() > MAX_REPLAY_SEGMENTS {
+            self.buffer.merge_oldest_pair(&mut self.rng);
+        }
         self.pending.clear();
         self.updates += 1;
         Ok(loss)
@@ -193,6 +253,52 @@ mod tests {
         }
         let after = eng.backend().effective_params().flatten();
         assert_eq!(before, after, "inference-only mode must never touch weights");
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        let net = NetConfig::SMALL;
+        let cfg = ServeConfig { update_every: 3, ..ServeConfig::default() };
+        // learner A runs 7 observations straight through
+        let mut a = OnlineLearner::new(net.nt, net.nx, &cfg, 11);
+        let mut eng_a = engine(11);
+        for i in 0..4u64 {
+            a.observe(&mut eng_a, seq(&net, 0, 300 + i), 0).unwrap();
+        }
+        // learner B snapshots at step 4 and restores into a fresh instance
+        let state = a.snapshot();
+        let mut b = OnlineLearner::new(net.nt, net.nx, &cfg, 999);
+        b.restore(state);
+        assert_eq!(b.observed, 4);
+        assert_eq!(b.pending(), a.pending());
+        // identical continuation: same commits, same weights (engine B's
+        // weights are first restored to A's current state)
+        let mut eng_b = engine(11);
+        eng_b.restore_params(&eng_a.backend().effective_params()).unwrap();
+        for i in 4..7u64 {
+            let la = a.observe(&mut eng_a, seq(&net, 1, 300 + i), 1).unwrap();
+            let lb = b.observe(&mut eng_b, seq(&net, 1, 300 + i), 1).unwrap();
+            assert_eq!(la, lb, "losses diverge at observation {i}");
+        }
+        assert_eq!(
+            eng_a.backend().effective_params().flatten(),
+            eng_b.backend().effective_params().flatten(),
+            "restored learner must commit bit-identical updates"
+        );
+    }
+
+    #[test]
+    fn merged_history_retains_oldest_windows() {
+        let net = NetConfig::SMALL;
+        // tiny replay segments force many rolls past the 16-segment cap
+        let cfg =
+            ServeConfig { update_every: 1, replay_cap: 4, replay_mix: 0.0, ..ServeConfig::default() };
+        let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 5);
+        let mut eng = engine(5);
+        for i in 0..(MAX_REPLAY_SEGMENTS as u64 + 8) {
+            learner.observe(&mut eng, seq(&net, 0, i), 0).unwrap();
+        }
+        assert_eq!(learner.replay_segments(), MAX_REPLAY_SEGMENTS, "cap still enforced");
     }
 
     #[test]

@@ -35,6 +35,22 @@ pub struct SessionStats {
     pub expired_ttl: u64,
 }
 
+/// One live session's full durable state, as serialized by
+/// `serve::checkpoint`: the hidden state, the raw history ring (including
+/// its write cursor, so restored rings continue bit-identically), and the
+/// recency bookkeeping. Snapshots are taken and restored in LRU order
+/// (oldest first), which preserves future eviction decisions exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSnapshot {
+    pub id: u64,
+    pub h: Vec<f32>,
+    pub hist: Vec<f32>,
+    pub hist_rows: usize,
+    pub hist_head: usize,
+    pub last_tick: u64,
+    pub steps: u64,
+}
+
 struct Slot {
     id: u64,
     /// MiRU hidden state, length nh.
@@ -235,6 +251,69 @@ impl SessionStore {
     pub fn steps(&self, idx: usize) -> u64 {
         self.slot(idx).steps
     }
+
+    /// The LRU touch counter (checkpoint/restore hook).
+    pub fn touch_counter(&self) -> u64 {
+        self.touch_counter
+    }
+
+    /// Every live session's durable state in LRU order, oldest first.
+    pub fn snapshot_slots(&self) -> Vec<SessionSnapshot> {
+        self.lru
+            .values()
+            .map(|&idx| {
+                let s = self.slot(idx);
+                SessionSnapshot {
+                    id: s.id,
+                    h: s.h.clone(),
+                    hist: s.hist.clone(),
+                    hist_rows: s.hist_rows,
+                    hist_head: s.hist_head,
+                    last_tick: s.last_tick,
+                    steps: s.steps,
+                }
+            })
+            .collect()
+    }
+
+    /// Rebuild the store from checkpointed state, replacing any current
+    /// contents. `snaps` must be in LRU order (oldest first — the order
+    /// [`SessionStore::snapshot_slots`] produces); relative recency is
+    /// reassigned under the restored `touch_counter`, so every future
+    /// hit/evict/expire decision is identical to the uninterrupted run.
+    /// If the snapshot holds more sessions than the configured capacity
+    /// (the config shrank between runs), only the newest fit survive.
+    pub fn restore(&mut self, touch_counter: u64, stats: SessionStats, snaps: Vec<SessionSnapshot>) {
+        self.slots.clear();
+        self.free.clear();
+        self.index.clear();
+        self.lru.clear();
+        self.stats = stats;
+        let start = snaps.len().saturating_sub(self.capacity);
+        let kept = &snaps[start..];
+        let n = kept.len() as u64;
+        self.touch_counter = touch_counter.max(n);
+        let base = self.touch_counter - n;
+        for (i, s) in kept.iter().enumerate() {
+            assert_eq!(s.h.len(), self.nh, "snapshot hidden width mismatch");
+            assert_eq!(s.hist.len(), self.nt * self.nx, "snapshot history size mismatch");
+            let touch = base + 1 + i as u64;
+            let slot = Slot {
+                id: s.id,
+                h: s.h.clone(),
+                hist: s.hist.clone(),
+                hist_rows: s.hist_rows.min(self.nt),
+                hist_head: s.hist_head % self.nt.max(1),
+                last_touch: touch,
+                last_tick: s.last_tick,
+                steps: s.steps,
+            };
+            let idx = self.slots.len();
+            self.slots.push(Some(slot));
+            self.index.insert(s.id, idx);
+            self.lru.insert(touch, idx);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -322,6 +401,46 @@ mod tests {
         let seq = s.history_seq(j);
         assert_eq!(seq[..12], vec![0.0; 12][..]);
         assert_eq!(seq[12], 9.0);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_state_and_lru_order() {
+        let mut s = store(3, 0);
+        for (tick, id) in [(0u64, 10u64), (1, 20), (2, 30)] {
+            let idx = s.get_or_create(id, tick);
+            s.set_hidden(idx, &[id as f32, 0.0, 0.0, 0.0]);
+            s.push_history(idx, &[0.1, 0.2, 0.3]);
+        }
+        s.get_or_create(10, 3); // 10 becomes most recent; LRU order: 20, 30, 10
+        let snaps = s.snapshot_slots();
+        assert_eq!(snaps.iter().map(|x| x.id).collect::<Vec<_>>(), vec![20, 30, 10]);
+        let mut t = store(3, 0);
+        t.restore(s.touch_counter(), s.stats.clone(), snaps.clone());
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.touch_counter(), s.touch_counter());
+        for snap in &snaps {
+            let idx = *t.index.get(&snap.id).unwrap();
+            assert_eq!(t.hidden(idx), &snap.h[..], "hidden state must restore bitwise");
+            assert_eq!(t.history_seq(idx), s.history_seq(*s.index.get(&snap.id).unwrap()));
+            assert_eq!(t.steps(idx), snap.steps);
+        }
+        // restored LRU order drives the same eviction decision
+        t.get_or_create(40, 5);
+        assert!(!t.contains(20), "20 was oldest in the snapshot");
+        assert!(t.contains(30) && t.contains(10) && t.contains(40));
+    }
+
+    #[test]
+    fn restore_over_capacity_keeps_newest() {
+        let mut s = store(8, 0);
+        for id in 0..6u64 {
+            s.get_or_create(id, id);
+        }
+        let snaps = s.snapshot_slots();
+        let mut t = store(2, 0); // shrunk config
+        t.restore(s.touch_counter(), s.stats.clone(), snaps);
+        assert_eq!(t.len(), 2);
+        assert!(t.contains(4) && t.contains(5), "newest sessions survive a capacity cut");
     }
 
     #[test]

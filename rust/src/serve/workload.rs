@@ -1,0 +1,121 @@
+//! Deterministic synthetic serving workload, shared by the in-process
+//! driver (`m2ru serve` / `m2ru loadgen`) and the TCP load generator
+//! (`m2ru connect`).
+//!
+//! Class-conditional per-user feature streams (same family as the backend
+//! test workload: `0.25·noise + 0.75·proto[label]`, clamped to the replay
+//! quantizer's [-1, 1] range). Every draw depends only on the seed, so
+//! the same seed produces the same request sequence whether the requests
+//! travel through a function call or a socket — the property the
+//! loopback-equivalence test (`tests/net_roundtrip.rs`) asserts.
+
+use crate::config::NetConfig;
+use crate::rng::{GaussianRng, SplitMix64};
+
+/// `sessions` synthetic users, each streaming timestep rows of a
+/// class-conditional pattern (the class is the user's fixed label). Every
+/// `nt`-th step of a user completes one sequence window and carries the
+/// label, so the server's prediction at that step can be scored and the
+/// window fed to the online learner.
+pub struct SyntheticWorkload {
+    protos: Vec<Vec<f32>>,
+    users: Vec<UserState>,
+    pick_rng: GaussianRng,
+    nt: usize,
+    nx: usize,
+}
+
+struct UserState {
+    label: usize,
+    rng: GaussianRng,
+    step_in_seq: usize,
+}
+
+impl SyntheticWorkload {
+    pub fn new(net: &NetConfig, sessions: usize, seed: u64) -> SyntheticWorkload {
+        let mut proto_rng = GaussianRng::new(seed ^ 0x9907_A11C);
+        let protos: Vec<Vec<f32>> =
+            (0..net.ny).map(|_| (0..net.nx).map(|_| proto_rng.normal()).collect()).collect();
+        let mut seeder = SplitMix64::new(seed ^ 0x05E5_510F);
+        let users = (0..sessions)
+            .map(|u| UserState {
+                label: u % net.ny,
+                rng: GaussianRng::new(seeder.next_u64()),
+                step_in_seq: 0,
+            })
+            .collect();
+        SyntheticWorkload {
+            protos,
+            users,
+            pick_rng: GaussianRng::new(seed ^ 0x71CC_E7),
+            nt: net.nt,
+            nx: net.nx,
+        }
+    }
+
+    /// Next request: a uniformly drawn user streams one timestep; the
+    /// user's label rides along on the final step of each nt-window.
+    /// Returns `(user index, features, label)`.
+    pub fn next(&mut self) -> (u64, Vec<f32>, Option<usize>) {
+        let u = self.pick_rng.below(self.users.len());
+        let user = &mut self.users[u];
+        let proto = &self.protos[user.label];
+        let x: Vec<f32> = (0..self.nx)
+            .map(|j| (0.25 * user.rng.normal() + 0.75 * proto[j]).clamp(-1.0, 1.0))
+            .collect();
+        user.step_in_seq += 1;
+        let label = (user.step_in_seq % self.nt == 0).then_some(user.label);
+        (u as u64, x, label)
+    }
+
+    /// Fast-forward the generator past `n` requests, discarding them —
+    /// how a load generator resumes a workload against a server restarted
+    /// from a checkpoint (`m2ru connect --skip N`).
+    pub fn skip(&mut self, n: u64) {
+        for _ in 0..n {
+            let _ = self.next();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_stream() {
+        let net = NetConfig::SMALL;
+        let mut a = SyntheticWorkload::new(&net, 8, 42);
+        let mut b = SyntheticWorkload::new(&net, 8, 42);
+        for _ in 0..50 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn skip_equals_discarding() {
+        let net = NetConfig::SMALL;
+        let mut a = SyntheticWorkload::new(&net, 8, 7);
+        let mut b = SyntheticWorkload::new(&net, 8, 7);
+        for _ in 0..33 {
+            let _ = a.next();
+        }
+        b.skip(33);
+        for _ in 0..20 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn labels_arrive_every_nt_steps_per_user() {
+        let net = NetConfig::SMALL;
+        let mut w = SyntheticWorkload::new(&net, 4, 1);
+        let mut per_user_steps = vec![0usize; 4];
+        for _ in 0..400 {
+            let (u, x, label) = w.next();
+            assert_eq!(x.len(), net.nx);
+            per_user_steps[u as usize] += 1;
+            assert_eq!(label.is_some(), per_user_steps[u as usize] % net.nt == 0);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! TCP frontend + durable-session acceptance tests (DESIGN.md §9):
+//!
+//! 1. **Codec robustness** — every message kind round-trips; truncated /
+//!    oversized / bad-magic frames are rejected without panics.
+//! 2. **Loopback equivalence** — `m2ru serve --listen` + `m2ru connect`
+//!    over 127.0.0.1 produce per-session logits bitwise-identical to the
+//!    in-process synthetic driver for the same seed and policy.
+//! 3. **Kill/restart durability** — a server killed after a checkpoint
+//!    and restarted resumes every live session with bitwise-identical
+//!    hidden state, and its continued run matches an uninterrupted
+//!    reference run bit-for-bit; corrupted snapshots fall back to a
+//!    fresh boot instead of dying.
+
+use std::path::PathBuf;
+
+use m2ru::config::{NetConfig, RunConfig, ServeConfig};
+use m2ru::net::{
+    decode_frame, encode_frame, run_connect, ConnectOptions, Message, NetServeOptions, NetServer,
+    FLAG_TICK,
+};
+use m2ru::serve::{
+    read_snapshot, run_serve, session_id_for_user, CompletedStep, ServeCore, ServeOptions,
+    SyntheticWorkload,
+};
+
+/// The shared operating point: small net, forced batching pressure, and a
+/// short online-commit cadence so weight updates land mid-run (the
+/// equivalence below therefore also pins the training path).
+fn serve_run(seed: u64) -> RunConfig {
+    let mut run = RunConfig::default();
+    run.seed = seed;
+    run.backend = "dense".to_string();
+    run.serve = ServeConfig {
+        max_batch: 8,
+        max_wait: 2,
+        capacity: 16,
+        ttl: 0,
+        update_every: 6,
+        replay_cap: 64,
+        replay_mix: 0.5,
+        ..ServeConfig::default()
+    };
+    run
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("m2ru_net_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+// ------------------------------------------------------------------ codec
+
+#[test]
+fn codec_roundtrips_and_rejects_malformed_frames() {
+    // round-trip (the unit tests in net::wire cover each kind; this is
+    // the integration-visibility check through the public API)
+    let msg = Message::StepLabeled { session: 5, label: 2, x: vec![0.25, -0.75] };
+    let buf = encode_frame(FLAG_TICK, &msg);
+    let (frame, used) = decode_frame(&buf).unwrap();
+    assert_eq!(used, buf.len());
+    assert_eq!(frame.msg, msg);
+    assert_eq!(frame.flags, FLAG_TICK);
+    // malformed variants must error (and never panic)
+    for cut in 0..buf.len() {
+        assert!(decode_frame(&buf[..cut]).is_err());
+    }
+    let mut bad_magic = buf.clone();
+    bad_magic[1] ^= 0x55;
+    assert!(decode_frame(&bad_magic).is_err());
+    let mut oversized = buf.clone();
+    oversized[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(decode_frame(&oversized).is_err());
+    let mut bad_kind = buf;
+    bad_kind[6] = 77;
+    assert!(decode_frame(&bad_kind).is_err());
+}
+
+// ------------------------------------------------- loopback equivalence
+
+/// Spawn a loopback server, returning its address and the join handle
+/// that yields the final `NetServeReport`.
+fn spawn_server(
+    run: RunConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<m2ru::net::NetServeReport>>) {
+    let server =
+        NetServer::bind(NetServeOptions::new(NetConfig::SMALL, run, "127.0.0.1:0")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+#[test]
+fn loopback_logits_match_in_process_driver_bitwise() {
+    let seed = 41;
+    // reference: the in-process synthetic driver, logging every completion
+    let mut opts = ServeOptions::new(NetConfig::SMALL, serve_run(seed));
+    opts.requests = 240;
+    opts.sessions = 16;
+    opts.arrivals = 8;
+    opts.record_steps = true;
+    let reference = run_serve(&opts).unwrap();
+    assert_eq!(reference.completed.len(), 240);
+    assert!(reference.metrics.online_updates > 0, "equivalence must cover online commits");
+
+    // the same workload over a real socket
+    let (addr, server) = spawn_server(serve_run(seed));
+    let mut copts = ConnectOptions::new(addr, NetConfig::SMALL);
+    copts.requests = 240;
+    copts.sessions = 16;
+    copts.arrivals = 8;
+    copts.seed = seed;
+    let client_rep = run_connect(&copts).unwrap();
+    let server_rep = server.join().unwrap().unwrap();
+
+    assert_eq!(client_rep.completed.len(), reference.completed.len());
+    for (i, (got, want)) in
+        client_rep.completed.iter().zip(reference.completed.iter()).enumerate()
+    {
+        assert_eq!(got.0, want.session, "session mismatch at completion {i}");
+        assert_eq!(got.1 as usize, want.pred, "prediction mismatch at completion {i}");
+        assert_eq!(got.2, want.logits, "logits differ at completion {i} (must be bitwise)");
+    }
+    // the deterministic server-side signature matches too
+    assert_eq!(server_rep.report.signature(), reference.signature());
+    assert_eq!(server_rep.connections, 1);
+}
+
+// ------------------------------------------------- kill/restart durability
+
+/// Drive a core exactly the way the TCP server does for wave traffic —
+/// one tick per wave, policy drain at wave end, tail flush at the end of
+/// the run (the reference for restart equivalence).
+fn drive_waves(
+    core: &mut ServeCore,
+    workload: &mut SyntheticWorkload,
+    requests: u64,
+    arrivals: usize,
+) -> Vec<CompletedStep> {
+    let mut log = Vec::new();
+    let mut issued = 0u64;
+    while issued < requests {
+        let wave = (arrivals as u64).min(requests - issued) as usize;
+        for _ in 0..wave {
+            let (u, x, label) = workload.next();
+            core.submit(session_id_for_user(u), x, label, 0);
+            issued += 1;
+        }
+        log.extend(core.drain_ready().unwrap());
+        if issued >= requests {
+            log.extend(core.flush_all().unwrap());
+        }
+        core.advance_tick();
+    }
+    log
+}
+
+#[test]
+fn kill_and_restart_resumes_sessions_bitwise() {
+    let seed = 77;
+    let (w1, w2) = (120u64, 96u64);
+    let dir = tmp_dir("restart");
+
+    // ---- uninterrupted reference: one core serves w1 + w2 ----
+    let mut ref_core = ServeCore::new(NetConfig::SMALL, &serve_run(seed)).unwrap();
+    let mut ref_wl = SyntheticWorkload::new(&NetConfig::SMALL, 16, seed);
+    let mut ref_log = drive_waves(&mut ref_core, &mut ref_wl, w1, 8);
+    let mid_reference = ref_core.store().snapshot_slots();
+    ref_log.extend(drive_waves(&mut ref_core, &mut ref_wl, w2, 8));
+
+    // ---- server life 1: w1 requests, then shutdown (checkpoints) ----
+    let mut run1 = serve_run(seed);
+    run1.net.checkpoint_dir = dir.to_string_lossy().to_string();
+    let (addr1, server1) = spawn_server(run1);
+    let mut c1 = ConnectOptions::new(addr1, NetConfig::SMALL);
+    c1.requests = w1;
+    c1.sessions = 16;
+    c1.arrivals = 8;
+    c1.seed = seed;
+    let client1 = run_connect(&c1).unwrap();
+    let rep1 = server1.join().unwrap().unwrap();
+    let snapshot_path = rep1.checkpoint_path.expect("shutdown must write a checkpoint");
+    assert!(snapshot_path.exists());
+
+    // the snapshot holds every live session's hidden state, bitwise equal
+    // to the uninterrupted reference at the same point
+    let snap = read_snapshot(&dir).unwrap().expect("snapshot must parse");
+    assert_eq!(snap.sessions, mid_reference, "checkpointed sessions must be bitwise");
+    assert!(!snap.sessions.is_empty());
+
+    // ---- server life 2: restore, then w2 more requests ----
+    let mut run2 = serve_run(seed);
+    run2.net.checkpoint_dir = dir.to_string_lossy().to_string();
+    let (addr2, server2) = spawn_server(run2);
+    let mut c2 = ConnectOptions::new(addr2, NetConfig::SMALL);
+    c2.requests = w2;
+    c2.sessions = 16;
+    c2.arrivals = 8;
+    c2.seed = seed;
+    c2.skip = w1; // resume the workload where life 1 stopped
+    let client2 = run_connect(&c2).unwrap();
+    let rep2 = server2.join().unwrap().unwrap();
+    assert_eq!(rep2.restored_sessions, snap.sessions.len());
+
+    // every logit across both lives matches the uninterrupted reference
+    let mut net_logits: Vec<(u64, u32, Vec<f32>)> = client1.completed;
+    net_logits.extend(client2.completed);
+    assert_eq!(net_logits.len(), ref_log.len());
+    for (i, (got, want)) in net_logits.iter().zip(ref_log.iter()).enumerate() {
+        assert_eq!(got.0, want.session, "session mismatch at {i}");
+        assert_eq!(got.2, want.logits, "restart broke logits at completion {i}");
+    }
+    // and the final deterministic signature is the uninterrupted one
+    let ref_report = ref_core.report(16);
+    assert_eq!(rep2.report.signature(), ref_report.signature());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_snapshot_boots_fresh_over_the_network() {
+    let dir = tmp_dir("corrupt_boot");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join(m2ru::serve::SNAPSHOT_FILE), b"garbage snapshot").unwrap();
+    let mut run = serve_run(3);
+    run.net.checkpoint_dir = dir.to_string_lossy().to_string();
+    let (addr, server) = spawn_server(run);
+    let mut c = ConnectOptions::new(addr, NetConfig::SMALL);
+    c.requests = 16;
+    c.sessions = 4;
+    c.arrivals = 8;
+    c.seed = 3;
+    let client = run_connect(&c).unwrap();
+    assert_eq!(client.completed.len(), 16);
+    let rep = server.join().unwrap().unwrap();
+    assert_eq!(rep.restored_sessions, 0, "corrupt snapshot must boot fresh");
+    // the shutdown checkpoint replaced the garbage with a valid snapshot
+    assert!(read_snapshot(&dir).unwrap().is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------- interactive client path
+
+#[test]
+fn synchronous_steps_and_stats_work_over_loopback() {
+    let (addr, server) = spawn_server(serve_run(9));
+    let mut client = m2ru::net::NetClient::connect(&addr).unwrap();
+    let session = client.hello(1234).unwrap();
+    assert_eq!(session, session_id_for_user(1234));
+    let nx = NetConfig::SMALL.nx;
+    let (pred, logits) = client.step(session, vec![0.5; nx], None).unwrap();
+    assert_eq!(logits.len(), NetConfig::SMALL.ny);
+    assert!((pred as usize) < NetConfig::SMALL.ny);
+    // a labeled step is scored server-side
+    let (_, logits2) = client.step(session, vec![0.25; nx], Some(1)).unwrap();
+    assert_eq!(logits2.len(), NetConfig::SMALL.ny);
+    let stats = client.stats().unwrap();
+    assert!(stats.contains("signature: req=2"), "stats text:\n{stats}");
+    let total = client.shutdown_server().unwrap();
+    assert_eq!(total, 2);
+    let rep = server.join().unwrap().unwrap();
+    assert_eq!(rep.report.metrics.requests, 2);
+    assert_eq!(rep.report.metrics.labeled, 1);
+}

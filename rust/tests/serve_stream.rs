@@ -116,8 +116,17 @@ fn serve_opts(backend: &str, workers: usize, requests: u64) -> ServeOptions {
         update_every: 12,
         replay_cap: 64,
         replay_mix: 0.5,
+        ..ServeConfig::default()
     };
-    ServeOptions { net: NetConfig::SMALL, run, requests, sessions: 16, arrivals: 8, concurrency: 0 }
+    ServeOptions {
+        net: NetConfig::SMALL,
+        run,
+        requests,
+        sessions: 16,
+        arrivals: 8,
+        concurrency: 0,
+        record_steps: false,
+    }
 }
 
 #[test]
