@@ -88,6 +88,17 @@ pub struct TransportConfig {
     pub checkpoint_dir: String,
     /// Logical ticks between periodic snapshots (0 = only at shutdown).
     pub checkpoint_every: u64,
+    /// Whether connected clients may administer the server: send
+    /// `Shutdown` and drive the logical clock with TICK/FLUSH frame
+    /// flags. The default suits the loopback harness (`m2ru connect`)
+    /// and single-operator benches; for a server exposed to untrusted
+    /// clients set `false` — client flags are then ignored, `Shutdown`
+    /// is a protocol violation, and the clock is driven by `tick_ms`.
+    pub client_admin: bool,
+    /// Server-driven tick period in milliseconds (0 = client-driven
+    /// clock). Required > 0 when `client_admin` is off, since nothing
+    /// else would advance batching, TTL expiry or checkpoint cadence.
+    pub tick_ms: u64,
 }
 
 impl Default for TransportConfig {
@@ -97,6 +108,8 @@ impl Default for TransportConfig {
             queue_depth: 256,
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
+            client_admin: true,
+            tick_ms: 0,
         }
     }
 }
@@ -104,6 +117,10 @@ impl Default for TransportConfig {
 impl TransportConfig {
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.queue_depth >= 1, "net.queue_depth must be >= 1");
+        anyhow::ensure!(
+            self.client_admin || self.tick_ms >= 1,
+            "net.client_admin = false needs net.tick_ms >= 1 (something must drive the clock)"
+        );
         Ok(())
     }
 }
@@ -216,6 +233,10 @@ impl RunConfig {
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
                 }
                 "net.checkpoint_every" => self.net.checkpoint_every = iget()? as u64,
+                "net.client_admin" => {
+                    self.net.client_admin = v.as_bool().context("net.client_admin: bool")?;
+                }
+                "net.tick_ms" => self.net.tick_ms = iget()? as u64,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -333,6 +354,17 @@ mod tests {
         assert_eq!(cfg.net.checkpoint_every, 500);
         let bad = parse_toml("[net]\nqueue_depth = 0\n").unwrap();
         assert!(RunConfig::default().apply(&bad).is_err());
+    }
+
+    #[test]
+    fn client_admin_off_requires_server_ticks() {
+        let bad = parse_toml("[net]\nclient_admin = false\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err(), "no clock source must be rejected");
+        let ok = parse_toml("[net]\nclient_admin = false\ntick_ms = 20\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&ok).unwrap();
+        assert!(!cfg.net.client_admin);
+        assert_eq!(cfg.net.tick_ms, 20);
     }
 
     #[test]

@@ -33,15 +33,26 @@ impl Mat {
         Self { rows, cols, data }
     }
 
+    // at/at_mut check bounds with real asserts, not debug_asserts: the
+    // row-major index math means an out-of-range column aliases a
+    // neighboring row's element, so in release builds an unchecked OOB
+    // access would be silent numeric corruption, not a crash.
     #[inline]
+    #[track_caller]
     pub fn at(&self, r: usize, c: usize) -> f32 {
-        debug_assert!(r < self.rows && c < self.cols);
+        assert!(r < self.rows && c < self.cols, "at({r},{c}) out of {}x{}", self.rows, self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline]
+    #[track_caller]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
-        debug_assert!(r < self.rows && c < self.cols);
+        assert!(
+            r < self.rows && c < self.cols,
+            "at_mut({r},{c}) out of {}x{}",
+            self.rows,
+            self.cols
+        );
         &mut self.data[r * self.cols + c]
     }
 

@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::config::NetConfig;
-use crate::serve::{session_id_for_user, SyntheticWorkload};
+use crate::serve::SyntheticWorkload;
 
 use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
 
@@ -72,6 +72,9 @@ impl NetClient {
     }
 
     /// Handshake: register `user` and return its server-side session id.
+    /// The session is *bound* to this connection — stepping a session id
+    /// that this connection never established is a protocol violation
+    /// the server answers by dropping the connection.
     pub fn hello(&mut self, user: u64) -> Result<u64> {
         self.send(0, &Message::Hello { user })?;
         match self.recv()? {
@@ -81,8 +84,10 @@ impl NetClient {
     }
 
     /// Synchronous single step: send one (optionally labeled) timestep
-    /// and wait for its logits. Flags force immediate dispatch, so this
-    /// is the low-latency interactive path (one tick per request).
+    /// and wait for its logits. The session id must come from a prior
+    /// [`NetClient::hello`] on this connection. Flags force immediate
+    /// dispatch, so this is the low-latency interactive path (one tick
+    /// per request).
     pub fn step(&mut self, session: u64, x: Vec<f32>, label: Option<u32>) -> Result<(u32, Vec<f32>)> {
         let msg = match label {
             Some(l) => Message::StepLabeled { session, label: l, x },
@@ -166,6 +171,10 @@ impl ConnectOptions {
 
 /// Outcome of a `m2ru connect` run.
 pub struct ConnectReport {
+    /// Server-issued session id per simulated user (index = user key):
+    /// ids are keyed by the server's per-boot secret, so they are only
+    /// knowable through the `Hello` handshake.
+    pub session_ids: Vec<u64>,
     /// `(session, prediction, logits)` per response, in completion order.
     pub completed: Vec<(u64, u32, Vec<f32>)>,
     /// Labeled requests issued (scored server-side).
@@ -192,8 +201,13 @@ pub fn run_connect(opts: &ConnectOptions) -> Result<ConnectReport> {
     anyhow::ensure!(opts.sessions >= 1, "need at least one session");
     anyhow::ensure!(opts.arrivals >= 1, "need at least one request per wave");
     let mut client = NetClient::connect(&opts.addr)?;
-    // handshake validates protocol/version compatibility up front
-    let _ = client.hello(0)?;
+    // handshake every simulated user up front: validates protocol/version
+    // compatibility and collects the server-issued (secret-keyed) session
+    // ids this connection is bound to
+    let mut session_ids = Vec::with_capacity(opts.sessions);
+    for user in 0..opts.sessions as u64 {
+        session_ids.push(client.hello(user)?);
+    }
 
     let mut workload = SyntheticWorkload::new(&opts.net, opts.sessions, opts.seed);
     workload.skip(opts.skip);
@@ -216,7 +230,7 @@ pub fn run_connect(opts: &ConnectOptions) -> Result<ConnectReport> {
         let wave = (opts.arrivals as u64).min(opts.requests - issued) as usize;
         for i in 0..wave {
             let (user, x, label) = workload.next();
-            let session = session_id_for_user(user);
+            let session = session_ids[user as usize];
             if label.is_some() {
                 labeled += 1;
             }
@@ -250,5 +264,5 @@ pub fn run_connect(opts: &ConnectOptions) -> Result<ConnectReport> {
 
     let stats_text = client.stats()?;
     let server_total = if opts.shutdown { Some(client.shutdown_server()?) } else { None };
-    Ok(ConnectReport { completed, labeled, wall, stats_text, server_total })
+    Ok(ConnectReport { session_ids, completed, labeled, wall, stats_text, server_total })
 }

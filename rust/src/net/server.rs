@@ -36,6 +36,31 @@
 //! snapshot on boot (corrupt snapshots warn and boot fresh), snapshots
 //! every `net.checkpoint_every` ticks, and always snapshots on shutdown —
 //! a kill/restart resumes every live session's hidden state bitwise.
+//!
+//! ## Trust model
+//!
+//! Session ids are a keyed hash of the user key under a random per-boot
+//! secret (persisted in checkpoints, so restored sessions keep their
+//! ids; see [`session_id_keyed`] for what the keying does and does not
+//! guarantee). The enforcement boundary is *connection binding*: a
+//! session belongs to the connection that established it with `Hello`,
+//! and `Step` frames for a session this connection never established,
+//! an out-of-range label, or a `Hello` for a session bound to another
+//! *live* connection are protocol violations that drop the offending
+//! connection without touching serving state. Every path that loses a
+//! connection — clean EOF, violation, failed write to a dead peer —
+//! releases its bindings, so a session whose holder is known to be gone
+//! can be re-established by a fresh `Hello`; and each connection may
+//! hold at most `serve.capacity` bindings, so the binding table stays
+//! bounded under a Hello flood.
+//!
+//! Client administration — `Shutdown` frames and the TICK/FLUSH clock
+//! flags — is on by default, which suits the loopback harness and
+//! closed-loop benches where the single client *is* the operator. For a
+//! server exposed to untrusted clients, set `net.client_admin = false`
+//! and a `net.tick_ms` period: client flags are then ignored, `Shutdown`
+//! becomes a protocol violation, and a server-side timer drives the
+//! logical clock (batching, TTL expiry, checkpoint cadence) instead.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -50,7 +75,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{NetConfig, RunConfig};
 use crate::serve::{
-    save_checkpoint, session_id_for_user, try_restore, CompletedStep, RestoreOutcome, ServeCore,
+    save_checkpoint, session_id_keyed, try_restore, CompletedStep, RestoreOutcome, ServeCore,
     ServeReport,
 };
 
@@ -62,15 +87,17 @@ pub struct NetServeOptions {
     /// Network shapes (must match what clients stream).
     pub net: NetConfig,
     /// Backend, workers, seed, `[serve]` policy and `[net]` transport
-    /// policy (queue depth, checkpointing).
+    /// policy — including `net.listen`, the single source of truth for
+    /// the listen address (`host:port`; port 0 picks a free port).
     pub run: RunConfig,
-    /// Listen address (`host:port`; port 0 picks a free port).
-    pub listen: String,
 }
 
 impl NetServeOptions {
+    /// Build options, overriding `run.net.listen` with `listen`.
     pub fn new(net: NetConfig, run: RunConfig, listen: impl Into<String>) -> NetServeOptions {
-        NetServeOptions { net, run, listen: listen.into() }
+        let mut run = run;
+        run.net.listen = listen.into();
+        NetServeOptions { net, run }
     }
 }
 
@@ -86,12 +113,24 @@ pub struct NetServeReport {
     pub restored_sessions: usize,
 }
 
-/// Events the connection threads feed the serve thread.
+/// Events the connection threads (and the optional ticker) feed the
+/// serve thread.
 enum Event {
     Connected { conn: u64, writer: TcpStream },
     Frame { conn: u64, frame: Frame },
     Disconnected { conn: u64 },
     Malformed { conn: u64, error: String },
+    /// Server-driven clock pulse (`net.tick_ms` mode).
+    Tick,
+}
+
+/// A random 64-bit per-boot key for the session-id space, drawn from the
+/// standard library's hash seeding (OS entropy, no new dependencies).
+fn random_boot_secret() -> u64 {
+    use std::hash::{BuildHasher, Hasher};
+    let a = std::collections::hash_map::RandomState::new().build_hasher().finish();
+    let b = std::collections::hash_map::RandomState::new().build_hasher().finish();
+    a ^ b.rotate_left(32)
 }
 
 /// A bound TCP serving frontend. `bind` then `run`; `local_addr` exposes
@@ -104,8 +143,8 @@ pub struct NetServer {
 impl NetServer {
     pub fn bind(opts: NetServeOptions) -> Result<NetServer> {
         opts.run.validate()?;
-        let listener = TcpListener::bind(&opts.listen)
-            .with_context(|| format!("binding {}", opts.listen))?;
+        let listener = TcpListener::bind(&opts.run.net.listen)
+            .with_context(|| format!("binding {}", opts.run.net.listen))?;
         Ok(NetServer { listener, opts })
     }
 
@@ -127,10 +166,12 @@ impl NetServer {
             Some(PathBuf::from(&opts.run.net.checkpoint_dir))
         };
         let mut restored_sessions = 0;
+        let mut restored = false;
         if let Some(dir) = &ckpt_dir {
             match try_restore(&mut core, dir)? {
                 RestoreOutcome::Restored { sessions, tick } => {
                     restored_sessions = sessions;
+                    restored = true;
                     eprintln!("restored {sessions} session(s) at tick {tick} from {}", dir.display());
                 }
                 RestoreOutcome::Corrupt { error } => {
@@ -139,37 +180,72 @@ impl NetServer {
                 RestoreOutcome::Fresh => {}
             }
         }
+        // fresh boots key the session-id space with a random secret so
+        // clients cannot compute each other's session ids; a restore
+        // keeps the checkpointed key so existing session ids stay valid
+        if !restored {
+            core.set_session_secret(random_boot_secret());
+        }
 
         // acceptor + per-connection readers feed one bounded channel
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<Event>(opts.run.net.queue_depth.max(1));
         let acceptor = spawn_acceptor(listener.try_clone()?, tx.clone(), stop.clone());
+        if opts.run.net.tick_ms > 0 {
+            // wall-clock tick source (required when client_admin is off);
+            // dies on its own once the receiver is gone — never joined
+            let period = std::time::Duration::from_millis(opts.run.net.tick_ms);
+            let tick_tx = tx.clone();
+            let tick_stop = stop.clone();
+            std::thread::spawn(move || loop {
+                std::thread::sleep(period);
+                if tick_stop.load(Ordering::SeqCst) || tick_tx.send(Event::Tick).is_err() {
+                    return;
+                }
+            });
+        }
         drop(tx);
 
         // ---- the serve thread (this thread) -----------------------------
         let start = Instant::now();
-        let mut conns: HashMap<u64, TcpStream> = HashMap::new();
+        let mut table = ConnTable::new();
         let mut total_conns: u64 = 0;
         let nx = opts.net.nx;
+        let ny = opts.net.ny;
+        let client_admin = opts.run.net.client_admin;
+        // a connection may hold at most one store's worth of session
+        // bindings — bounds the owner map under a Hello flood
+        let bind_cap = opts.run.serve.capacity;
         let checkpoint_every = opts.run.net.checkpoint_every;
         let serve_result = (|| -> Result<()> {
             while let Ok(ev) = rx.recv() {
                 match ev {
                     Event::Connected { conn, writer } => {
-                        conns.insert(conn, writer);
+                        table.connected(conn, writer);
                         total_conns += 1;
                     }
                     Event::Disconnected { conn } => {
-                        conns.remove(&conn);
+                        table.forget(conn);
                     }
                     Event::Malformed { conn, error } => {
-                        eprintln!("net: dropping connection {conn}: {error}");
-                        if let Some(s) = conns.remove(&conn) {
-                            let _ = s.shutdown(std::net::Shutdown::Both);
+                        table.drop_conn(conn, &error);
+                    }
+                    Event::Tick => {
+                        // wall-clock pulse: one driver-loop iteration
+                        let done = core.drain_ready()?;
+                        table.route_logits(done);
+                        core.advance_tick();
+                        if checkpoint_every > 0 && core.tick() % checkpoint_every == 0 {
+                            if let Some(dir) = &ckpt_dir {
+                                save_checkpoint(&core, dir)?;
+                            }
                         }
                     }
                     Event::Frame { conn, frame } => {
                         let Frame { flags, msg } = frame;
+                        // without client administration, clients cannot
+                        // drive the clock (the ticker does)
+                        let flags = if client_admin { flags } else { 0 };
                         // 1. steps enqueue before their flags act. A
                         //    protocol-violating frame drops its own
                         //    connection but its flags still drive the
@@ -178,36 +254,57 @@ impl NetServer {
                         let mut shutdown = false;
                         match msg {
                             Message::Step { session, x } => {
-                                if x.len() != nx {
-                                    drop_protocol_violation(&mut conns, conn, x.len(), nx);
+                                if let Some(reason) = step_violation(
+                                    table.owns(conn, session),
+                                    x.len(),
+                                    nx,
+                                    None,
+                                    ny,
+                                ) {
+                                    table.drop_conn(conn, &reason);
                                 } else {
                                     core.submit(session, x, None, conn);
                                 }
                             }
                             Message::StepLabeled { session, label, x } => {
-                                if x.len() != nx {
-                                    drop_protocol_violation(&mut conns, conn, x.len(), nx);
+                                if let Some(reason) = step_violation(
+                                    table.owns(conn, session),
+                                    x.len(),
+                                    nx,
+                                    Some(label),
+                                    ny,
+                                ) {
+                                    table.drop_conn(conn, &reason);
                                 } else {
                                     core.submit(session, x, Some(label as usize), conn);
                                 }
                             }
                             Message::Hello { user } => {
-                                let sid = session_id_for_user(user);
-                                send_to(&mut conns, conn, &Message::Ack { value: sid });
+                                let sid = session_id_keyed(user, core.session_secret());
+                                match table.bind(conn, sid, bind_cap) {
+                                    Ok(()) => {
+                                        table.send(conn, &Message::Ack { value: sid });
+                                    }
+                                    Err(reason) => table.drop_conn(conn, &reason),
+                                }
                             }
                             Message::Stats { .. } => {
                                 let text =
                                     core.report(core.store().len()).lines().join("\n");
-                                send_to(&mut conns, conn, &Message::Stats { text });
+                                table.send(conn, &Message::Stats { text });
                             }
-                            Message::Shutdown => shutdown = true,
-                            Message::Ack { .. } | Message::Logits { .. } => {
-                                eprintln!(
-                                    "net: client {conn} sent a server-only message; dropping it"
-                                );
-                                if let Some(s) = conns.remove(&conn) {
-                                    let _ = s.shutdown(std::net::Shutdown::Both);
+                            Message::Shutdown => {
+                                if client_admin {
+                                    shutdown = true;
+                                } else {
+                                    table.drop_conn(
+                                        conn,
+                                        "Shutdown from a client (net.client_admin is off)",
+                                    );
                                 }
+                            }
+                            Message::Ack { .. } | Message::Logits { .. } => {
+                                table.drop_conn(conn, "client sent a server-only message");
                             }
                         }
                         // 2. flags drive the deterministic clock, exactly
@@ -219,7 +316,7 @@ impl NetServer {
                         if shutdown || flags & FLAG_FLUSH != 0 {
                             done.extend(core.flush_all()?);
                         }
-                        route_logits(&mut conns, done);
+                        table.route_logits(done);
                         if flags & FLAG_TICK != 0 {
                             core.advance_tick();
                             if checkpoint_every > 0 && core.tick() % checkpoint_every == 0 {
@@ -229,11 +326,7 @@ impl NetServer {
                             }
                         }
                         if shutdown {
-                            send_to(
-                                &mut conns,
-                                conn,
-                                &Message::Ack { value: core.metrics().requests },
-                            );
+                            table.send(conn, &Message::Ack { value: core.metrics().requests });
                             return Ok(());
                         }
                     }
@@ -274,9 +367,7 @@ impl NetServer {
             let _ = acceptor.join();
         }
         // closing the write halves unblocks client readers
-        for (_, s) in conns.drain() {
-            let _ = s.shutdown(std::net::Shutdown::Both);
-        }
+        table.close_all();
         serve_result?;
 
         core.set_wall(start.elapsed());
@@ -343,35 +434,135 @@ fn spawn_acceptor(
     })
 }
 
-/// Return each completed step's logits to the connection it arrived on
-/// (consumes the steps — the logits rows move into the frames).
-fn route_logits(conns: &mut HashMap<u64, TcpStream>, done: Vec<CompletedStep>) {
-    for step in done {
-        let msg = Message::Logits {
-            session: step.session,
-            pred: step.pred as u32,
-            logits: step.logits,
-        };
-        send_to(conns, step.tag, &msg);
-    }
+/// Live connections and their session bindings, kept consistent as one
+/// unit: every path that loses a connection — clean disconnect, protocol
+/// violation, failed write to a dead peer — also releases the sessions it
+/// had bound, so a reconnecting user can always re-`Hello` their session.
+struct ConnTable {
+    conns: HashMap<u64, TcpStream>,
+    /// session id → owning connection.
+    owner: HashMap<u64, u64>,
+    /// connection → bindings held (bounds `owner` under a Hello flood).
+    owned: HashMap<u64, usize>,
 }
 
-/// Best-effort frame write; a dead peer just drops out of the conn map
-/// (its reader thread reports the disconnect separately).
-fn send_to(conns: &mut HashMap<u64, TcpStream>, conn: u64, msg: &Message) {
-    if let Some(s) = conns.get_mut(&conn) {
+impl ConnTable {
+    fn new() -> ConnTable {
+        ConnTable { conns: HashMap::new(), owner: HashMap::new(), owned: HashMap::new() }
+    }
+
+    fn connected(&mut self, conn: u64, writer: TcpStream) {
+        self.conns.insert(conn, writer);
+    }
+
+    /// Release a cleanly-disconnected connection's bookkeeping.
+    fn forget(&mut self, conn: u64) {
+        self.conns.remove(&conn);
+        if self.owned.remove(&conn).is_some() {
+            self.owner.retain(|_, c| *c != conn);
+        }
+    }
+
+    /// Sever a protocol-violating (or dead) connection: log, close the
+    /// socket, and release every session bound to it.
+    fn drop_conn(&mut self, conn: u64, reason: &str) {
+        eprintln!("net: dropping connection {conn}: {reason}");
+        if let Some(s) = self.conns.remove(&conn) {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if self.owned.remove(&conn).is_some() {
+            self.owner.retain(|_, c| *c != conn);
+        }
+    }
+
+    /// Did `conn` establish `session` with a `Hello`?
+    fn owns(&self, conn: u64, session: u64) -> bool {
+        self.owner.get(&session) == Some(&conn)
+    }
+
+    /// Bind `sid` to `conn` per the trust rules: idempotent for the
+    /// holder, rejected while another *live* connection holds it, taken
+    /// over from a connection known to be gone, and capped per
+    /// connection so `owner` cannot grow without bound.
+    fn bind(&mut self, conn: u64, sid: u64, cap: usize) -> Result<(), String> {
+        match self.owner.get(&sid).copied() {
+            Some(c) if c == conn => Ok(()),
+            Some(c) if self.conns.contains_key(&c) => {
+                Err("Hello for a session bound to another live connection".to_string())
+            }
+            stale => {
+                if let Some(c) = stale {
+                    // the previous holder is gone; release its slot
+                    if let Some(n) = self.owned.get_mut(&c) {
+                        *n = n.saturating_sub(1);
+                    }
+                }
+                let n = self.owned.entry(conn).or_insert(0);
+                if *n >= cap {
+                    return Err(format!("connection exceeded {cap} session bindings"));
+                }
+                *n += 1;
+                self.owner.insert(sid, conn);
+                Ok(())
+            }
+        }
+    }
+
+    /// Best-effort frame write; a failed write means the peer is dead, so
+    /// the connection is dropped and its session bindings released (the
+    /// user can re-establish them from a fresh connection).
+    fn send(&mut self, conn: u64, msg: &Message) {
+        let Some(s) = self.conns.get_mut(&conn) else { return };
         let buf = wire::encode_frame(0, msg);
         if s.write_all(&buf).is_err() {
-            conns.remove(&conn);
+            self.drop_conn(conn, "write failed");
+        }
+    }
+
+    /// Return each completed step's logits to the connection it arrived
+    /// on (consumes the steps — the logits rows move into the frames).
+    fn route_logits(&mut self, done: Vec<CompletedStep>) {
+        for step in done {
+            let msg = Message::Logits {
+                session: step.session,
+                pred: step.pred as u32,
+                logits: step.logits,
+            };
+            self.send(step.tag, &msg);
+        }
+    }
+
+    /// Shut down every remaining socket (teardown).
+    fn close_all(&mut self) {
+        for (_, s) in self.conns.drain() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
         }
     }
 }
 
-fn drop_protocol_violation(conns: &mut HashMap<u64, TcpStream>, conn: u64, got: usize, want: usize) {
-    eprintln!("net: connection {conn} sent a step of width {got} (net expects {want}); dropping");
-    if let Some(s) = conns.remove(&conn) {
-        let _ = s.shutdown(std::net::Shutdown::Both);
+/// Why a Step/StepLabeled frame is a protocol violation, if it is one:
+/// wrong input width, a label outside the class range (it would index the
+/// one-hot/loss rows out of bounds), or a session this connection never
+/// established with `Hello`.
+fn step_violation(
+    owns: bool,
+    got: usize,
+    nx: usize,
+    label: Option<u32>,
+    ny: usize,
+) -> Option<String> {
+    if got != nx {
+        return Some(format!("step of width {got} (net expects {nx})"));
     }
+    if let Some(l) = label {
+        if l as usize >= ny {
+            return Some(format!("label {l} out of range (net has {ny} classes)"));
+        }
+    }
+    if !owns {
+        return Some("step for a session this connection did not establish".to_string());
+    }
+    None
 }
 
 /// Convenience wrapper: bind, print nothing, serve until shutdown.

@@ -51,7 +51,9 @@ pub const FLAG_FLUSH: u8 = 0b10;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     /// Client handshake; the server replies `Ack{session id}` for the
-    /// given user key.
+    /// given user key (a keyed hash under the server's per-boot secret)
+    /// and binds that session to this connection — only the binding
+    /// connection may step it.
     Hello { user: u64 },
     /// One unlabeled timestep of `session`'s stream.
     Step { session: u64, x: Vec<f32> },

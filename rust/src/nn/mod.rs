@@ -57,6 +57,7 @@ impl SeqBatch {
     pub fn one_hot(&self, ny: usize) -> Mat {
         let mut y = Mat::zeros(self.b, ny);
         for (i, &l) in self.labels.iter().enumerate() {
+            assert!(l < ny, "label {l} out of range for {ny} classes (sample {i})");
             *y.at_mut(i, l) = 1.0;
         }
         y

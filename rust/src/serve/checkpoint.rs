@@ -7,7 +7,7 @@
 //!
 //! ```text
 //! magic    u32   "M2CK"
-//! version  u32   1
+//! version  u32   2
 //! len      u64   payload byte count
 //! payload  [len] sections below
 //! checksum u64   FNV-1a 64 over the payload
@@ -15,17 +15,22 @@
 //!
 //! Payload sections, in order: network shapes (nh, nx, nt, ny — refused
 //! on mismatch), model weights in artifact order (wh, uh, bh, wo, bo),
-//! the logical tick, deterministic serve metrics, batcher counters, the
-//! session store (touch counter, lifecycle stats, then every live slot in
-//! LRU order: id, ticks, history cursor, hidden state, history ring), and
-//! the online learner (counters, pending window, Box–Muller stream, 4-bit
-//! replay segments, reservoir + LFSR states).
+//! the logical tick, the session-id secret (v2 — the TCP frontend's
+//! per-boot key, persisted so restored sessions keep their ids),
+//! deterministic serve metrics, batcher counters, the session store
+//! (touch counter, lifecycle stats, then every live slot in LRU order:
+//! id, ticks, history cursor, hidden state, history ring), and the online
+//! learner (counters, pending window, Box–Muller stream, 4-bit replay
+//! segments, reservoir + LFSR states).
 //!
 //! Writes go to a temp file in the same directory followed by an atomic
-//! rename, so a crash mid-write can never destroy the previous good
-//! snapshot. Loads verify magic, version, length and checksum; any
-//! corruption makes [`try_restore`] report [`RestoreOutcome::Corrupt`]
-//! and the server boots fresh with a warning instead of dying.
+//! rename, with the temp file fsynced before the rename and the directory
+//! fsynced after it — so a crash (including power loss) mid-write can
+//! never destroy the previous good snapshot, and a completed rename is
+//! durable with its data. Loads verify magic, version, length and
+//! checksum; any corruption makes [`try_restore`] report
+//! [`RestoreOutcome::Corrupt`] and the server boots fresh with a warning
+//! instead of dying.
 //!
 //! A snapshot holds *state*, not configuration: restore assumes the
 //! server boots with the same run configuration (seed, shapes, serve
@@ -50,7 +55,7 @@ use super::online::LearnerState;
 use super::session::{SessionSnapshot, SessionStats};
 
 const MAGIC: u32 = u32::from_le_bytes(*b"M2CK");
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 /// Snapshot file name inside `--checkpoint-dir`.
 pub const SNAPSHOT_FILE: &str = "snapshot.m2ck";
 const TMP_FILE: &str = "snapshot.m2ck.tmp";
@@ -63,6 +68,7 @@ pub struct Snapshot {
     pub ny: usize,
     pub params: MiruParams,
     pub tick: u64,
+    pub session_secret: u64,
     pub metrics: ServeMetrics,
     pub batcher: BatcherStats,
     pub touch_counter: u64,
@@ -204,6 +210,8 @@ fn encode_payload(core: &ServeCore) -> Vec<u8> {
     w.f32s(&p.bo);
     // clock
     w.u64(core.tick);
+    // session-id key (the TCP frontend's per-boot secret)
+    w.u64(core.session_secret);
     // deterministic metrics (wall clock and latency samples are not state)
     w.u64(m.requests);
     w.u64(m.batches);
@@ -298,6 +306,7 @@ fn decode_payload(buf: &[u8]) -> Result<Snapshot> {
         bo,
     };
     let tick = r.u64()?;
+    let session_secret = r.u64()?;
     let mut metrics = ServeMetrics::default();
     metrics.requests = r.u64()?;
     metrics.batches = r.u64()?;
@@ -392,6 +401,7 @@ fn decode_payload(buf: &[u8]) -> Result<Snapshot> {
         ny,
         params,
         tick,
+        session_secret,
         metrics,
         batcher,
         touch_counter,
@@ -404,9 +414,12 @@ fn decode_payload(buf: &[u8]) -> Result<Snapshot> {
 // ------------------------------------------------------------------- file IO
 
 /// Serialize the core's durable state and atomically replace the snapshot
-/// in `dir` (write to temp + rename; a crash mid-write never destroys the
-/// previous good snapshot). Returns the snapshot path.
+/// in `dir`: write to a temp file, fsync it, rename it into place, then
+/// fsync the directory. The fsyncs matter — without them a power loss can
+/// make the rename durable while the file data is not, replacing the
+/// previous good snapshot with a corrupt one. Returns the snapshot path.
 pub fn save_checkpoint(core: &ServeCore, dir: &Path) -> Result<PathBuf> {
+    use std::io::Write as _;
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
     let payload = encode_payload(core);
@@ -418,9 +431,21 @@ pub fn save_checkpoint(core: &ServeCore, dir: &Path) -> Result<PathBuf> {
     file.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
     let tmp = dir.join(TMP_FILE);
     let path = dir.join(SNAPSHOT_FILE);
-    std::fs::write(&tmp, &file).with_context(|| format!("writing {}", tmp.display()))?;
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&file).with_context(|| format!("writing {}", tmp.display()))?;
+        // data must be on disk BEFORE the rename can be allowed to commit
+        f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+    }
     std::fs::rename(&tmp, &path)
         .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    // make the rename itself durable (directory metadata); directories
+    // cannot be opened on every platform, but where they can, a failing
+    // fsync is a real durability error
+    if let Ok(d) = std::fs::File::open(dir) {
+        d.sync_all().with_context(|| format!("fsyncing directory {}", dir.display()))?;
+    }
     Ok(path)
 }
 
@@ -496,6 +521,7 @@ pub fn try_restore(core: &mut ServeCore, dir: &Path) -> Result<RestoreOutcome> {
     }
     core.engine.restore_params(&snap.params)?;
     core.tick = snap.tick;
+    core.session_secret = snap.session_secret;
     let wall = core.metrics.wall;
     core.metrics = snap.metrics;
     core.metrics.wall = wall;

@@ -59,6 +59,11 @@ pub struct ServeCore {
     pub(crate) backend_name: String,
     pub(crate) max_batch: usize,
     pub(crate) tick: u64,
+    /// Key of the session-id space (see [`super::session_id_keyed`]).
+    /// Defaults to the public driver key; the TCP frontend overwrites it
+    /// with a random per-boot secret, and checkpoints persist it so
+    /// restored sessions keep their ids across restarts.
+    pub(crate) session_secret: u64,
     /// Copy each completed step's logits row into [`CompletedStep`].
     /// The TCP frontend needs them (they go back over the wire); the
     /// synthetic driver turns this off unless it records steps, keeping
@@ -87,8 +92,20 @@ impl ServeCore {
             backend_name: run.backend.clone(),
             max_batch: cfg.max_batch,
             tick: 0,
+            session_secret: super::session::DEFAULT_SESSION_SECRET,
             collect_logits: true,
         })
+    }
+
+    /// The key of this core's session-id space.
+    pub fn session_secret(&self) -> u64 {
+        self.session_secret
+    }
+
+    /// Re-key the session-id space (TCP frontend boot; restore overwrites
+    /// this with the checkpointed key so existing session ids stay valid).
+    pub fn set_session_secret(&mut self, secret: u64) {
+        self.session_secret = secret;
     }
 
     /// Toggle logits collection in completed steps (see `collect_logits`).

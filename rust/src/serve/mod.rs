@@ -56,5 +56,8 @@ pub use self::core::{CompletedStep, ServeCore};
 pub use driver::{run_serve, ServeOptions, ServeReport};
 pub use metrics::ServeMetrics;
 pub use online::{LearnerState, OnlineLearner};
-pub use session::{session_id_for_user, SessionSnapshot, SessionStats, SessionStore};
+pub use session::{
+    session_id_for_user, session_id_keyed, SessionSnapshot, SessionStats, SessionStore,
+    DEFAULT_SESSION_SECRET,
+};
 pub use workload::SyntheticWorkload;

@@ -17,11 +17,33 @@ use std::collections::BTreeMap;
 
 use crate::rng::SplitMix64;
 
-/// Deterministic session id for a synthetic user index: one SplitMix64
-/// mix, so ids are stable across runs, well spread, and collision-free
-/// for distinct users.
+/// The fixed key behind [`session_id_for_user`] — the *unkeyed* id space
+/// used by the in-process synthetic driver and the tests, where every
+/// participant is trusted. The TCP server never uses this key: it draws a
+/// random per-boot secret (persisted in checkpoints so restored sessions
+/// keep their ids) so clients cannot compute each other's session ids.
+pub const DEFAULT_SESSION_SECRET: u64 = 0x5E55_10E5_D00D_F00D;
+
+/// Keyed session id: two chained SplitMix64 mixes under independent
+/// subkeys derived from `secret`. Each mix is a bijection of its seed, so
+/// for any fixed secret ids stay well spread and collision-free for
+/// distinct users. A *single* mix would leak the key — its finalizer is
+/// publicly invertible, so one (user, id) pair recovers `user ^ secret` —
+/// which is why the second keyed round exists: inverting the outer mix
+/// yields a value still masked by the unknown inner subkey. This thwarts
+/// algebraic key recovery but is not a cryptographic PRF; the server's
+/// connection binding, not id secrecy alone, is the enforcement boundary.
+pub fn session_id_keyed(user: u64, secret: u64) -> u64 {
+    let mut ks = SplitMix64::new(secret);
+    let k1 = ks.next_u64();
+    let k2 = ks.next_u64();
+    SplitMix64::new(SplitMix64::new(user ^ k1).next_u64() ^ k2).next_u64()
+}
+
+/// Deterministic session id for a synthetic user index under the default
+/// (publicly known) key — the in-process driver's id space.
 pub fn session_id_for_user(user: u64) -> u64 {
-    SplitMix64::new(user ^ 0x5E55_10E5_D00D_F00D).next_u64()
+    session_id_keyed(user, DEFAULT_SESSION_SECRET)
 }
 
 /// Lifecycle counters, reported by `m2ru serve` and asserted by the

@@ -11,6 +11,7 @@
 //!    reference run bit-for-bit; corrupted snapshots fall back to a
 //!    fresh boot instead of dying.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 
 use m2ru::config::{NetConfig, RunConfig, ServeConfig};
@@ -47,6 +48,15 @@ fn tmp_dir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("m2ru_net_{}_{}", tag, std::process::id()));
     let _ = std::fs::remove_dir_all(&d);
     d
+}
+
+/// The in-process reference drives sessions in the public
+/// `session_id_for_user` id space, while the server issues ids keyed by
+/// its per-boot secret — returned to the client through `Hello`. This
+/// maps a reference session id back to its user index, so a test can
+/// compare against `ConnectReport::session_ids[user]`.
+fn ref_session_to_user(users: u64) -> HashMap<u64, u64> {
+    (0..users).map(|u| (session_id_for_user(u), u)).collect()
 }
 
 // ------------------------------------------------------------------ codec
@@ -114,10 +124,12 @@ fn loopback_logits_match_in_process_driver_bitwise() {
     let server_rep = server.join().unwrap().unwrap();
 
     assert_eq!(client_rep.completed.len(), reference.completed.len());
+    let to_user = ref_session_to_user(16);
     for (i, (got, want)) in
         client_rep.completed.iter().zip(reference.completed.iter()).enumerate()
     {
-        assert_eq!(got.0, want.session, "session mismatch at completion {i}");
+        let user = to_user[&want.session] as usize;
+        assert_eq!(got.0, client_rep.session_ids[user], "session mismatch at completion {i}");
         assert_eq!(got.1 as usize, want.pred, "prediction mismatch at completion {i}");
         assert_eq!(got.2, want.logits, "logits differ at completion {i} (must be bitwise)");
     }
@@ -183,9 +195,20 @@ fn kill_and_restart_resumes_sessions_bitwise() {
     assert!(snapshot_path.exists());
 
     // the snapshot holds every live session's hidden state, bitwise equal
-    // to the uninterrupted reference at the same point
+    // to the uninterrupted reference at the same point (session ids live
+    // in the server's secret-keyed space; map through the Hello-issued
+    // ids to compare)
+    let to_user = ref_session_to_user(16);
     let snap = read_snapshot(&dir).unwrap().expect("snapshot must parse");
-    assert_eq!(snap.sessions, mid_reference, "checkpointed sessions must be bitwise");
+    let expected_mid: Vec<_> = mid_reference
+        .iter()
+        .map(|s| {
+            let mut t = s.clone();
+            t.id = client1.session_ids[to_user[&s.id] as usize];
+            t
+        })
+        .collect();
+    assert_eq!(snap.sessions, expected_mid, "checkpointed sessions must be bitwise");
     assert!(!snap.sessions.is_empty());
 
     // ---- server life 2: restore, then w2 more requests ----
@@ -201,13 +224,17 @@ fn kill_and_restart_resumes_sessions_bitwise() {
     let client2 = run_connect(&c2).unwrap();
     let rep2 = server2.join().unwrap().unwrap();
     assert_eq!(rep2.restored_sessions, snap.sessions.len());
+    // the restored boot keeps the checkpointed session-id secret, so
+    // every session keeps its id across the restart
+    assert_eq!(client2.session_ids, client1.session_ids, "restart must not re-key sessions");
 
     // every logit across both lives matches the uninterrupted reference
+    let sids = client1.session_ids.clone();
     let mut net_logits: Vec<(u64, u32, Vec<f32>)> = client1.completed;
     net_logits.extend(client2.completed);
     assert_eq!(net_logits.len(), ref_log.len());
     for (i, (got, want)) in net_logits.iter().zip(ref_log.iter()).enumerate() {
-        assert_eq!(got.0, want.session, "session mismatch at {i}");
+        assert_eq!(got.0, sids[to_user[&want.session] as usize], "session mismatch at {i}");
         assert_eq!(got.2, want.logits, "restart broke logits at completion {i}");
     }
     // and the final deterministic signature is the uninterrupted one
@@ -246,7 +273,12 @@ fn synchronous_steps_and_stats_work_over_loopback() {
     let (addr, server) = spawn_server(serve_run(9));
     let mut client = m2ru::net::NetClient::connect(&addr).unwrap();
     let session = client.hello(1234).unwrap();
-    assert_eq!(session, session_id_for_user(1234));
+    assert_eq!(client.hello(1234).unwrap(), session, "Hello must be idempotent per connection");
+    assert_ne!(
+        session,
+        session_id_for_user(1234),
+        "session ids must not be computable without the server's boot secret"
+    );
     let nx = NetConfig::SMALL.nx;
     let (pred, logits) = client.step(session, vec![0.5; nx], None).unwrap();
     assert_eq!(logits.len(), NetConfig::SMALL.ny);
@@ -260,5 +292,66 @@ fn synchronous_steps_and_stats_work_over_loopback() {
     assert_eq!(total, 2);
     let rep = server.join().unwrap().unwrap();
     assert_eq!(rep.report.metrics.requests, 2);
+    assert_eq!(rep.report.metrics.labeled, 1);
+}
+
+// ------------------------------------------------- protocol enforcement
+
+#[test]
+fn cross_connection_session_tampering_is_rejected() {
+    let (addr, server) = spawn_server(serve_run(11));
+    let nx = NetConfig::SMALL.nx;
+    let mut alice = m2ru::net::NetClient::connect(&addr).unwrap();
+    let sid_a = alice.hello(1).unwrap();
+    let (_, logits) = alice.step(sid_a, vec![0.5; nx], None).unwrap();
+    assert_eq!(logits.len(), NetConfig::SMALL.ny);
+
+    // another connection cannot step Alice's session, even knowing its id
+    let mut mallory = m2ru::net::NetClient::connect(&addr).unwrap();
+    let _ = mallory.hello(2).unwrap();
+    assert!(
+        mallory.step(sid_a, vec![0.0; nx], None).is_err(),
+        "stepping an unestablished session must drop the connection"
+    );
+    // nor claim it with Hello while Alice's connection is live
+    let mut mallory2 = m2ru::net::NetClient::connect(&addr).unwrap();
+    assert!(mallory2.hello(1).is_err(), "re-binding a live session must be rejected");
+
+    // Alice's session advanced only by Alice's own steps
+    let (_, logits2) = alice.step(sid_a, vec![0.25; nx], None).unwrap();
+    assert_eq!(logits2.len(), NetConfig::SMALL.ny);
+    let _ = alice.shutdown_server().unwrap();
+    let rep = server.join().unwrap().unwrap();
+    assert_eq!(rep.report.metrics.requests, 2, "tampering steps must never reach the core");
+}
+
+#[test]
+fn out_of_range_label_drops_the_connection_not_the_server() {
+    let (addr, server) = spawn_server(serve_run(13));
+    let nx = NetConfig::SMALL.nx;
+    let ny = NetConfig::SMALL.ny as u32;
+    let mut bad = m2ru::net::NetClient::connect(&addr).unwrap();
+    let sid = bad.hello(1).unwrap();
+    // label == ny would index the one-hot/loss rows out of bounds; the
+    // serve thread must reject the frame, not panic or corrupt a row
+    assert!(bad.step(sid, vec![0.5; nx], Some(ny)).is_err());
+    assert!(
+        m2ru::net::NetClient::connect(&addr)
+            .and_then(|mut c| {
+                let s = c.hello(3)?;
+                c.step(s, vec![0.1; nx], Some(u32::MAX))
+            })
+            .is_err(),
+        "a huge label must be rejected too"
+    );
+
+    // the server keeps serving well-behaved clients afterwards
+    let mut ok = m2ru::net::NetClient::connect(&addr).unwrap();
+    let sid2 = ok.hello(2).unwrap();
+    let (_, logits) = ok.step(sid2, vec![0.5; nx], Some(ny - 1)).unwrap();
+    assert_eq!(logits.len(), ny as usize);
+    let _ = ok.shutdown_server().unwrap();
+    let rep = server.join().unwrap().unwrap();
+    assert_eq!(rep.report.metrics.requests, 1);
     assert_eq!(rep.report.metrics.labeled, 1);
 }
