@@ -39,8 +39,8 @@ use m2ru::rng::GaussianRng;
 use m2ru::net::{decode_frame, encode_frame, Message, FLAG_TICK};
 use m2ru::runtime::{ModelBundle, Runtime};
 use m2ru::serve::{
-    run_serve, save_checkpoint, session_id_for_user, DynamicBatcher, ServeCore, ServeOptions,
-    SessionStore, StepRequest, SyntheticWorkload,
+    run_serve, save_checkpoint, save_delta, session_id_for_user, DynamicBatcher, ServeCore,
+    ServeOptions, SessionStore, StepRequest, SyntheticWorkload,
 };
 
 /// One benchmark result, serialized to `results/BENCH_serve.json`.
@@ -298,9 +298,81 @@ fn main() -> anyhow::Result<()> {
         core.flush_all().unwrap();
         let dir = std::env::temp_dir().join(format!("m2ru_bench_ckpt_{}", std::process::id()));
         timeit(&mut recs, "checkpoint_write (pmnist100, 64 sessions)", 20, || {
-            save_checkpoint(&core, &dir).unwrap();
+            save_checkpoint(&mut core, &dir).unwrap();
         });
         let _ = std::fs::remove_dir_all(&dir);
+    }
+    if runs("snapshot_delta_write") {
+        // the incremental path: same serving shape as checkpoint_write,
+        // but each iteration dirties one 16-request wave and writes only
+        // the delta against the chain base — vs rewriting the full state
+        let mut run = RunConfig::default();
+        run.serve.max_batch = 16;
+        run.serve.update_every = 16;
+        let mut core = ServeCore::new(cfg, &run).unwrap();
+        let mut wl = SyntheticWorkload::new(&cfg, 64, 1);
+        for _ in 0..40 {
+            for _ in 0..16 {
+                let (u, x, label) = wl.next();
+                core.submit(session_id_for_user(u), x, label, 0);
+            }
+            core.drain_ready().unwrap();
+            core.advance_tick();
+        }
+        core.flush_all().unwrap();
+        let dir = std::env::temp_dir().join(format!("m2ru_bench_delta_{}", std::process::id()));
+        save_checkpoint(&mut core, &dir).unwrap(); // chain base
+        timeit(&mut recs, "snapshot_delta_write (16-req wave dirty)", 20, || {
+            for _ in 0..16 {
+                let (u, x, label) = wl.next();
+                core.submit(session_id_for_user(u), x, label, 0);
+            }
+            core.drain_ready().unwrap();
+            core.advance_tick();
+            save_delta(&mut core, &dir).unwrap();
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    if runs("commit_async_p99") {
+        // serve-loop latency during a commit burst: p99 over per-wave
+        // `drain_ready` calls, with ~500 µs of inter-wave frontend work
+        // (the open-loop arrival gap commits overlap into). The async
+        // pipeline enqueues commits and keeps dispatching; the `sync`
+        // baseline applies each commit inline on the serve thread.
+        let small = NetConfig::SMALL;
+        let mut p99_drain = |name: &str, sync: bool| {
+            let mut run = RunConfig::default();
+            run.serve = ServeConfig {
+                max_batch: 16,
+                max_wait: 2,
+                capacity: 64,
+                update_every: 8,
+                ..ServeConfig::default()
+            };
+            let mut core = ServeCore::new(small, &run).unwrap();
+            core.set_collect_logits(false);
+            core.set_commit_sync(sync);
+            let mut wl = SyntheticWorkload::new(&small, 32, 3);
+            let mut lat_ns: Vec<f64> = Vec::with_capacity(400);
+            for _ in 0..400 {
+                for _ in 0..16 {
+                    let (u, x, label) = wl.next();
+                    core.submit(session_id_for_user(u), x, label, 0);
+                }
+                let t = Instant::now();
+                core.drain_ready().unwrap();
+                lat_ns.push(t.elapsed().as_nanos() as f64);
+                core.advance_tick();
+                std::thread::sleep(std::time::Duration::from_micros(500));
+            }
+            core.sync_commits().unwrap();
+            lat_ns.sort_by(f64::total_cmp);
+            let p99 = lat_ns[(lat_ns.len() * 99 / 100).min(lat_ns.len() - 1)];
+            println!("{name:<46} {:>10.3} ms/p99-drain  (n=400 waves)", p99 / 1e6);
+            recs.push(BenchRecord { name: name.to_string(), iters: 400, ns_per_iter: p99 });
+        };
+        p99_drain("commit_async_p99 (small, update_every=8)", false);
+        p99_drain("commit_sync_p99 (inline-commit baseline)", true);
     }
     if runs("serve_e2e") {
         // whole serve loop: batcher + store + sharded stepping (workers=4,

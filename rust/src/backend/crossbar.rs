@@ -130,8 +130,11 @@ impl CrossbarBackend {
     /// [`ComputeBackend::forward`] and [`ComputeBackend::step_hidden`]
     /// route through here, so streaming and whole-sequence execution are
     /// bitwise-identical (crossbar reads are deterministic between
-    /// programming events).
-    fn step_with(&self, g_hidden: &Mat, vscale_h: f32, h: &Mat, xt: &Mat) -> Mat {
+    /// programming events). The bias registers come in with the crossbar
+    /// readout so a snapshot-driven step (`step_hidden_from` on another
+    /// instance's snapshot — the async-commit serve path) uses the
+    /// snapshot's biases, never this instance's possibly-stale ones.
+    fn step_with(&self, g_hidden: &Mat, bh: &[f32], vscale_h: f32, h: &Mat, xt: &Mat) -> Mat {
         let (lam, beta) = (self.hyper.lam, self.hyper.beta);
         let mut bh_scaled = h.clone();
         bh_scaled.scale(beta);
@@ -141,7 +144,7 @@ impl CrossbarBackend {
         for v in &mut acc.data {
             *v = adc_quantize(*v, self.adc_bits, vscale_h);
         }
-        acc.add_row_bias(&self.bh);
+        acc.add_row_bias(bh);
         let cand = acc.map(f32::tanh);
         let mut h_new = h.clone();
         h_new.scale(lam);
@@ -151,15 +154,15 @@ impl CrossbarBackend {
 
     /// Readout half of the datapath against an already-read output
     /// crossbar: digitized hidden state → analog VMM → ADC at `vscale_o`
-    /// → digital bias add.
-    fn readout_with(&self, wo: &Mat, vscale_o: f32, h: &Mat) -> Mat {
+    /// → digital bias add (bias registers passed in, as in `step_with`).
+    fn readout_with(&self, wo: &Mat, bo: &[f32], vscale_o: f32, h: &Mat) -> Mat {
         let mut hq = h.clone();
         self.digitize(&mut hq);
         let mut logits = hq.matmul(wo);
         for v in &mut logits.data {
             *v = adc_quantize(*v, self.adc_bits, vscale_o);
         }
-        logits.add_row_bias(&self.bo);
+        logits.add_row_bias(bo);
         logits
     }
 }
@@ -197,9 +200,9 @@ impl ComputeBackend for CrossbarBackend {
         let vscale_o = vscale_readout(&wo);
         let mut h = Mat::zeros(x.b, self.nh);
         for t in 0..x.nt {
-            h = self.step_with(&g_hidden, vscale_h, &h, &x.step(t));
+            h = self.step_with(&g_hidden, &self.bh, vscale_h, &h, &x.step(t));
         }
-        Ok(self.readout_with(&wo, vscale_o, &h))
+        Ok(self.readout_with(&wo, &self.bo, vscale_o, &h))
     }
 
     fn step_hidden(&self, h: &Mat, x: &Mat) -> Result<Mat> {
@@ -208,14 +211,14 @@ impl ComputeBackend for CrossbarBackend {
         ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
         let g_hidden = self.xbar_hidden.read_weights();
         let vscale_h = vscale_hidden(&g_hidden);
-        Ok(self.step_with(&g_hidden, vscale_h, h, x))
+        Ok(self.step_with(&g_hidden, &self.bh, vscale_h, h, x))
     }
 
     fn readout(&self, h: &Mat) -> Result<Mat> {
         ensure!(h.cols == self.nh, "readout nh {} != net nh {}", h.cols, self.nh);
         let wo = self.xbar_out.read_weights();
         let vscale_o = vscale_readout(&wo);
-        Ok(self.readout_with(&wo, vscale_o, h))
+        Ok(self.readout_with(&wo, &self.bo, vscale_o, h))
     }
 
     /// Snapshot variant: `p` is the `effective_params` readout, so
@@ -228,13 +231,13 @@ impl ComputeBackend for CrossbarBackend {
         ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
         let g_hidden = Mat::vcat(&p.wh, &p.uh);
         let vscale_h = vscale_hidden(&g_hidden);
-        Ok(self.step_with(&g_hidden, vscale_h, h, x))
+        Ok(self.step_with(&g_hidden, &p.bh, vscale_h, h, x))
     }
 
     fn readout_from(&self, p: &MiruParams, h: &Mat) -> Result<Mat> {
         ensure!(h.cols == self.nh, "readout nh {} != net nh {}", h.cols, self.nh);
         let vscale_o = vscale_readout(&p.wo);
-        Ok(self.readout_with(&p.wo, vscale_o, h))
+        Ok(self.readout_with(&p.wo, &p.bo, vscale_o, h))
     }
 
     /// Integrator voltages of one crossbar (pre-ADC), after WBS input
@@ -330,6 +333,42 @@ impl ComputeBackend for CrossbarBackend {
             hidden: self.xbar_hidden.column_write_counts(),
             readout: self.xbar_out.column_write_counts(),
         })
+    }
+
+    fn wear_state(&self) -> Option<super::WearState> {
+        Some(super::WearState {
+            hidden: self.xbar_hidden.write_counts(),
+            readout: self.xbar_out.write_counts(),
+            steps: self.programmer.steps,
+            writes: self.programmer.total.writes,
+            skipped: self.programmer.total.skipped,
+            delta_magnitude: self.programmer.total.delta_magnitude,
+        })
+    }
+
+    /// Overwrite per-device write counters and the Ziksa totals with the
+    /// checkpointed values. The `restore_params` reload that precedes
+    /// this call issued its own programming pulses; those are discarded
+    /// here on purpose — the restored run continues with exactly the
+    /// wear the snapshotted run had accumulated, so rationing and the
+    /// lifespan projection are kill/restart-invariant.
+    fn restore_wear(&mut self, w: &super::WearState) -> Result<()> {
+        ensure!(
+            w.hidden.len() == self.xbar_hidden.rows * self.xbar_hidden.cols
+                && w.readout.len() == self.xbar_out.rows * self.xbar_out.cols,
+            "wear record sizes ({}, {}) do not match crossbars ({}, {})",
+            w.hidden.len(),
+            w.readout.len(),
+            self.xbar_hidden.rows * self.xbar_hidden.cols,
+            self.xbar_out.rows * self.xbar_out.cols
+        );
+        self.xbar_hidden.restore_write_counts(&w.hidden);
+        self.xbar_out.restore_write_counts(&w.readout);
+        self.programmer.steps = w.steps;
+        self.programmer.total.writes = w.writes;
+        self.programmer.total.skipped = w.skipped;
+        self.programmer.total.delta_magnitude = w.delta_magnitude;
+        Ok(())
     }
 
     /// Mean per-device writes per committed update, projected through the

@@ -60,6 +60,28 @@ pub struct ColumnWear {
     pub readout: Vec<u64>,
 }
 
+/// The full durable wear record of a substrate: per-device write
+/// counters of both crossbars (row-major, hidden `(nx+nh)×nh` then
+/// readout `nh×ny`) plus the Ziksa programmer's cumulative totals.
+/// Serialized into serve snapshots so write rationing and the projected
+/// lifespan survive a kill/restart (DESIGN.md §9 used to document this
+/// as a gap). Substrates without wear accounting have none.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WearState {
+    /// Per-device writes of the stacked `[W_h; U_h]` crossbar.
+    pub hidden: Vec<u64>,
+    /// Per-device writes of the readout crossbar.
+    pub readout: Vec<u64>,
+    /// Ziksa update steps issued (2 per training commit).
+    pub steps: u64,
+    /// Cumulative devices programmed.
+    pub writes: u64,
+    /// Cumulative devices skipped (ζ-zeroed deltas).
+    pub skipped: u64,
+    /// Cumulative |Δw| applied (energy-model input).
+    pub delta_magnitude: f64,
+}
+
 /// Training hyper-parameters a backend applies internally (and that the
 /// multi-worker engine needs to finalize externally-merged gradients the
 /// same way).
@@ -238,6 +260,25 @@ pub trait ComputeBackend: Send + Sync {
     /// `None` on substrates without wear (digital weights never degrade).
     fn column_write_counts(&self) -> Option<ColumnWear> {
         None
+    }
+
+    /// The substrate's durable wear record (per-device write counters +
+    /// programmer totals), for checkpointing. `None` on substrates
+    /// without wear accounting.
+    fn wear_state(&self) -> Option<WearState> {
+        None
+    }
+
+    /// Overwrite the substrate's wear record from a checkpoint, so
+    /// rationing decisions and the lifespan projection continue exactly
+    /// where the snapshotted run stopped. Called *after*
+    /// [`ComputeBackend::restore_params`]: the reload's own programming
+    /// pulses are deliberately not double-counted — the restored
+    /// counters are the snapshot's, making a restarted run
+    /// wear-equivalent to the uninterrupted one. A no-op on substrates
+    /// without wear accounting.
+    fn restore_wear(&mut self, _w: &WearState) -> Result<()> {
+        Ok(())
     }
 
     /// Projected device lifespan in years at the paper's 1 kHz commit

@@ -1,0 +1,264 @@
+//! Shared little-endian byte codec: the one bounds-checked cursor pair
+//! behind every binary format in the crate.
+//!
+//! Two independent hand-rolled copies of this logic used to live in
+//! `net::wire` (the TCP frame payloads) and `serve::checkpoint` (the
+//! snapshot files). Both formats need *identical* truncation semantics —
+//! a hostile or truncated length field must error before it can reach
+//! the allocator, and must never panic — and two copies of that rule can
+//! drift apart. This module is the single implementation both layers
+//! use, so a bounds-handling fix lands everywhere at once:
+//!
+//! * [`LeWriter`] — append-only little-endian byte sink.
+//! * [`LeReader`] — bounds-checked cursor over a byte slice; every
+//!   `take` is length-checked with subtraction (never multiplication, so
+//!   nothing can overflow on 32-bit targets), counted vectors verify the
+//!   declared element count against the remaining bytes *before*
+//!   allocating, and [`LeReader::done`] rejects trailing bytes.
+//!
+//! All integers are little-endian, matching the wire protocol
+//! (DESIGN.md §9) and the snapshot format (DESIGN.md §10).
+
+use anyhow::{ensure, Result};
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub struct LeWriter {
+    buf: Vec<u8>,
+}
+
+impl LeWriter {
+    pub fn new() -> LeWriter {
+        LeWriter { buf: Vec::new() }
+    }
+
+    /// Writer over an existing buffer (prefix already laid down).
+    pub fn from_vec(buf: Vec<u8>) -> LeWriter {
+        LeWriter { buf }
+    }
+
+    /// The encoded bytes.
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, no length prefix.
+    pub fn raw(&mut self, vs: &[u8]) {
+        self.buf.extend_from_slice(vs);
+    }
+
+    /// `u32` count followed by the f32 values.
+    pub fn f32s(&mut self, vs: &[f32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f32(v);
+        }
+    }
+
+    /// `u32` count followed by the u64 values.
+    pub fn u64s(&mut self, vs: &[u64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u64(v);
+        }
+    }
+
+    /// `u32` count followed by the raw bytes.
+    pub fn bytes(&mut self, vs: &[u8]) {
+        self.u32(vs.len() as u32);
+        self.buf.extend_from_slice(vs);
+    }
+}
+
+/// Bounds-checked little-endian cursor over a byte slice. Malformed
+/// input — truncation, counted vectors past the end, trailing bytes —
+/// decodes to an error, never a panic or an unbounded allocation.
+pub struct LeReader<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> LeReader<'a> {
+    pub fn new(b: &'a [u8]) -> LeReader<'a> {
+        LeReader { b, p: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.p
+    }
+
+    /// Take `n` raw bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.b.len() - self.p >= n, "truncated at byte {}", self.p);
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let s = self.take(8)?;
+        Ok(f64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    /// Counted f32 vector. The declared count is validated against the
+    /// remaining bytes with a division (a `n * 4` product could wrap on
+    /// 32-bit targets) before any allocation happens.
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        ensure!((self.b.len() - self.p) / 4 >= n, "truncated at byte {}", self.p);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Counted u64 vector, count validated before allocation.
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        ensure!((self.b.len() - self.p) / 8 >= n, "truncated at byte {}", self.p);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    /// Counted raw byte vector.
+    pub fn byte_vec(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    /// Assert the whole input was consumed (no trailing bytes).
+    pub fn done(&self) -> Result<()> {
+        ensure!(self.p == self.b.len(), "{} trailing bytes", self.b.len() - self.p);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_every_primitive() {
+        let mut w = LeWriter::new();
+        w.u8(7);
+        w.u16(0xBEEF);
+        w.u32(0xDEAD_BEEF);
+        w.u64(0x0123_4567_89AB_CDEF);
+        w.f32(-1.5);
+        w.f64(std::f64::consts::PI);
+        w.f32s(&[0.25, -0.5]);
+        w.u64s(&[1, 2, 3]);
+        w.bytes(b"abc");
+        let buf = w.into_vec();
+        let mut r = LeReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xBEEF);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), 0x0123_4567_89AB_CDEF);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.f32s().unwrap(), vec![0.25, -0.5]);
+        assert_eq!(r.u64s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.byte_vec().unwrap(), b"abc".to_vec());
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncation_errors_never_panic() {
+        let mut w = LeWriter::new();
+        w.f32s(&[1.0, 2.0, 3.0]);
+        let buf = w.into_vec();
+        for cut in 0..buf.len() {
+            let mut r = LeReader::new(&buf[..cut]);
+            assert!(r.f32s().is_err(), "cut at {cut} must error");
+        }
+    }
+
+    #[test]
+    fn hostile_count_rejected_before_allocation() {
+        // a count claiming 1 G floats over a 4-byte body must be rejected
+        // by the remaining-bytes check, not by the allocator
+        let mut w = LeWriter::new();
+        w.u32(1 << 30);
+        w.u32(0);
+        let buf = w.into_vec();
+        let mut r = LeReader::new(&buf);
+        assert!(r.f32s().unwrap_err().to_string().contains("truncated"));
+        let mut r2 = LeReader::new(&buf);
+        assert!(r2.u64s().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = LeWriter::new();
+        w.u32(5);
+        w.u8(0);
+        let buf = w.into_vec();
+        let mut r = LeReader::new(&buf);
+        r.u32().unwrap();
+        assert!(r.done().unwrap_err().to_string().contains("trailing"));
+        assert_eq!(r.remaining(), 1);
+    }
+}

@@ -71,6 +71,11 @@ pub struct ServeConfig {
     /// exceed `wear_ratio ×` the column mean skip the commit's programming
     /// pulses (0 disables; only substrates with wear accounting ration).
     pub wear_ratio: f32,
+    /// Bounded depth of the serve-loop → committer-thread job queue
+    /// (finalized training windows + snapshot writes). A serve loop
+    /// outrunning its committer blocks on enqueue — back-pressure, not
+    /// unbounded buffering.
+    pub commit_queue_depth: usize,
 }
 
 /// Network transport and durability policy of the TCP serving frontend
@@ -99,6 +104,39 @@ pub struct TransportConfig {
     /// clock). Required > 0 when `client_admin` is off, since nothing
     /// else would advance batching, TTL expiry or checkpoint cadence.
     pub tick_ms: u64,
+    /// Frames buffered per connection between the serve thread and that
+    /// connection's writer thread. A peer that stops reading fills its
+    /// own outbox and is dropped — it never delays other clients.
+    pub outbox_depth: usize,
+    /// Every Nth snapshot is a full rewrite; the rest are incremental
+    /// deltas against it (1 = always full, i.e. deltas off).
+    pub snapshot_full_every: u64,
+    /// Snapshot durability point: `always` fsyncs every snapshot file
+    /// (and the directory), `full` fsyncs only full snapshots (a crash
+    /// may lose the delta tail, never the full baseline), `never`
+    /// trusts the OS cache (renames stay atomic — no torn files).
+    pub fsync_policy: String,
+}
+
+/// Parsed `[net] fsync_policy` (see [`TransportConfig::fsync`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    Always,
+    FullOnly,
+    Never,
+}
+
+impl FsyncPolicy {
+    pub fn parse(s: &str) -> Result<FsyncPolicy> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "full" => Ok(FsyncPolicy::FullOnly),
+            "never" => Ok(FsyncPolicy::Never),
+            other => anyhow::bail!(
+                "net.fsync_policy must be `always`, `full` or `never` (got `{other}`)"
+            ),
+        }
+    }
 }
 
 impl Default for TransportConfig {
@@ -110,6 +148,9 @@ impl Default for TransportConfig {
             checkpoint_every: 0,
             client_admin: true,
             tick_ms: 0,
+            outbox_depth: 64,
+            snapshot_full_every: 8,
+            fsync_policy: "always".to_string(),
         }
     }
 }
@@ -117,11 +158,19 @@ impl Default for TransportConfig {
 impl TransportConfig {
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(self.queue_depth >= 1, "net.queue_depth must be >= 1");
+        anyhow::ensure!(self.outbox_depth >= 1, "net.outbox_depth must be >= 1");
+        anyhow::ensure!(self.snapshot_full_every >= 1, "net.snapshot_full_every must be >= 1");
+        let _ = self.fsync()?;
         anyhow::ensure!(
             self.client_admin || self.tick_ms >= 1,
             "net.client_admin = false needs net.tick_ms >= 1 (something must drive the clock)"
         );
         Ok(())
+    }
+
+    /// The parsed fsync policy (validated by [`TransportConfig::validate`]).
+    pub fn fsync(&self) -> Result<FsyncPolicy> {
+        FsyncPolicy::parse(&self.fsync_policy)
     }
 }
 
@@ -136,6 +185,7 @@ impl Default for ServeConfig {
             replay_cap: 256,
             replay_mix: 0.5,
             wear_ratio: 4.0,
+            commit_queue_depth: 4,
         }
     }
 }
@@ -156,6 +206,7 @@ impl ServeConfig {
             self.wear_ratio == 0.0 || self.wear_ratio >= 1.0,
             "serve.wear_ratio must be 0 (off) or >= 1 (columns above ratio x mean writes ration)"
         );
+        anyhow::ensure!(self.commit_queue_depth >= 1, "serve.commit_queue_depth must be >= 1");
         Ok(())
     }
 }
@@ -223,6 +274,7 @@ impl RunConfig {
                 "serve.replay_cap" => self.serve.replay_cap = iget()?,
                 "serve.replay_mix" => self.serve.replay_mix = fget()? as f32,
                 "serve.wear_ratio" => self.serve.wear_ratio = fget()? as f32,
+                "serve.commit_queue_depth" => self.serve.commit_queue_depth = iget()?,
                 "net.listen" => {
                     self.net.listen =
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
@@ -237,6 +289,12 @@ impl RunConfig {
                     self.net.client_admin = v.as_bool().context("net.client_admin: bool")?;
                 }
                 "net.tick_ms" => self.net.tick_ms = iget()? as u64,
+                "net.outbox_depth" => self.net.outbox_depth = iget()?,
+                "net.snapshot_full_every" => self.net.snapshot_full_every = iget()? as u64,
+                "net.fsync_policy" => {
+                    self.net.fsync_policy =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -365,6 +423,37 @@ mod tests {
         cfg.apply(&ok).unwrap();
         assert!(!cfg.net.client_admin);
         assert_eq!(cfg.net.tick_ms, 20);
+    }
+
+    #[test]
+    fn async_serve_and_snapshot_keys_from_toml() {
+        let map = parse_toml(
+            "[serve]\ncommit_queue_depth = 2\n[net]\noutbox_depth = 16\nsnapshot_full_every = 4\nfsync_policy = \"full\"\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.serve.commit_queue_depth, 2);
+        assert_eq!(cfg.net.outbox_depth, 16);
+        assert_eq!(cfg.net.snapshot_full_every, 4);
+        assert_eq!(cfg.net.fsync().unwrap(), FsyncPolicy::FullOnly);
+        // invalid values are rejected at validation time
+        let bad = parse_toml("[serve]\ncommit_queue_depth = 0\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
+        let bad = parse_toml("[net]\noutbox_depth = 0\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
+        let bad = parse_toml("[net]\nsnapshot_full_every = 0\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
+        let bad = parse_toml("[net]\nfsync_policy = \"sometimes\"\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
+        // defaults parse every policy value
+        for (s, want) in [
+            ("always", FsyncPolicy::Always),
+            ("full", FsyncPolicy::FullOnly),
+            ("never", FsyncPolicy::Never),
+        ] {
+            assert_eq!(FsyncPolicy::parse(s).unwrap(), want);
+        }
     }
 
     #[test]

@@ -108,12 +108,21 @@ impl ParallelEngine {
     /// eval/train sharding. The step math is row-independent, so the
     /// merged result is identical for every worker count.
     pub fn step_sessions(&self, h: &Mat, x: &Mat) -> Result<(Mat, Mat)> {
+        self.step_sessions_at(&self.backend.effective_params(), h, x)
+    }
+
+    /// [`ParallelEngine::step_sessions`] against a caller-supplied weight
+    /// snapshot — the async-commit serve path: the serve loop steps
+    /// against the atomically swapped immutable snapshot published by
+    /// the committer thread, never reading this engine's own (stale)
+    /// substrate. Bitwise-identical to `step_sessions` when `snapshot`
+    /// equals this backend's effective weights.
+    pub fn step_sessions_at(&self, snapshot: &MiruParams, h: &Mat, x: &Mat) -> Result<(Mat, Mat)> {
         anyhow::ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
         let b = h.rows;
-        let snapshot = self.backend.effective_params();
         if !self.use_sharding(b) {
-            let hn = self.backend.step_hidden_from(&snapshot, h, x)?;
-            let logits = self.backend.readout_from(&snapshot, &hn)?;
+            let hn = self.backend.step_hidden_from(snapshot, h, x)?;
+            let logits = self.backend.readout_from(snapshot, &hn)?;
             return Ok((hn, logits));
         }
         let shards: Vec<(Mat, Mat)> = Self::shard_ranges(b, self.workers)
@@ -122,7 +131,6 @@ impl ParallelEngine {
             .collect();
         let results: Vec<Result<(Mat, Mat)>> = std::thread::scope(|s| {
             let backend: &dyn ComputeBackend = &*self.backend;
-            let snapshot = &snapshot;
             let handles: Vec<_> = shards
                 .iter()
                 .map(|(hs, xs)| {
@@ -194,6 +202,13 @@ impl ParallelEngine {
     pub fn restore_params(&mut self, p: &MiruParams) -> Result<()> {
         self.forks_stale = true;
         self.backend.restore_params(p)
+    }
+
+    /// Overwrite the substrate's wear record from a checkpoint (see
+    /// [`ComputeBackend::restore_wear`]); called after `restore_params`
+    /// so the reload's own programming pulses are not double-counted.
+    pub fn restore_wear(&mut self, w: &crate::backend::WearState) -> Result<()> {
+        self.backend.restore_wear(w)
     }
 
     /// Shutdown/drain hook: release the cached per-worker backend forks

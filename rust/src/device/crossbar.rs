@@ -110,6 +110,20 @@ impl DifferentialCrossbar {
         self.devices.iter().map(|d| d.writes).collect()
     }
 
+    /// Overwrite every device's write counter (row-major, checkpoint
+    /// restore). Elasticity follows the endurance model: a restored
+    /// counter beyond the endurance limit re-freezes its device, exactly
+    /// as continued programming would have ([`Memristor::program`]
+    /// freezes once `writes > endurance`).
+    pub fn restore_write_counts(&mut self, counts: &[u64]) {
+        assert_eq!(counts.len(), self.devices.len(), "wear record size mismatch");
+        let endurance = self.params.endurance;
+        for (d, &w) in self.devices.iter_mut().zip(counts) {
+            d.writes = w;
+            d.frozen = w > endurance;
+        }
+    }
+
     /// Cumulative writes per bitline column (summed over the column's
     /// devices) — the wear signal the serve-path write-rationing policy
     /// consults before each online commit.

@@ -21,6 +21,7 @@
 //! | module        | paper subsystem |
 //! |---------------|-----------------|
 //! | [`rng`]       | xorshift sampler core, LFSR of the stochastic quantizer |
+//! | [`codec`]     | shared bounds-checked little-endian codec (wire frames + snapshots) |
 //! | [`linalg`]    | dense matrix substrate (blocked matmul serving kernel) |
 //! | [`nn`]        | MiRU Eqs. (1)–(3), DFA Algorithm 1, K-WTA ζ, Adam baseline |
 //! | [`quant`]     | WBS input digitization, ADC model, replay quantizers |
@@ -40,6 +41,7 @@
 
 pub mod backend;
 pub mod cli;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -63,14 +63,23 @@ SUBCOMMANDS
       --replay-cap N --replay-mix F   online replay reservoir / mix      [256 / 0.5]
       --wear-ratio F        ration commit writes to columns above F x
                             mean device wear (0=off; crossbar only)      [4.0]
+      --commit-queue-depth N  bounded serve->committer job queue (async
+                            weight commits + snapshot writes)            [4]
       --listen ADDR         serve real clients over TCP instead of the
                             synthetic driver (host:port; port 0 = auto).
                             Prints `listening on ADDR`, runs until a
                             client sends Shutdown (see `connect`)
-      --checkpoint-dir DIR  durable sessions: restore snapshot on boot,
-                            write on shutdown (and every --checkpoint-every
-                            T ticks); kill/restart resumes every session
+      --checkpoint-dir DIR  durable sessions: restore snapshot chain on
+                            boot, write on shutdown (and every
+                            --checkpoint-every T ticks); kill/restart
+                            resumes every session
+      --snapshot-full-every N  every Nth snapshot is a full rewrite, the
+                            rest are incremental deltas (1 = always full) [8]
+      --fsync-policy P      always|full|never — which snapshot files are
+                            fsynced before they count as durable        [always]
       --queue-depth N       bounded reader->serve queue (back-pressure)   [256]
+      --outbox-depth N      per-connection response outbox; a slow client
+                            fills its own and is dropped                  [64]
       --config FILE --seed N --lr F --lam F --beta F
   loadgen                   closed-loop load generator (same flags as serve)
       --concurrency C       outstanding-request target                   [4*max-batch]
@@ -274,6 +283,8 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
     run.serve.replay_cap = args.get_parse("replay-cap", run.serve.replay_cap)?;
     run.serve.replay_mix = args.get_parse("replay-mix", run.serve.replay_mix)?;
     run.serve.wear_ratio = args.get_parse("wear-ratio", run.serve.wear_ratio)?;
+    run.serve.commit_queue_depth =
+        args.get_parse("commit-queue-depth", run.serve.commit_queue_depth)?;
     if let Some(listen) = args.get_opt("listen") {
         run.net.listen = listen;
     }
@@ -281,7 +292,13 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
         run.net.checkpoint_dir = dir;
     }
     run.net.checkpoint_every = args.get_parse("checkpoint-every", run.net.checkpoint_every)?;
+    run.net.snapshot_full_every =
+        args.get_parse("snapshot-full-every", run.net.snapshot_full_every)?;
+    if let Some(policy) = args.get_opt("fsync-policy") {
+        run.net.fsync_policy = policy;
+    }
     run.net.queue_depth = args.get_parse("queue-depth", run.net.queue_depth)?;
+    run.net.outbox_depth = args.get_parse("outbox-depth", run.net.outbox_depth)?;
     run.validate()?;
 
     // transport-backed event loop: serve real clients over TCP

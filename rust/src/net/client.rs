@@ -2,10 +2,14 @@
 //! closed-loop load generator behind `m2ru connect`.
 //!
 //! The client splits its socket: the calling thread writes frames, a
-//! reader thread drains responses into a channel. That makes pipelined
-//! waves deadlock-free (the server's writes are always consumed, so its
-//! serve thread never blocks on a full socket while the client is still
-//! writing) and keeps the synchronous request/response helpers trivial.
+//! reader thread drains responses into a channel. Keeping the responses
+//! drained matters beyond convenience: the server hands each
+//! connection's responses to a writer thread with a *bounded* outbox
+//! (`net.outbox_depth`), and a client that stops reading eventually
+//! jams that writer and is dropped as a slow consumer — by design, so
+//! one stalled peer cannot delay anyone else. A `NetClient` that keeps
+//! its reader alive is never that peer, and pipelined waves stay
+//! deadlock-free.
 //!
 //! [`run_connect`] replays the synthetic driver's admission schedule
 //! over the wire: `arrivals` steps per wave, `FLAG_TICK` on each wave's

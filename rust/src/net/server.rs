@@ -1,5 +1,5 @@
 //! TCP serving frontend: a multi-client accept loop feeding one
-//! deterministic serve thread over a bounded channel (DESIGN.md §9).
+//! deterministic serve thread over a bounded channel (DESIGN.md §9–§10).
 //!
 //! ## Threading
 //!
@@ -11,14 +11,23 @@
 //!                                   │
 //!                                   ▼
 //!                   serve thread: ServeCore (store/batcher/learner)
-//!                                   │  writes Logits/Ack/Stats frames
-//!                                   ▼
-//!                    per-connection cloned TcpStream writers
+//!                    │ commits+snapshots       │ encoded frames
+//!                    ▼                         ▼
+//!            committer thread        per-connection writer threads
+//!            (owns the weights)      (bounded outbox each)
 //! ```
 //!
 //! Readers block when the serve loop falls behind (`net.queue_depth`
 //! frames in flight), which propagates back-pressure to clients through
 //! TCP flow control instead of buffering unboundedly.
+//!
+//! The serve thread never touches a socket, the weights, or the disk:
+//! responses are queued (non-blocking) to one **writer thread per
+//! connection** with a bounded outbox of `net.outbox_depth` frames — a
+//! stalled or dead peer fills its own outbox and is dropped, without
+//! adding a microsecond to any other client's latency — while weight
+//! commits and durable snapshots run on the committer thread inside
+//! [`ServeCore`] (see `serve::commit`).
 //!
 //! ## Determinism
 //!
@@ -63,20 +72,20 @@
 //! logical clock (batching, TTL expiry, checkpoint cadence) instead.
 
 use std::collections::HashMap;
-use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::{NetConfig, RunConfig};
 use crate::serve::{
-    save_checkpoint, session_id_keyed, try_restore, CompletedStep, RestoreOutcome, ServeCore,
-    ServeReport,
+    session_id_keyed, try_restore, CompletedStep, RestoreOutcome, ServeCore, ServeReport,
+    SnapshotPolicy,
 };
 
 use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
@@ -116,10 +125,22 @@ pub struct NetServeReport {
 /// Events the connection threads (and the optional ticker) feed the
 /// serve thread.
 enum Event {
-    Connected { conn: u64, writer: TcpStream },
+    Connected {
+        conn: u64,
+        /// Control handle on the socket (shutdown on drop/violation).
+        ctl: TcpStream,
+        /// Bounded outbox feeding the connection's writer thread.
+        outbox: SyncSender<Vec<u8>>,
+        /// The writer thread, joined at teardown.
+        writer: JoinHandle<()>,
+    },
     Frame { conn: u64, frame: Frame },
     Disconnected { conn: u64 },
     Malformed { conn: u64, error: String },
+    /// The connection's writer thread hit a socket write error (dead or
+    /// stalled peer): the connection must be *severed*, not just
+    /// forgotten — its reader may still be alive on the open socket.
+    WriterFailed { conn: u64 },
     /// Server-driven clock pulse (`net.tick_ms` mode).
     Tick,
 }
@@ -169,10 +190,13 @@ impl NetServer {
         let mut restored = false;
         if let Some(dir) = &ckpt_dir {
             match try_restore(&mut core, dir)? {
-                RestoreOutcome::Restored { sessions, tick } => {
+                RestoreOutcome::Restored { sessions, tick, deltas } => {
                     restored_sessions = sessions;
                     restored = true;
-                    eprintln!("restored {sessions} session(s) at tick {tick} from {}", dir.display());
+                    eprintln!(
+                        "restored {sessions} session(s) at tick {tick} ({deltas} delta snapshot(s) applied) from {}",
+                        dir.display()
+                    );
                 }
                 RestoreOutcome::Corrupt { error } => {
                     eprintln!("warning: ignoring corrupt checkpoint ({error}); booting fresh");
@@ -190,7 +214,12 @@ impl NetServer {
         // acceptor + per-connection readers feed one bounded channel
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<Event>(opts.run.net.queue_depth.max(1));
-        let acceptor = spawn_acceptor(listener.try_clone()?, tx.clone(), stop.clone());
+        let acceptor = spawn_acceptor(
+            listener.try_clone()?,
+            tx.clone(),
+            stop.clone(),
+            opts.run.net.outbox_depth.max(1),
+        );
         if opts.run.net.tick_ms > 0 {
             // wall-clock tick source (required when client_admin is off);
             // dies on its own once the receiver is gone — never joined
@@ -217,15 +246,19 @@ impl NetServer {
         // bindings — bounds the owner map under a Hello flood
         let bind_cap = opts.run.serve.capacity;
         let checkpoint_every = opts.run.net.checkpoint_every;
+        let policy = SnapshotPolicy::from_net(&opts.run.net)?;
         let serve_result = (|| -> Result<()> {
             while let Ok(ev) = rx.recv() {
                 match ev {
-                    Event::Connected { conn, writer } => {
-                        table.connected(conn, writer);
+                    Event::Connected { conn, ctl, outbox, writer } => {
+                        table.connected(conn, ctl, outbox, writer);
                         total_conns += 1;
                     }
                     Event::Disconnected { conn } => {
                         table.forget(conn);
+                    }
+                    Event::WriterFailed { conn } => {
+                        table.drop_conn(conn, "response write failed (dead or stalled peer)");
                     }
                     Event::Malformed { conn, error } => {
                         table.drop_conn(conn, &error);
@@ -237,7 +270,7 @@ impl NetServer {
                         core.advance_tick();
                         if checkpoint_every > 0 && core.tick() % checkpoint_every == 0 {
                             if let Some(dir) = &ckpt_dir {
-                                save_checkpoint(&core, dir)?;
+                                core.snapshot_async(dir, &policy)?;
                             }
                         }
                     }
@@ -289,8 +322,8 @@ impl NetServer {
                                 }
                             }
                             Message::Stats { .. } => {
-                                let text =
-                                    core.report(core.store().len()).lines().join("\n");
+                                let sessions = core.store().len();
+                                let text = core.report(sessions)?.lines().join("\n");
                                 table.send(conn, &Message::Stats { text });
                             }
                             Message::Shutdown => {
@@ -321,7 +354,7 @@ impl NetServer {
                             core.advance_tick();
                             if checkpoint_every > 0 && core.tick() % checkpoint_every == 0 {
                                 if let Some(dir) = &ckpt_dir {
-                                    save_checkpoint(&core, dir)?;
+                                    core.snapshot_async(dir, &policy)?;
                                 }
                             }
                         }
@@ -366,26 +399,55 @@ impl NetServer {
         if woke {
             let _ = acceptor.join();
         }
-        // closing the write halves unblocks client readers
+        // closing the write halves unblocks client readers (and joins
+        // every per-connection writer thread)
         table.close_all();
         serve_result?;
 
         core.set_wall(start.elapsed());
         core.drain_engine();
+        // queue the final snapshot, then stop the committer — `finish`
+        // completes every queued job (commits and snapshot writes) and
+        // surfaces any write failure before we report success
         let checkpoint_path = match &ckpt_dir {
-            Some(dir) => Some(save_checkpoint(&core, dir)?),
-            None => None,
+            Some(dir) => {
+                let planned = core.snapshot_async(dir, &policy)?;
+                core.finish()?;
+                Some(planned)
+            }
+            None => {
+                core.finish()?;
+                None
+            }
         };
-        let report = core.report(core.store().len());
+        let sessions = core.store().len();
+        let report = core.report(sessions)?;
         Ok(NetServeReport { report, connections: total_conns, checkpoint_path, restored_sessions })
     }
 }
 
-/// Accept connections until stopped; one reader thread per connection.
+/// The per-connection writer thread: drain the bounded outbox onto the
+/// socket. Exits when the outbox closes (connection forgotten/dropped)
+/// or a write fails (dead peer — reported so the serve thread releases
+/// the connection's session bindings).
+fn writer_loop(conn: u64, mut sock: TcpStream, outbox: Receiver<Vec<u8>>, tx: SyncSender<Event>) {
+    use std::io::Write as _;
+    for buf in outbox {
+        if sock.write_all(&buf).is_err() {
+            // best-effort: at teardown the serve thread is gone
+            let _ = tx.send(Event::WriterFailed { conn });
+            return;
+        }
+    }
+}
+
+/// Accept connections until stopped; one reader thread and one writer
+/// thread (with a bounded `outbox_depth`-frame outbox) per connection.
 fn spawn_acceptor(
     listener: TcpListener,
     tx: SyncSender<Event>,
     stop: Arc<AtomicBool>,
+    outbox_depth: usize,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let mut next_conn: u64 = 1;
@@ -400,15 +462,19 @@ fn spawn_acceptor(
             let _ = stream.set_nodelay(true);
             let conn = next_conn;
             next_conn += 1;
-            let writer = match stream.try_clone() {
-                Ok(w) => w,
-                Err(_) => continue,
+            let (ctl, wsock) = match (stream.try_clone(), stream.try_clone()) {
+                (Ok(a), Ok(b)) => (a, b),
+                _ => continue,
             };
-            // bounded writes: a client that stops reading its socket must
-            // not freeze the single serve thread — after the timeout the
-            // write errors and the connection is dropped
-            let _ = writer.set_write_timeout(Some(std::time::Duration::from_secs(10)));
-            if tx.send(Event::Connected { conn, writer }).is_err() {
+            // backstop only: the serve thread never writes, but the
+            // writer thread must not hang forever on a half-dead peer —
+            // after the timeout its write errors and the connection dies
+            let _ = wsock.set_write_timeout(Some(std::time::Duration::from_secs(10)));
+            let (obx_tx, obx_rx) = sync_channel::<Vec<u8>>(outbox_depth);
+            let writer_tx = tx.clone();
+            let writer =
+                std::thread::spawn(move || writer_loop(conn, wsock, obx_rx, writer_tx));
+            if tx.send(Event::Connected { conn, ctl, outbox: obx_tx, writer }).is_err() {
                 return;
             }
             let reader_tx = tx.clone();
@@ -434,41 +500,68 @@ fn spawn_acceptor(
     })
 }
 
+/// One live connection's serve-side handle: the control socket (for
+/// shutdowns), the bounded outbox into its writer thread, and the
+/// writer's join handle.
+struct ConnEntry {
+    ctl: TcpStream,
+    outbox: SyncSender<Vec<u8>>,
+    writer: JoinHandle<()>,
+}
+
 /// Live connections and their session bindings, kept consistent as one
 /// unit: every path that loses a connection — clean disconnect, protocol
-/// violation, failed write to a dead peer — also releases the sessions it
-/// had bound, so a reconnecting user can always re-`Hello` their session.
+/// violation, a full outbox or a dead peer — also releases the sessions
+/// it had bound, so a reconnecting user can always re-`Hello` their
+/// session.
 struct ConnTable {
-    conns: HashMap<u64, TcpStream>,
+    conns: HashMap<u64, ConnEntry>,
     /// session id → owning connection.
     owner: HashMap<u64, u64>,
     /// connection → bindings held (bounds `owner` under a Hello flood).
     owned: HashMap<u64, usize>,
+    /// Writer threads of departed connections. NEVER joined inline — a
+    /// dying writer may be blocked reporting its own death into the full
+    /// event queue, which only the serve thread drains; joining here
+    /// would deadlock. Reaped in `close_all` after the event channel is
+    /// gone.
+    reap: Vec<JoinHandle<()>>,
 }
 
 impl ConnTable {
     fn new() -> ConnTable {
-        ConnTable { conns: HashMap::new(), owner: HashMap::new(), owned: HashMap::new() }
+        ConnTable {
+            conns: HashMap::new(),
+            owner: HashMap::new(),
+            owned: HashMap::new(),
+            reap: Vec::new(),
+        }
     }
 
-    fn connected(&mut self, conn: u64, writer: TcpStream) {
-        self.conns.insert(conn, writer);
+    fn connected(&mut self, conn: u64, ctl: TcpStream, outbox: SyncSender<Vec<u8>>, writer: JoinHandle<()>) {
+        self.conns.insert(conn, ConnEntry { ctl, outbox, writer });
     }
 
-    /// Release a cleanly-disconnected connection's bookkeeping.
+    /// Release a cleanly-disconnected connection's bookkeeping. The
+    /// outbox sender drops, so the writer flushes what is queued and
+    /// exits; the socket itself stays open until the writer is done.
     fn forget(&mut self, conn: u64) {
-        self.conns.remove(&conn);
+        if let Some(e) = self.conns.remove(&conn) {
+            self.reap.push(e.writer);
+        }
         if self.owned.remove(&conn).is_some() {
             self.owner.retain(|_, c| *c != conn);
         }
     }
 
-    /// Sever a protocol-violating (or dead) connection: log, close the
-    /// socket, and release every session bound to it.
+    /// Sever a protocol-violating (or stalled/dead) connection: log,
+    /// shut the socket down (which also unblocks its writer), and
+    /// release every session bound to it.
     fn drop_conn(&mut self, conn: u64, reason: &str) {
         eprintln!("net: dropping connection {conn}: {reason}");
-        if let Some(s) = self.conns.remove(&conn) {
-            let _ = s.shutdown(std::net::Shutdown::Both);
+        if let Some(e) = self.conns.remove(&conn) {
+            let _ = e.ctl.shutdown(std::net::Shutdown::Both);
+            self.reap.push(e.writer);
         }
         if self.owned.remove(&conn).is_some() {
             self.owner.retain(|_, c| *c != conn);
@@ -508,14 +601,21 @@ impl ConnTable {
         }
     }
 
-    /// Best-effort frame write; a failed write means the peer is dead, so
-    /// the connection is dropped and its session bindings released (the
-    /// user can re-establish them from a fresh connection).
+    /// Non-blocking frame dispatch into the connection's writer outbox.
+    /// A full outbox means the peer is slow (its writer is stuck on a
+    /// full socket) — that connection alone is dropped; the serve thread
+    /// never waits on anyone's socket.
     fn send(&mut self, conn: u64, msg: &Message) {
-        let Some(s) = self.conns.get_mut(&conn) else { return };
+        let Some(e) = self.conns.get(&conn) else { return };
         let buf = wire::encode_frame(0, msg);
-        if s.write_all(&buf).is_err() {
-            self.drop_conn(conn, "write failed");
+        match e.outbox.try_send(buf) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                self.drop_conn(conn, "response outbox full (slow client)");
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.drop_conn(conn, "writer thread gone");
+            }
         }
     }
 
@@ -532,10 +632,22 @@ impl ConnTable {
         }
     }
 
-    /// Shut down every remaining socket (teardown).
+    /// Teardown: let every live connection's writer flush its queued
+    /// frames (the shutdown Ack, final logits) by closing the outbox and
+    /// joining it *before* the socket is shut down — a blocked writer is
+    /// bounded by its socket write timeout. Only called after the serve
+    /// thread has dropped the event receiver, so no writer can block
+    /// reporting its own death.
     fn close_all(&mut self) {
-        for (_, s) in self.conns.drain() {
-            let _ = s.shutdown(std::net::Shutdown::Both);
+        for (_, e) in self.conns.drain() {
+            drop(e.outbox);
+            let _ = e.writer.join();
+            let _ = e.ctl.shutdown(std::net::Shutdown::Both);
+        }
+        // writers of already-severed connections (their sockets are shut;
+        // they exit as soon as their pending write fails)
+        for h in self.reap.drain(..) {
+            let _ = h.join();
         }
     }
 }

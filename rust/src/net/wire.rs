@@ -34,6 +34,8 @@ use std::io::Read;
 
 use anyhow::{bail, ensure, Result};
 
+use crate::codec::{LeReader, LeWriter};
+
 /// `"M2RU"`.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"M2RU");
 pub const VERSION: u16 = 1;
@@ -94,106 +96,53 @@ pub struct Frame {
 
 // ---------------------------------------------------------------- encoding
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
-    buf.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
-    put_u32(buf, vs.len() as u32);
-    for &v in vs {
-        buf.extend_from_slice(&v.to_le_bytes());
-    }
-}
-
 fn encode_payload(msg: &Message) -> Vec<u8> {
-    let mut p = Vec::new();
+    let mut p = LeWriter::new();
     match msg {
-        Message::Hello { user } => put_u64(&mut p, *user),
+        Message::Hello { user } => p.u64(*user),
         Message::Step { session, x } => {
-            put_u64(&mut p, *session);
-            put_f32s(&mut p, x);
+            p.u64(*session);
+            p.f32s(x);
         }
         Message::StepLabeled { session, label, x } => {
-            put_u64(&mut p, *session);
-            put_u32(&mut p, *label);
-            put_f32s(&mut p, x);
+            p.u64(*session);
+            p.u32(*label);
+            p.f32s(x);
         }
-        Message::Ack { value } => put_u64(&mut p, *value),
+        Message::Ack { value } => p.u64(*value),
         Message::Logits { session, pred, logits } => {
-            put_u64(&mut p, *session);
-            put_u32(&mut p, *pred);
-            put_f32s(&mut p, logits);
+            p.u64(*session);
+            p.u32(*pred);
+            p.f32s(logits);
         }
-        Message::Stats { text } => p.extend_from_slice(text.as_bytes()),
+        Message::Stats { text } => p.raw(text.as_bytes()),
         Message::Shutdown => {}
     }
-    p
+    p.into_vec()
 }
 
 /// Encode one frame (header + payload) to bytes.
 pub fn encode_frame(flags: u8, msg: &Message) -> Vec<u8> {
     let payload = encode_payload(msg);
     debug_assert!(payload.len() <= MAX_PAYLOAD as usize, "payload exceeds protocol bound");
-    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
-    out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.extend_from_slice(&VERSION.to_le_bytes());
-    out.push(msg.kind());
-    out.push(flags);
-    put_u32(&mut out, payload.len() as u32);
-    out.extend_from_slice(&payload);
-    out
+    let mut out = LeWriter::from_vec(Vec::with_capacity(HEADER_LEN + payload.len()));
+    out.u32(MAGIC);
+    out.u16(VERSION);
+    out.u8(msg.kind());
+    out.u8(flags);
+    out.u32(payload.len() as u32);
+    out.raw(&payload);
+    out.into_vec()
 }
 
 // ---------------------------------------------------------------- decoding
 
-/// Bounds-checked little-endian cursor. (`serve::checkpoint` keeps a
-/// sibling reader/writer pair with the same truncation semantics for the
-/// snapshot format — if you change bounds handling here, mirror it
-/// there.)
-struct Cur<'a> {
-    b: &'a [u8],
-    p: usize,
-}
-
-impl<'a> Cur<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.b.len() - self.p >= n, "payload truncated at byte {}", self.p);
-        let s = &self.b[self.p..self.p + n];
-        self.p += n;
-        Ok(s)
-    }
-    fn u32(&mut self) -> Result<u32> {
-        let s = self.take(4)?;
-        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
-    }
-    fn u64(&mut self) -> Result<u64> {
-        let s = self.take(8)?;
-        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
-    }
-    fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.u32()? as usize;
-        // divide instead of multiplying: `n * 4` could wrap on 32-bit
-        // targets, and a hostile count must never reach the allocator
-        ensure!((self.b.len() - self.p) / 4 >= n, "float array truncated");
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            let s = self.take(4)?;
-            out.push(f32::from_le_bytes([s[0], s[1], s[2], s[3]]));
-        }
-        Ok(out)
-    }
-    fn done(&self) -> Result<()> {
-        ensure!(self.p == self.b.len(), "frame has {} trailing payload bytes", self.b.len() - self.p);
-        Ok(())
-    }
-}
+// Decoding runs on the shared bounds-checked cursor ([`crate::codec`]) —
+// the same truncation semantics as the snapshot/delta formats, so a
+// bounds-handling fix cannot diverge between the two layers.
 
 fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message> {
-    let mut c = Cur { b: payload, p: 0 };
+    let mut c = LeReader::new(payload);
     let msg = match kind {
         1 => Message::Hello { user: c.u64()? },
         2 => Message::Step { session: c.u64()?, x: c.f32s()? },
@@ -202,7 +151,7 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message> {
         5 => Message::Logits { session: c.u64()?, pred: c.u32()?, logits: c.f32s()? },
         6 => {
             // the frame header's length delimits the text — no inner count
-            let bytes = c.take(c.b.len() - c.p)?.to_vec();
+            let bytes = c.take(c.remaining())?.to_vec();
             let text = String::from_utf8(bytes).map_err(|_| anyhow::anyhow!("stats text not utf-8"))?;
             Message::Stats { text }
         }

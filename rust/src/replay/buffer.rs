@@ -5,6 +5,8 @@
 //! task (the paper provisions e.g. 1875 examples/task for pMNIST); each
 //! segment is fed by its own reservoir sampler while that task streams.
 
+use std::collections::BTreeSet;
+
 use crate::data::Example;
 use crate::quant::{dequantize, StochasticQuantizer};
 use crate::rng::GaussianRng;
@@ -53,6 +55,11 @@ impl QuantizedExample {
 }
 
 /// Per-task-segmented replay buffer fed by reservoir samplers.
+///
+/// Each segment carries a stable id (assigned at creation, fresh after a
+/// merge) and a dirty flag, so the serve-path delta snapshots can ship
+/// only the segments whose contents changed since the last snapshot —
+/// the id list alone captures reorderings and merges.
 pub struct ReplayBuffer {
     /// capacity per task segment.
     pub per_task: usize,
@@ -60,6 +67,12 @@ pub struct ReplayBuffer {
     pub offset: f32,
     pub scale: f32,
     segments: Vec<Vec<QuantizedExample>>,
+    /// Stable segment ids, parallel to `segments`.
+    ids: Vec<u64>,
+    /// Next id to assign (monotone; merges consume fresh ids too).
+    next_id: u64,
+    /// Segments whose contents changed since the last snapshot mark.
+    dirty: BTreeSet<u64>,
     sampler: ReservoirSampler,
     quantizer: StochasticQuantizer,
 }
@@ -71,6 +84,9 @@ impl ReplayBuffer {
             offset,
             scale,
             segments: Vec::new(),
+            ids: Vec::new(),
+            next_id: 1,
+            dirty: BTreeSet::new(),
             sampler: ReservoirSampler::new(per_task, seed),
             quantizer: StochasticQuantizer::new((seed >> 16) as u16 ^ 0x5EED, 4),
         }
@@ -79,6 +95,10 @@ impl ReplayBuffer {
     /// Open a new task segment (resets the reservoir stream counter).
     pub fn begin_task(&mut self) {
         self.segments.push(Vec::with_capacity(self.per_task));
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ids.push(id);
+        self.dirty.insert(id);
         self.sampler.reset_stream();
     }
 
@@ -100,6 +120,7 @@ impl ReplayBuffer {
         match self.sampler.offer() {
             ReservoirDecision::Discard => {}
             ReservoirDecision::Store(slot) => {
+                self.dirty.insert(*self.ids.last().expect("ids parallel to segments"));
                 let norm: Vec<f32> = ex
                     .features
                     .iter()
@@ -125,6 +146,9 @@ impl ReplayBuffer {
         if self.segments.len() > keep {
             let drop = self.segments.len() - keep;
             self.segments.drain(..drop);
+            for id in self.ids.drain(..drop) {
+                self.dirty.remove(&id);
+            }
         }
     }
 
@@ -141,6 +165,9 @@ impl ReplayBuffer {
         }
         let a = self.segments.remove(0);
         let b = self.segments.remove(0);
+        for id in self.ids.drain(..2) {
+            self.dirty.remove(&id);
+        }
         let cap = self.per_task.max(1);
         let mut merged: Vec<QuantizedExample> = Vec::with_capacity(cap);
         for (i, q) in a.into_iter().chain(b.into_iter()).enumerate() {
@@ -154,12 +181,49 @@ impl ReplayBuffer {
             }
         }
         self.segments.insert(0, merged);
+        // the merged segment is new content under a fresh id
+        let id = self.next_id;
+        self.next_id += 1;
+        self.ids.insert(0, id);
+        self.dirty.insert(id);
         true
     }
 
     /// The stored segments, oldest first (checkpoint/restore hook).
     pub fn segments(&self) -> &[Vec<QuantizedExample>] {
         &self.segments
+    }
+
+    /// Stable ids of the stored segments, parallel to
+    /// [`ReplayBuffer::segments`].
+    pub fn segment_ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    /// The next segment id to be assigned (checkpoint/restore hook — a
+    /// restored buffer must not reuse ids the snapshot chain has seen).
+    pub fn next_segment_id(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Delta-snapshot hook: `(id, contents)` of every segment whose
+    /// contents changed since the last snapshot mark, oldest first, and
+    /// clears the dirty set. The full id order comes from
+    /// [`ReplayBuffer::segment_ids`].
+    pub fn take_dirty(&mut self) -> Vec<(u64, Vec<QuantizedExample>)> {
+        let mut out = Vec::with_capacity(self.dirty.len());
+        for (id, seg) in self.ids.iter().zip(&self.segments) {
+            if self.dirty.contains(id) {
+                out.push((*id, seg.clone()));
+            }
+        }
+        self.dirty.clear();
+        out
+    }
+
+    /// Full-snapshot hook: every segment is now captured.
+    pub fn mark_clean(&mut self) {
+        self.dirty.clear();
     }
 
     /// Reservoir-sampler state `(seen counter, xorshift word)`.
@@ -173,16 +237,24 @@ impl ReplayBuffer {
     }
 
     /// Reconstruct the buffer contents and both hardware RNG states from a
-    /// checkpoint. `offset`/`scale`/`per_task` are configuration, not
-    /// state — the caller constructs the buffer with the live config first.
+    /// checkpoint. `ids` must be parallel to `segments` and `next_id`
+    /// strictly greater than every id in the chain.
+    /// `offset`/`scale`/`per_task` are configuration, not state — the
+    /// caller constructs the buffer with the live config first.
     pub fn restore_state(
         &mut self,
         segments: Vec<Vec<QuantizedExample>>,
+        ids: Vec<u64>,
+        next_id: u64,
         sampler_seen: u64,
         sampler_rng: u32,
         quant_lfsr: u16,
     ) {
+        assert_eq!(ids.len(), segments.len(), "segment id list must be parallel");
         self.segments = segments;
+        self.ids = ids;
+        self.next_id = next_id.max(self.ids.iter().copied().max().unwrap_or(0) + 1);
+        self.dirty.clear();
         self.sampler.restore_state(sampler_seen, sampler_rng);
         self.quantizer.restore_lfsr(quant_lfsr);
     }
@@ -329,11 +401,13 @@ mod tests {
             buf.offer(&ex(&[i as f32 / 20.0; 4], i % 3));
         }
         let segs = buf.segments().to_vec();
+        let ids = buf.segment_ids().to_vec();
+        let next_id = buf.next_segment_id();
         let (seen, rng_state) = buf.sampler_state();
         let lfsr = buf.quantizer_state();
         // a fresh buffer restored from that state behaves identically
         let mut twin = ReplayBuffer::new(6, 0.0, 1.0, 999);
-        twin.restore_state(segs, seen, rng_state, lfsr);
+        twin.restore_state(segs, ids, next_id, seen, rng_state, lfsr);
         for i in 20..40 {
             let e = ex(&[i as f32 / 40.0; 4], i % 3);
             buf.offer(&e);
@@ -344,6 +418,37 @@ mod tests {
             assert_eq!(a.packed, b.packed);
             assert_eq!(a.label, b.label);
         }
+    }
+
+    #[test]
+    fn segment_ids_and_dirty_tracking_follow_mutations() {
+        let mut buf = ReplayBuffer::new(4, 0.0, 1.0, 3);
+        for task in 0..3 {
+            buf.begin_task();
+            for _ in 0..4 {
+                buf.offer(&ex(&[0.2; 4], task));
+            }
+        }
+        assert_eq!(buf.segment_ids(), &[1, 2, 3]);
+        let dirty = buf.take_dirty();
+        assert_eq!(dirty.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        // nothing changed since the mark: empty delta
+        assert!(buf.take_dirty().is_empty());
+        // merging the two oldest consumes a fresh id and dirties only it
+        let mut rng = GaussianRng::new(9);
+        assert!(buf.merge_oldest_pair(&mut rng));
+        assert_eq!(buf.segment_ids(), &[4, 3]);
+        let dirty = buf.take_dirty();
+        assert_eq!(dirty.len(), 1);
+        assert_eq!(dirty[0].0, 4);
+        // a fresh task rolls a new id; its first offer always stores
+        buf.begin_task();
+        buf.offer(&ex(&[0.4; 4], 0));
+        let dirty = buf.take_dirty();
+        assert_eq!(dirty.len(), 1);
+        assert_eq!(dirty[0].0, 5);
+        assert_eq!(buf.segment_ids(), &[4, 3, 5]);
+        assert_eq!(buf.next_segment_id(), 6);
     }
 
     #[test]

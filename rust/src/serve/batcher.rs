@@ -43,6 +43,18 @@ pub struct BatcherStats {
     pub deferred_dups: u64,
 }
 
+/// One still-queued request, as serialized by `serve::checkpoint` so a
+/// crash snapshot resumes queued work instead of dropping it (the
+/// wall-clock enqueue instant is not state — a restore re-stamps it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueuedStep {
+    pub session: u64,
+    pub x: Vec<f32>,
+    pub label: Option<usize>,
+    pub enqueued_tick: u64,
+    pub tag: u64,
+}
+
 /// FIFO queue with max-batch/max-wait dispatch.
 pub struct DynamicBatcher {
     max_batch: usize,
@@ -68,6 +80,40 @@ impl DynamicBatcher {
     pub fn push(&mut self, r: StepRequest) {
         self.stats.enqueued += 1;
         self.queue.push_back(r);
+    }
+
+    /// The still-queued requests in FIFO order (checkpoint hook).
+    pub fn queued(&self) -> Vec<QueuedStep> {
+        self.queue
+            .iter()
+            .map(|r| QueuedStep {
+                session: r.session,
+                x: r.x.clone(),
+                label: r.label,
+                enqueued_tick: r.enqueued_tick,
+                tag: r.tag,
+            })
+            .collect()
+    }
+
+    /// Replace the queue with checkpointed requests (restore hook). The
+    /// counters are restored separately — these requests were already
+    /// counted as enqueued when they first arrived. Routing tags refer
+    /// to connections of the crashed process; routing their eventual
+    /// logits is a no-op, but the serving state they produce (hidden
+    /// states, history, online updates) is recovered.
+    pub fn restore_queue(&mut self, queued: Vec<QueuedStep>) {
+        self.queue = queued
+            .into_iter()
+            .map(|q| StepRequest {
+                session: q.session,
+                x: q.x,
+                label: q.label,
+                enqueued_tick: q.enqueued_tick,
+                enqueued_at: Instant::now(),
+                tag: q.tag,
+            })
+            .collect();
     }
 
     /// Dispatch policy: ready when a full batch is pending, or the oldest

@@ -1,36 +1,56 @@
-//! Durable sessions: serialize the entire serve-loop state to a single
-//! versioned binary snapshot and restore it on boot, so a killed and
-//! restarted server resumes every live session with bitwise-identical
-//! hidden state (DESIGN.md §9).
+//! Durable sessions: serialize the entire serve-loop state to a chain of
+//! versioned binary snapshots — periodic **full** rewrites plus
+//! incremental **deltas** against the last full — and restore it on
+//! boot, so a killed and restarted server resumes every live session
+//! with bitwise-identical hidden state (DESIGN.md §10).
 //!
-//! ## Snapshot file (`snapshot.m2ck`, all integers little-endian)
+//! ## Files in a checkpoint directory
 //!
 //! ```text
-//! magic    u32   "M2CK"
-//! version  u32   2
+//! snapshot.m2ck              the last full snapshot (format v3)
+//! delta-<epoch>-<seq>.m2cd   deltas since it, seq = 1, 2, …
+//! ```
+//!
+//! Every full snapshot carries a fresh random `epoch`; its deltas embed
+//! that epoch in both the filename and the payload. Restore reads the
+//! full snapshot, then applies the *contiguous* run of its own deltas
+//! `1..n` — a gap, a checksum failure or an epoch mismatch ends the
+//! chain there (crash-consistent prefix). Writing a new full snapshot
+//! starts a new epoch and deletes the previous chain's delta files
+//! (compaction); a crash between the rename and the cleanup leaves
+//! stale deltas that the epoch check makes inert.
+//!
+//! ## File envelope (shared by both forms, all integers little-endian)
+//!
+//! ```text
+//! magic    u32   "M2CK" (full) / "M2CD" (delta)
+//! version  u32   3
 //! len      u64   payload byte count
-//! payload  [len] sections below
+//! payload  [len] sections (see DESIGN.md §10)
 //! checksum u64   FNV-1a 64 over the payload
 //! ```
 //!
-//! Payload sections, in order: network shapes (nh, nx, nt, ny — refused
-//! on mismatch), model weights in artifact order (wh, uh, bh, wo, bo),
-//! the logical tick, the session-id secret (v2 — the TCP frontend's
-//! per-boot key, persisted so restored sessions keep their ids),
-//! deterministic serve metrics, batcher counters, the session store
-//! (touch counter, lifecycle stats, then every live slot in LRU order:
-//! id, ticks, history cursor, hidden state, history ring), and the online
-//! learner (counters, pending window, Box–Muller stream, 4-bit replay
-//! segments, reservoir + LFSR states).
+//! A full payload holds: shapes (refused on mismatch), model weights in
+//! artifact order, the substrate wear record (per-device write counters
+//! + Ziksa totals), the logical tick, the session-id secret, the chain
+//! epoch, deterministic serve metrics, batcher counters **and the
+//! batcher's still-queued requests** (a crash snapshot resumes queued
+//! work), the session store (every live slot with its exact LRU touch
+//! value), and the online learner (counters, pending window, Box–Muller
+//! stream, 4-bit replay segments with stable ids, reservoir + LFSR
+//! states). A delta payload holds the same scalars (they are tiny) but
+//! only the *dirty* sessions, the removed session ids, and the replay
+//! segments whose contents changed — the dominant state (session slabs,
+//! replay history) is written incrementally.
 //!
 //! Writes go to a temp file in the same directory followed by an atomic
-//! rename, with the temp file fsynced before the rename and the directory
-//! fsynced after it — so a crash (including power loss) mid-write can
-//! never destroy the previous good snapshot, and a completed rename is
-//! durable with its data. Loads verify magic, version, length and
-//! checksum; any corruption makes [`try_restore`] report
-//! [`RestoreOutcome::Corrupt`] and the server boots fresh with a warning
-//! instead of dying.
+//! rename. The `[net] fsync_policy` knob picks the durability point:
+//! `always` fsyncs every file (and the directory) before trusting it,
+//! `full` fsyncs only full snapshots (a crash may lose the delta tail —
+//! never the full baseline), `never` trusts the OS cache. Loads verify
+//! magic, version, length and checksum; corruption of the full snapshot
+//! makes [`try_restore`] report [`RestoreOutcome::Corrupt`] and the
+//! server boots fresh with a warning instead of dying.
 //!
 //! A snapshot holds *state*, not configuration: restore assumes the
 //! server boots with the same run configuration (seed, shapes, serve
@@ -38,43 +58,149 @@
 //! feedback matrix ψ — are reconstructed identically. Shapes are
 //! verified; the rest is the operator's contract, like any database's
 //! config file.
+//!
+//! Snapshot *writing* runs on the committer thread (`serve::commit`):
+//! the serve loop assembles the state and queues it; encoding, fsync
+//! and rename never stall dispatch. [`save_checkpoint`]/[`save_delta`]
+//! are the synchronous variants for tests and benches.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::backend::WearState;
+use crate::codec::{LeReader, LeWriter};
+use crate::config::{FsyncPolicy, TransportConfig};
 use crate::data::Example;
 use crate::linalg::Mat;
 use crate::nn::MiruParams;
 use crate::replay::QuantizedExample;
 
-use super::batcher::BatcherStats;
+use super::batcher::{BatcherStats, QueuedStep};
 use super::core::ServeCore;
 use super::metrics::ServeMetrics;
-use super::online::LearnerState;
+use super::online::{LearnerDelta, LearnerState};
 use super::session::{SessionSnapshot, SessionStats};
 
 const MAGIC: u32 = u32::from_le_bytes(*b"M2CK");
-const VERSION: u32 = 2;
-/// Snapshot file name inside `--checkpoint-dir`.
+const DELTA_MAGIC: u32 = u32::from_le_bytes(*b"M2CD");
+const VERSION: u32 = 3;
+/// Full-snapshot file name inside `--checkpoint-dir`.
 pub const SNAPSHOT_FILE: &str = "snapshot.m2ck";
-const TMP_FILE: &str = "snapshot.m2ck.tmp";
+const TMP_SUFFIX: &str = ".tmp";
 
-/// Everything a snapshot holds, decoded.
+/// When a chain of snapshots is written and which files are fsynced —
+/// from `[net] snapshot_full_every` / `fsync_policy`.
+#[derive(Clone, Debug)]
+pub struct SnapshotPolicy {
+    /// Every Nth snapshot is a full rewrite (1 = always full, i.e.
+    /// incremental snapshots off).
+    pub full_every: u64,
+    pub fsync: FsyncPolicy,
+}
+
+impl SnapshotPolicy {
+    /// The policy configured in `[net]`.
+    pub fn from_net(net: &TransportConfig) -> Result<SnapshotPolicy> {
+        Ok(SnapshotPolicy { full_every: net.snapshot_full_every.max(1), fsync: net.fsync()? })
+    }
+
+    /// Full snapshots every time, everything fsynced — the pre-v3
+    /// behavior, and what [`save_checkpoint`] uses.
+    pub fn always_full() -> SnapshotPolicy {
+        SnapshotPolicy { full_every: 1, fsync: FsyncPolicy::Always }
+    }
+
+    pub fn fsync_full(&self) -> bool {
+        matches!(self.fsync, FsyncPolicy::Always | FsyncPolicy::FullOnly)
+    }
+
+    pub fn fsync_delta(&self) -> bool {
+        matches!(self.fsync, FsyncPolicy::Always)
+    }
+}
+
+/// The scalar half of a snapshot — small enough to ride in *every*
+/// file, full or delta, as one unit. Keeping it one struct with one
+/// encoder/decoder pair means a new durable scalar cannot be added to
+/// the full form and silently missed by the delta form (or by
+/// [`merge_delta`], which replaces it wholesale).
+#[derive(Clone)]
+pub struct SnapshotScalars {
+    pub params: MiruParams,
+    pub wear: Option<WearState>,
+    pub tick: u64,
+    pub session_secret: u64,
+    pub metrics: ServeMetrics,
+    pub batcher: BatcherStats,
+    /// The batcher's still-queued requests at snapshot time.
+    pub pending: Vec<QueuedStep>,
+    pub touch_counter: u64,
+    pub store_stats: SessionStats,
+}
+
+/// Everything a full snapshot holds, decoded (after a chain restore,
+/// the merged view of full + deltas).
+#[derive(Clone)]
 pub struct Snapshot {
     pub nh: usize,
     pub nx: usize,
     pub nt: usize,
     pub ny: usize,
-    pub params: MiruParams,
-    pub tick: u64,
-    pub session_secret: u64,
-    pub metrics: ServeMetrics,
-    pub batcher: BatcherStats,
-    pub touch_counter: u64,
-    pub store_stats: SessionStats,
+    /// Chain epoch of the base full snapshot.
+    pub epoch: u64,
+    pub scalars: SnapshotScalars,
     pub sessions: Vec<SessionSnapshot>,
     pub learner: LearnerState,
+}
+
+/// One incremental snapshot: full scalars, dirty state only.
+#[derive(Clone)]
+pub struct Delta {
+    pub nh: usize,
+    pub nx: usize,
+    pub nt: usize,
+    pub ny: usize,
+    pub epoch: u64,
+    pub seq: u64,
+    pub scalars: SnapshotScalars,
+    /// Session ids evicted/expired since the previous snapshot.
+    pub removed: Vec<u64>,
+    /// Sessions mutated since the previous snapshot (exact LRU touches).
+    pub dirty_sessions: Vec<SessionSnapshot>,
+    pub learner: LearnerDelta,
+}
+
+/// A snapshot write assembled by the serve thread, executed on the
+/// committer thread.
+pub enum SnapshotJob {
+    Full { state: Box<Snapshot>, dir: PathBuf, fsync: bool },
+    Delta { state: Box<Delta>, dir: PathBuf, fsync: bool },
+}
+
+impl SnapshotJob {
+    /// Where this snapshot will land.
+    pub fn path(&self) -> PathBuf {
+        match self {
+            SnapshotJob::Full { dir, .. } => dir.join(SNAPSHOT_FILE),
+            SnapshotJob::Delta { state, dir, .. } => dir.join(delta_file_name(state.epoch, state.seq)),
+        }
+    }
+}
+
+/// Execute one snapshot job (committer thread). A full write also
+/// compacts the chain: stale delta files from previous epochs are
+/// removed (best-effort — leftovers are inert under the epoch check).
+pub(crate) fn write_snapshot_job(job: SnapshotJob) -> Result<PathBuf> {
+    match job {
+        SnapshotJob::Full { state, dir, fsync } => {
+            let path = write_full(&state, &dir, fsync)?;
+            purge_stale_deltas(&dir, state.epoch);
+            Ok(path)
+        }
+        SnapshotJob::Delta { state, dir, fsync } => write_delta(&state, &dir, fsync),
+    }
 }
 
 /// What booting against a checkpoint directory found.
@@ -82,11 +208,37 @@ pub struct Snapshot {
 pub enum RestoreOutcome {
     /// No snapshot present — fresh boot.
     Fresh,
-    /// Snapshot restored; every live session resumes its hidden state.
-    Restored { sessions: usize, tick: u64 },
+    /// Snapshot chain restored; every live session resumes its state.
+    Restored { sessions: usize, tick: u64, deltas: usize },
     /// Snapshot present but unusable (bad checksum, truncation, shape
     /// mismatch) — the server boots fresh; the caller should warn.
     Corrupt { error: String },
+}
+
+/// A fresh nonzero chain epoch (OS entropy via the standard library's
+/// hash seeding — a file-chain tag, never serving state).
+pub(crate) fn random_epoch() -> u64 {
+    use std::hash::{BuildHasher, Hasher};
+    loop {
+        let e = std::collections::hash_map::RandomState::new().build_hasher().finish();
+        if e != 0 {
+            return e;
+        }
+    }
+}
+
+/// `delta-<epoch>-<seq>.m2cd`.
+fn delta_file_name(epoch: u64, seq: u64) -> String {
+    format!("delta-{epoch:016x}-{seq:06}.m2cd")
+}
+
+/// Parse a delta file name back to `(epoch, seq)`.
+fn parse_delta_name(name: &str) -> Option<(u64, u64)> {
+    let middle = name.strip_prefix("delta-")?.strip_suffix(".m2cd")?;
+    let (epoch_hex, seq_str) = middle.split_once('-')?;
+    let epoch = u64::from_str_radix(epoch_hex, 16).ok()?;
+    let seq = seq_str.parse::<u64>().ok()?;
+    Some((epoch, seq))
 }
 
 // ---------------------------------------------------------------- encoding
@@ -100,119 +252,84 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Little-endian byte sink.
-struct W {
-    buf: Vec<u8>,
+fn enc_shapes(w: &mut LeWriter, nh: usize, nx: usize, nt: usize, ny: usize) {
+    w.u32(nh as u32);
+    w.u32(nx as u32);
+    w.u32(nt as u32);
+    w.u32(ny as u32);
 }
 
-impl W {
-    fn new() -> W {
-        W { buf: Vec::new() }
-    }
-    fn u16(&mut self, v: u16) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn f32(&mut self, v: f32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn f64(&mut self, v: f64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
-    }
-    fn f32s(&mut self, vs: &[f32]) {
-        self.u32(vs.len() as u32);
-        for &v in vs {
-            self.f32(v);
-        }
-    }
-    fn bytes(&mut self, vs: &[u8]) {
-        self.u32(vs.len() as u32);
-        self.buf.extend_from_slice(vs);
-    }
+fn dec_shapes(r: &mut LeReader) -> Result<(usize, usize, usize, usize)> {
+    let nh = r.u32()? as usize;
+    let nx = r.u32()? as usize;
+    let nt = r.u32()? as usize;
+    let ny = r.u32()? as usize;
+    ensure!(nh >= 1 && nx >= 1 && nt >= 1 && ny >= 1, "degenerate snapshot shapes");
+    Ok((nh, nx, nt, ny))
 }
 
-/// Little-endian cursor with hard bounds checks (malformed snapshots must
-/// error, never panic).
-struct R<'a> {
-    b: &'a [u8],
-    p: usize,
-}
-
-impl<'a> R<'a> {
-    fn new(b: &'a [u8]) -> R<'a> {
-        R { b, p: 0 }
-    }
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(self.b.len() - self.p >= n, "snapshot truncated at byte {}", self.p);
-        let s = &self.b[self.p..self.p + n];
-        self.p += n;
-        Ok(s)
-    }
-    fn u16(&mut self) -> Result<u16> {
-        let s = self.take(2)?;
-        Ok(u16::from_le_bytes([s[0], s[1]]))
-    }
-    fn u32(&mut self) -> Result<u32> {
-        let s = self.take(4)?;
-        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
-    }
-    fn u64(&mut self) -> Result<u64> {
-        let s = self.take(8)?;
-        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
-    }
-    fn f32(&mut self) -> Result<f32> {
-        let s = self.take(4)?;
-        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
-    }
-    fn f64(&mut self) -> Result<f64> {
-        let s = self.take(8)?;
-        Ok(f64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
-    }
-    fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.u32()? as usize;
-        let mut out = Vec::with_capacity(n.min(1 << 20));
-        for _ in 0..n {
-            out.push(self.f32()?);
-        }
-        Ok(out)
-    }
-    fn byte_vec(&mut self) -> Result<Vec<u8>> {
-        let n = self.u32()? as usize;
-        Ok(self.take(n)?.to_vec())
-    }
-    fn done(&self) -> Result<()> {
-        ensure!(self.p == self.b.len(), "snapshot has {} trailing bytes", self.b.len() - self.p);
-        Ok(())
-    }
-}
-
-fn encode_payload(core: &ServeCore) -> Vec<u8> {
-    let net = core.net;
-    let p = core.engine.backend().effective_params();
-    let m = &core.metrics;
-    let learner = core.learner.snapshot();
-    let mut w = W::new();
-    // shapes
-    w.u32(net.nh as u32);
-    w.u32(net.nx as u32);
-    w.u32(net.nt as u32);
-    w.u32(net.ny as u32);
+fn enc_params(w: &mut LeWriter, p: &MiruParams) {
     // weights, artifact order
     w.f32s(&p.wh.data);
     w.f32s(&p.uh.data);
     w.f32s(&p.bh);
     w.f32s(&p.wo.data);
     w.f32s(&p.bo);
-    // clock
-    w.u64(core.tick);
-    // session-id key (the TCP frontend's per-boot secret)
-    w.u64(core.session_secret);
-    // deterministic metrics (wall clock and latency samples are not state)
+}
+
+fn dec_params(r: &mut LeReader, nh: usize, nx: usize, ny: usize) -> Result<MiruParams> {
+    let wh = r.f32s()?;
+    let uh = r.f32s()?;
+    let bh = r.f32s()?;
+    let wo = r.f32s()?;
+    let bo = r.f32s()?;
+    ensure!(
+        wh.len() == nx * nh && uh.len() == nh * nh && bh.len() == nh && wo.len() == nh * ny
+            && bo.len() == ny,
+        "weight section sizes inconsistent with shapes"
+    );
+    Ok(MiruParams {
+        wh: Mat::from_vec(nx, nh, wh),
+        uh: Mat::from_vec(nh, nh, uh),
+        bh,
+        wo: Mat::from_vec(nh, ny, wo),
+        bo,
+    })
+}
+
+fn enc_wear(w: &mut LeWriter, wear: &Option<WearState>) {
+    match wear {
+        None => w.u8(0),
+        Some(ws) => {
+            w.u8(1);
+            w.u64s(&ws.hidden);
+            w.u64s(&ws.readout);
+            w.u64(ws.steps);
+            w.u64(ws.writes);
+            w.u64(ws.skipped);
+            w.f64(ws.delta_magnitude);
+        }
+    }
+}
+
+fn dec_wear(r: &mut LeReader) -> Result<Option<WearState>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(WearState {
+            hidden: r.u64s()?,
+            readout: r.u64s()?,
+            steps: r.u64()?,
+            writes: r.u64()?,
+            skipped: r.u64()?,
+            delta_magnitude: r.f64()?,
+        })),
+        other => bail!("bad wear flag {other}"),
+    }
+}
+
+/// Deterministic metrics only (wall clock and latency samples are
+/// measurements, not state).
+fn enc_metrics(w: &mut LeWriter, m: &ServeMetrics) {
     w.u64(m.requests);
     w.u64(m.batches);
     w.u64(m.padded_rows);
@@ -224,120 +341,119 @@ fn encode_payload(core: &ServeCore) -> Vec<u8> {
     w.u64(m.online_updates);
     w.f64(m.online_loss_sum);
     w.u64(m.wear_rationed);
-    // batcher counters
-    let b = &core.batcher.stats;
+}
+
+fn dec_metrics(r: &mut LeReader) -> Result<ServeMetrics> {
+    let mut m = ServeMetrics::default();
+    m.requests = r.u64()?;
+    m.batches = r.u64()?;
+    m.padded_rows = r.u64()?;
+    m.valid_rows = r.u64()?;
+    m.wait_ticks_sum = r.u64()?;
+    m.pred_fingerprint = r.u64()?;
+    m.labeled = r.u64()?;
+    m.labeled_correct = r.u64()?;
+    m.online_updates = r.u64()?;
+    m.online_loss_sum = r.f64()?;
+    m.wear_rationed = r.u64()?;
+    Ok(m)
+}
+
+fn enc_batcher(w: &mut LeWriter, b: &BatcherStats) {
     w.u64(b.enqueued);
     w.u64(b.batches);
     w.u64(b.dispatched);
     w.u64(b.deferred_dups);
-    // session store
-    w.u64(core.store.touch_counter());
-    let s = &core.store.stats;
+}
+
+fn dec_batcher(r: &mut LeReader) -> Result<BatcherStats> {
+    Ok(BatcherStats {
+        enqueued: r.u64()?,
+        batches: r.u64()?,
+        dispatched: r.u64()?,
+        deferred_dups: r.u64()?,
+    })
+}
+
+/// Queued requests: `label` rides as `0` (none) or `label + 1`.
+fn enc_pending(w: &mut LeWriter, pending: &[QueuedStep]) {
+    w.u32(pending.len() as u32);
+    for q in pending {
+        w.u64(q.session);
+        w.u32(match q.label {
+            None => 0,
+            Some(l) => l as u32 + 1,
+        });
+        w.u64(q.enqueued_tick);
+        w.u64(q.tag);
+        w.f32s(&q.x);
+    }
+}
+
+fn dec_pending(r: &mut LeReader, nx: usize, ny: usize) -> Result<Vec<QueuedStep>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let session = r.u64()?;
+        let label = match r.u32()? {
+            0 => None,
+            l => {
+                // out-of-range labels would index the one-hot/loss rows
+                // out of bounds at dispatch — a malformed snapshot must
+                // error here, never panic later (same rule as the wire)
+                let l = (l - 1) as usize;
+                ensure!(l < ny, "queued request label {l} out of range (ny {ny})");
+                Some(l)
+            }
+        };
+        let enqueued_tick = r.u64()?;
+        let tag = r.u64()?;
+        let x = r.f32s()?;
+        ensure!(x.len() == nx, "queued request width {} != nx {nx}", x.len());
+        out.push(QueuedStep { session, x, label, enqueued_tick, tag });
+    }
+    Ok(out)
+}
+
+fn enc_store_stats(w: &mut LeWriter, s: &SessionStats) {
     w.u64(s.created);
     w.u64(s.hits);
     w.u64(s.misses);
     w.u64(s.evicted_lru);
     w.u64(s.expired_ttl);
-    let slots = core.store.snapshot_slots();
-    w.u32(slots.len() as u32);
-    for slot in &slots {
-        w.u64(slot.id);
-        w.u64(slot.last_tick);
-        w.u64(slot.steps);
-        w.u32(slot.hist_rows as u32);
-        w.u32(slot.hist_head as u32);
-        w.f32s(&slot.h);
-        w.f32s(&slot.hist);
-    }
-    // online learner
-    w.u64(learner.observed);
-    w.u64(learner.updates);
-    w.u64(learner.rationed_cols);
-    w.u32(learner.pending.len() as u32);
-    for ex in &learner.pending {
-        w.u32(ex.label as u32);
-        w.f32s(&ex.features);
-    }
-    w.u64(learner.rng_state);
-    match learner.rng_spare {
-        Some(v) => {
-            w.buf.push(1);
-            w.f32(v);
-        }
-        None => w.buf.push(0),
-    }
-    w.u32(learner.segments.len() as u32);
-    for seg in &learner.segments {
-        w.u32(seg.len() as u32);
-        for q in seg {
-            w.u32(q.label as u32);
-            w.u32(q.len as u32);
-            w.bytes(&q.packed);
-        }
-    }
-    w.u64(learner.sampler_seen);
-    w.u32(learner.sampler_rng);
-    w.u16(learner.quant_lfsr);
-    w.buf
 }
 
-fn decode_payload(buf: &[u8]) -> Result<Snapshot> {
-    let mut r = R::new(buf);
-    let nh = r.u32()? as usize;
-    let nx = r.u32()? as usize;
-    let nt = r.u32()? as usize;
-    let ny = r.u32()? as usize;
-    ensure!(nh >= 1 && nx >= 1 && nt >= 1 && ny >= 1, "degenerate snapshot shapes");
-    let wh = r.f32s()?;
-    let uh = r.f32s()?;
-    let bh = r.f32s()?;
-    let wo = r.f32s()?;
-    let bo = r.f32s()?;
-    ensure!(
-        wh.len() == nx * nh && uh.len() == nh * nh && bh.len() == nh && wo.len() == nh * ny
-            && bo.len() == ny,
-        "weight section sizes inconsistent with shapes"
-    );
-    let params = MiruParams {
-        wh: Mat::from_vec(nx, nh, wh),
-        uh: Mat::from_vec(nh, nh, uh),
-        bh,
-        wo: Mat::from_vec(nh, ny, wo),
-        bo,
-    };
-    let tick = r.u64()?;
-    let session_secret = r.u64()?;
-    let mut metrics = ServeMetrics::default();
-    metrics.requests = r.u64()?;
-    metrics.batches = r.u64()?;
-    metrics.padded_rows = r.u64()?;
-    metrics.valid_rows = r.u64()?;
-    metrics.wait_ticks_sum = r.u64()?;
-    metrics.pred_fingerprint = r.u64()?;
-    metrics.labeled = r.u64()?;
-    metrics.labeled_correct = r.u64()?;
-    metrics.online_updates = r.u64()?;
-    metrics.online_loss_sum = r.f64()?;
-    metrics.wear_rationed = r.u64()?;
-    let batcher = BatcherStats {
-        enqueued: r.u64()?,
-        batches: r.u64()?,
-        dispatched: r.u64()?,
-        deferred_dups: r.u64()?,
-    };
-    let touch_counter = r.u64()?;
-    let store_stats = SessionStats {
+fn dec_store_stats(r: &mut LeReader) -> Result<SessionStats> {
+    Ok(SessionStats {
         created: r.u64()?,
         hits: r.u64()?,
         misses: r.u64()?,
         evicted_lru: r.u64()?,
         expired_ttl: r.u64()?,
-    };
-    let n_sessions = r.u32()? as usize;
-    let mut sessions = Vec::with_capacity(n_sessions.min(1 << 20));
-    for _ in 0..n_sessions {
+    })
+}
+
+fn enc_sessions(w: &mut LeWriter, sessions: &[SessionSnapshot]) {
+    w.u32(sessions.len() as u32);
+    for s in sessions {
+        w.u64(s.id);
+        w.u64(s.last_tick);
+        w.u64(s.last_touch);
+        w.u64(s.steps);
+        w.u32(s.hist_rows as u32);
+        w.u32(s.hist_head as u32);
+        w.f32s(&s.h);
+        w.f32s(&s.hist);
+    }
+}
+
+fn dec_sessions(r: &mut LeReader, nh: usize, nt: usize, nx: usize) -> Result<Vec<SessionSnapshot>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
         let id = r.u64()?;
         let last_tick = r.u64()?;
+        let last_touch = r.u64()?;
         let steps = r.u64()?;
         let hist_rows = r.u32()? as usize;
         let hist_head = r.u32()? as usize;
@@ -345,44 +461,112 @@ fn decode_payload(buf: &[u8]) -> Result<Snapshot> {
         let hist = r.f32s()?;
         ensure!(h.len() == nh, "session hidden width {} != nh {nh}", h.len());
         ensure!(hist.len() == nt * nx, "session history size {} != nt*nx", hist.len());
-        sessions.push(SessionSnapshot { id, h, hist, hist_rows, hist_head, last_tick, steps });
+        out.push(SessionSnapshot { id, h, hist, hist_rows, hist_head, last_tick, last_touch, steps });
     }
-    let observed = r.u64()?;
-    let updates = r.u64()?;
-    let rationed_cols = r.u64()?;
-    let n_pending = r.u32()? as usize;
-    let mut pending = Vec::with_capacity(n_pending.min(1 << 20));
-    for _ in 0..n_pending {
+    Ok(out)
+}
+
+fn enc_examples(w: &mut LeWriter, exs: &[Example]) {
+    w.u32(exs.len() as u32);
+    for ex in exs {
+        w.u32(ex.label as u32);
+        w.f32s(&ex.features);
+    }
+}
+
+fn dec_examples(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Result<Vec<Example>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
         let label = r.u32()? as usize;
+        ensure!(label < ny, "window label {label} out of range (ny {ny})");
         let features = r.f32s()?;
         ensure!(features.len() == nt * nx, "pending window size {} != nt*nx", features.len());
-        pending.push(Example { features, label });
+        out.push(Example { features, label });
     }
-    let rng_state = r.u64()?;
-    let rng_spare = match r.take(1)?[0] {
+    Ok(out)
+}
+
+fn enc_segment(w: &mut LeWriter, seg: &[QuantizedExample]) {
+    w.u32(seg.len() as u32);
+    for q in seg {
+        w.u32(q.label as u32);
+        w.u32(q.len as u32);
+        w.bytes(&q.packed);
+    }
+}
+
+fn dec_segment(r: &mut LeReader, ny: usize) -> Result<Vec<QuantizedExample>> {
+    let n = r.u32()? as usize;
+    let mut seg = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let label = r.u32()? as usize;
+        ensure!(label < ny, "replay label {label} out of range (ny {ny})");
+        let len = r.u32()? as usize;
+        let packed = r.byte_vec()?;
+        ensure!(packed.len() == len.div_ceil(2), "packed length inconsistent with len");
+        seg.push(QuantizedExample { packed, len, label });
+    }
+    Ok(seg)
+}
+
+fn enc_rng(w: &mut LeWriter, state: u64, spare: Option<f32>) {
+    w.u64(state);
+    match spare {
+        Some(v) => {
+            w.u8(1);
+            w.f32(v);
+        }
+        None => w.u8(0),
+    }
+}
+
+fn dec_rng(r: &mut LeReader) -> Result<(u64, Option<f32>)> {
+    let state = r.u64()?;
+    let spare = match r.u8()? {
         0 => None,
         1 => Some(r.f32()?),
         other => bail!("bad rng spare flag {other}"),
     };
+    Ok((state, spare))
+}
+
+fn enc_learner(w: &mut LeWriter, l: &LearnerState) {
+    w.u64(l.observed);
+    w.u64(l.updates);
+    w.u64(l.rationed_cols);
+    enc_examples(w, &l.pending);
+    enc_rng(w, l.rng_state, l.rng_spare);
+    debug_assert_eq!(l.segments.len(), l.segment_ids.len());
+    w.u32(l.segments.len() as u32);
+    for (id, seg) in l.segment_ids.iter().zip(&l.segments) {
+        w.u64(*id);
+        enc_segment(w, seg);
+    }
+    w.u64(l.next_segment_id);
+    w.u64(l.sampler_seen);
+    w.u32(l.sampler_rng);
+    w.u16(l.quant_lfsr);
+}
+
+fn dec_learner(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Result<LearnerState> {
+    let observed = r.u64()?;
+    let updates = r.u64()?;
+    let rationed_cols = r.u64()?;
+    let pending = dec_examples(r, nt, nx, ny)?;
+    let (rng_state, rng_spare) = dec_rng(r)?;
     let n_segs = r.u32()? as usize;
     let mut segments = Vec::with_capacity(n_segs.min(1 << 20));
+    let mut segment_ids = Vec::with_capacity(n_segs.min(1 << 20));
     for _ in 0..n_segs {
-        let n_ex = r.u32()? as usize;
-        let mut seg = Vec::with_capacity(n_ex.min(1 << 20));
-        for _ in 0..n_ex {
-            let label = r.u32()? as usize;
-            let len = r.u32()? as usize;
-            let packed = r.byte_vec()?;
-            ensure!(packed.len() == len.div_ceil(2), "packed length inconsistent with len");
-            seg.push(QuantizedExample { packed, len, label });
-        }
-        segments.push(seg);
+        segment_ids.push(r.u64()?);
+        segments.push(dec_segment(r, ny)?);
     }
+    let next_segment_id = r.u64()?;
     let sampler_seen = r.u64()?;
     let sampler_rng = r.u32()?;
     let quant_lfsr = r.u16()?;
-    r.done()?;
-    let learner = LearnerState {
+    Ok(LearnerState {
         observed,
         updates,
         rationed_cols,
@@ -390,82 +574,153 @@ fn decode_payload(buf: &[u8]) -> Result<Snapshot> {
         rng_state,
         rng_spare,
         segments,
+        segment_ids,
+        next_segment_id,
         sampler_seen,
         sampler_rng,
         quant_lfsr,
-    };
-    Ok(Snapshot {
-        nh,
-        nx,
-        nt,
-        ny,
-        params,
-        tick,
-        session_secret,
-        metrics,
-        batcher,
-        touch_counter,
-        store_stats,
-        sessions,
-        learner,
     })
 }
 
-// ------------------------------------------------------------------- file IO
-
-/// Serialize the core's durable state and atomically replace the snapshot
-/// in `dir`: write to a temp file, fsync it, rename it into place, then
-/// fsync the directory. The fsyncs matter — without them a power loss can
-/// make the rename durable while the file data is not, replacing the
-/// previous good snapshot with a corrupt one. Returns the snapshot path.
-pub fn save_checkpoint(core: &ServeCore, dir: &Path) -> Result<PathBuf> {
-    use std::io::Write as _;
-    std::fs::create_dir_all(dir)
-        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
-    let payload = encode_payload(core);
-    let mut file = Vec::with_capacity(payload.len() + 24);
-    file.extend_from_slice(&MAGIC.to_le_bytes());
-    file.extend_from_slice(&VERSION.to_le_bytes());
-    file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-    file.extend_from_slice(&payload);
-    file.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
-    let tmp = dir.join(TMP_FILE);
-    let path = dir.join(SNAPSHOT_FILE);
-    {
-        let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("creating {}", tmp.display()))?;
-        f.write_all(&file).with_context(|| format!("writing {}", tmp.display()))?;
-        // data must be on disk BEFORE the rename can be allowed to commit
-        f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+fn enc_learner_delta(w: &mut LeWriter, l: &LearnerDelta) {
+    w.u64(l.observed);
+    w.u64(l.updates);
+    w.u64(l.rationed_cols);
+    enc_examples(w, &l.pending);
+    enc_rng(w, l.rng_state, l.rng_spare);
+    w.u64s(&l.segment_order);
+    w.u32(l.changed.len() as u32);
+    for (id, seg) in &l.changed {
+        w.u64(*id);
+        enc_segment(w, seg);
     }
-    std::fs::rename(&tmp, &path)
-        .with_context(|| format!("renaming {} into place", tmp.display()))?;
-    // make the rename itself durable (directory metadata); directories
-    // cannot be opened on every platform, but where they can, a failing
-    // fsync is a real durability error
-    if let Ok(d) = std::fs::File::open(dir) {
-        d.sync_all().with_context(|| format!("fsyncing directory {}", dir.display()))?;
-    }
-    Ok(path)
+    w.u64(l.next_segment_id);
+    w.u64(l.sampler_seen);
+    w.u32(l.sampler_rng);
+    w.u16(l.quant_lfsr);
 }
 
-/// Read and fully validate the snapshot in `dir`. `Ok(None)` when no
-/// snapshot exists; `Err` on I/O failure or any corruption (bad
-/// magic/version, short file, checksum mismatch, malformed payload).
-pub fn read_snapshot(dir: &Path) -> Result<Option<Snapshot>> {
-    let path = dir.join(SNAPSHOT_FILE);
-    if !path.exists() {
-        return Ok(None);
+fn dec_learner_delta(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Result<LearnerDelta> {
+    let observed = r.u64()?;
+    let updates = r.u64()?;
+    let rationed_cols = r.u64()?;
+    let pending = dec_examples(r, nt, nx, ny)?;
+    let (rng_state, rng_spare) = dec_rng(r)?;
+    let segment_order = r.u64s()?;
+    let n_changed = r.u32()? as usize;
+    let mut changed = Vec::with_capacity(n_changed.min(1 << 20));
+    for _ in 0..n_changed {
+        let id = r.u64()?;
+        changed.push((id, dec_segment(r, ny)?));
     }
-    let raw = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
-    Ok(Some(parse_snapshot(&raw)?))
+    let next_segment_id = r.u64()?;
+    let sampler_seen = r.u64()?;
+    let sampler_rng = r.u32()?;
+    let quant_lfsr = r.u16()?;
+    Ok(LearnerDelta {
+        observed,
+        updates,
+        rationed_cols,
+        pending,
+        rng_state,
+        rng_spare,
+        segment_order,
+        changed,
+        next_segment_id,
+        sampler_seen,
+        sampler_rng,
+        quant_lfsr,
+    })
 }
 
-/// Validate and decode raw snapshot bytes.
-fn parse_snapshot(raw: &[u8]) -> Result<Snapshot> {
+fn enc_scalars(w: &mut LeWriter, s: &SnapshotScalars) {
+    enc_params(w, &s.params);
+    enc_wear(w, &s.wear);
+    w.u64(s.tick);
+    w.u64(s.session_secret);
+    enc_metrics(w, &s.metrics);
+    enc_batcher(w, &s.batcher);
+    enc_pending(w, &s.pending);
+    w.u64(s.touch_counter);
+    enc_store_stats(w, &s.store_stats);
+}
+
+fn dec_scalars(r: &mut LeReader, nh: usize, nx: usize, ny: usize) -> Result<SnapshotScalars> {
+    Ok(SnapshotScalars {
+        params: dec_params(r, nh, nx, ny)?,
+        wear: dec_wear(r)?,
+        tick: r.u64()?,
+        session_secret: r.u64()?,
+        metrics: dec_metrics(r)?,
+        batcher: dec_batcher(r)?,
+        pending: dec_pending(r, nx, ny)?,
+        touch_counter: r.u64()?,
+        store_stats: dec_store_stats(r)?,
+    })
+}
+
+fn encode_full(s: &Snapshot) -> Vec<u8> {
+    let mut w = LeWriter::new();
+    enc_shapes(&mut w, s.nh, s.nx, s.nt, s.ny);
+    w.u64(s.epoch);
+    enc_scalars(&mut w, &s.scalars);
+    enc_sessions(&mut w, &s.sessions);
+    enc_learner(&mut w, &s.learner);
+    w.into_vec()
+}
+
+fn decode_full(buf: &[u8]) -> Result<Snapshot> {
+    let mut r = LeReader::new(buf);
+    let (nh, nx, nt, ny) = dec_shapes(&mut r)?;
+    let epoch = r.u64()?;
+    let scalars = dec_scalars(&mut r, nh, nx, ny)?;
+    let sessions = dec_sessions(&mut r, nh, nt, nx)?;
+    let learner = dec_learner(&mut r, nt, nx, ny)?;
+    r.done()?;
+    Ok(Snapshot { nh, nx, nt, ny, epoch, scalars, sessions, learner })
+}
+
+fn encode_delta(d: &Delta) -> Vec<u8> {
+    let mut w = LeWriter::new();
+    enc_shapes(&mut w, d.nh, d.nx, d.nt, d.ny);
+    w.u64(d.epoch);
+    w.u64(d.seq);
+    enc_scalars(&mut w, &d.scalars);
+    w.u64s(&d.removed);
+    enc_sessions(&mut w, &d.dirty_sessions);
+    enc_learner_delta(&mut w, &d.learner);
+    w.into_vec()
+}
+
+fn decode_delta(buf: &[u8]) -> Result<Delta> {
+    let mut r = LeReader::new(buf);
+    let (nh, nx, nt, ny) = dec_shapes(&mut r)?;
+    let epoch = r.u64()?;
+    let seq = r.u64()?;
+    let scalars = dec_scalars(&mut r, nh, nx, ny)?;
+    let removed = r.u64s()?;
+    let dirty_sessions = dec_sessions(&mut r, nh, nt, nx)?;
+    let learner = dec_learner_delta(&mut r, nt, nx, ny)?;
+    r.done()?;
+    Ok(Delta { nh, nx, nt, ny, epoch, seq, scalars, removed, dirty_sessions, learner })
+}
+
+// ---------------------------------------------------------------- envelope
+
+fn seal(magic: u32, payload: &[u8]) -> Vec<u8> {
+    let mut f = LeWriter::from_vec(Vec::with_capacity(payload.len() + 24));
+    f.u32(magic);
+    f.u32(VERSION);
+    f.u64(payload.len() as u64);
+    f.raw(payload);
+    f.u64(fnv1a64(payload));
+    f.into_vec()
+}
+
+fn unseal(magic: u32, raw: &[u8]) -> Result<&[u8]> {
     ensure!(raw.len() >= 24, "snapshot shorter than its header");
-    let magic = u32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]);
-    ensure!(magic == MAGIC, "bad snapshot magic {magic:#010x}");
+    let got = u32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]);
+    ensure!(got == magic, "bad snapshot magic {got:#010x}");
     let version = u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]);
     ensure!(version == VERSION, "unsupported snapshot version {version}");
     let len64 =
@@ -490,11 +745,222 @@ fn parse_snapshot(raw: &[u8]) -> Result<Snapshot> {
     ]);
     let computed = fnv1a64(payload);
     ensure!(stored == computed, "snapshot checksum mismatch ({stored:#x} != {computed:#x})");
-    decode_payload(payload)
+    Ok(payload)
 }
 
-/// Boot-time restore: load the snapshot in `dir` (if any) into `core`.
-/// A corrupt or shape-mismatched snapshot is reported as
+/// Validate and decode raw full-snapshot bytes.
+fn parse_snapshot(raw: &[u8]) -> Result<Snapshot> {
+    decode_full(unseal(MAGIC, raw)?)
+}
+
+/// Validate and decode raw delta bytes.
+fn parse_delta(raw: &[u8]) -> Result<Delta> {
+    decode_delta(unseal(DELTA_MAGIC, raw)?)
+}
+
+// ------------------------------------------------------------------- file IO
+
+/// Write `bytes` into `dir/name` via temp file + atomic rename;
+/// `fsync` controls whether the data and the rename are forced to disk
+/// before returning (without it a power loss may lose this file — but a
+/// *torn* file is still impossible, the rename is atomic either way).
+fn write_file(dir: &Path, name: &str, bytes: &[u8], fsync: bool) -> Result<PathBuf> {
+    use std::io::Write as _;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let tmp = dir.join(format!("{name}{TMP_SUFFIX}"));
+    let path = dir.join(name);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        if fsync {
+            // data must be on disk BEFORE the rename can be allowed to
+            // commit — otherwise power loss can make the rename durable
+            // with torn data, destroying the previous good file
+            f.sync_all().with_context(|| format!("fsyncing {}", tmp.display()))?;
+        }
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    if fsync {
+        // make the rename itself durable (directory metadata);
+        // directories cannot be opened on every platform, but where they
+        // can, a failing fsync is a real durability error
+        if let Ok(d) = std::fs::File::open(dir) {
+            d.sync_all().with_context(|| format!("fsyncing directory {}", dir.display()))?;
+        }
+    }
+    Ok(path)
+}
+
+fn write_full(state: &Snapshot, dir: &Path, fsync: bool) -> Result<PathBuf> {
+    write_file(dir, SNAPSHOT_FILE, &seal(MAGIC, &encode_full(state)), fsync)
+}
+
+fn write_delta(state: &Delta, dir: &Path, fsync: bool) -> Result<PathBuf> {
+    write_file(dir, &delta_file_name(state.epoch, state.seq), &seal(DELTA_MAGIC, &encode_delta(state)), fsync)
+}
+
+/// Remove delta files from epochs other than `keep_epoch` (compaction
+/// after a full snapshot). Best-effort: leftovers are inert — restore
+/// ignores deltas whose epoch does not match the full snapshot's.
+fn purge_stale_deltas(dir: &Path, keep_epoch: u64) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some((epoch, _)) = parse_delta_name(name) {
+            if epoch != keep_epoch {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- chain
+
+/// Merge one delta into the (staged) base snapshot.
+fn merge_delta(snap: &mut Snapshot, d: Delta) -> Result<()> {
+    ensure!(
+        d.nh == snap.nh && d.nx == snap.nx && d.nt == snap.nt && d.ny == snap.ny,
+        "delta shapes do not match the base snapshot"
+    );
+    ensure!(d.epoch == snap.epoch, "delta epoch does not match the base snapshot");
+    // every scalar travels in every delta: replace them as one unit
+    snap.scalars = d.scalars;
+    // sessions: remove, then upsert the dirty ones; order by exact touch
+    let mut by_id: BTreeMap<u64, SessionSnapshot> =
+        std::mem::take(&mut snap.sessions).into_iter().map(|s| (s.id, s)).collect();
+    for id in &d.removed {
+        by_id.remove(id);
+    }
+    for s in d.dirty_sessions {
+        by_id.insert(s.id, s);
+    }
+    let mut sessions: Vec<SessionSnapshot> = by_id.into_values().collect();
+    sessions.sort_by_key(|s| s.last_touch);
+    snap.sessions = sessions;
+    // learner: rebuild the segment list from the delta's id order; any
+    // id neither in the base nor in the changed set breaks the chain
+    let l = &mut snap.learner;
+    let mut segs: BTreeMap<u64, Vec<QuantizedExample>> = std::mem::take(&mut l.segments)
+        .into_iter()
+        .zip(std::mem::take(&mut l.segment_ids))
+        .map(|(seg, id)| (id, seg))
+        .collect();
+    for (id, seg) in d.learner.changed {
+        segs.insert(id, seg);
+    }
+    let mut segments = Vec::with_capacity(d.learner.segment_order.len());
+    for id in &d.learner.segment_order {
+        let seg = segs
+            .remove(id)
+            .with_context(|| format!("delta references unknown replay segment {id}"))?;
+        segments.push(seg);
+    }
+    l.segments = segments;
+    l.segment_ids = d.learner.segment_order;
+    l.next_segment_id = d.learner.next_segment_id;
+    l.observed = d.learner.observed;
+    l.updates = d.learner.updates;
+    l.rationed_cols = d.learner.rationed_cols;
+    l.pending = d.learner.pending;
+    l.rng_state = d.learner.rng_state;
+    l.rng_spare = d.learner.rng_spare;
+    l.sampler_seen = d.learner.sampler_seen;
+    l.sampler_rng = d.learner.sampler_rng;
+    l.quant_lfsr = d.learner.quant_lfsr;
+    Ok(())
+}
+
+/// Apply the contiguous run of this epoch's deltas (`1..=n`) on top of
+/// `snap`. Lenient by design: a gap, an unreadable/corrupt delta, or a
+/// merge inconsistency ends the chain at the last good prefix — that is
+/// the crash-consistency contract (each delta is a complete consistent
+/// state at its tick). Returns the number of deltas applied.
+fn apply_chain(snap: &mut Snapshot, dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut seqs: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some((epoch, seq)) = parse_delta_name(name) {
+            if epoch == snap.epoch {
+                seqs.push((seq, entry.path()));
+            }
+        }
+    }
+    seqs.sort_by_key(|(seq, _)| *seq);
+    let mut applied = 0;
+    for (i, (seq, path)) in seqs.into_iter().enumerate() {
+        if seq != i as u64 + 1 {
+            break; // gap: later deltas are not a consistent continuation
+        }
+        let Ok(raw) = std::fs::read(&path) else { break };
+        let Ok(delta) = parse_delta(&raw) else { break };
+        if delta.seq != seq {
+            break;
+        }
+        let mut staged = snap.clone();
+        if merge_delta(&mut staged, delta).is_err() {
+            break;
+        }
+        *snap = staged;
+        applied += 1;
+    }
+    applied
+}
+
+/// Read and fully validate the snapshot chain in `dir`: the full
+/// snapshot plus every contiguous delta, merged. `Ok(None)` when no
+/// snapshot exists; `Err` on I/O failure or a corrupt *full* snapshot
+/// (corrupt deltas just end the chain early).
+pub fn read_snapshot(dir: &Path) -> Result<Option<Snapshot>> {
+    let path = dir.join(SNAPSHOT_FILE);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let raw = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let mut snap = parse_snapshot(&raw)?;
+    apply_chain(&mut snap, dir);
+    Ok(Some(snap))
+}
+
+// ----------------------------------------------------------- sync variants
+
+/// Synchronously write a **full** snapshot of `core` into `dir`
+/// (everything fsynced) and start a new chain epoch — the simple
+/// one-call durability path for tests, benches and embedders. The
+/// server's periodic path is [`ServeCore::snapshot_async`].
+pub fn save_checkpoint(core: &mut ServeCore, dir: &Path) -> Result<PathBuf> {
+    let wear = core.fetch_wear()?;
+    let epoch = random_epoch();
+    let state = core.full_state(epoch, wear);
+    core.chain_epoch = epoch;
+    core.next_delta_seq = 1;
+    core.snapshots_taken += 1;
+    let path = write_full(&state, dir, true)?;
+    purge_stale_deltas(dir, epoch);
+    Ok(path)
+}
+
+/// Synchronously write a **delta** snapshot against the current chain
+/// (requires a preceding [`save_checkpoint`] in this process lifetime).
+pub fn save_delta(core: &mut ServeCore, dir: &Path) -> Result<PathBuf> {
+    let wear = core.fetch_wear()?;
+    ensure!(core.chain_epoch != 0, "no full snapshot to delta against (save_checkpoint first)");
+    let seq = core.next_delta_seq;
+    core.next_delta_seq += 1;
+    core.snapshots_taken += 1;
+    let state = core.delta_state(core.chain_epoch, seq, wear);
+    write_delta(&state, dir, true)
+}
+
+// ---------------------------------------------------------------- restore
+
+/// Boot-time restore: load the snapshot chain in `dir` (if any) into
+/// `core`. A corrupt or shape-mismatched full snapshot is reported as
 /// [`RestoreOutcome::Corrupt`] so the server can boot fresh with a
 /// warning. Filesystem read failures and a failing weight restore
 /// (substrate cannot load weights) are hard errors instead: a transient
@@ -506,7 +972,7 @@ pub fn try_restore(core: &mut ServeCore, dir: &Path) -> Result<RestoreOutcome> {
         return Ok(RestoreOutcome::Fresh);
     }
     let raw = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
-    let snap = match parse_snapshot(&raw) {
+    let mut snap = match parse_snapshot(&raw) {
         Ok(s) => s,
         Err(e) => return Ok(RestoreOutcome::Corrupt { error: e.to_string() }),
     };
@@ -519,17 +985,26 @@ pub fn try_restore(core: &mut ServeCore, dir: &Path) -> Result<RestoreOutcome> {
             ),
         });
     }
-    core.engine.restore_params(&snap.params)?;
-    core.tick = snap.tick;
-    core.session_secret = snap.session_secret;
+    let deltas = apply_chain(&mut snap, dir);
+    let Snapshot { scalars, sessions, learner, .. } = snap;
+    let tick = scalars.tick;
+    core.restore_weights(scalars.params, scalars.wear)?;
+    core.tick = scalars.tick;
+    core.session_secret = scalars.session_secret;
     let wall = core.metrics.wall;
-    core.metrics = snap.metrics;
+    core.metrics = scalars.metrics;
     core.metrics.wall = wall;
-    core.batcher.stats = snap.batcher;
-    let restored = snap.sessions.len();
-    core.store.restore(snap.touch_counter, snap.store_stats, snap.sessions);
-    core.learner.restore(snap.learner);
-    Ok(RestoreOutcome::Restored { sessions: restored, tick: snap.tick })
+    core.batcher.stats = scalars.batcher;
+    core.batcher.restore_queue(scalars.pending);
+    let restored = sessions.len();
+    core.store.restore(scalars.touch_counter, scalars.store_stats, sessions);
+    core.learner.restore(learner);
+    // the restored dirty baselines are unknown: start a fresh chain, so
+    // the next snapshot is a full one
+    core.chain_epoch = 0;
+    core.next_delta_seq = 1;
+    core.snapshots_taken = 0;
+    Ok(RestoreOutcome::Restored { sessions: restored, tick, deltas })
 }
 
 #[cfg(test)]
@@ -576,6 +1051,22 @@ mod tests {
             }
             core.advance_tick();
         }
+        // commit losses land with their outcomes; settle them so
+        // signatures and snapshots below see the complete state
+        core.sync_commits().unwrap();
+    }
+
+    fn delta_files(d: &Path) -> Vec<String> {
+        let mut out: Vec<String> = std::fs::read_dir(d)
+            .map(|it| {
+                it.flatten()
+                    .filter_map(|e| e.file_name().to_str().map(str::to_string))
+                    .filter(|n| parse_delta_name(n).is_some())
+                    .collect()
+            })
+            .unwrap_or_default();
+        out.sort();
+        out
     }
 
     #[test]
@@ -585,14 +1076,15 @@ mod tests {
         let mut a = small_core(3);
         let mut w = SyntheticWorkload::new(&net, 6, 3);
         feed(&mut a, &mut w, 80);
-        let path = save_checkpoint(&a, &d).unwrap();
+        let path = save_checkpoint(&mut a, &d).unwrap();
         assert!(path.exists());
 
         let mut b = small_core(3);
         match try_restore(&mut b, &d).unwrap() {
-            RestoreOutcome::Restored { sessions, tick } => {
+            RestoreOutcome::Restored { sessions, tick, deltas } => {
                 assert!(sessions > 0);
                 assert_eq!(tick, a.tick());
+                assert_eq!(deltas, 0);
             }
             other => panic!("expected restore, got {other:?}"),
         }
@@ -611,6 +1103,120 @@ mod tests {
             a.metrics().signature(&a.store().stats),
             "restored core must continue bit-identically"
         );
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn delta_chain_restores_bitwise_and_queued_requests_survive() {
+        let d = dir("chain");
+        let net = NetConfig::SMALL;
+        // reference: one uninterrupted core over the same three 40-request
+        // segments (each `feed` ends with the driver's tail flush, which
+        // dispatches deferred same-session duplicates — the reference
+        // must see identical flush boundaries to be comparable)
+        let mut reference = small_core(9);
+        let mut wr = SyntheticWorkload::new(&net, 6, 9);
+        feed(&mut reference, &mut wr, 40);
+        feed(&mut reference, &mut wr, 40);
+        feed(&mut reference, &mut wr, 40);
+
+        // chained: full after 40, deltas after 80 and 120
+        let mut a = small_core(9);
+        let mut w = SyntheticWorkload::new(&net, 6, 9);
+        feed(&mut a, &mut w, 40);
+        save_checkpoint(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 40);
+        save_delta(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 40);
+        // leave two requests queued (not drained): crash snapshots must
+        // carry the batcher's pending queue
+        let (u1, x1, l1) = w.next();
+        a.submit(session_id_for_user(u1), x1, l1, 0);
+        let (u2, x2, l2) = w.next();
+        a.submit(session_id_for_user(u2), x2, l2, 0);
+        save_delta(&mut a, &d).unwrap();
+        assert_eq!(delta_files(&d).len(), 2, "two deltas on the chain");
+
+        let mut b = small_core(9);
+        match try_restore(&mut b, &d).unwrap() {
+            RestoreOutcome::Restored { sessions, tick, deltas } => {
+                assert!(sessions > 0);
+                assert_eq!(tick, a.tick());
+                assert_eq!(deltas, 2, "both deltas must apply");
+            }
+            other => panic!("expected restore, got {other:?}"),
+        }
+        assert_eq!(b.store().snapshot_slots(), a.store().snapshot_slots());
+        assert_eq!(
+            b.metrics().signature(&b.store().stats),
+            reference.metrics().signature(&reference.store().stats),
+            "chain restore must reproduce the uninterrupted run's state"
+        );
+        // the queued requests came back and are servable
+        assert_eq!(b.batcher.queued(), a.batcher.queued());
+        assert_eq!(b.batcher.queued().len(), 2);
+        let served = b.flush_all().unwrap();
+        assert_eq!(served.len(), 2, "restored queue must dispatch");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn compaction_purges_stale_deltas() {
+        let d = dir("compact");
+        let net = NetConfig::SMALL;
+        let mut a = small_core(4);
+        let mut w = SyntheticWorkload::new(&net, 4, 4);
+        feed(&mut a, &mut w, 30);
+        save_checkpoint(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 10);
+        save_delta(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 10);
+        save_delta(&mut a, &d).unwrap();
+        assert_eq!(delta_files(&d).len(), 2);
+        // a new full snapshot starts a fresh epoch and compacts the chain
+        save_checkpoint(&mut a, &d).unwrap();
+        assert!(delta_files(&d).is_empty(), "compaction must remove old deltas");
+        let snap = read_snapshot(&d).unwrap().unwrap();
+        assert_eq!(snap.scalars.tick, a.tick());
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_or_gapped_deltas_restore_the_good_prefix() {
+        let d = dir("prefix");
+        let net = NetConfig::SMALL;
+        let mut a = small_core(6);
+        let mut w = SyntheticWorkload::new(&net, 4, 6);
+        feed(&mut a, &mut w, 30);
+        save_checkpoint(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 10);
+        let tick_after_one = a.tick();
+        save_delta(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 10);
+        save_delta(&mut a, &d).unwrap();
+        let files = delta_files(&d);
+        assert_eq!(files.len(), 2);
+        // corrupt the second delta: restore applies only the first
+        let p2 = d.join(&files[1]);
+        let mut raw = std::fs::read(&p2).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        std::fs::write(&p2, &raw).unwrap();
+        let mut b = small_core(6);
+        match try_restore(&mut b, &d).unwrap() {
+            RestoreOutcome::Restored { tick, deltas, .. } => {
+                assert_eq!(deltas, 1, "chain must stop at the corrupt delta");
+                assert_eq!(tick, tick_after_one);
+            }
+            other => panic!("expected restore, got {other:?}"),
+        }
+        // remove the first delta entirely: the gap drops the whole tail
+        std::fs::remove_file(d.join(&files[0])).unwrap();
+        let mut c = small_core(6);
+        match try_restore(&mut c, &d).unwrap() {
+            RestoreOutcome::Restored { deltas, .. } => assert_eq!(deltas, 0),
+            other => panic!("expected restore, got {other:?}"),
+        }
         let _ = std::fs::remove_dir_all(&d);
     }
 
@@ -637,7 +1243,7 @@ mod tests {
         let mut a = small_core(2);
         let mut w = SyntheticWorkload::new(&net, 4, 2);
         feed(&mut a, &mut w, 30);
-        save_checkpoint(&a, &d).unwrap();
+        save_checkpoint(&mut a, &d).unwrap();
         let mut raw = std::fs::read(d.join(SNAPSHOT_FILE)).unwrap();
         let mid = raw.len() / 2;
         raw[mid] ^= 0xFF;
@@ -658,7 +1264,7 @@ mod tests {
         let mut a = small_core(5);
         let mut w = SyntheticWorkload::new(&net, 4, 5);
         feed(&mut a, &mut w, 20);
-        save_checkpoint(&a, &d).unwrap();
+        save_checkpoint(&mut a, &d).unwrap();
         // a core with different shapes must refuse the snapshot gracefully
         let run = RunConfig::default();
         let mut other = ServeCore::new(NetConfig::PMNIST100, &run).unwrap();

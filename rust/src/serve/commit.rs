@@ -1,0 +1,275 @@
+//! The async commit pipeline: a background **committer thread** owns the
+//! mutable weights; the serve loop only ever reads an immutable,
+//! atomically swapped weight snapshot (DESIGN.md §10).
+//!
+//! ## Protocol
+//!
+//! ```text
+//! serve thread                          committer thread
+//! ------------                          ----------------
+//! step batches against Arc<snapshot g>
+//! window fills → enqueue Commit{g+1} ─▶ train_whole_guarded (single writer)
+//! keep serving at generation g          publish Arc<snapshot g+1> (swap)
+//! ...                                   send Outcome::Commit{g+1, loss, ...}
+//! next dispatch: await gen g+1 ◀──────── (already done in the common case)
+//! ```
+//!
+//! * **Generation counter** — every commit carries the generation it
+//!   produces; the serve loop tags each dispatched batch with the
+//!   generation it stepped against ([`super::CompletedStep::gen`]).
+//! * **Deterministic visibility** — before dispatching a batch, the
+//!   serve loop waits until every commit it has *enqueued* is applied
+//!   and adopts the new snapshot. Commit visibility is therefore exactly
+//!   the synchronous single-thread semantics (a commit triggered by
+//!   batch N is visible from batch N+1 on), bit-for-bit, while the
+//!   commit's gradient/programming work overlaps response routing,
+//!   socket traffic and snapshot writes instead of stalling them.
+//! * **Bounded queue** — the job channel holds at most
+//!   `serve.commit_queue_depth` jobs; a serve loop outrunning its
+//!   committer blocks on enqueue (back-pressure) rather than buffering
+//!   unboundedly.
+//! * **Snapshot I/O off-thread** — durable snapshot writes
+//!   ([`super::checkpoint`]) travel the same FIFO queue, so a snapshot
+//!   job observes exactly the commits enqueued before it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::{ComputeBackend, WearState};
+use crate::coordinator::ParallelEngine;
+use crate::nn::{MiruParams, SeqBatch};
+
+use super::checkpoint::{write_snapshot_job, SnapshotJob};
+
+/// An immutable weight snapshot at a known commit generation. The serve
+/// loop steps sessions against exactly one of these per dispatched
+/// batch; the committer publishes a fresh one after every applied
+/// commit (and after a restore).
+pub struct WeightSnapshot {
+    /// Commits applied to produce these weights (0 = boot weights).
+    pub gen: u64,
+    /// The substrate's effective weights at that generation.
+    pub params: MiruParams,
+}
+
+/// Substrate-side facts the serve thread cannot read directly anymore
+/// (the committer owns the backend): report lines and the lifespan
+/// projection. Refreshed with every committer outcome and cached by
+/// [`super::ServeCore`]. The (large, per-device) wear record is *not*
+/// carried here — snapshots fetch it on demand with [`Job::ReadWear`],
+/// so the commit hot path never copies wear counters.
+#[derive(Clone, Debug, Default)]
+pub struct SubstrateStatus {
+    pub stats: Vec<String>,
+    pub lifespan_years: Option<f64>,
+}
+
+impl SubstrateStatus {
+    pub(crate) fn of(backend: &dyn ComputeBackend) -> SubstrateStatus {
+        SubstrateStatus {
+            stats: backend.stats(),
+            lifespan_years: backend.projected_lifespan_years(),
+        }
+    }
+}
+
+/// The atomically swapped snapshot cell. The committer stores, the serve
+/// loop (and anything else holding the handle) loads; a load is one
+/// mutex-guarded `Arc::clone` — never a weight copy.
+pub(crate) struct WeightCell {
+    gen: AtomicU64,
+    slot: Mutex<Arc<WeightSnapshot>>,
+}
+
+impl WeightCell {
+    fn new(snap: Arc<WeightSnapshot>) -> WeightCell {
+        WeightCell { gen: AtomicU64::new(snap.gen), slot: Mutex::new(snap) }
+    }
+
+    pub(crate) fn load(&self) -> Arc<WeightSnapshot> {
+        self.slot.lock().expect("weight cell poisoned").clone()
+    }
+
+    fn store(&self, snap: Arc<WeightSnapshot>) {
+        let gen = snap.gen;
+        *self.slot.lock().expect("weight cell poisoned") = snap;
+        // published after the slot so `gen()` never reports a generation
+        // that `load()` cannot yet observe
+        self.gen.store(gen, Ordering::SeqCst);
+    }
+
+    pub(crate) fn gen(&self) -> u64 {
+        self.gen.load(Ordering::SeqCst)
+    }
+}
+
+/// Work queued to the committer thread, in strict FIFO order.
+pub(crate) enum Job {
+    /// Apply one finalized training window, producing generation `gen`.
+    Commit { gen: u64, batch: SeqBatch, wear_ratio: f32 },
+    /// Write a durable snapshot (full or delta) assembled by the serve
+    /// thread — file encoding and fsync happen on the committer.
+    Snapshot(SnapshotJob),
+    /// Boot-time restore: load checkpointed weights (and wear) into the
+    /// substrate and republish the snapshot.
+    Restore { params: MiruParams, wear: Option<WearState> },
+    /// Read the substrate's durable wear record (snapshot assembly).
+    ReadWear,
+}
+
+/// What the committer reports back, in job order.
+pub(crate) enum Outcome {
+    Commit { gen: u64, loss: f32, rationed: u64, status: SubstrateStatus },
+    Snapshot { path: std::path::PathBuf },
+    Restored { status: SubstrateStatus },
+    Wear { wear: Option<WearState> },
+    /// A job failed; the serve loop surfaces this as a hard error.
+    Failed { what: &'static str, error: String },
+}
+
+/// Handle to the committer thread held by [`super::ServeCore`].
+pub(crate) struct Committer {
+    jobs: Option<SyncSender<Job>>,
+    results: Receiver<Outcome>,
+    cell: Arc<WeightCell>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Committer {
+    /// Move `engine` onto a fresh committer thread. Returns the handle,
+    /// the boot weight snapshot (generation 0) and the boot substrate
+    /// status, both read before the engine crosses threads.
+    pub(crate) fn spawn(
+        engine: ParallelEngine,
+        queue_depth: usize,
+    ) -> (Committer, Arc<WeightSnapshot>, SubstrateStatus) {
+        let snap =
+            Arc::new(WeightSnapshot { gen: 0, params: engine.backend().effective_params() });
+        let status = SubstrateStatus::of(engine.backend());
+        let cell = Arc::new(WeightCell::new(snap.clone()));
+        let (jtx, jrx) = sync_channel::<Job>(queue_depth.max(1));
+        let (rtx, rrx) = channel::<Outcome>();
+        let thread_cell = cell.clone();
+        let handle = std::thread::Builder::new()
+            .name("m2ru-committer".to_string())
+            .spawn(move || committer_loop(engine, thread_cell, jrx, rtx))
+            .expect("spawning the committer thread");
+        (Committer { jobs: Some(jtx), results: rrx, cell, handle: Some(handle) }, snap, status)
+    }
+
+    /// Enqueue a job; blocks when `commit_queue_depth` jobs are in
+    /// flight (back-pressure toward the serve loop).
+    pub(crate) fn send(&self, job: Job) -> Result<()> {
+        self.jobs
+            .as_ref()
+            .ok_or_else(|| anyhow!("committer already shut down"))?
+            .send(job)
+            .map_err(|_| anyhow!("committer thread is gone"))
+    }
+
+    /// Block for the next outcome.
+    pub(crate) fn recv(&self) -> Result<Outcome> {
+        self.results.recv().map_err(|_| anyhow!("committer thread is gone"))
+    }
+
+    /// Non-blocking outcome poll. `Ok(None)` when nothing is ready.
+    pub(crate) fn try_recv(&self) -> Result<Option<Outcome>> {
+        match self.results.try_recv() {
+            Ok(o) => Ok(Some(o)),
+            Err(TryRecvError::Empty) => Ok(None),
+            // after shutdown the committer is gone but queued outcomes
+            // were already drained; treat a closed, empty channel as done
+            Err(TryRecvError::Disconnected) => Ok(None),
+        }
+    }
+
+    /// The current published snapshot.
+    pub(crate) fn load(&self) -> Arc<WeightSnapshot> {
+        self.cell.load()
+    }
+
+    /// Close the job queue and join the thread; a panicked committer is
+    /// a hard error (its queued jobs — including snapshot writes — died
+    /// with it). Outcomes already sent stay readable via `try_recv`.
+    /// Idempotent.
+    pub(crate) fn shutdown(&mut self) -> Result<()> {
+        self.jobs.take();
+        if let Some(h) = self.handle.take() {
+            if h.join().is_err() {
+                anyhow::bail!("committer thread panicked; queued jobs were lost");
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Committer {
+    fn drop(&mut self) {
+        // best-effort teardown; panics cannot propagate out of Drop
+        self.jobs.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The committer thread body: apply jobs in FIFO order; after every
+/// weight mutation publish a fresh snapshot *before* reporting the
+/// outcome, so a serve loop that has seen generation `g`'s outcome can
+/// always load a snapshot of generation ≥ `g`.
+fn committer_loop(
+    mut engine: ParallelEngine,
+    cell: Arc<WeightCell>,
+    jobs: Receiver<Job>,
+    out: Sender<Outcome>,
+) {
+    while let Ok(job) = jobs.recv() {
+        let outcome = match job {
+            Job::Commit { gen, batch, wear_ratio } => {
+                match engine.train_whole_guarded(&batch, wear_ratio) {
+                    Ok((loss, rationed)) => {
+                        cell.store(Arc::new(WeightSnapshot {
+                            gen,
+                            params: engine.backend().effective_params(),
+                        }));
+                        let status = SubstrateStatus::of(engine.backend());
+                        Outcome::Commit { gen, loss, rationed, status }
+                    }
+                    Err(e) => Outcome::Failed { what: "commit", error: e.to_string() },
+                }
+            }
+            Job::Snapshot(job) => match write_snapshot_job(job) {
+                Ok(path) => Outcome::Snapshot { path },
+                Err(e) => Outcome::Failed { what: "snapshot", error: e.to_string() },
+            },
+            Job::Restore { params, wear } => {
+                let mut res = engine.restore_params(&params);
+                if res.is_ok() {
+                    if let Some(w) = &wear {
+                        res = engine.restore_wear(w);
+                    }
+                }
+                match res {
+                    Ok(()) => {
+                        cell.store(Arc::new(WeightSnapshot {
+                            gen: cell.gen(),
+                            params: engine.backend().effective_params(),
+                        }));
+                        Outcome::Restored { status: SubstrateStatus::of(engine.backend()) }
+                    }
+                    Err(e) => Outcome::Failed { what: "restore", error: e.to_string() },
+                }
+            }
+            Job::ReadWear => Outcome::Wear { wear: engine.backend().wear_state() },
+        };
+        if out.send(outcome).is_err() {
+            // the serve side is gone; nothing left to report to
+            break;
+        }
+    }
+    engine.drain();
+}

@@ -14,10 +14,24 @@
 //!    exhausted — no future arrival can fill a batch);
 //! 3. [`ServeCore::advance_tick`].
 //!
+//! ## The serve thread never mutates weights
+//!
+//! The hot loop above performs **no weight mutation, no snapshot I/O and
+//! no socket writes** (DESIGN.md §10). Dispatch reads an immutable,
+//! atomically swapped [`WeightSnapshot`]; finalized training windows and
+//! durable snapshot writes queue to the background committer thread
+//! ([`super::commit`]), and commit visibility is pinned to batch
+//! boundaries by a generation watermark — bit-identical to applying the
+//! commits inline, minus the stall. Each [`CompletedStep`] carries the
+//! weight generation it was computed against.
+//!
 //! Checkpoint/restore (`serve::checkpoint`) snapshots everything behind
-//! this surface: weights, session slabs, history rings, the learner's
-//! replay segments and RNG streams, deterministic metrics, and the tick.
+//! this surface: weights, wear, session slabs, the batcher's pending
+//! queue, the learner's replay segments and RNG streams, deterministic
+//! metrics, and the tick.
 
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -26,10 +40,17 @@ use crate::backend::{BackendCtx, BackendRegistry};
 use crate::config::{NetConfig, RunConfig};
 use crate::coordinator::ParallelEngine;
 use crate::linalg::{argmax_rows, Mat};
+use crate::nn::MiruParams;
+
+use crate::backend::WearState;
 
 use super::batcher::{DynamicBatcher, StepRequest};
+use super::checkpoint::{
+    random_epoch, Delta, Snapshot, SnapshotJob, SnapshotPolicy, SnapshotScalars,
+};
+use super::commit::{Committer, Job, Outcome, SubstrateStatus, WeightSnapshot};
 use super::metrics::ServeMetrics;
-use super::online::OnlineLearner;
+use super::online::{CommitBatch, OnlineLearner};
 use super::session::SessionStore;
 
 /// One served request, reported back to the frontend for delivery.
@@ -46,11 +67,32 @@ pub struct CompletedStep {
     pub label: Option<usize>,
     /// Routing tag the request carried (connection id; 0 from the driver).
     pub tag: u64,
+    /// Weight generation (commits applied) this step was computed
+    /// against — the ordering witness of the async commit pipeline.
+    pub gen: u64,
 }
 
 /// The serve loop's entire mutable state.
 pub struct ServeCore {
-    pub(crate) engine: ParallelEngine,
+    /// Read-path engine: a boot-time fork of the backend used *only*
+    /// through the snapshot-driven step/readout entry points (its own
+    /// internal weights are never consulted after boot).
+    pub(crate) stepper: ParallelEngine,
+    /// Handle to the single-writer committer thread that owns the real
+    /// backend (weights + wear).
+    pub(crate) committer: Committer,
+    /// The adopted weight snapshot; swapped forward at generation
+    /// watermarks (never mid-batch).
+    pub(crate) weights: Arc<WeightSnapshot>,
+    /// Commit generations handed to the committer so far.
+    pub(crate) enqueued_gen: u64,
+    /// Commit generations whose outcomes this loop has absorbed.
+    pub(crate) applied_gen: u64,
+    /// Cached substrate facts from the last committer outcome.
+    pub(crate) status: SubstrateStatus,
+    /// Test/bench hook: wait for every commit immediately after
+    /// enqueueing it (the synchronous baseline; bit-identical results).
+    pub(crate) commit_sync: bool,
     pub(crate) store: SessionStore,
     pub(crate) batcher: DynamicBatcher,
     pub(crate) learner: OnlineLearner,
@@ -69,11 +111,22 @@ pub struct ServeCore {
     /// synthetic driver turns this off unless it records steps, keeping
     /// the per-request cost of the benchmarked hot path flat.
     pub(crate) collect_logits: bool,
+    /// Snapshot-chain bookkeeping: the epoch of the last full snapshot
+    /// (0 = none yet — the next snapshot must be full).
+    pub(crate) chain_epoch: u64,
+    /// Sequence number of the next delta in the current chain.
+    pub(crate) next_delta_seq: u64,
+    /// Snapshots taken since boot (drives the full-vs-delta cadence).
+    pub(crate) snapshots_taken: u64,
+    /// Where the most recent completed snapshot landed.
+    pub(crate) last_snapshot_path: Option<PathBuf>,
 }
 
 impl ServeCore {
     /// Build the full serve stack from a run configuration (backend via
     /// the registry, store/batcher/learner from the `[serve]` policy).
+    /// Spawns the committer thread, which takes ownership of the
+    /// mutable backend; the serve loop keeps a fork for pure reads.
     pub fn new(net: NetConfig, run: &RunConfig) -> Result<ServeCore> {
         run.validate()?;
         let cfg = run.serve.clone();
@@ -81,9 +134,19 @@ impl ServeCore {
         let backend = BackendRegistry::with_defaults()
             .create(&run.backend, &ctx)
             .with_context(|| format!("creating serve backend `{}`", run.backend))?;
-        let engine = ParallelEngine::new(backend, run.workers);
+        let read_fork = backend.fork().with_context(|| {
+            format!("backend `{}` cannot serve streams (read-path fork required)", run.backend)
+        })?;
+        let (committer, weights, status) =
+            Committer::spawn(ParallelEngine::new(backend, run.workers), cfg.commit_queue_depth);
         Ok(ServeCore {
-            engine,
+            stepper: ParallelEngine::new(read_fork, run.workers),
+            committer,
+            weights,
+            enqueued_gen: 0,
+            applied_gen: 0,
+            status,
+            commit_sync: false,
             store: SessionStore::new(net.nh, net.nx, net.nt, cfg.capacity, cfg.ttl),
             batcher: DynamicBatcher::new(cfg.max_batch, cfg.max_wait),
             learner: OnlineLearner::new(net.nt, net.nx, &cfg, run.seed),
@@ -94,6 +157,10 @@ impl ServeCore {
             tick: 0,
             session_secret: super::session::DEFAULT_SESSION_SECRET,
             collect_logits: true,
+            chain_epoch: 0,
+            next_delta_seq: 1,
+            snapshots_taken: 0,
+            last_snapshot_path: None,
         })
     }
 
@@ -111,6 +178,13 @@ impl ServeCore {
     /// Toggle logits collection in completed steps (see `collect_logits`).
     pub fn set_collect_logits(&mut self, on: bool) {
         self.collect_logits = on;
+    }
+
+    /// Test/bench hook: `true` makes every commit apply synchronously
+    /// (enqueue, then wait) — the pre-pipeline baseline. Results are
+    /// bit-identical either way; only the serve-loop latency differs.
+    pub fn set_commit_sync(&mut self, on: bool) {
+        self.commit_sync = on;
     }
 
     /// Current logical tick.
@@ -133,9 +207,22 @@ impl ServeCore {
         &self.store
     }
 
-    /// Deterministic + timing metrics accumulated so far.
+    /// Deterministic + timing metrics accumulated so far. Commit losses
+    /// land when their outcomes are absorbed; call
+    /// [`ServeCore::sync_commits`] (or [`ServeCore::report`]) first when
+    /// comparing loss-bearing fields mid-run.
     pub fn metrics(&self) -> &ServeMetrics {
         &self.metrics
+    }
+
+    /// The adopted weight generation (commits visible to dispatch).
+    pub fn generation(&self) -> u64 {
+        self.weights.gen
+    }
+
+    /// Commit generations enqueued to the committer so far.
+    pub fn commits_enqueued(&self) -> u64 {
+        self.enqueued_gen
     }
 
     /// Record the run's wall-clock time (timing metrics only — never
@@ -144,10 +231,11 @@ impl ServeCore {
         self.metrics.wall = wall;
     }
 
-    /// Release per-worker engine resources (fork cache) ahead of a
-    /// checkpoint or shutdown.
+    /// Release the read-path engine's per-worker resources ahead of a
+    /// checkpoint or shutdown (the committer's engine drains when its
+    /// thread exits).
     pub fn drain_engine(&mut self) {
-        self.engine.drain();
+        self.stepper.drain();
     }
 
     /// Enqueue one single-timestep request at the current tick.
@@ -182,26 +270,261 @@ impl ServeCore {
         Ok(out)
     }
 
-    /// Assemble the serve report (used by both frontends).
-    pub fn report(&self, sessions: usize) -> super::ServeReport {
-        super::ServeReport {
+    /// Assemble the serve report (used by both frontends). Waits for any
+    /// in-flight commits first so loss/wear metrics are complete.
+    pub fn report(&mut self, sessions: usize) -> Result<super::ServeReport> {
+        self.sync_commits()?;
+        Ok(super::ServeReport {
             metrics: self.metrics.clone(),
             store: self.store.stats.clone(),
             batcher: self.batcher.stats.clone(),
             backend: self.backend_name.clone(),
-            workers: self.engine.workers(),
+            workers: self.stepper.workers(),
             sessions,
-            backend_stats: self.engine.stats(),
-            lifespan_years: self.engine.backend().projected_lifespan_years(),
+            backend_stats: self.status.stats.clone(),
+            lifespan_years: self.status.lifespan_years,
             completed: Vec::new(),
+        })
+    }
+
+    // ---------------------------------------------- commit pipeline
+
+    /// Wait until every enqueued commit has been applied and absorbed,
+    /// then drain any other pending outcomes (snapshot completions).
+    pub fn sync_commits(&mut self) -> Result<()> {
+        self.await_gen(self.enqueued_gen)?;
+        while let Some(o) = self.committer.try_recv()? {
+            self.absorb(o)?;
+        }
+        Ok(())
+    }
+
+    /// Complete every queued committer job (commits *and* snapshot
+    /// writes), stop the committer thread, and surface any failure —
+    /// including a committer panic, which takes its queued jobs with
+    /// it. The core keeps serving reads afterwards, but further commits
+    /// or snapshots error. Returns the last completed snapshot path.
+    pub fn finish(&mut self) -> Result<Option<PathBuf>> {
+        self.committer.shutdown()?;
+        while let Some(o) = self.committer.try_recv()? {
+            self.absorb(o)?;
+        }
+        Ok(self.last_snapshot_path.clone())
+    }
+
+    /// Block until the adopted generation reaches `target`, absorbing
+    /// outcomes in order.
+    fn await_gen(&mut self, target: u64) -> Result<()> {
+        while self.applied_gen < target {
+            let o = self.committer.recv()?;
+            self.absorb(o)?;
+        }
+        if self.weights.gen < target {
+            self.weights = self.committer.load();
+        }
+        Ok(())
+    }
+
+    /// Fold one committer outcome into serve-side state.
+    fn absorb(&mut self, o: Outcome) -> Result<()> {
+        match o {
+            Outcome::Commit { gen, loss, rationed, status } => {
+                anyhow::ensure!(
+                    gen == self.applied_gen + 1,
+                    "commit generations out of order: applied {} then received {gen}",
+                    self.applied_gen
+                );
+                self.applied_gen = gen;
+                self.metrics.online_loss_sum += f64::from(loss);
+                self.learner.rationed_cols += rationed;
+                self.metrics.wear_rationed = self.learner.rationed_cols;
+                self.status = status;
+                Ok(())
+            }
+            Outcome::Snapshot { path } => {
+                self.last_snapshot_path = Some(path);
+                Ok(())
+            }
+            Outcome::Restored { status } => {
+                self.status = status;
+                Ok(())
+            }
+            // wear reads are consumed inline by `fetch_wear`; a stray
+            // one (nothing waits for it anymore) is harmless
+            Outcome::Wear { .. } => Ok(()),
+            Outcome::Failed { what, error } => {
+                anyhow::bail!("{what} failed on the committer thread: {error}")
+            }
         }
     }
 
+    /// Read the substrate's durable wear record from the committer
+    /// (snapshot assembly; the large per-device counters are fetched on
+    /// demand instead of riding every commit outcome).
+    pub(crate) fn fetch_wear(&mut self) -> Result<Option<WearState>> {
+        self.sync_commits()?;
+        self.committer.send(Job::ReadWear)?;
+        loop {
+            match self.committer.recv()? {
+                Outcome::Wear { wear } => return Ok(wear),
+                other => self.absorb(other)?,
+            }
+        }
+    }
+
+    /// Hand a finalized training window to the committer as the next
+    /// generation. Never blocks on the training itself — only on a full
+    /// commit queue (`serve.commit_queue_depth` back-pressure).
+    fn enqueue_commit(&mut self, cb: CommitBatch) -> Result<()> {
+        self.enqueued_gen += 1;
+        self.metrics.online_updates += 1;
+        self.committer.send(Job::Commit {
+            gen: self.enqueued_gen,
+            batch: cb.batch,
+            wear_ratio: cb.wear_ratio,
+        })?;
+        if self.commit_sync {
+            self.sync_commits()?;
+        }
+        Ok(())
+    }
+
+    /// Boot-time weight restore: load checkpointed weights (and wear)
+    /// into the committer-owned substrate and adopt the republished
+    /// snapshot. Hard error if the substrate cannot load them.
+    pub(crate) fn restore_weights(
+        &mut self,
+        params: MiruParams,
+        wear: Option<crate::backend::WearState>,
+    ) -> Result<()> {
+        self.committer.send(Job::Restore { params, wear })?;
+        loop {
+            match self.committer.recv()? {
+                Outcome::Restored { status } => {
+                    self.status = status;
+                    break;
+                }
+                other => self.absorb(other)?,
+            }
+        }
+        self.weights = self.committer.load();
+        Ok(())
+    }
+
+    // ---------------------------------------------- durable snapshots
+
+    /// Queue a durable snapshot of the current state to the committer
+    /// thread (the serve loop does no file I/O). Every
+    /// `policy.full_every`-th snapshot — and always the first of a chain
+    /// — is a full rewrite under a fresh epoch; the rest are deltas
+    /// holding only the sessions/segments dirtied since the previous
+    /// snapshot. Returns the path the snapshot will land at.
+    pub fn snapshot_async(&mut self, dir: &Path, policy: &SnapshotPolicy) -> Result<PathBuf> {
+        // snapshots must be internally consistent: the weights/wear in
+        // the file have to match the learner counters at assembly time
+        // (fetch_wear syncs the committer before reading)
+        let wear = self.fetch_wear()?;
+        let full = self.chain_epoch == 0
+            || policy.full_every <= 1
+            || self.snapshots_taken % policy.full_every == 0;
+        let job = if full {
+            let epoch = random_epoch();
+            let state = self.full_state(epoch, wear);
+            self.chain_epoch = epoch;
+            self.next_delta_seq = 1;
+            SnapshotJob::Full {
+                state: Box::new(state),
+                dir: dir.to_path_buf(),
+                fsync: policy.fsync_full(),
+            }
+        } else {
+            let seq = self.next_delta_seq;
+            self.next_delta_seq += 1;
+            let state = self.delta_state(self.chain_epoch, seq, wear);
+            SnapshotJob::Delta {
+                state: Box::new(state),
+                dir: dir.to_path_buf(),
+                fsync: policy.fsync_delta(),
+            }
+        };
+        let path = job.path();
+        self.snapshots_taken += 1;
+        self.committer.send(Job::Snapshot(job))?;
+        Ok(path)
+    }
+
+    /// The scalar half of a snapshot — everything small enough to ride
+    /// in every file, full or delta.
+    fn scalars_state(&self, wear: Option<WearState>) -> SnapshotScalars {
+        // wall clock and latency samples are measurements, not state
+        let mut metrics = self.metrics.clone();
+        metrics.latencies_us = Vec::new();
+        metrics.latency_cursor = 0;
+        SnapshotScalars {
+            params: self.weights.params.clone(),
+            wear,
+            tick: self.tick,
+            session_secret: self.session_secret,
+            metrics,
+            batcher: self.batcher.stats.clone(),
+            pending: self.batcher.queued(),
+            touch_counter: self.store.touch_counter(),
+            store_stats: self.store.stats.clone(),
+        }
+    }
+
+    /// Assemble the full durable state (and restart delta tracking).
+    /// Requires a synced committer so weights/wear and the learner
+    /// counters describe the same instant.
+    pub(crate) fn full_state(&mut self, epoch: u64, wear: Option<WearState>) -> Snapshot {
+        debug_assert_eq!(self.applied_gen, self.enqueued_gen, "snapshot needs a synced committer");
+        let state = Snapshot {
+            nh: self.net.nh,
+            nx: self.net.nx,
+            nt: self.net.nt,
+            ny: self.net.ny,
+            epoch,
+            scalars: self.scalars_state(wear),
+            sessions: self.store.snapshot_slots(),
+            learner: self.learner.snapshot(),
+        };
+        self.store.mark_clean();
+        self.learner.mark_clean();
+        state
+    }
+
+    /// Assemble the delta since the last snapshot (and clear the dirty
+    /// marks — the caller owns getting it durably to disk).
+    pub(crate) fn delta_state(&mut self, epoch: u64, seq: u64, wear: Option<WearState>) -> Delta {
+        debug_assert_eq!(self.applied_gen, self.enqueued_gen, "snapshot needs a synced committer");
+        let (dirty_sessions, removed) = self.store.take_delta();
+        Delta {
+            nh: self.net.nh,
+            nx: self.net.nx,
+            nt: self.net.nt,
+            ny: self.net.ny,
+            epoch,
+            seq,
+            scalars: self.scalars_state(wear),
+            removed,
+            dirty_sessions,
+            learner: self.learner.delta(),
+        }
+    }
+
+    // ---------------------------------------------- dispatch
+
     /// Dispatch one padded batch: gather per-session hidden states,
-    /// advance them one timestep through the engine (row-sharded across
-    /// workers), write the states back, score/record every request, and
-    /// feed labeled windows to the online learner.
+    /// advance them one timestep against the adopted weight snapshot
+    /// (row-sharded across workers), write the states back, score/record
+    /// every request, and queue filled learning windows to the committer.
     fn process_batch(&mut self, batch: Vec<StepRequest>, out: &mut Vec<CompletedStep>) -> Result<()> {
+        // deterministic commit visibility: every commit enqueued by
+        // earlier batches must be adopted before this batch dispatches —
+        // exactly the synchronous semantics, without serializing the
+        // training work into the serve loop
+        self.await_gen(self.enqueued_gen)?;
+        let gen = self.weights.gen;
         let (nh, nx) = (self.net.nh, self.net.nx);
         // sweep idle sessions as of the *earliest arrival* in this batch,
         // not the dispatch tick: a session whose user was active within
@@ -221,7 +544,7 @@ impl ServeCore {
             x.row_mut(i).copy_from_slice(&r.x);
             slots.push(slot);
         }
-        let (hn, logits) = self.engine.step_sessions(&h, &x)?;
+        let (hn, logits) = self.stepper.step_sessions_at(&self.weights.params, &h, &x)?;
         let preds = argmax_rows(&logits);
         self.metrics.batches += 1;
         self.metrics.padded_rows += self.max_batch as u64;
@@ -240,9 +563,8 @@ impl ServeCore {
                     self.metrics.labeled_correct += 1;
                 }
                 let seq = self.store.history_seq(slot);
-                if let Some(loss) = self.learner.observe(&mut self.engine, seq, label)? {
-                    self.metrics.online_updates += 1;
-                    self.metrics.online_loss_sum += f64::from(loss);
+                if let Some(cb) = self.learner.observe(seq, label) {
+                    self.enqueue_commit(cb)?;
                 }
             }
             out.push(CompletedStep {
@@ -251,9 +573,9 @@ impl ServeCore {
                 logits: if self.collect_logits { logits.row(i).to_vec() } else { Vec::new() },
                 label: r.label,
                 tag: r.tag,
+                gen,
             });
         }
-        self.metrics.wear_rationed = self.learner.rationed_cols;
         Ok(())
     }
 }
@@ -262,7 +584,7 @@ impl ServeCore {
 mod tests {
     use super::*;
     use crate::config::ServeConfig;
-    use crate::serve::session_id_for_user;
+    use crate::serve::{session_id_for_user, SyntheticWorkload};
 
     fn core() -> ServeCore {
         let mut run = RunConfig::default();
@@ -290,6 +612,8 @@ mod tests {
         assert_eq!(done[0].tag, 0);
         assert_eq!(tail[1].tag, 5);
         assert_eq!(done[0].logits.len(), NetConfig::SMALL.ny);
+        // no labels, no commits: every step ran against the boot weights
+        assert!(done.iter().chain(tail.iter()).all(|s| s.gen == 0));
     }
 
     #[test]
@@ -301,5 +625,81 @@ mod tests {
         c.advance_tick();
         let done = c.drain_ready().unwrap();
         assert_eq!(done.len(), 1, "max_wait=1 tick elapsed");
+    }
+
+    /// Drive `requests` synthetic requests through a core in
+    /// driver-equivalent waves, returning the completed-step log.
+    fn drive(c: &mut ServeCore, requests: u64, seed: u64) -> Vec<CompletedStep> {
+        let net = NetConfig::SMALL;
+        let mut wl = SyntheticWorkload::new(&net, 8, seed);
+        let mut log = Vec::new();
+        let mut issued = 0u64;
+        while issued < requests {
+            for _ in 0..4 {
+                if issued >= requests {
+                    break;
+                }
+                let (u, x, label) = wl.next();
+                c.submit(session_id_for_user(u), x, label, 0);
+                issued += 1;
+            }
+            log.extend(c.drain_ready().unwrap());
+            if issued >= requests {
+                log.extend(c.flush_all().unwrap());
+            }
+            c.advance_tick();
+        }
+        c.sync_commits().unwrap();
+        log
+    }
+
+    fn commit_core(update_every: usize) -> ServeCore {
+        let mut run = RunConfig::default();
+        run.serve = ServeConfig {
+            max_batch: 4,
+            max_wait: 1,
+            capacity: 8,
+            update_every,
+            ..ServeConfig::default()
+        };
+        ServeCore::new(NetConfig::SMALL, &run).unwrap()
+    }
+
+    #[test]
+    fn generation_tags_witness_commit_ordering() {
+        let mut c = commit_core(3);
+        let log = drive(&mut c, 160, 7);
+        assert_eq!(log.len(), 160);
+        assert!(c.commits_enqueued() > 0, "labeled traffic must trigger commits");
+        // generations are non-decreasing in completion order, and every
+        // enqueued commit was adopted
+        for w in log.windows(2) {
+            assert!(w[1].gen >= w[0].gen, "generation went backwards");
+        }
+        assert_eq!(c.generation(), c.commits_enqueued());
+        assert_eq!(c.metrics().online_updates, c.commits_enqueued());
+        // a batch can at most lag the commits it enqueued itself
+        assert!(log.last().unwrap().gen <= c.generation());
+    }
+
+    #[test]
+    fn async_commits_are_bitwise_identical_to_the_synchronous_baseline() {
+        // same traffic, one core pipelining commits and one applying
+        // them inline: logits, generations and signatures must match
+        let mut fast = commit_core(3);
+        let mut slow = commit_core(3);
+        slow.set_commit_sync(true);
+        let a = drive(&mut fast, 200, 11);
+        let b = drive(&mut slow, 200, 11);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.logits, y.logits, "logits diverge at completion {i}");
+            assert_eq!(x.gen, y.gen, "generation tags diverge at completion {i}");
+        }
+        assert_eq!(
+            fast.metrics().signature(&fast.store().stats),
+            slow.metrics().signature(&slow.store().stats),
+            "async commit pipeline must not change deterministic serving state"
+        );
     }
 }

@@ -155,7 +155,7 @@ pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport> {
     }
     core.set_wall(start.elapsed());
 
-    let mut report = core.report(opts.sessions);
+    let mut report = core.report(opts.sessions)?;
     report.completed = log;
     Ok(report)
 }

@@ -22,10 +22,17 @@
 //! * [`ServeCore`] — the transport-agnostic serve engine every frontend
 //!   drives: submit → drain per tick, identical logits whether requests
 //!   arrive by function call or socket ([`crate::net`]).
-//! * [`checkpoint`] — versioned binary snapshots of the whole core
-//!   (weights, session slabs, history rings, replay segments, RNG
-//!   streams); a killed server restarts with every live session's hidden
-//!   state bitwise intact.
+//! * [`commit`](SubstrateStatus) — the async commit pipeline: a
+//!   background committer thread owns the mutable weights; the serve
+//!   loop steps against an atomically swapped immutable
+//!   [`WeightSnapshot`] and queues finalized training windows, so
+//!   dispatch latency never absorbs training spikes (DESIGN.md §10).
+//! * [`checkpoint`] — versioned binary snapshot *chains* of the whole
+//!   core (weights + wear, session slabs, the batcher's pending queue,
+//!   replay segments, RNG streams): periodic full rewrites plus
+//!   incremental deltas, written off-thread by the committer; a killed
+//!   server restarts with every live session's hidden state bitwise
+//!   intact.
 //! * [`run_serve`] — the deterministic synthetic workload driver behind
 //!   `m2ru serve` (open loop) and `m2ru loadgen` (closed loop),
 //!   reporting throughput, p50/p99 latency, batch fill and eviction
@@ -41,6 +48,7 @@
 
 mod batcher;
 pub mod checkpoint;
+mod commit;
 mod core;
 mod driver;
 mod metrics;
@@ -48,14 +56,16 @@ mod online;
 mod session;
 mod workload;
 
-pub use batcher::{BatcherStats, DynamicBatcher, StepRequest};
+pub use batcher::{BatcherStats, DynamicBatcher, QueuedStep, StepRequest};
 pub use checkpoint::{
-    read_snapshot, save_checkpoint, try_restore, RestoreOutcome, Snapshot, SNAPSHOT_FILE,
+    read_snapshot, save_checkpoint, save_delta, try_restore, RestoreOutcome, Snapshot,
+    SnapshotPolicy, SnapshotScalars, SNAPSHOT_FILE,
 };
+pub use commit::{SubstrateStatus, WeightSnapshot};
 pub use self::core::{CompletedStep, ServeCore};
 pub use driver::{run_serve, ServeOptions, ServeReport};
 pub use metrics::ServeMetrics;
-pub use online::{LearnerState, OnlineLearner};
+pub use online::{CommitBatch, LearnerDelta, LearnerState, OnlineLearner};
 pub use session::{
     session_id_for_user, session_id_keyed, SessionSnapshot, SessionStats, SessionStore,
     DEFAULT_SESSION_SECRET,

@@ -1,27 +1,31 @@
 //! Online continual learning on the serve path: labeled steps feed the
 //! reservoir replay buffer, and every `update_every` labels one
-//! replay-mixed DFA batch commits through the engine.
+//! replay-mixed DFA window is finalized into a [`CommitBatch`].
 //!
-//! The commit protocol keeps serving deterministic and race-free:
+//! The learner itself never touches weights. It owns the *deterministic*
+//! half of the commit protocol — window accumulation, replay sampling
+//! (Box–Muller stream), reservoir rolling and segment merging — all of
+//! which runs on the serve thread, so the sequence of finalized batches
+//! depends only on the seed and the traffic. The batches are then queued
+//! to the committer thread ([`super::commit`]), the single writer that
+//! applies them through
+//! [`crate::coordinator::ParallelEngine::train_whole_guarded`] in
+//! enqueue order:
 //!
-//! * **snapshot read** — `train_dfa` reads the substrate's effective
-//!   weights once, computes gradients against that snapshot, and only
-//!   then programs the update;
-//! * **single writer** — commits go through
-//!   [`ParallelEngine::train_whole`], the unsharded whole-batch path, so
-//!   exactly one writer touches the weights and the committed update is
-//!   bit-identical for every `--workers` count;
+//! * **snapshot read** — the committer reads the substrate's effective
+//!   weights once per commit, computes gradients against that snapshot,
+//!   and only then programs the update;
+//! * **single writer** — exactly one thread ever mutates weights, and
+//!   commits apply in generation order, so the committed weights after N
+//!   commits are bit-identical to applying the same batches inline;
 //! * **replay stabilization** — each commit mixes the fresh window with
 //!   examples replayed from *earlier* windows (reservoir-sampled,
 //!   4-bit-quantized — the paper's §IV-A data-preparation unit), so the
-//!   stream's drift does not erase earlier behavior. After a commit the
-//!   buffer rolls to a fresh reservoir segment and the committed window
-//!   becomes replayable history.
-
-use anyhow::Result;
+//!   stream's drift does not erase earlier behavior. After a window is
+//!   finalized the buffer rolls to a fresh reservoir segment and the
+//!   committed window becomes replayable history.
 
 use crate::config::ServeConfig;
-use crate::coordinator::ParallelEngine;
 use crate::data::Example;
 use crate::nn::SeqBatch;
 use crate::replay::{QuantizedExample, ReplayBuffer};
@@ -34,7 +38,17 @@ use crate::rng::GaussianRng;
 /// the replayable history span keeps growing on long-lived serve loops.
 const MAX_REPLAY_SEGMENTS: usize = 16;
 
-/// Accumulates labeled sequences and commits replay-mixed DFA updates.
+/// One finalized training window, ready for the committer thread: the
+/// fresh labeled window mixed with replayed history, plus the wear-guard
+/// ratio the commit must apply. Assembled deterministically on the serve
+/// thread; applied (in generation order) by the single-writer committer.
+pub struct CommitBatch {
+    pub batch: SeqBatch,
+    /// Wear guard forwarded to `train_whole_guarded` (0 = no rationing).
+    pub wear_ratio: f32,
+}
+
+/// Accumulates labeled sequences and finalizes replay-mixed DFA windows.
 pub struct OnlineLearner {
     nt: usize,
     nx: usize,
@@ -49,15 +63,18 @@ pub struct OnlineLearner {
     rng: GaussianRng,
     pending: Vec<Example>,
     pub observed: u64,
+    /// Windows finalized (== commit generations enqueued).
     pub updates: u64,
-    /// Cumulative columns rationed by the wear guard.
+    /// Cumulative columns rationed by the wear guard (fed back from the
+    /// committer's results by [`super::ServeCore`]).
     pub rationed_cols: u64,
 }
 
 /// The learner's full durable state, as serialized by `serve::checkpoint`:
 /// counters, the not-yet-committed window, the Box–Muller sampling stream,
-/// and the replay buffer's segments plus both hardware RNG states. A
-/// learner restored from this continues bit-identically.
+/// and the replay buffer's segments (with their stable ids, so delta
+/// snapshots can ship changed segments only) plus both hardware RNG
+/// states. A learner restored from this continues bit-identically.
 #[derive(Clone, Debug)]
 pub struct LearnerState {
     pub observed: u64,
@@ -67,6 +84,29 @@ pub struct LearnerState {
     pub rng_state: u64,
     pub rng_spare: Option<f32>,
     pub segments: Vec<Vec<QuantizedExample>>,
+    pub segment_ids: Vec<u64>,
+    pub next_segment_id: u64,
+    pub sampler_seen: u64,
+    pub sampler_rng: u32,
+    pub quant_lfsr: u16,
+}
+
+/// The learner's delta against the last snapshot: everything scalar (it
+/// is small), but segment *contents* only for segments that changed —
+/// `segment_order` alone captures rolls, merges and drops.
+#[derive(Clone, Debug)]
+pub struct LearnerDelta {
+    pub observed: u64,
+    pub updates: u64,
+    pub rationed_cols: u64,
+    pub pending: Vec<Example>,
+    pub rng_state: u64,
+    pub rng_spare: Option<f32>,
+    /// Full segment id order, oldest first.
+    pub segment_order: Vec<u64>,
+    /// `(id, contents)` of segments dirtied since the last snapshot.
+    pub changed: Vec<(u64, Vec<QuantizedExample>)>,
+    pub next_segment_id: u64,
     pub sampler_seen: u64,
     pub sampler_rng: u32,
     pub quant_lfsr: u16,
@@ -96,7 +136,7 @@ impl OnlineLearner {
         }
     }
 
-    /// Capture the learner's durable state for a checkpoint.
+    /// Capture the learner's durable state for a full checkpoint.
     pub fn snapshot(&self) -> LearnerState {
         let (rng_state, rng_spare) = self.rng.state();
         let (sampler_seen, sampler_rng) = self.buffer.sampler_state();
@@ -108,10 +148,39 @@ impl OnlineLearner {
             rng_state,
             rng_spare,
             segments: self.buffer.segments().to_vec(),
+            segment_ids: self.buffer.segment_ids().to_vec(),
+            next_segment_id: self.buffer.next_segment_id(),
             sampler_seen,
             sampler_rng,
             quant_lfsr: self.buffer.quantizer_state(),
         }
+    }
+
+    /// Capture the delta since the last snapshot mark and clear the
+    /// replay dirty set (the caller owns getting the delta to disk).
+    pub fn delta(&mut self) -> LearnerDelta {
+        let (rng_state, rng_spare) = self.rng.state();
+        let (sampler_seen, sampler_rng) = self.buffer.sampler_state();
+        LearnerDelta {
+            observed: self.observed,
+            updates: self.updates,
+            rationed_cols: self.rationed_cols,
+            pending: self.pending.clone(),
+            rng_state,
+            rng_spare,
+            segment_order: self.buffer.segment_ids().to_vec(),
+            changed: self.buffer.take_dirty(),
+            next_segment_id: self.buffer.next_segment_id(),
+            sampler_seen,
+            sampler_rng,
+            quant_lfsr: self.buffer.quantizer_state(),
+        }
+    }
+
+    /// Full-snapshot hook: every segment was captured, restart the delta
+    /// tracking from a clean slate.
+    pub fn mark_clean(&mut self) {
+        self.buffer.mark_clean();
     }
 
     /// Restore from [`OnlineLearner::snapshot`]; policy knobs
@@ -122,31 +191,34 @@ impl OnlineLearner {
         self.rationed_cols = s.rationed_cols;
         self.pending = s.pending;
         self.rng = GaussianRng::from_state(s.rng_state, s.rng_spare);
-        self.buffer.restore_state(s.segments, s.sampler_seen, s.sampler_rng, s.quant_lfsr);
+        self.buffer.restore_state(
+            s.segments,
+            s.segment_ids,
+            s.next_segment_id,
+            s.sampler_seen,
+            s.sampler_rng,
+            s.quant_lfsr,
+        );
     }
 
-    /// Record one labeled `nt*nx` sequence. Returns `Some(loss)` when
-    /// this observation filled the window and triggered a commit.
-    pub fn observe(
-        &mut self,
-        engine: &mut ParallelEngine,
-        features: Vec<f32>,
-        label: usize,
-    ) -> Result<Option<f32>> {
+    /// Record one labeled `nt*nx` sequence. Returns `Some(batch)` when
+    /// this observation filled the window: the finalized replay-mixed
+    /// commit batch, which the caller queues to the committer thread.
+    pub fn observe(&mut self, features: Vec<f32>, label: usize) -> Option<CommitBatch> {
         debug_assert_eq!(features.len(), self.nt * self.nx);
         self.observed += 1;
         if self.update_every == 0 {
             // inference-only mode: don't quantize into the reservoir or
             // grow `pending` for data that will never be trained on
-            return Ok(None);
+            return None;
         }
         let ex = Example { features, label };
         self.buffer.offer(&ex);
         self.pending.push(ex);
         if self.pending.len() < self.update_every {
-            return Ok(None);
+            return None;
         }
-        self.commit(engine).map(Some)
+        Some(self.roll_window())
     }
 
     /// Labeled sequences waiting for the next commit window to fill.
@@ -159,7 +231,12 @@ impl OnlineLearner {
         self.buffer.num_tasks()
     }
 
-    fn commit(&mut self, engine: &mut ParallelEngine) -> Result<f32> {
+    /// Finalize the filled window into a commit batch and roll the
+    /// reservoir: this window's examples become replayable history for
+    /// the next commit; beyond the retention cap the two oldest segments
+    /// reservoir-merge into one, so a long-lived server stays bounded
+    /// without forgetting its oldest windows outright.
+    fn roll_window(&mut self) -> CommitBatch {
         // replay share: mix = r/(fresh+r)  =>  r = fresh * mix/(1-mix)
         let n_replay = if self.mix > 0.0 {
             ((self.pending.len() as f32) * self.mix / (1.0 - self.mix)).round() as usize
@@ -173,19 +250,13 @@ impl OnlineLearner {
             sb.sample_mut(i).copy_from_slice(&ex.features);
             sb.labels[i] = ex.label;
         }
-        let (loss, rationed) = engine.train_whole_guarded(&sb, self.wear_ratio)?;
-        self.rationed_cols += rationed;
-        // roll the reservoir: this window's examples become replayable
-        // history for the next commit; beyond the retention cap the two
-        // oldest segments reservoir-merge into one, so a long-lived server
-        // stays bounded without forgetting its oldest windows outright
         self.buffer.begin_task();
         while self.buffer.num_tasks() > MAX_REPLAY_SEGMENTS {
             self.buffer.merge_oldest_pair(&mut self.rng);
         }
         self.pending.clear();
         self.updates += 1;
-        Ok(loss)
+        CommitBatch { batch: sb, wear_ratio: self.wear_ratio }
     }
 }
 
@@ -194,10 +265,17 @@ mod tests {
     use super::*;
     use crate::backend::{BackendCtx, BackendRegistry};
     use crate::config::NetConfig;
+    use crate::coordinator::ParallelEngine;
 
     fn engine(seed: u64) -> ParallelEngine {
         let ctx = BackendCtx { seed, ..BackendCtx::new(NetConfig::SMALL) };
         ParallelEngine::new(BackendRegistry::with_defaults().create("dense", &ctx).unwrap(), 1)
+    }
+
+    /// Apply a finalized window the way the committer thread does.
+    fn apply(engine: &mut ParallelEngine, cb: CommitBatch) -> f32 {
+        let (loss, _) = engine.train_whole_guarded(&cb.batch, cb.wear_ratio).unwrap();
+        loss
     }
 
     fn seq(net: &NetConfig, label: usize, seed: u64) -> Vec<f32> {
@@ -208,7 +286,7 @@ mod tests {
     }
 
     #[test]
-    fn commits_every_update_every_labels() {
+    fn finalizes_every_update_every_labels() {
         let net = NetConfig::SMALL;
         let cfg = ServeConfig { update_every: 4, ..ServeConfig::default() };
         let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 1);
@@ -216,7 +294,8 @@ mod tests {
         let mut commits = 0;
         for i in 0..12u64 {
             let label = (i % net.ny as u64) as usize;
-            if learner.observe(&mut eng, seq(&net, label, 100 + i), label).unwrap().is_some() {
+            if let Some(cb) = learner.observe(seq(&net, label, 100 + i), label) {
+                apply(&mut eng, cb);
                 commits += 1;
             }
         }
@@ -233,9 +312,10 @@ mod tests {
         let net = NetConfig::SMALL;
         let cfg = ServeConfig { update_every: 1, ..ServeConfig::default() };
         let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 3);
-        let mut eng = engine(3);
         for i in 0..(MAX_REPLAY_SEGMENTS as u64 + 20) {
-            learner.observe(&mut eng, seq(&net, 0, i), 0).unwrap();
+            // windows finalize deterministically whether or not a
+            // committer ever applies them
+            let _ = learner.observe(seq(&net, 0, i), 0);
         }
         assert_eq!(learner.updates, MAX_REPLAY_SEGMENTS as u64 + 20);
         assert_eq!(learner.replay_segments(), MAX_REPLAY_SEGMENTS);
@@ -246,13 +326,11 @@ mod tests {
         let net = NetConfig::SMALL;
         let cfg = ServeConfig { update_every: 0, ..ServeConfig::default() };
         let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 2);
-        let mut eng = engine(2);
-        let before = eng.backend().effective_params().flatten();
         for i in 0..10u64 {
-            assert!(learner.observe(&mut eng, seq(&net, 0, i), 0).unwrap().is_none());
+            assert!(learner.observe(seq(&net, 0, i), 0).is_none());
         }
-        let after = eng.backend().effective_params().flatten();
-        assert_eq!(before, after, "inference-only mode must never touch weights");
+        assert_eq!(learner.updates, 0);
+        assert_eq!(learner.pending(), 0, "inference-only mode must not accumulate windows");
     }
 
     #[test]
@@ -263,7 +341,9 @@ mod tests {
         let mut a = OnlineLearner::new(net.nt, net.nx, &cfg, 11);
         let mut eng_a = engine(11);
         for i in 0..4u64 {
-            a.observe(&mut eng_a, seq(&net, 0, 300 + i), 0).unwrap();
+            if let Some(cb) = a.observe(seq(&net, 0, 300 + i), 0) {
+                apply(&mut eng_a, cb);
+            }
         }
         // learner B snapshots at step 4 and restores into a fresh instance
         let state = a.snapshot();
@@ -271,19 +351,26 @@ mod tests {
         b.restore(state);
         assert_eq!(b.observed, 4);
         assert_eq!(b.pending(), a.pending());
-        // identical continuation: same commits, same weights (engine B's
-        // weights are first restored to A's current state)
+        // identical continuation: same finalized windows, same weights
+        // (engine B's weights are first restored to A's current state)
         let mut eng_b = engine(11);
         eng_b.restore_params(&eng_a.backend().effective_params()).unwrap();
         for i in 4..7u64 {
-            let la = a.observe(&mut eng_a, seq(&net, 1, 300 + i), 1).unwrap();
-            let lb = b.observe(&mut eng_b, seq(&net, 1, 300 + i), 1).unwrap();
-            assert_eq!(la, lb, "losses diverge at observation {i}");
+            let ca = a.observe(seq(&net, 1, 300 + i), 1);
+            let cb = b.observe(seq(&net, 1, 300 + i), 1);
+            match (ca, cb) {
+                (Some(wa), Some(wb)) => {
+                    assert_eq!(wa.batch.data, wb.batch.data, "windows diverge at observation {i}");
+                    assert_eq!(apply(&mut eng_a, wa), apply(&mut eng_b, wb), "losses diverge");
+                }
+                (None, None) => {}
+                _ => panic!("window boundaries diverge at observation {i}"),
+            }
         }
         assert_eq!(
             eng_a.backend().effective_params().flatten(),
             eng_b.backend().effective_params().flatten(),
-            "restored learner must commit bit-identical updates"
+            "restored learner must finalize bit-identical windows"
         );
     }
 
@@ -294,15 +381,14 @@ mod tests {
         let cfg =
             ServeConfig { update_every: 1, replay_cap: 4, replay_mix: 0.0, ..ServeConfig::default() };
         let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 5);
-        let mut eng = engine(5);
         for i in 0..(MAX_REPLAY_SEGMENTS as u64 + 8) {
-            learner.observe(&mut eng, seq(&net, 0, i), 0).unwrap();
+            let _ = learner.observe(seq(&net, 0, i), 0);
         }
         assert_eq!(learner.replay_segments(), MAX_REPLAY_SEGMENTS, "cap still enforced");
     }
 
     #[test]
-    fn commits_change_weights_deterministically() {
+    fn applied_windows_change_weights_deterministically() {
         let net = NetConfig::SMALL;
         let cfg = ServeConfig { update_every: 3, ..ServeConfig::default() };
         let run = |eng_seed: u64| -> Vec<f32> {
@@ -310,7 +396,9 @@ mod tests {
             let mut eng = engine(eng_seed);
             for i in 0..6u64 {
                 let label = (i % net.ny as u64) as usize;
-                learner.observe(&mut eng, seq(&net, label, 50 + i), label).unwrap();
+                if let Some(cb) = learner.observe(seq(&net, label, 50 + i), label) {
+                    apply(&mut eng, cb);
+                }
             }
             eng.backend().effective_params().flatten()
         };

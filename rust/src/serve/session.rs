@@ -13,7 +13,7 @@
 //! reads a wall clock, which makes TTL expiry deterministic and testable
 //! under a mock clock.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::rng::SplitMix64;
 
@@ -60,8 +60,10 @@ pub struct SessionStats {
 /// One live session's full durable state, as serialized by
 /// `serve::checkpoint`: the hidden state, the raw history ring (including
 /// its write cursor, so restored rings continue bit-identically), and the
-/// recency bookkeeping. Snapshots are taken and restored in LRU order
-/// (oldest first), which preserves future eviction decisions exactly.
+/// recency bookkeeping. `last_touch` is the session's exact LRU counter
+/// value, so delta snapshots can upsert individual sessions into a
+/// restored store without disturbing the relative recency of the rest —
+/// every future eviction decision is identical to the uninterrupted run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SessionSnapshot {
     pub id: u64,
@@ -70,6 +72,7 @@ pub struct SessionSnapshot {
     pub hist_rows: usize,
     pub hist_head: usize,
     pub last_tick: u64,
+    pub last_touch: u64,
     pub steps: u64,
 }
 
@@ -105,6 +108,11 @@ pub struct SessionStore {
     /// last_touch → slot index; first entry is the LRU victim.
     lru: BTreeMap<u64, usize>,
     touch_counter: u64,
+    /// Sessions mutated since the last snapshot mark (delta-snapshot
+    /// dirty tracking; see [`SessionStore::take_delta`]).
+    dirty: BTreeSet<u64>,
+    /// Sessions evicted/expired since the last snapshot mark.
+    removed: BTreeSet<u64>,
     pub stats: SessionStats,
 }
 
@@ -122,6 +130,8 @@ impl SessionStore {
             index: BTreeMap::new(),
             lru: BTreeMap::new(),
             touch_counter: 0,
+            dirty: BTreeSet::new(),
+            removed: BTreeSet::new(),
             stats: SessionStats::default(),
         }
     }
@@ -166,6 +176,10 @@ impl SessionStore {
         self.index.remove(&slot.id);
         self.lru.remove(&slot.last_touch);
         self.free.push(idx);
+        // delta tracking: the id is gone from the live set; the next
+        // delta snapshot records the removal instead of the contents
+        self.dirty.remove(&slot.id);
+        self.removed.insert(slot.id);
     }
 
     /// Expire sessions idle for more than `ttl` ticks. The LRU order is
@@ -191,6 +205,9 @@ impl SessionStore {
     /// the LRU session first when at capacity). Returns the slot index,
     /// valid until the next eviction/expiry. Touches the session.
     pub fn get_or_create(&mut self, id: u64, now_tick: u64) -> usize {
+        // a lookup mutates recency (and the caller is about to mutate the
+        // state), so the session is dirty for the next delta snapshot
+        self.dirty.insert(id);
         if let Some(&idx) = self.index.get(&id) {
             self.stats.hits += 1;
             self.touch(idx, now_tick);
@@ -292,48 +309,87 @@ impl SessionStore {
                     hist_rows: s.hist_rows,
                     hist_head: s.hist_head,
                     last_tick: s.last_tick,
+                    last_touch: s.last_touch,
                     steps: s.steps,
                 }
             })
             .collect()
     }
 
+    /// Delta-snapshot hook: the sessions mutated and the ids removed
+    /// since the last snapshot mark. Dirty sessions come out in LRU
+    /// order (their exact `last_touch` values let a restore upsert them
+    /// into the base snapshot's recency order); both sets are cleared —
+    /// the caller owns getting the delta durably to disk.
+    pub fn take_delta(&mut self) -> (Vec<SessionSnapshot>, Vec<u64>) {
+        let mut dirty: Vec<SessionSnapshot> = Vec::with_capacity(self.dirty.len());
+        for (&_, &idx) in self.lru.iter() {
+            let s = self.slot(idx);
+            if self.dirty.contains(&s.id) {
+                dirty.push(SessionSnapshot {
+                    id: s.id,
+                    h: s.h.clone(),
+                    hist: s.hist.clone(),
+                    hist_rows: s.hist_rows,
+                    hist_head: s.hist_head,
+                    last_tick: s.last_tick,
+                    last_touch: s.last_touch,
+                    steps: s.steps,
+                });
+            }
+        }
+        let removed: Vec<u64> = self.removed.iter().copied().collect();
+        self.dirty.clear();
+        self.removed.clear();
+        (dirty, removed)
+    }
+
+    /// Full-snapshot hook: every live session is now captured, so the
+    /// delta tracking restarts from a clean slate.
+    pub fn mark_clean(&mut self) {
+        self.dirty.clear();
+        self.removed.clear();
+    }
+
     /// Rebuild the store from checkpointed state, replacing any current
-    /// contents. `snaps` must be in LRU order (oldest first — the order
-    /// [`SessionStore::snapshot_slots`] produces); relative recency is
-    /// reassigned under the restored `touch_counter`, so every future
-    /// hit/evict/expire decision is identical to the uninterrupted run.
-    /// If the snapshot holds more sessions than the configured capacity
-    /// (the config shrank between runs), only the newest fit survive.
+    /// contents. Sessions are re-inserted under their exact snapshotted
+    /// `last_touch` values (delta restores merge sessions from several
+    /// snapshot generations, so relative order alone is not enough), and
+    /// every future hit/evict/expire decision is identical to the
+    /// uninterrupted run. If the snapshot holds more sessions than the
+    /// configured capacity (the config shrank between runs), only the
+    /// newest fit survive.
     pub fn restore(&mut self, touch_counter: u64, stats: SessionStats, snaps: Vec<SessionSnapshot>) {
         self.slots.clear();
         self.free.clear();
         self.index.clear();
         self.lru.clear();
+        self.dirty.clear();
+        self.removed.clear();
         self.stats = stats;
+        let mut snaps = snaps;
+        snaps.sort_by_key(|s| s.last_touch);
         let start = snaps.len().saturating_sub(self.capacity);
         let kept = &snaps[start..];
-        let n = kept.len() as u64;
-        self.touch_counter = touch_counter.max(n);
-        let base = self.touch_counter - n;
-        for (i, s) in kept.iter().enumerate() {
+        let max_touch = kept.iter().map(|s| s.last_touch).max().unwrap_or(0);
+        self.touch_counter = touch_counter.max(max_touch);
+        for s in kept {
             assert_eq!(s.h.len(), self.nh, "snapshot hidden width mismatch");
             assert_eq!(s.hist.len(), self.nt * self.nx, "snapshot history size mismatch");
-            let touch = base + 1 + i as u64;
             let slot = Slot {
                 id: s.id,
                 h: s.h.clone(),
                 hist: s.hist.clone(),
                 hist_rows: s.hist_rows.min(self.nt),
                 hist_head: s.hist_head % self.nt.max(1),
-                last_touch: touch,
+                last_touch: s.last_touch,
                 last_tick: s.last_tick,
                 steps: s.steps,
             };
             let idx = self.slots.len();
             self.slots.push(Some(slot));
             self.index.insert(s.id, idx);
-            self.lru.insert(touch, idx);
+            self.lru.insert(s.last_touch, idx);
         }
     }
 }
@@ -463,6 +519,32 @@ mod tests {
         t.restore(s.touch_counter(), s.stats.clone(), snaps);
         assert_eq!(t.len(), 2);
         assert!(t.contains(4) && t.contains(5), "newest sessions survive a capacity cut");
+    }
+
+    #[test]
+    fn delta_tracking_reports_touched_and_removed_sessions() {
+        let mut s = store(2, 0);
+        s.get_or_create(1, 0);
+        s.get_or_create(2, 1);
+        let (dirty, removed) = s.take_delta();
+        assert_eq!(dirty.iter().map(|d| d.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(removed.is_empty());
+        // nothing touched since the mark: the delta is empty
+        let (dirty, removed) = s.take_delta();
+        assert!(dirty.is_empty() && removed.is_empty());
+        // touching 1 dirties only 1; creating 3 evicts LRU victim 2
+        s.get_or_create(1, 2);
+        s.get_or_create(3, 3);
+        let (dirty, removed) = s.take_delta();
+        assert_eq!(dirty.iter().map(|d| d.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(removed, vec![2]);
+        // upserting a delta'd session into a restored base keeps recency:
+        // restore {1, 3} with their exact touches, then evict — 1 goes
+        let snaps = s.snapshot_slots();
+        let mut t = store(2, 0);
+        t.restore(s.touch_counter(), s.stats.clone(), snaps);
+        t.get_or_create(4, 5);
+        assert!(!t.contains(1) && t.contains(3) && t.contains(4));
     }
 
     #[test]

@@ -238,10 +238,144 @@ fn kill_and_restart_resumes_sessions_bitwise() {
         assert_eq!(got.2, want.logits, "restart broke logits at completion {i}");
     }
     // and the final deterministic signature is the uninterrupted one
-    let ref_report = ref_core.report(16);
+    let ref_report = ref_core.report(16).unwrap();
     assert_eq!(rep2.report.signature(), ref_report.signature());
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Delta file names on disk in `dir`.
+fn delta_files(dir: &std::path::Path) -> Vec<String> {
+    let mut out: Vec<String> = std::fs::read_dir(dir)
+        .map(|it| {
+            it.flatten()
+                .filter_map(|e| e.file_name().to_str().map(str::to_string))
+                .filter(|n| n.starts_with("delta-") && n.ends_with(".m2cd"))
+                .collect()
+        })
+        .unwrap_or_default();
+    out.sort();
+    out
+}
+
+#[test]
+fn kill_and_restart_through_a_delta_snapshot_chain() {
+    let seed = 31;
+    let (w1, w2) = (120u64, 96u64);
+    let dir = tmp_dir("chain_restart");
+
+    // ---- uninterrupted reference ----
+    let mut ref_core = ServeCore::new(NetConfig::SMALL, &serve_run(seed)).unwrap();
+    let mut ref_wl = SyntheticWorkload::new(&NetConfig::SMALL, 16, seed);
+    let mut ref_log = drive_waves(&mut ref_core, &mut ref_wl, w1, 8);
+    ref_log.extend(drive_waves(&mut ref_core, &mut ref_wl, w2, 8));
+
+    // periodic snapshots every 5 ticks, a full one every 4th snapshot:
+    // life 1 (15 ticks) writes full@5, delta@10, delta@15, shutdown delta
+    let chained = |dir: &PathBuf| {
+        let mut run = serve_run(seed);
+        run.net.checkpoint_dir = dir.to_string_lossy().to_string();
+        run.net.checkpoint_every = 5;
+        run.net.snapshot_full_every = 4;
+        run
+    };
+
+    // ---- life 1 ----
+    let (addr1, server1) = spawn_server(chained(&dir));
+    let mut c1 = ConnectOptions::new(addr1, NetConfig::SMALL);
+    c1.requests = w1;
+    c1.sessions = 16;
+    c1.arrivals = 8;
+    c1.seed = seed;
+    let client1 = run_connect(&c1).unwrap();
+    let rep1 = server1.join().unwrap().unwrap();
+    assert!(rep1.checkpoint_path.is_some());
+    assert!(!delta_files(&dir).is_empty(), "the chain must hold delta snapshots on disk");
+
+    // ---- life 2: restore through the chain, then w2 more requests ----
+    let (addr2, server2) = spawn_server(chained(&dir));
+    let mut c2 = ConnectOptions::new(addr2, NetConfig::SMALL);
+    c2.requests = w2;
+    c2.sessions = 16;
+    c2.arrivals = 8;
+    c2.seed = seed;
+    c2.skip = w1;
+    let client2 = run_connect(&c2).unwrap();
+    let rep2 = server2.join().unwrap().unwrap();
+    assert!(rep2.restored_sessions > 0, "chain restore must resume live sessions");
+    assert_eq!(client2.session_ids, client1.session_ids, "restart must not re-key sessions");
+
+    // every logit across both lives matches the uninterrupted reference
+    // bitwise — the delta chain loses nothing
+    let to_user = ref_session_to_user(16);
+    let sids = client1.session_ids.clone();
+    let mut net_logits: Vec<(u64, u32, Vec<f32>)> = client1.completed;
+    net_logits.extend(client2.completed);
+    assert_eq!(net_logits.len(), ref_log.len());
+    for (i, (got, want)) in net_logits.iter().zip(ref_log.iter()).enumerate() {
+        assert_eq!(got.0, sids[to_user[&want.session] as usize], "session mismatch at {i}");
+        assert_eq!(got.2, want.logits, "delta-chain restart broke logits at completion {i}");
+    }
+    let ref_report = ref_core.report(16).unwrap();
+    assert_eq!(rep2.report.signature(), ref_report.signature());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------- slow-client isolation
+
+#[test]
+fn slow_client_is_dropped_without_stalling_others() {
+    use std::io::Write as _;
+    let mut run = serve_run(21);
+    // tiny outbox: a non-reading peer trips the drop policy as soon as
+    // its writer thread jams on the full socket
+    run.net.outbox_depth = 2;
+    let (addr, server) = spawn_server(run);
+    let nx = NetConfig::SMALL.nx;
+
+    // alice: a raw socket that handshakes, then floods Stats requests
+    // while never reading a single response byte
+    let mut alice = std::net::TcpStream::connect(&addr).unwrap();
+    alice.write_all(&encode_frame(0, &Message::Hello { user: 1 })).unwrap();
+    let ack = m2ru::net::read_frame(&mut alice).unwrap().expect("ack to hello");
+    assert!(matches!(ack.msg, Message::Ack { .. }));
+    let flood = std::thread::spawn(move || {
+        let frame = encode_frame(0, &Message::Stats { text: String::new() });
+        // responses (~hundreds of bytes each) pile into alice's unread
+        // socket; once the kernel buffers fill, her writer thread jams,
+        // the 2-frame outbox overflows, and the server severs her —
+        // after which these writes fail
+        for _ in 0..200_000u32 {
+            if alice.write_all(&frame).is_err() {
+                return true;
+            }
+        }
+        false
+    });
+
+    // bob is served promptly the whole time: the serve thread never
+    // waits on alice's socket (with the old inline writes, each response
+    // to alice could stall it for up to the 10 s write timeout)
+    let mut bob = m2ru::net::NetClient::connect(&addr).unwrap();
+    let sid = bob.hello(2).unwrap();
+    for i in 0..30u32 {
+        let t = std::time::Instant::now();
+        let (_, logits) = bob.step(sid, vec![0.1; nx], Some(i % NetConfig::SMALL.ny as u32)).unwrap();
+        assert_eq!(logits.len(), NetConfig::SMALL.ny);
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(5),
+            "a slow client must not add latency to others (step {i} took {:?})",
+            t.elapsed()
+        );
+    }
+    assert!(flood.join().unwrap(), "the non-reading client must be dropped");
+
+    let total = bob.shutdown_server().unwrap();
+    assert_eq!(total, 30, "only bob's steps reach the serving core");
+    let rep = server.join().unwrap().unwrap();
+    assert_eq!(rep.connections, 2);
+    assert_eq!(rep.report.metrics.requests, 30);
 }
 
 #[test]
