@@ -36,7 +36,7 @@ use m2ru::linalg::Mat;
 use m2ru::nn::SeqBatch;
 use m2ru::replay::ReplayBuffer;
 use m2ru::rng::GaussianRng;
-use m2ru::net::{decode_frame, encode_frame, Message, FLAG_TICK};
+use m2ru::net::{decode_frame, encode_frame, Message, RouterCore, FLAG_TICK};
 use m2ru::runtime::{ModelBundle, Runtime};
 use m2ru::serve::{
     run_serve, save_checkpoint, save_delta, session_id_for_user, DynamicBatcher, ServeCore,
@@ -332,6 +332,56 @@ fn main() -> anyhow::Result<()> {
             save_delta(&mut core, &dir).unwrap();
         });
         let _ = std::fs::remove_dir_all(&dir);
+    }
+    if runs("router_dispatch") {
+        // pure routing overhead: hash-mod dispatch of one 128-request
+        // wave into 4 in-process shards + the lock-step wave barrier
+        // (shards idle-tick; inference only, pmnist100 width)
+        let mut run = RunConfig::default();
+        run.serve = ServeConfig { max_batch: 32, capacity: 4096, update_every: 0, ..ServeConfig::default() };
+        run.router.shards = 4;
+        let mut rc = RouterCore::new(cfg, &run)?;
+        let x: Vec<f32> = (0..cfg.nx).map(|i| (i as f32 * 0.13).sin()).collect();
+        let mut user = 0u64;
+        timeit(&mut recs, "router_dispatch (4 shards, 128-req wave)", 30, || {
+            for _ in 0..128 {
+                let sid = rc.session_id(user % 512);
+                rc.submit(sid, x.clone(), None, 0).unwrap();
+                user += 1;
+            }
+            rc.wave(true, true).unwrap();
+        });
+        rc.finish()?;
+    }
+    if runs("router_serve") {
+        // shard-count throughput: the same 512-request synthetic run
+        // through 1/2/4 in-process shards (construction included, like
+        // serve_e2e) — the scaling row of results/BENCH_serve.json
+        for shards in [1usize, 2, 4] {
+            let mut run = RunConfig::default();
+            run.serve = ServeConfig {
+                max_batch: 32,
+                capacity: 256,
+                update_every: 4,
+                ..ServeConfig::default()
+            };
+            run.router.shards = shards;
+            let mut wl_master = SyntheticWorkload::new(&cfg, 16, 1);
+            let waves: Vec<Vec<(u64, Vec<f32>, Option<usize>)>> = (0..16)
+                .map(|_| (0..32).map(|_| wl_master.next()).collect())
+                .collect();
+            timeit(&mut recs, &format!("router_serve (512 reqs, shards={shards})"), 5, || {
+                let mut rc = RouterCore::new(cfg, &run).unwrap();
+                for (i, wave) in waves.iter().enumerate() {
+                    for (u, x, label) in wave {
+                        let sid = rc.session_id(*u);
+                        rc.submit(sid, x.clone(), *label, 0).unwrap();
+                    }
+                    rc.wave(true, i + 1 == waves.len()).unwrap();
+                }
+                rc.finish().unwrap();
+            });
+        }
     }
     if runs("commit_async_p99") {
         // serve-loop latency during a commit burst: p99 over per-wave

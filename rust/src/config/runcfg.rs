@@ -42,6 +42,60 @@ pub struct RunConfig {
     pub serve: ServeConfig,
     /// Network transport + durability policy (`m2ru serve --listen`).
     pub net: TransportConfig,
+    /// Multi-shard session routing policy (`m2ru router`).
+    pub router: RouterConfig,
+}
+
+/// Multi-shard session router policy (`rust/src/net/router.rs`,
+/// DESIGN.md §11): how many serve shards the front door partitions
+/// session ids across, where they live, and where each shard's
+/// checkpoint chain goes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouterConfig {
+    /// In-process shard threads (ignored when `shard_addrs` is set; the
+    /// remote fleet's size is the address list's length).
+    pub shards: usize,
+    /// Remote shard addresses (`host:port` of running
+    /// `m2ru serve --listen` processes). Empty selects in-process shards.
+    pub shard_addrs: Vec<String>,
+    /// Checkpoint root for in-process shards: shard `k` restores from and
+    /// snapshots into `<root>/shard-<k>/` (empty = durability off).
+    /// Remote shards own their durability via their own
+    /// `--checkpoint-dir`.
+    pub checkpoint_root: String,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { shards: 1, shard_addrs: Vec::new(), checkpoint_root: String::new() }
+    }
+}
+
+impl RouterConfig {
+    /// The effective fleet size.
+    pub fn fleet_size(&self) -> usize {
+        if self.shard_addrs.is_empty() {
+            self.shards
+        } else {
+            self.shard_addrs.len()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.shards >= 1, "router.shards must be >= 1");
+        for (k, a) in self.shard_addrs.iter().enumerate() {
+            anyhow::ensure!(
+                !a.trim().is_empty(),
+                "router.shard_addrs entry {k} is empty (expected host:port)"
+            );
+        }
+        anyhow::ensure!(
+            self.shard_addrs.is_empty() || self.checkpoint_root.is_empty(),
+            "router.checkpoint_root applies to in-process shards only; remote shards \
+             (router.shard_addrs) each own their durability via their --checkpoint-dir"
+        );
+        Ok(())
+    }
 }
 
 /// Policy knobs of the streaming session server (`rust/src/serve/`):
@@ -233,6 +287,7 @@ impl Default for RunConfig {
             workers: 1,
             serve: ServeConfig::default(),
             net: TransportConfig::default(),
+            router: RouterConfig::default(),
         }
     }
 }
@@ -295,6 +350,20 @@ impl RunConfig {
                     self.net.fsync_policy =
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
                 }
+                "router.shards" => self.router.shards = iget()?,
+                "router.shard_addrs" => {
+                    // comma-separated list (the TOML subset has no arrays)
+                    let raw = v.as_str().with_context(|| format!("{k}: expected string"))?;
+                    self.router.shard_addrs = raw
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect();
+                }
+                "router.checkpoint_root" => {
+                    self.router.checkpoint_root =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -319,7 +388,8 @@ impl RunConfig {
         anyhow::ensure!(self.workers >= 1, "workers must be >= 1");
         anyhow::ensure!(!self.backend.is_empty(), "backend name must be non-empty");
         self.serve.validate()?;
-        self.net.validate()
+        self.net.validate()?;
+        self.router.validate()
     }
 }
 
@@ -454,6 +524,50 @@ mod tests {
         ] {
             assert_eq!(FsyncPolicy::parse(s).unwrap(), want);
         }
+    }
+
+    #[test]
+    fn router_keys_from_toml() {
+        let map = parse_toml(
+            "[router]\nshards = 4\ncheckpoint_root = \"ckpt/router\"\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.router.shards, 4);
+        assert_eq!(cfg.router.checkpoint_root, "ckpt/router");
+        assert!(cfg.router.shard_addrs.is_empty());
+        assert_eq!(cfg.router.fleet_size(), 4);
+        // comma-separated remote addresses; the list length wins
+        let map = parse_toml(
+            "[router]\nshards = 2\nshard_addrs = \"127.0.0.1:7501, 127.0.0.1:7502\"\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(
+            cfg.router.shard_addrs,
+            vec!["127.0.0.1:7501".to_string(), "127.0.0.1:7502".to_string()]
+        );
+        assert_eq!(cfg.router.fleet_size(), 2);
+    }
+
+    #[test]
+    fn router_validation_rejects_bad_configs() {
+        let bad = parse_toml("[router]\nshards = 0\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err(), "zero shards must be rejected");
+        // a checkpoint root combined with remote shards is a config error:
+        // remote shards own their durability
+        let bad = parse_toml(
+            "[router]\nshard_addrs = \"127.0.0.1:7501\"\ncheckpoint_root = \"ckpt\"\n",
+        )
+        .unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
+        // blank entries in the address list are rejected (a trailing comma
+        // is tolerated by the split filter)
+        let mut cfg = RunConfig::default();
+        cfg.router.shard_addrs = vec!["127.0.0.1:7501".into(), "  ".into()];
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

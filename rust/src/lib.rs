@@ -33,7 +33,7 @@
 //! | [`runtime`]   | PJRT client; loads `artifacts/*.hlo.txt` |
 //! | [`coordinator`]| trainer, batcher, parallel serving engine, tile scheduler, metrics |
 //! | [`serve`]     | streaming session server: per-user state, dynamic batching, online learning, checkpoint/restore |
-//! | [`net`]       | TCP serving frontend: wire protocol, accept loop, client + load generator |
+//! | [`net`]       | TCP serving frontend: wire protocol, accept loop, client + load generator, multi-shard session router |
 //! | [`config`]    | network configs + run/backend selection + TOML-subset loader |
 //! | [`cli`]       | argument parsing for the `m2ru` binary |
 //! | [`experiments`]| regenerates every paper figure/table |

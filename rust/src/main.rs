@@ -6,6 +6,8 @@
 //!   serve        [flags]         streaming session server (synthetic open loop, or
 //!                                `--listen ADDR` for the TCP frontend with durable sessions)
 //!   loadgen      [flags]         closed-loop load generator against the same server
+//!   router       [flags]         multi-shard session router front door (in-process
+//!                                shard threads, or remote `serve --listen` shards)
 //!   connect      [flags]         closed-loop TCP load generator against `serve --listen`
 //!   experiment <id> [flags]      regenerate a paper figure/table
 //!   help
@@ -27,7 +29,9 @@ use m2ru::experiments::{
     run_ablation_replay, run_ablation_sampler, run_ablation_zeta, run_fault, run_fig4, run_fig5a,
     run_fig5b, run_fig5c, run_fig5d, run_headline, run_table1, Fig4Options, Fig5bOptions,
 };
-use m2ru::net::{run_connect, ConnectOptions, NetServeOptions, NetServer};
+use m2ru::net::{
+    run_connect, ConnectOptions, NetServeOptions, NetServer, RouterServeOptions, RouterServer,
+};
 use m2ru::runtime::{ModelBundle, Runtime};
 use m2ru::serve::{run_serve, ServeOptions};
 
@@ -83,6 +87,20 @@ SUBCOMMANDS
       --config FILE --seed N --lr F --lam F --beta F
   loadgen                   closed-loop load generator (same flags as serve)
       --concurrency C       outstanding-request target                   [4*max-batch]
+  router                    multi-shard session router: one TCP front door
+                            partitioning sessions (session_id % N) across N
+                            independent serve shards (DESIGN.md 11)
+      --shards N            in-process shard threads, each a full serve
+                            stack (engine, learner, commit pipeline)      [1]
+      --shard-addrs LIST    comma-separated host:port of running
+                            `m2ru serve --listen` shard processes
+                            (overrides --shards; the router speaks the
+                            wire protocol to them)
+      --checkpoint-root DIR durable in-process shards: shard k restores
+                            from and snapshots into DIR/shard-k/
+      --listen ADDR         front-door address (port 0 = auto)  [127.0.0.1:0]
+      plus the serve policy/transport flags above (--max-batch,
+      --update-every, --checkpoint-every, --queue-depth, ...)
   connect                   closed-loop TCP load generator against `serve --listen`
       --addr HOST:PORT      server address (required)
       --net NAME            network shapes (must match the server)       [pmnist100]
@@ -263,14 +281,9 @@ fn cmd_train(artifacts: &str, args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// `m2ru serve` (open loop), `m2ru serve --listen` (TCP frontend) and
-/// `m2ru loadgen` (closed loop): drive the streaming session server and
-/// print the throughput/latency/batching/eviction report.
-fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
-    let net_name = args.get("net", "pmnist100");
-    let net = NetConfig::by_name(&net_name).with_context(|| format!("unknown net `{net_name}`"))?;
-    let mut run = RunConfig::default();
-    apply_run_flags(args, &mut run)?;
+/// The `[serve]` policy + `[net]` transport flag surface shared by
+/// `serve`, `loadgen` and `router`.
+fn apply_serve_net_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
     if let Some(b) = args.get_opt("backend") {
         run.backend = b;
     }
@@ -288,9 +301,6 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
     if let Some(listen) = args.get_opt("listen") {
         run.net.listen = listen;
     }
-    if let Some(dir) = args.get_opt("checkpoint-dir") {
-        run.net.checkpoint_dir = dir;
-    }
     run.net.checkpoint_every = args.get_parse("checkpoint-every", run.net.checkpoint_every)?;
     run.net.snapshot_full_every =
         args.get_parse("snapshot-full-every", run.net.snapshot_full_every)?;
@@ -299,6 +309,21 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
     }
     run.net.queue_depth = args.get_parse("queue-depth", run.net.queue_depth)?;
     run.net.outbox_depth = args.get_parse("outbox-depth", run.net.outbox_depth)?;
+    Ok(())
+}
+
+/// `m2ru serve` (open loop), `m2ru serve --listen` (TCP frontend) and
+/// `m2ru loadgen` (closed loop): drive the streaming session server and
+/// print the throughput/latency/batching/eviction report.
+fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
+    let net_name = args.get("net", "pmnist100");
+    let net = NetConfig::by_name(&net_name).with_context(|| format!("unknown net `{net_name}`"))?;
+    let mut run = RunConfig::default();
+    apply_run_flags(args, &mut run)?;
+    apply_serve_net_flags(args, &mut run)?;
+    if let Some(dir) = args.get_opt("checkpoint-dir") {
+        run.net.checkpoint_dir = dir;
+    }
     run.validate()?;
 
     // transport-backed event loop: serve real clients over TCP
@@ -354,6 +379,64 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
     Ok(())
 }
 
+/// `m2ru router`: the multi-shard session router front door
+/// (DESIGN.md §11) — in-process shard threads by default, remote
+/// `m2ru serve --listen` shards with `--shard-addrs`.
+fn cmd_router(args: &mut Args) -> Result<()> {
+    let net_name = args.get("net", "pmnist100");
+    let net = NetConfig::by_name(&net_name).with_context(|| format!("unknown net `{net_name}`"))?;
+    let mut run = RunConfig::default();
+    apply_run_flags(args, &mut run)?;
+    apply_serve_net_flags(args, &mut run)?;
+    run.router.shards = args.get_parse("shards", run.router.shards)?;
+    if let Some(addrs) = args.get_opt("shard-addrs") {
+        run.router.shard_addrs =
+            addrs.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    }
+    if let Some(root) = args.get_opt("checkpoint-root") {
+        run.router.checkpoint_root = root;
+    }
+    if run.net.listen.is_empty() {
+        run.net.listen = "127.0.0.1:0".to_string();
+    }
+    run.validate()?;
+    args.finish()?;
+
+    let remote = !run.router.shard_addrs.is_empty();
+    let server = RouterServer::bind(RouterServeOptions { net, run: run.clone() })?;
+    println!("listening on {}", server.local_addr()?);
+    println!(
+        "routing across {} {} shard(s)",
+        run.router.fleet_size(),
+        if remote { "remote" } else { "in-process" }
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let rep = server.run()?;
+    println!("connections: {}", rep.connections);
+    if rep.restored_sessions > 0 {
+        println!("restored sessions: {}", rep.restored_sessions);
+    }
+    println!("routed: {} request(s) across {} shard(s)", rep.routed, rep.shards);
+    println!(
+        "outbox: drops_full={} drops_timeout={} drops_writer_failed={}",
+        rep.outbox_drops.full, rep.outbox_drops.timeout, rep.outbox_drops.writer_failed
+    );
+    for (k, routed) in rep.shard_routed.iter().enumerate() {
+        if rep.remote {
+            println!("shard {k}: routed={routed} served_total={}", rep.shard_totals[k]);
+        } else {
+            println!("shard {k}: routed={routed}");
+        }
+    }
+    for (k, report) in &rep.shard_reports {
+        for line in report.lines() {
+            println!("shard {k}: {line}");
+        }
+    }
+    Ok(())
+}
+
 /// `m2ru connect`: closed-loop TCP load generator against a
 /// `m2ru serve --listen` server.
 fn cmd_connect(args: &mut Args) -> Result<()> {
@@ -380,6 +463,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
         rep.throughput(),
         rep.labeled
     );
+    println!("per-session signature: {:016x}", rep.session_signature());
     println!("server stats:");
     for line in rep.stats_text.lines() {
         println!("  {line}");
@@ -547,6 +631,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&artifacts, &mut args),
         "serve" => cmd_serve(&mut args, false),
         "loadgen" => cmd_serve(&mut args, true),
+        "router" => cmd_router(&mut args),
         "connect" => cmd_connect(&mut args),
         "experiment" => {
             let rt = Runtime::cpu()?;

@@ -196,6 +196,30 @@ impl ConnectReport {
     pub fn throughput(&self) -> f64 {
         self.completed.len() as f64 / self.wall.as_secs_f64().max(1e-9)
     }
+
+    /// Client-side **per-session signature**: every response's prediction
+    /// and logits bits are folded FNV-style into its session's running
+    /// hash (order-sensitive *within* a session), and the per-session
+    /// hashes combine by wrapping addition (order-insensitive *across*
+    /// sessions). Session ids themselves are excluded from the fold —
+    /// they are keyed per deployment — so the same per-session response
+    /// streams yield the same signature no matter how many shards served
+    /// them or which server issued the ids. This is what the router CI
+    /// smoke compares between a sharded and an unsharded run.
+    pub fn session_signature(&self) -> u64 {
+        const FNV: u64 = 0x0000_0100_0000_01B3;
+        let mut per: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+        for (session, pred, logits) in &self.completed {
+            let h = per.entry(*session).or_insert(0xCBF2_9CE4_8422_2325);
+            *h = (*h ^ (u64::from(*pred) + 1)).wrapping_mul(FNV);
+            for v in logits {
+                *h = (*h ^ u64::from(v.to_bits())).wrapping_mul(FNV);
+            }
+        }
+        per.values()
+            .fold(0u64, |acc, h| acc.wrapping_add(*h))
+            .wrapping_add(per.len() as u64)
+    }
 }
 
 /// Closed-loop load generator: replay the synthetic workload over TCP in

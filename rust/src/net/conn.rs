@@ -1,0 +1,385 @@
+//! Shared TCP accept path: the connection plumbing both serving
+//! frontends — the single-process server ([`super::server::NetServer`])
+//! and the multi-shard router ([`super::router::RouterServer`]) — are
+//! built on.
+//!
+//! One acceptor thread owns the listen socket; every accepted connection
+//! gets a reader thread (decoding frames into the frontend's bounded
+//! event queue) and a writer thread (draining a bounded response outbox
+//! onto the socket). The frontend's serve thread is the only consumer of
+//! the event queue and the only producer into the outboxes, so all
+//! serving state stays single-threaded.
+//!
+//! The event queue is generic: each frontend wraps [`ConnEvent`] into
+//! its own event enum (`From<ConnEvent>`), letting the router add shard
+//! events to the same queue without duplicating the accept path.
+//!
+//! [`ConnTable`] keeps live connections, their session bindings and the
+//! writer-outbox drop counters ([`OutboxDrops`]) consistent as one unit:
+//! every path that loses a connection — clean disconnect, protocol
+//! violation, a full outbox, a write timeout or a dead peer — also
+//! releases the sessions it had bound.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::serve::{CompletedStep, OutboxDrops};
+
+use super::wire::{self, Frame, Message};
+
+/// Events the accept path feeds the frontend's serve thread.
+pub(crate) enum ConnEvent {
+    Connected {
+        conn: u64,
+        /// Control handle on the socket (shutdown on drop/violation).
+        ctl: TcpStream,
+        /// Bounded outbox feeding the connection's writer thread.
+        outbox: SyncSender<Vec<u8>>,
+        /// The writer thread, joined at teardown.
+        writer: JoinHandle<()>,
+    },
+    Frame {
+        conn: u64,
+        frame: Frame,
+    },
+    Disconnected {
+        conn: u64,
+    },
+    Malformed {
+        conn: u64,
+        error: String,
+    },
+    /// The connection's writer thread hit a socket write error (dead or
+    /// stalled peer): the connection must be *severed*, not just
+    /// forgotten — its reader may still be alive on the open socket.
+    /// `timeout` distinguishes the write-timeout backstop from an
+    /// outright failed write (the drop counters report them separately).
+    WriterFailed {
+        conn: u64,
+        timeout: bool,
+    },
+}
+
+/// The per-connection writer thread: drain the bounded outbox onto the
+/// socket. Exits when the outbox closes (connection forgotten/dropped)
+/// or a write fails (dead or timed-out peer — reported so the serve
+/// thread severs the connection and releases its session bindings).
+fn writer_loop<E: From<ConnEvent> + Send + 'static>(
+    conn: u64,
+    mut sock: TcpStream,
+    outbox: Receiver<Vec<u8>>,
+    tx: SyncSender<E>,
+) {
+    use std::io::Write as _;
+    for buf in outbox {
+        if let Err(e) = sock.write_all(&buf) {
+            let timeout = matches!(
+                e.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            );
+            // best-effort: at teardown the serve thread is gone
+            let _ = tx.send(ConnEvent::WriterFailed { conn, timeout }.into());
+            return;
+        }
+    }
+}
+
+/// Accept connections until stopped; one reader thread and one writer
+/// thread (with a bounded `outbox_depth`-frame outbox) per connection.
+/// Connection ids count up from 1 (the router's shard peers live in a
+/// separate index space, so the two can never collide).
+pub(crate) fn spawn_acceptor<E: From<ConnEvent> + Send + 'static>(
+    listener: TcpListener,
+    tx: SyncSender<E>,
+    stop: Arc<AtomicBool>,
+    outbox_depth: usize,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut next_conn: u64 = 1;
+        for stream in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let _ = stream.set_nodelay(true);
+            let conn = next_conn;
+            next_conn += 1;
+            let (ctl, wsock) = match (stream.try_clone(), stream.try_clone()) {
+                (Ok(a), Ok(b)) => (a, b),
+                _ => continue,
+            };
+            // backstop only: the serve thread never writes, but the
+            // writer thread must not hang forever on a half-dead peer —
+            // after the timeout its write errors and the connection dies
+            let _ = wsock.set_write_timeout(Some(std::time::Duration::from_secs(10)));
+            let (obx_tx, obx_rx) = sync_channel::<Vec<u8>>(outbox_depth);
+            let writer_tx = tx.clone();
+            let writer =
+                std::thread::spawn(move || writer_loop::<E>(conn, wsock, obx_rx, writer_tx));
+            if tx.send(ConnEvent::Connected { conn, ctl, outbox: obx_tx, writer }.into()).is_err()
+            {
+                return;
+            }
+            let reader_tx = tx.clone();
+            let mut reader = stream;
+            std::thread::spawn(move || loop {
+                match wire::read_frame(&mut reader) {
+                    Ok(Some(frame)) => {
+                        if reader_tx.send(ConnEvent::Frame { conn, frame }.into()).is_err() {
+                            return;
+                        }
+                    }
+                    Ok(None) => {
+                        let _ = reader_tx.send(ConnEvent::Disconnected { conn }.into());
+                        return;
+                    }
+                    Err(e) => {
+                        let _ = reader_tx
+                            .send(ConnEvent::Malformed { conn, error: e.to_string() }.into());
+                        return;
+                    }
+                }
+            });
+        }
+    })
+}
+
+/// One live connection's serve-side handle: the control socket (for
+/// shutdowns), the bounded outbox into its writer thread, and the
+/// writer's join handle.
+struct ConnEntry {
+    ctl: TcpStream,
+    outbox: SyncSender<Vec<u8>>,
+    writer: JoinHandle<()>,
+}
+
+/// Live connections and their session bindings, kept consistent as one
+/// unit: every path that loses a connection — clean disconnect, protocol
+/// violation, a full outbox or a dead peer — also releases the sessions
+/// it had bound, so a reconnecting user can always re-`Hello` their
+/// session. Outbox-related drops are counted by reason in
+/// [`ConnTable::drops`].
+pub(crate) struct ConnTable {
+    conns: HashMap<u64, ConnEntry>,
+    /// session id → owning connection.
+    owner: HashMap<u64, u64>,
+    /// connection → bindings held (bounds `owner` under a Hello flood).
+    owned: HashMap<u64, usize>,
+    /// Writer threads of departed connections. NEVER joined inline — a
+    /// dying writer may be blocked reporting its own death into the full
+    /// event queue, which only the serve thread drains; joining here
+    /// would deadlock. Reaped in `close_all` after the event channel is
+    /// gone.
+    reap: Vec<JoinHandle<()>>,
+    /// Writer-outbox drops by reason (surfaced through `ServeReport`).
+    pub(crate) drops: OutboxDrops,
+}
+
+impl ConnTable {
+    pub(crate) fn new() -> ConnTable {
+        ConnTable {
+            conns: HashMap::new(),
+            owner: HashMap::new(),
+            owned: HashMap::new(),
+            reap: Vec::new(),
+            drops: OutboxDrops::default(),
+        }
+    }
+
+    pub(crate) fn connected(
+        &mut self,
+        conn: u64,
+        ctl: TcpStream,
+        outbox: SyncSender<Vec<u8>>,
+        writer: JoinHandle<()>,
+    ) {
+        self.conns.insert(conn, ConnEntry { ctl, outbox, writer });
+    }
+
+    /// Release a cleanly-disconnected connection's bookkeeping. The
+    /// outbox sender drops, so the writer flushes what is queued and
+    /// exits; the socket itself stays open until the writer is done.
+    pub(crate) fn forget(&mut self, conn: u64) {
+        if let Some(e) = self.conns.remove(&conn) {
+            self.reap.push(e.writer);
+        }
+        if self.owned.remove(&conn).is_some() {
+            self.owner.retain(|_, c| *c != conn);
+        }
+    }
+
+    /// Sever a protocol-violating (or stalled/dead) connection: log,
+    /// shut the socket down (which also unblocks its writer), and
+    /// release every session bound to it.
+    pub(crate) fn drop_conn(&mut self, conn: u64, reason: &str) {
+        eprintln!("net: dropping connection {conn}: {reason}");
+        if let Some(e) = self.conns.remove(&conn) {
+            let _ = e.ctl.shutdown(std::net::Shutdown::Both);
+            self.reap.push(e.writer);
+        }
+        if self.owned.remove(&conn).is_some() {
+            self.owner.retain(|_, c| *c != conn);
+        }
+    }
+
+    /// A writer thread reported a failed or timed-out write. Counted and
+    /// severed only if the connection is still live — the write that
+    /// failed may belong to a connection already dropped for an earlier
+    /// reason, which must not be double-counted.
+    pub(crate) fn writer_failed(&mut self, conn: u64, timeout: bool) {
+        if !self.conns.contains_key(&conn) {
+            return;
+        }
+        if timeout {
+            self.drops.timeout += 1;
+            self.drop_conn(conn, "response write timed out (stalled peer)");
+        } else {
+            self.drops.writer_failed += 1;
+            self.drop_conn(conn, "response write failed (dead peer)");
+        }
+    }
+
+    /// Did `conn` establish `session` with a `Hello`?
+    pub(crate) fn owns(&self, conn: u64, session: u64) -> bool {
+        self.owner.get(&session) == Some(&conn)
+    }
+
+    /// The connection currently holding `session`, if any.
+    pub(crate) fn owner_of(&self, session: u64) -> Option<u64> {
+        self.owner.get(&session).copied()
+    }
+
+    /// Bind `sid` to `conn` per the trust rules: idempotent for the
+    /// holder, rejected while another *live* connection holds it, taken
+    /// over from a connection known to be gone, and capped per
+    /// connection so `owner` cannot grow without bound.
+    pub(crate) fn bind(&mut self, conn: u64, sid: u64, cap: usize) -> Result<(), String> {
+        match self.owner.get(&sid).copied() {
+            Some(c) if c == conn => Ok(()),
+            Some(c) if self.conns.contains_key(&c) => {
+                Err("Hello for a session bound to another live connection".to_string())
+            }
+            stale => {
+                if let Some(c) = stale {
+                    // the previous holder is gone; release its slot
+                    if let Some(n) = self.owned.get_mut(&c) {
+                        *n = n.saturating_sub(1);
+                    }
+                }
+                let n = self.owned.entry(conn).or_insert(0);
+                if *n >= cap {
+                    return Err(format!("connection exceeded {cap} session bindings"));
+                }
+                *n += 1;
+                self.owner.insert(sid, conn);
+                Ok(())
+            }
+        }
+    }
+
+    /// Non-blocking frame dispatch into the connection's writer outbox.
+    /// A full outbox means the peer is slow (its writer is stuck on a
+    /// full socket) — that connection alone is dropped; the serve thread
+    /// never waits on anyone's socket.
+    pub(crate) fn send(&mut self, conn: u64, msg: &Message) {
+        let Some(e) = self.conns.get(&conn) else { return };
+        let buf = wire::encode_frame(0, msg);
+        match e.outbox.try_send(buf) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                self.drops.full += 1;
+                self.drop_conn(conn, "response outbox full (slow client)");
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.drops.writer_failed += 1;
+                self.drop_conn(conn, "writer thread gone");
+            }
+        }
+    }
+
+    /// Return each completed step's logits to the connection it arrived
+    /// on (consumes the steps — the logits rows move into the frames).
+    pub(crate) fn route_logits(&mut self, done: Vec<CompletedStep>) {
+        for step in done {
+            let msg = Message::Logits {
+                session: step.session,
+                pred: step.pred as u32,
+                logits: step.logits,
+            };
+            self.send(step.tag, &msg);
+        }
+    }
+
+    /// Teardown: let every live connection's writer flush its queued
+    /// frames (the shutdown Ack, final logits) by closing the outbox and
+    /// joining it *before* the socket is shut down — a blocked writer is
+    /// bounded by its socket write timeout. Only called after the serve
+    /// thread has dropped the event receiver, so no writer can block
+    /// reporting its own death.
+    pub(crate) fn close_all(&mut self) {
+        for (_, e) in self.conns.drain() {
+            drop(e.outbox);
+            let _ = e.writer.join();
+            let _ = e.ctl.shutdown(std::net::Shutdown::Both);
+        }
+        // writers of already-severed connections (their sockets are shut;
+        // they exit as soon as their pending write fails)
+        for h in self.reap.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Why a Step/StepLabeled frame is a protocol violation, if it is one:
+/// wrong input width, a label outside the class range (it would index the
+/// one-hot/loss rows out of bounds), or a session this connection never
+/// established with `Hello`.
+pub(crate) fn step_violation(
+    owns: bool,
+    got: usize,
+    nx: usize,
+    label: Option<u32>,
+    ny: usize,
+) -> Option<String> {
+    if got != nx {
+        return Some(format!("step of width {got} (net expects {nx})"));
+    }
+    if let Some(l) = label {
+        if l as usize >= ny {
+            return Some(format!("label {l} out of range (net has {ny} classes)"));
+        }
+    }
+    if !owns {
+        return Some("step for a session this connection did not establish".to_string());
+    }
+    None
+}
+
+/// Wake a listener blocked in `accept` with a throwaway connection (the
+/// teardown path). When bound to an unspecified address (0.0.0.0 / ::),
+/// connect via loopback instead. Returns whether the wake connected — if
+/// it did not, the caller must NOT join the acceptor: shutdown (and the
+/// final checkpoint) must not hang on a blocked accept; the acceptor
+/// dies with the process.
+pub(crate) fn wake_acceptor(listener: &TcpListener) -> bool {
+    match listener.local_addr() {
+        Ok(mut addr) => {
+            if addr.ip().is_unspecified() {
+                let ip = match addr.ip() {
+                    std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                    std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+                };
+                addr.set_ip(ip);
+            }
+            TcpStream::connect(addr).is_ok()
+        }
+        Err(_) => false,
+    }
+}

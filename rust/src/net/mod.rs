@@ -13,15 +13,26 @@
 //!   closed-loop load generator (`m2ru connect`), which replays the
 //!   synthetic driver's admission schedule over loopback with
 //!   bit-identical results.
+//! * [`RouterServer`] / [`RouterCore`] — the multi-shard session router
+//!   (`m2ru router`, DESIGN.md §11): one front door partitioning
+//!   established session ids (`session_id % N`) across N independent
+//!   [`crate::serve::ServeCore`] shards — in-process shard threads or
+//!   remote `m2ru serve --listen` processes — each with its own engine,
+//!   learner, commit pipeline and checkpoint chain (`shard-<k>/`).
 //!
 //! No dependencies beyond `std`: the frame codec, threading and
 //! durability are all plain `std::net` + `std::sync`.
 
 mod client;
+mod conn;
+mod router;
 mod server;
 pub mod wire;
 
 pub use client::{run_connect, ConnectOptions, ConnectReport, NetClient};
+pub use router::{
+    run_router, shard_of, RouterCore, RouterReport, RouterServeOptions, RouterServer,
+};
 pub use server::{run_net_serve, snapshot_path, NetServeOptions, NetServeReport, NetServer};
 pub use wire::{
     decode_frame, encode_frame, read_frame, write_frame, Frame, Message, FLAG_FLUSH, FLAG_TICK,

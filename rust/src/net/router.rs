@@ -1,0 +1,1317 @@
+//! Multi-shard session router (DESIGN.md §11): one TCP front door that
+//! partitions established sessions across N independent serve shards.
+//!
+//! One `m2ru serve` process cannot serve millions of users: its serve
+//! thread, committer thread and session store are a single vertical
+//! slice. ReckOn and Chameleon scale on-chip learning by replicating
+//! small autonomous learning cores rather than growing one; the serving
+//! analogue is replicating the whole [`ServeCore`] stack — session
+//! store, batcher, online learner, commit pipeline, checkpoint chain —
+//! and routing each session to exactly one replica.
+//!
+//! ## Shard id math
+//!
+//! Session ids are a keyed SplitMix64 hash of the user key
+//! ([`session_id_keyed`]) — uniformly spread by construction — so the
+//! routing function is pure modular arithmetic over the id the router
+//! itself issued at `Hello`:
+//!
+//! ```text
+//! shard(session) = session_id % N
+//! ```
+//!
+//! Every request of a session lands on the same shard, each shard owns
+//! a disjoint id subset, and the partition is deterministic given the
+//! (checkpoint-persisted) session secret. No routing table, no
+//! rebalancing state — the id *is* the route.
+//!
+//! ## Determinism contract
+//!
+//! A shard is driven exactly like the single-process server drives its
+//! core: submit the wave's requests, dispatch per the max-batch/max-wait
+//! policy, advance the logical clock once per wave — every shard ticks
+//! on every router wave (shards with no traffic that wave tick too, via
+//! a `Nop` clock-carrier frame in remote mode). Consequently a shard is
+//! **bitwise-identical to a dedicated single-process server** fed that
+//! shard's request subset on the same wave schedule: per-session hidden
+//! states, batching, online commits and logits all match. With online
+//! learning disabled (weights frozen at boot), per-session logits are
+//! additionally independent of the partition entirely, so 1-, 2- and
+//! 4-shard deployments produce bitwise-identical per-session logits to
+//! one unsharded process. `tests/router_shard.rs` asserts both claims,
+//! in-process and over loopback TCP, including a mid-run shard
+//! kill/restart from the shard's own delta snapshot chain.
+//!
+//! ## Failure model: one shard down ≠ service down
+//!
+//! Each shard checkpoints into its own directory (`<root>/shard-<k>/`)
+//! and restores from its own chain, so shard lifecycles are independent.
+//! A remote shard that dies takes down only its own sessions: steps
+//! routed to it sever the *requesting* connection ("shard unavailable")
+//! while every other shard keeps serving; when the shard comes back the
+//! router reconnects on demand and re-`Hello`es the sessions it had
+//! mapped there (the shard's restored secret keeps their ids valid). A
+//! router restart restores every shard from its chain and adopts the
+//! persisted session secret, so client-visible session ids survive.
+//!
+//! ## Two shard substrates
+//!
+//! * **In-process** (`--shards N`): N shard threads, each owning a full
+//!   `ServeCore` (its own `ParallelEngine`, `OnlineLearner`, committer
+//!   thread and checkpoint chain), driven over unbounded command
+//!   channels — the router thread never blocks on a shard, shards block
+//!   on the shared reply queue only when the router is draining it.
+//! * **Remote** (`--shard-addrs a:p,b:p`): each shard is a separate
+//!   `m2ru serve --listen` process; the router speaks the existing wire
+//!   protocol to it (forwarded `Hello`/`Step`/`StepLabeled`, `Nop` clock
+//!   pulses, fanned-out `Stats` and `Shutdown`), mapping its own session
+//!   ids to each shard's `Hello`-issued ids.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::config::{NetConfig, RunConfig};
+use crate::serve::{
+    session_id_keyed, try_restore, CompletedStep, OutboxDrops, RestoreOutcome, ServeCore,
+    ServeReport, SnapshotPolicy, DEFAULT_SESSION_SECRET,
+};
+
+use super::conn::{self, ConnEvent, ConnTable};
+use super::server::random_boot_secret;
+use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
+
+/// The routing function: pure modular arithmetic over the keyed session
+/// id (uniform by construction, so shards stay balanced).
+pub fn shard_of(session: u64, shards: usize) -> usize {
+    (session % shards.max(1) as u64) as usize
+}
+
+// ------------------------------------------------------- in-process shards
+
+/// Commands the router sends a shard thread (strict FIFO per shard — the
+/// determinism contract depends on it).
+enum ShardCmd {
+    /// One routed request at the current tick.
+    Submit { session: u64, x: Vec<f32>, label: Option<usize>, tag: u64 },
+    /// End of an admission wave: dispatch per policy (`tick`), force the
+    /// tail flush (`flush`), reply with the completed steps, then
+    /// advance the clock and run the checkpoint cadence (`tick` only).
+    Wave { tick: bool, flush: bool },
+    /// Assemble this shard's serve report (syncs in-flight commits).
+    Report,
+    /// Flush, checkpoint (if durable), stop the committer and reply with
+    /// the final report.
+    Stop,
+}
+
+/// Shard thread replies, delivered over one shared unbounded channel.
+enum ShardReply {
+    Wave { shard: usize, steps: Vec<CompletedStep> },
+    Report { shard: usize, report: Box<ServeReport> },
+    Stopped { shard: usize, result: Result<(Vec<CompletedStep>, Box<ServeReport>), String> },
+}
+
+/// One in-process shard: the command sender and the thread to reap.
+struct ShardHandle {
+    cmds: Sender<ShardCmd>,
+    thread: JoinHandle<()>,
+}
+
+/// The shard thread body: drive one [`ServeCore`] exactly the way the
+/// single-process frontends do (submit → drain per tick), so the shard
+/// is bitwise-identical to a dedicated unsharded server fed the same
+/// request subset on the same wave schedule.
+fn shard_loop(
+    shard: usize,
+    mut core: ServeCore,
+    dir: Option<PathBuf>,
+    policy: SnapshotPolicy,
+    checkpoint_every: u64,
+    cmds: Receiver<ShardCmd>,
+    replies: Sender<ShardReply>,
+) {
+    let fail = |e: anyhow::Error, replies: &Sender<ShardReply>| {
+        let _ = replies.send(ShardReply::Stopped { shard, result: Err(e.to_string()) });
+    };
+    for cmd in cmds {
+        match cmd {
+            ShardCmd::Submit { session, x, label, tag } => core.submit(session, x, label, tag),
+            ShardCmd::Wave { tick, flush } => {
+                let res = (|| -> Result<Vec<CompletedStep>> {
+                    let mut steps = if tick { core.drain_ready()? } else { Vec::new() };
+                    if flush {
+                        steps.extend(core.flush_all()?);
+                    }
+                    Ok(steps)
+                })();
+                match res {
+                    Ok(steps) => {
+                        if replies.send(ShardReply::Wave { shard, steps }).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => return fail(e, &replies),
+                }
+                if tick {
+                    core.advance_tick();
+                    if checkpoint_every > 0 && core.tick() % checkpoint_every == 0 {
+                        if let Some(d) = &dir {
+                            if let Err(e) = core.snapshot_async(d, &policy) {
+                                return fail(e, &replies);
+                            }
+                        }
+                    }
+                }
+            }
+            ShardCmd::Report => {
+                let sessions = core.store().len();
+                match core.report(sessions) {
+                    Ok(report) => {
+                        if replies
+                            .send(ShardReply::Report { shard, report: Box::new(report) })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Err(e) => return fail(e, &replies),
+                }
+            }
+            ShardCmd::Stop => {
+                let result = (|| -> Result<(Vec<CompletedStep>, Box<ServeReport>)> {
+                    // mirror the single-process shutdown path: flush the
+                    // tail, then queue the final snapshot and complete
+                    // every committer job before reporting success
+                    let tail = core.flush_all()?;
+                    core.drain_engine();
+                    if let Some(d) = &dir {
+                        core.snapshot_async(d, &policy)?;
+                    }
+                    core.finish()?;
+                    let sessions = core.store().len();
+                    let report = core.report(sessions)?;
+                    Ok((tail, Box::new(report)))
+                })()
+                .map_err(|e| e.to_string());
+                let _ = replies.send(ShardReply::Stopped { shard, result });
+                return;
+            }
+        }
+    }
+    // command channel closed without Stop (router tearing down): stop the
+    // committer quietly; there is nobody left to report to
+    let _ = core.finish();
+}
+
+/// The in-process shard fleet behind one routing surface — the engine of
+/// `m2ru router --shards N`, and the direct-drive API the equivalence
+/// tests and benches use (no sockets).
+///
+/// Every method runs on the caller's thread; shards run concurrently but
+/// each one observes a strict FIFO command stream, so results are
+/// deterministic per shard. [`RouterCore::wave`] is a barrier: it
+/// returns once every live shard has dispatched the wave.
+pub struct RouterCore {
+    net: NetConfig,
+    run: RunConfig,
+    shards: Vec<Option<ShardHandle>>,
+    replies_tx: Sender<ShardReply>,
+    replies: Receiver<ShardReply>,
+    policy: SnapshotPolicy,
+    root: Option<PathBuf>,
+    secret: u64,
+    restored: bool,
+    restored_sessions: usize,
+    routed: u64,
+    shard_routed: Vec<u64>,
+}
+
+impl RouterCore {
+    /// Build (and durably restore) `run.router.shards` in-process shards
+    /// under the default session secret (tests and benches — the same
+    /// public id space as [`crate::serve::session_id_for_user`]).
+    pub fn new(net: NetConfig, run: &RunConfig) -> Result<RouterCore> {
+        RouterCore::with_secret(net, run, None)
+    }
+
+    /// Build the shard fleet. `fresh_secret` keys the session-id space
+    /// on a fresh boot (the TCP front door passes a random per-boot
+    /// secret); a restore adopts the checkpointed secret instead, so
+    /// client-visible session ids survive a router restart.
+    pub fn with_secret(net: NetConfig, run: &RunConfig, fresh_secret: Option<u64>) -> Result<RouterCore> {
+        run.validate()?;
+        ensure!(
+            run.router.shard_addrs.is_empty(),
+            "RouterCore drives in-process shards; remote shard addresses are the TCP router's job"
+        );
+        let n = run.router.shards;
+        let root = if run.router.checkpoint_root.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(&run.router.checkpoint_root))
+        };
+        let policy = SnapshotPolicy::from_net(&run.net)?;
+        let (replies_tx, replies) = channel::<ShardReply>();
+        let mut me = RouterCore {
+            net,
+            run: run.clone(),
+            shards: Vec::with_capacity(n),
+            replies_tx,
+            replies,
+            policy,
+            root,
+            secret: DEFAULT_SESSION_SECRET,
+            restored: false,
+            restored_sessions: 0,
+            routed: 0,
+            shard_routed: vec![0; n],
+        };
+        // restore every shard before any thread starts, so the adopted
+        // session secret is known (and consistent) up front
+        let mut cores = Vec::with_capacity(n);
+        let mut restored_secret: Option<u64> = None;
+        for k in 0..n {
+            let mut core = ServeCore::new(net, run)?;
+            if let Some(dir) = me.shard_dir(k) {
+                match try_restore(&mut core, &dir)? {
+                    RestoreOutcome::Restored { sessions, tick, deltas } => {
+                        me.restored = true;
+                        me.restored_sessions += sessions;
+                        eprintln!(
+                            "router: shard {k}: restored {sessions} session(s) at tick {tick} ({deltas} delta snapshot(s) applied)"
+                        );
+                        match restored_secret {
+                            None => restored_secret = Some(core.session_secret()),
+                            Some(s) => ensure!(
+                                s == core.session_secret(),
+                                "shard {k} checkpoint carries a different session secret — \
+                                 the shard directories under {} are not one deployment's chain",
+                                me.root.as_ref().expect("restore implies a root").display()
+                            ),
+                        }
+                    }
+                    RestoreOutcome::Corrupt { error } => {
+                        eprintln!(
+                            "warning: shard {k}: ignoring corrupt checkpoint ({error}); booting fresh"
+                        );
+                    }
+                    RestoreOutcome::Fresh => {}
+                }
+            }
+            cores.push(core);
+        }
+        me.secret = match restored_secret {
+            Some(s) => s,
+            None => fresh_secret.unwrap_or(DEFAULT_SESSION_SECRET),
+        };
+        for (k, mut core) in cores.into_iter().enumerate() {
+            // one id space across the fleet: shards never *compute* ids
+            // (the router does), but each shard persists the secret in
+            // its checkpoints so a restart re-adopts it
+            core.set_session_secret(me.secret);
+            let handle = me.spawn_shard(k, core);
+            me.shards.push(Some(handle));
+        }
+        Ok(me)
+    }
+
+    fn shard_dir(&self, k: usize) -> Option<PathBuf> {
+        self.root.as_ref().map(|r| r.join(format!("shard-{k}")))
+    }
+
+    fn spawn_shard(&self, k: usize, core: ServeCore) -> ShardHandle {
+        let (ctx, crx) = channel::<ShardCmd>();
+        let replies = self.replies_tx.clone();
+        let dir = self.shard_dir(k);
+        let policy = self.policy.clone();
+        let every = self.run.net.checkpoint_every;
+        let thread = std::thread::Builder::new()
+            .name(format!("m2ru-shard-{k}"))
+            .spawn(move || shard_loop(k, core, dir, policy, every, crx, replies))
+            .expect("spawning shard thread");
+        ShardHandle { cmds: ctx, thread }
+    }
+
+    fn reap(&mut self, k: usize) {
+        if let Some(h) = self.shards[k].take() {
+            drop(h.cmds);
+            let _ = h.thread.join();
+        }
+    }
+
+    /// Number of shards in the fleet.
+    pub fn shards(&self) -> usize {
+        self.shard_routed.len()
+    }
+
+    /// The key of the fleet's session-id space.
+    pub fn secret(&self) -> u64 {
+        self.secret
+    }
+
+    /// Whether any shard restored from its checkpoint chain at boot.
+    pub fn restored(&self) -> bool {
+        self.restored
+    }
+
+    /// Sessions restored across all shards at boot.
+    pub fn restored_sessions(&self) -> usize {
+        self.restored_sessions
+    }
+
+    /// Requests routed so far (total and per shard).
+    pub fn routed(&self) -> u64 {
+        self.routed
+    }
+
+    pub fn shard_routed(&self) -> &[u64] {
+        &self.shard_routed
+    }
+
+    /// The session id the router issues for `user` (and routes by).
+    pub fn session_id(&self, user: u64) -> u64 {
+        session_id_keyed(user, self.secret)
+    }
+
+    /// Which shard serves `session`.
+    pub fn shard_of(&self, session: u64) -> usize {
+        shard_of(session, self.shards())
+    }
+
+    /// Route one request to its session's shard. Never blocks: shard
+    /// command queues are unbounded (back-pressure reaches clients
+    /// through the frontend's bounded event queue instead, and a shard
+    /// blocks only on the shared reply queue the router drains).
+    pub fn submit(&mut self, session: u64, x: Vec<f32>, label: Option<usize>, tag: u64) -> Result<()> {
+        let k = self.shard_of(session);
+        let h = self.shards[k].as_ref().with_context(|| format!("shard {k} is down"))?;
+        h.cmds
+            .send(ShardCmd::Submit { session, x, label, tag })
+            .map_err(|_| anyhow!("shard {k} is down"))?;
+        self.routed += 1;
+        self.shard_routed[k] += 1;
+        Ok(())
+    }
+
+    /// End the admission wave on **every** shard in lock-step: dispatch
+    /// per the batch policy (`tick`), force the end-of-traffic tail
+    /// flush (`flush`), and advance each shard's clock (`tick`). Returns
+    /// the completed steps of all shards (per-shard order preserved;
+    /// cross-shard interleaving is arrival order).
+    pub fn wave(&mut self, tick: bool, flush: bool) -> Result<Vec<CompletedStep>> {
+        let mut expected = 0usize;
+        for (k, h) in self.shards.iter().enumerate() {
+            if let Some(h) = h {
+                h.cmds
+                    .send(ShardCmd::Wave { tick, flush })
+                    .map_err(|_| anyhow!("shard {k} is down"))?;
+                expected += 1;
+            }
+        }
+        let mut out = Vec::new();
+        while expected > 0 {
+            match self.replies.recv().map_err(|_| anyhow!("every shard is gone"))? {
+                ShardReply::Wave { steps, .. } => {
+                    out.extend(steps);
+                    expected -= 1;
+                }
+                ShardReply::Stopped { shard, result } => {
+                    self.reap(shard);
+                    match result {
+                        Err(e) => bail!("shard {shard} failed: {e}"),
+                        Ok(_) => bail!("shard {shard} stopped unexpectedly"),
+                    }
+                }
+                ShardReply::Report { .. } => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Collect every live shard's serve report (syncs their commit
+    /// pipelines), in shard order.
+    pub fn reports(&mut self) -> Result<Vec<(usize, ServeReport)>> {
+        let mut expected = 0usize;
+        for h in self.shards.iter().flatten() {
+            if h.cmds.send(ShardCmd::Report).is_ok() {
+                expected += 1;
+            }
+        }
+        let mut out: Vec<(usize, ServeReport)> = Vec::with_capacity(expected);
+        while out.len() < expected {
+            match self.replies.recv().map_err(|_| anyhow!("every shard is gone"))? {
+                ShardReply::Report { shard, report } => out.push((shard, *report)),
+                ShardReply::Stopped { shard, result } => {
+                    self.reap(shard);
+                    match result {
+                        Err(e) => bail!("shard {shard} failed: {e}"),
+                        Ok(_) => bail!("shard {shard} stopped unexpectedly"),
+                    }
+                }
+                ShardReply::Wave { .. } => {}
+            }
+        }
+        out.sort_by_key(|(k, _)| *k);
+        Ok(out)
+    }
+
+    /// Kill shard `k` (flush, checkpoint into its own chain, stop its
+    /// committer) and immediately rebuild it from that chain — the
+    /// single-shard crash/recovery path the router harness exercises
+    /// mid-run. Returns the stopped life's report plus any steps its
+    /// final flush completed (empty when the caller flushed first).
+    pub fn restart_shard(&mut self, k: usize) -> Result<(ServeReport, Vec<CompletedStep>)> {
+        let dir = self
+            .shard_dir(k)
+            .context("restarting a shard requires router.checkpoint_root")?;
+        let h = self.shards[k].take().with_context(|| format!("shard {k} is already down"))?;
+        h.cmds.send(ShardCmd::Stop).map_err(|_| anyhow!("shard {k} is down"))?;
+        let (report, tail) = loop {
+            match self.replies.recv().map_err(|_| anyhow!("every shard is gone"))? {
+                ShardReply::Stopped { shard, result } if shard == k => match result {
+                    Ok((tail, rep)) => break (*rep, tail),
+                    Err(e) => {
+                        let _ = h.thread.join();
+                        bail!("shard {k} failed to stop cleanly: {e}");
+                    }
+                },
+                // no other shard has outstanding commands during a
+                // restart; anything else here is a stray late reply
+                _ => {}
+            }
+        };
+        let _ = h.thread.join();
+        let mut core = ServeCore::new(self.net, &self.run)?;
+        match try_restore(&mut core, &dir)? {
+            RestoreOutcome::Restored { .. } => {}
+            RestoreOutcome::Fresh => {
+                bail!("no snapshot to restart shard {k} from in {}", dir.display())
+            }
+            RestoreOutcome::Corrupt { error } => {
+                bail!("shard {k} snapshot chain is corrupt: {error}")
+            }
+        }
+        ensure!(
+            core.session_secret() == self.secret,
+            "restarted shard {k} restored a different session secret"
+        );
+        let handle = self.spawn_shard(k, core);
+        self.shards[k] = Some(handle);
+        Ok((report, tail))
+    }
+
+    /// Stop every shard (flush, checkpoint, stop committers) and collect
+    /// their final reports in shard order, plus any steps the final
+    /// flushes completed.
+    pub fn finish(&mut self) -> Result<(Vec<(usize, ServeReport)>, Vec<CompletedStep>)> {
+        let mut expected = 0usize;
+        for h in self.shards.iter().flatten() {
+            if h.cmds.send(ShardCmd::Stop).is_ok() {
+                expected += 1;
+            }
+        }
+        let mut reports: Vec<(usize, ServeReport)> = Vec::with_capacity(expected);
+        let mut tail: Vec<CompletedStep> = Vec::new();
+        let mut first_err: Option<String> = None;
+        while expected > 0 {
+            match self.replies.recv() {
+                Ok(ShardReply::Stopped { shard, result }) => {
+                    expected -= 1;
+                    match result {
+                        Ok((steps, rep)) => {
+                            tail.extend(steps);
+                            reports.push((shard, *rep));
+                        }
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(format!("shard {shard}: {e}"));
+                            }
+                        }
+                    }
+                }
+                Ok(ShardReply::Wave { steps, .. }) => tail.extend(steps),
+                Ok(ShardReply::Report { .. }) => {}
+                Err(_) => break,
+            }
+        }
+        for slot in self.shards.iter_mut() {
+            if let Some(h) = slot.take() {
+                drop(h.cmds);
+                let _ = h.thread.join();
+            }
+        }
+        if let Some(e) = first_err {
+            bail!("{e}");
+        }
+        reports.sort_by_key(|(k, _)| *k);
+        Ok((reports, tail))
+    }
+}
+
+impl Drop for RouterCore {
+    fn drop(&mut self) {
+        // closing the command channels ends every shard loop; join so no
+        // shard outlives its router (panics cannot propagate from Drop)
+        for slot in self.shards.iter_mut() {
+            if let Some(h) = slot.take() {
+                drop(h.cmds);
+                let _ = h.thread.join();
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- remote shards
+
+/// How long the router keeps retrying a shard connection before calling
+/// the shard unavailable (a restarting shard restores its chain within
+/// this window in the harness and CI).
+const CONNECT_RETRIES: usize = 40;
+const CONNECT_DELAY_MS: u64 = 250;
+
+/// One remote shard: a `m2ru serve --listen` process the router speaks
+/// the wire protocol to, plus the session-id translation tables.
+struct RemoteShard {
+    addr: String,
+    sock: Option<TcpStream>,
+    /// Bumped per (re)connect; stale `ShardDown` events from a previous
+    /// connection's reader are ignored by generation.
+    gen: u64,
+    /// router session id → shard-issued session id.
+    sids: HashMap<u64, u64>,
+    /// shard-issued session id → router session id.
+    rev: HashMap<u64, u64>,
+    /// router session id → user key (for re-`Hello` after a reconnect).
+    users: HashMap<u64, u64>,
+    /// Hellos awaiting the shard's `Ack`, FIFO. `None` connections are
+    /// reconnect re-hellos (no client is waiting on them).
+    pending_hellos: VecDeque<(Option<u64>, u64, u64)>,
+}
+
+impl RemoteShard {
+    /// Abandon every in-flight hello (connection died or is being
+    /// replaced): the acks will never come, and leaving entries behind
+    /// would desynchronize the FIFO ack matching on the next connection
+    /// — acks would pop the wrong entry and corrupt the sid translation
+    /// tables. Returns the client connections that were waiting, so the
+    /// caller can sever them (their `Hello` can never be answered).
+    fn abandon_hellos(&mut self) -> Vec<u64> {
+        let mut orphaned = Vec::new();
+        while let Some((waiter, _, _)) = self.pending_hellos.pop_front() {
+            if let Some(waiter) = waiter {
+                orphaned.push(waiter);
+            }
+        }
+        orphaned
+    }
+}
+
+impl RemoteShard {
+    fn new(addr: String) -> RemoteShard {
+        RemoteShard {
+            addr,
+            sock: None,
+            gen: 0,
+            sids: HashMap::new(),
+            rev: HashMap::new(),
+            users: HashMap::new(),
+            pending_hellos: VecDeque::new(),
+        }
+    }
+}
+
+/// The remote-shard fleet: connection management, re-hello on reconnect,
+/// and frame forwarding.
+struct Remote {
+    shards: Vec<RemoteShard>,
+    tx: SyncSender<REvent>,
+    stop: Arc<AtomicBool>,
+    /// Client connections whose in-flight `Hello` was abandoned by a
+    /// shard-connection loss; the router loop severs them after each
+    /// event (their handshake can never complete).
+    orphaned: Vec<u64>,
+}
+
+impl Remote {
+    /// Connect shard `k` if it is not connected, retrying up to
+    /// `retries` attempts, then re-`Hello` every session mapped to it
+    /// (the shard's binding table died with the old connection; its
+    /// restored secret keeps the shard-side ids identical). Any hello
+    /// still pending from the dead connection is abandoned first — its
+    /// ack will never come, and a stale entry would desynchronize the
+    /// FIFO ack matching on the fresh connection.
+    fn ensure_connected(&mut self, k: usize, retries: usize) -> Result<()> {
+        if self.shards[k].sock.is_some() {
+            return Ok(());
+        }
+        let addr = self.shards[k].addr.clone();
+        let mut sock = None;
+        for attempt in 0..retries {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match TcpStream::connect(&addr) {
+                Ok(s) => {
+                    sock = Some(s);
+                    break;
+                }
+                Err(_) if attempt + 1 < retries => {
+                    std::thread::sleep(std::time::Duration::from_millis(CONNECT_DELAY_MS))
+                }
+                Err(_) => {}
+            }
+        }
+        let Some(sock) = sock else { bail!("shard {k} unreachable at {addr}") };
+        let _ = sock.set_nodelay(true);
+        let mut rsock = sock.try_clone().context("cloning shard socket for the reader")?;
+        let stale = self.shards[k].abandon_hellos();
+        self.orphaned.extend(stale);
+        self.shards[k].gen += 1;
+        let gen = self.shards[k].gen;
+        let tx = self.tx.clone();
+        std::thread::spawn(move || loop {
+            match wire::read_frame(&mut rsock) {
+                Ok(Some(frame)) => {
+                    if tx.send(REvent::ShardFrame { shard: k, frame }).is_err() {
+                        return;
+                    }
+                }
+                // clean EOF or any read error: this connection is done
+                _ => {
+                    let _ = tx.send(REvent::ShardDown { shard: k, gen });
+                    return;
+                }
+            }
+        });
+        self.shards[k].sock = Some(sock);
+        let rehello: Vec<(u64, u64)> =
+            self.shards[k].users.iter().map(|(sid, user)| (*sid, *user)).collect();
+        for (sid, user) in rehello {
+            self.write(k, 0, &Message::Hello { user })?;
+            self.shards[k].pending_hellos.push_back((None, user, sid));
+        }
+        Ok(())
+    }
+
+    /// Write one frame to shard `k`'s live connection; a failed write
+    /// marks the shard down.
+    fn write(&mut self, k: usize, flags: u8, msg: &Message) -> Result<()> {
+        use std::io::Write as _;
+        let Some(sock) = self.shards[k].sock.as_mut() else { bail!("shard {k} is down") };
+        let buf = wire::encode_frame(flags, msg);
+        if let Err(e) = sock.write_all(&buf) {
+            self.shards[k].sock = None;
+            bail!("shard {k} write failed: {e}");
+        }
+        Ok(())
+    }
+
+    /// Forward a session-bearing frame (Step/Hello/Shutdown),
+    /// reconnecting with the full retry window — a shard mid-restart is
+    /// worth waiting for when a specific session needs it. One write
+    /// retry covers a connection that died quietly since the last write.
+    fn forward(&mut self, k: usize, flags: u8, msg: &Message) -> Result<()> {
+        self.ensure_connected(k, CONNECT_RETRIES)?;
+        if self.write(k, flags, msg).is_err() {
+            self.ensure_connected(k, CONNECT_RETRIES)?;
+            self.write(k, flags, msg)?;
+        }
+        Ok(())
+    }
+
+    /// Forward a fleet-wide pulse (Nop clock carrier, Stats fan-out)
+    /// with a single fast connect attempt: these frames target *every*
+    /// shard on the shared router thread, so a down shard must cost one
+    /// failed connect, not the full retry window — otherwise one dead
+    /// shard stalls every healthy shard's clients for seconds per wave
+    /// (the §11 failure model forbids exactly that). A shard that
+    /// reconnects this way still re-helloes before anything else.
+    fn pulse(&mut self, k: usize, flags: u8, msg: &Message) -> Result<()> {
+        self.ensure_connected(k, 1)?;
+        if self.write(k, flags, msg).is_err() {
+            self.ensure_connected(k, 1)?;
+            self.write(k, flags, msg)?;
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------ TCP router
+
+/// One router run, fully specified. `run.router` picks the shard
+/// substrate (`shards` in-process threads, or `shard_addrs` remote
+/// processes) and the per-shard checkpoint root; `run.net.listen` is the
+/// front-door address.
+#[derive(Clone, Debug)]
+pub struct RouterServeOptions {
+    pub net: NetConfig,
+    pub run: RunConfig,
+}
+
+/// Outcome of a router run (after a client sent `Shutdown`).
+pub struct RouterReport {
+    /// Shards in the fleet.
+    pub shards: usize,
+    /// Whether the fleet was remote (`--shard-addrs`).
+    pub remote: bool,
+    /// Client connections accepted over the run.
+    pub connections: u64,
+    /// Requests routed (total and per shard).
+    pub routed: u64,
+    pub shard_routed: Vec<u64>,
+    /// Final per-shard serve reports (in-process fleets only).
+    pub shard_reports: Vec<(usize, ServeReport)>,
+    /// Per-shard served totals from the shutdown acks (remote fleets
+    /// only; 0 for shards that were unreachable at shutdown).
+    pub shard_totals: Vec<u64>,
+    /// Sessions restored across all shards at boot (in-process only;
+    /// remote shards restore in their own processes).
+    pub restored_sessions: usize,
+    /// Client writer-outbox drops by reason.
+    pub outbox_drops: OutboxDrops,
+}
+
+/// Events the router's serve thread consumes: the shared accept path's
+/// connection events, frames from remote shards, shard-connection
+/// deaths, and the optional server-driven clock.
+enum REvent {
+    Conn(ConnEvent),
+    ShardFrame { shard: usize, frame: Frame },
+    ShardDown { shard: usize, gen: u64 },
+    Tick,
+}
+
+impl From<ConnEvent> for REvent {
+    fn from(e: ConnEvent) -> REvent {
+        REvent::Conn(e)
+    }
+}
+
+/// One in-flight `Stats` aggregation over a remote fleet.
+struct StatsAgg {
+    waiters: Vec<u64>,
+    texts: Vec<Option<String>>,
+}
+
+/// A bound multi-shard router front door. `bind` then `run`;
+/// `local_addr` exposes the picked port for `--listen 127.0.0.1:0`.
+pub struct RouterServer {
+    listener: TcpListener,
+    opts: RouterServeOptions,
+}
+
+enum Mode {
+    Local(RouterCore),
+    Remote(Remote),
+}
+
+impl RouterServer {
+    pub fn bind(opts: RouterServeOptions) -> Result<RouterServer> {
+        opts.run.validate()?;
+        let listener = TcpListener::bind(&opts.run.net.listen)
+            .with_context(|| format!("binding {}", opts.run.net.listen))?;
+        Ok(RouterServer { listener, opts })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Route until a client sends `Shutdown`. Blocking; spawn a thread
+    /// to run it in the background.
+    pub fn run(self) -> Result<RouterReport> {
+        let RouterServer { listener, opts } = self;
+        let remote_mode = !opts.run.router.shard_addrs.is_empty();
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = sync_channel::<REvent>(opts.run.net.queue_depth.max(1));
+        let acceptor = conn::spawn_acceptor::<REvent>(
+            listener.try_clone()?,
+            tx.clone(),
+            stop.clone(),
+            opts.run.net.outbox_depth.max(1),
+        );
+        if opts.run.net.tick_ms > 0 {
+            let period = std::time::Duration::from_millis(opts.run.net.tick_ms);
+            let tick_tx = tx.clone();
+            let tick_stop = stop.clone();
+            std::thread::spawn(move || loop {
+                std::thread::sleep(period);
+                if tick_stop.load(Ordering::SeqCst) || tick_tx.send(REvent::Tick).is_err() {
+                    return;
+                }
+            });
+        }
+
+        let (mut mode, secret, restored_sessions, n) = if remote_mode {
+            let shards: Vec<RemoteShard> =
+                opts.run.router.shard_addrs.iter().map(|a| RemoteShard::new(a.clone())).collect();
+            let n = shards.len();
+            let remote =
+                Remote { shards, tx: tx.clone(), stop: stop.clone(), orphaned: Vec::new() };
+            (Mode::Remote(remote), random_boot_secret(), 0usize, n)
+        } else {
+            let core =
+                RouterCore::with_secret(opts.net, &opts.run, Some(random_boot_secret()))?;
+            let n = core.shards();
+            let secret = core.secret();
+            let restored = core.restored_sessions();
+            (Mode::Local(core), secret, restored, n)
+        };
+        drop(tx);
+
+        // ---- the router thread (this thread) ----------------------------
+        let mut table = ConnTable::new();
+        let mut total_conns: u64 = 0;
+        let mut routed: u64 = 0;
+        let mut shard_routed: Vec<u64> = vec![0; n];
+        let mut shard_totals: Vec<u64> = vec![0; n];
+        let mut shard_reports: Vec<(usize, ServeReport)> = Vec::new();
+        let mut stats: Option<StatsAgg> = None;
+        // Some while a Shutdown fans out to a remote fleet: (admin conn,
+        // per-shard acked flags)
+        let mut shutdown_await: Option<(u64, Vec<bool>)> = None;
+        let nx = opts.net.nx;
+        let ny = opts.net.ny;
+        let client_admin = opts.run.net.client_admin;
+        let bind_cap = opts.run.serve.capacity;
+
+        let serve_result = (|| -> Result<()> {
+            while let Ok(ev) = rx.recv() {
+                match ev {
+                    REvent::Tick => match &mut mode {
+                        Mode::Local(core) => {
+                            let steps = core.wave(true, false)?;
+                            table.route_logits(steps);
+                        }
+                        Mode::Remote(remote) => {
+                            for k in 0..n {
+                                if let Err(e) = remote.pulse(k, FLAG_TICK, &Message::Nop) {
+                                    eprintln!("router: shard {k} missed a clock pulse: {e}");
+                                }
+                            }
+                        }
+                    },
+                    REvent::Conn(ConnEvent::Connected { conn, ctl, outbox, writer }) => {
+                        table.connected(conn, ctl, outbox, writer);
+                        total_conns += 1;
+                    }
+                    REvent::Conn(ConnEvent::Disconnected { conn }) => table.forget(conn),
+                    REvent::Conn(ConnEvent::WriterFailed { conn, timeout }) => {
+                        table.writer_failed(conn, timeout)
+                    }
+                    REvent::Conn(ConnEvent::Malformed { conn, error }) => {
+                        table.drop_conn(conn, &error)
+                    }
+                    REvent::Conn(ConnEvent::Frame { conn, frame }) => {
+                        let Frame { flags, msg } = frame;
+                        let flags = if client_admin { flags } else { 0 };
+                        let mut shutdown_req = false;
+                        match msg {
+                            Message::Step { .. } | Message::StepLabeled { .. } => {
+                                let (session, label, x) = match msg {
+                                    Message::Step { session, x } => (session, None, x),
+                                    Message::StepLabeled { session, label, x } => {
+                                        (session, Some(label), x)
+                                    }
+                                    _ => unreachable!("outer arm matched a step"),
+                                };
+                                if let Some(reason) = conn::step_violation(
+                                    table.owns(conn, session),
+                                    x.len(),
+                                    nx,
+                                    label,
+                                    ny,
+                                ) {
+                                    table.drop_conn(conn, &reason);
+                                } else {
+                                    let k = shard_of(session, n);
+                                    match &mut mode {
+                                        Mode::Local(core) => {
+                                            core.submit(
+                                                session,
+                                                x,
+                                                label.map(|l| l as usize),
+                                                conn,
+                                            )?;
+                                            routed += 1;
+                                            shard_routed[k] += 1;
+                                        }
+                                        Mode::Remote(remote) => {
+                                            let ssid = remote.shards[k].sids.get(&session).copied();
+                                            match ssid {
+                                                None => table.drop_conn(
+                                                    conn,
+                                                    "step for a session the shard has not acknowledged",
+                                                ),
+                                                Some(ssid) => {
+                                                    let fwd = match label {
+                                                        Some(l) => Message::StepLabeled {
+                                                            session: ssid,
+                                                            label: l,
+                                                            x,
+                                                        },
+                                                        None => Message::Step { session: ssid, x },
+                                                    };
+                                                    match remote.forward(k, 0, &fwd) {
+                                                        Ok(()) => {
+                                                            routed += 1;
+                                                            shard_routed[k] += 1;
+                                                        }
+                                                        Err(e) => table.drop_conn(
+                                                            conn,
+                                                            &format!("shard {k} unavailable: {e}"),
+                                                        ),
+                                                    }
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            Message::Hello { user } => {
+                                let sid = session_id_keyed(user, secret);
+                                match &mut mode {
+                                    Mode::Local(_) => match table.bind(conn, sid, bind_cap) {
+                                        Ok(()) => table.send(conn, &Message::Ack { value: sid }),
+                                        Err(reason) => table.drop_conn(conn, &reason),
+                                    },
+                                    Mode::Remote(remote) => {
+                                        let k = shard_of(sid, n);
+                                        if remote.shards[k].sids.contains_key(&sid) {
+                                            // already mapped (an earlier connection's
+                                            // Hello): bind locally, no round-trip
+                                            match table.bind(conn, sid, bind_cap) {
+                                                Ok(()) => {
+                                                    table.send(conn, &Message::Ack { value: sid })
+                                                }
+                                                Err(reason) => table.drop_conn(conn, &reason),
+                                            }
+                                        } else {
+                                            match remote.forward(k, 0, &Message::Hello { user }) {
+                                                Ok(()) => remote.shards[k]
+                                                    .pending_hellos
+                                                    .push_back((Some(conn), user, sid)),
+                                                Err(e) => table.drop_conn(
+                                                    conn,
+                                                    &format!("shard {k} unavailable: {e}"),
+                                                ),
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            Message::Stats { .. } => match &mut mode {
+                                Mode::Local(core) => {
+                                    // blocking collect: the router thread is the
+                                    // reply channel's only consumer
+                                    let reports = core.reports()?;
+                                    let text = local_stats_text(
+                                        routed,
+                                        &shard_routed,
+                                        &reports,
+                                        &table.drops,
+                                    );
+                                    table.send(conn, &Message::Stats { text });
+                                }
+                                Mode::Remote(remote) => match &mut stats {
+                                    Some(agg) => agg.waiters.push(conn),
+                                    None => {
+                                        let mut agg = StatsAgg {
+                                            waiters: vec![conn],
+                                            texts: vec![None; n],
+                                        };
+                                        for k in 0..n {
+                                            if let Err(e) = remote.pulse(
+                                                k,
+                                                0,
+                                                &Message::Stats { text: String::new() },
+                                            ) {
+                                                agg.texts[k] =
+                                                    Some(format!("unreachable ({e})"));
+                                            }
+                                        }
+                                        stats = Some(agg);
+                                    }
+                                },
+                            },
+                            Message::Shutdown => {
+                                if client_admin {
+                                    shutdown_req = true;
+                                } else {
+                                    table.drop_conn(
+                                        conn,
+                                        "Shutdown from a client (net.client_admin is off)",
+                                    );
+                                }
+                            }
+                            Message::Nop => {}
+                            Message::Ack { .. } | Message::Logits { .. } => {
+                                table.drop_conn(conn, "client sent a server-only message");
+                            }
+                        }
+                        // flags drive the fleet-wide clock: one wave on
+                        // every shard per FLAG_TICK (Nop carries the
+                        // pulse to remote shards with no steps this wave)
+                        let tick = flags & FLAG_TICK != 0;
+                        let flush = flags & FLAG_FLUSH != 0;
+                        if tick || flush {
+                            match &mut mode {
+                                Mode::Local(core) => {
+                                    let steps = core.wave(tick, flush)?;
+                                    table.route_logits(steps);
+                                }
+                                Mode::Remote(remote) => {
+                                    let mut f = 0u8;
+                                    if tick {
+                                        f |= FLAG_TICK;
+                                    }
+                                    if flush {
+                                        f |= FLAG_FLUSH;
+                                    }
+                                    for k in 0..n {
+                                        if let Err(e) = remote.pulse(k, f, &Message::Nop) {
+                                            eprintln!(
+                                                "router: shard {k} missed a clock pulse: {e}"
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        if shutdown_req {
+                            match &mut mode {
+                                Mode::Local(core) => {
+                                    let (reports, tail) = core.finish()?;
+                                    table.route_logits(tail);
+                                    shard_reports = reports;
+                                    table.send(conn, &Message::Ack { value: routed });
+                                    return Ok(());
+                                }
+                                Mode::Remote(remote) => {
+                                    // fan the shutdown out; shards flush, send
+                                    // their final logits, ack with their served
+                                    // totals, and exit — ack the admin client
+                                    // once every reachable shard has
+                                    let mut acked = vec![true; n];
+                                    for k in 0..n {
+                                        match remote.forward(k, 0, &Message::Shutdown) {
+                                            Ok(()) => acked[k] = false,
+                                            Err(e) => eprintln!(
+                                                "router: shard {k} unreachable at shutdown: {e}"
+                                            ),
+                                        }
+                                    }
+                                    if acked.iter().all(|a| *a) {
+                                        table.send(conn, &Message::Ack { value: routed });
+                                        return Ok(());
+                                    }
+                                    shutdown_await = Some((conn, acked));
+                                }
+                            }
+                        }
+                    }
+                    REvent::ShardFrame { shard, frame } => {
+                        let Mode::Remote(remote) = &mut mode else { continue };
+                        match frame.msg {
+                            Message::Ack { value } => {
+                                // the shard answers FIFO: hello acks first,
+                                // then (only during teardown) the shutdown ack
+                                if let Some((waiter, user, rsid)) =
+                                    remote.shards[shard].pending_hellos.pop_front()
+                                {
+                                    remote.shards[shard].sids.insert(rsid, value);
+                                    remote.shards[shard].rev.insert(value, rsid);
+                                    remote.shards[shard].users.insert(rsid, user);
+                                    if let Some(waiter) = waiter {
+                                        match table.bind(waiter, rsid, bind_cap) {
+                                            Ok(()) => table
+                                                .send(waiter, &Message::Ack { value: rsid }),
+                                            Err(reason) => table.drop_conn(waiter, &reason),
+                                        }
+                                    }
+                                } else if let Some((admin, acked)) = &mut shutdown_await {
+                                    if !acked[shard] {
+                                        acked[shard] = true;
+                                        shard_totals[shard] = value;
+                                    }
+                                    if acked.iter().all(|a| *a) {
+                                        let admin = *admin;
+                                        table.send(admin, &Message::Ack { value: routed });
+                                        return Ok(());
+                                    }
+                                }
+                            }
+                            Message::Logits { session, pred, logits } => {
+                                if let Some(&rsid) = remote.shards[shard].rev.get(&session) {
+                                    if let Some(waiter) = table.owner_of(rsid) {
+                                        table.send(
+                                            waiter,
+                                            &Message::Logits { session: rsid, pred, logits },
+                                        );
+                                    }
+                                }
+                            }
+                            Message::Stats { text } => {
+                                if let Some(agg) = &mut stats {
+                                    if agg.texts[shard].is_none() {
+                                        agg.texts[shard] = Some(text);
+                                    }
+                                }
+                            }
+                            // shards never originate anything else
+                            _ => {}
+                        }
+                    }
+                    REvent::ShardDown { shard, gen } => {
+                        if let Mode::Remote(remote) = &mut mode {
+                            if remote.shards[shard].gen == gen {
+                                remote.shards[shard].sock = None;
+                                // hellos in flight on the dead connection will
+                                // never be acked; re-hello covers the mapped
+                                // sessions after the next reconnect, so sever
+                                // any client still waiting on a handshake
+                                let orphaned = remote.shards[shard].abandon_hellos();
+                                for waiter in orphaned {
+                                    table.drop_conn(
+                                        waiter,
+                                        &format!("shard {shard} connection lost"),
+                                    );
+                                }
+                                if let Some(agg) = &mut stats {
+                                    if agg.texts[shard].is_none() {
+                                        agg.texts[shard] =
+                                            Some("unreachable (connection lost)".to_string());
+                                    }
+                                }
+                                if let Some((admin, acked)) = &mut shutdown_await {
+                                    if !acked[shard] {
+                                        acked[shard] = true; // dead shard: nothing to wait for
+                                    }
+                                    if acked.iter().all(|a| *a) {
+                                        let admin = *admin;
+                                        table.send(admin, &Message::Ack { value: routed });
+                                        return Ok(());
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                // hellos abandoned by a reconnect can never be answered:
+                // sever their waiters (the client retries with a fresh
+                // connection once the shard is reachable again)
+                if let Mode::Remote(remote) = &mut mode {
+                    let orphaned = std::mem::take(&mut remote.orphaned);
+                    for waiter in orphaned {
+                        table.drop_conn(waiter, "shard connection lost with a Hello in flight");
+                    }
+                }
+                // a completed stats aggregation answers every waiter
+                let complete =
+                    stats.as_ref().map_or(false, |agg| agg.texts.iter().all(|t| t.is_some()));
+                if complete {
+                    let agg = stats.take().expect("checked above");
+                    let text = remote_stats_text(routed, &shard_routed, &agg.texts, &table.drops);
+                    for waiter in agg.waiters {
+                        table.send(waiter, &Message::Stats { text: text.clone() });
+                    }
+                }
+            }
+            Ok(())
+        })();
+
+        // ---- teardown ---------------------------------------------------
+        stop.store(true, Ordering::SeqCst);
+        drop(rx);
+        if conn::wake_acceptor(&listener) {
+            let _ = acceptor.join();
+        }
+        table.close_all();
+        serve_result?;
+
+        // a local fleet that was not shut down through a client frame
+        // (event channel closed) still stops cleanly and checkpoints
+        if let Mode::Local(core) = &mut mode {
+            if shard_reports.is_empty() {
+                let (reports, _tail) = core.finish()?;
+                shard_reports = reports;
+            }
+        }
+
+        Ok(RouterReport {
+            shards: n,
+            remote: remote_mode,
+            connections: total_conns,
+            routed,
+            shard_routed,
+            shard_reports,
+            shard_totals,
+            restored_sessions,
+            outbox_drops: table.drops.clone(),
+        })
+    }
+}
+
+/// Aggregate stats text for an in-process fleet.
+fn local_stats_text(
+    routed: u64,
+    shard_routed: &[u64],
+    reports: &[(usize, ServeReport)],
+    drops: &OutboxDrops,
+) -> String {
+    let mut lines = vec![format!(
+        "router: {} shard(s) (in-process), routed {} request(s)",
+        shard_routed.len(),
+        routed
+    )];
+    lines.push(format!(
+        "router outbox: drops_full={} drops_timeout={} drops_writer_failed={}",
+        drops.full, drops.timeout, drops.writer_failed
+    ));
+    for (k, rep) in reports {
+        lines.push(format!("shard {k}: routed={}", shard_routed[*k]));
+        for l in rep.lines() {
+            lines.push(format!("  {l}"));
+        }
+    }
+    lines.join("\n")
+}
+
+/// Aggregate stats text for a remote fleet.
+fn remote_stats_text(
+    routed: u64,
+    shard_routed: &[u64],
+    texts: &[Option<String>],
+    drops: &OutboxDrops,
+) -> String {
+    let mut lines = vec![format!(
+        "router: {} shard(s) (remote), routed {} request(s)",
+        texts.len(),
+        routed
+    )];
+    lines.push(format!(
+        "router outbox: drops_full={} drops_timeout={} drops_writer_failed={}",
+        drops.full, drops.timeout, drops.writer_failed
+    ));
+    for (k, text) in texts.iter().enumerate() {
+        lines.push(format!("shard {k}: routed={}", shard_routed[k]));
+        for l in text.as_deref().unwrap_or("(no response)").lines() {
+            lines.push(format!("  {l}"));
+        }
+    }
+    lines.join("\n")
+}
+
+/// Convenience wrapper: bind, route until shutdown.
+pub fn run_router(opts: &RouterServeOptions) -> Result<RouterReport> {
+    RouterServer::bind(opts.clone())?.run()
+}

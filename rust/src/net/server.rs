@@ -17,6 +17,9 @@
 //!            (owns the weights)      (bounded outbox each)
 //! ```
 //!
+//! The accept path (acceptor, reader/writer threads, connection table)
+//! is shared with the multi-shard router — see [`super::conn`].
+//!
 //! Readers block when the serve loop falls behind (`net.queue_depth`
 //! frames in flight), which propagates back-pressure to clients through
 //! TCP flow control instead of buffering unboundedly.
@@ -27,7 +30,10 @@
 //! stalled or dead peer fills its own outbox and is dropped, without
 //! adding a microsecond to any other client's latency — while weight
 //! commits and durable snapshots run on the committer thread inside
-//! [`ServeCore`] (see `serve::commit`).
+//! [`ServeCore`] (see `serve::commit`). Connections severed this way are
+//! counted by reason in `ServeReport::outbox_drops` (full outbox, write
+//! timeout, failed write), so load tests assert slow-client isolation on
+//! counters instead of scraping stderr.
 //!
 //! ## Determinism
 //!
@@ -71,13 +77,11 @@
 //! becomes a protocol violation, and a server-side timer drives the
 //! logical clock (batching, TTL expiry, checkpoint cadence) instead.
 
-use std::collections::HashMap;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -88,7 +92,8 @@ use crate::serve::{
     SnapshotPolicy,
 };
 
-use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
+use super::conn::{self, ConnEvent, ConnTable};
+use super::wire::{Frame, Message, FLAG_FLUSH, FLAG_TICK};
 
 /// One network serve run, fully specified.
 #[derive(Clone, Debug)]
@@ -112,7 +117,8 @@ impl NetServeOptions {
 
 /// Outcome of a network serve run (after a client sent `Shutdown`).
 pub struct NetServeReport {
-    /// The usual serve report (metrics include any restored history).
+    /// The usual serve report (metrics include any restored history;
+    /// `outbox_drops` carries the slow-client severing counters).
     pub report: ServeReport,
     /// Connections accepted over the run.
     pub connections: u64,
@@ -125,29 +131,20 @@ pub struct NetServeReport {
 /// Events the connection threads (and the optional ticker) feed the
 /// serve thread.
 enum Event {
-    Connected {
-        conn: u64,
-        /// Control handle on the socket (shutdown on drop/violation).
-        ctl: TcpStream,
-        /// Bounded outbox feeding the connection's writer thread.
-        outbox: SyncSender<Vec<u8>>,
-        /// The writer thread, joined at teardown.
-        writer: JoinHandle<()>,
-    },
-    Frame { conn: u64, frame: Frame },
-    Disconnected { conn: u64 },
-    Malformed { conn: u64, error: String },
-    /// The connection's writer thread hit a socket write error (dead or
-    /// stalled peer): the connection must be *severed*, not just
-    /// forgotten — its reader may still be alive on the open socket.
-    WriterFailed { conn: u64 },
+    Conn(ConnEvent),
     /// Server-driven clock pulse (`net.tick_ms` mode).
     Tick,
 }
 
+impl From<ConnEvent> for Event {
+    fn from(e: ConnEvent) -> Event {
+        Event::Conn(e)
+    }
+}
+
 /// A random 64-bit per-boot key for the session-id space, drawn from the
 /// standard library's hash seeding (OS entropy, no new dependencies).
-fn random_boot_secret() -> u64 {
+pub(crate) fn random_boot_secret() -> u64 {
     use std::hash::{BuildHasher, Hasher};
     let a = std::collections::hash_map::RandomState::new().build_hasher().finish();
     let b = std::collections::hash_map::RandomState::new().build_hasher().finish();
@@ -214,7 +211,7 @@ impl NetServer {
         // acceptor + per-connection readers feed one bounded channel
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<Event>(opts.run.net.queue_depth.max(1));
-        let acceptor = spawn_acceptor(
+        let acceptor = conn::spawn_acceptor::<Event>(
             listener.try_clone()?,
             tx.clone(),
             stop.clone(),
@@ -249,20 +246,7 @@ impl NetServer {
         let policy = SnapshotPolicy::from_net(&opts.run.net)?;
         let serve_result = (|| -> Result<()> {
             while let Ok(ev) = rx.recv() {
-                match ev {
-                    Event::Connected { conn, ctl, outbox, writer } => {
-                        table.connected(conn, ctl, outbox, writer);
-                        total_conns += 1;
-                    }
-                    Event::Disconnected { conn } => {
-                        table.forget(conn);
-                    }
-                    Event::WriterFailed { conn } => {
-                        table.drop_conn(conn, "response write failed (dead or stalled peer)");
-                    }
-                    Event::Malformed { conn, error } => {
-                        table.drop_conn(conn, &error);
-                    }
+                let ev = match ev {
                     Event::Tick => {
                         // wall-clock pulse: one driver-loop iteration
                         let done = core.drain_ready()?;
@@ -273,8 +257,25 @@ impl NetServer {
                                 core.snapshot_async(dir, &policy)?;
                             }
                         }
+                        continue;
                     }
-                    Event::Frame { conn, frame } => {
+                    Event::Conn(ev) => ev,
+                };
+                match ev {
+                    ConnEvent::Connected { conn, ctl, outbox, writer } => {
+                        table.connected(conn, ctl, outbox, writer);
+                        total_conns += 1;
+                    }
+                    ConnEvent::Disconnected { conn } => {
+                        table.forget(conn);
+                    }
+                    ConnEvent::WriterFailed { conn, timeout } => {
+                        table.writer_failed(conn, timeout);
+                    }
+                    ConnEvent::Malformed { conn, error } => {
+                        table.drop_conn(conn, &error);
+                    }
+                    ConnEvent::Frame { conn, frame } => {
                         let Frame { flags, msg } = frame;
                         // without client administration, clients cannot
                         // drive the clock (the ticker does)
@@ -287,7 +288,7 @@ impl NetServer {
                         let mut shutdown = false;
                         match msg {
                             Message::Step { session, x } => {
-                                if let Some(reason) = step_violation(
+                                if let Some(reason) = conn::step_violation(
                                     table.owns(conn, session),
                                     x.len(),
                                     nx,
@@ -300,7 +301,7 @@ impl NetServer {
                                 }
                             }
                             Message::StepLabeled { session, label, x } => {
-                                if let Some(reason) = step_violation(
+                                if let Some(reason) = conn::step_violation(
                                     table.owns(conn, session),
                                     x.len(),
                                     nx,
@@ -323,7 +324,9 @@ impl NetServer {
                             }
                             Message::Stats { .. } => {
                                 let sessions = core.store().len();
-                                let text = core.report(sessions)?.lines().join("\n");
+                                let mut rep = core.report(sessions)?;
+                                rep.outbox_drops = table.drops.clone();
+                                let text = rep.lines().join("\n");
                                 table.send(conn, &Message::Stats { text });
                             }
                             Message::Shutdown => {
@@ -336,6 +339,9 @@ impl NetServer {
                                     );
                                 }
                             }
+                            // a clock carrier: nothing to do beyond the
+                            // flag handling below
+                            Message::Nop => {}
                             Message::Ack { .. } | Message::Logits { .. } => {
                                 table.drop_conn(conn, "client sent a server-only message");
                             }
@@ -374,29 +380,7 @@ impl NetServer {
         // on the full bounded channel errors out immediately instead of
         // deadlocking the acceptor join below
         drop(rx);
-        // wake the blocking accept with a throwaway connection; when
-        // bound to an unspecified address (0.0.0.0 / ::), connect via
-        // loopback instead. If the wake fails, do NOT join — shutdown
-        // (and the final checkpoint) must not hang on a blocked accept;
-        // the acceptor dies with the process.
-        let woke = match listener.local_addr() {
-            Ok(mut addr) => {
-                if addr.ip().is_unspecified() {
-                    let ip = match addr.ip() {
-                        std::net::IpAddr::V4(_) => {
-                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
-                        }
-                        std::net::IpAddr::V6(_) => {
-                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
-                        }
-                    };
-                    addr.set_ip(ip);
-                }
-                TcpStream::connect(addr).is_ok()
-            }
-            Err(_) => false,
-        };
-        if woke {
+        if conn::wake_acceptor(&listener) {
             let _ = acceptor.join();
         }
         // closing the write halves unblocks client readers (and joins
@@ -421,260 +405,10 @@ impl NetServer {
             }
         };
         let sessions = core.store().len();
-        let report = core.report(sessions)?;
+        let mut report = core.report(sessions)?;
+        report.outbox_drops = table.drops.clone();
         Ok(NetServeReport { report, connections: total_conns, checkpoint_path, restored_sessions })
     }
-}
-
-/// The per-connection writer thread: drain the bounded outbox onto the
-/// socket. Exits when the outbox closes (connection forgotten/dropped)
-/// or a write fails (dead peer — reported so the serve thread releases
-/// the connection's session bindings).
-fn writer_loop(conn: u64, mut sock: TcpStream, outbox: Receiver<Vec<u8>>, tx: SyncSender<Event>) {
-    use std::io::Write as _;
-    for buf in outbox {
-        if sock.write_all(&buf).is_err() {
-            // best-effort: at teardown the serve thread is gone
-            let _ = tx.send(Event::WriterFailed { conn });
-            return;
-        }
-    }
-}
-
-/// Accept connections until stopped; one reader thread and one writer
-/// thread (with a bounded `outbox_depth`-frame outbox) per connection.
-fn spawn_acceptor(
-    listener: TcpListener,
-    tx: SyncSender<Event>,
-    stop: Arc<AtomicBool>,
-    outbox_depth: usize,
-) -> std::thread::JoinHandle<()> {
-    std::thread::spawn(move || {
-        let mut next_conn: u64 = 1;
-        for stream in listener.incoming() {
-            if stop.load(Ordering::SeqCst) {
-                return;
-            }
-            let stream = match stream {
-                Ok(s) => s,
-                Err(_) => continue,
-            };
-            let _ = stream.set_nodelay(true);
-            let conn = next_conn;
-            next_conn += 1;
-            let (ctl, wsock) = match (stream.try_clone(), stream.try_clone()) {
-                (Ok(a), Ok(b)) => (a, b),
-                _ => continue,
-            };
-            // backstop only: the serve thread never writes, but the
-            // writer thread must not hang forever on a half-dead peer —
-            // after the timeout its write errors and the connection dies
-            let _ = wsock.set_write_timeout(Some(std::time::Duration::from_secs(10)));
-            let (obx_tx, obx_rx) = sync_channel::<Vec<u8>>(outbox_depth);
-            let writer_tx = tx.clone();
-            let writer =
-                std::thread::spawn(move || writer_loop(conn, wsock, obx_rx, writer_tx));
-            if tx.send(Event::Connected { conn, ctl, outbox: obx_tx, writer }).is_err() {
-                return;
-            }
-            let reader_tx = tx.clone();
-            let mut reader = stream;
-            std::thread::spawn(move || loop {
-                match wire::read_frame(&mut reader) {
-                    Ok(Some(frame)) => {
-                        if reader_tx.send(Event::Frame { conn, frame }).is_err() {
-                            return;
-                        }
-                    }
-                    Ok(None) => {
-                        let _ = reader_tx.send(Event::Disconnected { conn });
-                        return;
-                    }
-                    Err(e) => {
-                        let _ = reader_tx.send(Event::Malformed { conn, error: e.to_string() });
-                        return;
-                    }
-                }
-            });
-        }
-    })
-}
-
-/// One live connection's serve-side handle: the control socket (for
-/// shutdowns), the bounded outbox into its writer thread, and the
-/// writer's join handle.
-struct ConnEntry {
-    ctl: TcpStream,
-    outbox: SyncSender<Vec<u8>>,
-    writer: JoinHandle<()>,
-}
-
-/// Live connections and their session bindings, kept consistent as one
-/// unit: every path that loses a connection — clean disconnect, protocol
-/// violation, a full outbox or a dead peer — also releases the sessions
-/// it had bound, so a reconnecting user can always re-`Hello` their
-/// session.
-struct ConnTable {
-    conns: HashMap<u64, ConnEntry>,
-    /// session id → owning connection.
-    owner: HashMap<u64, u64>,
-    /// connection → bindings held (bounds `owner` under a Hello flood).
-    owned: HashMap<u64, usize>,
-    /// Writer threads of departed connections. NEVER joined inline — a
-    /// dying writer may be blocked reporting its own death into the full
-    /// event queue, which only the serve thread drains; joining here
-    /// would deadlock. Reaped in `close_all` after the event channel is
-    /// gone.
-    reap: Vec<JoinHandle<()>>,
-}
-
-impl ConnTable {
-    fn new() -> ConnTable {
-        ConnTable {
-            conns: HashMap::new(),
-            owner: HashMap::new(),
-            owned: HashMap::new(),
-            reap: Vec::new(),
-        }
-    }
-
-    fn connected(&mut self, conn: u64, ctl: TcpStream, outbox: SyncSender<Vec<u8>>, writer: JoinHandle<()>) {
-        self.conns.insert(conn, ConnEntry { ctl, outbox, writer });
-    }
-
-    /// Release a cleanly-disconnected connection's bookkeeping. The
-    /// outbox sender drops, so the writer flushes what is queued and
-    /// exits; the socket itself stays open until the writer is done.
-    fn forget(&mut self, conn: u64) {
-        if let Some(e) = self.conns.remove(&conn) {
-            self.reap.push(e.writer);
-        }
-        if self.owned.remove(&conn).is_some() {
-            self.owner.retain(|_, c| *c != conn);
-        }
-    }
-
-    /// Sever a protocol-violating (or stalled/dead) connection: log,
-    /// shut the socket down (which also unblocks its writer), and
-    /// release every session bound to it.
-    fn drop_conn(&mut self, conn: u64, reason: &str) {
-        eprintln!("net: dropping connection {conn}: {reason}");
-        if let Some(e) = self.conns.remove(&conn) {
-            let _ = e.ctl.shutdown(std::net::Shutdown::Both);
-            self.reap.push(e.writer);
-        }
-        if self.owned.remove(&conn).is_some() {
-            self.owner.retain(|_, c| *c != conn);
-        }
-    }
-
-    /// Did `conn` establish `session` with a `Hello`?
-    fn owns(&self, conn: u64, session: u64) -> bool {
-        self.owner.get(&session) == Some(&conn)
-    }
-
-    /// Bind `sid` to `conn` per the trust rules: idempotent for the
-    /// holder, rejected while another *live* connection holds it, taken
-    /// over from a connection known to be gone, and capped per
-    /// connection so `owner` cannot grow without bound.
-    fn bind(&mut self, conn: u64, sid: u64, cap: usize) -> Result<(), String> {
-        match self.owner.get(&sid).copied() {
-            Some(c) if c == conn => Ok(()),
-            Some(c) if self.conns.contains_key(&c) => {
-                Err("Hello for a session bound to another live connection".to_string())
-            }
-            stale => {
-                if let Some(c) = stale {
-                    // the previous holder is gone; release its slot
-                    if let Some(n) = self.owned.get_mut(&c) {
-                        *n = n.saturating_sub(1);
-                    }
-                }
-                let n = self.owned.entry(conn).or_insert(0);
-                if *n >= cap {
-                    return Err(format!("connection exceeded {cap} session bindings"));
-                }
-                *n += 1;
-                self.owner.insert(sid, conn);
-                Ok(())
-            }
-        }
-    }
-
-    /// Non-blocking frame dispatch into the connection's writer outbox.
-    /// A full outbox means the peer is slow (its writer is stuck on a
-    /// full socket) — that connection alone is dropped; the serve thread
-    /// never waits on anyone's socket.
-    fn send(&mut self, conn: u64, msg: &Message) {
-        let Some(e) = self.conns.get(&conn) else { return };
-        let buf = wire::encode_frame(0, msg);
-        match e.outbox.try_send(buf) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) => {
-                self.drop_conn(conn, "response outbox full (slow client)");
-            }
-            Err(TrySendError::Disconnected(_)) => {
-                self.drop_conn(conn, "writer thread gone");
-            }
-        }
-    }
-
-    /// Return each completed step's logits to the connection it arrived
-    /// on (consumes the steps — the logits rows move into the frames).
-    fn route_logits(&mut self, done: Vec<CompletedStep>) {
-        for step in done {
-            let msg = Message::Logits {
-                session: step.session,
-                pred: step.pred as u32,
-                logits: step.logits,
-            };
-            self.send(step.tag, &msg);
-        }
-    }
-
-    /// Teardown: let every live connection's writer flush its queued
-    /// frames (the shutdown Ack, final logits) by closing the outbox and
-    /// joining it *before* the socket is shut down — a blocked writer is
-    /// bounded by its socket write timeout. Only called after the serve
-    /// thread has dropped the event receiver, so no writer can block
-    /// reporting its own death.
-    fn close_all(&mut self) {
-        for (_, e) in self.conns.drain() {
-            drop(e.outbox);
-            let _ = e.writer.join();
-            let _ = e.ctl.shutdown(std::net::Shutdown::Both);
-        }
-        // writers of already-severed connections (their sockets are shut;
-        // they exit as soon as their pending write fails)
-        for h in self.reap.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// Why a Step/StepLabeled frame is a protocol violation, if it is one:
-/// wrong input width, a label outside the class range (it would index the
-/// one-hot/loss rows out of bounds), or a session this connection never
-/// established with `Hello`.
-fn step_violation(
-    owns: bool,
-    got: usize,
-    nx: usize,
-    label: Option<u32>,
-    ny: usize,
-) -> Option<String> {
-    if got != nx {
-        return Some(format!("step of width {got} (net expects {nx})"));
-    }
-    if let Some(l) = label {
-        if l as usize >= ny {
-            return Some(format!("label {l} out of range (net has {ny} classes)"));
-        }
-    }
-    if !owns {
-        return Some("step for a session this connection did not establish".to_string());
-    }
-    None
 }
 
 /// Convenience wrapper: bind, print nothing, serve until shutdown.

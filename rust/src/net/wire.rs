@@ -7,7 +7,7 @@
 //! offset  size  field
 //! 0       4     magic    "M2RU"
 //! 4       2     version  1
-//! 6       1     kind     message discriminant (1..=7)
+//! 6       1     kind     message discriminant (1..=8)
 //! 7       1     flags    FLAG_TICK | FLAG_FLUSH
 //! 8       4     len      payload byte count (<= MAX_PAYLOAD)
 //! 12      len   payload  per-kind layout below
@@ -17,7 +17,7 @@
 //! n×f32}`, `StepLabeled{session u64, label u32, n u32, n×f32}`,
 //! `Ack{value u64}`, `Logits{session u64, pred u32, n u32, n×f32}`,
 //! `Stats{utf-8 bytes}` (the header's payload length delimits the
-//! text), `Shutdown{}` (empty).
+//! text), `Shutdown{}` (empty), `Nop{}` (empty).
 //!
 //! Flags drive the server's deterministic logical clock: `FLAG_TICK`
 //! marks the end of an admission wave (dispatch per the max-batch/
@@ -70,6 +70,12 @@ pub enum Message {
     Stats { text: String },
     /// Drain everything, checkpoint, and stop the server.
     Shutdown,
+    /// A frame whose only job is its TICK/FLUSH flags: the shard router
+    /// marks every wave boundary on every shard with one of these, so a
+    /// shard that received no steps this wave still advances its clock in
+    /// lock-step (batch wait policy, TTL expiry, checkpoint cadence).
+    /// Servers process the flags and send no response.
+    Nop,
 }
 
 impl Message {
@@ -83,6 +89,7 @@ impl Message {
             Message::Logits { .. } => 5,
             Message::Stats { .. } => 6,
             Message::Shutdown => 7,
+            Message::Nop => 8,
         }
     }
 }
@@ -116,7 +123,7 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             p.f32s(logits);
         }
         Message::Stats { text } => p.raw(text.as_bytes()),
-        Message::Shutdown => {}
+        Message::Shutdown | Message::Nop => {}
     }
     p.into_vec()
 }
@@ -156,6 +163,7 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message> {
             Message::Stats { text }
         }
         7 => Message::Shutdown,
+        8 => Message::Nop,
         other => bail!("unknown message kind {other}"),
     };
     c.done()?;
@@ -263,6 +271,8 @@ mod tests {
         roundtrip(0, Message::Logits { session: 1, pred: 2, logits: vec![0.1, 0.9, -3.5] });
         roundtrip(0, Message::Stats { text: "req=10 batches=2".to_string() });
         roundtrip(FLAG_FLUSH, Message::Shutdown);
+        roundtrip(FLAG_TICK, Message::Nop);
+        roundtrip(FLAG_TICK | FLAG_FLUSH, Message::Nop);
     }
 
     #[test]

@@ -141,6 +141,90 @@ impl Gen for VecF32 {
     }
 }
 
+/// Full-range u64 (four 16-bit draws — `GaussianRng` exposes no raw
+/// word). Shrinks toward 0 by halving.
+pub struct U64Any;
+
+impl Gen for U64Any {
+    type Value = u64;
+    fn generate(&self, rng: &mut GaussianRng) -> u64 {
+        let mut v = 0u64;
+        for _ in 0..4 {
+            v = (v << 16) | rng.below(1 << 16) as u64;
+        }
+        v
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > 0 {
+            out.push(0);
+            out.push(v >> 1);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Random byte vector with length in [0, max_len]. Shrinks by halving /
+/// truncating / zeroing (the codec-fuzz workhorse).
+pub struct ByteVec {
+    pub max_len: usize,
+}
+
+impl Gen for ByteVec {
+    type Value = Vec<u8>;
+    fn generate(&self, rng: &mut GaussianRng) -> Vec<u8> {
+        let len = rng.below(self.max_len + 1);
+        (0..len).map(|_| rng.below(256) as u8).collect()
+    }
+    fn shrink(&self, v: &Vec<u8>) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(Vec::new());
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&b| b != 0) {
+            out.push(vec![0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Vector of values from an element generator, length in [0, max_len].
+/// Shrinks the vector (halve / drop-last) and then each element in
+/// place — enough to land near-minimal counterexamples for sequence
+/// laws (e.g. the codec roundtrip property).
+pub struct VecOf<G> {
+    pub elem: G,
+    pub max_len: usize,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut GaussianRng) -> Vec<G::Value> {
+        let len = rng.below(self.max_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(Vec::new());
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        for (i, x) in v.iter().enumerate() {
+            for sx in self.elem.shrink(x) {
+                let mut w = v.clone();
+                w[i] = sx;
+                out.push(w);
+            }
+        }
+        out
+    }
+}
+
 /// Pair of independent generators.
 pub struct Pair<A, B>(pub A, pub B);
 
@@ -209,6 +293,48 @@ mod tests {
         let shrinks = g.shrink(&(10, 10));
         assert!(shrinks.iter().any(|&(a, b)| a < 10 && b == 10));
         assert!(shrinks.iter().any(|&(a, b)| a == 10 && b < 10));
+    }
+
+    #[test]
+    fn u64_any_covers_high_bits_and_shrinks_toward_zero() {
+        let mut rng = GaussianRng::new(9);
+        let mut any_high = false;
+        for _ in 0..64 {
+            if U64Any.generate(&mut rng) > u64::from(u32::MAX) {
+                any_high = true;
+            }
+        }
+        assert!(any_high, "the generator must reach beyond 32 bits");
+        let shrinks = U64Any.shrink(&1024);
+        assert!(shrinks.contains(&0) && shrinks.contains(&512) && shrinks.contains(&1023));
+        assert!(U64Any.shrink(&0).is_empty());
+    }
+
+    #[test]
+    fn byte_vec_respects_bounds_and_shrinks() {
+        let g = ByteVec { max_len: 16 };
+        let mut rng = GaussianRng::new(4);
+        for _ in 0..100 {
+            assert!(g.generate(&mut rng).len() <= 16);
+        }
+        let shrinks = g.shrink(&vec![1, 2, 3, 4]);
+        assert!(shrinks.contains(&vec![]));
+        assert!(shrinks.contains(&vec![1, 2]));
+        assert!(shrinks.contains(&vec![0, 0, 0, 0]));
+    }
+
+    #[test]
+    fn vec_of_shrinks_structure_and_elements() {
+        let g = VecOf { elem: UsizeIn(0, 9), max_len: 8 };
+        let mut rng = GaussianRng::new(5);
+        for _ in 0..50 {
+            let v = g.generate(&mut rng);
+            assert!(v.len() <= 8 && v.iter().all(|&x| x <= 9));
+        }
+        let shrinks = g.shrink(&vec![9, 9]);
+        assert!(shrinks.contains(&vec![]), "structural shrink");
+        assert!(shrinks.contains(&vec![9]), "drop-last shrink");
+        assert!(shrinks.iter().any(|v| v.len() == 2 && v[0] < 9), "element shrink");
     }
 
     #[test]

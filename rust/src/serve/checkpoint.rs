@@ -1221,6 +1221,104 @@ mod tests {
     }
 
     #[test]
+    fn corrupt_full_snapshot_boots_fresh_and_never_applies_orphan_deltas() {
+        // a chain whose *base* is corrupt has no consistent state at all:
+        // the deltas are upserts against a baseline that cannot be
+        // trusted, so the restore must report Corrupt and leave the core
+        // untouched — applying "just the deltas" would resurrect a
+        // partial, internally inconsistent session set
+        let d = dir("orphan");
+        let net = NetConfig::SMALL;
+        let mut a = small_core(8);
+        let mut w = SyntheticWorkload::new(&net, 4, 8);
+        feed(&mut a, &mut w, 30);
+        save_checkpoint(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 10);
+        save_delta(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 10);
+        save_delta(&mut a, &d).unwrap();
+        assert_eq!(delta_files(&d).len(), 2, "the chain holds two live deltas");
+        // flip one payload byte of the full snapshot: checksum kills it
+        let p = d.join(SNAPSHOT_FILE);
+        let mut raw = std::fs::read(&p).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        std::fs::write(&p, &raw).unwrap();
+
+        let mut b = small_core(8);
+        match try_restore(&mut b, &d).unwrap() {
+            RestoreOutcome::Corrupt { error } => assert!(!error.is_empty()),
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+        // the orphan deltas were NOT applied: the core is factory-fresh
+        assert!(b.store().is_empty(), "no session may leak out of an orphaned delta");
+        assert_eq!(b.tick(), 0, "a fresh boot starts at tick 0");
+        assert_eq!(b.metrics().requests, 0);
+        // the read path agrees with the restore path
+        assert!(read_snapshot(&d).is_err(), "a corrupt base must fail the chain read");
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn delta_removals_for_evicted_sessions_apply_and_skip_cleanly() {
+        // capacity 2 with 5 users forces LRU evictions between snapshots,
+        // so the delta's `removed` set names (a) sessions present in the
+        // base snapshot and (b) sessions created *and* evicted entirely
+        // between the base and the delta — the latter are unknown to the
+        // base and their removal must skip cleanly, never error
+        let d = dir("evicted");
+        let net = NetConfig::SMALL;
+        let mut run = RunConfig::default();
+        run.seed = 12;
+        run.serve = ServeConfig {
+            max_batch: 2,
+            max_wait: 1,
+            capacity: 2,
+            update_every: 0,
+            ..ServeConfig::default()
+        };
+        let mut a = ServeCore::new(net, &run).unwrap();
+        // two sessions live -> full snapshot
+        let nx = net.nx;
+        for (tick, id) in [(0u64, 100u64), (1, 200)] {
+            a.submit(id, vec![0.1; nx], None, 0);
+            a.drain_ready().unwrap();
+            a.flush_all().unwrap();
+            let _ = tick;
+            a.advance_tick();
+        }
+        save_checkpoint(&mut a, &d).unwrap();
+        // churn: 300 evicts 100, 400 evicts 200, 500 evicts 300 — so the
+        // delta removes two base sessions AND session 300, which the base
+        // snapshot has never heard of
+        for id in [300u64, 400, 500] {
+            a.submit(id, vec![0.2; nx], None, 0);
+            a.drain_ready().unwrap();
+            a.flush_all().unwrap();
+            a.advance_tick();
+        }
+        save_delta(&mut a, &d).unwrap();
+
+        let mut b = ServeCore::new(net, &run).unwrap();
+        match try_restore(&mut b, &d).unwrap() {
+            RestoreOutcome::Restored { sessions, deltas, .. } => {
+                assert_eq!(deltas, 1, "the delta must apply despite the unknown removal");
+                assert_eq!(sessions, 2, "only the two live sessions survive");
+            }
+            other => panic!("expected restore, got {other:?}"),
+        }
+        assert!(!b.store().contains(100) && !b.store().contains(200));
+        assert!(!b.store().contains(300), "a session evicted between snapshots must not revive");
+        assert!(b.store().contains(400) && b.store().contains(500));
+        assert_eq!(b.store().snapshot_slots(), a.store().snapshot_slots());
+        assert_eq!(
+            b.metrics().signature(&b.store().stats),
+            a.metrics().signature(&a.store().stats)
+        );
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
     fn missing_snapshot_boots_fresh() {
         let d = dir("fresh");
         let mut c = small_core(1);

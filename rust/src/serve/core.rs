@@ -284,6 +284,7 @@ impl ServeCore {
             backend_stats: self.status.stats.clone(),
             lifespan_years: self.status.lifespan_years,
             completed: Vec::new(),
+            outbox_drops: Default::default(),
         })
     }
 

@@ -23,7 +23,7 @@ use crate::config::{NetConfig, RunConfig};
 
 use super::batcher::BatcherStats;
 use super::core::{CompletedStep, ServeCore};
-use super::metrics::ServeMetrics;
+use super::metrics::{OutboxDrops, ServeMetrics};
 use super::session::{session_id_for_user, SessionStats};
 use super::workload::SyntheticWorkload;
 
@@ -81,6 +81,11 @@ pub struct ServeReport {
     pub lifespan_years: Option<f64>,
     /// Per-request completion log (only when `ServeOptions::record_steps`).
     pub completed: Vec<CompletedStep>,
+    /// Writer-outbox drops by reason. Always zero for the in-process
+    /// driver (there are no sockets); the TCP frontends fill it from
+    /// their connection table so load tests can assert slow-client
+    /// isolation on counters instead of scraping stderr.
+    pub outbox_drops: OutboxDrops,
 }
 
 impl ServeReport {
@@ -92,6 +97,10 @@ impl ServeReport {
         )];
         out.extend(self.metrics.summary_lines(&self.store, &self.batcher));
         out.extend(self.backend_stats.iter().cloned());
+        out.push(format!(
+            "outbox: drops_full={} drops_timeout={} drops_writer_failed={}",
+            self.outbox_drops.full, self.outbox_drops.timeout, self.outbox_drops.writer_failed
+        ));
         if let Some(years) = self.lifespan_years {
             if years.is_finite() {
                 out.push(format!("projected lifespan: {years:.2} years @ 1 kHz commits"));

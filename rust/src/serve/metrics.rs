@@ -16,6 +16,32 @@ use std::time::Duration;
 use super::batcher::BatcherStats;
 use super::session::SessionStats;
 
+/// Writer-outbox drops by reason (TCP frontends only; always zero for the
+/// in-process driver). A connection is severed — and counted here exactly
+/// once — when its bounded response outbox overflows (`full`: the peer
+/// stopped reading and its writer thread jammed), when its writer thread
+/// hit the socket write timeout (`timeout`: a half-dead peer), or when a
+/// write failed outright (`writer_failed`: the peer is gone). Deliberately
+/// *not* part of the deterministic signature — drops depend on wall-clock
+/// socket behavior — but load tests assert slow-client isolation on these
+/// counters instead of scraping stderr.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OutboxDrops {
+    /// Response outbox was full when the serve thread tried to queue.
+    pub full: u64,
+    /// Writer thread reported a socket write timeout.
+    pub timeout: u64,
+    /// Writer thread reported a failed write (dead peer).
+    pub writer_failed: u64,
+}
+
+impl OutboxDrops {
+    /// Connections severed for any outbox reason.
+    pub fn total(&self) -> u64 {
+        self.full + self.timeout + self.writer_failed
+    }
+}
+
 /// Accumulated over one serve run (see `serve::run_serve`).
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {

@@ -64,7 +64,7 @@ pub use checkpoint::{
 pub use commit::{SubstrateStatus, WeightSnapshot};
 pub use self::core::{CompletedStep, ServeCore};
 pub use driver::{run_serve, ServeOptions, ServeReport};
-pub use metrics::ServeMetrics;
+pub use metrics::{OutboxDrops, ServeMetrics};
 pub use online::{CommitBatch, LearnerDelta, LearnerState, OnlineLearner};
 pub use session::{
     session_id_for_user, session_id_keyed, SessionSnapshot, SessionStats, SessionStore,

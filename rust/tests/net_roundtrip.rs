@@ -371,11 +371,22 @@ fn slow_client_is_dropped_without_stalling_others() {
     }
     assert!(flood.join().unwrap(), "the non-reading client must be dropped");
 
+    // the drop is observable in the mid-run Stats report as a typed
+    // counter (no stderr scraping): alice was severed for a full outbox
+    let stats = bob.stats().unwrap();
+    assert!(stats.contains("outbox: drops_full="), "stats must carry the drop counters:\n{stats}");
+    assert!(!stats.contains("drops_full=0"), "alice's drop must be counted by then:\n{stats}");
+
     let total = bob.shutdown_server().unwrap();
     assert_eq!(total, 30, "only bob's steps reach the serving core");
     let rep = server.join().unwrap().unwrap();
     assert_eq!(rep.connections, 2);
     assert_eq!(rep.report.metrics.requests, 30);
+    // final report: exactly one connection was severed, for exactly one
+    // reason — the full outbox (not a timeout, not a failed write)
+    assert_eq!(rep.report.outbox_drops.full, 1, "drops: {:?}", rep.report.outbox_drops);
+    assert_eq!(rep.report.outbox_drops.timeout, 0, "drops: {:?}", rep.report.outbox_drops);
+    assert_eq!(rep.report.outbox_drops.writer_failed, 0, "drops: {:?}", rep.report.outbox_drops);
 }
 
 #[test]

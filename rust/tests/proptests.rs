@@ -1,11 +1,15 @@
-//! Property-based tests on coordinator invariants, via the in-tree
-//! `proptest` mini-framework (seeded generators + shrinking).
+//! Property-based tests on coordinator invariants — and on the shared
+//! little-endian codec + wire protocol (roundtrip laws, truncation laws,
+//! single-byte corruption fuzz) — via the in-tree `proptest`
+//! mini-framework (seeded generators + shrinking).
 
+use m2ru::codec::{LeReader, LeWriter};
 use m2ru::coordinator::{make_eval_batches, make_seq_batch, TileScheduler, TrainBatcher};
 use m2ru::data::Example;
 use m2ru::linalg::Mat;
+use m2ru::net::{decode_frame, encode_frame, Message};
 use m2ru::nn::{kwta_inplace, kwta_keep_count};
-use m2ru::proptest::{assert_prop, F32In, Pair, UsizeIn, VecF32};
+use m2ru::proptest::{assert_prop, ByteVec, F32In, Gen, Pair, U64Any, UsizeIn, VecF32, VecOf};
 use m2ru::quant::{dequantize, stochastic_round, uniform_truncate, StochasticQuantizer};
 use m2ru::replay::{ReplayBuffer, ReservoirDecision, ReservoirSampler};
 use m2ru::rng::GaussianRng;
@@ -251,6 +255,229 @@ fn prop_tile_scheduler_covers_each_unit_once() {
         }
         if s.cycles() != nh.div_ceil(tiles) {
             return Err(format!("cycles {} != ceil({nh}/{tiles})", s.cycles()));
+        }
+        Ok(())
+    });
+}
+
+// --- shared LE codec (rust/src/codec/) --------------------------------------
+
+/// One typed codec item: writing a random sequence of these and reading
+/// it back with the same type schedule must be the identity — every
+/// binary format in the crate (wire frames, snapshot chains) is built
+/// from exactly these primitives.
+#[derive(Clone, Debug, PartialEq)]
+enum Item {
+    U8(u8),
+    U16(u16),
+    U32(u32),
+    U64(u64),
+    F32(f32),
+    F64(f64),
+    F32s(Vec<f32>),
+    U64s(Vec<u64>),
+    Bytes(Vec<u8>),
+}
+
+struct ItemGen;
+
+impl Gen for ItemGen {
+    type Value = Item;
+    fn generate(&self, rng: &mut m2ru::rng::GaussianRng) -> Item {
+        match rng.below(9) {
+            0 => Item::U8(rng.below(256) as u8),
+            1 => Item::U16(rng.below(1 << 16) as u16),
+            2 => Item::U32(U64Any.generate(rng) as u32),
+            3 => Item::U64(U64Any.generate(rng)),
+            4 => Item::F32(rng.uniform_in(-1e6, 1e6)),
+            5 => Item::F64(f64::from(rng.uniform_in(-1e6, 1e6))),
+            6 => Item::F32s((0..rng.below(9)).map(|_| rng.uniform_in(-1.0, 1.0)).collect()),
+            7 => Item::U64s((0..rng.below(9)).map(|_| U64Any.generate(rng)).collect()),
+            _ => Item::Bytes(ByteVec { max_len: 12 }.generate(rng)),
+        }
+    }
+    fn shrink(&self, v: &Item) -> Vec<Item> {
+        match v {
+            Item::U8(0) | Item::U16(0) | Item::U32(0) | Item::U64(0) => Vec::new(),
+            Item::U8(_) => vec![Item::U8(0)],
+            Item::U16(_) => vec![Item::U16(0)],
+            Item::U32(_) => vec![Item::U32(0)],
+            Item::U64(_) => vec![Item::U64(0)],
+            Item::F32(x) if *x != 0.0 => vec![Item::F32(0.0)],
+            Item::F64(x) if *x != 0.0 => vec![Item::F64(0.0)],
+            Item::F32s(v) if !v.is_empty() => vec![Item::F32s(v[..v.len() / 2].to_vec())],
+            Item::U64s(v) if !v.is_empty() => vec![Item::U64s(v[..v.len() / 2].to_vec())],
+            Item::Bytes(v) if !v.is_empty() => vec![Item::Bytes(v[..v.len() / 2].to_vec())],
+            _ => Vec::new(),
+        }
+    }
+}
+
+fn write_items(items: &[Item]) -> Vec<u8> {
+    let mut w = LeWriter::new();
+    for it in items {
+        match it {
+            Item::U8(v) => w.u8(*v),
+            Item::U16(v) => w.u16(*v),
+            Item::U32(v) => w.u32(*v),
+            Item::U64(v) => w.u64(*v),
+            Item::F32(v) => w.f32(*v),
+            Item::F64(v) => w.f64(*v),
+            Item::F32s(v) => w.f32s(v),
+            Item::U64s(v) => w.u64s(v),
+            Item::Bytes(v) => w.bytes(v),
+        }
+    }
+    w.into_vec()
+}
+
+/// Read `shape.len()` items of the same types back (contents ignored on
+/// input — only the type schedule matters).
+fn read_items(buf: &[u8], shape: &[Item]) -> anyhow::Result<Vec<Item>> {
+    let mut r = LeReader::new(buf);
+    let mut out = Vec::with_capacity(shape.len());
+    for it in shape {
+        out.push(match it {
+            Item::U8(_) => Item::U8(r.u8()?),
+            Item::U16(_) => Item::U16(r.u16()?),
+            Item::U32(_) => Item::U32(r.u32()?),
+            Item::U64(_) => Item::U64(r.u64()?),
+            Item::F32(_) => Item::F32(r.f32()?),
+            Item::F64(_) => Item::F64(r.f64()?),
+            Item::F32s(_) => Item::F32s(r.f32s()?),
+            Item::U64s(_) => Item::U64s(r.u64s()?),
+            Item::Bytes(_) => Item::Bytes(r.byte_vec()?),
+        });
+    }
+    r.done()?;
+    Ok(out)
+}
+
+#[test]
+fn prop_codec_roundtrips_any_item_sequence() {
+    // ∀ item sequences: write → read is the identity and consumes
+    // exactly the written bytes.
+    let gen = VecOf { elem: ItemGen, max_len: 12 };
+    assert_prop(21, 60, &gen, |items| {
+        let buf = write_items(items);
+        match read_items(&buf, items) {
+            Ok(got) if &got == items => Ok(()),
+            Ok(got) => Err(format!("roundtrip changed the data: {got:?}")),
+            Err(e) => Err(format!("roundtrip failed to read: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_codec_rejects_any_truncation_without_panicking() {
+    // ∀ sequences and cut points strictly inside the encoding: reading
+    // must return an error (some item extends past the cut), never
+    // panic, never succeed.
+    let gen = Pair(VecOf { elem: ItemGen, max_len: 8 }, UsizeIn(0, 4096));
+    assert_prop(22, 80, &(gen), |(items, cut_seed)| {
+        let buf = write_items(items);
+        if buf.is_empty() {
+            return Ok(());
+        }
+        let cut = cut_seed % buf.len();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            read_items(&buf[..cut], items).map(|_| ())
+        }));
+        match res {
+            Err(_) => Err("reader panicked on truncated input".to_string()),
+            Ok(Ok(())) => Err(format!("truncation at {cut}/{} decoded successfully", buf.len())),
+            Ok(Err(_)) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_codec_rejects_trailing_bytes() {
+    // ∀ sequences: appending any non-empty suffix leaves the item reads
+    // intact but `done()` must flag the trailing bytes.
+    let gen = Pair(VecOf { elem: ItemGen, max_len: 8 }, ByteVec { max_len: 9 });
+    assert_prop(23, 60, &gen, |(items, extra)| {
+        if extra.is_empty() {
+            return Ok(());
+        }
+        let mut buf = write_items(items);
+        buf.extend_from_slice(extra);
+        match read_items(&buf, items) {
+            Err(e) if e.to_string().contains("trailing") => Ok(()),
+            Err(e) => Err(format!("wrong error for trailing bytes: {e}")),
+            Ok(_) => Err("trailing bytes passed undetected".to_string()),
+        }
+    });
+}
+
+// --- wire-frame corruption fuzz ---------------------------------------------
+
+struct MsgGen;
+
+impl Gen for MsgGen {
+    type Value = Message;
+    fn generate(&self, rng: &mut m2ru::rng::GaussianRng) -> Message {
+        let floats = |rng: &mut m2ru::rng::GaussianRng| -> Vec<f32> {
+            (0..rng.below(9)).map(|_| rng.uniform_in(-2.0, 2.0)).collect()
+        };
+        match rng.below(8) {
+            0 => Message::Hello { user: U64Any.generate(rng) },
+            1 => Message::Step { session: U64Any.generate(rng), x: floats(rng) },
+            2 => Message::StepLabeled {
+                session: U64Any.generate(rng),
+                label: rng.below(16) as u32,
+                x: floats(rng),
+            },
+            3 => Message::Ack { value: U64Any.generate(rng) },
+            4 => Message::Logits {
+                session: U64Any.generate(rng),
+                pred: rng.below(16) as u32,
+                logits: floats(rng),
+            },
+            5 => Message::Stats {
+                text: String::from_utf8_lossy(&ByteVec { max_len: 16 }.generate(rng)).into_owned(),
+            },
+            6 => Message::Shutdown,
+            _ => Message::Nop,
+        }
+    }
+}
+
+#[test]
+fn prop_any_single_byte_corruption_decodes_to_error_or_valid_frame() {
+    // ∀ valid frames, ∀ byte positions, ∀ three flip patterns: decoding
+    // the corrupted frame must either error or yield a frame that is
+    // itself valid (re-encodes and re-decodes) — and must never panic.
+    let gen = Pair(MsgGen, UsizeIn(0, 3));
+    assert_prop(24, 40, &gen, |(msg, flags_pick)| {
+        let flags = *flags_pick as u8; // 0, TICK, FLUSH, TICK|FLUSH
+        let buf = encode_frame(flags, msg);
+        for pos in 0..buf.len() {
+            for flip in [0x01u8, 0x80, 0xFF] {
+                let mut bad = buf.clone();
+                bad[pos] ^= flip;
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    decode_frame(&bad).map(|(frame, used)| (frame, used))
+                }));
+                match res {
+                    Err(_) => {
+                        return Err(format!("decode panicked at byte {pos} flip {flip:#04x}"))
+                    }
+                    Ok(Err(_)) => {} // rejected — fine
+                    Ok(Ok((frame, used))) => {
+                        if used > bad.len() {
+                            return Err(format!("decode overran the buffer at byte {pos}"));
+                        }
+                        // whatever decoded must itself be a valid frame
+                        let re = encode_frame(frame.flags, &frame.msg);
+                        if decode_frame(&re).is_err() {
+                            return Err(format!(
+                                "byte {pos} flip {flip:#04x} produced an un-reencodable frame"
+                            ));
+                        }
+                    }
+                }
+            }
         }
         Ok(())
     });

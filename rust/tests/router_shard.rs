@@ -1,0 +1,493 @@
+//! Cross-shard equivalence harness for the multi-shard session router
+//! (DESIGN.md §11). The claims under test:
+//!
+//! 1. **Inference invariance** — with online learning off (weights
+//!    frozen at boot), per-session logits are independent of the
+//!    partition: 1-, 2- and 4-shard router runs are bitwise-identical to
+//!    one unsharded `ServeCore` fed the same schedule, per session.
+//! 2. **Per-shard equivalence** — with online learning on, each shard is
+//!    bitwise-identical to a *dedicated* single-process server fed that
+//!    shard's request subset on the same wave schedule (commits, replay
+//!    stream, batching and logits all match).
+//! 3. **Shard crash recovery** — killing one shard mid-run and
+//!    restarting it from its own delta snapshot chain changes nothing:
+//!    the combined per-session logs still match the uninterrupted
+//!    references, in-process and over loopback TCP.
+//!
+//! The same wave schedule drives every deployment: `ARRIVALS` requests
+//! per wave, one logical tick per wave on *every* shard (the router's
+//! lock-step clock), a tail flush at each phase end.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use m2ru::config::{NetConfig, RunConfig, ServeConfig};
+use m2ru::net::{
+    run_connect, shard_of, ConnectOptions, NetServeOptions, NetServer, RouterCore,
+    RouterServeOptions, RouterServer,
+};
+use m2ru::serve::{session_id_for_user, CompletedStep, ServeCore, SyntheticWorkload};
+
+const SESSIONS: usize = 12;
+const ARRIVALS: usize = 6;
+
+/// One request of the admission schedule: (user, features, label).
+type Req = (u64, Vec<f32>, Option<usize>);
+/// Per-session completion log: reference session id → (pred, logits)
+/// in completion order.
+type PerSession = HashMap<u64, Vec<(usize, Vec<f32>)>>;
+
+/// The shared operating point. `capacity` exceeds the user count so no
+/// deployment ever evicts (evictions are a *policy* difference between
+/// shard counts — a shard holds fewer sessions than the monolith — and
+/// the invariance claims are about routing, not about comparing
+/// different eviction policies).
+fn run_cfg(seed: u64, update_every: usize, shards: usize, root: &str) -> RunConfig {
+    let mut run = RunConfig::default();
+    run.seed = seed;
+    run.backend = "dense".to_string();
+    run.serve = ServeConfig {
+        max_batch: 4,
+        max_wait: 1,
+        capacity: 16,
+        ttl: 0,
+        update_every,
+        replay_cap: 64,
+        replay_mix: 0.5,
+        ..ServeConfig::default()
+    };
+    run.router.shards = shards;
+    run.router.checkpoint_root = root.to_string();
+    run
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("m2ru_router_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The deterministic admission schedule: waves of `ARRIVALS` requests.
+fn schedule(seed: u64, requests: u64) -> Vec<Vec<Req>> {
+    let mut wl = SyntheticWorkload::new(&NetConfig::SMALL, SESSIONS, seed);
+    let mut waves = Vec::new();
+    let mut issued = 0u64;
+    while issued < requests {
+        let mut wave = Vec::new();
+        for _ in 0..ARRIVALS {
+            if issued >= requests {
+                break;
+            }
+            wave.push(wl.next());
+            issued += 1;
+        }
+        waves.push(wave);
+    }
+    waves
+}
+
+fn group_steps(steps: &[CompletedStep], out: &mut PerSession) {
+    for s in steps {
+        out.entry(s.session).or_default().push((s.pred, s.logits.clone()));
+    }
+}
+
+/// Drive an unsharded core over waves `lo..hi` of the schedule,
+/// admitting only users `keep` accepts, flushing after each wave index
+/// in `flush_at`, ticking every wave. Appends to `log`.
+fn drive_core(
+    core: &mut ServeCore,
+    waves: &[Vec<Req>],
+    lo: usize,
+    hi: usize,
+    flush_at: &[usize],
+    keep: &dyn Fn(u64) -> bool,
+    log: &mut PerSession,
+) {
+    for i in lo..hi {
+        for (u, x, label) in &waves[i] {
+            if keep(*u) {
+                core.submit(session_id_for_user(*u), x.clone(), *label, 0);
+            }
+        }
+        let mut done = core.drain_ready().unwrap();
+        if flush_at.contains(&i) {
+            done.extend(core.flush_all().unwrap());
+        }
+        group_steps(&done, log);
+        core.advance_tick();
+    }
+    core.sync_commits().unwrap();
+}
+
+/// Drive the in-process router over waves `lo..hi` (all users — routing
+/// is the router's job), appending per-session logs.
+fn drive_router(
+    rc: &mut RouterCore,
+    waves: &[Vec<Req>],
+    lo: usize,
+    hi: usize,
+    flush_at: &[usize],
+    log: &mut PerSession,
+) {
+    for i in lo..hi {
+        for (u, x, label) in &waves[i] {
+            let sid = rc.session_id(*u);
+            rc.submit(sid, x.clone(), *label, 0).unwrap();
+        }
+        let done = rc.wave(true, flush_at.contains(&i)).unwrap();
+        group_steps(&done, log);
+    }
+}
+
+/// Per-shard references: for each shard k of an N-shard deployment, one
+/// dedicated unsharded core fed only the users routed to k (by the
+/// default-secret id space the in-process harness uses). Merged into one
+/// expected per-session map.
+fn per_shard_references(
+    run: &RunConfig,
+    waves: &[Vec<Req>],
+    n: usize,
+    flush_at: &[usize],
+) -> PerSession {
+    let mut expected = PerSession::new();
+    for k in 0..n {
+        let mut core = ServeCore::new(NetConfig::SMALL, run).unwrap();
+        let keep = move |u: u64| shard_of(session_id_for_user(u), n) == k;
+        drive_core(&mut core, waves, 0, waves.len(), flush_at, &keep, &mut expected);
+    }
+    expected
+}
+
+fn assert_same(got: &PerSession, want: &PerSession, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: session sets differ");
+    for (sid, want_log) in want {
+        let got_log = got
+            .get(sid)
+            .unwrap_or_else(|| panic!("{ctx}: session {sid:#x} missing from the sharded run"));
+        assert_eq!(
+            got_log.len(),
+            want_log.len(),
+            "{ctx}: session {sid:#x} completed a different number of steps"
+        );
+        for (i, (g, w)) in got_log.iter().zip(want_log).enumerate() {
+            assert_eq!(g.0, w.0, "{ctx}: session {sid:#x} prediction differs at step {i}");
+            assert_eq!(
+                g.1, w.1,
+                "{ctx}: session {sid:#x} logits differ at step {i} (must be bitwise)"
+            );
+        }
+    }
+}
+
+// --------------------------------------------------- in-process routing
+
+#[test]
+fn inference_only_sharding_matches_the_unsharded_baseline_per_session() {
+    let seed = 5;
+    let waves = schedule(seed, 240);
+    let last = [waves.len() - 1];
+    // the 1-process baseline over the full schedule
+    let run = run_cfg(seed, 0, 1, "");
+    let mut baseline = PerSession::new();
+    let mut core = ServeCore::new(NetConfig::SMALL, &run).unwrap();
+    drive_core(&mut core, &waves, 0, waves.len(), &last, &|_| true, &mut baseline);
+    assert_eq!(baseline.values().map(Vec::len).sum::<usize>(), 240);
+
+    for shards in [1usize, 2, 4] {
+        let run = run_cfg(seed, 0, shards, "");
+        let mut rc = RouterCore::new(NetConfig::SMALL, &run).unwrap();
+        assert_eq!(rc.shards(), shards);
+        let mut got = PerSession::new();
+        drive_router(&mut rc, &waves, 0, waves.len(), &last, &mut got);
+        assert_eq!(rc.routed(), 240);
+        if shards > 1 {
+            let per_shard = rc.shard_routed();
+            assert!(
+                per_shard.iter().filter(|&&r| r > 0).count() > 1,
+                "the keyed ids must actually spread across shards: {per_shard:?}"
+            );
+        }
+        assert_same(&got, &baseline, &format!("{shards}-shard inference"));
+        rc.finish().unwrap();
+    }
+}
+
+#[test]
+fn sharded_learning_matches_dedicated_single_process_references() {
+    // online commits on (update_every=4): each shard must be bitwise-
+    // identical to a dedicated unsharded server fed its request subset —
+    // weights, replay stream and batching included. For N=1 the
+    // reference *is* the full 1-process baseline, so this also pins
+    // router(1) == unsharded, learning included.
+    let seed = 11;
+    let waves = schedule(seed, 240);
+    let last = [waves.len() - 1];
+    for shards in [1usize, 2, 4] {
+        let run = run_cfg(seed, 4, shards, "");
+        let expected = per_shard_references(&run, &waves, shards, &last);
+        let mut rc = RouterCore::new(NetConfig::SMALL, &run).unwrap();
+        let mut got = PerSession::new();
+        drive_router(&mut rc, &waves, 0, waves.len(), &last, &mut got);
+        assert_same(&got, &expected, &format!("{shards}-shard learning"));
+        let (reports, tail) = rc.finish().unwrap();
+        assert!(tail.is_empty(), "the final wave already flushed");
+        assert_eq!(reports.len(), shards);
+        let updates: u64 = reports.iter().map(|(_, r)| r.metrics.online_updates).sum();
+        assert!(updates > 0, "the equivalence must cover online commits");
+    }
+}
+
+fn delta_files(dir: &Path) -> Vec<String> {
+    let mut out: Vec<String> = std::fs::read_dir(dir)
+        .map(|it| {
+            it.flatten()
+                .filter_map(|e| e.file_name().to_str().map(str::to_string))
+                .filter(|n| n.starts_with("delta-") && n.ends_with(".m2cd"))
+                .collect()
+        })
+        .unwrap_or_default();
+    out.sort();
+    out
+}
+
+#[test]
+fn in_process_shard_kill_restart_resumes_from_its_own_delta_chain() {
+    let seed = 17;
+    let waves = schedule(seed, 240); // 40 waves
+    let root = tmp_dir("inproc_restart");
+    let mut run = run_cfg(seed, 4, 2, &root.to_string_lossy());
+    // periodic snapshots every 5 ticks, full rewrite only every 8th: the
+    // chain at the kill point is one full snapshot plus several deltas
+    run.net.checkpoint_every = 5;
+    run.net.snapshot_full_every = 8;
+
+    // uninterrupted per-shard references, flushing at the restart point
+    // (wave 19) exactly like the router run below
+    let flushes = [19usize, 39];
+    let expected = per_shard_references(&run, &waves, 2, &flushes);
+
+    let mut rc = RouterCore::new(NetConfig::SMALL, &run).unwrap();
+    let mut got = PerSession::new();
+    drive_router(&mut rc, &waves, 0, 20, &flushes, &mut got);
+    // the kill point: shard 1 stops (checkpointing into its own chain)
+    // and is rebuilt from that chain
+    assert!(
+        !delta_files(&root.join("shard-1")).is_empty(),
+        "the chain must hold delta snapshots before the kill"
+    );
+    let (stopped, tail) = rc.restart_shard(1).unwrap();
+    assert!(tail.is_empty(), "the wave-19 flush left shard 1's queue empty");
+    assert!(stopped.metrics.requests > 0, "shard 1 served before the kill");
+    drive_router(&mut rc, &waves, 20, waves.len(), &flushes, &mut got);
+    assert_same(&got, &expected, "2-shard run with a mid-run shard 1 kill/restart");
+    rc.finish().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn router_restart_restores_every_shard_and_keeps_the_id_space() {
+    // the whole-router crash: both shards checkpoint at finish(); a new
+    // RouterCore over the same root restores both and adopts the
+    // persisted session secret, so ids (and routing) are unchanged
+    let seed = 23;
+    let waves = schedule(seed, 240);
+    let root = tmp_dir("router_restart");
+    let run = run_cfg(seed, 4, 2, &root.to_string_lossy());
+    let flushes = [19usize, 39];
+    let expected = per_shard_references(&run, &waves, 2, &flushes);
+
+    let mut got = PerSession::new();
+    let mut rc = RouterCore::new(NetConfig::SMALL, &run).unwrap();
+    let secret = rc.secret();
+    drive_router(&mut rc, &waves, 0, 20, &flushes, &mut got);
+    rc.finish().unwrap();
+    drop(rc);
+
+    let mut rc2 = RouterCore::new(NetConfig::SMALL, &run).unwrap();
+    assert!(rc2.restored(), "the second life must restore from the shard chains");
+    assert!(rc2.restored_sessions() > 0);
+    assert_eq!(rc2.secret(), secret, "a restart must not re-key the session-id space");
+    drive_router(&mut rc2, &waves, 20, waves.len(), &flushes, &mut got);
+    assert_same(&got, &expected, "2-shard run with a full router restart");
+    rc2.finish().unwrap();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// --------------------------------------------------- loopback TCP routing
+
+fn spawn_shard(
+    run: RunConfig,
+    listen: &str,
+) -> (String, std::thread::JoinHandle<anyhow::Result<m2ru::net::NetServeReport>>) {
+    let server = NetServer::bind(NetServeOptions::new(NetConfig::SMALL, run, listen)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+fn spawn_router(
+    run: RunConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<m2ru::net::RouterReport>>) {
+    let server = RouterServer::bind(RouterServeOptions { net: NetConfig::SMALL, run }).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+/// Group a connect report's completions into the reference id space
+/// (client session ids are keyed per deployment; users are the shared
+/// key).
+fn group_client(
+    completed: &[(u64, u32, Vec<f32>)],
+    session_ids: &[u64],
+    out: &mut PerSession,
+) {
+    let to_user: HashMap<u64, u64> =
+        session_ids.iter().enumerate().map(|(u, sid)| (*sid, u as u64)).collect();
+    for (sid, pred, logits) in completed {
+        let user = to_user[sid];
+        out.entry(session_id_for_user(user)).or_default().push((*pred as usize, logits.clone()));
+    }
+}
+
+#[test]
+fn tcp_router_with_remote_shards_matches_the_unsharded_baseline() {
+    // two real `serve --listen` shard processes behind a TCP router;
+    // inference-only, so per-session logits must match the 1-process
+    // baseline bitwise no matter the partition
+    let seed = 31;
+    let shard_run = run_cfg(seed, 0, 1, "");
+    let (a0, s0) = spawn_shard(shard_run.clone(), "127.0.0.1:0");
+    let (a1, s1) = spawn_shard(shard_run.clone(), "127.0.0.1:0");
+    let mut router_run = run_cfg(seed, 0, 1, "");
+    router_run.router.shard_addrs = vec![a0, a1];
+    router_run.net.listen = "127.0.0.1:0".to_string();
+    let (addr, router) = spawn_router(router_run);
+
+    let mut copts = ConnectOptions::new(addr, NetConfig::SMALL);
+    copts.requests = 240;
+    copts.sessions = SESSIONS;
+    copts.arrivals = ARRIVALS;
+    copts.seed = seed;
+    let rep = run_connect(&copts).unwrap();
+    assert_eq!(rep.completed.len(), 240);
+    let router_rep = router.join().unwrap().unwrap();
+    assert_eq!(router_rep.routed, 240);
+    assert!(router_rep.remote);
+    assert!(
+        router_rep.shard_routed.iter().filter(|&&r| r > 0).count() > 1,
+        "both shards must see traffic: {:?}",
+        router_rep.shard_routed
+    );
+    // the router's shutdown fan-out stopped both shard servers
+    let t0 = s0.join().unwrap().unwrap();
+    let t1 = s1.join().unwrap().unwrap();
+    assert_eq!(
+        t0.report.metrics.requests + t1.report.metrics.requests,
+        240,
+        "every request reached exactly one shard"
+    );
+
+    let mut got = PerSession::new();
+    group_client(&rep.completed, &rep.session_ids, &mut got);
+    let waves = schedule(seed, 240);
+    let last = [waves.len() - 1];
+    let run = run_cfg(seed, 0, 1, "");
+    let mut baseline = PerSession::new();
+    let mut core = ServeCore::new(NetConfig::SMALL, &run).unwrap();
+    drive_core(&mut core, &waves, 0, waves.len(), &last, &|_| true, &mut baseline);
+    assert_same(&got, &baseline, "TCP 2-shard inference");
+}
+
+#[test]
+fn tcp_shard_kill_restart_mid_run_resumes_from_its_own_delta_chain() {
+    // learning on; shard 1 is killed between the two client phases and
+    // restarted at the same address from its own delta chain — the
+    // router reconnects, re-helloes its sessions, and the combined logs
+    // still match dedicated uninterrupted per-shard references
+    let seed = 37;
+    let root = tmp_dir("tcp_restart");
+    let shard_run = |k: usize| {
+        let mut run = run_cfg(seed, 4, 1, "");
+        run.net.checkpoint_dir = root.join(format!("shard-{k}")).to_string_lossy().to_string();
+        run.net.checkpoint_every = 6;
+        run.net.snapshot_full_every = 4;
+        run
+    };
+    let (a0, s0) = spawn_shard(shard_run(0), "127.0.0.1:0");
+    let (a1, s1) = spawn_shard(shard_run(1), "127.0.0.1:0");
+    let mut router_run = run_cfg(seed, 4, 1, "");
+    router_run.router.shard_addrs = vec![a0, a1.clone()];
+    router_run.net.listen = "127.0.0.1:0".to_string();
+    let (addr, router) = spawn_router(router_run);
+
+    // phase 1: 120 requests (20 waves), router kept alive
+    let mut c1 = ConnectOptions::new(addr.clone(), NetConfig::SMALL);
+    c1.requests = 120;
+    c1.sessions = SESSIONS;
+    c1.arrivals = ARRIVALS;
+    c1.seed = seed;
+    c1.shutdown = false;
+    let rep1 = run_connect(&c1).unwrap();
+    assert_eq!(rep1.completed.len(), 120);
+
+    // the router's ids decide the actual partition (its secret is
+    // random per boot); the references below must use the same one
+    let shard_of_user: Vec<usize> =
+        rep1.session_ids.iter().map(|sid| shard_of(*sid, 2)).collect();
+    assert!(shard_of_user.iter().any(|&k| k == 1), "someone must live on shard 1");
+
+    // kill shard 1 with a direct admin client; it flushes (its queue is
+    // already empty — phase 1 ended on FLAG_FLUSH) and checkpoints
+    let mut killer = m2ru::net::NetClient::connect(&a1).unwrap();
+    killer.shutdown_server().unwrap();
+    drop(killer);
+    let life1 = s1.join().unwrap().unwrap();
+    assert!(life1.checkpoint_path.is_some());
+    assert!(
+        !delta_files(&root.join("shard-1")).is_empty(),
+        "shard 1's chain must hold delta snapshots"
+    );
+    // let the router observe the dead connection before traffic resumes
+    std::thread::sleep(std::time::Duration::from_millis(400));
+    // restart shard 1 at the same address, restoring from its chain
+    let (a1b, s1b) = spawn_shard(shard_run(1), &a1);
+    assert_eq!(a1b, a1);
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // phase 2: the remaining 120 requests, then shut everything down
+    let mut c2 = ConnectOptions::new(addr, NetConfig::SMALL);
+    c2.requests = 120;
+    c2.sessions = SESSIONS;
+    c2.arrivals = ARRIVALS;
+    c2.seed = seed;
+    c2.skip = 120;
+    let rep2 = run_connect(&c2).unwrap();
+    assert_eq!(rep2.completed.len(), 120);
+    assert_eq!(rep2.session_ids, rep1.session_ids, "a shard restart must not re-key sessions");
+    let router_rep = router.join().unwrap().unwrap();
+    assert_eq!(router_rep.routed, 240);
+    let s1b_rep = s1b.join().unwrap().unwrap();
+    assert!(s1b_rep.restored_sessions > 0, "shard 1's second life must restore its sessions");
+    let _ = s0.join().unwrap().unwrap();
+
+    // combined per-session logs vs uninterrupted per-shard references,
+    // partitioned exactly as the router partitioned (flushes at both
+    // phase ends — run_connect's final frame carries FLAG_FLUSH)
+    let mut got = PerSession::new();
+    group_client(&rep1.completed, &rep1.session_ids, &mut got);
+    group_client(&rep2.completed, &rep2.session_ids, &mut got);
+    let waves = schedule(seed, 240);
+    let flushes = [19usize, 39];
+    let run = run_cfg(seed, 4, 1, "");
+    let mut expected = PerSession::new();
+    for k in 0..2usize {
+        let mut core = ServeCore::new(NetConfig::SMALL, &run).unwrap();
+        let part = shard_of_user.clone();
+        let keep = move |u: u64| part[u as usize] == k;
+        drive_core(&mut core, &waves, 0, waves.len(), &flushes, &keep, &mut expected);
+    }
+    assert_same(&got, &expected, "TCP 2-shard run with a shard 1 kill/restart");
+    let _ = std::fs::remove_dir_all(&root);
+}
