@@ -32,7 +32,8 @@ use m2ru::experiments::{
     run_fig4, run_fig5a, run_fig5b, run_fig5c, run_fig5d, run_headline, run_table1, Fig4Options,
     Fig5bOptions,
 };
-use m2ru::linalg::Mat;
+use m2ru::linalg::bitplane::{wbs_mac_bitloop, wbs_mac_packed, BitPlanes};
+use m2ru::linalg::{kernels, Mat};
 use m2ru::nn::SeqBatch;
 use m2ru::replay::ReplayBuffer;
 use m2ru::rng::GaussianRng;
@@ -73,19 +74,51 @@ fn timeit<F: FnMut()>(recs: &mut Vec<BenchRecord>, name: &str, iters: usize, mut
     recs.push(BenchRecord { name: name.to_string(), iters, ns_per_iter: mean * 1e6 });
 }
 
+fn render_record(r: &BenchRecord) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"iters\": {}, \"ns_per_iter\": {:.1}, \"throughput\": {:.3}}}",
+        r.name,
+        r.iters,
+        r.ns_per_iter,
+        r.throughput()
+    )
+}
+
 /// Hand-rolled JSON (no serde in the offline build); bench names contain
 /// no characters needing escapes.
+///
+/// Rows are keyed by `name` and **merged** with any existing file: a
+/// filtered rerun (`cargo bench -- matmul`) updates its rows in place
+/// and keeps everything else, instead of dropping the other rows or
+/// appending duplicates. Existing rows keep their file order; genuinely
+/// new names append at the end.
 fn write_bench_json(path: &str, recs: &[BenchRecord]) -> std::io::Result<()> {
+    // (name, rendered row) pairs from the previous run, if any — one
+    // record per line is this writer's own format, so a line parse is
+    // exact, not a heuristic
+    let mut rows: Vec<(String, String)> = Vec::new();
+    if let Ok(prev) = std::fs::read_to_string(path) {
+        for line in prev.lines() {
+            let t = line.trim().trim_end_matches(',');
+            if let Some(rest) = t.strip_prefix("{\"name\": \"") {
+                if let Some(end) = rest.find('"') {
+                    rows.push((rest[..end].to_string(), t.to_string()));
+                }
+            }
+        }
+    }
+    for r in recs {
+        let rendered = render_record(r);
+        match rows.iter_mut().find(|(name, _)| *name == r.name) {
+            Some(slot) => slot.1 = rendered,
+            None => rows.push((r.name.clone(), rendered)),
+        }
+    }
     let mut s = String::from("[\n");
-    for (i, r) in recs.iter().enumerate() {
-        s.push_str(&format!(
-            "  {{\"name\": \"{}\", \"iters\": {}, \"ns_per_iter\": {:.1}, \"throughput\": {:.3}}}{}\n",
-            r.name,
-            r.iters,
-            r.ns_per_iter,
-            r.throughput(),
-            if i + 1 < recs.len() { "," } else { "" }
-        ));
+    for (i, (_, row)) in rows.iter().enumerate() {
+        s.push_str("  ");
+        s.push_str(row);
+        s.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
     }
     s.push_str("]\n");
     if let Some(dir) = std::path::Path::new(path).parent() {
@@ -130,6 +163,41 @@ fn main() -> anyhow::Result<()> {
                 let _ = a.matmul_blocked(&b);
             });
         }
+    }
+    if runs("matmul_kernel") {
+        // the same product under each forced kernel — the SIMD payoff on
+        // this machine (results are bitwise-identical, only speed moves)
+        let n = 256usize;
+        let a = Mat::from_fn(n, n, |r, c| ((r * 31 + c * 7) % 13) as f32 * 0.1 - 0.6);
+        let b = Mat::from_fn(n, n, |r, c| ((r * 17 + c * 3) % 11) as f32 * 0.1 - 0.5);
+        for kern in ["scalar", "simd"] {
+            kernels::force(kern)?;
+            timeit(&mut recs, &format!("matmul_kernel ({n}x{n}, kernel={kern})"), 20, || {
+                let _ = a.matmul(&b);
+            });
+        }
+        kernels::force("")?;
+    }
+    if runs("crossbar_mac") {
+        // bit-serial WBS MAC at pmnist100 hidden-layer shape: the packed
+        // bit-plane path (64 input bits per word, popcount-free row adds)
+        // vs the per-bit reference loop it must match bitwise.
+        // §Perf acceptance: packed must be >= 2x the bitloop.
+        let nin = cfg.nx + cfg.nh; // 128-wide hidden drive
+        let g = Mat::from_fn(nin, cfg.nh, |r, c| ((r * 13 + c * 5) % 17) as f32 * 0.01 - 0.08);
+        let xs: Vec<f32> =
+            (0..nin).map(|i| if i % 6 == 0 { 0.0 } else { ((i % 9) as f32 / 9.0) - 0.45 }).collect();
+        let nb = 8;
+        timeit(&mut recs, "crossbar_mac_bitloop (128x100, nb=8, 100 macs)", 20, || {
+            for _ in 0..100 {
+                let _ = wbs_mac_bitloop(&xs, &g, nb);
+            }
+        });
+        timeit(&mut recs, "crossbar_mac_packed (128x100, nb=8, 100 macs)", 20, || {
+            for _ in 0..100 {
+                let _ = wbs_mac_packed(&BitPlanes::pack(&xs, nb), &g);
+            }
+        });
     }
     if runs("backend_train_step") {
         for name in ["dense", "crossbar"] {
@@ -260,6 +328,23 @@ fn main() -> anyhow::Result<()> {
                 },
             );
         }
+    }
+    if runs("serve_step_kernel") {
+        // the padded single-timestep dispatch under each forced kernel:
+        // how much of the SIMD matmul win survives the serving overhead
+        for (name, kern) in
+            [("dense", "scalar"), ("dense", "simd"), ("crossbar", "scalar"), ("crossbar", "simd")]
+        {
+            kernels::force(kern)?;
+            let be = registry.create(name, &ctx)?;
+            let eng = ParallelEngine::new(be, 1);
+            let h = Mat::zeros(32, cfg.nh);
+            let x = Mat::from_fn(32, cfg.nx, |r, c| ((r * 13 + c) % 9) as f32 * 0.1 - 0.4);
+            timeit(&mut recs, &format!("serve_step ({name}, b=32, kernel={kern})"), 50, || {
+                eng.step_sessions(&h, &x).unwrap();
+            });
+        }
+        kernels::force("")?;
     }
     if runs("net_encode") {
         // wire-codec encode cost per 1k Step frames at serving width

@@ -13,9 +13,10 @@
 use anyhow::{ensure, Result};
 
 use crate::device::{DeviceParams, DifferentialCrossbar, ZiksaProgrammer};
-use crate::linalg::Mat;
+use crate::linalg::bitplane::wbs_vmm;
+use crate::linalg::{kernels, Mat};
 use crate::nn::{bptt_grads, dfa_grads, make_psi, AdamState, DfaDeltas, MiruParams, SeqBatch};
-use crate::quant::{adc_quantize, wbs_input_quantize};
+use crate::quant::adc_quantize;
 
 use super::{BackendCtx, ComputeBackend, LayerSel, TrainHyper};
 
@@ -116,31 +117,25 @@ impl CrossbarBackend {
         self.xbar_hidden.params
     }
 
-    /// WBS-digitize a drive matrix in place (what the wordline level
-    /// shifters see).
-    fn digitize(&self, m: &mut Mat) {
-        for v in &mut m.data {
-            *v = wbs_input_quantize(*v, self.nb);
-        }
-    }
-
     /// One mixed-signal recurrent step against an already-read hidden
-    /// crossbar: WBS-digitized `[x | βh]` drive → analog VMM → shared ADC
-    /// at `vscale_h` → digital bias/tanh/interpolation. Both
-    /// [`ComputeBackend::forward`] and [`ComputeBackend::step_hidden`]
-    /// route through here, so streaming and whole-sequence execution are
-    /// bitwise-identical (crossbar reads are deterministic between
-    /// programming events). The bias registers come in with the crossbar
-    /// readout so a snapshot-driven step (`step_hidden_from` on another
-    /// instance's snapshot — the async-commit serve path) uses the
-    /// snapshot's biases, never this instance's possibly-stale ones.
+    /// crossbar: the `[x | βh]` drive is WBS-digitized and bit-plane
+    /// packed, streamed through the packed bit-serial MAC
+    /// ([`wbs_vmm`] — the §IV-B1 datapath, 64 wordline bits per `u64`
+    /// word) → shared ADC at `vscale_h` → digital
+    /// bias/tanh/interpolation. Both [`ComputeBackend::forward`] and
+    /// [`ComputeBackend::step_hidden`] route through here, so streaming
+    /// and whole-sequence execution are bitwise-identical (crossbar
+    /// reads are deterministic between programming events). The bias
+    /// registers come in with the crossbar readout so a snapshot-driven
+    /// step (`step_hidden_from` on another instance's snapshot — the
+    /// async-commit serve path) uses the snapshot's biases, never this
+    /// instance's possibly-stale ones.
     fn step_with(&self, g_hidden: &Mat, bh: &[f32], vscale_h: f32, h: &Mat, xt: &Mat) -> Mat {
         let (lam, beta) = (self.hyper.lam, self.hyper.beta);
         let mut bh_scaled = h.clone();
         bh_scaled.scale(beta);
-        let mut drive = Mat::hcat(xt, &bh_scaled); // wordline voltages
-        self.digitize(&mut drive);
-        let mut acc = drive.matmul(g_hidden); // integrator voltages
+        let drive = Mat::hcat(xt, &bh_scaled); // wordline voltages
+        let mut acc = wbs_vmm(&drive, g_hidden, self.nb); // integrator voltages
         for v in &mut acc.data {
             *v = adc_quantize(*v, self.adc_bits, vscale_h);
         }
@@ -153,12 +148,11 @@ impl CrossbarBackend {
     }
 
     /// Readout half of the datapath against an already-read output
-    /// crossbar: digitized hidden state → analog VMM → ADC at `vscale_o`
-    /// → digital bias add (bias registers passed in, as in `step_with`).
+    /// crossbar: digitized + packed hidden state → bit-serial VMM → ADC
+    /// at `vscale_o` → digital bias add (bias registers passed in, as in
+    /// `step_with`).
     fn readout_with(&self, wo: &Mat, bo: &[f32], vscale_o: f32, h: &Mat) -> Mat {
-        let mut hq = h.clone();
-        self.digitize(&mut hq);
-        let mut logits = hq.matmul(wo);
+        let mut logits = wbs_vmm(h, wo, self.nb);
         for v in &mut logits.data {
             *v = adc_quantize(*v, self.adc_bits, vscale_o);
         }
@@ -240,17 +234,16 @@ impl ComputeBackend for CrossbarBackend {
         Ok(self.readout_with(&p.wo, &p.bo, vscale_o, h))
     }
 
-    /// Integrator voltages of one crossbar (pre-ADC), after WBS input
-    /// digitization — the `wbs_vmm` primitive.
+    /// Integrator voltages of one crossbar (pre-ADC): the WBS-digitized
+    /// drive streamed bit-serially over the effective conductances — the
+    /// packed-MAC `wbs_vmm` primitive.
     fn vmm(&self, x: &Mat, layer: LayerSel) -> Result<Mat> {
         let (xbar, want) = match layer {
             LayerSel::Hidden => (&self.xbar_hidden, self.nx + self.nh),
             LayerSel::Readout => (&self.xbar_out, self.nh),
         };
         ensure!(x.cols == want, "{layer:?} vmm drive width {} != {want}", x.cols);
-        let mut xq = x.clone();
-        self.digitize(&mut xq);
-        Ok(xbar.vmm(&xq))
+        Ok(wbs_vmm(x, &xbar.read_weights(), self.nb))
     }
 
     fn dfa_raw_grads_from(&self, p: &MiruParams, x: &SeqBatch) -> Result<DfaDeltas> {
@@ -390,6 +383,7 @@ impl ComputeBackend for CrossbarBackend {
 
     fn stats(&self) -> Vec<String> {
         vec![
+            format!("wbs mac: packed bit-planes (nb={}, kernel={})", self.nb, kernels::active_name()),
             format!(
                 "device writes: total={} mean/step={:.1} skipped={}",
                 self.programmer.total.writes,
@@ -481,17 +475,30 @@ mod tests {
     }
 
     #[test]
-    fn vmm_digitizes_then_multiplies() {
+    fn vmm_is_the_bit_serial_wbs_mac() {
+        // the backend VMM must be bit-identical to the per-bit reference
+        // loop over the same effective weights (§IV-B1 semantics), and
+        // value-close to digitize-then-matmul (same math, different f32
+        // association across bit-planes)
         let be = CrossbarBackend::new(&quiet_ctx(7));
         let nin = be.nx + be.nh;
         let x = Mat::from_fn(2, nin, |r, c| ((r * nin + c) % 7) as f32 / 7.0 - 0.5);
         let got = be.vmm(&x, LayerSel::Hidden).unwrap();
+        let g = be.xbar_hidden.read_weights();
+        for r in 0..x.rows {
+            let want = crate::linalg::bitplane::wbs_mac_bitloop(x.row(r), &g, be.nb);
+            for (a, b) in got.row(r).iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {r}");
+            }
+        }
         let mut xq = x.clone();
         for v in &mut xq.data {
-            *v = wbs_input_quantize(*v, be.nb);
+            *v = crate::quant::wbs_input_quantize(*v, be.nb);
         }
-        let want = xq.matmul(&be.xbar_hidden.read_weights());
-        assert_eq!(got.data, want.data);
+        let approx = xq.matmul(&g);
+        for (a, b) in got.data.iter().zip(&approx.data) {
+            assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "association drift too large: {a} vs {b}");
+        }
         assert!(be.vmm(&x, LayerSel::Readout).is_err());
     }
 }

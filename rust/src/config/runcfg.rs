@@ -130,6 +130,13 @@ pub struct ServeConfig {
     /// outrunning its committer blocks on enqueue — back-pressure, not
     /// unbounded buffering.
     pub commit_queue_depth: usize,
+    /// Compute-kernel selection for the whole process: `""`/`auto` (best
+    /// SIMD the machine supports), `scalar` (portable floor), or `simd`
+    /// (state the intent; falls back to scalar where unavailable). All
+    /// kernels are bitwise-identical (DESIGN.md §12), so this is a perf
+    /// and debugging knob, never a numerics one. Overrides the
+    /// `M2RU_KERNEL` environment variable.
+    pub kernel: String,
 }
 
 /// Network transport and durability policy of the TCP serving frontend
@@ -240,6 +247,7 @@ impl Default for ServeConfig {
             replay_mix: 0.5,
             wear_ratio: 4.0,
             commit_queue_depth: 4,
+            kernel: String::new(),
         }
     }
 }
@@ -261,6 +269,11 @@ impl ServeConfig {
             "serve.wear_ratio must be 0 (off) or >= 1 (columns above ratio x mean writes ration)"
         );
         anyhow::ensure!(self.commit_queue_depth >= 1, "serve.commit_queue_depth must be >= 1");
+        anyhow::ensure!(
+            matches!(self.kernel.as_str(), "" | "auto" | "scalar" | "simd"),
+            "serve.kernel must be `auto`, `scalar` or `simd` (got `{}`)",
+            self.kernel
+        );
         Ok(())
     }
 }
@@ -330,6 +343,10 @@ impl RunConfig {
                 "serve.replay_mix" => self.serve.replay_mix = fget()? as f32,
                 "serve.wear_ratio" => self.serve.wear_ratio = fget()? as f32,
                 "serve.commit_queue_depth" => self.serve.commit_queue_depth = iget()?,
+                "serve.kernel" => {
+                    self.serve.kernel =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
                 "net.listen" => {
                     self.net.listen =
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
@@ -568,6 +585,20 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.router.shard_addrs = vec!["127.0.0.1:7501".into(), "  ".into()];
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn serve_kernel_key_from_toml() {
+        let map = parse_toml("[serve]\nkernel = \"scalar\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.serve.kernel, "scalar");
+        for ok in ["auto", "simd"] {
+            let map = parse_toml(&format!("[serve]\nkernel = \"{ok}\"\n")).unwrap();
+            RunConfig::default().apply(&map).unwrap();
+        }
+        let bad = parse_toml("[serve]\nkernel = \"avx512\"\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err(), "unknown kernel names are rejected");
     }
 
     #[test]

@@ -1,0 +1,411 @@
+//! WBS bit-plane packing and the bit-serial crossbar MAC (paper §IV-B1,
+//! DESIGN.md §12).
+//!
+//! The wordline drivers stream an n_b-bit sign/magnitude code per input:
+//! plane b (weight 2^(b-n_b)) pulses every row whose magnitude code has
+//! bit b set, and the integrator adds (or subtracts, per the sign bit)
+//! that row's conductances. [`wbs_mac_bitloop`] is that datapath
+//! transliterated — one input bit per iteration. [`BitPlanes`] packs the
+//! same codes plane-major into `u64` words so [`wbs_mac_packed`] consumes
+//! 64 input bits per word: a zero word skips 64 inputs in one compare,
+//! set bits are walked with `trailing_zeros`, and each hit drives a
+//! SIMD-dispatched row add/sub. Word-level popcounts give the pulse
+//! statistics ([`BitPlanes::bit_activity`], [`BitPlanes::weighted_bit_sum`])
+//! without touching the planes bit by bit.
+//!
+//! ## Layout
+//!
+//! ```text
+//! inputs   x_0 x_1 x_2 ... x_63 | x_64 ... x_n
+//!          └── word 0 ─────────┘ └── word 1 ...     (bit i%64 of word i/64)
+//!
+//! neg    : [w0][w1]...            1 = sign bit set (subtract the row)
+//! plane 0: [w0][w1]...            magnitude bit 0 of every input (LSB)
+//! plane 1: [w0][w1]...
+//!   ...
+//! plane nb-1: ...                 magnitude bit nb-1 (MSB)
+//! ```
+//!
+//! ## Bitwise contract
+//!
+//! For finite inputs in `[-1, 1]`, `unpack(pack(x))` is bit-identical to
+//! [`crate::quant::wbs_input_quantize`], and `wbs_mac_packed` is
+//! bit-identical to `wbs_mac_bitloop`: both accumulate each plane's
+//! partial sum in ascending input order, then combine planes in
+//! ascending bit order scaled by the exact power of two `2^(b-n_b)`.
+//! The exhaustive tests below and `tests/kernel_parity.rs` enforce both.
+
+use crate::linalg::{kernels, Mat};
+
+/// Sign/magnitude code of one analog value — the wordline register.
+/// Matches `wbs_input_quantize`: `mag = round(|x| * (2^nb - 1))`,
+/// clamped to the code range for robustness outside `[-1, 1]`.
+#[inline]
+fn code_of(x: f32, nb: u32) -> (u32, bool) {
+    let full = (1u32 << nb) as f32;
+    let mag = (x.abs() * (full - 1.0)).round();
+    let code = if mag >= full - 1.0 { (1u32 << nb) - 1 } else { mag as u32 };
+    (code, x.is_sign_negative())
+}
+
+/// A drive vector digitized to n_b sign/magnitude bit-planes, packed
+/// 64 inputs per `u64` word (see the module docs for the layout).
+#[derive(Clone, Debug)]
+pub struct BitPlanes {
+    nb: u32,
+    n: usize,
+    words: usize,
+    /// sign mask: bit set → subtract that input's row
+    neg: Vec<u64>,
+    /// plane-major magnitude bits: `planes[b * words + w]`
+    planes: Vec<u64>,
+}
+
+impl BitPlanes {
+    /// Digitize and pack `xs` at `nb` magnitude bits (1 ≤ nb ≤ 16).
+    pub fn pack(xs: &[f32], nb: u32) -> Self {
+        assert!((1..=16u32).contains(&nb), "nb={nb} out of range 1..=16");
+        let n = xs.len();
+        let words = n.div_ceil(64);
+        let mut neg = vec![0u64; words];
+        let mut planes = vec![0u64; nb as usize * words];
+        for (i, &x) in xs.iter().enumerate() {
+            let (code, is_neg) = code_of(x, nb);
+            let (w, bit) = (i / 64, (i % 64) as u32);
+            if is_neg {
+                neg[w] |= 1u64 << bit;
+            }
+            for b in 0..nb {
+                if (code >> b) & 1 == 1 {
+                    planes[b as usize * words + w] |= 1u64 << bit;
+                }
+            }
+        }
+        Self { nb, n, words, neg, planes }
+    }
+
+    pub fn nb(&self) -> u32 {
+        self.nb
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Words of magnitude plane `b` (LSB plane is `b = 0`).
+    pub fn plane(&self, b: u32) -> &[u64] {
+        assert!(b < self.nb);
+        &self.planes[b as usize * self.words..(b as usize + 1) * self.words]
+    }
+
+    /// The sign mask words.
+    pub fn neg_mask(&self) -> &[u64] {
+        &self.neg
+    }
+
+    /// Reconstruct the quantized values. Bit-identical to mapping
+    /// `wbs_input_quantize(x, nb)` over the packed input for finite
+    /// `x ∈ [-1, 1]` (including the `-0.0` of tiny negative values).
+    pub fn unpack(&self) -> Vec<f32> {
+        let full = (1u32 << self.nb) as f32;
+        let mut out = Vec::with_capacity(self.n);
+        for i in 0..self.n {
+            let (w, bit) = (i / 64, (i % 64) as u32);
+            let mut code = 0u32;
+            for b in 0..self.nb {
+                code |= (((self.planes[b as usize * self.words + w] >> bit) & 1) as u32) << b;
+            }
+            let v = code as f32 / full;
+            out.push(if (self.neg[w] >> bit) & 1 == 1 { -v } else { v });
+        }
+        out
+    }
+
+    /// Total magnitude pulses the stream issues — Σ popcount over all
+    /// planes. The word-level activity statistic (energy proxy: every
+    /// set bit is one wordline pulse).
+    pub fn bit_activity(&self) -> u64 {
+        self.planes.iter().map(|w| u64::from(w.count_ones())).sum()
+    }
+
+    /// Σᵢ ±codeᵢ as an integer — what a unit-conductance reference
+    /// column integrates, via popcount-weighted partial sums:
+    /// Σ_b 2^b · (popcount(plane_b & !neg) − popcount(plane_b & neg)).
+    pub fn weighted_bit_sum(&self) -> i64 {
+        let mut total = 0i64;
+        for b in 0..self.nb {
+            let mut pos = 0i64;
+            let mut negc = 0i64;
+            for (&pw, &nw) in self.plane(b).iter().zip(&self.neg) {
+                pos += i64::from((pw & !nw).count_ones());
+                negc += i64::from((pw & nw).count_ones());
+            }
+            total += (pos - negc) << b;
+        }
+        total
+    }
+}
+
+/// Reference WBS MAC — the §IV-B1 datapath one bit at a time.
+///
+/// For each plane `b` (ascending), walk inputs in ascending order; every
+/// set magnitude bit adds (sign clear) or subtracts (sign set) row `i`
+/// of `g` into a partial sum, which is then folded into the output
+/// scaled by the exact power of two `2^(b-nb)`. Returns the length-`g.cols`
+/// bitline vector. This loop defines the bits; the packed MAC must match it.
+pub fn wbs_mac_bitloop(xs: &[f32], g: &Mat, nb: u32) -> Vec<f32> {
+    assert_eq!(xs.len(), g.rows, "drive length {} vs crossbar rows {}", xs.len(), g.rows);
+    let codes: Vec<(u32, bool)> = xs.iter().map(|&x| code_of(x, nb)).collect();
+    let full = (1u32 << nb) as f32;
+    let mut out = vec![0.0f32; g.cols];
+    let mut partial = vec![0.0f32; g.cols];
+    for b in 0..nb {
+        partial.iter_mut().for_each(|v| *v = 0.0);
+        for (i, &(code, is_neg)) in codes.iter().enumerate() {
+            if (code >> b) & 1 == 0 {
+                continue;
+            }
+            let row = g.row(i);
+            if is_neg {
+                for (p, &w) in partial.iter_mut().zip(row) {
+                    *p -= w;
+                }
+            } else {
+                for (p, &w) in partial.iter_mut().zip(row) {
+                    *p += w;
+                }
+            }
+        }
+        let scale = (1u32 << b) as f32 / full; // exact 2^(b-nb)
+        for (o, &p) in out.iter_mut().zip(&partial) {
+            *o += p * scale;
+        }
+    }
+    out
+}
+
+/// Packed WBS MAC — 64 input bits per `u64` word, bit-identical to
+/// [`wbs_mac_bitloop`].
+///
+/// A zero plane word skips 64 inputs in one compare; set bits are walked
+/// in ascending input order with `trailing_zeros` (so the f32
+/// accumulation order is exactly the reference loop's), and each hit
+/// dispatches a kernel-vectorized row add/sub across all `g.cols`
+/// bitlines. The per-plane fold uses the same exact power-of-two scale.
+pub fn wbs_mac_packed(bp: &BitPlanes, g: &Mat) -> Vec<f32> {
+    assert_eq!(bp.n, g.rows, "drive length {} vs crossbar rows {}", bp.n, g.rows);
+    // resolve the kernel once — not per row-add inside the bit walk
+    let kern = kernels::active();
+    let full = (1u32 << bp.nb) as f32;
+    let mut out = vec![0.0f32; g.cols];
+    let mut partial = vec![0.0f32; g.cols];
+    for b in 0..bp.nb {
+        partial.iter_mut().for_each(|v| *v = 0.0);
+        for (wi, &word) in bp.plane(b).iter().enumerate() {
+            if word == 0 {
+                continue; // 64 inputs skipped in one compare
+            }
+            let negw = bp.neg[wi];
+            let mut rest = word;
+            while rest != 0 {
+                let bit = rest.trailing_zeros();
+                rest &= rest - 1;
+                let i = wi * 64 + bit as usize;
+                let row = g.row(i);
+                if (negw >> bit) & 1 == 1 {
+                    kernels::sub_assign_with(kern, &mut partial, row);
+                } else {
+                    kernels::add_assign_with(kern, &mut partial, row);
+                }
+            }
+        }
+        let scale = (1u32 << b) as f32 / full; // exact 2^(b-nb)
+        kernels::axpy_with(kern, &mut out, scale, &partial);
+    }
+    out
+}
+
+/// Digitize every row of `drive` and run the packed MAC against `g`:
+/// the batch crossbar VMM (`drive [r,n] × g [n,c] → [r,c]`).
+pub fn wbs_vmm(drive: &Mat, g: &Mat, nb: u32) -> Mat {
+    assert_eq!(drive.cols, g.rows, "wbs_vmm {}x{} @ {}x{}", drive.rows, drive.cols, g.rows, g.cols);
+    let mut out = Mat::zeros(drive.rows, g.cols);
+    for r in 0..drive.rows {
+        let bp = BitPlanes::pack(drive.row(r), nb);
+        out.row_mut(r).copy_from_slice(&wbs_mac_packed(&bp, g));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::wbs_input_quantize;
+    use crate::rng::GaussianRng;
+
+    /// All values an nb-bit sign/magnitude code can represent, i.e. the
+    /// exhaustive input space of the MAC after digitization.
+    fn representable(nb: u32) -> Vec<f32> {
+        let full = (1u32 << nb) as f32;
+        let mut vals = Vec::new();
+        for code in 0..(1u32 << nb) {
+            vals.push(code as f32 / full);
+            vals.push(-(code as f32) / full); // includes -0.0
+        }
+        vals
+    }
+
+    #[test]
+    fn roundtrip_matches_wbs_quantize_exhaustively() {
+        // every exact code point, every nb ≤ 8, both signs: x chosen so
+        // |x|·(2^nb−1) is an integer → pack/unpack must equal
+        // wbs_input_quantize bit for bit (including signed zeros)
+        for nb in 1..=8u32 {
+            let denom = ((1u32 << nb) - 1) as f32;
+            let mut xs = Vec::new();
+            for code in 0..(1u32 << nb) {
+                xs.push(code as f32 / denom);
+                xs.push(-(code as f32) / denom);
+            }
+            let bp = BitPlanes::pack(&xs, nb);
+            let got = bp.unpack();
+            for (&x, &g) in xs.iter().zip(&got) {
+                let want = wbs_input_quantize(x, nb);
+                assert_eq!(g.to_bits(), want.to_bits(), "nb={nb} x={x} got={g} want={want}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_matches_wbs_quantize_on_dense_grid() {
+        // 4097 points across [-1, 1] (off-code values exercise rounding),
+        // plus the signed-zero corner
+        for nb in 1..=8u32 {
+            for i in 0..=4096 {
+                let x = -1.0 + 2.0 * (i as f32 / 4096.0);
+                let bp = BitPlanes::pack(&[x, -0.0, 0.0], nb);
+                let got = bp.unpack();
+                for (v, want) in
+                    got.iter().zip([x, -0.0, 0.0].iter().map(|&y| wbs_input_quantize(y, nb)))
+                {
+                    assert_eq!(v.to_bits(), want.to_bits(), "nb={nb} x={x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_mac_matches_bitloop_exhaustively_small() {
+        // exhaustive over the digitized input space: every combination of
+        // representable values on tiny crossbars — the packed path can
+        // never drift from the bit-serial reference
+        let g2 = Mat::from_vec(2, 3, vec![0.5, -0.25, 1.0, -0.75, 0.125, 0.0]);
+        for nb in 1..=2u32 {
+            let vals = representable(nb);
+            for &x0 in &vals {
+                for &x1 in &vals {
+                    let xs = [x0, x1];
+                    let bit = wbs_mac_bitloop(&xs, &g2, nb);
+                    let packed = wbs_mac_packed(&BitPlanes::pack(&xs, nb), &g2);
+                    for (a, b) in bit.iter().zip(&packed) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "nb={nb} xs={xs:?}");
+                    }
+                }
+            }
+        }
+        // width 1, all nb ≤ 8: every single-input code
+        let g1 = Mat::from_vec(1, 2, vec![0.7, -0.3]);
+        for nb in 1..=8u32 {
+            for &x in &representable(nb) {
+                let bit = wbs_mac_bitloop(&[x], &g1, nb);
+                let packed = wbs_mac_packed(&BitPlanes::pack(&[x], nb), &g1);
+                assert_eq!(bit[0].to_bits(), packed[0].to_bits(), "nb={nb} x={x}");
+                assert_eq!(bit[1].to_bits(), packed[1].to_bits(), "nb={nb} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_mac_matches_bitloop_across_word_boundaries() {
+        // 65 and 129 inputs straddle u64 word boundaries; random drives
+        // and weights, all serve-relevant nb
+        let mut rng = GaussianRng::new(0xB17);
+        for &n in &[63usize, 64, 65, 128, 129] {
+            for nb in [1u32, 4, 8] {
+                let xs: Vec<f32> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                let g = Mat::from_fn(n, 17, |_, _| rng.uniform_in(-1.0, 1.0));
+                let bit = wbs_mac_bitloop(&xs, &g, nb);
+                let packed = wbs_mac_packed(&BitPlanes::pack(&xs, nb), &g);
+                for (a, b) in bit.iter().zip(&packed) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} nb={nb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wbs_vmm_rows_are_independent_macs() {
+        let mut rng = GaussianRng::new(7);
+        let drive = Mat::from_fn(5, 70, |_, _| rng.uniform_in(-1.0, 1.0));
+        let g = Mat::from_fn(70, 9, |_, _| rng.uniform_in(-1.0, 1.0));
+        let out = wbs_vmm(&drive, &g, 8);
+        for r in 0..drive.rows {
+            let want = wbs_mac_bitloop(drive.row(r), &g, 8);
+            for (a, b) in out.row(r).iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_bit_sum_equals_signed_code_sum() {
+        // exhaustive at nb=2, width 3: popcount bookkeeping vs the direct
+        // signed sum of codes
+        let vals = representable(2);
+        for &x0 in &vals {
+            for &x1 in &vals {
+                for &x2 in &vals {
+                    let xs = [x0, x1, x2];
+                    let bp = BitPlanes::pack(&xs, 2);
+                    let want: i64 = xs
+                        .iter()
+                        .map(|&x| {
+                            let (code, neg) = code_of(x, 2);
+                            if neg {
+                                -i64::from(code)
+                            } else {
+                                i64::from(code)
+                            }
+                        })
+                        .sum();
+                    assert_eq!(bp.weighted_bit_sum(), want, "xs={xs:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_activity_counts_every_pulse() {
+        // code 3 at nb=2 sets both planes; code 2 sets one
+        let bp = BitPlanes::pack(&[1.0, -2.0 / 4.0, 0.0], 2);
+        assert_eq!(bp.bit_activity(), 3);
+        assert_eq!(bp.weighted_bit_sum(), 3 - 2);
+    }
+
+    #[test]
+    fn empty_and_zero_drives() {
+        let g = Mat::from_fn(0, 4, |_, _| 1.0);
+        let bp = BitPlanes::pack(&[], 8);
+        assert!(bp.is_empty());
+        assert_eq!(wbs_mac_packed(&bp, &g), vec![0.0; 4]);
+        let g1 = Mat::from_fn(130, 4, |_, _| 1.0);
+        let zeros = vec![0.0f32; 130];
+        let bp0 = BitPlanes::pack(&zeros, 8);
+        assert_eq!(bp0.bit_activity(), 0);
+        assert_eq!(wbs_mac_packed(&bp0, &g1), wbs_mac_bitloop(&zeros, &g1, 8));
+    }
+}

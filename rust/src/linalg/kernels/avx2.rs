@@ -1,0 +1,232 @@
+//! AVX2 kernels (`std::arch`), selected at runtime by the dispatcher
+//! after `is_x86_feature_detected!("avx2")` succeeds.
+//!
+//! Parity discipline (DESIGN.md §12): these loops vectorize **across
+//! output columns only**. Each output element keeps the scalar kernel's
+//! exact operation sequence — ascending-k accumulation, one rounded
+//! multiply then one rounded add per step (`_mm256_mul_ps` +
+//! `_mm256_add_ps`; FMA would fuse the rounding and break bitwise
+//! parity), and the same `a == 0.0` zero-skips, whose predicate depends
+//! only on the left operand and is therefore uniform across lanes.
+//! Ragged column tails fall back to the identical scalar statements.
+
+#![cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+
+#[cfg(target_arch = "x86")]
+use std::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+const LANES: usize = 8;
+
+/// `out[0..w] += alpha * x[0..w]`, 8-wide with a scalar tail.
+///
+/// # Safety
+/// Caller guarantees AVX2 is available and both pointers are valid for
+/// `w` reads/writes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_w(out: *mut f32, x: *const f32, alpha: f32, w: usize) {
+    let va = _mm256_set1_ps(alpha);
+    let mut j = 0;
+    while j + LANES <= w {
+        let xv = _mm256_loadu_ps(x.add(j));
+        let ov = _mm256_loadu_ps(out.add(j));
+        _mm256_storeu_ps(out.add(j), _mm256_add_ps(ov, _mm256_mul_ps(va, xv)));
+        j += LANES;
+    }
+    while j < w {
+        *out.add(j) += alpha * *x.add(j);
+        j += 1;
+    }
+}
+
+/// `out[0..w] += x[0..w]`.
+///
+/// # Safety
+/// As [`axpy_w`].
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn add_w(out: *mut f32, x: *const f32, w: usize) {
+    let mut j = 0;
+    while j + LANES <= w {
+        let xv = _mm256_loadu_ps(x.add(j));
+        let ov = _mm256_loadu_ps(out.add(j));
+        _mm256_storeu_ps(out.add(j), _mm256_add_ps(ov, xv));
+        j += LANES;
+    }
+    while j < w {
+        *out.add(j) += *x.add(j);
+        j += 1;
+    }
+}
+
+/// `out[0..w] -= x[0..w]`.
+///
+/// # Safety
+/// As [`axpy_w`].
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn sub_w(out: *mut f32, x: *const f32, w: usize) {
+    let mut j = 0;
+    while j + LANES <= w {
+        let xv = _mm256_loadu_ps(x.add(j));
+        let ov = _mm256_loadu_ps(out.add(j));
+        _mm256_storeu_ps(out.add(j), _mm256_sub_ps(ov, xv));
+        j += LANES;
+    }
+    while j < w {
+        *out.add(j) -= *x.add(j);
+        j += 1;
+    }
+}
+
+/// # Safety
+/// AVX2 available; slices sized per the kernel contract.
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_ikj_impl(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let orow = out.as_mut_ptr().add(i * n);
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            axpy_w(orow, b.as_ptr().add(p * n), av, n);
+        }
+    }
+}
+
+/// # Safety
+/// AVX2 available; slices sized per the kernel contract.
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_blocked_impl(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    // identical tiling constants and traversal order to the scalar kernel
+    const KC: usize = 128;
+    const NC: usize = 256;
+    const MR: usize = 4;
+    let mut acc = [[0.0f32; NC]; MR];
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        let mut jj = 0;
+        while jj < n {
+            let w = (jj + NC).min(n) - jj;
+            let mut i = 0;
+            while i + MR <= m {
+                for row in acc.iter_mut() {
+                    for v in row[..w].iter_mut() {
+                        *v = 0.0;
+                    }
+                }
+                for p in kk..kend {
+                    let brow = b.as_ptr().add(p * n + jj);
+                    let a0 = a[i * k + p];
+                    let a1 = a[(i + 1) * k + p];
+                    let a2 = a[(i + 2) * k + p];
+                    let a3 = a[(i + 3) * k + p];
+                    let va0 = _mm256_set1_ps(a0);
+                    let va1 = _mm256_set1_ps(a1);
+                    let va2 = _mm256_set1_ps(a2);
+                    let va3 = _mm256_set1_ps(a3);
+                    let [acc0, acc1, acc2, acc3] = &mut acc;
+                    let p0 = acc0.as_mut_ptr();
+                    let p1 = acc1.as_mut_ptr();
+                    let p2 = acc2.as_mut_ptr();
+                    let p3 = acc3.as_mut_ptr();
+                    let mut jx = 0;
+                    while jx + LANES <= w {
+                        let bv = _mm256_loadu_ps(brow.add(jx));
+                        _mm256_storeu_ps(p0.add(jx), _mm256_add_ps(_mm256_loadu_ps(p0.add(jx)), _mm256_mul_ps(va0, bv)));
+                        _mm256_storeu_ps(p1.add(jx), _mm256_add_ps(_mm256_loadu_ps(p1.add(jx)), _mm256_mul_ps(va1, bv)));
+                        _mm256_storeu_ps(p2.add(jx), _mm256_add_ps(_mm256_loadu_ps(p2.add(jx)), _mm256_mul_ps(va2, bv)));
+                        _mm256_storeu_ps(p3.add(jx), _mm256_add_ps(_mm256_loadu_ps(p3.add(jx)), _mm256_mul_ps(va3, bv)));
+                        jx += LANES;
+                    }
+                    while jx < w {
+                        let bv = *brow.add(jx);
+                        *p0.add(jx) += a0 * bv;
+                        *p1.add(jx) += a1 * bv;
+                        *p2.add(jx) += a2 * bv;
+                        *p3.add(jx) += a3 * bv;
+                        jx += 1;
+                    }
+                }
+                for (r, row) in acc.iter().enumerate() {
+                    let start = (i + r) * n + jj;
+                    add_w(out.as_mut_ptr().add(start), row.as_ptr(), w);
+                }
+                i += MR;
+            }
+            // remainder rows (m % MR): plain ikj on the tile
+            while i < m {
+                let orow = out.as_mut_ptr().add(i * n + jj);
+                for p in kk..kend {
+                    let av = a[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    axpy_w(orow, b.as_ptr().add(p * n + jj), av, w);
+                }
+                i += 1;
+            }
+            jj += NC;
+        }
+        kk += KC;
+    }
+}
+
+/// # Safety
+/// AVX2 available; slices sized per the kernel contract.
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_tn_impl(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = b.as_ptr().add(p * n);
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            axpy_w(out.as_mut_ptr().add(i * n), brow, av, n);
+        }
+    }
+}
+
+// ---- safe wrappers (the dispatcher's fn-table entries) ---------------------
+//
+// SAFETY: the dispatcher only installs this table after
+// `is_x86_feature_detected!("avx2")` succeeds; the debug_assert catches
+// a test bypassing detection on an old machine.
+
+pub fn matmul_ikj(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    unsafe { matmul_ikj_impl(a, b, out, m, k, n) }
+}
+
+pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    unsafe { matmul_blocked_impl(a, b, out, m, k, n) }
+}
+
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    unsafe { matmul_tn_impl(a, b, out, k, m, n) }
+}
+
+pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    let w = out.len().min(x.len());
+    unsafe { axpy_w(out.as_mut_ptr(), x.as_ptr(), alpha, w) }
+}
+
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    let w = out.len().min(x.len());
+    unsafe { add_w(out.as_mut_ptr(), x.as_ptr(), w) }
+}
+
+pub fn sub_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    let w = out.len().min(x.len());
+    unsafe { sub_w(out.as_mut_ptr(), x.as_ptr(), w) }
+}

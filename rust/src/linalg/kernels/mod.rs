@@ -1,0 +1,309 @@
+//! Runtime-dispatched compute kernels behind the [`crate::linalg::Mat`]
+//! entry points (DESIGN.md §12).
+//!
+//! Three implementations of the same inner loops:
+//!
+//! * **scalar** — the register-blocked loops that were previously inlined
+//!   in `linalg/mod.rs`, moved here verbatim. This is the bitwise floor
+//!   every other kernel is parity-tested against.
+//! * **avx2** — `std::arch` intrinsics vectorizing *across output
+//!   columns* (the `j` loops), selected at runtime with
+//!   `is_x86_feature_detected!("avx2")`.
+//! * **neon** — aarch64 placeholder that currently delegates to the
+//!   scalar loops (a detection slot so the dispatch story is complete on
+//!   ARM; real `vld1q_f32` bodies can land without touching callers).
+//!
+//! ## The bitwise-parity contract
+//!
+//! Every kernel must produce **bit-identical** `f32` results, because the
+//! whole serving fleet's determinism story (per-session serve signatures,
+//! delta-chain restores, the router's cross-shard equivalence harness) is
+//! bitwise. The SIMD kernels therefore vectorize only across output
+//! columns: each output element `out[i][j]` sees exactly the scalar
+//! kernel's operation sequence — same k-order, a multiply then an add per
+//! step (`_mm256_mul_ps` + `_mm256_add_ps`, never FMA), same zero-skips
+//! (the skip predicate depends on the left operand only, never the lane)
+//! — so IEEE-754 rounds identically lane by lane. `tests/kernel_parity.rs`
+//! enforces this across random and ragged shapes; the CI kernel matrix
+//! re-runs tier-1 under every forced kernel.
+//!
+//! ## Selection
+//!
+//! Precedence: [`force`] (the `[serve] kernel` config key / `--kernel`
+//! flag) > the `M2RU_KERNEL` environment variable > auto-detection.
+//! Values: `auto` (best available SIMD), `simd` (same, stated intent),
+//! `scalar` (the floor). Requesting `simd` on a machine with no usable
+//! SIMD falls back to scalar — parity makes the fallback invisible.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+mod avx2;
+mod neon;
+mod scalar;
+
+/// One concrete kernel implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar loops — the parity floor.
+    Scalar,
+    /// 8-wide AVX2 across output columns (x86/x86_64 with AVX2).
+    Avx2,
+    /// aarch64 slot; currently a documented stub over the scalar loops.
+    Neon,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// Function table of one kernel. All slots share the scalar semantics
+/// documented on the dispatching wrappers below.
+struct Ops {
+    matmul_ikj: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    matmul_blocked: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    matmul_tn: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    axpy: fn(&mut [f32], f32, &[f32]),
+    add_assign: fn(&mut [f32], &[f32]),
+    sub_assign: fn(&mut [f32], &[f32]),
+}
+
+static SCALAR_OPS: Ops = Ops {
+    matmul_ikj: scalar::matmul_ikj,
+    matmul_blocked: scalar::matmul_blocked,
+    matmul_tn: scalar::matmul_tn,
+    axpy: scalar::axpy,
+    add_assign: scalar::add_assign,
+    sub_assign: scalar::sub_assign,
+};
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+static AVX2_OPS: Ops = Ops {
+    matmul_ikj: avx2::matmul_ikj,
+    matmul_blocked: avx2::matmul_blocked,
+    matmul_tn: avx2::matmul_tn,
+    axpy: avx2::axpy,
+    add_assign: avx2::add_assign,
+    sub_assign: avx2::sub_assign,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON_OPS: Ops = Ops {
+    matmul_ikj: neon::matmul_ikj,
+    matmul_blocked: neon::matmul_blocked,
+    matmul_tn: neon::matmul_tn,
+    axpy: neon::axpy,
+    add_assign: neon::add_assign,
+    sub_assign: neon::sub_assign,
+};
+
+fn ops(k: Kernel) -> &'static Ops {
+    match k {
+        Kernel::Scalar => &SCALAR_OPS,
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        Kernel::Avx2 => &AVX2_OPS,
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => &NEON_OPS,
+        // a force/env value naming a kernel this target cannot run is
+        // normalized away by `resolve`; reaching here is a logic error
+        #[allow(unreachable_patterns)]
+        other => unreachable!("kernel {other:?} is not available on this target"),
+    }
+}
+
+/// The best SIMD kernel this machine can run, if any.
+pub fn best_simd() -> Option<Kernel> {
+    static DETECTED: OnceLock<Option<Kernel>> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return Some(Kernel::Avx2);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // NEON is baseline on aarch64
+            return Some(Kernel::Neon);
+        }
+        #[allow(unreachable_code)]
+        None
+    })
+}
+
+// forced-choice states (config/CLI override, then the env default)
+const CHOICE_UNSET: u8 = 0;
+const CHOICE_AUTO: u8 = 1;
+const CHOICE_SCALAR: u8 = 2;
+const CHOICE_SIMD: u8 = 3;
+
+static FORCED: AtomicU8 = AtomicU8::new(CHOICE_UNSET);
+
+fn parse_choice(name: &str) -> Result<u8> {
+    match name {
+        "" | "auto" => Ok(CHOICE_AUTO),
+        "scalar" => Ok(CHOICE_SCALAR),
+        "simd" => Ok(CHOICE_SIMD),
+        other => bail!("unknown kernel `{other}` (expected auto|scalar|simd)"),
+    }
+}
+
+/// Force the kernel choice for the whole process — the `[serve] kernel`
+/// config key and `--kernel` flag land here. Overrides `M2RU_KERNEL`.
+/// Passing `auto` (or `""`) returns to env/auto selection.
+pub fn force(name: &str) -> Result<()> {
+    let choice = parse_choice(name)?;
+    FORCED.store(if name.is_empty() { CHOICE_UNSET } else { choice }, Ordering::SeqCst);
+    Ok(())
+}
+
+/// `M2RU_KERNEL`, parsed once. An invalid value warns (once) and falls
+/// back to auto rather than failing deep inside a matmul.
+fn env_choice() -> u8 {
+    static ENV: OnceLock<u8> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("M2RU_KERNEL") {
+        Ok(v) => parse_choice(v.trim()).unwrap_or_else(|e| {
+            eprintln!("warning: M2RU_KERNEL ignored: {e}");
+            CHOICE_AUTO
+        }),
+        Err(_) => CHOICE_AUTO,
+    })
+}
+
+fn resolve(choice: u8) -> Kernel {
+    match choice {
+        CHOICE_SCALAR => Kernel::Scalar,
+        // auto and simd both take the best detected SIMD; they differ only
+        // in intent (simd states it, auto is the default)
+        _ => best_simd().unwrap_or(Kernel::Scalar),
+    }
+}
+
+/// The kernel every dispatched entry point uses right now.
+pub fn active() -> Kernel {
+    let forced = FORCED.load(Ordering::SeqCst);
+    if forced != CHOICE_UNSET {
+        resolve(forced)
+    } else {
+        resolve(env_choice())
+    }
+}
+
+/// Name of the active kernel (serve/router startup banners, stats).
+pub fn active_name() -> &'static str {
+    active().name()
+}
+
+// ---- dispatched entry points ----------------------------------------------
+//
+// Shapes are the caller's contract (checked by `Mat`): `a` is `m×k`,
+// `b` is `k×n`, `out` is `m×n`, all row-major; `out` arrives zeroed.
+
+/// ikj loop order with the zero-skip on `a` — the small-shape matmul.
+pub fn matmul_ikj(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    (ops(active()).matmul_ikj)(a, b, out, m, k, n)
+}
+
+/// Register-blocked matmul (KC/NC tiling, 4-row micro-kernel).
+pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    (ops(active()).matmul_blocked)(a, b, out, m, k, n)
+}
+
+/// `aᵀ @ b` without materializing the transpose: `a` is `k×m`, `b` is
+/// `k×n`, `out` is `m×n`.
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    (ops(active()).matmul_tn)(a, b, out, k, m, n)
+}
+
+/// `out[j] += alpha * x[j]` (one rounded multiply + one rounded add per
+/// element, never fused).
+pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    (ops(active()).axpy)(out, alpha, x)
+}
+
+/// `out[j] += x[j]` — the positive-drive row accumulation of the packed
+/// WBS MAC ([`crate::linalg::bitplane`]).
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    (ops(active()).add_assign)(out, x)
+}
+
+/// `out[j] -= x[j]` — the negative-drive counterpart.
+pub fn sub_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    (ops(active()).sub_assign)(out, x)
+}
+
+// ---- explicit-kernel variants (parity tests, benches) ----------------------
+
+pub fn matmul_ikj_with(kern: Kernel, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    (ops(kern).matmul_ikj)(a, b, out, m, k, n)
+}
+
+pub fn matmul_blocked_with(kern: Kernel, a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    (ops(kern).matmul_blocked)(a, b, out, m, k, n)
+}
+
+pub fn matmul_tn_with(kern: Kernel, a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    (ops(kern).matmul_tn)(a, b, out, k, m, n)
+}
+
+pub fn axpy_with(kern: Kernel, out: &mut [f32], alpha: f32, x: &[f32]) {
+    (ops(kern).axpy)(out, alpha, x)
+}
+
+pub fn add_assign_with(kern: Kernel, out: &mut [f32], x: &[f32]) {
+    (ops(kern).add_assign)(out, x)
+}
+
+pub fn sub_assign_with(kern: Kernel, out: &mut [f32], x: &[f32]) {
+    (ops(kern).sub_assign)(out, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_and_parse() {
+        force("scalar").unwrap();
+        assert_eq!(active(), Kernel::Scalar);
+        force("simd").unwrap();
+        assert_eq!(active(), best_simd().unwrap_or(Kernel::Scalar));
+        force("auto").unwrap();
+        assert!(force("sse9").is_err());
+        force("").unwrap(); // back to env/auto
+    }
+
+    #[test]
+    fn active_is_always_runnable() {
+        // whatever the machine, active() must resolve to a kernel whose
+        // table exists on this target (ops() would panic otherwise)
+        let k = active();
+        let mut out = [0.0f32; 2];
+        matmul_ikj_with(k, &[1.0, 2.0], &[3.0, 4.0, 5.0, 6.0], &mut out, 1, 2, 2);
+        assert_eq!(out, [13.0, 16.0]);
+    }
+
+    #[test]
+    fn axpy_family_basic() {
+        for k in [Kernel::Scalar].into_iter().chain(best_simd()) {
+            let mut out = vec![1.0f32; 11];
+            axpy_with(k, &mut out, 2.0, &[0.5; 11]);
+            assert!(out.iter().all(|&v| v == 2.0), "{k:?}");
+            add_assign_with(k, &mut out, &[1.0; 11]);
+            assert!(out.iter().all(|&v| v == 3.0), "{k:?}");
+            sub_assign_with(k, &mut out, &[2.0; 11]);
+            assert!(out.iter().all(|&v| v == 1.0), "{k:?}");
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! NEON kernel slot (aarch64).
+//!
+//! Currently a documented stub: it delegates straight to the scalar
+//! loops, so an aarch64 build dispatches, benches and parity-tests the
+//! same way an x86 build does — the `Kernel::Neon` plumbing (detection,
+//! forcing, CI matrix) is real, only the vector bodies are pending.
+//! When real `vld1q_f32`/`vmulq_f32`/`vaddq_f32` bodies land they must
+//! follow the same contract as the AVX2 kernels: vectorize across
+//! output columns only, multiply-then-add (no `vfmaq_f32`), scalar
+//! tails — see DESIGN.md §12.
+
+#![cfg(target_arch = "aarch64")]
+
+use super::scalar;
+
+pub fn matmul_ikj(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    scalar::matmul_ikj(a, b, out, m, k, n)
+}
+
+pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    scalar::matmul_blocked(a, b, out, m, k, n)
+}
+
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    scalar::matmul_tn(a, b, out, k, m, n)
+}
+
+pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {
+    scalar::axpy(out, alpha, x)
+}
+
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    scalar::add_assign(out, x)
+}
+
+pub fn sub_assign(out: &mut [f32], x: &[f32]) {
+    scalar::sub_assign(out, x)
+}

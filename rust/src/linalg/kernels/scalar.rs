@@ -1,0 +1,127 @@
+//! Portable scalar kernels — the bodies that lived inline in
+//! `linalg/mod.rs` before the dispatch layer, unchanged. Every other
+//! kernel is bitwise parity-tested against these loops, so edits here
+//! are semantic changes to the whole fleet's numerics.
+
+/// ikj loop order (row-major friendly) with a zero-skip on the left
+/// operand. `a` is `m×k`, `b` is `k×n`, `out` is `m×n` and zeroed.
+pub fn matmul_ikj(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Blocked/tiled matmul: k split into `KC` panels, n into `NC` tiles, a
+/// 4-row micro-kernel streaming each `b` row once per four rows of `a`.
+/// Accumulation runs in ascending k order per tile.
+pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    const KC: usize = 128;
+    const NC: usize = 256;
+    const MR: usize = 4;
+    let mut acc = [[0.0f32; NC]; MR];
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        let mut jj = 0;
+        while jj < n {
+            let w = (jj + NC).min(n) - jj;
+            let mut i = 0;
+            while i + MR <= m {
+                for row in acc.iter_mut() {
+                    for v in row[..w].iter_mut() {
+                        *v = 0.0;
+                    }
+                }
+                for p in kk..kend {
+                    let brow = &b[p * n + jj..p * n + jj + w];
+                    let a0 = a[i * k + p];
+                    let a1 = a[(i + 1) * k + p];
+                    let a2 = a[(i + 2) * k + p];
+                    let a3 = a[(i + 3) * k + p];
+                    let [acc0, acc1, acc2, acc3] = &mut acc;
+                    for (jx, &bv) in brow.iter().enumerate() {
+                        acc0[jx] += a0 * bv;
+                        acc1[jx] += a1 * bv;
+                        acc2[jx] += a2 * bv;
+                        acc3[jx] += a3 * bv;
+                    }
+                }
+                for (r, row) in acc.iter().enumerate() {
+                    let start = (i + r) * n + jj;
+                    let orow = &mut out[start..start + w];
+                    for (o, &v) in orow.iter_mut().zip(&row[..w]) {
+                        *o += v;
+                    }
+                }
+                i += MR;
+            }
+            // remainder rows (m % MR): plain ikj on the tile
+            while i < m {
+                let orow = &mut out[i * n + jj..i * n + jj + w];
+                for p in kk..kend {
+                    let av = a[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n + jj..p * n + jj + w];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+                i += 1;
+            }
+            jj += NC;
+        }
+        kk += KC;
+    }
+}
+
+/// `aᵀ @ b` without materializing the transpose: `a` is `k×m`, `b` is
+/// `k×n`, `out` is `m×n` and zeroed (gradient outer-product accumulation).
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[j] += alpha * x[j]`.
+pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// `out[j] += x[j]`.
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+/// `out[j] -= x[j]`.
+pub fn sub_assign(out: &mut [f32], x: &[f32]) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o -= v;
+    }
+}

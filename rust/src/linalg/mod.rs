@@ -4,6 +4,15 @@
 //! and the host-side glue around the PJRT executables. Deliberately small:
 //! only the operations the MiRU/DFA math needs, each with explicit shape
 //! checks (panics are programming errors, not data errors).
+//!
+//! The matmul inner loops live in [`kernels`] (scalar / AVX2 / NEON,
+//! runtime-dispatched, bitwise parity-tested against each other); the
+//! WBS bit-plane packing and bit-serial crossbar MAC live in
+//! [`bitplane`]. `Mat` keeps the shape checks and the shape-based
+//! kernel choice.
+
+pub mod bitplane;
+pub mod kernels;
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -96,25 +105,14 @@ impl Mat {
     }
 
     /// Simple ikj loop order (row-major friendly) with a zero-skip on the
-    /// left operand — the seed kernel, kept as the benchmark baseline for
-    /// `cargo bench matmul` and as the small-shape path of [`Mat::matmul`].
+    /// left operand — the small-shape path of [`Mat::matmul`] and the
+    /// benchmark baseline for `cargo bench matmul`. The loop body lives
+    /// in [`kernels`] and is dispatched to the active kernel.
     pub fn matmul_ikj(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[p * n..(p + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        kernels::matmul_ikj(&self.data, &other.data, &mut out.data, m, k, n);
         out
     }
 
@@ -124,95 +122,23 @@ impl Mat {
     /// `self` (4x fewer B-side loads than ikj, which re-reads the whole
     /// right operand for every output row). Accumulation runs in ascending
     /// k order per tile, so results match ikj up to f32 re-association
-    /// across k-panels.
+    /// across k-panels. The loop body lives in [`kernels`].
     pub fn matmul_blocked(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, other.rows, other.cols);
-        const KC: usize = 128;
-        const NC: usize = 256;
-        const MR: usize = 4;
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        let a = &self.data;
-        let b = &other.data;
-        let mut acc = [[0.0f32; NC]; MR];
-        let mut kk = 0;
-        while kk < k {
-            let kend = (kk + KC).min(k);
-            let mut jj = 0;
-            while jj < n {
-                let w = (jj + NC).min(n) - jj;
-                let mut i = 0;
-                while i + MR <= m {
-                    for row in acc.iter_mut() {
-                        for v in row[..w].iter_mut() {
-                            *v = 0.0;
-                        }
-                    }
-                    for p in kk..kend {
-                        let brow = &b[p * n + jj..p * n + jj + w];
-                        let a0 = a[i * k + p];
-                        let a1 = a[(i + 1) * k + p];
-                        let a2 = a[(i + 2) * k + p];
-                        let a3 = a[(i + 3) * k + p];
-                        let [acc0, acc1, acc2, acc3] = &mut acc;
-                        for (jx, &bv) in brow.iter().enumerate() {
-                            acc0[jx] += a0 * bv;
-                            acc1[jx] += a1 * bv;
-                            acc2[jx] += a2 * bv;
-                            acc3[jx] += a3 * bv;
-                        }
-                    }
-                    for (r, row) in acc.iter().enumerate() {
-                        let start = (i + r) * n + jj;
-                        let orow = &mut out.data[start..start + w];
-                        for (o, &v) in orow.iter_mut().zip(&row[..w]) {
-                            *o += v;
-                        }
-                    }
-                    i += MR;
-                }
-                // remainder rows (m % MR): plain ikj on the tile
-                while i < m {
-                    let orow = &mut out.data[i * n + jj..i * n + jj + w];
-                    for p in kk..kend {
-                        let av = a[i * k + p];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[p * n + jj..p * n + jj + w];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
-                        }
-                    }
-                    i += 1;
-                }
-                jj += NC;
-            }
-            kk += KC;
-        }
+        kernels::matmul_blocked(&self.data, &other.data, &mut out.data, m, k, n);
         out
     }
 
     /// selfᵀ @ other: [k,m]ᵀ x [k,n] -> [m,n] without materializing the
-    /// transpose (gradient outer-product accumulation).
+    /// transpose (gradient outer-product accumulation). The loop body
+    /// lives in [`kernels`].
     pub fn matmul_tn(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows, "matmul_tn");
         let (k, m, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
-        for p in 0..k {
-            let arow = &self.data[p * m..(p + 1) * m];
-            let brow = &other.data[p * n..(p + 1) * n];
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        kernels::matmul_tn(&self.data, &other.data, &mut out.data, k, m, n);
         out
     }
 

@@ -69,6 +69,8 @@ SUBCOMMANDS
                             mean device wear (0=off; crossbar only)      [4.0]
       --commit-queue-depth N  bounded serve->committer job queue (async
                             weight commits + snapshot writes)            [4]
+      --kernel NAME         compute kernel: auto|scalar|simd (bitwise-
+                            identical; overrides M2RU_KERNEL env)       [auto]
       --listen ADDR         serve real clients over TCP instead of the
                             synthetic driver (host:port; port 0 = auto).
                             Prints `listening on ADDR`, runs until a
@@ -298,6 +300,9 @@ fn apply_serve_net_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
     run.serve.wear_ratio = args.get_parse("wear-ratio", run.serve.wear_ratio)?;
     run.serve.commit_queue_depth =
         args.get_parse("commit-queue-depth", run.serve.commit_queue_depth)?;
+    if let Some(kernel) = args.get_opt("kernel") {
+        run.serve.kernel = kernel;
+    }
     if let Some(listen) = args.get_opt("listen") {
         run.net.listen = listen;
     }
@@ -325,6 +330,10 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
         run.net.checkpoint_dir = dir;
     }
     run.validate()?;
+    if !run.serve.kernel.is_empty() {
+        m2ru::linalg::kernels::force(&run.serve.kernel)?;
+    }
+    println!("kernel: {}", m2ru::linalg::kernels::active_name());
 
     // transport-backed event loop: serve real clients over TCP
     if !closed_loop && !run.net.listen.is_empty() {
@@ -401,6 +410,10 @@ fn cmd_router(args: &mut Args) -> Result<()> {
     }
     run.validate()?;
     args.finish()?;
+    if !run.serve.kernel.is_empty() {
+        m2ru::linalg::kernels::force(&run.serve.kernel)?;
+    }
+    println!("kernel: {}", m2ru::linalg::kernels::active_name());
 
     let remote = !run.router.shard_addrs.is_empty();
     let server = RouterServer::bind(RouterServeOptions { net, run: run.clone() })?;

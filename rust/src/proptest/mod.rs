@@ -225,6 +225,49 @@ impl<G: Gen> Gen for VecOf<G> {
     }
 }
 
+/// A matmul problem shape: `a` is `m×k`, `b` is `k×n` (kernel-parity
+/// test workhorse — see `tests/kernel_parity.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Uniform [`MatShape`] with each dim in its inclusive range. Shrinks
+/// one dimension at a time toward its lower bound (jump / halve /
+/// decrement, like [`UsizeIn`]) so a failing kernel shape lands at a
+/// near-minimal (m, k, n).
+pub struct MatShapeGen {
+    pub m: (usize, usize),
+    pub k: (usize, usize),
+    pub n: (usize, usize),
+}
+
+impl Gen for MatShapeGen {
+    type Value = MatShape;
+    fn generate(&self, rng: &mut GaussianRng) -> MatShape {
+        MatShape {
+            m: UsizeIn(self.m.0, self.m.1).generate(rng),
+            k: UsizeIn(self.k.0, self.k.1).generate(rng),
+            n: UsizeIn(self.n.0, self.n.1).generate(rng),
+        }
+    }
+    fn shrink(&self, v: &MatShape) -> Vec<MatShape> {
+        let mut out = Vec::new();
+        for sm in UsizeIn(self.m.0, self.m.1).shrink(&v.m) {
+            out.push(MatShape { m: sm, ..*v });
+        }
+        for sk in UsizeIn(self.k.0, self.k.1).shrink(&v.k) {
+            out.push(MatShape { k: sk, ..*v });
+        }
+        for sn in UsizeIn(self.n.0, self.n.1).shrink(&v.n) {
+            out.push(MatShape { n: sn, ..*v });
+        }
+        out
+    }
+}
+
 /// Pair of independent generators.
 pub struct Pair<A, B>(pub A, pub B);
 

@@ -130,6 +130,13 @@ impl ServeCore {
     pub fn new(net: NetConfig, run: &RunConfig) -> Result<ServeCore> {
         run.validate()?;
         let cfg = run.serve.clone();
+        if !cfg.kernel.is_empty() {
+            // process-wide: every matmul/WBS-MAC from here on uses the
+            // selected kernel (bitwise-identical across kernels, so this
+            // can never change serve results — DESIGN.md §12)
+            crate::linalg::kernels::force(&cfg.kernel)
+                .with_context(|| format!("applying serve.kernel `{}`", cfg.kernel))?;
+        }
         let ctx = BackendCtx::from_run(net, run);
         let backend = BackendRegistry::with_defaults()
             .create(&run.backend, &ctx)

@@ -1,0 +1,315 @@
+//! Scalar/SIMD kernel bitwise-parity suite (DESIGN.md §12 acceptance).
+//!
+//! The dispatch layer in `linalg/kernels/` promises that every kernel
+//! (scalar, AVX2, future NEON) produces **bit-identical** f32 results —
+//! that is what keeps serve signatures, checkpoint restores and the
+//! router's cross-shard equivalence independent of the machine the
+//! binary happens to run on. This suite enforces the promise at three
+//! levels:
+//!
+//! 1. raw kernel entry points (`matmul_ikj` / `matmul_blocked` /
+//!    `matmul_tn`) over property-generated shapes and explicit ragged
+//!    column counts straddling the 8-lane AVX2 width,
+//! 2. backend serving primitives (`step_hidden` / `readout`, dense and
+//!    crossbar) under runtime-forced kernels, and
+//! 3. the full synthetic serve loop: the deterministic signature must
+//!    not change when the kernel is forced to scalar, simd, or auto.
+//!
+//! Tests that call `kernels::force` mutate process-global state, so
+//! they serialize on [`FORCE_LOCK`] and restore auto-selection on exit.
+
+use std::sync::{Mutex, MutexGuard};
+
+use m2ru::backend::{BackendCtx, BackendRegistry, ComputeBackend};
+use m2ru::config::{NetConfig, RunConfig, ServeConfig};
+use m2ru::linalg::kernels::{self, Kernel};
+use m2ru::linalg::Mat;
+use m2ru::proptest::{assert_prop, MatShape, MatShapeGen};
+use m2ru::rng::GaussianRng;
+use m2ru::serve::{run_serve, ServeOptions};
+
+/// Serializes the tests that force the process-global kernel choice.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds [`FORCE_LOCK`] and restores auto-selection when dropped, so a
+/// failing assertion cannot leak a forced kernel into another test.
+struct ForcedSection<'a>(#[allow(dead_code)] MutexGuard<'a, ()>);
+
+impl<'a> ForcedSection<'a> {
+    fn enter() -> ForcedSection<'a> {
+        ForcedSection(FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for ForcedSection<'_> {
+    fn drop(&mut self) {
+        kernels::force("").expect("restoring auto kernel selection");
+    }
+}
+
+/// Every kernel runnable on this machine; scalar is always first so it
+/// doubles as the reference in parity loops.
+fn runnable_kernels() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar];
+    ks.extend(kernels::best_simd());
+    ks
+}
+
+/// Deterministic matrix data with exact zeros sprinkled in (~20%) so
+/// the kernels' zero-skip fast paths are exercised, not just the dense
+/// multiply-add lanes.
+fn fill(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = GaussianRng::new(seed);
+    (0..len)
+        .map(|_| if rng.below(5) == 0 { 0.0 } else { rng.uniform_in(-1.0, 1.0) })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run one (op, shape) parity case: scalar is the reference; every
+/// other runnable kernel and the dispatched entry point must match it
+/// bitwise.
+fn check_matmul_parity(
+    op_name: &str,
+    shape: &MatShape,
+    with: impl Fn(Kernel, &[f32], &[f32], &mut [f32], &MatShape),
+    dispatched: impl Fn(&[f32], &[f32], &mut [f32], &MatShape),
+    a_len: usize,
+    b_len: usize,
+) -> Result<(), String> {
+    let seed = (shape.m as u64) << 32 | (shape.k as u64) << 16 | shape.n as u64;
+    let a = fill(a_len, seed ^ 0xA);
+    let b = fill(b_len, seed ^ 0xB);
+    let mut reference = vec![0.0f32; shape.m * shape.n];
+    with(Kernel::Scalar, &a, &b, &mut reference, shape);
+    for kern in runnable_kernels() {
+        let mut out = vec![0.0f32; shape.m * shape.n];
+        with(kern, &a, &b, &mut out, shape);
+        if bits(&out) != bits(&reference) {
+            return Err(format!("{op_name}: {kern:?} != scalar at {shape:?}"));
+        }
+    }
+    let mut out = vec![0.0f32; shape.m * shape.n];
+    dispatched(&a, &b, &mut out, shape);
+    if bits(&out) != bits(&reference) {
+        return Err(format!("{op_name}: dispatched != scalar at {shape:?}"));
+    }
+    Ok(())
+}
+
+const SHAPES: MatShapeGen = MatShapeGen { m: (1, 24), k: (1, 96), n: (1, 96) };
+
+#[test]
+fn matmul_ikj_bitwise_parity_over_random_shapes() {
+    assert_prop(0xAD1, 64, &SHAPES, |s| {
+        check_matmul_parity(
+            "matmul_ikj",
+            s,
+            |kern, a, b, out, s| kernels::matmul_ikj_with(kern, a, b, out, s.m, s.k, s.n),
+            |a, b, out, s| kernels::matmul_ikj(a, b, out, s.m, s.k, s.n),
+            s.m * s.k,
+            s.k * s.n,
+        )
+    });
+}
+
+#[test]
+fn matmul_blocked_bitwise_parity_over_random_shapes() {
+    assert_prop(0xAD2, 64, &SHAPES, |s| {
+        check_matmul_parity(
+            "matmul_blocked",
+            s,
+            |kern, a, b, out, s| kernels::matmul_blocked_with(kern, a, b, out, s.m, s.k, s.n),
+            |a, b, out, s| kernels::matmul_blocked(a, b, out, s.m, s.k, s.n),
+            s.m * s.k,
+            s.k * s.n,
+        )
+    });
+}
+
+#[test]
+fn matmul_tn_bitwise_parity_over_random_shapes() {
+    // a is k×m here (the transposed-left product), so swap the buffer
+    // length; the output is still m×n
+    assert_prop(0xAD3, 64, &SHAPES, |s| {
+        check_matmul_parity(
+            "matmul_tn",
+            s,
+            |kern, a, b, out, s| kernels::matmul_tn_with(kern, a, b, out, s.k, s.m, s.n),
+            |a, b, out, s| kernels::matmul_tn(a, b, out, s.k, s.m, s.n),
+            s.k * s.m,
+            s.k * s.n,
+        )
+    });
+}
+
+#[test]
+fn ragged_tails_bitwise_parity() {
+    // column counts straddling the 8-lane AVX2 width, the 4-row
+    // micro-kernel and the 128/256 tile edges: every one must take the
+    // scalar-tail code path at a different offset
+    for n in [1usize, 3, 5, 7, 8, 9, 15, 16, 17, 31, 33, 63, 64, 65, 127, 129, 255, 257] {
+        for (m, k) in [(1usize, 1usize), (3, 7), (4, 37), (5, 37), (9, 128), (4, 129)] {
+            let shape = MatShape { m, k, n };
+            check_matmul_parity(
+                "matmul_ikj",
+                &shape,
+                |kern, a, b, out, s| kernels::matmul_ikj_with(kern, a, b, out, s.m, s.k, s.n),
+                |a, b, out, s| kernels::matmul_ikj(a, b, out, s.m, s.k, s.n),
+                m * k,
+                k * n,
+            )
+            .unwrap();
+            check_matmul_parity(
+                "matmul_blocked",
+                &shape,
+                |kern, a, b, out, s| kernels::matmul_blocked_with(kern, a, b, out, s.m, s.k, s.n),
+                |a, b, out, s| kernels::matmul_blocked(a, b, out, s.m, s.k, s.n),
+                m * k,
+                k * n,
+            )
+            .unwrap();
+            check_matmul_parity(
+                "matmul_tn",
+                &shape,
+                |kern, a, b, out, s| kernels::matmul_tn_with(kern, a, b, out, s.k, s.m, s.n),
+                |a, b, out, s| kernels::matmul_tn(a, b, out, s.k, s.m, s.n),
+                k * m,
+                k * n,
+            )
+            .unwrap();
+        }
+    }
+}
+
+#[test]
+fn axpy_family_bitwise_parity_at_ragged_widths() {
+    for w in [1usize, 2, 7, 8, 9, 16, 17, 31, 33, 64, 65] {
+        let x = fill(w, 0xF00 + w as u64);
+        for kern in runnable_kernels() {
+            let mut a = fill(w, 0xB00 + w as u64);
+            let mut b = a.clone();
+            kernels::axpy_with(Kernel::Scalar, &mut a, 0.37, &x);
+            kernels::axpy_with(kern, &mut b, 0.37, &x);
+            assert_eq!(bits(&a), bits(&b), "axpy {kern:?} w={w}");
+            kernels::add_assign_with(Kernel::Scalar, &mut a, &x);
+            kernels::add_assign_with(kern, &mut b, &x);
+            assert_eq!(bits(&a), bits(&b), "add_assign {kern:?} w={w}");
+            kernels::sub_assign_with(Kernel::Scalar, &mut a, &x);
+            kernels::sub_assign_with(kern, &mut b, &x);
+            assert_eq!(bits(&a), bits(&b), "sub_assign {kern:?} w={w}");
+        }
+    }
+}
+
+// ---- backend serving primitives under forced kernels -----------------------
+
+fn backend(name: &str, seed: u64) -> Box<dyn ComputeBackend> {
+    let ctx = BackendCtx { seed, ..BackendCtx::new(NetConfig::SMALL) };
+    BackendRegistry::with_defaults().create(name, &ctx).unwrap()
+}
+
+#[test]
+fn backend_step_and_readout_bitwise_identical_under_forced_kernels() {
+    let _section = ForcedSection::enter();
+    let net = NetConfig::SMALL;
+    for name in ["dense", "crossbar"] {
+        // build once *before* forcing so both passes see identical weights
+        let be = backend(name, 17);
+        let h = Mat::from_fn(6, net.nh, |r, c| {
+            if (r + c) % 5 == 0 {
+                0.0
+            } else {
+                ((r * net.nh + c) % 13) as f32 / 13.0 - 0.5
+            }
+        });
+        let x = Mat::from_fn(6, net.nx, |r, c| ((r * net.nx + c) % 9) as f32 / 9.0 - 0.4);
+
+        kernels::force("scalar").unwrap();
+        let h_s = be.step_hidden(&h, &x).unwrap();
+        let y_s = be.readout(&h_s).unwrap();
+
+        kernels::force("simd").unwrap();
+        let h_v = be.step_hidden(&h, &x).unwrap();
+        let y_v = be.readout(&h_v).unwrap();
+
+        assert_eq!(bits(&h_s.data), bits(&h_v.data), "{name}: step_hidden scalar vs simd");
+        assert_eq!(bits(&y_s.data), bits(&y_v.data), "{name}: readout scalar vs simd");
+    }
+}
+
+#[test]
+fn mat_entry_points_follow_forced_kernel_bitwise() {
+    let _section = ForcedSection::enter();
+    // big enough to take the blocked path inside Mat::matmul, ragged
+    // enough (67 columns) to leave a 3-wide SIMD tail
+    let a = Mat::from_fn(12, 80, |r, c| {
+        if (r * 80 + c) % 4 == 0 {
+            0.0
+        } else {
+            ((r * 80 + c) % 11) as f32 / 11.0 - 0.5
+        }
+    });
+    let b = Mat::from_fn(80, 67, |r, c| ((r * 67 + c) % 7) as f32 / 7.0 - 0.3);
+    let at = Mat::from_fn(80, 12, |r, c| a.data[c * 80 + r]);
+
+    kernels::force("scalar").unwrap();
+    let mm_s = a.matmul(&b);
+    let tn_s = at.matmul_tn(&b);
+
+    kernels::force("simd").unwrap();
+    let mm_v = a.matmul(&b);
+    let tn_v = at.matmul_tn(&b);
+
+    assert_eq!(bits(&mm_s.data), bits(&mm_v.data), "Mat::matmul scalar vs simd");
+    assert_eq!(bits(&tn_s.data), bits(&tn_v.data), "Mat::matmul_tn scalar vs simd");
+}
+
+// ---- full serve loop under forced kernels -----------------------------------
+
+fn serve_opts(backend: &str, requests: u64) -> ServeOptions {
+    let mut run = RunConfig::default();
+    run.backend = backend.to_string();
+    run.workers = 2;
+    run.serve = ServeConfig {
+        max_batch: 8,
+        max_wait: 2,
+        capacity: 8,
+        ttl: 0,
+        update_every: 12,
+        replay_cap: 64,
+        replay_mix: 0.5,
+        ..ServeConfig::default()
+    };
+    ServeOptions {
+        net: NetConfig::SMALL,
+        run,
+        requests,
+        sessions: 16,
+        arrivals: 8,
+        concurrency: 0,
+        record_steps: false,
+    }
+}
+
+#[test]
+fn serve_signature_invariant_under_forced_kernels() {
+    // the deterministic serve signature folds predictions, evictions and
+    // online-learning commits; a single differing bit anywhere in the
+    // kernel layer would show up here
+    let _section = ForcedSection::enter();
+    for name in ["dense", "crossbar"] {
+        kernels::force("scalar").unwrap();
+        let scalar = run_serve(&serve_opts(name, 300)).unwrap();
+        kernels::force("simd").unwrap();
+        let simd = run_serve(&serve_opts(name, 300)).unwrap();
+        kernels::force("auto").unwrap();
+        let auto = run_serve(&serve_opts(name, 300)).unwrap();
+        assert_eq!(scalar.signature(), simd.signature(), "{name}: scalar vs simd");
+        assert_eq!(scalar.signature(), auto.signature(), "{name}: scalar vs auto");
+        assert!(scalar.metrics.online_updates > 0, "{name}: must exercise online commits");
+    }
+}
