@@ -524,6 +524,30 @@ fn main() -> anyhow::Result<()> {
             run_serve(&opts).unwrap();
         });
     }
+    if runs("obs_overhead") {
+        // cost of the observability layer on the whole serve loop: the
+        // serve_e2e operating point with the registry + spans off, fully
+        // on, and sampled (1-in-16 span timing, exact mirrors either
+        // way). The signatures are bitwise-identical across all three
+        // (tests/obs_invariance.rs); only the wall clock may move.
+        for mode in ["off", "on", "sampled"] {
+            let mut run = RunConfig::default();
+            run.workers = 4;
+            run.serve = ServeConfig {
+                max_batch: 32,
+                capacity: 256,
+                update_every: 4,
+                ..ServeConfig::default()
+            };
+            run.obs.mode = mode.to_string();
+            let mut opts = ServeOptions::new(NetConfig::PMNIST100, run);
+            opts.requests = 512;
+            opts.sessions = 16;
+            timeit(&mut recs, &format!("obs_overhead (512 reqs, obs={mode})"), 5, || {
+                run_serve(&opts).unwrap();
+            });
+        }
+    }
 
     write_bench_json("results/BENCH_serve.json", &recs)?;
     println!("[wrote results/BENCH_serve.json: {} records]", recs.len());

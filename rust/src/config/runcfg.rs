@@ -44,6 +44,60 @@ pub struct RunConfig {
     pub net: TransportConfig,
     /// Multi-shard session routing policy (`m2ru router`).
     pub router: RouterConfig,
+    /// Serve-path observability policy (`rust/src/obs/`, DESIGN.md §13).
+    pub obs: ObsConfig,
+}
+
+/// Observability policy: how much the serve path records into the
+/// metrics registry and flight recorder (`rust/src/obs/`). Strictly
+/// timing-plane — no value here can change a single served bit; the
+/// deterministic signature is identical for every mode (enforced by
+/// `tests/obs_invariance.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// `on` (record everything — cheap enough to leave enabled), `off`
+    /// (instruments never touched from the hot path), or `sampled`
+    /// (record every `sample_every`-th span; counters stay exact).
+    pub mode: String,
+    /// Span sampling stride for `mode = "sampled"`.
+    pub sample_every: u64,
+    /// Flight-recorder ring capacity (lifecycle events retained).
+    pub flight_capacity: usize,
+    /// Periodic metrics snapshot file: every `snapshot_every` ticks the
+    /// Prometheus text lands here and the flight-recorder JSONL beside
+    /// it at `<path>.jsonl` (empty = off).
+    pub snapshot_path: String,
+    /// Logical ticks between metrics file snapshots (0 = off).
+    pub snapshot_every: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            mode: "on".to_string(),
+            sample_every: 16,
+            flight_capacity: 256,
+            snapshot_path: String::new(),
+            snapshot_every: 0,
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            matches!(self.mode.as_str(), "on" | "off" | "sampled"),
+            "obs.mode must be `on`, `off` or `sampled` (got `{}`)",
+            self.mode
+        );
+        anyhow::ensure!(self.sample_every >= 1, "obs.sample_every must be >= 1");
+        anyhow::ensure!(self.flight_capacity >= 1, "obs.flight_capacity must be >= 1");
+        anyhow::ensure!(
+            self.snapshot_every == 0 || !self.snapshot_path.is_empty(),
+            "obs.snapshot_every needs obs.snapshot_path (nowhere to write)"
+        );
+        Ok(())
+    }
 }
 
 /// Multi-shard session router policy (`rust/src/net/router.rs`,
@@ -301,6 +355,7 @@ impl Default for RunConfig {
             serve: ServeConfig::default(),
             net: TransportConfig::default(),
             router: RouterConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -381,6 +436,17 @@ impl RunConfig {
                     self.router.checkpoint_root =
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
                 }
+                "obs.mode" => {
+                    self.obs.mode =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
+                "obs.sample_every" => self.obs.sample_every = iget()? as u64,
+                "obs.flight_capacity" => self.obs.flight_capacity = iget()?,
+                "obs.snapshot_path" => {
+                    self.obs.snapshot_path =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
+                "obs.snapshot_every" => self.obs.snapshot_every = iget()? as u64,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -406,7 +472,8 @@ impl RunConfig {
         anyhow::ensure!(!self.backend.is_empty(), "backend name must be non-empty");
         self.serve.validate()?;
         self.net.validate()?;
-        self.router.validate()
+        self.router.validate()?;
+        self.obs.validate()
     }
 }
 
@@ -611,6 +678,28 @@ mod tests {
         RunConfig::default().apply(&off).unwrap();
         // ratios in (0, 1) would ration *under*-stressed columns — rejected
         let bad = parse_toml("[serve]\nwear_ratio = 0.5\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
+    }
+
+    #[test]
+    fn obs_keys_from_toml() {
+        let map = parse_toml(
+            "[obs]\nmode = \"sampled\"\nsample_every = 8\nflight_capacity = 64\nsnapshot_path = \"metrics.prom\"\nsnapshot_every = 100\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.obs.mode, "sampled");
+        assert_eq!(cfg.obs.sample_every, 8);
+        assert_eq!(cfg.obs.flight_capacity, 64);
+        assert_eq!(cfg.obs.snapshot_path, "metrics.prom");
+        assert_eq!(cfg.obs.snapshot_every, 100);
+        let bad = parse_toml("[obs]\nmode = \"loud\"\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err(), "unknown modes are rejected");
+        let bad = parse_toml("[obs]\nsample_every = 0\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err());
+        // a snapshot cadence with nowhere to write is a config error
+        let bad = parse_toml("[obs]\nsnapshot_every = 10\n").unwrap();
         assert!(RunConfig::default().apply(&bad).is_err());
     }
 

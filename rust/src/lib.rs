@@ -34,6 +34,7 @@
 //! | [`coordinator`]| trainer, batcher, parallel serving engine, tile scheduler, metrics |
 //! | [`serve`]     | streaming session server: per-user state, dynamic batching, online learning, checkpoint/restore |
 //! | [`net`]       | TCP serving frontend: wire protocol, accept loop, client + load generator, multi-shard session router |
+//! | [`obs`]       | serve-path observability: atomic metrics registry, stage-span histograms, flight recorder |
 //! | [`config`]    | network configs + run/backend selection + TOML-subset loader |
 //! | [`cli`]       | argument parsing for the `m2ru` binary |
 //! | [`experiments`]| regenerates every paper figure/table |
@@ -51,6 +52,7 @@ pub mod hw_model;
 pub mod linalg;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod proptest;
 pub mod quant;
 pub mod replay;

@@ -86,6 +86,14 @@ SUBCOMMANDS
       --queue-depth N       bounded reader->serve queue (back-pressure)   [256]
       --outbox-depth N      per-connection response outbox; a slow client
                             fills its own and is dropped                  [64]
+      --obs MODE            observability: on|off|sampled — timing plane
+                            only, the deterministic serve signature is
+                            bitwise-identical in every mode               [on]
+      --obs-sample N        with --obs sampled, time 1-in-N batches       [16]
+      --obs-flight-cap N    flight-recorder ring capacity (events)        [256]
+      --obs-snapshot PATH   periodically write the Prometheus exposition
+                            to PATH (and flight events to PATH.jsonl)
+      --obs-snapshot-every T  snapshot period in ticks (0 = never)        [0]
       --config FILE --seed N --lr F --lam F --beta F
   loadgen                   closed-loop load generator (same flags as serve)
       --concurrency C       outstanding-request target                   [4*max-batch]
@@ -112,6 +120,9 @@ SUBCOMMANDS
       --skip N              fast-forward the workload N requests (resume
                             against a server restored from a checkpoint)
       --keep-alive          do not send Shutdown when done
+      --metrics             fetch and print the server's MetricsDump
+                            (Prometheus text; a router answers with
+                            per-shard sections plus a fleet rollup)
   experiment ID             fig4|fig5a|fig5b|fig5c|fig5d|table1|headline|all
                             |ablation-replay|ablation-zeta|ablation-sampler|fault
       fig4:  --dataset pmnist|cifarfeat  --nh 100|256  --engines adam,dfa,hw
@@ -159,6 +170,27 @@ fn cmd_info(rt: &Runtime, manifest: Option<&Manifest>) -> Result<()> {
     }
     let report = run_headline()?;
     drop(report);
+
+    // serve-path observability probe: a tiny crossbar serve run whose
+    // wear/lifespan/commit-pipeline lines come from the metrics
+    // registry — the same series a live server exposes via MetricsDump
+    let net = NetConfig::by_name("small").context("built-in net `small` missing")?;
+    let mut run = RunConfig::default();
+    run.backend = "crossbar".to_string();
+    run.serve.update_every = 16;
+    let mut opts = ServeOptions::new(net, run);
+    opts.requests = 256;
+    opts.sessions = 16;
+    let rep = run_serve(&opts)?;
+    println!("serve observability probe (crossbar, {} requests):", opts.requests);
+    for line in &rep.obs_lines {
+        println!("  {line}");
+    }
+    for line in rep.lines() {
+        if line.contains("lifespan") {
+            println!("  {line}");
+        }
+    }
     Ok(())
 }
 
@@ -314,6 +346,15 @@ fn apply_serve_net_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
     }
     run.net.queue_depth = args.get_parse("queue-depth", run.net.queue_depth)?;
     run.net.outbox_depth = args.get_parse("outbox-depth", run.net.outbox_depth)?;
+    if let Some(mode) = args.get_opt("obs") {
+        run.obs.mode = mode;
+    }
+    run.obs.sample_every = args.get_parse("obs-sample", run.obs.sample_every)?;
+    run.obs.flight_capacity = args.get_parse("obs-flight-cap", run.obs.flight_capacity)?;
+    if let Some(path) = args.get_opt("obs-snapshot") {
+        run.obs.snapshot_path = path;
+    }
+    run.obs.snapshot_every = args.get_parse("obs-snapshot-every", run.obs.snapshot_every)?;
     Ok(())
 }
 
@@ -463,6 +504,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     opts.seed = args.get_parse("seed", opts.seed)?;
     opts.skip = args.get_parse("skip", opts.skip)?;
     opts.shutdown = !args.get_bool("keep-alive")?;
+    opts.metrics = args.get_bool("metrics")?;
     args.finish()?;
     println!(
         "connect: {} requests over {} sessions to {} (arrivals {}, seed {})",
@@ -480,6 +522,18 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     println!("server stats:");
     for line in rep.stats_text.lines() {
         println!("  {line}");
+    }
+    if let Some(text) = &rep.metrics_text {
+        println!("server metrics:");
+        for line in text.lines() {
+            println!("  {line}");
+        }
+    }
+    if let Some(text) = &rep.events_text {
+        println!("server flight events:");
+        for line in text.lines() {
+            println!("  {line}");
+        }
     }
     if let Some(total) = rep.server_total {
         println!("shutdown: server acknowledged {total} total requests");

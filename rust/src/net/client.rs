@@ -104,12 +104,24 @@ impl NetClient {
         }
     }
 
-    /// Fetch the server's serve-report text.
+    /// Fetch the server's serve-report text (deterministic `key=value`
+    /// lines, stable order).
     pub fn stats(&mut self) -> Result<String> {
         self.send(0, &Message::Stats { text: String::new() })?;
         match self.recv()? {
             Message::Stats { text } => Ok(text),
             other => bail!("expected Stats, got {other:?}"),
+        }
+    }
+
+    /// Fetch the server's metrics exposition. `selector` is `""`/`"prom"`
+    /// for Prometheus text or `"events"` for the flight-recorder JSONL;
+    /// a router answers with per-shard sections plus a fleet rollup.
+    pub fn metrics(&mut self, selector: &str) -> Result<String> {
+        self.send(0, &Message::MetricsDump { text: String::from(selector) })?;
+        match self.recv()? {
+            Message::MetricsDump { text } => Ok(text),
+            other => bail!("expected MetricsDump, got {other:?}"),
         }
     }
 
@@ -156,6 +168,8 @@ pub struct ConnectOptions {
     pub skip: u64,
     /// Send `Shutdown` when done (the server drains, checkpoints, exits).
     pub shutdown: bool,
+    /// Fetch a `MetricsDump` (Prometheus text) after the run.
+    pub metrics: bool,
 }
 
 impl ConnectOptions {
@@ -169,6 +183,7 @@ impl ConnectOptions {
             seed: 42,
             skip: 0,
             shutdown: true,
+            metrics: false,
         }
     }
 }
@@ -187,6 +202,12 @@ pub struct ConnectReport {
     pub wall: Duration,
     /// The server's serve report, fetched after the run.
     pub stats_text: String,
+    /// The server's metrics exposition (only when `metrics` was
+    /// requested; a router answers with the fleet aggregation).
+    pub metrics_text: Option<String>,
+    /// The server's flight-recorder dump as JSONL (only when `metrics`
+    /// was requested).
+    pub events_text: Option<String>,
     /// The server's total served count from the shutdown Ack (only when
     /// `shutdown` was requested).
     pub server_total: Option<u64>,
@@ -291,6 +312,17 @@ pub fn run_connect(opts: &ConnectOptions) -> Result<ConnectReport> {
     let wall = start.elapsed();
 
     let stats_text = client.stats()?;
+    let metrics_text = if opts.metrics { Some(client.metrics("")?) } else { None };
+    let events_text = if opts.metrics { Some(client.metrics("events")?) } else { None };
     let server_total = if opts.shutdown { Some(client.shutdown_server()?) } else { None };
-    Ok(ConnectReport { session_ids, completed, labeled, wall, stats_text, server_total })
+    Ok(ConnectReport {
+        session_ids,
+        completed,
+        labeled,
+        wall,
+        stats_text,
+        metrics_text,
+        events_text,
+        server_total,
+    })
 }

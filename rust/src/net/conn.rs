@@ -27,9 +27,28 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::obs::{Counter, FlightRecorder};
 use crate::serve::{CompletedStep, OutboxDrops};
 
 use super::wire::{self, Frame, Message};
+
+/// Writer-outbox flow counters shared between the serve thread and every
+/// writer thread: frames enqueued into outboxes vs frames actually
+/// written to sockets. Their difference is the instantaneous fleet-wide
+/// outbox occupancy (the `m2ru_outbox_occupancy` gauge). Plain relaxed
+/// atomics — timing plane only, never consulted by dispatch.
+#[derive(Clone, Default)]
+pub(crate) struct OutboxFlow {
+    pub(crate) enqueued: Counter,
+    pub(crate) written: Counter,
+}
+
+impl OutboxFlow {
+    /// Frames currently sitting in writer outboxes (fleet-wide).
+    pub(crate) fn occupancy(&self) -> u64 {
+        self.enqueued.get().saturating_sub(self.written.get())
+    }
+}
 
 /// Events the accept path feeds the frontend's serve thread.
 pub(crate) enum ConnEvent {
@@ -73,6 +92,7 @@ fn writer_loop<E: From<ConnEvent> + Send + 'static>(
     mut sock: TcpStream,
     outbox: Receiver<Vec<u8>>,
     tx: SyncSender<E>,
+    flow: OutboxFlow,
 ) {
     use std::io::Write as _;
     for buf in outbox {
@@ -85,6 +105,7 @@ fn writer_loop<E: From<ConnEvent> + Send + 'static>(
             let _ = tx.send(ConnEvent::WriterFailed { conn, timeout }.into());
             return;
         }
+        flow.written.inc();
     }
 }
 
@@ -97,6 +118,7 @@ pub(crate) fn spawn_acceptor<E: From<ConnEvent> + Send + 'static>(
     tx: SyncSender<E>,
     stop: Arc<AtomicBool>,
     outbox_depth: usize,
+    flow: OutboxFlow,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
         let mut next_conn: u64 = 1;
@@ -121,8 +143,10 @@ pub(crate) fn spawn_acceptor<E: From<ConnEvent> + Send + 'static>(
             let _ = wsock.set_write_timeout(Some(std::time::Duration::from_secs(10)));
             let (obx_tx, obx_rx) = sync_channel::<Vec<u8>>(outbox_depth);
             let writer_tx = tx.clone();
-            let writer =
-                std::thread::spawn(move || writer_loop::<E>(conn, wsock, obx_rx, writer_tx));
+            let writer_flow = flow.clone();
+            let writer = std::thread::spawn(move || {
+                writer_loop::<E>(conn, wsock, obx_rx, writer_tx, writer_flow)
+            });
             if tx.send(ConnEvent::Connected { conn, ctl, outbox: obx_tx, writer }.into()).is_err()
             {
                 return;
@@ -180,6 +204,15 @@ pub(crate) struct ConnTable {
     reap: Vec<JoinHandle<()>>,
     /// Writer-outbox drops by reason (surfaced through `ServeReport`).
     pub(crate) drops: OutboxDrops,
+    /// Outbox flow counters (shared with the writer threads via
+    /// [`spawn_acceptor`]); `send` counts the enqueue side.
+    pub(crate) flow: OutboxFlow,
+    /// Optional flight recorder: severed connections are recorded with
+    /// their reason. Timing plane only.
+    pub(crate) recorder: Option<Arc<FlightRecorder>>,
+    /// Logical tick stamped onto recorded events (the frontend updates
+    /// it as its clock advances; observability bookkeeping only).
+    pub(crate) obs_tick: u64,
 }
 
 impl ConnTable {
@@ -190,6 +223,9 @@ impl ConnTable {
             owned: HashMap::new(),
             reap: Vec::new(),
             drops: OutboxDrops::default(),
+            flow: OutboxFlow::default(),
+            recorder: None,
+            obs_tick: 0,
         }
     }
 
@@ -220,6 +256,13 @@ impl ConnTable {
     /// release every session bound to it.
     pub(crate) fn drop_conn(&mut self, conn: u64, reason: &str) {
         eprintln!("net: dropping connection {conn}: {reason}");
+        if let Some(rec) = &self.recorder {
+            rec.record(
+                self.obs_tick,
+                "conn_severed",
+                vec![("conn", format!("{conn}")), ("reason", reason.to_string())],
+            );
+        }
         if let Some(e) = self.conns.remove(&conn) {
             let _ = e.ctl.shutdown(std::net::Shutdown::Both);
             self.reap.push(e.writer);
@@ -292,7 +335,7 @@ impl ConnTable {
         let Some(e) = self.conns.get(&conn) else { return };
         let buf = wire::encode_frame(0, msg);
         match e.outbox.try_send(buf) {
-            Ok(()) => {}
+            Ok(()) => self.flow.enqueued.inc(),
             Err(TrySendError::Full(_)) => {
                 self.drops.full += 1;
                 self.drop_conn(conn, "response outbox full (slow client)");

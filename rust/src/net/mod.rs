@@ -2,8 +2,9 @@
 //! server (DESIGN.md §9) — where the server meets the outside world.
 //!
 //! * [`wire`] — the versioned length-prefixed binary protocol
-//!   (Hello/Step/StepLabeled/Ack/Logits/Stats/Shutdown frames, explicit
-//!   little-endian layout, malformed-frame rejection without panics).
+//!   (Hello/Step/StepLabeled/Ack/Logits/Stats/Shutdown/MetricsDump
+//!   frames, explicit little-endian layout, malformed-frame rejection
+//!   without panics).
 //! * [`NetServer`] — `std::net::TcpListener` accept loop, one reader
 //!   thread per connection, a bounded `std::sync::mpsc` channel into the
 //!   single deterministic serve thread driving

@@ -83,7 +83,7 @@ use crate::serve::{
     ServeReport, SnapshotPolicy, DEFAULT_SESSION_SECRET,
 };
 
-use super::conn::{self, ConnEvent, ConnTable};
+use super::conn::{self, ConnEvent, ConnTable, OutboxFlow};
 use super::server::random_boot_secret;
 use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
 
@@ -106,6 +106,9 @@ enum ShardCmd {
     Wave { tick: bool, flush: bool },
     /// Assemble this shard's serve report (syncs in-flight commits).
     Report,
+    /// Render this shard's metrics exposition (`""`/`"prom"` →
+    /// Prometheus text, `"events"` → flight-recorder JSONL).
+    Metrics { selector: String },
     /// Flush, checkpoint (if durable), stop the committer and reply with
     /// the final report.
     Stop,
@@ -115,6 +118,7 @@ enum ShardCmd {
 enum ShardReply {
     Wave { shard: usize, steps: Vec<CompletedStep> },
     Report { shard: usize, report: Box<ServeReport> },
+    Metrics { shard: usize, text: String },
     Stopped { shard: usize, result: Result<(Vec<CompletedStep>, Box<ServeReport>), String> },
 }
 
@@ -184,6 +188,14 @@ fn shard_loop(
                     Err(e) => return fail(e, &replies),
                 }
             }
+            ShardCmd::Metrics { selector } => match core.metrics_text(&selector) {
+                Ok(text) => {
+                    if replies.send(ShardReply::Metrics { shard, text }).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => return fail(e, &replies),
+            },
             ShardCmd::Stop => {
                 let result = (|| -> Result<(Vec<CompletedStep>, Box<ServeReport>)> {
                     // mirror the single-process shutdown path: flush the
@@ -429,7 +441,38 @@ impl RouterCore {
                         Ok(_) => bail!("shard {shard} stopped unexpectedly"),
                     }
                 }
-                ShardReply::Report { .. } => {}
+                ShardReply::Report { .. } | ShardReply::Metrics { .. } => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Collect every live shard's metrics exposition, in shard order.
+    /// `None` marks a down shard. Timing plane only: the dump syncs no
+    /// shard clocks and perturbs no dispatch decisions.
+    pub fn metrics(&mut self, selector: &str) -> Result<Vec<Option<String>>> {
+        let n = self.shards();
+        let mut out: Vec<Option<String>> = vec![None; n];
+        let mut expected = 0usize;
+        for h in self.shards.iter().flatten() {
+            if h.cmds.send(ShardCmd::Metrics { selector: String::from(selector) }).is_ok() {
+                expected += 1;
+            }
+        }
+        while expected > 0 {
+            match self.replies.recv().map_err(|_| anyhow!("every shard is gone"))? {
+                ShardReply::Metrics { shard, text } => {
+                    out[shard] = Some(text);
+                    expected -= 1;
+                }
+                ShardReply::Stopped { shard, result } => {
+                    self.reap(shard);
+                    match result {
+                        Err(e) => bail!("shard {shard} failed: {e}"),
+                        Ok(_) => bail!("shard {shard} stopped unexpectedly"),
+                    }
+                }
+                ShardReply::Wave { .. } | ShardReply::Report { .. } => {}
             }
         }
         Ok(out)
@@ -455,7 +498,7 @@ impl RouterCore {
                         Ok(_) => bail!("shard {shard} stopped unexpectedly"),
                     }
                 }
-                ShardReply::Wave { .. } => {}
+                ShardReply::Wave { .. } | ShardReply::Metrics { .. } => {}
             }
         }
         out.sort_by_key(|(k, _)| *k);
@@ -537,7 +580,7 @@ impl RouterCore {
                     }
                 }
                 Ok(ShardReply::Wave { steps, .. }) => tail.extend(steps),
-                Ok(ShardReply::Report { .. }) => {}
+                Ok(ShardReply::Report { .. }) | Ok(ShardReply::Metrics { .. }) => {}
                 Err(_) => break,
             }
         }
@@ -637,6 +680,9 @@ struct Remote {
     /// shard-connection loss; the router loop severs them after each
     /// event (their handshake can never complete).
     orphaned: Vec<u64>,
+    /// Flight-recorder hook: shard (re)connects are recorded here;
+    /// shard deaths are recorded by the router loop on `ShardDown`.
+    recorder: Option<Arc<crate::obs::FlightRecorder>>,
 }
 
 impl Remote {
@@ -691,6 +737,13 @@ impl Remote {
             }
         });
         self.shards[k].sock = Some(sock);
+        if let Some(rec) = &self.recorder {
+            rec.record(
+                0,
+                "shard_connect",
+                vec![("shard", format!("{k}")), ("addr", addr.clone())],
+            );
+        }
         let rehello: Vec<(u64, u64)> =
             self.shards[k].users.iter().map(|(sid, user)| (*sid, *user)).collect();
         for (sid, user) in rehello {
@@ -800,6 +853,14 @@ struct StatsAgg {
     texts: Vec<Option<String>>,
 }
 
+/// One in-flight `MetricsDump` aggregation over a remote fleet.
+/// Concurrent dumps coalesce onto the first request's selector.
+struct MetricsAgg {
+    selector: String,
+    waiters: Vec<u64>,
+    texts: Vec<Option<String>>,
+}
+
 /// A bound multi-shard router front door. `bind` then `run`;
 /// `local_addr` exposes the picked port for `--listen 127.0.0.1:0`.
 pub struct RouterServer {
@@ -831,6 +892,26 @@ impl RouterServer {
         let RouterServer { listener, opts } = self;
         let remote_mode = !opts.run.router.shard_addrs.is_empty();
 
+        // router-level observability: the router owns its own registry
+        // and flight recorder (each shard owns its own; a `MetricsDump`
+        // fans out and aggregates them). Timing plane only.
+        let obs = crate::obs::Obs::from_cfg(&opts.run.obs)?;
+        let flow = if obs.enabled() {
+            crate::obs::install_panic_dump(&obs.recorder);
+            OutboxFlow {
+                enqueued: obs.registry.counter(
+                    "m2ru_outbox_frames_enqueued_total",
+                    "frames enqueued into per-connection writer outboxes",
+                ),
+                written: obs.registry.counter(
+                    "m2ru_outbox_frames_written_total",
+                    "frames written to client sockets by writer threads",
+                ),
+            }
+        } else {
+            OutboxFlow::default()
+        };
+
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<REvent>(opts.run.net.queue_depth.max(1));
         let acceptor = conn::spawn_acceptor::<REvent>(
@@ -838,6 +919,7 @@ impl RouterServer {
             tx.clone(),
             stop.clone(),
             opts.run.net.outbox_depth.max(1),
+            flow.clone(),
         );
         if opts.run.net.tick_ms > 0 {
             let period = std::time::Duration::from_millis(opts.run.net.tick_ms);
@@ -855,8 +937,13 @@ impl RouterServer {
             let shards: Vec<RemoteShard> =
                 opts.run.router.shard_addrs.iter().map(|a| RemoteShard::new(a.clone())).collect();
             let n = shards.len();
-            let remote =
-                Remote { shards, tx: tx.clone(), stop: stop.clone(), orphaned: Vec::new() };
+            let remote = Remote {
+                shards,
+                tx: tx.clone(),
+                stop: stop.clone(),
+                orphaned: Vec::new(),
+                recorder: obs.enabled().then(|| obs.recorder.clone()),
+            };
             (Mode::Remote(remote), random_boot_secret(), 0usize, n)
         } else {
             let core =
@@ -870,12 +957,15 @@ impl RouterServer {
 
         // ---- the router thread (this thread) ----------------------------
         let mut table = ConnTable::new();
+        table.flow = flow;
+        table.recorder = obs.enabled().then(|| obs.recorder.clone());
         let mut total_conns: u64 = 0;
         let mut routed: u64 = 0;
         let mut shard_routed: Vec<u64> = vec![0; n];
         let mut shard_totals: Vec<u64> = vec![0; n];
         let mut shard_reports: Vec<(usize, ServeReport)> = Vec::new();
         let mut stats: Option<StatsAgg> = None;
+        let mut mdump: Option<MetricsAgg> = None;
         // Some while a Shutdown fans out to a remote fleet: (admin conn,
         // per-shard acked flags)
         let mut shutdown_await: Option<(u64, Vec<bool>)> = None;
@@ -1043,6 +1133,46 @@ impl RouterServer {
                                     }
                                 },
                             },
+                            Message::MetricsDump { text: selector } => match &mut mode {
+                                Mode::Local(core) => {
+                                    let texts = core.metrics(&selector)?;
+                                    let router = router_metrics_text(
+                                        &obs,
+                                        &selector,
+                                        routed,
+                                        n,
+                                        total_conns,
+                                        &table.flow,
+                                        &table.drops,
+                                    );
+                                    let text = fleet_metrics_text(router, &texts, &selector);
+                                    table.send(conn, &Message::MetricsDump { text });
+                                }
+                                Mode::Remote(remote) => match &mut mdump {
+                                    Some(agg) => agg.waiters.push(conn),
+                                    None => {
+                                        let mut agg = MetricsAgg {
+                                            selector: selector.clone(),
+                                            waiters: vec![conn],
+                                            texts: vec![None; n],
+                                        };
+                                        for k in 0..n {
+                                            if let Err(e) = remote.pulse(
+                                                k,
+                                                0,
+                                                &Message::MetricsDump {
+                                                    text: selector.clone(),
+                                                },
+                                            ) {
+                                                agg.texts[k] = Some(format!(
+                                                    "# shard {k} unreachable ({e})\n"
+                                                ));
+                                            }
+                                        }
+                                        mdump = Some(agg);
+                                    }
+                                },
+                            },
                             Message::Shutdown => {
                                 if client_admin {
                                     shutdown_req = true;
@@ -1167,6 +1297,13 @@ impl RouterServer {
                                     }
                                 }
                             }
+                            Message::MetricsDump { text } => {
+                                if let Some(agg) = &mut mdump {
+                                    if agg.texts[shard].is_none() {
+                                        agg.texts[shard] = Some(text);
+                                    }
+                                }
+                            }
                             // shards never originate anything else
                             _ => {}
                         }
@@ -1175,6 +1312,14 @@ impl RouterServer {
                         if let Mode::Remote(remote) = &mut mode {
                             if remote.shards[shard].gen == gen {
                                 remote.shards[shard].sock = None;
+                                obs.event(
+                                    0,
+                                    "shard_down",
+                                    vec![
+                                        ("shard", format!("{shard}")),
+                                        ("addr", remote.shards[shard].addr.clone()),
+                                    ],
+                                );
                                 // hellos in flight on the dead connection will
                                 // never be acked; re-hello covers the mapped
                                 // sessions after the next reconnect, so sever
@@ -1190,6 +1335,13 @@ impl RouterServer {
                                     if agg.texts[shard].is_none() {
                                         agg.texts[shard] =
                                             Some("unreachable (connection lost)".to_string());
+                                    }
+                                }
+                                if let Some(agg) = &mut mdump {
+                                    if agg.texts[shard].is_none() {
+                                        agg.texts[shard] = Some(format!(
+                                            "# shard {shard} unreachable (connection lost)\n"
+                                        ));
                                     }
                                 }
                                 if let Some((admin, acked)) = &mut shutdown_await {
@@ -1223,6 +1375,26 @@ impl RouterServer {
                     let text = remote_stats_text(routed, &shard_routed, &agg.texts, &table.drops);
                     for waiter in agg.waiters {
                         table.send(waiter, &Message::Stats { text: text.clone() });
+                    }
+                }
+                // so does a completed metrics aggregation
+                let mcomplete =
+                    mdump.as_ref().map_or(false, |agg| agg.texts.iter().all(|t| t.is_some()));
+                if mcomplete {
+                    let MetricsAgg { selector, waiters, texts } =
+                        mdump.take().expect("checked above");
+                    let router = router_metrics_text(
+                        &obs,
+                        &selector,
+                        routed,
+                        n,
+                        total_conns,
+                        &table.flow,
+                        &table.drops,
+                    );
+                    let text = fleet_metrics_text(router, &texts, &selector);
+                    for waiter in waiters {
+                        table.send(waiter, &Message::MetricsDump { text: text.clone() });
                     }
                 }
             }
@@ -1261,54 +1433,136 @@ impl RouterServer {
     }
 }
 
-/// Aggregate stats text for an in-process fleet.
+/// The deterministic `key=value` header every router stats payload
+/// starts with (stable order, machine-parseable — same contract as
+/// [`ServeReport::kv_lines`]).
+fn router_stats_header(
+    mode: &str,
+    shards: usize,
+    routed: u64,
+    drops: &OutboxDrops,
+) -> Vec<String> {
+    vec![
+        format!("router_mode={mode}"),
+        format!("router_shards={shards}"),
+        format!("router_routed={routed}"),
+        format!("router_outbox_drops_full={}", drops.full),
+        format!("router_outbox_drops_timeout={}", drops.timeout),
+        format!("router_outbox_drops_writer_failed={}", drops.writer_failed),
+    ]
+}
+
+/// Aggregate stats text for an in-process fleet: the router header,
+/// then each shard's `kv_lines` prefixed `shard<k>_`.
 fn local_stats_text(
     routed: u64,
     shard_routed: &[u64],
     reports: &[(usize, ServeReport)],
     drops: &OutboxDrops,
 ) -> String {
-    let mut lines = vec![format!(
-        "router: {} shard(s) (in-process), routed {} request(s)",
-        shard_routed.len(),
-        routed
-    )];
-    lines.push(format!(
-        "router outbox: drops_full={} drops_timeout={} drops_writer_failed={}",
-        drops.full, drops.timeout, drops.writer_failed
-    ));
+    let mut lines = router_stats_header("local", shard_routed.len(), routed, drops);
     for (k, rep) in reports {
-        lines.push(format!("shard {k}: routed={}", shard_routed[*k]));
-        for l in rep.lines() {
-            lines.push(format!("  {l}"));
+        lines.push(format!("shard{k}_routed={}", shard_routed[*k]));
+        for l in rep.kv_lines() {
+            lines.push(format!("shard{k}_{l}"));
         }
     }
     lines.join("\n")
 }
 
-/// Aggregate stats text for a remote fleet.
+/// Aggregate stats text for a remote fleet: the router header, then
+/// each shard's own stats payload (already `key=value` lines) prefixed
+/// `shard<k>_`. Unreachable shards get `shard<k>_unreachable=1`.
 fn remote_stats_text(
     routed: u64,
     shard_routed: &[u64],
     texts: &[Option<String>],
     drops: &OutboxDrops,
 ) -> String {
-    let mut lines = vec![format!(
-        "router: {} shard(s) (remote), routed {} request(s)",
-        texts.len(),
-        routed
-    )];
-    lines.push(format!(
-        "router outbox: drops_full={} drops_timeout={} drops_writer_failed={}",
-        drops.full, drops.timeout, drops.writer_failed
-    ));
+    let mut lines = router_stats_header("remote", texts.len(), routed, drops);
     for (k, text) in texts.iter().enumerate() {
-        lines.push(format!("shard {k}: routed={}", shard_routed[k]));
-        for l in text.as_deref().unwrap_or("(no response)").lines() {
-            lines.push(format!("  {l}"));
+        lines.push(format!("shard{k}_routed={}", shard_routed[k]));
+        match text {
+            Some(t) if !t.starts_with("unreachable") => {
+                for l in t.lines() {
+                    lines.push(format!("shard{k}_{l}"));
+                }
+            }
+            _ => lines.push(format!("shard{k}_unreachable=1")),
         }
     }
     lines.join("\n")
+}
+
+/// The router's own registry section of a fleet `MetricsDump`:
+/// refreshes the router-plane mirrors, then renders. For the `events`
+/// selector this is the router's flight-recorder JSONL instead.
+fn router_metrics_text(
+    obs: &crate::obs::Obs,
+    selector: &str,
+    routed: u64,
+    shards: usize,
+    conns: u64,
+    flow: &OutboxFlow,
+    drops: &OutboxDrops,
+) -> String {
+    if selector == "events" {
+        return obs.recorder.dump_jsonl();
+    }
+    if !obs.enabled() {
+        return "# observability disabled (obs.mode = \"off\")\n".to_string();
+    }
+    let reg = &obs.registry;
+    reg.counter("m2ru_router_routed_total", "requests routed to shards").set(routed);
+    reg.counter("m2ru_router_connections_total", "client connections accepted").set(conns);
+    reg.gauge("m2ru_router_shards", "shards in the fleet").set(shards as f64);
+    reg.gauge("m2ru_outbox_occupancy", "frames currently queued in writer outboxes")
+        .set(flow.occupancy() as f64);
+    for (name, v) in [
+        ("m2ru_outbox_drops_full_total", drops.full),
+        ("m2ru_outbox_drops_timeout_total", drops.timeout),
+        ("m2ru_outbox_drops_writer_failed_total", drops.writer_failed),
+    ] {
+        reg.counter(name, "connections severed by outbox reason").set(v);
+    }
+    reg.counter(
+        "m2ru_flight_events_dropped_total",
+        "flight-recorder events evicted from the ring",
+    )
+    .set(obs.recorder.dropped());
+    reg.render()
+}
+
+/// Assemble the fleet-wide `MetricsDump` response: the router's own
+/// section, a fleet rollup (counters and histograms summed across
+/// shards), then each shard's exposition relabeled `shard="<k>"`. For
+/// the `events` selector: the router's JSONL followed by each reachable
+/// shard's (unreachable markers are comment lines and are skipped, so
+/// the dump stays line-by-line JSON-parseable).
+fn fleet_metrics_text(router_text: String, texts: &[Option<String>], selector: &str) -> String {
+    if selector == "events" {
+        let mut out = router_text;
+        for t in texts.iter().flatten() {
+            if !t.starts_with('#') {
+                out.push_str(t);
+            }
+        }
+        return out;
+    }
+    let shard_texts: Vec<String> = texts
+        .iter()
+        .enumerate()
+        .map(|(k, t)| t.clone().unwrap_or_else(|| format!("# shard {k} unreachable\n")))
+        .collect();
+    let mut out = String::from("# == router ==\n");
+    out.push_str(&router_text);
+    out.push_str("# == fleet (rollup of all shards) ==\n");
+    out.push_str(&crate::obs::rollup(&shard_texts));
+    for (k, t) in shard_texts.iter().enumerate() {
+        out.push_str(&format!("# == shard {k} ==\n"));
+        out.push_str(&crate::obs::relabel(t, "shard", &format!("{k}")));
+    }
+    out
 }
 
 /// Convenience wrapper: bind, route until shutdown.

@@ -92,7 +92,7 @@ use crate::serve::{
     SnapshotPolicy,
 };
 
-use super::conn::{self, ConnEvent, ConnTable};
+use super::conn::{self, ConnEvent, ConnTable, OutboxFlow};
 use super::wire::{Frame, Message, FLAG_FLUSH, FLAG_TICK};
 
 /// One network serve run, fully specified.
@@ -208,6 +208,26 @@ impl NetServer {
             core.set_session_secret(random_boot_secret());
         }
 
+        // observability: writer-outbox flow counters shared with the
+        // writer threads, plus the panic-time flight-recorder dump.
+        // Timing plane only — none of it is consulted by dispatch.
+        let flow = if core.obs().enabled() {
+            let reg = &core.obs().registry;
+            crate::obs::install_panic_dump(&core.obs().recorder);
+            OutboxFlow {
+                enqueued: reg.counter(
+                    "m2ru_outbox_frames_enqueued_total",
+                    "frames enqueued into per-connection writer outboxes",
+                ),
+                written: reg.counter(
+                    "m2ru_outbox_frames_written_total",
+                    "frames written to client sockets by writer threads",
+                ),
+            }
+        } else {
+            OutboxFlow::default()
+        };
+
         // acceptor + per-connection readers feed one bounded channel
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = sync_channel::<Event>(opts.run.net.queue_depth.max(1));
@@ -216,6 +236,7 @@ impl NetServer {
             tx.clone(),
             stop.clone(),
             opts.run.net.outbox_depth.max(1),
+            flow.clone(),
         );
         if opts.run.net.tick_ms > 0 {
             // wall-clock tick source (required when client_admin is off);
@@ -235,6 +256,8 @@ impl NetServer {
         // ---- the serve thread (this thread) -----------------------------
         let start = Instant::now();
         let mut table = ConnTable::new();
+        table.flow = flow;
+        table.recorder = core.obs().enabled().then(|| core.obs().recorder.clone());
         let mut total_conns: u64 = 0;
         let nx = opts.net.nx;
         let ny = opts.net.ny;
@@ -252,6 +275,7 @@ impl NetServer {
                         let done = core.drain_ready()?;
                         table.route_logits(done);
                         core.advance_tick();
+                        table.obs_tick = core.tick();
                         if checkpoint_every > 0 && core.tick() % checkpoint_every == 0 {
                             if let Some(dir) = &ckpt_dir {
                                 core.snapshot_async(dir, &policy)?;
@@ -326,8 +350,32 @@ impl NetServer {
                                 let sessions = core.store().len();
                                 let mut rep = core.report(sessions)?;
                                 rep.outbox_drops = table.drops.clone();
-                                let text = rep.lines().join("\n");
+                                // deterministic key=value lines (stable
+                                // order, machine-parseable); human-format
+                                // `lines()` stays on the CLI exit path
+                                let text = rep.kv_lines().join("\n");
                                 table.send(conn, &Message::Stats { text });
+                            }
+                            Message::MetricsDump { text: selector } => {
+                                if core.obs().enabled() {
+                                    let reg = core.obs().registry.clone();
+                                    reg.gauge(
+                                        "m2ru_outbox_occupancy",
+                                        "frames currently queued in writer outboxes",
+                                    )
+                                    .set(table.flow.occupancy() as f64);
+                                    let d = &table.drops;
+                                    for (name, v) in [
+                                        ("m2ru_outbox_drops_full_total", d.full),
+                                        ("m2ru_outbox_drops_timeout_total", d.timeout),
+                                        ("m2ru_outbox_drops_writer_failed_total", d.writer_failed),
+                                    ] {
+                                        reg.counter(name, "connections severed by outbox reason")
+                                            .set(v);
+                                    }
+                                }
+                                let text = core.metrics_text(&selector)?;
+                                table.send(conn, &Message::MetricsDump { text });
                             }
                             Message::Shutdown => {
                                 if client_admin {
@@ -358,6 +406,7 @@ impl NetServer {
                         table.route_logits(done);
                         if flags & FLAG_TICK != 0 {
                             core.advance_tick();
+                            table.obs_tick = core.tick();
                             if checkpoint_every > 0 && core.tick() % checkpoint_every == 0 {
                                 if let Some(dir) = &ckpt_dir {
                                     core.snapshot_async(dir, &policy)?;

@@ -7,7 +7,7 @@
 //! offset  size  field
 //! 0       4     magic    "M2RU"
 //! 4       2     version  1
-//! 6       1     kind     message discriminant (1..=8)
+//! 6       1     kind     message discriminant (1..=9)
 //! 7       1     flags    FLAG_TICK | FLAG_FLUSH
 //! 8       4     len      payload byte count (<= MAX_PAYLOAD)
 //! 12      len   payload  per-kind layout below
@@ -17,7 +17,8 @@
 //! n×f32}`, `StepLabeled{session u64, label u32, n u32, n×f32}`,
 //! `Ack{value u64}`, `Logits{session u64, pred u32, n u32, n×f32}`,
 //! `Stats{utf-8 bytes}` (the header's payload length delimits the
-//! text), `Shutdown{}` (empty), `Nop{}` (empty).
+//! text), `Shutdown{}` (empty), `Nop{}` (empty), `MetricsDump{utf-8
+//! bytes}` (same text layout as `Stats`).
 //!
 //! Flags drive the server's deterministic logical clock: `FLAG_TICK`
 //! marks the end of an admission wave (dispatch per the max-batch/
@@ -76,6 +77,13 @@ pub enum Message {
     /// lock-step (batch wait policy, TTL expiry, checkpoint cadence).
     /// Servers process the flags and send no response.
     Nop,
+    /// Observability exposition (DESIGN.md §13). Request (client →
+    /// server): `text` is the selector — `""`/`"prom"` for the
+    /// Prometheus exposition, `"events"` for the flight-recorder JSONL.
+    /// Response (server → client): the rendered dump. `Stats` (kind 6)
+    /// stays for compatibility with pre-§13 clients; this frame carries
+    /// the full registry instead of the human report.
+    MetricsDump { text: String },
 }
 
 impl Message {
@@ -90,6 +98,7 @@ impl Message {
             Message::Stats { .. } => 6,
             Message::Shutdown => 7,
             Message::Nop => 8,
+            Message::MetricsDump { .. } => 9,
         }
     }
 }
@@ -122,7 +131,7 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             p.u32(*pred);
             p.f32s(logits);
         }
-        Message::Stats { text } => p.raw(text.as_bytes()),
+        Message::Stats { text } | Message::MetricsDump { text } => p.raw(text.as_bytes()),
         Message::Shutdown | Message::Nop => {}
     }
     p.into_vec()
@@ -164,6 +173,12 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message> {
         }
         7 => Message::Shutdown,
         8 => Message::Nop,
+        9 => {
+            let bytes = c.take(c.remaining())?.to_vec();
+            let text = String::from_utf8(bytes)
+                .map_err(|_| anyhow::anyhow!("metrics text not utf-8"))?;
+            Message::MetricsDump { text }
+        }
         other => bail!("unknown message kind {other}"),
     };
     c.done()?;
@@ -273,6 +288,8 @@ mod tests {
         roundtrip(FLAG_FLUSH, Message::Shutdown);
         roundtrip(FLAG_TICK, Message::Nop);
         roundtrip(FLAG_TICK | FLAG_FLUSH, Message::Nop);
+        roundtrip(0, Message::MetricsDump { text: "events".to_string() });
+        roundtrip(0, Message::MetricsDump { text: "# TYPE m2ru_requests_total counter\n".into() });
     }
 
     #[test]

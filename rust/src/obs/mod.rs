@@ -1,0 +1,711 @@
+//! Serve-path observability (DESIGN.md §13): an atomic metrics registry,
+//! fixed-bucket log2 histograms for stage spans, and a bounded flight
+//! recorder of structured lifecycle events — std-only, no dependencies.
+//!
+//! ## Two planes, one hard rule
+//!
+//! Everything in this module lives on the **timing plane**: it observes
+//! the serve path but never feeds back into it. No dispatch decision, no
+//! batch boundary, no weight, no session-id ever reads an instrument.
+//! The enforced consequence (tests/obs_invariance.rs): the deterministic
+//! serve signature is bitwise-identical with observability on, off, or
+//! sampled, across worker and shard counts. This is the same separation
+//! [`crate::serve::ServeMetrics`] draws between deterministic counters
+//! and wall-clock latencies, extended to a live-scrapable registry.
+//!
+//! ## Registry
+//!
+//! [`Registry`] hands out three instrument kinds, all backed by plain
+//! atomics so the hot path pays one `fetch_add` per observation and the
+//! scrape path needs no locks beyond the registration list:
+//!
+//! * [`Counter`] — monotone `u64` (`_total` series). Mirror counters for
+//!   deterministic quantities (requests, batches, commits) are *set* at
+//!   render time from [`crate::serve::ServeMetrics`], so they are exact
+//!   even under sampling and cost the hot path nothing.
+//! * [`Gauge`] — an `f64` point-in-time value (occupancy, commit lag,
+//!   projected lifespan, windowed accuracy).
+//! * [`Histogram`] — log2 buckets (`le = 2^i`): one `leading_zeros` and
+//!   three relaxed `fetch_add`s per observation, no allocation, no lock.
+//!   Stage spans (queue wait, kernel step, snapshot write) land here.
+//!
+//! Rendering ([`Registry::render`]) produces Prometheus text exposition
+//! in registration order — stable output for diffing and for the
+//! router's per-shard relabel + fleet rollup ([`relabel`], [`rollup`]).
+//!
+//! ## Flight recorder
+//!
+//! [`FlightRecorder`] keeps the last `capacity` structured events
+//! (session create/evict, connection sever with reason, shard
+//! down/restart, checkpoint epochs) in a ring, dumpable as JSONL on
+//! demand (the `events` selector of the `MetricsDump` wire frame) or on
+//! panic ([`install_panic_dump`]). Events carry the logical tick, never
+//! a wall clock, so a dump is meaningful next to the deterministic log.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------- mode
+
+/// How much the serve path records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObsMode {
+    /// Record nothing; instruments exist but are never touched from the
+    /// hot path (render-time mirrors still work).
+    Off,
+    /// Record every observation (the default — the whole layer is cheap
+    /// enough to leave enabled).
+    On,
+    /// Record every `sample_every`-th span observation; counters and
+    /// render-time mirrors stay exact.
+    Sampled,
+}
+
+impl ObsMode {
+    /// Parse the `[obs] mode` config value.
+    pub fn parse(s: &str) -> Result<ObsMode> {
+        match s {
+            "off" => Ok(ObsMode::Off),
+            "on" => Ok(ObsMode::On),
+            "sampled" => Ok(ObsMode::Sampled),
+            other => bail!("unknown obs mode `{other}` (expected off|on|sampled)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ObsMode::Off => "off",
+            ObsMode::On => "on",
+            ObsMode::Sampled => "sampled",
+        }
+    }
+}
+
+// ---------------------------------------------------------- instruments
+
+/// Monotone counter (`_total`). Clones share the underlying atomic.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the value — for render-time mirrors of deterministic
+    /// counters that are authoritative elsewhere (`ServeMetrics`).
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time `f64` value. Clones share the underlying atomic.
+#[derive(Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: f64) {
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + d).to_bits())
+        });
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Bucket count of [`Histogram`]: upper bounds `2^0 .. 2^31` plus one
+/// overflow (`+Inf`) bucket. 2^31 µs is ~36 minutes — far beyond any
+/// span this registry times — so the overflow bucket stays a safety net.
+pub const HIST_BUCKETS: usize = 33;
+
+struct HistInner {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Fixed log2-bucket histogram: bucket `i` covers `(2^(i-1), 2^i]`
+/// (bucket 0 covers `[0, 1]`, the last bucket everything above `2^31`).
+/// One observation is a `leading_zeros` plus three relaxed `fetch_add`s.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram(Arc::new(HistInner {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+}
+
+/// Index of the log2 bucket value `v` falls in.
+pub fn bucket_of(v: u64) -> usize {
+    if v <= 1 {
+        return 0;
+    }
+    // ceil(log2(v)) for v >= 2
+    let b = (64 - (v - 1).leading_zeros()) as usize;
+    b.min(HIST_BUCKETS - 1)
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        self.0.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket (non-cumulative) counts, index = [`bucket_of`].
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+// ------------------------------------------------------------- registry
+
+enum Instrument {
+    C(Counter),
+    G(Gauge),
+    H(Histogram),
+}
+
+impl Instrument {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Instrument::C(_) => "counter",
+            Instrument::G(_) => "gauge",
+            Instrument::H(_) => "histogram",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    inst: Instrument,
+}
+
+/// Named instruments in registration order. Registration takes a lock;
+/// the returned handles never do — hot paths hold [`Counter`]/[`Gauge`]/
+/// [`Histogram`] clones directly, the registry is only walked at render
+/// time. Registration is idempotent by name (a second request for an
+/// existing name of the same kind returns a handle to the same atomic).
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        let mut es = self.entries.lock().expect("obs registry poisoned");
+        if let Some(e) = es.iter().find(|e| e.name == name) {
+            match &e.inst {
+                Instrument::C(c) => return c.clone(),
+                other => panic!("obs metric `{name}` already registered as {}", other.type_name()),
+            }
+        }
+        let c = Counter::default();
+        es.push(Entry { name: name.into(), help: help.into(), inst: Instrument::C(c.clone()) });
+        c
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        let mut es = self.entries.lock().expect("obs registry poisoned");
+        if let Some(e) = es.iter().find(|e| e.name == name) {
+            match &e.inst {
+                Instrument::G(g) => return g.clone(),
+                other => panic!("obs metric `{name}` already registered as {}", other.type_name()),
+            }
+        }
+        let g = Gauge::default();
+        es.push(Entry { name: name.into(), help: help.into(), inst: Instrument::G(g.clone()) });
+        g
+    }
+
+    pub fn histogram(&self, name: &str, help: &str) -> Histogram {
+        let mut es = self.entries.lock().expect("obs registry poisoned");
+        if let Some(e) = es.iter().find(|e| e.name == name) {
+            match &e.inst {
+                Instrument::H(h) => return h.clone(),
+                other => panic!("obs metric `{name}` already registered as {}", other.type_name()),
+            }
+        }
+        let h = Histogram::default();
+        es.push(Entry { name: name.into(), help: help.into(), inst: Instrument::H(h.clone()) });
+        h
+    }
+
+    /// Prometheus text exposition, in registration order.
+    pub fn render(&self) -> String {
+        let es = self.entries.lock().expect("obs registry poisoned");
+        let mut out = String::new();
+        for e in es.iter() {
+            out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+            out.push_str(&format!("# TYPE {} {}\n", e.name, e.inst.type_name()));
+            match &e.inst {
+                Instrument::C(c) => out.push_str(&format!("{} {}\n", e.name, c.get())),
+                Instrument::G(g) => out.push_str(&format!("{} {}\n", e.name, fmt_f64(g.get()))),
+                Instrument::H(h) => {
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, c) in counts.iter().enumerate() {
+                        cum += c;
+                        let le = if i + 1 == HIST_BUCKETS {
+                            "+Inf".to_string()
+                        } else {
+                            (1u64 << i).to_string()
+                        };
+                        out.push_str(&format!("{}_bucket{{le=\"{le}\"}} {cum}\n", e.name));
+                    }
+                    out.push_str(&format!("{}_sum {}\n", e.name, h.sum()));
+                    out.push_str(&format!("{}_count {}\n", e.name, h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Render an `f64` gauge value the way Prometheus text expects (no
+/// exponent games needed for our value ranges; non-finite as +Inf/-Inf/NaN).
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else {
+        format!("{v}")
+    }
+}
+
+// -------------------------------------------- fleet relabel and rollup
+
+/// Inject one `label="value"` pair into every sample line of a rendered
+/// exposition (comment lines pass through). Used by the router to mark
+/// each shard's series before concatenating them into the fleet dump.
+pub fn relabel(text: &str, label: &str, value: &str) -> String {
+    let mut out = String::with_capacity(text.len() + 64);
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            out.push_str(line);
+            out.push('\n');
+            continue;
+        }
+        // a sample line is `name[{labels}] value`; the name ends at the
+        // first `{` or space
+        let cut = line.find(['{', ' ']).unwrap_or(line.len());
+        let (name, rest) = line.split_at(cut);
+        if rest.starts_with('{') {
+            out.push_str(&format!("{name}{{{label}=\"{value}\",{}\n", &rest[1..]));
+        } else {
+            out.push_str(&format!("{name}{{{label}=\"{value}\"}}{rest}\n"));
+        }
+    }
+    out
+}
+
+/// Sum counter and histogram series by name across several shard
+/// expositions, producing the fleet-rollup section. Gauges are skipped —
+/// a summed point-in-time value is rarely meaningful; per-shard gauges
+/// stay visible in the relabeled sections. Series order follows first
+/// appearance, so rollups of identically-shaped shards are stable.
+pub fn rollup(texts: &[String]) -> String {
+    // (series key, summed value), plus the TYPE map gathered on the way
+    let mut order: Vec<String> = Vec::new();
+    let mut sums: std::collections::HashMap<String, f64> = std::collections::HashMap::new();
+    let mut kinds: std::collections::HashMap<String, String> = std::collections::HashMap::new();
+    for text in texts {
+        let mut current_kind = String::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().unwrap_or("").to_string();
+                current_kind = it.next().unwrap_or("").to_string();
+                kinds.insert(name, current_kind.clone());
+                continue;
+            }
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if current_kind != "counter" && current_kind != "histogram" {
+                continue;
+            }
+            let Some(at) = line.rfind(' ') else { continue };
+            let (series, val) = line.split_at(at);
+            let Ok(v) = val.trim().parse::<f64>() else { continue };
+            match sums.get_mut(series) {
+                Some(s) => *s += v,
+                None => {
+                    order.push(series.to_string());
+                    sums.insert(series.to_string(), v);
+                }
+            }
+        }
+    }
+    let mut out = String::new();
+    let mut last_name = String::new();
+    for series in &order {
+        let cut = series.find(['{', ' ']).unwrap_or(series.len());
+        let name = &series[..cut];
+        if *name != last_name {
+            if let Some(kind) = kinds.get(name) {
+                out.push_str(&format!("# TYPE {name} {kind}\n"));
+            }
+            last_name = name.to_string();
+        }
+        out.push_str(&format!("{series} {}\n", fmt_f64(sums[series])));
+    }
+    out
+}
+
+// ------------------------------------------------------ flight recorder
+
+/// One structured lifecycle event. `tick` is the logical serve clock at
+/// record time (wall clocks never enter the recorder).
+#[derive(Clone, Debug)]
+pub struct FlightEvent {
+    pub seq: u64,
+    pub tick: u64,
+    pub kind: &'static str,
+    pub fields: Vec<(&'static str, String)>,
+}
+
+struct FlightInner {
+    ring: VecDeque<FlightEvent>,
+    capacity: usize,
+    next_seq: u64,
+    dropped: u64,
+}
+
+/// Bounded ring of [`FlightEvent`]s: the last `capacity` lifecycle events
+/// (session create/evict, connection sever, shard down/restart,
+/// checkpoint epochs), dumpable as JSONL on demand or on panic. Events
+/// are rare relative to requests, so a mutex-guarded ring is cheap; the
+/// hot dispatch loop itself records no events.
+pub struct FlightRecorder {
+    inner: Mutex<FlightInner>,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            inner: Mutex::new(FlightInner {
+                ring: VecDeque::with_capacity(capacity.max(1)),
+                capacity: capacity.max(1),
+                next_seq: 0,
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub fn record(&self, tick: u64, kind: &'static str, fields: Vec<(&'static str, String)>) {
+        let mut g = self.inner.lock().expect("flight recorder poisoned");
+        if g.ring.len() == g.capacity {
+            g.ring.pop_front();
+            g.dropped += 1;
+        }
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        g.ring.push_back(FlightEvent { seq, tick, kind, fields });
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("flight recorder poisoned").ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted from the ring since boot.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().expect("flight recorder poisoned").dropped
+    }
+
+    /// The retained events as JSON Lines, oldest first — one object per
+    /// line: `{"seq":N,"tick":N,"kind":"...","field":"value",...}`.
+    pub fn dump_jsonl(&self) -> String {
+        let g = self.inner.lock().expect("flight recorder poisoned");
+        let mut out = String::new();
+        for e in g.ring.iter() {
+            out.push_str(&format!("{{\"seq\":{},\"tick\":{},\"kind\":\"{}\"", e.seq, e.tick, e.kind));
+            for (k, v) in &e.fields {
+                out.push_str(&format!(",\"{}\":\"{}\"", k, json_escape(v)));
+            }
+            out.push_str("}\n");
+        }
+        out
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control bytes).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------ panic dumping
+
+static PANIC_RECORDERS: Mutex<Vec<Weak<FlightRecorder>>> = Mutex::new(Vec::new());
+static PANIC_HOOK: OnceLock<()> = OnceLock::new();
+
+/// Register a recorder for dumping to stderr if the process panics. The
+/// hook chains the previous panic hook (installed once, process-wide);
+/// dropped recorders unregister themselves lazily via `Weak`.
+pub fn install_panic_dump(recorder: &Arc<FlightRecorder>) {
+    PANIC_RECORDERS
+        .lock()
+        .expect("panic recorder list poisoned")
+        .push(Arc::downgrade(recorder));
+    PANIC_HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if let Ok(mut list) = PANIC_RECORDERS.lock() {
+                list.retain(|w| w.strong_count() > 0);
+                for w in list.iter() {
+                    if let Some(rec) = w.upgrade() {
+                        let dump = rec.dump_jsonl();
+                        if !dump.is_empty() {
+                            eprintln!("[obs] flight recorder at panic:\n{dump}");
+                        }
+                    }
+                }
+            }
+            prev(info);
+        }));
+    });
+}
+
+// ------------------------------------------------------------- sampler
+
+/// The per-component observability handle: mode + sampling decision +
+/// shared registry and flight recorder. Cheap to clone; everything
+/// inside is behind `Arc`s.
+#[derive(Clone)]
+pub struct Obs {
+    mode: ObsMode,
+    sample_every: u64,
+    sample_ctr: Arc<AtomicU64>,
+    pub registry: Arc<Registry>,
+    pub recorder: Arc<FlightRecorder>,
+}
+
+impl Obs {
+    pub fn new(mode: ObsMode, sample_every: u64, flight_capacity: usize) -> Obs {
+        Obs {
+            mode,
+            sample_every: sample_every.max(1),
+            sample_ctr: Arc::new(AtomicU64::new(0)),
+            registry: Arc::new(Registry::new()),
+            recorder: Arc::new(FlightRecorder::new(flight_capacity)),
+        }
+    }
+
+    /// Build from the `[obs]` config block.
+    pub fn from_cfg(cfg: &crate::config::ObsConfig) -> Result<Obs> {
+        Ok(Obs::new(ObsMode::parse(&cfg.mode)?, cfg.sample_every, cfg.flight_capacity))
+    }
+
+    pub fn mode(&self) -> ObsMode {
+        self.mode
+    }
+
+    /// Anything at all recorded?
+    pub fn enabled(&self) -> bool {
+        self.mode != ObsMode::Off
+    }
+
+    /// Should this span observation be recorded? `Off` → never, `On` →
+    /// always, `Sampled` → every `sample_every`-th call. The decision
+    /// only gates *recording* — it can never influence dispatch.
+    pub fn should_sample(&self) -> bool {
+        match self.mode {
+            ObsMode::Off => false,
+            ObsMode::On => true,
+            ObsMode::Sampled => {
+                self.sample_ctr.fetch_add(1, Ordering::Relaxed) % self.sample_every == 0
+            }
+        }
+    }
+
+    /// Record a flight event (no-op when off).
+    pub fn event(&self, tick: u64, kind: &'static str, fields: Vec<(&'static str, String)>) {
+        if self.enabled() {
+            self.recorder.record(tick, kind, fields);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_render_in_registration_order() {
+        let r = Registry::new();
+        let c = r.counter("m2ru_test_total", "a counter");
+        let g = r.gauge("m2ru_test_gauge", "a gauge");
+        let h = r.histogram("m2ru_test_us", "a span");
+        c.add(3);
+        g.set(1.5);
+        h.observe(5);
+        let text = r.render();
+        let c_at = text.find("m2ru_test_total 3").expect("counter sample");
+        let g_at = text.find("m2ru_test_gauge 1.5").expect("gauge sample");
+        let h_at = text.find("m2ru_test_us_count 1").expect("histogram count");
+        assert!(c_at < g_at && g_at < h_at, "registration order must be render order");
+        assert!(text.contains("# TYPE m2ru_test_us histogram"));
+        // 5 lands in the (4, 8] bucket; cumulative from le=8 on
+        assert!(text.contains("m2ru_test_us_bucket{le=\"4\"} 0"));
+        assert!(text.contains("m2ru_test_us_bucket{le=\"8\"} 1"));
+        assert!(text.contains("m2ru_test_us_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("m2ru_test_us_sum 5"));
+    }
+
+    #[test]
+    fn registration_is_idempotent_by_name() {
+        let r = Registry::new();
+        let a = r.counter("m2ru_same_total", "first");
+        let b = r.counter("m2ru_same_total", "second");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same name must share the atomic");
+        assert_eq!(r.render().matches("# TYPE m2ru_same_total").count(), 1);
+    }
+
+    #[test]
+    fn log2_buckets_partition_the_value_range() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(5), 3);
+        assert_eq!(bucket_of(1 << 31), 31);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // every boundary value lands in the bucket whose `le` admits it
+        for i in 0..31 {
+            assert!(bucket_of(1u64 << i) <= i.max(1) as usize);
+        }
+    }
+
+    #[test]
+    fn histogram_bucket_counts_sum_to_observations() {
+        let h = Histogram::default();
+        let mut expect_sum = 0u64;
+        for v in [0u64, 1, 2, 7, 63, 64, 65, 4096, 1 << 20, u64::MAX / 2] {
+            h.observe(v);
+            expect_sum = expect_sum.wrapping_add(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum(), expect_sum);
+    }
+
+    #[test]
+    fn relabel_injects_into_bare_and_labeled_samples() {
+        let text = "# TYPE a counter\na_total 5\nb_bucket{le=\"4\"} 2\n";
+        let got = relabel(text, "shard", "1");
+        assert!(got.contains("a_total{shard=\"1\"} 5"));
+        assert!(got.contains("b_bucket{shard=\"1\",le=\"4\"} 2"));
+        assert!(got.contains("# TYPE a counter"), "comments pass through");
+    }
+
+    #[test]
+    fn rollup_sums_counters_and_histograms_but_not_gauges() {
+        let shard = |n: u64| {
+            format!(
+                "# TYPE m2ru_req_total counter\nm2ru_req_total {n}\n\
+                 # TYPE m2ru_lag gauge\nm2ru_lag {n}\n\
+                 # TYPE m2ru_span histogram\nm2ru_span_bucket{{le=\"2\"}} {n}\nm2ru_span_count {n}\n"
+            )
+        };
+        let got = rollup(&[shard(2), shard(3)]);
+        assert!(got.contains("m2ru_req_total 5"));
+        assert!(got.contains("m2ru_span_bucket{le=\"2\"} 5"));
+        assert!(got.contains("m2ru_span_count 5"));
+        assert!(!got.contains("m2ru_lag"), "gauges must not be summed");
+    }
+
+    #[test]
+    fn flight_recorder_ring_is_bounded_and_dumps_jsonl() {
+        let rec = FlightRecorder::new(3);
+        for i in 0..5u64 {
+            rec.record(i, "session_create", vec![("session", format!("{i}"))]);
+        }
+        assert_eq!(rec.len(), 3);
+        assert_eq!(rec.dropped(), 2);
+        let dump = rec.dump_jsonl();
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(
+            lines[0],
+            "{\"seq\":2,\"tick\":2,\"kind\":\"session_create\",\"session\":\"2\"}"
+        );
+        // every line is a JSON object with balanced quotes
+        for l in &lines {
+            assert!(l.starts_with('{') && l.ends_with('}'));
+            assert_eq!(l.matches('"').count() % 2, 0);
+        }
+    }
+
+    #[test]
+    fn json_escaping_keeps_lines_parseable() {
+        let rec = FlightRecorder::new(4);
+        rec.record(0, "conn_severed", vec![("reason", "peer said \"bye\"\nearly".to_string())]);
+        let dump = rec.dump_jsonl();
+        assert_eq!(dump.lines().count(), 1, "escapes must not split the line");
+        assert!(dump.contains("peer said \\\"bye\\\"\\nearly"));
+    }
+
+    #[test]
+    fn sampled_mode_records_every_nth() {
+        let obs = Obs::new(ObsMode::Sampled, 4, 8);
+        let hits = (0..16).filter(|_| obs.should_sample()).count();
+        assert_eq!(hits, 4);
+        assert!(!Obs::new(ObsMode::Off, 1, 8).should_sample());
+        assert!(Obs::new(ObsMode::On, 1, 8).should_sample());
+    }
+}

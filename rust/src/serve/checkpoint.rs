@@ -328,7 +328,9 @@ fn dec_wear(r: &mut LeReader) -> Result<Option<WearState>> {
 }
 
 /// Deterministic metrics only (wall clock and latency samples are
-/// measurements, not state).
+/// measurements, not state). `latency_overwrites` is likewise excluded
+/// on purpose: it describes the discarded latency samples, so a restored
+/// server starts with a fresh, unwrapped window (decode leaves it 0).
 fn enc_metrics(w: &mut LeWriter, m: &ServeMetrics) {
     w.u64(m.requests);
     w.u64(m.batches);

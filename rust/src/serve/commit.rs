@@ -42,6 +42,7 @@ use anyhow::{anyhow, Result};
 use crate::backend::{ComputeBackend, WearState};
 use crate::coordinator::ParallelEngine;
 use crate::nn::{MiruParams, SeqBatch};
+use crate::obs::Histogram;
 
 use super::checkpoint::{write_snapshot_job, SnapshotJob};
 
@@ -143,9 +144,12 @@ impl Committer {
     /// Move `engine` onto a fresh committer thread. Returns the handle,
     /// the boot weight snapshot (generation 0) and the boot substrate
     /// status, both read before the engine crosses threads.
+    /// `snapshot_write_us` (when observability is on) times each durable
+    /// snapshot write on the committer thread — timing plane only.
     pub(crate) fn spawn(
         engine: ParallelEngine,
         queue_depth: usize,
+        snapshot_write_us: Option<Histogram>,
     ) -> (Committer, Arc<WeightSnapshot>, SubstrateStatus) {
         let snap =
             Arc::new(WeightSnapshot { gen: 0, params: engine.backend().effective_params() });
@@ -156,7 +160,7 @@ impl Committer {
         let thread_cell = cell.clone();
         let handle = std::thread::Builder::new()
             .name("m2ru-committer".to_string())
-            .spawn(move || committer_loop(engine, thread_cell, jrx, rtx))
+            .spawn(move || committer_loop(engine, thread_cell, jrx, rtx, snapshot_write_us))
             .expect("spawning the committer thread");
         (Committer { jobs: Some(jtx), results: rrx, cell, handle: Some(handle) }, snap, status)
     }
@@ -226,6 +230,7 @@ fn committer_loop(
     cell: Arc<WeightCell>,
     jobs: Receiver<Job>,
     out: Sender<Outcome>,
+    snapshot_write_us: Option<Histogram>,
 ) {
     while let Ok(job) = jobs.recv() {
         let outcome = match job {
@@ -242,10 +247,17 @@ fn committer_loop(
                     Err(e) => Outcome::Failed { what: "commit", error: e.to_string() },
                 }
             }
-            Job::Snapshot(job) => match write_snapshot_job(job) {
-                Ok(path) => Outcome::Snapshot { path },
-                Err(e) => Outcome::Failed { what: "snapshot", error: e.to_string() },
-            },
+            Job::Snapshot(job) => {
+                let t0 = snapshot_write_us.as_ref().map(|_| std::time::Instant::now());
+                let res = write_snapshot_job(job);
+                if let (Some(h), Some(t)) = (&snapshot_write_us, t0) {
+                    h.observe(t.elapsed().as_micros() as u64);
+                }
+                match res {
+                    Ok(path) => Outcome::Snapshot { path },
+                    Err(e) => Outcome::Failed { what: "snapshot", error: e.to_string() },
+                }
+            }
             Job::Restore { params, wear } => {
                 let mut res = engine.restore_params(&params);
                 if res.is_ok() {

@@ -41,6 +41,7 @@ use crate::config::{NetConfig, RunConfig};
 use crate::coordinator::ParallelEngine;
 use crate::linalg::{argmax_rows, Mat};
 use crate::nn::MiruParams;
+use crate::obs::{Histogram, Obs, Registry};
 
 use crate::backend::WearState;
 
@@ -70,6 +71,52 @@ pub struct CompletedStep {
     /// Weight generation (commits applied) this step was computed
     /// against — the ordering witness of the async commit pipeline.
     pub gen: u64,
+}
+
+/// Pre-registered span instruments for the dispatch hot path. Handles
+/// are lock-free atomic clones; the registry itself is only walked at
+/// render time. Every observation is gated by [`Obs::should_sample`] and
+/// none ever feeds back into dispatch (timing plane only).
+pub(crate) struct ServeSpans {
+    /// Ticks each request waited in the batcher queue before dispatch.
+    queue_wait_ticks: Histogram,
+    /// Wall time of one padded-batch dispatch (gather → step → scatter →
+    /// scoring), µs.
+    batch_dispatch_us: Histogram,
+    /// Wall time of the kernel step alone, µs.
+    kernel_step_us: Histogram,
+    /// Enqueue→completion wall latency per request, µs.
+    request_latency_us: Histogram,
+    /// Commit generations the dispatcher was behind when a batch reached
+    /// its visibility barrier (0 = commit pipeline fully caught up).
+    commit_lag: Histogram,
+}
+
+impl ServeSpans {
+    fn register(reg: &Registry) -> ServeSpans {
+        ServeSpans {
+            queue_wait_ticks: reg.histogram(
+                "m2ru_queue_wait_ticks",
+                "logical ticks a request spent queued in the batcher before dispatch",
+            ),
+            batch_dispatch_us: reg.histogram(
+                "m2ru_batch_dispatch_us",
+                "wall microseconds of one padded-batch dispatch end to end",
+            ),
+            kernel_step_us: reg.histogram(
+                "m2ru_kernel_step_us",
+                "wall microseconds of the batched recurrent kernel step",
+            ),
+            request_latency_us: reg.histogram(
+                "m2ru_request_latency_us",
+                "wall microseconds from request enqueue to completion",
+            ),
+            commit_lag: reg.histogram(
+                "m2ru_commit_lag_generations",
+                "commit generations behind at the batch visibility barrier",
+            ),
+        }
+    }
 }
 
 /// The serve loop's entire mutable state.
@@ -120,7 +167,23 @@ pub struct ServeCore {
     pub(crate) snapshots_taken: u64,
     /// Where the most recent completed snapshot landed.
     pub(crate) last_snapshot_path: Option<PathBuf>,
+    /// Observability handle (registry + flight recorder + sampling
+    /// policy). Strictly timing-plane: nothing here is ever read by
+    /// dispatch, so the serve signature is identical on/off/sampled.
+    pub(crate) obs: Obs,
+    /// Hot-path span instruments registered at boot.
+    pub(crate) spans: ServeSpans,
+    /// Outcomes of recent labeled steps (sliding accuracy window for the
+    /// `m2ru_labeled_accuracy_window` gauge). Observability state only.
+    obs_acc_window: std::collections::VecDeque<bool>,
+    /// `[obs]` periodic file snapshot: target path ("" disables).
+    obs_snapshot_path: String,
+    /// Write the obs snapshot every this many ticks (0 disables).
+    obs_snapshot_every: u64,
 }
+
+/// Labeled steps the sliding accuracy-window gauge averages over.
+const OBS_ACC_WINDOW: usize = 256;
 
 impl ServeCore {
     /// Build the full serve stack from a run configuration (backend via
@@ -144,8 +207,21 @@ impl ServeCore {
         let read_fork = backend.fork().with_context(|| {
             format!("backend `{}` cannot serve streams (read-path fork required)", run.backend)
         })?;
-        let (committer, weights, status) =
-            Committer::spawn(ParallelEngine::new(backend, run.workers), cfg.commit_queue_depth);
+        let obs = Obs::from_cfg(&run.obs).context("building the observability layer")?;
+        let spans = ServeSpans::register(&obs.registry);
+        let snapshot_write_us = obs.enabled().then(|| {
+            obs.registry.histogram(
+                "m2ru_snapshot_write_us",
+                "wall microseconds writing one durable snapshot on the committer thread",
+            )
+        });
+        let (committer, weights, status) = Committer::spawn(
+            ParallelEngine::new(backend, run.workers),
+            cfg.commit_queue_depth,
+            snapshot_write_us,
+        );
+        let mut store = SessionStore::new(net.nh, net.nx, net.nt, cfg.capacity, cfg.ttl);
+        store.set_recorder(obs.enabled().then(|| obs.recorder.clone()));
         Ok(ServeCore {
             stepper: ParallelEngine::new(read_fork, run.workers),
             committer,
@@ -154,7 +230,7 @@ impl ServeCore {
             applied_gen: 0,
             status,
             commit_sync: false,
-            store: SessionStore::new(net.nh, net.nx, net.nt, cfg.capacity, cfg.ttl),
+            store,
             batcher: DynamicBatcher::new(cfg.max_batch, cfg.max_wait),
             learner: OnlineLearner::new(net.nt, net.nx, &cfg, run.seed),
             metrics: ServeMetrics::default(),
@@ -168,7 +244,19 @@ impl ServeCore {
             next_delta_seq: 1,
             snapshots_taken: 0,
             last_snapshot_path: None,
+            obs,
+            spans,
+            obs_acc_window: std::collections::VecDeque::with_capacity(OBS_ACC_WINDOW),
+            obs_snapshot_path: run.obs.snapshot_path.clone(),
+            obs_snapshot_every: run.obs.snapshot_every,
         })
+    }
+
+    /// The observability handle (registry + flight recorder). Frontends
+    /// use it to register their own instruments (outbox occupancy,
+    /// connection events) against the same registry.
+    pub fn obs(&self) -> &Obs {
+        &self.obs
     }
 
     /// The key of this core's session-id space.
@@ -202,6 +290,9 @@ impl ServeCore {
     /// Advance the logical clock by one tick (end of a frontend wave).
     pub fn advance_tick(&mut self) {
         self.tick += 1;
+        if self.obs_snapshot_every > 0 && self.tick % self.obs_snapshot_every == 0 {
+            self.write_obs_snapshot();
+        }
     }
 
     /// The network shapes this core serves.
@@ -281,6 +372,7 @@ impl ServeCore {
     /// in-flight commits first so loss/wear metrics are complete.
     pub fn report(&mut self, sessions: usize) -> Result<super::ServeReport> {
         self.sync_commits()?;
+        let obs_lines = self.obs_report_lines()?;
         Ok(super::ServeReport {
             metrics: self.metrics.clone(),
             store: self.store.stats.clone(),
@@ -292,7 +384,173 @@ impl ServeCore {
             lifespan_years: self.status.lifespan_years,
             completed: Vec::new(),
             outbox_drops: Default::default(),
+            obs_lines,
         })
+    }
+
+    /// Registry-derived wear / lifespan / commit-pipeline report lines.
+    /// Empty when observability is off (the report then falls back to
+    /// the substrate's ad-hoc stat strings).
+    fn obs_report_lines(&mut self) -> Result<Vec<String>> {
+        if !self.obs.enabled() {
+            return Ok(Vec::new());
+        }
+        self.set_wear_gauges()?;
+        self.refresh_gauges();
+        let reg = self.obs.registry.clone();
+        let mut out = Vec::new();
+        let writes = reg.counter("m2ru_wear_device_writes_total", "").get();
+        let skipped = reg.counter("m2ru_wear_writes_skipped_total", "").get();
+        let steps = reg.counter("m2ru_wear_program_steps_total", "").get();
+        if steps > 0 || writes > 0 {
+            out.push(format!(
+                "wear: writes={writes} skipped={skipped} steps={steps} rationed_cols={} \
+                 col_writes[min/mean/max]={}/{:.1}/{}",
+                self.metrics.wear_rationed,
+                reg.gauge("m2ru_wear_column_writes_min", "").get() as u64,
+                reg.gauge("m2ru_wear_column_writes_mean", "").get(),
+                reg.gauge("m2ru_wear_column_writes_max", "").get() as u64,
+            ));
+        }
+        let lag_n = self.spans.commit_lag.count();
+        let lag_mean = self.spans.commit_lag.sum() as f64 / lag_n.max(1) as f64;
+        out.push(format!(
+            "commit pipeline: enqueued={} applied={} lag_mean={lag_mean:.2} gens (n={lag_n})",
+            self.enqueued_gen, self.applied_gen
+        ));
+        Ok(out)
+    }
+
+    // ---------------------------------------------- observability
+
+    /// The metrics exposition for the `MetricsDump` wire frame and the
+    /// CLI. Selector `""`/`"prom"` renders the Prometheus text
+    /// exposition (after refreshing the render-time mirror counters and
+    /// the wear gauges); `"events"` dumps the flight recorder as JSONL.
+    pub fn metrics_text(&mut self, selector: &str) -> Result<String> {
+        if selector == "events" {
+            return Ok(self.obs.recorder.dump_jsonl());
+        }
+        if !self.obs.enabled() {
+            return Ok("# observability disabled (obs.mode = \"off\")\n".to_string());
+        }
+        self.sync_commits()?;
+        self.set_wear_gauges()?;
+        self.refresh_gauges();
+        Ok(self.obs.registry.render())
+    }
+
+    /// Set the render-time mirrors of the deterministic counters from
+    /// their authoritative sources ([`ServeMetrics`], the store, the
+    /// learner). Mirrors are exact in every mode — they are *set*, not
+    /// incremented, so sampling never skews them — and cost the dispatch
+    /// hot path nothing.
+    pub(crate) fn refresh_gauges(&mut self) {
+        if !self.obs.enabled() {
+            return;
+        }
+        let r = self.obs.registry.clone();
+        let m = &self.metrics;
+        r.counter("m2ru_requests_total", "requests completed").set(m.requests);
+        r.counter("m2ru_batches_total", "padded batches dispatched").set(m.batches);
+        r.counter("m2ru_valid_rows_total", "dispatched rows carrying a request").set(m.valid_rows);
+        r.counter("m2ru_padded_rows_total", "dispatched rows including padding")
+            .set(m.padded_rows);
+        r.counter("m2ru_labeled_total", "labeled steps observed").set(m.labeled);
+        r.counter("m2ru_labeled_correct_total", "labeled steps predicted correctly")
+            .set(m.labeled_correct);
+        r.counter("m2ru_online_updates_total", "online training commits").set(m.online_updates);
+        r.counter("m2ru_latency_ring_overwrites_total", "latency samples aged out of the window")
+            .set(m.latency_overwrites);
+        r.counter("m2ru_commits_enqueued_total", "commit generations handed to the committer")
+            .set(self.enqueued_gen);
+        r.counter("m2ru_commits_applied_total", "commit generations applied and absorbed")
+            .set(self.applied_gen);
+        r.gauge("m2ru_commit_lag", "commit generations currently in flight")
+            .set((self.enqueued_gen - self.applied_gen) as f64);
+        let s = &self.store.stats;
+        r.counter("m2ru_sessions_created_total", "sessions created").set(s.created);
+        r.counter("m2ru_sessions_evicted_lru_total", "sessions LRU-evicted").set(s.evicted_lru);
+        r.counter("m2ru_sessions_expired_ttl_total", "sessions TTL-expired").set(s.expired_ttl);
+        r.counter("m2ru_session_hits_total", "session lookups that hit").set(s.hits);
+        r.counter("m2ru_session_misses_total", "session lookups that missed").set(s.misses);
+        r.gauge("m2ru_sessions_live", "sessions currently resident").set(self.store.len() as f64);
+        r.gauge("m2ru_replay_segments", "labeled segments resident in the replay buffer")
+            .set(self.learner.replay_segments() as f64);
+        r.counter("m2ru_wear_rationed_cols_total", "columns rationed by the wear guard")
+            .set(self.learner.rationed_cols);
+        let acc = if self.obs_acc_window.is_empty() {
+            0.0
+        } else {
+            self.obs_acc_window.iter().filter(|&&c| c).count() as f64
+                / self.obs_acc_window.len() as f64
+        };
+        r.gauge(
+            "m2ru_labeled_accuracy_window",
+            "accuracy over the most recent labeled steps (sliding window)",
+        )
+        .set(acc);
+        if let Some(y) = self.status.lifespan_years {
+            r.gauge("m2ru_projected_lifespan_years", "projected device lifespan @ 1 kHz commits")
+                .set(y);
+        }
+        r.gauge("m2ru_tick", "logical serve tick").set(self.tick as f64);
+        r.counter("m2ru_flight_events_dropped_total", "flight events evicted from the ring")
+            .set(self.obs.recorder.dropped());
+    }
+
+    /// Refresh the wear gauges from the substrate's durable wear record
+    /// (one committer round-trip; scrape path only, never the hot path).
+    /// Always registers the series so the exposition schema is stable
+    /// across backends; substrates without wear accounting report zeros.
+    fn set_wear_gauges(&mut self) -> Result<()> {
+        if !self.obs.enabled() {
+            return Ok(());
+        }
+        let wear = self.fetch_wear()?;
+        let r = self.obs.registry.clone();
+        let writes = r.counter("m2ru_wear_device_writes_total", "devices programmed cumulatively");
+        let skipped = r.counter("m2ru_wear_writes_skipped_total", "device writes skipped (ζ)");
+        let steps = r.counter("m2ru_wear_program_steps_total", "Ziksa programming steps");
+        let col_min = r.gauge("m2ru_wear_column_writes_min", "least-worn hidden-crossbar column");
+        let col_mean = r.gauge("m2ru_wear_column_writes_mean", "mean hidden-crossbar column wear");
+        let col_max = r.gauge("m2ru_wear_column_writes_max", "most-worn hidden-crossbar column");
+        if let Some(w) = wear {
+            writes.set(w.writes);
+            skipped.set(w.skipped);
+            steps.set(w.steps);
+            let nh = self.net.nh;
+            if nh > 0 && !w.hidden.is_empty() && w.hidden.len() % nh == 0 {
+                let mut col = vec![0u64; nh];
+                for (i, v) in w.hidden.iter().enumerate() {
+                    col[i % nh] += v;
+                }
+                col_min.set(*col.iter().min().unwrap() as f64);
+                col_max.set(*col.iter().max().unwrap() as f64);
+                col_mean.set(col.iter().sum::<u64>() as f64 / nh as f64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Best-effort `[obs]`-configured periodic file snapshot: the
+    /// rendered exposition to `obs.snapshot_path` and the flight ring to
+    /// `<path>.jsonl`. I/O failures go to stderr and never affect
+    /// serving (and never touch the deterministic plane).
+    fn write_obs_snapshot(&mut self) {
+        if !self.obs.enabled() || self.obs_snapshot_path.is_empty() {
+            return;
+        }
+        self.refresh_gauges();
+        let prom = self.obs.registry.render();
+        if let Err(e) = std::fs::write(&self.obs_snapshot_path, prom) {
+            eprintln!("[obs] snapshot write to {} failed: {e}", self.obs_snapshot_path);
+        }
+        let jsonl = self.obs.recorder.dump_jsonl();
+        let jpath = format!("{}.jsonl", self.obs_snapshot_path);
+        if let Err(e) = std::fs::write(&jpath, jsonl) {
+            eprintln!("[obs] flight dump to {jpath} failed: {e}");
+        }
     }
 
     // ---------------------------------------------- commit pipeline
@@ -456,6 +714,16 @@ impl ServeCore {
             }
         };
         let path = job.path();
+        self.obs.event(
+            self.tick,
+            "checkpoint",
+            vec![
+                ("epoch", format!("{:016x}", self.chain_epoch)),
+                ("seq", format!("{}", if full { 0 } else { self.next_delta_seq - 1 })),
+                ("full", format!("{full}")),
+                ("path", path.display().to_string()),
+            ],
+        );
         self.snapshots_taken += 1;
         self.committer.send(Job::Snapshot(job))?;
         Ok(path)
@@ -465,9 +733,12 @@ impl ServeCore {
     /// in every file, full or delta.
     fn scalars_state(&self, wear: Option<WearState>) -> SnapshotScalars {
         // wall clock and latency samples are measurements, not state
+        // (the overwrite count describes those samples, so it goes too;
+        // it is also deliberately absent from the checkpoint codec)
         let mut metrics = self.metrics.clone();
         metrics.latencies_us = Vec::new();
         metrics.latency_cursor = 0;
+        metrics.latency_overwrites = 0;
         SnapshotScalars {
             params: self.weights.params.clone(),
             wear,
@@ -527,6 +798,13 @@ impl ServeCore {
     /// (row-sharded across workers), write the states back, score/record
     /// every request, and queue filled learning windows to the committer.
     fn process_batch(&mut self, batch: Vec<StepRequest>, out: &mut Vec<CompletedStep>) -> Result<()> {
+        // one sampling decision per batch; gates *recording* only — the
+        // dispatch below never branches on it
+        let sample = self.obs.should_sample();
+        if sample {
+            self.spans.commit_lag.observe(self.enqueued_gen - self.applied_gen);
+        }
+        let t_batch = if sample { Some(Instant::now()) } else { None };
         // deterministic commit visibility: every commit enqueued by
         // earlier batches must be adopted before this batch dispatches —
         // exactly the synchronous semantics, without serializing the
@@ -552,7 +830,11 @@ impl ServeCore {
             x.row_mut(i).copy_from_slice(&r.x);
             slots.push(slot);
         }
+        let t_kernel = if sample { Some(Instant::now()) } else { None };
         let (hn, logits) = self.stepper.step_sessions_at(&self.weights.params, &h, &x)?;
+        if let Some(t) = t_kernel {
+            self.spans.kernel_step_us.observe(t.elapsed().as_micros() as u64);
+        }
         let preds = argmax_rows(&logits);
         self.metrics.batches += 1;
         self.metrics.padded_rows += self.max_batch as u64;
@@ -563,12 +845,23 @@ impl ServeCore {
             self.store.push_history(slot, &r.x);
             self.metrics.requests += 1;
             self.metrics.wait_ticks_sum += self.tick - r.enqueued_tick;
-            self.metrics.record_latency_us(r.enqueued_at.elapsed().as_micros() as u64);
+            let latency_us = r.enqueued_at.elapsed().as_micros() as u64;
+            self.metrics.record_latency_us(latency_us);
+            if sample {
+                self.spans.queue_wait_ticks.observe(self.tick - r.enqueued_tick);
+                self.spans.request_latency_us.observe(latency_us);
+            }
             self.metrics.record_pred(preds[i]);
             if let Some(label) = r.label {
                 self.metrics.labeled += 1;
                 if preds[i] == label {
                     self.metrics.labeled_correct += 1;
+                }
+                if self.obs.enabled() {
+                    if self.obs_acc_window.len() == OBS_ACC_WINDOW {
+                        self.obs_acc_window.pop_front();
+                    }
+                    self.obs_acc_window.push_back(preds[i] == label);
                 }
                 let seq = self.store.history_seq(slot);
                 if let Some(cb) = self.learner.observe(seq, label) {
@@ -583,6 +876,9 @@ impl ServeCore {
                 tag: r.tag,
                 gen,
             });
+        }
+        if let Some(t) = t_batch {
+            self.spans.batch_dispatch_us.observe(t.elapsed().as_micros() as u64);
         }
         Ok(())
     }

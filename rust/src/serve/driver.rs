@@ -86,17 +86,30 @@ pub struct ServeReport {
     /// their connection table so load tests can assert slow-client
     /// isolation on counters instead of scraping stderr.
     pub outbox_drops: OutboxDrops,
+    /// Registry-derived wear / lifespan / commit-pipeline lines
+    /// (populated when observability is on; they replace the overlapping
+    /// ad-hoc substrate stat strings in [`ServeReport::lines`]).
+    pub obs_lines: Vec<String>,
 }
 
 impl ServeReport {
-    /// Human-readable report.
+    /// Human-readable report. With observability on, the registry-derived
+    /// wear/commit-pipeline lines replace the substrate's overlapping
+    /// ad-hoc "device writes:" string (single source of truth).
     pub fn lines(&self) -> Vec<String> {
         let mut out = vec![format!(
             "serve: backend={} workers={} sessions={}",
             self.backend, self.workers, self.sessions
         )];
         out.extend(self.metrics.summary_lines(&self.store, &self.batcher));
-        out.extend(self.backend_stats.iter().cloned());
+        let from_registry = !self.obs_lines.is_empty();
+        out.extend(
+            self.backend_stats
+                .iter()
+                .filter(|s| !(from_registry && s.starts_with("device writes:")))
+                .cloned(),
+        );
+        out.extend(self.obs_lines.iter().cloned());
         out.push(format!(
             "outbox: drops_full={} drops_timeout={} drops_writer_failed={}",
             self.outbox_drops.full, self.outbox_drops.timeout, self.outbox_drops.writer_failed
@@ -107,6 +120,51 @@ impl ServeReport {
             }
         }
         out.push(format!("signature: {}", self.signature()));
+        out
+    }
+
+    /// Deterministic machine-parseable `key=value` report: one key per
+    /// line, fixed order — the payload of the `Stats` wire frame. Keys
+    /// never disappear between scrapes of the same server (wall-clock
+    /// values change, the schema does not).
+    pub fn kv_lines(&self) -> Vec<String> {
+        let m = &self.metrics;
+        let mut out = vec![
+            format!("backend={}", self.backend),
+            format!("workers={}", self.workers),
+            format!("sessions={}", self.sessions),
+            format!("requests={}", m.requests),
+            format!("batches={}", m.batches),
+            format!("valid_rows={}", m.valid_rows),
+            format!("padded_rows={}", m.padded_rows),
+            format!("batch_fill={:.4}", m.batch_fill()),
+            format!("deferred_dups={}", self.batcher.deferred_dups),
+            format!("mean_wait_ticks={:.2}", m.mean_wait_ticks()),
+            format!("throughput_rps={:.0}", m.throughput()),
+            format!("latency_p50_us={}", m.percentile_us(50.0)),
+            format!("latency_p99_us={}", m.percentile_us(99.0)),
+            format!("latency_max_us={}", m.latencies_us.iter().copied().max().unwrap_or(0)),
+            format!("latency_windowed={}", u8::from(m.latency_window_wrapped())),
+            format!("latency_ring_overwrites={}", m.latency_overwrites),
+            format!("sessions_created={}", self.store.created),
+            format!("sessions_evicted_lru={}", self.store.evicted_lru),
+            format!("sessions_expired_ttl={}", self.store.expired_ttl),
+            format!("session_hits={}", self.store.hits),
+            format!("session_misses={}", self.store.misses),
+            format!("labeled={}", m.labeled),
+            format!("labeled_correct={}", m.labeled_correct),
+            format!("labeled_accuracy={:.4}", m.labeled_accuracy()),
+            format!("online_updates={}", m.online_updates),
+            format!("online_mean_loss={:.4}", m.online_loss_sum / m.online_updates.max(1) as f64),
+            format!("wear_rationed_cols={}", m.wear_rationed),
+            format!("outbox_drops_full={}", self.outbox_drops.full),
+            format!("outbox_drops_timeout={}", self.outbox_drops.timeout),
+            format!("outbox_drops_writer_failed={}", self.outbox_drops.writer_failed),
+        ];
+        if let Some(years) = self.lifespan_years {
+            out.push(format!("lifespan_years={years:.4}"));
+        }
+        out.push(format!("signature={}", self.signature()));
         out
     }
 
@@ -245,6 +303,26 @@ mod tests {
         assert!(text.contains("throughput:"));
         assert!(text.contains("latency: p50="));
         assert!(text.contains("signature: req=100"));
+    }
+
+    #[test]
+    fn kv_report_is_stable_and_machine_parseable() {
+        let rep = run_serve(&opts(1, "dense", 100)).unwrap();
+        let kv = rep.kv_lines();
+        for l in &kv {
+            let (k, _) = l.split_once('=').expect("every line is key=value");
+            assert!(!k.is_empty() && !k.contains(' '), "key `{k}` must be bare");
+        }
+        assert!(kv.iter().any(|l| l == "requests=100"), "{kv:?}");
+        assert!(kv.iter().any(|l| l.starts_with("signature=req=100 ")));
+        assert!(kv.iter().any(|l| l.starts_with("outbox_drops_full=")));
+        // key order is part of the contract: two reports expose the
+        // same schema in the same order
+        let again = run_serve(&opts(1, "dense", 100)).unwrap();
+        let keys = |v: &[String]| -> Vec<String> {
+            v.iter().map(|l| l.split_once('=').unwrap().0.to_string()).collect()
+        };
+        assert_eq!(keys(&kv), keys(&again.kv_lines()));
     }
 
     #[test]

@@ -62,6 +62,14 @@ pub struct ServeMetrics {
     pub latencies_us: Vec<u64>,
     /// Next ring slot to overwrite once the sample cap is reached.
     pub latency_cursor: usize,
+    /// Samples overwritten after the ring filled. Non-zero means the
+    /// percentiles describe a *sliding window* of the most recent
+    /// `LATENCY_SAMPLE_CAP` requests, not the whole run — the report
+    /// relabels them `p50(window)`/`p99(window)` and prints this count
+    /// so a long-lived server cannot silently present a window as
+    /// run-wide. A measurement, not state: excluded from the signature
+    /// and cleared out of checkpoints like the samples themselves.
+    pub latency_overwrites: u64,
     /// FNV-style fold of every prediction in completion order.
     pub pred_fingerprint: u64,
     pub labeled: u64,
@@ -92,7 +100,13 @@ impl ServeMetrics {
         } else {
             self.latencies_us[self.latency_cursor] = us;
             self.latency_cursor = (self.latency_cursor + 1) % Self::LATENCY_SAMPLE_CAP;
+            self.latency_overwrites += 1;
         }
+    }
+
+    /// Has the latency ring discarded samples (percentiles are windowed)?
+    pub fn latency_window_wrapped(&self) -> bool {
+        self.latency_overwrites > 0
     }
 
     /// Mean fraction of dispatched rows that carried a real request.
@@ -160,13 +174,25 @@ impl ServeMetrics {
                 self.requests,
                 self.wall.as_secs_f64()
             ),
-            format!(
-                "latency: p50={} us p99={} us max={} us mean_wait={:.2} ticks",
-                self.percentile_us(50.0),
-                self.percentile_us(99.0),
-                self.latencies_us.iter().copied().max().unwrap_or(0),
-                self.mean_wait_ticks()
-            ),
+            if self.latency_window_wrapped() {
+                format!(
+                    "latency: p50(window)={} us p99(window)={} us max(window)={} us \
+                     mean_wait={:.2} ticks ring_overwrites={}",
+                    self.percentile_us(50.0),
+                    self.percentile_us(99.0),
+                    self.latencies_us.iter().copied().max().unwrap_or(0),
+                    self.mean_wait_ticks(),
+                    self.latency_overwrites
+                )
+            } else {
+                format!(
+                    "latency: p50={} us p99={} us max={} us mean_wait={:.2} ticks",
+                    self.percentile_us(50.0),
+                    self.percentile_us(99.0),
+                    self.latencies_us.iter().copied().max().unwrap_or(0),
+                    self.mean_wait_ticks()
+                )
+            },
             format!(
                 "batching: {} batches, fill {:.3} ({} valid / {} padded rows), deferred_dups={}",
                 self.batches,
@@ -216,6 +242,25 @@ mod tests {
         assert_eq!(m.latencies_us[0], ServeMetrics::LATENCY_SAMPLE_CAP as u64);
         assert_eq!(m.latencies_us[99], ServeMetrics::LATENCY_SAMPLE_CAP as u64 + 99);
         assert_eq!(m.latencies_us[100], 100);
+        assert_eq!(m.latency_overwrites, 100, "each overwritten sample counts once");
+        assert!(m.latency_window_wrapped());
+    }
+
+    #[test]
+    fn wrapped_window_relabels_the_percentile_report() {
+        let mut m = ServeMetrics::default();
+        m.record_latency_us(10);
+        let store = SessionStats::default();
+        let bat = BatcherStats::default();
+        let fresh = m.summary_lines(&store, &bat).join("\n");
+        assert!(fresh.contains("latency: p50="), "unwrapped ring keeps the run-wide labels");
+        assert!(!fresh.contains("(window)"));
+        // force a wrap without walking the whole cap
+        m.latencies_us = vec![5; ServeMetrics::LATENCY_SAMPLE_CAP];
+        m.record_latency_us(7);
+        let wrapped = m.summary_lines(&store, &bat).join("\n");
+        assert!(wrapped.contains("latency: p50(window)="), "wrapped ring must say so: {wrapped}");
+        assert!(wrapped.contains("ring_overwrites=1"));
     }
 
     #[test]

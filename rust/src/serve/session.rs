@@ -14,7 +14,9 @@
 //! under a mock clock.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
+use crate::obs::FlightRecorder;
 use crate::rng::SplitMix64;
 
 /// The fixed key behind [`session_id_for_user`] — the *unkeyed* id space
@@ -113,6 +115,10 @@ pub struct SessionStore {
     dirty: BTreeSet<u64>,
     /// Sessions evicted/expired since the last snapshot mark.
     removed: BTreeSet<u64>,
+    /// Optional flight recorder for lifecycle events (create / LRU evict
+    /// / TTL expire). Timing-plane only: recording never changes a store
+    /// decision, so attaching one cannot perturb the serve signature.
+    recorder: Option<Arc<FlightRecorder>>,
     pub stats: SessionStats,
 }
 
@@ -132,7 +138,19 @@ impl SessionStore {
             touch_counter: 0,
             dirty: BTreeSet::new(),
             removed: BTreeSet::new(),
+            recorder: None,
             stats: SessionStats::default(),
+        }
+    }
+
+    /// Attach (or detach) the flight recorder lifecycle events go to.
+    pub fn set_recorder(&mut self, recorder: Option<Arc<FlightRecorder>>) {
+        self.recorder = recorder;
+    }
+
+    fn event(&self, tick: u64, kind: &'static str, id: u64) {
+        if let Some(r) = &self.recorder {
+            r.record(tick, kind, vec![("session", format!("{id:016x}"))]);
         }
     }
 
@@ -194,8 +212,10 @@ impl SessionStore {
             if now_tick.saturating_sub(self.slot(idx).last_tick) <= self.ttl {
                 break;
             }
+            let id = self.slot(idx).id;
             self.remove_slot(idx);
             self.stats.expired_ttl += 1;
+            self.event(now_tick, "session_expire_ttl", id);
             expired += 1;
         }
         expired
@@ -216,8 +236,10 @@ impl SessionStore {
         self.stats.misses += 1;
         if self.index.len() >= self.capacity {
             let (&_, &victim) = self.lru.iter().next().expect("capacity >= 1 but LRU empty");
+            let victim_id = self.slot(victim).id;
             self.remove_slot(victim);
             self.stats.evicted_lru += 1;
+            self.event(now_tick, "session_evict_lru", victim_id);
         }
         let slot = Slot {
             id,
@@ -241,6 +263,7 @@ impl SessionStore {
         };
         self.index.insert(id, idx);
         self.stats.created += 1;
+        self.event(now_tick, "session_create", id);
         self.touch(idx, now_tick);
         idx
     }
@@ -545,6 +568,25 @@ mod tests {
         t.restore(s.touch_counter(), s.stats.clone(), snaps);
         t.get_or_create(4, 5);
         assert!(!t.contains(1) && t.contains(3) && t.contains(4));
+    }
+
+    #[test]
+    fn flight_recorder_sees_lifecycle_events_without_changing_decisions() {
+        let rec = Arc::new(FlightRecorder::new(16));
+        let mut with = store(2, 3);
+        with.set_recorder(Some(rec.clone()));
+        let mut without = store(2, 3);
+        for s in [&mut with, &mut without] {
+            s.get_or_create(1, 0);
+            s.get_or_create(2, 1);
+            s.get_or_create(3, 2); // LRU-evicts 1
+            s.expire_idle(10); // TTL-expires the rest
+        }
+        assert_eq!(with.stats, without.stats, "recording must not change store behavior");
+        let dump = rec.dump_jsonl();
+        assert_eq!(dump.matches("\"kind\":\"session_create\"").count(), 3);
+        assert_eq!(dump.matches("\"kind\":\"session_evict_lru\"").count(), 1);
+        assert_eq!(dump.matches("\"kind\":\"session_expire_ttl\"").count(), 2);
     }
 
     #[test]

@@ -374,7 +374,10 @@ fn slow_client_is_dropped_without_stalling_others() {
     // the drop is observable in the mid-run Stats report as a typed
     // counter (no stderr scraping): alice was severed for a full outbox
     let stats = bob.stats().unwrap();
-    assert!(stats.contains("outbox: drops_full="), "stats must carry the drop counters:\n{stats}");
+    assert!(
+        stats.contains("outbox_drops_full="),
+        "stats must carry the drop counters:\n{stats}"
+    );
     assert!(!stats.contains("drops_full=0"), "alice's drop must be counted by then:\n{stats}");
 
     let total = bob.shutdown_server().unwrap();
@@ -432,7 +435,12 @@ fn synchronous_steps_and_stats_work_over_loopback() {
     let (_, logits2) = client.step(session, vec![0.25; nx], Some(1)).unwrap();
     assert_eq!(logits2.len(), NetConfig::SMALL.ny);
     let stats = client.stats().unwrap();
-    assert!(stats.contains("signature: req=2"), "stats text:\n{stats}");
+    // the wire Stats payload is deterministic key=value lines
+    assert!(stats.contains("signature=req=2"), "stats text:\n{stats}");
+    assert!(stats.contains("requests=2"), "stats text:\n{stats}");
+    for line in stats.lines() {
+        assert!(line.contains('='), "every stats line must be key=value, got: {line}");
+    }
     let total = client.shutdown_server().unwrap();
     assert_eq!(total, 2);
     let rep = server.join().unwrap().unwrap();

@@ -1,0 +1,234 @@
+//! Observability invariance acceptance tests (DESIGN.md §13).
+//!
+//! The observability layer is timing-plane only, and these tests pin
+//! the hard requirement behind that claim:
+//!
+//! 1. **Signature invariance** — the deterministic serve signature is
+//!    bitwise-identical with observability on, off, or sampled: for the
+//!    in-process driver, over loopback TCP, and per shard through the
+//!    multi-shard router.
+//! 2. **Exposition consistency** — a `MetricsDump` fetched during a
+//!    live run carries the stage histograms and wear gauges, and every
+//!    histogram is internally consistent (the cumulative `+Inf` bucket
+//!    equals `_count`).
+//! 3. **Registry-derived reporting** — the wear/commit-pipeline report
+//!    lines come from the registry when observability is on, and are
+//!    absent when it is off, without perturbing anything deterministic.
+
+use m2ru::config::{NetConfig, RunConfig, ServeConfig};
+use m2ru::net::{
+    run_connect, ConnectOptions, NetServeOptions, NetServeReport, NetServer, RouterCore,
+};
+use m2ru::serve::{run_serve, ServeOptions, SyntheticWorkload};
+
+/// The shared operating point: forced batching pressure and a short
+/// online-commit cadence, so the invariance claim covers dispatch,
+/// online learning and the commit pipeline — not just inference.
+fn obs_run(seed: u64, mode: &str) -> RunConfig {
+    let mut run = RunConfig::default();
+    run.seed = seed;
+    run.backend = "dense".to_string();
+    run.serve = ServeConfig {
+        max_batch: 8,
+        max_wait: 2,
+        capacity: 16,
+        ttl: 0,
+        update_every: 6,
+        replay_cap: 64,
+        replay_mix: 0.5,
+        ..ServeConfig::default()
+    };
+    run.obs.mode = mode.to_string();
+    run.obs.sample_every = 3;
+    run
+}
+
+/// Every histogram in a Prometheus exposition must satisfy: cumulative
+/// `+Inf` bucket == `_count` (the buckets partition the observations).
+fn assert_histograms_consistent(text: &str) {
+    let mut hists: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("");
+            if it.next() == Some("histogram") {
+                hists.push(name.to_string());
+            }
+        }
+    }
+    assert!(!hists.is_empty(), "expected at least one histogram in:\n{text}");
+    for name in hists {
+        let bucket_prefix = format!("{name}_bucket{{le=\"+Inf\"}} ");
+        let count_prefix = format!("{name}_count ");
+        let inf: u64 = text
+            .lines()
+            .find_map(|l| l.strip_prefix(&bucket_prefix))
+            .unwrap_or_else(|| panic!("no +Inf bucket for `{name}` in:\n{text}"))
+            .trim()
+            .parse()
+            .unwrap();
+        let count: u64 = text
+            .lines()
+            .find_map(|l| l.strip_prefix(&count_prefix))
+            .unwrap_or_else(|| panic!("no _count for `{name}` in:\n{text}"))
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(
+            inf, count,
+            "histogram `{name}`: cumulative +Inf bucket must equal _count"
+        );
+    }
+}
+
+// --------------------------------------------------------- in-process
+
+#[test]
+fn in_process_signature_is_bitwise_invariant_across_obs_modes() {
+    let mut sigs = Vec::new();
+    for mode in ["off", "on", "sampled"] {
+        let mut opts = ServeOptions::new(NetConfig::SMALL, obs_run(7, mode));
+        opts.requests = 240;
+        opts.sessions = 16;
+        opts.arrivals = 8;
+        let rep = run_serve(&opts).unwrap();
+        assert!(rep.metrics.online_updates > 0, "invariance must cover online commits");
+        sigs.push((mode, rep.signature()));
+    }
+    assert_eq!(sigs[0].1, sigs[1].1, "obs=on must not perturb the serve signature");
+    assert_eq!(sigs[0].1, sigs[2].1, "obs=sampled must not perturb the serve signature");
+}
+
+#[test]
+fn crossbar_wear_lines_come_from_the_registry_and_stay_invariant() {
+    let mut sigs = Vec::new();
+    let mut on_lines: Vec<String> = Vec::new();
+    for mode in ["off", "on"] {
+        let mut run = obs_run(11, mode);
+        run.backend = "crossbar".to_string();
+        let mut opts = ServeOptions::new(NetConfig::SMALL, run);
+        opts.requests = 240;
+        opts.sessions = 16;
+        opts.arrivals = 8;
+        let rep = run_serve(&opts).unwrap();
+        sigs.push(rep.signature());
+        if mode == "on" {
+            on_lines = rep.obs_lines.clone();
+        } else {
+            assert!(rep.obs_lines.is_empty(), "obs=off must produce no registry lines");
+        }
+    }
+    assert_eq!(sigs[0], sigs[1], "wear accounting must not perturb the serve signature");
+    assert!(
+        on_lines.iter().any(|l| l.starts_with("wear: writes=")),
+        "registry wear line missing: {on_lines:?}"
+    );
+    assert!(
+        on_lines.iter().any(|l| l.starts_with("commit pipeline: ")),
+        "registry commit-pipeline line missing: {on_lines:?}"
+    );
+}
+
+// ------------------------------------------------------- loopback TCP
+
+fn spawn_server(
+    run: RunConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<NetServeReport>>) {
+    let server =
+        NetServer::bind(NetServeOptions::new(NetConfig::SMALL, run, "127.0.0.1:0")).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+#[test]
+fn loopback_signature_is_invariant_and_metrics_dump_is_consistent() {
+    let mut server_sigs = Vec::new();
+    let mut client_sigs = Vec::new();
+    for mode in ["off", "on", "sampled"] {
+        let (addr, server) = spawn_server(obs_run(13, mode));
+        let mut c = ConnectOptions::new(addr, NetConfig::SMALL);
+        c.requests = 240;
+        c.sessions = 16;
+        c.arrivals = 8;
+        c.seed = 13;
+        c.metrics = true; // fetch a MetricsDump during the live run
+        let crep = run_connect(&c).unwrap();
+        let srep = server.join().unwrap().unwrap();
+        client_sigs.push(crep.session_signature());
+        server_sigs.push(srep.report.signature());
+
+        let text = crep.metrics_text.expect("metrics were requested");
+        if mode == "off" {
+            assert!(
+                text.starts_with("# observability disabled"),
+                "obs=off dump must say so:\n{text}"
+            );
+        } else {
+            assert_histograms_consistent(&text);
+            for series in [
+                "# TYPE m2ru_requests_total counter",
+                "# TYPE m2ru_kernel_step_us histogram",
+                "# TYPE m2ru_batch_dispatch_us histogram",
+                "# TYPE m2ru_commit_lag_generations histogram",
+                "# TYPE m2ru_wear_device_writes_total counter",
+                "# TYPE m2ru_sessions_live gauge",
+            ] {
+                assert!(text.contains(series), "missing `{series}` in:\n{text}");
+            }
+            // the deterministic mirrors are exact even under sampling
+            assert!(
+                text.contains("m2ru_requests_total 240"),
+                "request mirror must be exact in:\n{text}"
+            );
+        }
+    }
+    assert!(server_sigs.iter().all(|s| *s == server_sigs[0]), "sigs: {server_sigs:?}");
+    assert!(client_sigs.iter().all(|s| *s == client_sigs[0]), "sigs: {client_sigs:?}");
+}
+
+// ------------------------------------------------------------- router
+
+#[test]
+fn router_shard_signatures_are_invariant_and_shards_expose_metrics() {
+    let mut per_mode: Vec<Vec<String>> = Vec::new();
+    for mode in ["off", "on"] {
+        let mut run = obs_run(17, mode);
+        run.router.shards = 2;
+        let mut core = RouterCore::new(NetConfig::SMALL, &run).unwrap();
+        let mut workload = SyntheticWorkload::new(&NetConfig::SMALL, 16, 17);
+        for wave in 0..30u32 {
+            for _ in 0..8 {
+                let (user, x, label) = workload.next();
+                let session = core.session_id(user);
+                core.submit(session, x, label, 0).unwrap();
+            }
+            core.wave(true, wave == 29).unwrap();
+        }
+        if mode == "on" {
+            let texts = core.metrics("").unwrap();
+            assert_eq!(texts.len(), 2);
+            for t in &texts {
+                let t = t.as_ref().expect("both shards are live");
+                assert_histograms_consistent(t);
+                assert!(t.contains("# TYPE m2ru_requests_total counter"), "dump:\n{t}");
+            }
+            // the events selector yields line-by-line JSON objects
+            for t in core.metrics("events").unwrap() {
+                for line in t.expect("both shards are live").lines() {
+                    assert!(
+                        line.starts_with('{') && line.ends_with('}'),
+                        "flight event is not a JSON object line: {line}"
+                    );
+                }
+            }
+        }
+        let (reports, _tail) = core.finish().unwrap();
+        assert_eq!(reports.len(), 2);
+        per_mode.push(reports.iter().map(|(_, r)| r.signature()).collect());
+    }
+    assert_eq!(
+        per_mode[0], per_mode[1],
+        "per-shard signatures must be bitwise-identical with obs off vs on"
+    );
+}
