@@ -117,11 +117,21 @@ pub struct RouterConfig {
     /// Remote shards own their durability via their own
     /// `--checkpoint-dir`.
     pub checkpoint_root: String,
+    /// Total steps the remote router may park for sessions whose
+    /// migration is in flight during a drain/rebalance (DESIGN.md §14).
+    /// A client that floods a migrating session past this bound is
+    /// dropped — back-pressure, not unbounded buffering.
+    pub max_parked: usize,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { shards: 1, shard_addrs: Vec::new(), checkpoint_root: String::new() }
+        Self {
+            shards: 1,
+            shard_addrs: Vec::new(),
+            checkpoint_root: String::new(),
+            max_parked: 4096,
+        }
     }
 }
 
@@ -148,6 +158,7 @@ impl RouterConfig {
             "router.checkpoint_root applies to in-process shards only; remote shards \
              (router.shard_addrs) each own their durability via their --checkpoint-dir"
         );
+        anyhow::ensure!(self.max_parked >= 1, "router.max_parked must be >= 1");
         Ok(())
     }
 }
@@ -436,6 +447,7 @@ impl RunConfig {
                     self.router.checkpoint_root =
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
                 }
+                "router.max_parked" => self.router.max_parked = iget()?,
                 "obs.mode" => {
                     self.obs.mode =
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
@@ -613,13 +625,14 @@ mod tests {
     #[test]
     fn router_keys_from_toml() {
         let map = parse_toml(
-            "[router]\nshards = 4\ncheckpoint_root = \"ckpt/router\"\n",
+            "[router]\nshards = 4\ncheckpoint_root = \"ckpt/router\"\nmax_parked = 128\n",
         )
         .unwrap();
         let mut cfg = RunConfig::default();
         cfg.apply(&map).unwrap();
         assert_eq!(cfg.router.shards, 4);
         assert_eq!(cfg.router.checkpoint_root, "ckpt/router");
+        assert_eq!(cfg.router.max_parked, 128);
         assert!(cfg.router.shard_addrs.is_empty());
         assert_eq!(cfg.router.fleet_size(), 4);
         // comma-separated remote addresses; the list length wins
@@ -640,6 +653,8 @@ mod tests {
     fn router_validation_rejects_bad_configs() {
         let bad = parse_toml("[router]\nshards = 0\n").unwrap();
         assert!(RunConfig::default().apply(&bad).is_err(), "zero shards must be rejected");
+        let bad = parse_toml("[router]\nmax_parked = 0\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err(), "zero park capacity must be rejected");
         // a checkpoint root combined with remote shards is a config error:
         // remote shards own their durability
         let bad = parse_toml(

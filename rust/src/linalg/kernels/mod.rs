@@ -9,9 +9,9 @@
 //! * **avx2** — `std::arch` intrinsics vectorizing *across output
 //!   columns* (the `j` loops), selected at runtime with
 //!   `is_x86_feature_detected!("avx2")`.
-//! * **neon** — aarch64 placeholder that currently delegates to the
-//!   scalar loops (a detection slot so the dispatch story is complete on
-//!   ARM; real `vld1q_f32` bodies can land without touching callers).
+//! * **neon** — aarch64 `std::arch` intrinsics (`vld1q_f32` et al.),
+//!   4-wide across the same output-column loops; NEON is baseline on
+//!   aarch64 so no runtime detection gate is needed.
 //!
 //! ## The bitwise-parity contract
 //!
@@ -51,7 +51,7 @@ pub enum Kernel {
     Scalar,
     /// 8-wide AVX2 across output columns (x86/x86_64 with AVX2).
     Avx2,
-    /// aarch64 slot; currently a documented stub over the scalar loops.
+    /// 4-wide NEON across output columns (aarch64 baseline).
     Neon,
 }
 

@@ -1,38 +1,223 @@
-//! NEON kernel slot (aarch64).
+//! NEON kernels (`std::arch::aarch64`), selected by the dispatcher on
+//! aarch64 builds (NEON is a baseline feature of the architecture, so
+//! unlike AVX2 there is no runtime-detection gate to fail).
 //!
-//! Currently a documented stub: it delegates straight to the scalar
-//! loops, so an aarch64 build dispatches, benches and parity-tests the
-//! same way an x86 build does — the `Kernel::Neon` plumbing (detection,
-//! forcing, CI matrix) is real, only the vector bodies are pending.
-//! When real `vld1q_f32`/`vmulq_f32`/`vaddq_f32` bodies land they must
-//! follow the same contract as the AVX2 kernels: vectorize across
-//! output columns only, multiply-then-add (no `vfmaq_f32`), scalar
-//! tails — see DESIGN.md §12.
+//! Parity discipline (DESIGN.md §12): these loops vectorize **across
+//! output columns only**. Each output element keeps the scalar kernel's
+//! exact operation sequence — ascending-k accumulation, one rounded
+//! multiply then one rounded add per step (`vmulq_f32` + `vaddq_f32`;
+//! `vfmaq_f32` would fuse the rounding and break bitwise parity), and
+//! the same `a == 0.0` zero-skips, whose predicate depends only on the
+//! left operand and is therefore uniform across lanes. Ragged column
+//! tails fall back to the identical scalar statements.
 
 #![cfg(target_arch = "aarch64")]
 
-use super::scalar;
+use std::arch::aarch64::*;
+
+const LANES: usize = 4;
+
+/// `out[0..w] += alpha * x[0..w]`, 4-wide with a scalar tail.
+///
+/// # Safety
+/// Caller guarantees both pointers are valid for `w` reads/writes.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_w(out: *mut f32, x: *const f32, alpha: f32, w: usize) {
+    let va = vdupq_n_f32(alpha);
+    let mut j = 0;
+    while j + LANES <= w {
+        let xv = vld1q_f32(x.add(j));
+        let ov = vld1q_f32(out.add(j));
+        vst1q_f32(out.add(j), vaddq_f32(ov, vmulq_f32(va, xv)));
+        j += LANES;
+    }
+    while j < w {
+        *out.add(j) += alpha * *x.add(j);
+        j += 1;
+    }
+}
+
+/// `out[0..w] += x[0..w]`.
+///
+/// # Safety
+/// As [`axpy_w`].
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn add_w(out: *mut f32, x: *const f32, w: usize) {
+    let mut j = 0;
+    while j + LANES <= w {
+        let xv = vld1q_f32(x.add(j));
+        let ov = vld1q_f32(out.add(j));
+        vst1q_f32(out.add(j), vaddq_f32(ov, xv));
+        j += LANES;
+    }
+    while j < w {
+        *out.add(j) += *x.add(j);
+        j += 1;
+    }
+}
+
+/// `out[0..w] -= x[0..w]`.
+///
+/// # Safety
+/// As [`axpy_w`].
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn sub_w(out: *mut f32, x: *const f32, w: usize) {
+    let mut j = 0;
+    while j + LANES <= w {
+        let xv = vld1q_f32(x.add(j));
+        let ov = vld1q_f32(out.add(j));
+        vst1q_f32(out.add(j), vsubq_f32(ov, xv));
+        j += LANES;
+    }
+    while j < w {
+        *out.add(j) -= *x.add(j);
+        j += 1;
+    }
+}
+
+/// # Safety
+/// Slices sized per the kernel contract.
+#[target_feature(enable = "neon")]
+unsafe fn matmul_ikj_impl(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let orow = out.as_mut_ptr().add(i * n);
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            axpy_w(orow, b.as_ptr().add(p * n), av, n);
+        }
+    }
+}
+
+/// # Safety
+/// Slices sized per the kernel contract.
+#[target_feature(enable = "neon")]
+unsafe fn matmul_blocked_impl(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    // identical tiling constants and traversal order to the scalar kernel
+    const KC: usize = 128;
+    const NC: usize = 256;
+    const MR: usize = 4;
+    let mut acc = [[0.0f32; NC]; MR];
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        let mut jj = 0;
+        while jj < n {
+            let w = (jj + NC).min(n) - jj;
+            let mut i = 0;
+            while i + MR <= m {
+                for row in acc.iter_mut() {
+                    for v in row[..w].iter_mut() {
+                        *v = 0.0;
+                    }
+                }
+                for p in kk..kend {
+                    let brow = b.as_ptr().add(p * n + jj);
+                    let a0 = a[i * k + p];
+                    let a1 = a[(i + 1) * k + p];
+                    let a2 = a[(i + 2) * k + p];
+                    let a3 = a[(i + 3) * k + p];
+                    let va0 = vdupq_n_f32(a0);
+                    let va1 = vdupq_n_f32(a1);
+                    let va2 = vdupq_n_f32(a2);
+                    let va3 = vdupq_n_f32(a3);
+                    let [acc0, acc1, acc2, acc3] = &mut acc;
+                    let p0 = acc0.as_mut_ptr();
+                    let p1 = acc1.as_mut_ptr();
+                    let p2 = acc2.as_mut_ptr();
+                    let p3 = acc3.as_mut_ptr();
+                    let mut jx = 0;
+                    while jx + LANES <= w {
+                        let bv = vld1q_f32(brow.add(jx));
+                        vst1q_f32(p0.add(jx), vaddq_f32(vld1q_f32(p0.add(jx)), vmulq_f32(va0, bv)));
+                        vst1q_f32(p1.add(jx), vaddq_f32(vld1q_f32(p1.add(jx)), vmulq_f32(va1, bv)));
+                        vst1q_f32(p2.add(jx), vaddq_f32(vld1q_f32(p2.add(jx)), vmulq_f32(va2, bv)));
+                        vst1q_f32(p3.add(jx), vaddq_f32(vld1q_f32(p3.add(jx)), vmulq_f32(va3, bv)));
+                        jx += LANES;
+                    }
+                    while jx < w {
+                        let bv = *brow.add(jx);
+                        *p0.add(jx) += a0 * bv;
+                        *p1.add(jx) += a1 * bv;
+                        *p2.add(jx) += a2 * bv;
+                        *p3.add(jx) += a3 * bv;
+                        jx += 1;
+                    }
+                }
+                for (r, row) in acc.iter().enumerate() {
+                    let start = (i + r) * n + jj;
+                    add_w(out.as_mut_ptr().add(start), row.as_ptr(), w);
+                }
+                i += MR;
+            }
+            // remainder rows (m % MR): plain ikj on the tile
+            while i < m {
+                let orow = out.as_mut_ptr().add(i * n + jj);
+                for p in kk..kend {
+                    let av = a[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    axpy_w(orow, b.as_ptr().add(p * n + jj), av, w);
+                }
+                i += 1;
+            }
+            jj += NC;
+        }
+        kk += KC;
+    }
+}
+
+/// # Safety
+/// Slices sized per the kernel contract.
+#[target_feature(enable = "neon")]
+unsafe fn matmul_tn_impl(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = b.as_ptr().add(p * n);
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            axpy_w(out.as_mut_ptr().add(i * n), brow, av, n);
+        }
+    }
+}
+
+// ---- safe wrappers (the dispatcher's fn-table entries) ---------------------
+//
+// SAFETY: NEON is part of the aarch64 baseline ISA, so a binary compiled
+// for this module's `#[cfg]` always has it — the wrappers need no
+// detection gate.
 
 pub fn matmul_ikj(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    scalar::matmul_ikj(a, b, out, m, k, n)
+    unsafe { matmul_ikj_impl(a, b, out, m, k, n) }
 }
 
 pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    scalar::matmul_blocked(a, b, out, m, k, n)
+    unsafe { matmul_blocked_impl(a, b, out, m, k, n) }
 }
 
 pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
-    scalar::matmul_tn(a, b, out, k, m, n)
+    unsafe { matmul_tn_impl(a, b, out, k, m, n) }
 }
 
 pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {
-    scalar::axpy(out, alpha, x)
+    let w = out.len().min(x.len());
+    unsafe { axpy_w(out.as_mut_ptr(), x.as_ptr(), alpha, w) }
 }
 
 pub fn add_assign(out: &mut [f32], x: &[f32]) {
-    scalar::add_assign(out, x)
+    let w = out.len().min(x.len());
+    unsafe { add_w(out.as_mut_ptr(), x.as_ptr(), w) }
 }
 
 pub fn sub_assign(out: &mut [f32], x: &[f32]) {
-    scalar::sub_assign(out, x)
+    let w = out.len().min(x.len());
+    unsafe { sub_w(out.as_mut_ptr(), x.as_ptr(), w) }
 }

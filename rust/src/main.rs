@@ -30,7 +30,8 @@ use m2ru::experiments::{
     run_fig5b, run_fig5c, run_fig5d, run_headline, run_table1, Fig4Options, Fig5bOptions,
 };
 use m2ru::net::{
-    run_connect, ConnectOptions, NetServeOptions, NetServer, RouterServeOptions, RouterServer,
+    run_connect, ConnectOptions, NetClient, NetServeOptions, NetServer, RouterServeOptions,
+    RouterServer,
 };
 use m2ru::runtime::{ModelBundle, Runtime};
 use m2ru::serve::{run_serve, ServeOptions};
@@ -111,6 +112,14 @@ SUBCOMMANDS
       --listen ADDR         front-door address (port 0 = auto)  [127.0.0.1:0]
       plus the serve policy/transport flags above (--max-batch,
       --update-every, --checkpoint-every, --queue-depth, ...)
+      admin plane (acts on a RUNNING router and exits; DESIGN.md 14):
+      --addr HOST:PORT      front door of the running router (required)
+      --drain K             quiesce shard K, migrate its sessions to the
+                            surviving shards, checkpoint and retire it
+      --rebalance M         recut the session space across shards 0..M
+                            (bumps the routing epoch, migrates the moved
+                            sessions live; clients never see an error)
+                            with neither flag, prints the current epoch
   connect                   closed-loop TCP load generator against `serve --listen`
       --addr HOST:PORT      server address (required)
       --net NAME            network shapes (must match the server)       [pmnist100]
@@ -433,6 +442,34 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
 /// (DESIGN.md §11) — in-process shard threads by default, remote
 /// `m2ru serve --listen` shards with `--shard-addrs`.
 fn cmd_router(args: &mut Args) -> Result<()> {
+    // admin plane: `--addr` points at a *running* router's front door;
+    // `--drain K` / `--rebalance M` reshard it live and exit, neither
+    // flag queries the current routing epoch (DESIGN.md §14)
+    if let Some(addr) = args.get_opt("addr") {
+        let drain = args.get_opt("drain");
+        let rebalance = args.get_opt("rebalance");
+        args.finish()?;
+        let mut client = NetClient::connect(&addr)?;
+        match (drain, rebalance) {
+            (Some(_), Some(_)) => bail!("--drain and --rebalance are mutually exclusive"),
+            (Some(k), None) => {
+                let k: u32 = k.parse().context("--drain expects a shard index")?;
+                let (epoch, shards) = client.drain(k)?;
+                println!("drained shard {k}: epoch={epoch} shards={shards}");
+            }
+            (None, Some(m)) => {
+                let m: u32 = m.parse().context("--rebalance expects a shard count")?;
+                let (epoch, shards) = client.rebalance(m)?;
+                println!("rebalanced to {shards} shard(s): epoch={epoch}");
+            }
+            (None, None) => {
+                let (epoch, shards) = client.epoch()?;
+                println!("epoch={epoch} shards={shards}");
+            }
+        }
+        return Ok(());
+    }
+
     let net_name = args.get("net", "pmnist100");
     let net = NetConfig::by_name(&net_name).with_context(|| format!("unknown net `{net_name}`"))?;
     let mut run = RunConfig::default();
@@ -472,6 +509,7 @@ fn cmd_router(args: &mut Args) -> Result<()> {
         println!("restored sessions: {}", rep.restored_sessions);
     }
     println!("routed: {} request(s) across {} shard(s)", rep.routed, rep.shards);
+    println!("routing epoch: {} (sessions migrated: {})", rep.epoch, rep.migrated);
     println!(
         "outbox: drops_full={} drops_timeout={} drops_writer_failed={}",
         rep.outbox_drops.full, rep.outbox_drops.timeout, rep.outbox_drops.writer_failed

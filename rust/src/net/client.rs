@@ -80,10 +80,52 @@ impl NetClient {
     /// that this connection never established is a protocol violation
     /// the server answers by dropping the connection.
     pub fn hello(&mut self, user: u64) -> Result<u64> {
-        self.send(0, &Message::Hello { user })?;
+        Ok(self.hello_epoch(user)?.0)
+    }
+
+    /// Handshake returning `(session_id, routing_epoch)`: a plain server
+    /// always reports epoch 0; a router reports the fleet's current
+    /// routing epoch, which bumps on every rebalance or drain.
+    pub fn hello_epoch(&mut self, user: u64) -> Result<(u64, u64)> {
+        self.send(0, &Message::Hello { user, epoch: 0 })?;
         match self.recv()? {
-            Message::Ack { value } => Ok(value),
+            Message::Ack { value, epoch } => Ok((value, epoch)),
             other => bail!("expected Ack to Hello, got {other:?}"),
+        }
+    }
+
+    /// Admin query: the router's current routing epoch and logical shard
+    /// width (`Epoch` with `shards = 0` changes nothing). Plain servers
+    /// treat this frame as a protocol violation.
+    pub fn epoch(&mut self) -> Result<(u64, u32)> {
+        self.send(0, &Message::Epoch { epoch: 0, shards: 0 })?;
+        match self.recv()? {
+            Message::Epoch { epoch, shards } => Ok((epoch, shards)),
+            other => bail!("expected Epoch, got {other:?}"),
+        }
+    }
+
+    /// Admin: rebalance the router's fleet to `m` shards (N→M cutover —
+    /// bump the epoch, migrate the moved set, replay parked steps).
+    /// Blocks until the cutover commits; returns the new
+    /// `(epoch, shards)`.
+    pub fn rebalance(&mut self, m: u32) -> Result<(u64, u32)> {
+        anyhow::ensure!(m >= 1, "cannot rebalance to zero shards");
+        self.send(0, &Message::Epoch { epoch: 0, shards: m })?;
+        match self.recv()? {
+            Message::Epoch { epoch, shards } => Ok((epoch, shards)),
+            other => bail!("expected Epoch ack to rebalance, got {other:?}"),
+        }
+    }
+
+    /// Admin: drain shard `k` — quiesce it, migrate every session off,
+    /// checkpoint and retire it, with zero client-visible errors. Blocks
+    /// until the drain completes; returns the new `(epoch, shards)`.
+    pub fn drain(&mut self, k: u32) -> Result<(u64, u32)> {
+        self.send(0, &Message::Drain { shard: k })?;
+        match self.recv()? {
+            Message::Epoch { epoch, shards } => Ok((epoch, shards)),
+            other => bail!("expected Epoch ack to drain, got {other:?}"),
         }
     }
 
@@ -130,7 +172,7 @@ impl NetClient {
     pub fn shutdown_server(&mut self) -> Result<u64> {
         self.send(0, &Message::Shutdown)?;
         match self.recv()? {
-            Message::Ack { value } => Ok(value),
+            Message::Ack { value, .. } => Ok(value),
             other => bail!("expected Ack to Shutdown, got {other:?}"),
         }
     }

@@ -20,20 +20,24 @@
 //!   [`crate::serve::ServeCore`] shards — in-process shard threads or
 //!   remote `m2ru serve --listen` processes — each with its own engine,
 //!   learner, commit pipeline and checkpoint chain (`shard-<k>/`).
+//! * [`reshard`] — epoch-versioned routing (DESIGN.md §14): the
+//!   [`RoutingEpoch`] map the router routes by, the moved-set math of
+//!   an N→M rebalance or a `--drain`, and the [`StepPark`] holding pen
+//!   that keeps mid-migration steps ordered and un-dropped.
 //!
 //! No dependencies beyond `std`: the frame codec, threading and
 //! durability are all plain `std::net` + `std::sync`.
 
 mod client;
 mod conn;
+pub mod reshard;
 mod router;
 mod server;
 pub mod wire;
 
 pub use client::{run_connect, ConnectOptions, ConnectReport, NetClient};
-pub use router::{
-    run_router, shard_of, RouterCore, RouterReport, RouterServeOptions, RouterServer,
-};
+pub use reshard::{moves, shard_of, ParkedStep, RoutingEpoch, StepPark};
+pub use router::{run_router, RouterCore, RouterReport, RouterServeOptions, RouterServer};
 pub use server::{run_net_serve, snapshot_path, NetServeOptions, NetServeReport, NetServer};
 pub use wire::{
     decode_frame, encode_frame, read_frame, write_frame, Frame, Message, FLAG_FLUSH, FLAG_TICK,

@@ -1,0 +1,325 @@
+//! Epoch-versioned routing for the elastic shard fleet (DESIGN.md §14).
+//!
+//! PR 5's router froze the partition at boot: `shard(session) =
+//! session_id % N`, with N fixed for the life of the process. This
+//! module makes the partition a *versioned value* instead of a constant:
+//! a [`RoutingEpoch`] pairs a monotonically increasing epoch number with
+//! an explicit logical-slot → physical-shard map, so the fleet can grow,
+//! shrink and drain shards while every participant agrees — per epoch —
+//! on exactly one deterministic routing function.
+//!
+//! ## The routing function, per epoch
+//!
+//! ```text
+//! slot(session)  = session_id % slots        (slots = logical width)
+//! shard(session) = map[slot(session)]        (map: slot → physical id)
+//! ```
+//!
+//! At boot the map is the identity over N slots, which reproduces PR 5's
+//! `session_id % N` bit-for-bit — epoch 0 *is* the old router. A
+//! rebalance to M slots bumps the epoch and swaps the map; the moved
+//! set between two epochs is pure arithmetic over the session ids
+//! (computable by any participant, no routing table exchange), and for
+//! identity maps it collapses to the classic `sid % N != sid % M`.
+//!
+//! ## Why sessions between *surviving* shards move too
+//!
+//! Draining shard k of N is a rebalance onto the N−1 surviving
+//! physicals: the modulus shrinks, so some sessions hosted on shards
+//! that are not being drained also change route. That is inherent to
+//! modular rehashing and deliberate — the moved set stays a pure
+//! function of (old epoch, new epoch, session id), which is what keeps
+//! the cutover deterministic and testable. [`RoutingEpoch::moved`]
+//! computes exactly that set.
+//!
+//! ## Parked steps
+//!
+//! While a session's state is in flight between shards, its steps must
+//! be neither dropped (zero client-visible errors) nor reordered (the
+//! per-session stream is the determinism unit). [`StepPark`] is the
+//! router-side holding pen: strict FIFO per session, bounded in total,
+//! drained in arrival order at cutover commit.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{ensure, Result};
+
+/// The routing function of PR 5 and of every identity-mapped epoch:
+/// pure modular arithmetic over the keyed session id (uniform by
+/// construction, so shards stay balanced).
+pub fn shard_of(session: u64, shards: usize) -> usize {
+    (session % shards.max(1) as u64) as usize
+}
+
+/// Does `session` change shard under a pure N→M resize (identity maps
+/// on both sides)? The exhaustive small-domain law in the tests below
+/// pins this to "moves exactly the intended set" for every N,M ≤ 6.
+pub fn moves(session: u64, n: usize, m: usize) -> bool {
+    shard_of(session, n) != shard_of(session, m)
+}
+
+/// One epoch of the fleet's routing table: a version number plus the
+/// logical-slot → physical-shard map in force for that version.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoutingEpoch {
+    epoch: u64,
+    /// `map[slot]` = physical shard id serving that logical slot.
+    /// Never empty.
+    map: Vec<u32>,
+}
+
+impl RoutingEpoch {
+    /// Epoch 0: the identity map over `shards` physicals — bitwise the
+    /// PR 5 router (`session_id % N`).
+    pub fn identity(shards: usize) -> RoutingEpoch {
+        let n = shards.max(1);
+        RoutingEpoch { epoch: 0, map: (0..n as u32).collect() }
+    }
+
+    /// The epoch number (bumped by every rebalance/drain).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Logical width: the modulus of the routing function.
+    pub fn slots(&self) -> usize {
+        self.map.len()
+    }
+
+    /// The slot → physical map.
+    pub fn map(&self) -> &[u32] {
+        &self.map
+    }
+
+    /// The physical shard serving `session` under this epoch.
+    pub fn route(&self, session: u64) -> usize {
+        self.map[shard_of(session, self.map.len())] as usize
+    }
+
+    /// The successor epoch routing over `map` (slot j → physical
+    /// `map[j]`). Rejects an empty map and duplicate physicals (two
+    /// slots may not share a shard — the moved-set math assumes the
+    /// map is injective, and nothing in the fleet wants oversubscribed
+    /// physicals).
+    pub fn rebalanced(&self, map: Vec<u32>) -> Result<RoutingEpoch> {
+        ensure!(!map.is_empty(), "a routing epoch needs at least one shard");
+        let mut seen = map.clone();
+        seen.sort_unstable();
+        ensure!(
+            seen.windows(2).all(|w| w[0] != w[1]),
+            "routing map assigns one physical shard to two slots"
+        );
+        Ok(RoutingEpoch { epoch: self.epoch + 1, map })
+    }
+
+    /// The successor epoch with physical shard `k` removed (the drain
+    /// cutover target): the surviving physicals keep their relative
+    /// order, the modulus shrinks by one.
+    pub fn drained(&self, k: u32) -> Result<RoutingEpoch> {
+        ensure!(self.map.contains(&k), "shard {k} is not in the current routing map");
+        ensure!(self.map.len() > 1, "cannot drain the last shard");
+        let map: Vec<u32> = self.map.iter().copied().filter(|&p| p != k).collect();
+        self.rebalanced(map)
+    }
+
+    /// The sessions whose route changes from `self` to `next`, as
+    /// `(session, from_physical, to_physical)` in the iteration order
+    /// given. This is the migration work list of a cutover.
+    pub fn moved<I: IntoIterator<Item = u64>>(
+        &self,
+        next: &RoutingEpoch,
+        sessions: I,
+    ) -> Vec<(u64, usize, usize)> {
+        sessions
+            .into_iter()
+            .filter_map(|sid| {
+                let from = self.route(sid);
+                let to = next.route(sid);
+                (from != to).then_some((sid, from, to))
+            })
+            .collect()
+    }
+}
+
+/// One step held back because its session is mid-migration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParkedStep {
+    pub session: u64,
+    pub label: Option<u32>,
+    pub x: Vec<f32>,
+    /// The client connection that sent it (logits route back here).
+    pub conn: u64,
+}
+
+/// The router-side holding pen for steps that arrive while their
+/// session's state is in flight between shards: strict FIFO per
+/// session, bounded in total (a stuck migration must not buffer
+/// unboundedly), drained in arrival order at cutover commit.
+#[derive(Debug, Default)]
+pub struct StepPark {
+    /// Total parked steps across every session, bounding memory.
+    total: usize,
+    /// Per-session FIFO queues (order within a session is sacred).
+    queues: HashMap<u64, VecDeque<ParkedStep>>,
+}
+
+impl StepPark {
+    pub fn new() -> StepPark {
+        StepPark::default()
+    }
+
+    /// Mark `session` as migrating: from now until [`StepPark::unpark`],
+    /// [`StepPark::is_parked`] reports true even with no steps queued.
+    pub fn begin(&mut self, session: u64) {
+        self.queues.entry(session).or_default();
+    }
+
+    /// Is this session currently being held?
+    pub fn is_parked(&self, session: u64) -> bool {
+        self.queues.contains_key(&session)
+    }
+
+    /// Sessions currently held.
+    pub fn sessions(&self) -> impl Iterator<Item = u64> + '_ {
+        self.queues.keys().copied()
+    }
+
+    /// Steps currently held across all sessions.
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0 && self.queues.is_empty()
+    }
+
+    /// Hold one step. Errors when the pen is full (`cap` total steps) —
+    /// the caller treats that like a full outbox and severs the sender
+    /// rather than buffering without bound. The session must have been
+    /// [`StepPark::begin`]-marked.
+    pub fn park(&mut self, step: ParkedStep, cap: usize) -> Result<()> {
+        ensure!(self.total < cap, "step park is full ({cap} steps) — migration is stuck");
+        let q = self
+            .queues
+            .get_mut(&step.session)
+            .ok_or_else(|| anyhow::anyhow!("parking a step for a session not migrating"))?;
+        q.push_back(step);
+        self.total += 1;
+        Ok(())
+    }
+
+    /// Release a session at cutover commit: returns its held steps in
+    /// arrival order and stops holding future ones.
+    pub fn unpark(&mut self, session: u64) -> VecDeque<ParkedStep> {
+        let q = self.queues.remove(&session).unwrap_or_default();
+        self.total -= q.len();
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_zero_is_the_pr5_router() {
+        for n in 1..=6usize {
+            let e = RoutingEpoch::identity(n);
+            assert_eq!(e.epoch(), 0);
+            for sid in 0..1000u64 {
+                assert_eq!(e.route(sid), shard_of(sid, n));
+            }
+        }
+    }
+
+    /// The satellite law: over an exhaustive small domain, `shard_of`
+    /// under an N→M resize moves exactly the sessions with
+    /// `sid % N != sid % M` — no more, no fewer — for every pair
+    /// N,M ≤ 6. The domain covers every residue class of every
+    /// modulus pair (lcm(1..6) = 60 ≪ 5040).
+    #[test]
+    fn exhaustive_moved_set_on_every_n_to_m_pair() {
+        let sessions: Vec<u64> = (0..5040).collect();
+        for n in 1..=6usize {
+            for m in 1..=6usize {
+                let a = RoutingEpoch::identity(n);
+                let b = a.rebalanced((0..m as u32).collect()).unwrap();
+                assert_eq!(b.epoch(), 1);
+                let moved = a.moved(&b, sessions.iter().copied());
+                let expect: Vec<(u64, usize, usize)> = sessions
+                    .iter()
+                    .copied()
+                    .filter(|&sid| moves(sid, n, m))
+                    .map(|sid| (sid, shard_of(sid, n), shard_of(sid, m)))
+                    .collect();
+                assert_eq!(moved, expect, "moved set mismatch for {n}→{m}");
+                if n == m {
+                    assert!(moved.is_empty(), "{n}→{n} must move nothing");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn drain_removes_exactly_one_physical_and_bumps_the_epoch() {
+        let e = RoutingEpoch::identity(3);
+        let d = e.drained(1).unwrap();
+        assert_eq!(d.epoch(), 1);
+        assert_eq!(d.map(), &[0, 2]);
+        // every session routes to a surviving shard
+        for sid in 0..100u64 {
+            assert_ne!(d.route(sid), 1);
+        }
+        // all of shard 1's sessions are in the moved set
+        let moved = e.moved(&d, 0..100u64);
+        for sid in 0..100u64 {
+            if e.route(sid) == 1 {
+                assert!(moved.iter().any(|&(s, from, _)| s == sid && from == 1));
+            }
+        }
+        assert!(e.drained(7).is_err(), "draining an absent shard must fail");
+        let one = RoutingEpoch::identity(1);
+        assert!(one.drained(0).is_err(), "draining the last shard must fail");
+    }
+
+    #[test]
+    fn rebalance_rejects_degenerate_maps() {
+        let e = RoutingEpoch::identity(2);
+        assert!(e.rebalanced(vec![]).is_err());
+        assert!(e.rebalanced(vec![0, 0]).is_err());
+        assert!(e.rebalanced(vec![0, 2, 1]).is_ok());
+    }
+
+    #[test]
+    fn step_park_is_fifo_per_session_and_bounded() {
+        let mut park = StepPark::new();
+        park.begin(7);
+        park.begin(9);
+        assert!(park.is_parked(7) && park.is_parked(9));
+        assert!(!park.is_parked(8));
+        for i in 0..3u32 {
+            park.park(
+                ParkedStep { session: 7, label: Some(i), x: vec![i as f32], conn: 1 },
+                10,
+            )
+            .unwrap();
+        }
+        park.park(ParkedStep { session: 9, label: None, x: vec![9.0], conn: 2 }, 10).unwrap();
+        assert_eq!(park.len(), 4);
+        // cap enforcement
+        assert!(park
+            .park(ParkedStep { session: 9, label: None, x: vec![], conn: 2 }, 4)
+            .is_err());
+        // parking an unmarked session is an error
+        assert!(park
+            .park(ParkedStep { session: 8, label: None, x: vec![], conn: 3 }, 10)
+            .is_err());
+        let drained = park.unpark(7);
+        let labels: Vec<Option<u32>> = drained.iter().map(|s| s.label).collect();
+        assert_eq!(labels, vec![Some(0), Some(1), Some(2)], "FIFO order violated");
+        assert!(!park.is_parked(7));
+        assert_eq!(park.len(), 1);
+        park.unpark(9);
+        assert!(park.is_empty());
+    }
+}

@@ -22,8 +22,18 @@
 //!
 //! Every request of a session lands on the same shard, each shard owns
 //! a disjoint id subset, and the partition is deterministic given the
-//! (checkpoint-persisted) session secret. No routing table, no
-//! rebalancing state — the id *is* the route.
+//! (checkpoint-persisted) session secret.
+//!
+//! Since DESIGN.md §14 the partition is *versioned*: a [`RoutingEpoch`]
+//! pairs the modulus with an epoch number, `Hello` acks carry the
+//! current epoch, and an admin can rebalance the fleet N→M
+//! (`Epoch{shards: M}`) or drain one shard (`Drain{shard: k}`) at
+//! runtime. A cutover quiesces the fleet at a wave boundary, ships each
+//! moved session between shards as a sealed migration parcel
+//! ([`crate::serve::migrate`]), bumps the epoch, and replays any steps
+//! that arrived mid-flight in their original per-session order
+//! ([`StepPark`]) — zero client-visible errors, zero reordering. Epoch
+//! 0 with the identity map *is* the PR 5 router, bit for bit.
 //!
 //! ## Determinism contract
 //!
@@ -79,19 +89,14 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::config::{NetConfig, RunConfig};
 use crate::serve::{
-    session_id_keyed, try_restore, CompletedStep, OutboxDrops, RestoreOutcome, ServeCore,
-    ServeReport, SnapshotPolicy, DEFAULT_SESSION_SECRET,
+    extract_parcel, inject_parcel, session_id_keyed, try_restore, CompletedStep, OutboxDrops,
+    RestoreOutcome, ServeCore, ServeReport, SnapshotPolicy, DEFAULT_SESSION_SECRET,
 };
 
 use super::conn::{self, ConnEvent, ConnTable, OutboxFlow};
+use super::reshard::{ParkedStep, RoutingEpoch, StepPark};
 use super::server::random_boot_secret;
 use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
-
-/// The routing function: pure modular arithmetic over the keyed session
-/// id (uniform by construction, so shards stay balanced).
-pub fn shard_of(session: u64, shards: usize) -> usize {
-    (session % shards.max(1) as u64) as usize
-}
 
 // ------------------------------------------------------- in-process shards
 
@@ -109,6 +114,14 @@ enum ShardCmd {
     /// Render this shard's metrics exposition (`""`/`"prom"` →
     /// Prometheus text, `"events"` → flight-recorder JSONL).
     Metrics { selector: String },
+    /// List the resident session ids (ascending) — the reshard cutover's
+    /// migration work list.
+    Sessions,
+    /// Carve one session out as a sealed migration parcel (`None` when
+    /// it is not resident). The caller quiesces the fleet first.
+    Extract { session: u64 },
+    /// Install a migration parcel under the local id `session`.
+    Inject { session: u64, parcel: Vec<u8> },
     /// Flush, checkpoint (if durable), stop the committer and reply with
     /// the final report.
     Stop,
@@ -119,6 +132,9 @@ enum ShardReply {
     Wave { shard: usize, steps: Vec<CompletedStep> },
     Report { shard: usize, report: Box<ServeReport> },
     Metrics { shard: usize, text: String },
+    Sessions { shard: usize, ids: Vec<u64> },
+    Parcel { shard: usize, parcel: Result<Option<Vec<u8>>, String> },
+    Injected { shard: usize, result: Result<usize, String> },
     Stopped { shard: usize, result: Result<(Vec<CompletedStep>, Box<ServeReport>), String> },
 }
 
@@ -196,6 +212,24 @@ fn shard_loop(
                 }
                 Err(e) => return fail(e, &replies),
             },
+            ShardCmd::Sessions => {
+                let ids = core.store().ids();
+                if replies.send(ShardReply::Sessions { shard, ids }).is_err() {
+                    return;
+                }
+            }
+            ShardCmd::Extract { session } => {
+                let parcel = extract_parcel(&mut core, session).map_err(|e| e.to_string());
+                if replies.send(ShardReply::Parcel { shard, parcel }).is_err() {
+                    return;
+                }
+            }
+            ShardCmd::Inject { session, parcel } => {
+                let result = inject_parcel(&mut core, session, &parcel).map_err(|e| e.to_string());
+                if replies.send(ShardReply::Injected { shard, result }).is_err() {
+                    return;
+                }
+            }
             ShardCmd::Stop => {
                 let result = (|| -> Result<(Vec<CompletedStep>, Box<ServeReport>)> {
                     // mirror the single-process shutdown path: flush the
@@ -243,6 +277,12 @@ pub struct RouterCore {
     restored_sessions: usize,
     routed: u64,
     shard_routed: Vec<u64>,
+    /// The routing epoch in force: bumped by every rebalance/drain.
+    /// Epoch 0 is the identity map over the boot fleet (the PR 5
+    /// router, bit for bit).
+    epoch: RoutingEpoch,
+    /// Sessions migrated between shards over this router's lifetime.
+    migrated: u64,
 }
 
 impl RouterCore {
@@ -284,6 +324,8 @@ impl RouterCore {
             restored_sessions: 0,
             routed: 0,
             shard_routed: vec![0; n],
+            epoch: RoutingEpoch::identity(n),
+            migrated: 0,
         };
         // restore every shard before any thread starts, so the adopted
         // session secret is known (and consistent) up front
@@ -392,9 +434,19 @@ impl RouterCore {
         session_id_keyed(user, self.secret)
     }
 
-    /// Which shard serves `session`.
+    /// Which shard serves `session` under the current routing epoch.
     pub fn shard_of(&self, session: u64) -> usize {
-        shard_of(session, self.shards())
+        self.epoch.route(session)
+    }
+
+    /// The routing epoch in force.
+    pub fn epoch(&self) -> &RoutingEpoch {
+        &self.epoch
+    }
+
+    /// Sessions migrated between shards over this router's lifetime.
+    pub fn migrated(&self) -> u64 {
+        self.migrated
     }
 
     /// Route one request to its session's shard. Never blocks: shard
@@ -441,7 +493,7 @@ impl RouterCore {
                         Ok(_) => bail!("shard {shard} stopped unexpectedly"),
                     }
                 }
-                ShardReply::Report { .. } | ShardReply::Metrics { .. } => {}
+                _ => {}
             }
         }
         Ok(out)
@@ -472,7 +524,7 @@ impl RouterCore {
                         Ok(_) => bail!("shard {shard} stopped unexpectedly"),
                     }
                 }
-                ShardReply::Wave { .. } | ShardReply::Report { .. } => {}
+                _ => {}
             }
         }
         Ok(out)
@@ -498,7 +550,7 @@ impl RouterCore {
                         Ok(_) => bail!("shard {shard} stopped unexpectedly"),
                     }
                 }
-                ShardReply::Wave { .. } | ShardReply::Metrics { .. } => {}
+                _ => {}
             }
         }
         out.sort_by_key(|(k, _)| *k);
@@ -550,6 +602,177 @@ impl RouterCore {
         Ok((report, tail))
     }
 
+    /// Rebalance the fleet onto `m` shards (DESIGN.md §14): quiesce at a
+    /// wave boundary (flush every queued step — clocks do not advance),
+    /// spawn or revive physical shards `0..m` as needed, migrate every
+    /// resident session whose route changes under the identity map over
+    /// `m`, bump the epoch, and retire any physical shard the new map no
+    /// longer uses. Returns `(new epoch, sessions migrated, steps the
+    /// quiescing flush completed)` — the caller routes those steps to
+    /// their clients before acknowledging the cutover.
+    pub fn rebalance(&mut self, m: usize) -> Result<(u64, usize, Vec<CompletedStep>)> {
+        ensure!(m >= 1, "cannot rebalance to zero shards");
+        for k in 0..m.max(self.shards.len()) {
+            if k >= self.shards.len() {
+                self.shards.push(None);
+                self.shard_routed.push(0);
+            }
+            if k < m && self.shards[k].is_none() {
+                self.revive_shard(k)?;
+            }
+        }
+        let next = self.epoch.rebalanced((0..m as u32).collect())?;
+        let mut steps = self.wave(false, true)?;
+        let migrated = self.cutover(next)?;
+        for k in m..self.shards.len() {
+            if self.shards[k].is_some() {
+                steps.extend(self.retire(k)?);
+            }
+        }
+        Ok((self.epoch.epoch(), migrated, steps))
+    }
+
+    /// Drain physical shard `k`: quiesce the fleet, migrate every moved
+    /// session onto the survivors (the modulus shrinks, so sessions
+    /// between surviving shards move too — see [`RoutingEpoch::drained`]),
+    /// bump the epoch, then checkpoint and retire the shard. Same return
+    /// contract as [`RouterCore::rebalance`].
+    pub fn drain(&mut self, k: usize) -> Result<(u64, usize, Vec<CompletedStep>)> {
+        ensure!(
+            k < self.shards.len() && self.shards[k].is_some(),
+            "shard {k} is not live"
+        );
+        let next = self.epoch.drained(k as u32)?;
+        let mut steps = self.wave(false, true)?;
+        let migrated = self.cutover(next)?;
+        steps.extend(self.retire(k)?);
+        Ok((self.epoch.epoch(), migrated, steps))
+    }
+
+    /// Move the fleet from the current epoch to `next`: list the
+    /// resident sessions of every currently-mapped shard, compute the
+    /// moved set ([`RoutingEpoch::moved`]), and ship each moved session
+    /// as a sealed migration parcel, in ascending session-id order. The
+    /// caller has already quiesced (no shard holds queued steps), so
+    /// every extract either succeeds or reports the session gone
+    /// (evicted between listing and extract — nothing to move).
+    fn cutover(&mut self, next: RoutingEpoch) -> Result<usize> {
+        let physicals: Vec<usize> = self.epoch.map().iter().map(|&p| p as usize).collect();
+        let mut resident: Vec<u64> = Vec::new();
+        let mut expected = 0usize;
+        for &k in &physicals {
+            let h = self.shards[k].as_ref().with_context(|| format!("shard {k} is down"))?;
+            h.cmds.send(ShardCmd::Sessions).map_err(|_| anyhow!("shard {k} is down"))?;
+            expected += 1;
+        }
+        while expected > 0 {
+            match self.replies.recv().map_err(|_| anyhow!("every shard is gone"))? {
+                ShardReply::Sessions { ids, .. } => {
+                    resident.extend(ids);
+                    expected -= 1;
+                }
+                ShardReply::Stopped { shard, result } => {
+                    self.reap(shard);
+                    match result {
+                        Err(e) => bail!("shard {shard} failed: {e}"),
+                        Ok(_) => bail!("shard {shard} stopped unexpectedly"),
+                    }
+                }
+                _ => {}
+            }
+        }
+        resident.sort_unstable();
+        let moved = self.epoch.moved(&next, resident.iter().copied());
+        for &(sid, from, to) in &moved {
+            let h = self.shards[from].as_ref().with_context(|| format!("shard {from} is down"))?;
+            h.cmds
+                .send(ShardCmd::Extract { session: sid })
+                .map_err(|_| anyhow!("shard {from} is down"))?;
+            let parcel = loop {
+                match self.replies.recv().map_err(|_| anyhow!("every shard is gone"))? {
+                    ShardReply::Parcel { parcel, .. } => {
+                        break parcel.map_err(|e| anyhow!("shard {from}: {e}"))?;
+                    }
+                    ShardReply::Stopped { shard, result } => {
+                        self.reap(shard);
+                        match result {
+                            Err(e) => bail!("shard {shard} failed: {e}"),
+                            Ok(_) => bail!("shard {shard} stopped unexpectedly"),
+                        }
+                    }
+                    _ => {}
+                }
+            };
+            let Some(parcel) = parcel else { continue };
+            let h = self.shards[to].as_ref().with_context(|| format!("shard {to} is down"))?;
+            h.cmds
+                .send(ShardCmd::Inject { session: sid, parcel })
+                .map_err(|_| anyhow!("shard {to} is down"))?;
+            loop {
+                match self.replies.recv().map_err(|_| anyhow!("every shard is gone"))? {
+                    ShardReply::Injected { result, .. } => {
+                        result.map_err(|e| anyhow!("shard {to}: {e}"))?;
+                        break;
+                    }
+                    ShardReply::Stopped { shard, result } => {
+                        self.reap(shard);
+                        match result {
+                            Err(e) => bail!("shard {shard} failed: {e}"),
+                            Ok(_) => bail!("shard {shard} stopped unexpectedly"),
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            self.migrated += 1;
+        }
+        self.epoch = next;
+        Ok(moved.len())
+    }
+
+    /// Stop shard `k` for good (flush — a no-op post-quiesce —
+    /// checkpoint into its chain, stop its committer) and leave its slot
+    /// empty. Returns any steps its final flush completed.
+    fn retire(&mut self, k: usize) -> Result<Vec<CompletedStep>> {
+        let h = self.shards[k].take().with_context(|| format!("shard {k} is already down"))?;
+        h.cmds.send(ShardCmd::Stop).map_err(|_| anyhow!("shard {k} is down"))?;
+        let tail = loop {
+            match self.replies.recv().map_err(|_| anyhow!("every shard is gone"))? {
+                ShardReply::Stopped { shard, result } if shard == k => match result {
+                    Ok((tail, _report)) => break tail,
+                    Err(e) => {
+                        let _ = h.thread.join();
+                        bail!("shard {k} failed to retire cleanly: {e}");
+                    }
+                },
+                _ => {}
+            }
+        };
+        let _ = h.thread.join();
+        Ok(tail)
+    }
+
+    /// Bring an empty physical slot back to life: restore from the
+    /// shard's own checkpoint chain when one exists (a previously
+    /// drained shard re-adopts its weights and learner state; its
+    /// sessions migrated out before the retiring checkpoint), fresh
+    /// otherwise, always under the fleet's session secret.
+    fn revive_shard(&mut self, k: usize) -> Result<()> {
+        let mut core = ServeCore::new(self.net, &self.run)?;
+        if let Some(dir) = self.shard_dir(k) {
+            if let RestoreOutcome::Restored { .. } = try_restore(&mut core, &dir)? {
+                ensure!(
+                    core.session_secret() == self.secret,
+                    "revived shard {k} restored a different session secret"
+                );
+            }
+        }
+        core.set_session_secret(self.secret);
+        let handle = self.spawn_shard(k, core);
+        self.shards[k] = Some(handle);
+        Ok(())
+    }
+
     /// Stop every shard (flush, checkpoint, stop committers) and collect
     /// their final reports in shard order, plus any steps the final
     /// flushes completed.
@@ -580,7 +803,7 @@ impl RouterCore {
                     }
                 }
                 Ok(ShardReply::Wave { steps, .. }) => tail.extend(steps),
-                Ok(ShardReply::Report { .. }) | Ok(ShardReply::Metrics { .. }) => {}
+                Ok(_) => {}
                 Err(_) => break,
             }
         }
@@ -747,7 +970,7 @@ impl Remote {
         let rehello: Vec<(u64, u64)> =
             self.shards[k].users.iter().map(|(sid, user)| (*sid, *user)).collect();
         for (sid, user) in rehello {
-            self.write(k, 0, &Message::Hello { user })?;
+            self.write(k, 0, &Message::Hello { user, epoch: 0 })?;
             self.shards[k].pending_hellos.push_back((None, user, sid));
         }
         Ok(())
@@ -829,6 +1052,10 @@ pub struct RouterReport {
     pub restored_sessions: usize,
     /// Client writer-outbox drops by reason.
     pub outbox_drops: OutboxDrops,
+    /// The routing epoch in force at shutdown (0 = never resharded).
+    pub epoch: u64,
+    /// Sessions migrated between shards by rebalances/drains.
+    pub migrated: u64,
 }
 
 /// Events the router's serve thread consumes: the shared accept path's
@@ -851,6 +1078,108 @@ impl From<ConnEvent> for REvent {
 struct StatsAgg {
     waiters: Vec<u64>,
     texts: Vec<Option<String>>,
+}
+
+/// One in-flight reshard operation over a *remote* fleet (in-process
+/// fleets cut over synchronously inside [`RouterCore`]). The new epoch
+/// is adopted the moment the operation starts: steps for moved sessions
+/// are parked until their state lands on the target, so no step ever
+/// chases the old route. Event handlers only record shard replies
+/// (`Await* → Need*`); every wire action happens in the pump at the
+/// bottom of the router loop, which walks the queue one session at a
+/// time.
+struct ReshardOp {
+    /// The admin connection awaiting the `Epoch` acknowledgement.
+    admin: u64,
+    /// Sessions still to migrate: `(router sid, from, to)`, in the
+    /// deterministic moved-set order.
+    queue: VecDeque<(u64, usize, usize)>,
+    phase: MigPhase,
+    /// `Some(k)` for a drain: shut shard `k` down after the cutover
+    /// (it checkpoints on the way out). Taken when the retire starts.
+    retire: Option<usize>,
+    /// The drained shard, kept for completion bookkeeping (`retire` is
+    /// consumed when the shutdown goes out).
+    drained: Option<usize>,
+    /// Sessions migrated by this operation.
+    migrated: u64,
+    /// Wall-clock start, for the drain-duration histogram.
+    started: std::time::Instant,
+}
+
+/// Where the in-flight migration of one session stands. `Await*` states
+/// wait on a shard frame; `Need*` states wait on the pump to act.
+enum MigPhase {
+    /// Between sessions: the pump pops the next queue entry.
+    Idle,
+    /// Extract request sent; waiting for the source's `Migrate` reply
+    /// (the parcel, or empty when the session was not resident).
+    AwaitParcel { rsid: u64, from: usize, to: usize },
+    /// Parcel in hand; the pump must `Hello` the target to map the
+    /// session there.
+    NeedHello { rsid: u64, to: usize, user: u64, parcel: Vec<u8> },
+    /// Hello sent; waiting for the target's ack to land the mapping.
+    AwaitHello { rsid: u64, to: usize, parcel: Vec<u8> },
+    /// Mapping landed; the pump must send the inject (or skip straight
+    /// to commit when the parcel is empty).
+    NeedInject { rsid: u64, to: usize, parcel: Vec<u8> },
+    /// Inject sent; waiting for the target's empty `Migrate` confirm.
+    AwaitInject { rsid: u64, to: usize },
+    /// Confirmed: the pump unparks the session's held steps and
+    /// forwards them to the target in arrival order.
+    NeedCommit { rsid: u64, to: usize },
+    /// Drain only: `Shutdown` sent to the retired shard; waiting for
+    /// its final ack.
+    AwaitRetire { shard: usize },
+    /// The whole operation is finished; the pump acks the admin.
+    Done,
+}
+
+/// Open a reshard operation over a remote fleet: compute the moved set
+/// (every session mapped — or with a `Hello` in flight — on any shard
+/// whose route changes under `next`), park them all, and adopt the new
+/// epoch immediately so no step ever chases the old route. The returned
+/// op's queue is drained by the pump in the router loop.
+fn start_reshard(
+    admin: u64,
+    repoch: &mut RoutingEpoch,
+    next: RoutingEpoch,
+    retire: Option<usize>,
+    remote: &Remote,
+    park: &mut StepPark,
+    obs: &crate::obs::Obs,
+) -> ReshardOp {
+    let mut mapped: Vec<u64> = Vec::new();
+    for sh in &remote.shards {
+        mapped.extend(sh.sids.keys().copied());
+        mapped.extend(sh.pending_hellos.iter().map(|(_, _, rsid)| *rsid));
+    }
+    mapped.sort_unstable();
+    mapped.dedup();
+    let moved = repoch.moved(&next, mapped);
+    for &(rsid, _, _) in &moved {
+        park.begin(rsid);
+    }
+    obs.event(
+        0,
+        "epoch_bump",
+        vec![
+            ("epoch", format!("{}", next.epoch())),
+            ("shards", format!("{}", next.slots())),
+            ("moved", format!("{}", moved.len())),
+            ("op", if retire.is_some() { "drain" } else { "rebalance" }.to_string()),
+        ],
+    );
+    *repoch = next;
+    ReshardOp {
+        admin,
+        queue: moved.into_iter().collect(),
+        phase: MigPhase::Idle,
+        retire,
+        drained: retire,
+        migrated: 0,
+        started: std::time::Instant::now(),
+    }
 }
 
 /// One in-flight `MetricsDump` aggregation over a remote fleet.
@@ -933,7 +1262,7 @@ impl RouterServer {
             });
         }
 
-        let (mut mode, secret, restored_sessions, n) = if remote_mode {
+        let (mut mode, secret, restored_sessions, mut n) = if remote_mode {
             let shards: Vec<RemoteShard> =
                 opts.run.router.shard_addrs.iter().map(|a| RemoteShard::new(a.clone())).collect();
             let n = shards.len();
@@ -973,6 +1302,21 @@ impl RouterServer {
         let ny = opts.net.ny;
         let client_admin = opts.run.net.client_admin;
         let bind_cap = opts.run.serve.capacity;
+        // resharding state (DESIGN.md §14). `repoch` is the remote
+        // fleet's routing epoch (an in-process fleet keeps its epoch
+        // inside RouterCore); `active` marks remote physicals not yet
+        // drained; `park` holds steps whose session is mid-migration.
+        let mut repoch = RoutingEpoch::identity(n);
+        let mut active: Vec<bool> = vec![true; n];
+        let mut park = StepPark::new();
+        let mut reshard: Option<ReshardOp> = None;
+        let park_cap = opts.run.router.max_parked.max(1);
+        let mut migrated_total: u64 = 0;
+        if obs.enabled() {
+            obs.registry
+                .gauge("m2ru_routing_epoch", "routing epoch in force (bumps per cutover)")
+                .set(0.0);
+        }
 
         let serve_result = (|| -> Result<()> {
             while let Ok(ev) = rx.recv() {
@@ -984,6 +1328,9 @@ impl RouterServer {
                         }
                         Mode::Remote(remote) => {
                             for k in 0..n {
+                                if !active[k] {
+                                    continue;
+                                }
                                 if let Err(e) = remote.pulse(k, FLAG_TICK, &Message::Nop) {
                                     eprintln!("router: shard {k} missed a clock pulse: {e}");
                                 }
@@ -1023,9 +1370,9 @@ impl RouterServer {
                                 ) {
                                     table.drop_conn(conn, &reason);
                                 } else {
-                                    let k = shard_of(session, n);
                                     match &mut mode {
                                         Mode::Local(core) => {
+                                            let k = core.shard_of(session);
                                             core.submit(
                                                 session,
                                                 x,
@@ -1036,6 +1383,20 @@ impl RouterServer {
                                             shard_routed[k] += 1;
                                         }
                                         Mode::Remote(remote) => {
+                                            let k = repoch.route(session);
+                                            if park.is_parked(session) {
+                                                // state in flight between shards:
+                                                // hold the step, replay at commit
+                                                let held = ParkedStep {
+                                                    session,
+                                                    label,
+                                                    x,
+                                                    conn,
+                                                };
+                                                if let Err(e) = park.park(held, park_cap) {
+                                                    table.drop_conn(conn, &e.to_string());
+                                                }
+                                            } else {
                                             let ssid = remote.shards[k].sids.get(&session).copied();
                                             match ssid {
                                                 None => table.drop_conn(
@@ -1063,30 +1424,48 @@ impl RouterServer {
                                                     }
                                                 }
                                             }
+                                            }
                                         }
                                     }
                                 }
                             }
-                            Message::Hello { user } => {
+                            Message::Hello { user, epoch: _ } => {
                                 let sid = session_id_keyed(user, secret);
                                 match &mut mode {
-                                    Mode::Local(_) => match table.bind(conn, sid, bind_cap) {
-                                        Ok(()) => table.send(conn, &Message::Ack { value: sid }),
+                                    Mode::Local(core) => match table.bind(conn, sid, bind_cap) {
+                                        Ok(()) => table.send(
+                                            conn,
+                                            &Message::Ack {
+                                                value: sid,
+                                                epoch: core.epoch().epoch(),
+                                            },
+                                        ),
                                         Err(reason) => table.drop_conn(conn, &reason),
                                     },
                                     Mode::Remote(remote) => {
-                                        let k = shard_of(sid, n);
-                                        if remote.shards[k].sids.contains_key(&sid) {
-                                            // already mapped (an earlier connection's
-                                            // Hello): bind locally, no round-trip
+                                        let k = repoch.route(sid);
+                                        if remote.shards[k].sids.contains_key(&sid)
+                                            || park.is_parked(sid)
+                                        {
+                                            // already mapped there (an earlier
+                                            // connection's Hello), or its state is
+                                            // mid-flight *to* k and the migration
+                                            // will land the mapping: bind locally,
+                                            // no round-trip
                                             match table.bind(conn, sid, bind_cap) {
-                                                Ok(()) => {
-                                                    table.send(conn, &Message::Ack { value: sid })
-                                                }
+                                                Ok(()) => table.send(
+                                                    conn,
+                                                    &Message::Ack {
+                                                        value: sid,
+                                                        epoch: repoch.epoch(),
+                                                    },
+                                                ),
                                                 Err(reason) => table.drop_conn(conn, &reason),
                                             }
                                         } else {
-                                            match remote.forward(k, 0, &Message::Hello { user }) {
+                                            match remote
+                                                .forward(k, 0, &Message::Hello { user, epoch: 0 })
+                                            {
                                                 Ok(()) => remote.shards[k]
                                                     .pending_hellos
                                                     .push_back((Some(conn), user, sid)),
@@ -1107,6 +1486,7 @@ impl RouterServer {
                                     let text = local_stats_text(
                                         routed,
                                         &shard_routed,
+                                        core.epoch().epoch(),
                                         &reports,
                                         &table.drops,
                                     );
@@ -1120,6 +1500,11 @@ impl RouterServer {
                                             texts: vec![None; n],
                                         };
                                         for k in 0..n {
+                                            if !active[k] {
+                                                agg.texts[k] =
+                                                    Some("unreachable (retired)".to_string());
+                                                continue;
+                                            }
                                             if let Err(e) = remote.pulse(
                                                 k,
                                                 0,
@@ -1142,6 +1527,8 @@ impl RouterServer {
                                         routed,
                                         n,
                                         total_conns,
+                                        core.epoch().epoch(),
+                                        migrated_total,
                                         &table.flow,
                                         &table.drops,
                                     );
@@ -1157,6 +1544,11 @@ impl RouterServer {
                                             texts: vec![None; n],
                                         };
                                         for k in 0..n {
+                                            if !active[k] {
+                                                agg.texts[k] =
+                                                    Some(format!("# shard {k} retired\n"));
+                                                continue;
+                                            }
                                             if let Err(e) = remote.pulse(
                                                 k,
                                                 0,
@@ -1173,6 +1565,176 @@ impl RouterServer {
                                     }
                                 },
                             },
+                            Message::Epoch { epoch: _, shards: 0 } => {
+                                // epoch query: read-only, ungated (like Stats)
+                                let (e, w) = match &mode {
+                                    Mode::Local(core) => {
+                                        (core.epoch().epoch(), core.epoch().slots() as u32)
+                                    }
+                                    Mode::Remote(_) => (repoch.epoch(), repoch.slots() as u32),
+                                };
+                                table.send(conn, &Message::Epoch { epoch: e, shards: w });
+                            }
+                            Message::Epoch { epoch: _, shards: m } => {
+                                if !client_admin {
+                                    table.drop_conn(
+                                        conn,
+                                        "Epoch rebalance from a client (net.client_admin is off)",
+                                    );
+                                } else {
+                                    match &mut mode {
+                                        Mode::Local(core) => {
+                                            match core.rebalance(m as usize) {
+                                                Ok((e, migrated, steps)) => {
+                                                    table.route_logits(steps);
+                                                    if core.shards() > n {
+                                                        n = core.shards();
+                                                        shard_routed.resize(n, 0);
+                                                        shard_totals.resize(n, 0);
+                                                        active.resize(n, true);
+                                                    }
+                                                    migrated_total += migrated as u64;
+                                                    obs.event(
+                                                        0,
+                                                        "epoch_bump",
+                                                        vec![
+                                                            ("epoch", format!("{e}")),
+                                                            ("shards", format!("{m}")),
+                                                            ("migrated", format!("{migrated}")),
+                                                            ("op", "rebalance".to_string()),
+                                                        ],
+                                                    );
+                                                    table.send(
+                                                        conn,
+                                                        &Message::Epoch {
+                                                            epoch: e,
+                                                            shards: core.epoch().slots() as u32,
+                                                        },
+                                                    );
+                                                }
+                                                Err(e) => table.drop_conn(
+                                                    conn,
+                                                    &format!("rebalance failed: {e}"),
+                                                ),
+                                            }
+                                        }
+                                        Mode::Remote(remote) => {
+                                            let m = m as usize;
+                                            if reshard.is_some() {
+                                                table.drop_conn(
+                                                    conn,
+                                                    "a reshard operation is already in flight",
+                                                );
+                                            } else if m > n {
+                                                table.drop_conn(
+                                                    conn,
+                                                    &format!(
+                                                        "rebalance to {m} shards but only {n} configured (--shard-addrs)"
+                                                    ),
+                                                );
+                                            } else if !(0..m).all(|k| active[k]) {
+                                                table.drop_conn(
+                                                    conn,
+                                                    "rebalance map includes a drained shard",
+                                                );
+                                            } else {
+                                                match repoch.rebalanced((0..m as u32).collect()) {
+                                                    Ok(next) => {
+                                                        reshard = Some(start_reshard(
+                                                            conn, &mut repoch, next, None, remote,
+                                                            &mut park, &obs,
+                                                        ));
+                                                    }
+                                                    Err(e) => {
+                                                        table.drop_conn(conn, &e.to_string())
+                                                    }
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                            Message::Drain { shard } => {
+                                if !client_admin {
+                                    table.drop_conn(
+                                        conn,
+                                        "Drain from a client (net.client_admin is off)",
+                                    );
+                                } else {
+                                    let k = shard as usize;
+                                    match &mut mode {
+                                        Mode::Local(core) => {
+                                            let t0 = std::time::Instant::now();
+                                            match core.drain(k) {
+                                                Ok((e, migrated, steps)) => {
+                                                    table.route_logits(steps);
+                                                    migrated_total += migrated as u64;
+                                                    if obs.enabled() {
+                                                        obs.registry
+                                                            .histogram(
+                                                                "m2ru_drain_duration_ms",
+                                                                "wall time of shard drains",
+                                                            )
+                                                            .observe(
+                                                                t0.elapsed().as_millis() as u64
+                                                            );
+                                                    }
+                                                    obs.event(
+                                                        0,
+                                                        "drain_complete",
+                                                        vec![
+                                                            ("shard", format!("{k}")),
+                                                            ("epoch", format!("{e}")),
+                                                            ("migrated", format!("{migrated}")),
+                                                        ],
+                                                    );
+                                                    table.send(
+                                                        conn,
+                                                        &Message::Epoch {
+                                                            epoch: e,
+                                                            shards: core.epoch().slots() as u32,
+                                                        },
+                                                    );
+                                                }
+                                                Err(e) => table.drop_conn(
+                                                    conn,
+                                                    &format!("drain failed: {e}"),
+                                                ),
+                                            }
+                                        }
+                                        Mode::Remote(remote) => {
+                                            if reshard.is_some() {
+                                                table.drop_conn(
+                                                    conn,
+                                                    "a reshard operation is already in flight",
+                                                );
+                                            } else if k >= n || !active[k] {
+                                                table.drop_conn(
+                                                    conn,
+                                                    &format!("shard {k} is not live"),
+                                                );
+                                            } else {
+                                                match repoch.drained(shard) {
+                                                    Ok(next) => {
+                                                        reshard = Some(start_reshard(
+                                                            conn,
+                                                            &mut repoch,
+                                                            next,
+                                                            Some(k),
+                                                            remote,
+                                                            &mut park,
+                                                            &obs,
+                                                        ));
+                                                    }
+                                                    Err(e) => {
+                                                        table.drop_conn(conn, &e.to_string())
+                                                    }
+                                                }
+                                            }
+                                        }
+                                    }
+                                }
+                            }
                             Message::Shutdown => {
                                 if client_admin {
                                     shutdown_req = true;
@@ -1184,7 +1746,9 @@ impl RouterServer {
                                 }
                             }
                             Message::Nop => {}
-                            Message::Ack { .. } | Message::Logits { .. } => {
+                            Message::Ack { .. }
+                            | Message::Logits { .. }
+                            | Message::Migrate { .. } => {
                                 table.drop_conn(conn, "client sent a server-only message");
                             }
                         }
@@ -1208,6 +1772,9 @@ impl RouterServer {
                                         f |= FLAG_FLUSH;
                                     }
                                     for k in 0..n {
+                                        if !active[k] {
+                                            continue;
+                                        }
                                         if let Err(e) = remote.pulse(k, f, &Message::Nop) {
                                             eprintln!(
                                                 "router: shard {k} missed a clock pulse: {e}"
@@ -1220,10 +1787,11 @@ impl RouterServer {
                         if shutdown_req {
                             match &mut mode {
                                 Mode::Local(core) => {
+                                    let epoch = core.epoch().epoch();
                                     let (reports, tail) = core.finish()?;
                                     table.route_logits(tail);
                                     shard_reports = reports;
-                                    table.send(conn, &Message::Ack { value: routed });
+                                    table.send(conn, &Message::Ack { value: routed, epoch });
                                     return Ok(());
                                 }
                                 Mode::Remote(remote) => {
@@ -1233,6 +1801,9 @@ impl RouterServer {
                                     // once every reachable shard has
                                     let mut acked = vec![true; n];
                                     for k in 0..n {
+                                        if !active[k] {
+                                            continue;
+                                        }
                                         match remote.forward(k, 0, &Message::Shutdown) {
                                             Ok(()) => acked[k] = false,
                                             Err(e) => eprintln!(
@@ -1241,7 +1812,13 @@ impl RouterServer {
                                         }
                                     }
                                     if acked.iter().all(|a| *a) {
-                                        table.send(conn, &Message::Ack { value: routed });
+                                        table.send(
+                                            conn,
+                                            &Message::Ack {
+                                                value: routed,
+                                                epoch: repoch.epoch(),
+                                            },
+                                        );
                                         return Ok(());
                                     }
                                     shutdown_await = Some((conn, acked));
@@ -1252,9 +1829,10 @@ impl RouterServer {
                     REvent::ShardFrame { shard, frame } => {
                         let Mode::Remote(remote) = &mut mode else { continue };
                         match frame.msg {
-                            Message::Ack { value } => {
+                            Message::Ack { value, .. } => {
                                 // the shard answers FIFO: hello acks first,
-                                // then (only during teardown) the shutdown ack
+                                // then (only during a retire or teardown) the
+                                // shutdown ack
                                 if let Some((waiter, user, rsid)) =
                                     remote.shards[shard].pending_hellos.pop_front()
                                 {
@@ -1263,11 +1841,50 @@ impl RouterServer {
                                     remote.shards[shard].users.insert(rsid, user);
                                     if let Some(waiter) = waiter {
                                         match table.bind(waiter, rsid, bind_cap) {
-                                            Ok(()) => table
-                                                .send(waiter, &Message::Ack { value: rsid }),
+                                            Ok(()) => table.send(
+                                                waiter,
+                                                &Message::Ack {
+                                                    value: rsid,
+                                                    epoch: repoch.epoch(),
+                                                },
+                                            ),
                                             Err(reason) => table.drop_conn(waiter, &reason),
                                         }
                                     }
+                                    // a migration Hello: the mapping just
+                                    // landed on the target — hand the parcel
+                                    // back to the pump for the inject
+                                    if let Some(op) = &mut reshard {
+                                        let hit = matches!(
+                                            &op.phase,
+                                            MigPhase::AwaitHello { rsid: r, to, .. }
+                                                if *r == rsid && *to == shard
+                                        );
+                                        if hit {
+                                            let MigPhase::AwaitHello { rsid, to, parcel } =
+                                                std::mem::replace(
+                                                    &mut op.phase,
+                                                    MigPhase::Idle,
+                                                )
+                                            else {
+                                                unreachable!("checked above")
+                                            };
+                                            op.phase =
+                                                MigPhase::NeedInject { rsid, to, parcel };
+                                        }
+                                    }
+                                } else if matches!(
+                                    &reshard,
+                                    Some(op) if matches!(
+                                        op.phase,
+                                        MigPhase::AwaitRetire { shard: s } if s == shard
+                                    )
+                                ) {
+                                    // the drained shard's final ack: it has
+                                    // flushed, checkpointed and exited
+                                    let op = reshard.as_mut().expect("checked above");
+                                    shard_totals[shard] = value;
+                                    op.phase = MigPhase::Done;
                                 } else if let Some((admin, acked)) = &mut shutdown_await {
                                     if !acked[shard] {
                                         acked[shard] = true;
@@ -1275,7 +1892,13 @@ impl RouterServer {
                                     }
                                     if acked.iter().all(|a| *a) {
                                         let admin = *admin;
-                                        table.send(admin, &Message::Ack { value: routed });
+                                        table.send(
+                                            admin,
+                                            &Message::Ack {
+                                                value: routed,
+                                                epoch: repoch.epoch(),
+                                            },
+                                        );
                                         return Ok(());
                                     }
                                 }
@@ -1301,6 +1924,53 @@ impl RouterServer {
                                 if let Some(agg) = &mut mdump {
                                     if agg.texts[shard].is_none() {
                                         agg.texts[shard] = Some(text);
+                                    }
+                                }
+                            }
+                            Message::Migrate { session: _, payload } => {
+                                // a migration reply: the source's parcel
+                                // (extract) or the target's empty confirm
+                                // (inject); which one is determined by the
+                                // op's phase, not the payload
+                                if let Some(op) = &mut reshard {
+                                    match std::mem::replace(&mut op.phase, MigPhase::Idle) {
+                                        MigPhase::AwaitParcel { rsid, from, to }
+                                            if shard == from =>
+                                        {
+                                            // the session no longer lives on
+                                            // the source: drop its translation
+                                            // entries; the target Hello
+                                            // re-creates them over there
+                                            if let Some(ssid) =
+                                                remote.shards[from].sids.remove(&rsid)
+                                            {
+                                                remote.shards[from].rev.remove(&ssid);
+                                            }
+                                            match remote.shards[from].users.remove(&rsid) {
+                                                Some(user) => {
+                                                    op.phase = MigPhase::NeedHello {
+                                                        rsid,
+                                                        to,
+                                                        user,
+                                                        parcel: payload,
+                                                    };
+                                                }
+                                                None => {
+                                                    for s in park.unpark(rsid) {
+                                                        table.drop_conn(
+                                                            s.conn,
+                                                            "migration lost the session's user key",
+                                                        );
+                                                    }
+                                                }
+                                            }
+                                        }
+                                        MigPhase::AwaitInject { rsid, to } if shard == to => {
+                                            op.phase = MigPhase::NeedCommit { rsid, to };
+                                        }
+                                        // stray migrate frame: put the phase
+                                        // back and ignore it
+                                        other => op.phase = other,
                                     }
                                 }
                             }
@@ -1344,13 +2014,55 @@ impl RouterServer {
                                         ));
                                     }
                                 }
+                                // a reshard op waiting on this shard can
+                                // never hear back: skip the in-flight
+                                // session (its parked steps can no longer be
+                                // delivered in order), or treat a dying
+                                // retiree as retired
+                                if let Some(op) = &mut reshard {
+                                    let stalled = match &op.phase {
+                                        MigPhase::AwaitParcel { from, .. } => *from == shard,
+                                        MigPhase::AwaitHello { to, .. }
+                                        | MigPhase::AwaitInject { to, .. } => *to == shard,
+                                        _ => false,
+                                    };
+                                    if stalled {
+                                        if let MigPhase::AwaitParcel { rsid, .. }
+                                        | MigPhase::AwaitHello { rsid, .. }
+                                        | MigPhase::AwaitInject { rsid, .. } =
+                                            std::mem::replace(&mut op.phase, MigPhase::Idle)
+                                        {
+                                            for s in park.unpark(rsid) {
+                                                table.drop_conn(
+                                                    s.conn,
+                                                    &format!(
+                                                        "shard {shard} connection lost mid-migration"
+                                                    ),
+                                                );
+                                            }
+                                        }
+                                    }
+                                    if matches!(
+                                        op.phase,
+                                        MigPhase::AwaitRetire { shard: s } if s == shard
+                                    ) {
+                                        // dead is as retired as it gets
+                                        op.phase = MigPhase::Done;
+                                    }
+                                }
                                 if let Some((admin, acked)) = &mut shutdown_await {
                                     if !acked[shard] {
                                         acked[shard] = true; // dead shard: nothing to wait for
                                     }
                                     if acked.iter().all(|a| *a) {
                                         let admin = *admin;
-                                        table.send(admin, &Message::Ack { value: routed });
+                                        table.send(
+                                            admin,
+                                            &Message::Ack {
+                                                value: routed,
+                                                epoch: repoch.epoch(),
+                                            },
+                                        );
                                         return Ok(());
                                     }
                                 }
@@ -1367,12 +2079,260 @@ impl RouterServer {
                         table.drop_conn(waiter, "shard connection lost with a Hello in flight");
                     }
                 }
+                // the reshard pump: drive the in-flight migration state
+                // machine (remote fleets only — in-process fleets cut
+                // over synchronously above). Handlers parked shard
+                // replies as Need* phases; every wire action happens
+                // here. Await* phases stop the pump until the next
+                // shard frame arrives.
+                let mut reshard_done: Option<(u64, u64, Option<usize>, std::time::Instant)> =
+                    None;
+                if let (Some(op), Mode::Remote(remote)) = (&mut reshard, &mut mode) {
+                    let mut spins = op.queue.len().max(1);
+                    loop {
+                        match std::mem::replace(&mut op.phase, MigPhase::Idle) {
+                            MigPhase::Idle => {
+                                let Some((rsid, from, to)) = op.queue.pop_front() else {
+                                    if let Some(k) = op.retire.take() {
+                                        match remote.forward(k, 0, &Message::Shutdown) {
+                                            Ok(()) => {
+                                                op.phase = MigPhase::AwaitRetire { shard: k };
+                                                break;
+                                            }
+                                            Err(e) => {
+                                                eprintln!(
+                                                    "router: drained shard {k} unreachable at retire: {e}"
+                                                );
+                                                continue; // falls into Done
+                                            }
+                                        }
+                                    }
+                                    op.phase = MigPhase::Done;
+                                    continue;
+                                };
+                                let Some(&ssid) = remote.shards[from].sids.get(&rsid) else {
+                                    if remote.shards[from]
+                                        .pending_hellos
+                                        .iter()
+                                        .any(|(_, _, r)| *r == rsid)
+                                    {
+                                        // its Hello is still in flight to the
+                                        // source: retry after that ack lands
+                                        op.queue.push_back((rsid, from, to));
+                                        spins -= 1;
+                                        if spins == 0 {
+                                            break;
+                                        }
+                                        continue;
+                                    }
+                                    // never mapped and no hello pending:
+                                    // nothing to move; held steps can no
+                                    // longer be delivered in order
+                                    for s in park.unpark(rsid) {
+                                        table.drop_conn(
+                                            s.conn,
+                                            &format!(
+                                                "session lost its source shard {from} mid-migration"
+                                            ),
+                                        );
+                                    }
+                                    continue;
+                                };
+                                obs.event(
+                                    0,
+                                    "migrate_start",
+                                    vec![
+                                        ("session", format!("{rsid:016x}")),
+                                        ("from", format!("{from}")),
+                                        ("to", format!("{to}")),
+                                    ],
+                                );
+                                match remote.forward(
+                                    from,
+                                    0,
+                                    &Message::Migrate { session: ssid, payload: Vec::new() },
+                                ) {
+                                    Ok(()) => {
+                                        op.phase = MigPhase::AwaitParcel { rsid, from, to };
+                                        break;
+                                    }
+                                    Err(e) => {
+                                        for s in park.unpark(rsid) {
+                                            table.drop_conn(
+                                                s.conn,
+                                                &format!(
+                                                    "shard {from} unavailable during migration: {e}"
+                                                ),
+                                            );
+                                        }
+                                        continue;
+                                    }
+                                }
+                            }
+                            MigPhase::NeedHello { rsid, to, user, parcel } => {
+                                match remote.forward(
+                                    to,
+                                    0,
+                                    &Message::Hello { user, epoch: 0 },
+                                ) {
+                                    Ok(()) => {
+                                        remote.shards[to]
+                                            .pending_hellos
+                                            .push_back((None, user, rsid));
+                                        op.phase = MigPhase::AwaitHello { rsid, to, parcel };
+                                        break;
+                                    }
+                                    Err(e) => {
+                                        for s in park.unpark(rsid) {
+                                            table.drop_conn(
+                                                s.conn,
+                                                &format!(
+                                                    "shard {to} unavailable during migration: {e}"
+                                                ),
+                                            );
+                                        }
+                                        continue;
+                                    }
+                                }
+                            }
+                            MigPhase::NeedInject { rsid, to, parcel } => {
+                                if parcel.is_empty() {
+                                    // no resident state to ship: the Hello
+                                    // alone re-homed the session
+                                    op.phase = MigPhase::NeedCommit { rsid, to };
+                                    continue;
+                                }
+                                let Some(&ssid) = remote.shards[to].sids.get(&rsid) else {
+                                    for s in park.unpark(rsid) {
+                                        table.drop_conn(
+                                            s.conn,
+                                            "migration target lost the session mapping",
+                                        );
+                                    }
+                                    continue;
+                                };
+                                match remote.forward(
+                                    to,
+                                    0,
+                                    &Message::Migrate { session: ssid, payload: parcel },
+                                ) {
+                                    Ok(()) => {
+                                        op.phase = MigPhase::AwaitInject { rsid, to };
+                                        break;
+                                    }
+                                    Err(e) => {
+                                        for s in park.unpark(rsid) {
+                                            table.drop_conn(
+                                                s.conn,
+                                                &format!(
+                                                    "shard {to} unavailable during migration: {e}"
+                                                ),
+                                            );
+                                        }
+                                        continue;
+                                    }
+                                }
+                            }
+                            MigPhase::NeedCommit { rsid, to } => {
+                                op.migrated += 1;
+                                obs.event(
+                                    0,
+                                    "migrate_commit",
+                                    vec![
+                                        ("session", format!("{rsid:016x}")),
+                                        ("to", format!("{to}")),
+                                    ],
+                                );
+                                if let Some(&ssid) = remote.shards[to].sids.get(&rsid) {
+                                    for s in park.unpark(rsid) {
+                                        let fwd = match s.label {
+                                            Some(l) => Message::StepLabeled {
+                                                session: ssid,
+                                                label: l,
+                                                x: s.x,
+                                            },
+                                            None => Message::Step { session: ssid, x: s.x },
+                                        };
+                                        match remote.forward(to, 0, &fwd) {
+                                            Ok(()) => {
+                                                routed += 1;
+                                                shard_routed[to] += 1;
+                                            }
+                                            Err(e) => table.drop_conn(
+                                                s.conn,
+                                                &format!("shard {to} unavailable: {e}"),
+                                            ),
+                                        }
+                                    }
+                                } else {
+                                    for s in park.unpark(rsid) {
+                                        table.drop_conn(
+                                            s.conn,
+                                            "migration target lost the session mapping",
+                                        );
+                                    }
+                                }
+                                continue;
+                            }
+                            p @ (MigPhase::AwaitParcel { .. }
+                            | MigPhase::AwaitHello { .. }
+                            | MigPhase::AwaitInject { .. }
+                            | MigPhase::AwaitRetire { .. }) => {
+                                op.phase = p;
+                                break;
+                            }
+                            MigPhase::Done => {
+                                op.phase = MigPhase::Done;
+                                reshard_done =
+                                    Some((op.admin, op.migrated, op.drained, op.started));
+                                break;
+                            }
+                        }
+                    }
+                }
+                if let Some((admin, migrated, drained, started)) = reshard_done {
+                    reshard = None;
+                    migrated_total += migrated;
+                    if let Some(k) = drained {
+                        active[k] = false;
+                        if obs.enabled() {
+                            obs.registry
+                                .histogram(
+                                    "m2ru_drain_duration_ms",
+                                    "wall time of shard drains",
+                                )
+                                .observe(started.elapsed().as_millis() as u64);
+                        }
+                        obs.event(
+                            0,
+                            "drain_complete",
+                            vec![
+                                ("shard", format!("{k}")),
+                                ("epoch", format!("{}", repoch.epoch())),
+                                ("migrated", format!("{migrated}")),
+                            ],
+                        );
+                    }
+                    table.send(
+                        admin,
+                        &Message::Epoch {
+                            epoch: repoch.epoch(),
+                            shards: repoch.slots() as u32,
+                        },
+                    );
+                }
                 // a completed stats aggregation answers every waiter
                 let complete =
                     stats.as_ref().map_or(false, |agg| agg.texts.iter().all(|t| t.is_some()));
                 if complete {
                     let agg = stats.take().expect("checked above");
-                    let text = remote_stats_text(routed, &shard_routed, &agg.texts, &table.drops);
+                    let text = remote_stats_text(
+                        routed,
+                        &shard_routed,
+                        repoch.epoch(),
+                        &agg.texts,
+                        &table.drops,
+                    );
                     for waiter in agg.waiters {
                         table.send(waiter, &Message::Stats { text: text.clone() });
                     }
@@ -1389,6 +2349,8 @@ impl RouterServer {
                         routed,
                         n,
                         total_conns,
+                        repoch.epoch(),
+                        migrated_total,
                         &table.flow,
                         &table.drops,
                     );
@@ -1419,6 +2381,10 @@ impl RouterServer {
             }
         }
 
+        let epoch = match &mode {
+            Mode::Local(core) => core.epoch().epoch(),
+            Mode::Remote(_) => repoch.epoch(),
+        };
         Ok(RouterReport {
             shards: n,
             remote: remote_mode,
@@ -1429,6 +2395,8 @@ impl RouterServer {
             shard_totals,
             restored_sessions,
             outbox_drops: table.drops.clone(),
+            epoch,
+            migrated: migrated_total,
         })
     }
 }
@@ -1440,12 +2408,14 @@ fn router_stats_header(
     mode: &str,
     shards: usize,
     routed: u64,
+    epoch: u64,
     drops: &OutboxDrops,
 ) -> Vec<String> {
     vec![
         format!("router_mode={mode}"),
         format!("router_shards={shards}"),
         format!("router_routed={routed}"),
+        format!("router_epoch={epoch}"),
         format!("router_outbox_drops_full={}", drops.full),
         format!("router_outbox_drops_timeout={}", drops.timeout),
         format!("router_outbox_drops_writer_failed={}", drops.writer_failed),
@@ -1457,10 +2427,11 @@ fn router_stats_header(
 fn local_stats_text(
     routed: u64,
     shard_routed: &[u64],
+    epoch: u64,
     reports: &[(usize, ServeReport)],
     drops: &OutboxDrops,
 ) -> String {
-    let mut lines = router_stats_header("local", shard_routed.len(), routed, drops);
+    let mut lines = router_stats_header("local", shard_routed.len(), routed, epoch, drops);
     for (k, rep) in reports {
         lines.push(format!("shard{k}_routed={}", shard_routed[*k]));
         for l in rep.kv_lines() {
@@ -1476,10 +2447,11 @@ fn local_stats_text(
 fn remote_stats_text(
     routed: u64,
     shard_routed: &[u64],
+    epoch: u64,
     texts: &[Option<String>],
     drops: &OutboxDrops,
 ) -> String {
-    let mut lines = router_stats_header("remote", texts.len(), routed, drops);
+    let mut lines = router_stats_header("remote", texts.len(), routed, epoch, drops);
     for (k, text) in texts.iter().enumerate() {
         lines.push(format!("shard{k}_routed={}", shard_routed[k]));
         match text {
@@ -1503,6 +2475,8 @@ fn router_metrics_text(
     routed: u64,
     shards: usize,
     conns: u64,
+    epoch: u64,
+    migrated: u64,
     flow: &OutboxFlow,
     drops: &OutboxDrops,
 ) -> String {
@@ -1516,6 +2490,13 @@ fn router_metrics_text(
     reg.counter("m2ru_router_routed_total", "requests routed to shards").set(routed);
     reg.counter("m2ru_router_connections_total", "client connections accepted").set(conns);
     reg.gauge("m2ru_router_shards", "shards in the fleet").set(shards as f64);
+    reg.gauge("m2ru_routing_epoch", "routing epoch in force (bumps per cutover)")
+        .set(epoch as f64);
+    reg.counter(
+        "m2ru_sessions_migrated_total",
+        "sessions migrated between shards by rebalances/drains",
+    )
+    .set(migrated);
     reg.gauge("m2ru_outbox_occupancy", "frames currently queued in writer outboxes")
         .set(flow.occupancy() as f64);
     for (name, v) in [

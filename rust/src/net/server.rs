@@ -69,13 +69,24 @@
 //! hold at most `serve.capacity` bindings, so the binding table stays
 //! bounded under a Hello flood.
 //!
-//! Client administration — `Shutdown` frames and the TICK/FLUSH clock
-//! flags — is on by default, which suits the loopback harness and
-//! closed-loop benches where the single client *is* the operator. For a
-//! server exposed to untrusted clients, set `net.client_admin = false`
-//! and a `net.tick_ms` period: client flags are then ignored, `Shutdown`
-//! becomes a protocol violation, and a server-side timer drives the
-//! logical clock (batching, TTL expiry, checkpoint cadence) instead.
+//! Client administration — `Shutdown` frames, `Migrate` session
+//! transfers and the TICK/FLUSH clock flags — is on by default, which
+//! suits the loopback harness, closed-loop benches and router-owned
+//! shards where the single client *is* the operator. For a server
+//! exposed to untrusted clients, set `net.client_admin = false` and a
+//! `net.tick_ms` period: client flags are then ignored, `Shutdown` and
+//! `Migrate` become protocol violations, and a server-side timer drives
+//! the logical clock (batching, TTL expiry, checkpoint cadence)
+//! instead.
+//!
+//! A plain server is not a router: its routing epoch is always 0 (it
+//! echoes that in every `Ack` and ignores the client's `Hello` epoch),
+//! and the router-plane `Drain`/`Epoch` frames are protocol violations
+//! here. `Migrate` is the shard half of a live migration (DESIGN.md
+//! §14): an empty payload asks this server to *extract* the session
+//! into a sealed parcel (replied in a `Migrate` frame — empty when the
+//! session is not resident), a non-empty payload *injects* a parcel
+//! under the frame's session id (confirmed with an empty `Migrate`).
 
 use std::net::{SocketAddr, TcpListener};
 use std::path::{Path, PathBuf};
@@ -88,8 +99,8 @@ use anyhow::{Context, Result};
 
 use crate::config::{NetConfig, RunConfig};
 use crate::serve::{
-    session_id_keyed, try_restore, CompletedStep, RestoreOutcome, ServeCore, ServeReport,
-    SnapshotPolicy,
+    extract_parcel, inject_parcel, session_id_keyed, try_restore, CompletedStep, RestoreOutcome,
+    ServeCore, ServeReport, SnapshotPolicy,
 };
 
 use super::conn::{self, ConnEvent, ConnTable, OutboxFlow};
@@ -337,14 +348,60 @@ impl NetServer {
                                     core.submit(session, x, Some(label as usize), conn);
                                 }
                             }
-                            Message::Hello { user } => {
+                            // a plain server has no routing epochs: the
+                            // client's proposed epoch is ignored and the
+                            // ack reports epoch 0
+                            Message::Hello { user, epoch: _ } => {
                                 let sid = session_id_keyed(user, core.session_secret());
                                 match table.bind(conn, sid, bind_cap) {
                                     Ok(()) => {
-                                        table.send(conn, &Message::Ack { value: sid });
+                                        table.send(conn, &Message::Ack { value: sid, epoch: 0 });
                                     }
                                     Err(reason) => table.drop_conn(conn, &reason),
                                 }
+                            }
+                            Message::Migrate { session, payload } => {
+                                if !client_admin {
+                                    table.drop_conn(
+                                        conn,
+                                        "Migrate from a client (net.client_admin is off)",
+                                    );
+                                } else if payload.is_empty() {
+                                    // extract: ship the session out as a
+                                    // sealed parcel (empty = not resident)
+                                    match extract_parcel(&mut core, session) {
+                                        Ok(parcel) => table.send(
+                                            conn,
+                                            &Message::Migrate {
+                                                session,
+                                                payload: parcel.unwrap_or_default(),
+                                            },
+                                        ),
+                                        // steps still queued for the
+                                        // session: the requester failed to
+                                        // quiesce — a protocol violation,
+                                        // not a server fault
+                                        Err(e) => table.drop_conn(conn, &e.to_string()),
+                                    }
+                                } else {
+                                    // inject: install the parcel under
+                                    // *this* server's session id; a parcel
+                                    // that fails its checksum/shape checks
+                                    // installs nothing
+                                    match inject_parcel(&mut core, session, &payload) {
+                                        Ok(_slot) => table.send(
+                                            conn,
+                                            &Message::Migrate { session, payload: Vec::new() },
+                                        ),
+                                        Err(e) => table.drop_conn(conn, &e.to_string()),
+                                    }
+                                }
+                            }
+                            Message::Drain { .. } | Message::Epoch { .. } => {
+                                table.drop_conn(
+                                    conn,
+                                    "router-plane frame (Drain/Epoch) sent to a plain server",
+                                );
                             }
                             Message::Stats { .. } => {
                                 let sessions = core.store().len();
@@ -414,7 +471,10 @@ impl NetServer {
                             }
                         }
                         if shutdown {
-                            table.send(conn, &Message::Ack { value: core.metrics().requests });
+                            table.send(
+                                conn,
+                                &Message::Ack { value: core.metrics().requests, epoch: 0 },
+                            );
                             return Ok(());
                         }
                     }

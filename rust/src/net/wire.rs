@@ -6,19 +6,28 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic    "M2RU"
-//! 4       2     version  1
-//! 6       1     kind     message discriminant (1..=9)
+//! 4       2     version  2
+//! 6       1     kind     message discriminant (1..=12)
 //! 7       1     flags    FLAG_TICK | FLAG_FLUSH
 //! 8       4     len      payload byte count (<= MAX_PAYLOAD)
 //! 12      len   payload  per-kind layout below
 //! ```
 //!
-//! Per-kind payloads: `Hello{user u64}`, `Step{session u64, n u32,
-//! n×f32}`, `StepLabeled{session u64, label u32, n u32, n×f32}`,
-//! `Ack{value u64}`, `Logits{session u64, pred u32, n u32, n×f32}`,
-//! `Stats{utf-8 bytes}` (the header's payload length delimits the
-//! text), `Shutdown{}` (empty), `Nop{}` (empty), `MetricsDump{utf-8
-//! bytes}` (same text layout as `Stats`).
+//! Per-kind payloads: `Hello{user u64, epoch u64}`, `Step{session u64,
+//! n u32, n×f32}`, `StepLabeled{session u64, label u32, n u32, n×f32}`,
+//! `Ack{value u64, epoch u64}`, `Logits{session u64, pred u32, n u32,
+//! n×f32}`, `Stats{utf-8 bytes}` (the header's payload length delimits
+//! the text), `Shutdown{}` (empty), `Nop{}` (empty), `MetricsDump{utf-8
+//! bytes}` (same text layout as `Stats`), `Migrate{session u64, n u32,
+//! n bytes}` (an opaque migration parcel, DESIGN.md §14), `Drain{shard
+//! u32}`, `Epoch{epoch u64, shards u32}`.
+//!
+//! Version 2 extends version 1 with the **routing epoch** (DESIGN.md
+//! §14): every `Hello` carries the client's last-known epoch (0 when
+//! unknown) and every `Ack` carries the responder's current epoch, so
+//! both ends of a handshake agree on which `shard_of` mapping is in
+//! force. `Migrate`/`Drain`/`Epoch` are the resharding control plane;
+//! plain servers treat `Drain`/`Epoch` from clients as violations.
 //!
 //! Flags drive the server's deterministic logical clock: `FLAG_TICK`
 //! marks the end of an admission wave (dispatch per the max-batch/
@@ -39,11 +48,13 @@ use crate::codec::{LeReader, LeWriter};
 
 /// `"M2RU"`.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"M2RU");
-pub const VERSION: u16 = 1;
+pub const VERSION: u16 = 2;
 pub const HEADER_LEN: usize = 12;
 /// Upper bound on one frame's payload; larger length fields are rejected
-/// before any allocation happens.
-pub const MAX_PAYLOAD: u32 = 1 << 20;
+/// before any allocation happens. Sized so one `Migrate` frame holds a
+/// whole session parcel (history ring + pending window) with room to
+/// spare.
+pub const MAX_PAYLOAD: u32 = 1 << 24;
 
 /// End of an admission wave: dispatch ready batches, advance the tick.
 pub const FLAG_TICK: u8 = 0b01;
@@ -53,17 +64,19 @@ pub const FLAG_FLUSH: u8 = 0b10;
 /// One protocol message.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
-    /// Client handshake; the server replies `Ack{session id}` for the
-    /// given user key (a keyed hash under the server's per-boot secret)
-    /// and binds that session to this connection — only the binding
-    /// connection may step it.
-    Hello { user: u64 },
+    /// Client handshake; the server replies `Ack{session id, epoch}` for
+    /// the given user key (a keyed hash under the server's per-boot
+    /// secret) and binds that session to this connection — only the
+    /// binding connection may step it. `epoch` is the client's last-known
+    /// routing epoch (0 when unknown; plain servers ignore it).
+    Hello { user: u64, epoch: u64 },
     /// One unlabeled timestep of `session`'s stream.
     Step { session: u64, x: Vec<f32> },
     /// One labeled timestep (feeds the online learner when dispatched).
     StepLabeled { session: u64, label: u32, x: Vec<f32> },
-    /// Generic acknowledgement carrying one value.
-    Ack { value: u64 },
+    /// Generic acknowledgement carrying one value plus the responder's
+    /// current routing epoch (0 from a plain single-shard server).
+    Ack { value: u64, epoch: u64 },
     /// Served logits for one completed step.
     Logits { session: u64, pred: u32, logits: Vec<f32> },
     /// Stats request (client → server, empty text) and response
@@ -84,6 +97,23 @@ pub enum Message {
     /// stays for compatibility with pre-§13 clients; this frame carries
     /// the full registry instead of the human report.
     MetricsDump { text: String },
+    /// Resharding control plane (DESIGN.md §14): one session's sealed
+    /// migration parcel. Router → shard with an **empty** payload:
+    /// extract `session` (the shard removes it and replies `Migrate`
+    /// with the parcel bytes). Router → shard with a **non-empty**
+    /// payload: inject the parcel (the shard installs it and replies
+    /// `Migrate` with an empty payload). The parcel bytes are opaque at
+    /// this layer — sealed and versioned by `serve::migrate`.
+    Migrate { session: u64, payload: Vec<u8> },
+    /// Admin → router: quiesce shard `shard`, migrate its sessions out,
+    /// checkpoint and retire it. The router replies `Epoch{new epoch,
+    /// new width}` after cutover. A violation on a plain server.
+    Drain { shard: u32 },
+    /// Routing-epoch control. Admin → router: `shards == 0` queries the
+    /// current epoch, `shards == M` requests an N→M rebalance. Router →
+    /// admin / router → shard: announces the (possibly bumped) epoch and
+    /// the shard count it maps over.
+    Epoch { epoch: u64, shards: u32 },
 }
 
 impl Message {
@@ -99,6 +129,9 @@ impl Message {
             Message::Shutdown => 7,
             Message::Nop => 8,
             Message::MetricsDump { .. } => 9,
+            Message::Migrate { .. } => 10,
+            Message::Drain { .. } => 11,
+            Message::Epoch { .. } => 12,
         }
     }
 }
@@ -115,7 +148,10 @@ pub struct Frame {
 fn encode_payload(msg: &Message) -> Vec<u8> {
     let mut p = LeWriter::new();
     match msg {
-        Message::Hello { user } => p.u64(*user),
+        Message::Hello { user, epoch } => {
+            p.u64(*user);
+            p.u64(*epoch);
+        }
         Message::Step { session, x } => {
             p.u64(*session);
             p.f32s(x);
@@ -125,7 +161,10 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
             p.u32(*label);
             p.f32s(x);
         }
-        Message::Ack { value } => p.u64(*value),
+        Message::Ack { value, epoch } => {
+            p.u64(*value);
+            p.u64(*epoch);
+        }
         Message::Logits { session, pred, logits } => {
             p.u64(*session);
             p.u32(*pred);
@@ -133,6 +172,15 @@ fn encode_payload(msg: &Message) -> Vec<u8> {
         }
         Message::Stats { text } | Message::MetricsDump { text } => p.raw(text.as_bytes()),
         Message::Shutdown | Message::Nop => {}
+        Message::Migrate { session, payload } => {
+            p.u64(*session);
+            p.bytes(payload);
+        }
+        Message::Drain { shard } => p.u32(*shard),
+        Message::Epoch { epoch, shards } => {
+            p.u64(*epoch);
+            p.u32(*shards);
+        }
     }
     p.into_vec()
 }
@@ -160,10 +208,10 @@ pub fn encode_frame(flags: u8, msg: &Message) -> Vec<u8> {
 fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message> {
     let mut c = LeReader::new(payload);
     let msg = match kind {
-        1 => Message::Hello { user: c.u64()? },
+        1 => Message::Hello { user: c.u64()?, epoch: c.u64()? },
         2 => Message::Step { session: c.u64()?, x: c.f32s()? },
         3 => Message::StepLabeled { session: c.u64()?, label: c.u32()?, x: c.f32s()? },
-        4 => Message::Ack { value: c.u64()? },
+        4 => Message::Ack { value: c.u64()?, epoch: c.u64()? },
         5 => Message::Logits { session: c.u64()?, pred: c.u32()?, logits: c.f32s()? },
         6 => {
             // the frame header's length delimits the text — no inner count
@@ -179,6 +227,9 @@ fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message> {
                 .map_err(|_| anyhow::anyhow!("metrics text not utf-8"))?;
             Message::MetricsDump { text }
         }
+        10 => Message::Migrate { session: c.u64()?, payload: c.byte_vec()? },
+        11 => Message::Drain { shard: c.u32()? },
+        12 => Message::Epoch { epoch: c.u64()?, shards: c.u32()? },
         other => bail!("unknown message kind {other}"),
     };
     c.done()?;
@@ -276,13 +327,14 @@ mod tests {
 
     #[test]
     fn every_message_kind_roundtrips() {
-        roundtrip(0, Message::Hello { user: 0xDEAD_BEEF });
+        roundtrip(0, Message::Hello { user: 0xDEAD_BEEF, epoch: 0 });
+        roundtrip(0, Message::Hello { user: 1, epoch: u64::MAX });
         roundtrip(FLAG_TICK, Message::Step { session: 7, x: vec![0.5, -0.25, 1.0] });
         roundtrip(
             FLAG_TICK | FLAG_FLUSH,
             Message::StepLabeled { session: 9, label: 3, x: vec![-1.0, 0.0] },
         );
-        roundtrip(0, Message::Ack { value: 42 });
+        roundtrip(0, Message::Ack { value: 42, epoch: 3 });
         roundtrip(0, Message::Logits { session: 1, pred: 2, logits: vec![0.1, 0.9, -3.5] });
         roundtrip(0, Message::Stats { text: "req=10 batches=2".to_string() });
         roundtrip(FLAG_FLUSH, Message::Shutdown);
@@ -290,12 +342,17 @@ mod tests {
         roundtrip(FLAG_TICK | FLAG_FLUSH, Message::Nop);
         roundtrip(0, Message::MetricsDump { text: "events".to_string() });
         roundtrip(0, Message::MetricsDump { text: "# TYPE m2ru_requests_total counter\n".into() });
+        roundtrip(0, Message::Migrate { session: 11, payload: vec![0xDE, 0xAD, 0x00, 0x7F] });
+        roundtrip(0, Message::Drain { shard: 2 });
+        roundtrip(0, Message::Epoch { epoch: 5, shards: 3 });
+        roundtrip(0, Message::Epoch { epoch: 7, shards: 0 });
     }
 
     #[test]
     fn empty_vectors_and_strings_roundtrip() {
         roundtrip(0, Message::Step { session: 0, x: vec![] });
         roundtrip(0, Message::Stats { text: String::new() });
+        roundtrip(0, Message::Migrate { session: 4, payload: vec![] });
     }
 
     #[test]
@@ -321,9 +378,17 @@ mod tests {
 
     #[test]
     fn truncated_frames_rejected_without_panic() {
-        let buf = encode_frame(0, &Message::Step { session: 3, x: vec![1.0, 2.0] });
-        for cut in 0..buf.len() {
-            assert!(decode_frame(&buf[..cut]).is_err(), "cut at {cut} must error");
+        let frames = [
+            encode_frame(0, &Message::Step { session: 3, x: vec![1.0, 2.0] }),
+            encode_frame(0, &Message::Hello { user: 9, epoch: 4 }),
+            encode_frame(0, &Message::Migrate { session: 8, payload: vec![1, 2, 3, 4, 5] }),
+            encode_frame(0, &Message::Drain { shard: 1 }),
+            encode_frame(0, &Message::Epoch { epoch: 2, shards: 3 }),
+        ];
+        for buf in &frames {
+            for cut in 0..buf.len() {
+                assert!(decode_frame(&buf[..cut]).is_err(), "cut at {cut} must error");
+            }
         }
     }
 
@@ -339,9 +404,9 @@ mod tests {
 
     #[test]
     fn trailing_payload_bytes_rejected() {
-        // declare a 9-byte payload for an Ack (8 bytes used)
-        let mut buf = encode_frame(0, &Message::Ack { value: 5 });
-        buf[8..12].copy_from_slice(&9u32.to_le_bytes());
+        // declare a 17-byte payload for an Ack (16 bytes used)
+        let mut buf = encode_frame(0, &Message::Ack { value: 5, epoch: 1 });
+        buf[8..12].copy_from_slice(&17u32.to_le_bytes());
         buf.push(0xAB);
         assert!(decode_frame(&buf).unwrap_err().to_string().contains("trailing"));
     }

@@ -7,7 +7,7 @@
 //! ## Files in a checkpoint directory
 //!
 //! ```text
-//! snapshot.m2ck              the last full snapshot (format v3)
+//! snapshot.m2ck              the last full snapshot (format v4)
 //! delta-<epoch>-<seq>.m2cd   deltas since it, seq = 1, 2, …
 //! ```
 //!
@@ -24,7 +24,7 @@
 //!
 //! ```text
 //! magic    u32   "M2CK" (full) / "M2CD" (delta)
-//! version  u32   3
+//! version  u32   4
 //! len      u64   payload byte count
 //! payload  [len] sections (see DESIGN.md §10)
 //! checksum u64   FNV-1a 64 over the payload
@@ -36,12 +36,19 @@
 //! epoch, deterministic serve metrics, batcher counters **and the
 //! batcher's still-queued requests** (a crash snapshot resumes queued
 //! work), the session store (every live slot with its exact LRU touch
-//! value), and the online learner (counters, pending window, Box–Muller
-//! stream, 4-bit replay segments with stable ids, reservoir + LFSR
-//! states). A delta payload holds the same scalars (they are tiny) but
-//! only the *dirty* sessions, the removed session ids, and the replay
-//! segments whose contents changed — the dominant state (session slabs,
-//! replay history) is written incrementally.
+//! value), and the online learner (counters, session-tagged pending
+//! window, Box–Muller stream, 4-bit replay segments with stable ids,
+//! reservoir + LFSR states). A delta payload holds the same scalars
+//! (they are tiny) but only the *dirty* sessions, the removed session
+//! ids, the replay segments whose contents changed, and — because the
+//! ζ-sparse learning rule touches a rationed subset of columns per
+//! update — a **sparse weight delta**: the columns (hidden j across
+//! `wh[:,j]`/`uh[:,j]`/`bh[j]`, readout c across `wo[:,c]`/`bo[c]`)
+//! that differ bitwise from the chain's base full snapshot, cumulative
+//! since that base. Restore reconstructs weights as base + columns, so
+//! a column that reverts to its base value simply drops out of later
+//! deltas. The dominant state (weights, session slabs, replay history)
+//! is written incrementally.
 //!
 //! Writes go to a temp file in the same directory followed by an atomic
 //! rename. The `[net] fsync_policy` knob picks the durability point:
@@ -85,7 +92,7 @@ use super::session::{SessionSnapshot, SessionStats};
 
 const MAGIC: u32 = u32::from_le_bytes(*b"M2CK");
 const DELTA_MAGIC: u32 = u32::from_le_bytes(*b"M2CD");
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 /// Full-snapshot file name inside `--checkpoint-dir`.
 pub const SNAPSHOT_FILE: &str = "snapshot.m2ck";
 const TMP_SUFFIX: &str = ".tmp";
@@ -125,10 +132,11 @@ impl SnapshotPolicy {
 /// file, full or delta, as one unit. Keeping it one struct with one
 /// encoder/decoder pair means a new durable scalar cannot be added to
 /// the full form and silently missed by the delta form (or by
-/// [`merge_delta`], which replaces it wholesale).
+/// [`merge_delta`], which replaces it wholesale). The model weights are
+/// *not* scalars since v4: a full snapshot carries them whole, a delta
+/// carries the sparse changed-columns diff (see [`ParamsDelta`]).
 #[derive(Clone)]
 pub struct SnapshotScalars {
-    pub params: MiruParams,
     pub wear: Option<WearState>,
     pub tick: u64,
     pub session_secret: u64,
@@ -150,9 +158,94 @@ pub struct Snapshot {
     pub ny: usize,
     /// Chain epoch of the base full snapshot.
     pub epoch: u64,
+    /// Model weights, whole — the base the chain's sparse weight
+    /// deltas are applied against.
+    pub params: MiruParams,
     pub scalars: SnapshotScalars,
     pub sessions: Vec<SessionSnapshot>,
     pub learner: LearnerState,
+}
+
+/// The columns of the model that differ bitwise from the chain's base
+/// full snapshot — the ζ-sparse learning rule's natural write unit
+/// (DESIGN.md §10). Cumulative since the base: restore reconstructs
+/// weights as `base + columns`, so each delta stands alone against its
+/// full snapshot and a column that reverts to its base value drops out.
+#[derive(Clone, Default)]
+pub struct ParamsDelta {
+    /// Hidden columns `(j, wh[:,j], uh[:,j], bh[j])`, ascending `j`.
+    pub hidden: Vec<(u32, Vec<f32>, Vec<f32>, f32)>,
+    /// Readout columns `(c, wo[:,c], bo[c])`, ascending `c`.
+    pub readout: Vec<(u32, Vec<f32>, f32)>,
+}
+
+impl ParamsDelta {
+    /// Changed columns in total (a full model is `nh + ny`).
+    pub fn cols(&self) -> usize {
+        self.hidden.len() + self.readout.len()
+    }
+}
+
+/// The columns of `cur` that differ bitwise from `base` (any element of
+/// the column differing marks the whole column changed).
+pub(crate) fn params_delta(base: &MiruParams, cur: &MiruParams) -> ParamsDelta {
+    let nh = base.bh.len();
+    let ny = base.bo.len();
+    let mut d = ParamsDelta::default();
+    for j in 0..nh {
+        let wh_col: Vec<f32> = cur.wh.data.iter().skip(j).step_by(nh).copied().collect();
+        let uh_col: Vec<f32> = cur.uh.data.iter().skip(j).step_by(nh).copied().collect();
+        let same = cur.bh[j].to_bits() == base.bh[j].to_bits()
+            && base.wh.data.iter().skip(j).step_by(nh).zip(&wh_col).all(|(a, b)| a.to_bits() == b.to_bits())
+            && base.uh.data.iter().skip(j).step_by(nh).zip(&uh_col).all(|(a, b)| a.to_bits() == b.to_bits());
+        if !same {
+            d.hidden.push((j as u32, wh_col, uh_col, cur.bh[j]));
+        }
+    }
+    for c in 0..ny {
+        let wo_col: Vec<f32> = cur.wo.data.iter().skip(c).step_by(ny).copied().collect();
+        let same = cur.bo[c].to_bits() == base.bo[c].to_bits()
+            && base.wo.data.iter().skip(c).step_by(ny).zip(&wo_col).all(|(a, b)| a.to_bits() == b.to_bits());
+        if !same {
+            d.readout.push((c as u32, wo_col, cur.bo[c]));
+        }
+    }
+    d
+}
+
+/// Scatter the delta's columns into `params` (which starts as a clone
+/// of the chain's base).
+pub(crate) fn apply_params_delta(params: &mut MiruParams, d: &ParamsDelta) -> Result<()> {
+    let nh = params.bh.len();
+    let ny = params.bo.len();
+    for (j, wh_col, uh_col, bh) in &d.hidden {
+        let j = *j as usize;
+        ensure!(j < nh, "weight delta hidden column {j} out of range (nh {nh})");
+        ensure!(
+            wh_col.len() * nh == params.wh.data.len() && uh_col.len() * nh == params.uh.data.len(),
+            "weight delta hidden column sizes inconsistent with shapes"
+        );
+        for (i, v) in wh_col.iter().enumerate() {
+            params.wh.data[i * nh + j] = *v;
+        }
+        for (i, v) in uh_col.iter().enumerate() {
+            params.uh.data[i * nh + j] = *v;
+        }
+        params.bh[j] = *bh;
+    }
+    for (c, wo_col, bo) in &d.readout {
+        let c = *c as usize;
+        ensure!(c < ny, "weight delta readout column {c} out of range (ny {ny})");
+        ensure!(
+            wo_col.len() * ny == params.wo.data.len(),
+            "weight delta readout column size inconsistent with shapes"
+        );
+        for (i, v) in wo_col.iter().enumerate() {
+            params.wo.data[i * ny + c] = *v;
+        }
+        params.bo[c] = *bo;
+    }
+    Ok(())
 }
 
 /// One incremental snapshot: full scalars, dirty state only.
@@ -165,6 +258,8 @@ pub struct Delta {
     pub epoch: u64,
     pub seq: u64,
     pub scalars: SnapshotScalars,
+    /// Weight columns changed (bitwise) since the base full snapshot.
+    pub params: ParamsDelta,
     /// Session ids evicted/expired since the previous snapshot.
     pub removed: Vec<u64>,
     /// Sessions mutated since the previous snapshot (exact LRU touches).
@@ -252,14 +347,14 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-fn enc_shapes(w: &mut LeWriter, nh: usize, nx: usize, nt: usize, ny: usize) {
+pub(crate) fn enc_shapes(w: &mut LeWriter, nh: usize, nx: usize, nt: usize, ny: usize) {
     w.u32(nh as u32);
     w.u32(nx as u32);
     w.u32(nt as u32);
     w.u32(ny as u32);
 }
 
-fn dec_shapes(r: &mut LeReader) -> Result<(usize, usize, usize, usize)> {
+pub(crate) fn dec_shapes(r: &mut LeReader) -> Result<(usize, usize, usize, usize)> {
     let nh = r.u32()? as usize;
     let nx = r.u32()? as usize;
     let nt = r.u32()? as usize;
@@ -435,7 +530,7 @@ fn dec_store_stats(r: &mut LeReader) -> Result<SessionStats> {
     })
 }
 
-fn enc_sessions(w: &mut LeWriter, sessions: &[SessionSnapshot]) {
+pub(crate) fn enc_sessions(w: &mut LeWriter, sessions: &[SessionSnapshot]) {
     w.u32(sessions.len() as u32);
     for s in sessions {
         w.u64(s.id);
@@ -449,7 +544,12 @@ fn enc_sessions(w: &mut LeWriter, sessions: &[SessionSnapshot]) {
     }
 }
 
-fn dec_sessions(r: &mut LeReader, nh: usize, nt: usize, nx: usize) -> Result<Vec<SessionSnapshot>> {
+pub(crate) fn dec_sessions(
+    r: &mut LeReader,
+    nh: usize,
+    nt: usize,
+    nx: usize,
+) -> Result<Vec<SessionSnapshot>> {
     let n = r.u32()? as usize;
     let mut out = Vec::with_capacity(n.min(1 << 20));
     for _ in 0..n {
@@ -468,7 +568,7 @@ fn dec_sessions(r: &mut LeReader, nh: usize, nt: usize, nx: usize) -> Result<Vec
     Ok(out)
 }
 
-fn enc_examples(w: &mut LeWriter, exs: &[Example]) {
+pub(crate) fn enc_examples(w: &mut LeWriter, exs: &[Example]) {
     w.u32(exs.len() as u32);
     for ex in exs {
         w.u32(ex.label as u32);
@@ -476,7 +576,7 @@ fn enc_examples(w: &mut LeWriter, exs: &[Example]) {
     }
 }
 
-fn dec_examples(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Result<Vec<Example>> {
+pub(crate) fn dec_examples(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Result<Vec<Example>> {
     let n = r.u32()? as usize;
     let mut out = Vec::with_capacity(n.min(1 << 20));
     for _ in 0..n {
@@ -487,6 +587,81 @@ fn dec_examples(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Result<Vec
         out.push(Example { features, label });
     }
     Ok(out)
+}
+
+/// The learner's pending window rides with its session tags (v4): a
+/// live migration must carve one session's uncommitted examples out of
+/// the window, so the snapshot preserves whose example each one is.
+fn enc_tagged_examples(w: &mut LeWriter, exs: &[(u64, Example)]) {
+    w.u32(exs.len() as u32);
+    for (session, ex) in exs {
+        w.u64(*session);
+        w.u32(ex.label as u32);
+        w.f32s(&ex.features);
+    }
+}
+
+fn dec_tagged_examples(
+    r: &mut LeReader,
+    nt: usize,
+    nx: usize,
+    ny: usize,
+) -> Result<Vec<(u64, Example)>> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let session = r.u64()?;
+        let label = r.u32()? as usize;
+        ensure!(label < ny, "window label {label} out of range (ny {ny})");
+        let features = r.f32s()?;
+        ensure!(features.len() == nt * nx, "pending window size {} != nt*nx", features.len());
+        out.push((session, Example { features, label }));
+    }
+    Ok(out)
+}
+
+fn enc_params_delta(w: &mut LeWriter, d: &ParamsDelta) {
+    w.u32(d.hidden.len() as u32);
+    for (j, wh_col, uh_col, bh) in &d.hidden {
+        w.u32(*j);
+        w.f32s(wh_col);
+        w.f32s(uh_col);
+        w.f32(*bh);
+    }
+    w.u32(d.readout.len() as u32);
+    for (c, wo_col, bo) in &d.readout {
+        w.u32(*c);
+        w.f32s(wo_col);
+        w.f32(*bo);
+    }
+}
+
+fn dec_params_delta(r: &mut LeReader, nh: usize, nx: usize, ny: usize) -> Result<ParamsDelta> {
+    let n_hidden = r.u32()? as usize;
+    let mut hidden = Vec::with_capacity(n_hidden.min(1 << 20));
+    for _ in 0..n_hidden {
+        let j = r.u32()?;
+        ensure!((j as usize) < nh, "weight delta hidden column {j} out of range (nh {nh})");
+        let wh_col = r.f32s()?;
+        let uh_col = r.f32s()?;
+        let bh = r.f32()?;
+        ensure!(
+            wh_col.len() == nx && uh_col.len() == nh,
+            "weight delta hidden column sizes inconsistent with shapes"
+        );
+        hidden.push((j, wh_col, uh_col, bh));
+    }
+    let n_readout = r.u32()? as usize;
+    let mut readout = Vec::with_capacity(n_readout.min(1 << 20));
+    for _ in 0..n_readout {
+        let c = r.u32()?;
+        ensure!((c as usize) < ny, "weight delta readout column {c} out of range (ny {ny})");
+        let wo_col = r.f32s()?;
+        let bo = r.f32()?;
+        ensure!(wo_col.len() == nh, "weight delta readout column size inconsistent with shapes");
+        readout.push((c, wo_col, bo));
+    }
+    Ok(ParamsDelta { hidden, readout })
 }
 
 fn enc_segment(w: &mut LeWriter, seg: &[QuantizedExample]) {
@@ -537,7 +712,7 @@ fn enc_learner(w: &mut LeWriter, l: &LearnerState) {
     w.u64(l.observed);
     w.u64(l.updates);
     w.u64(l.rationed_cols);
-    enc_examples(w, &l.pending);
+    enc_tagged_examples(w, &l.pending);
     enc_rng(w, l.rng_state, l.rng_spare);
     debug_assert_eq!(l.segments.len(), l.segment_ids.len());
     w.u32(l.segments.len() as u32);
@@ -555,7 +730,7 @@ fn dec_learner(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Result<Lear
     let observed = r.u64()?;
     let updates = r.u64()?;
     let rationed_cols = r.u64()?;
-    let pending = dec_examples(r, nt, nx, ny)?;
+    let pending = dec_tagged_examples(r, nt, nx, ny)?;
     let (rng_state, rng_spare) = dec_rng(r)?;
     let n_segs = r.u32()? as usize;
     let mut segments = Vec::with_capacity(n_segs.min(1 << 20));
@@ -588,7 +763,7 @@ fn enc_learner_delta(w: &mut LeWriter, l: &LearnerDelta) {
     w.u64(l.observed);
     w.u64(l.updates);
     w.u64(l.rationed_cols);
-    enc_examples(w, &l.pending);
+    enc_tagged_examples(w, &l.pending);
     enc_rng(w, l.rng_state, l.rng_spare);
     w.u64s(&l.segment_order);
     w.u32(l.changed.len() as u32);
@@ -606,7 +781,7 @@ fn dec_learner_delta(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Resul
     let observed = r.u64()?;
     let updates = r.u64()?;
     let rationed_cols = r.u64()?;
-    let pending = dec_examples(r, nt, nx, ny)?;
+    let pending = dec_tagged_examples(r, nt, nx, ny)?;
     let (rng_state, rng_spare) = dec_rng(r)?;
     let segment_order = r.u64s()?;
     let n_changed = r.u32()? as usize;
@@ -636,7 +811,6 @@ fn dec_learner_delta(r: &mut LeReader, nt: usize, nx: usize, ny: usize) -> Resul
 }
 
 fn enc_scalars(w: &mut LeWriter, s: &SnapshotScalars) {
-    enc_params(w, &s.params);
     enc_wear(w, &s.wear);
     w.u64(s.tick);
     w.u64(s.session_secret);
@@ -647,9 +821,8 @@ fn enc_scalars(w: &mut LeWriter, s: &SnapshotScalars) {
     enc_store_stats(w, &s.store_stats);
 }
 
-fn dec_scalars(r: &mut LeReader, nh: usize, nx: usize, ny: usize) -> Result<SnapshotScalars> {
+fn dec_scalars(r: &mut LeReader, nx: usize, ny: usize) -> Result<SnapshotScalars> {
     Ok(SnapshotScalars {
-        params: dec_params(r, nh, nx, ny)?,
         wear: dec_wear(r)?,
         tick: r.u64()?,
         session_secret: r.u64()?,
@@ -665,6 +838,7 @@ fn encode_full(s: &Snapshot) -> Vec<u8> {
     let mut w = LeWriter::new();
     enc_shapes(&mut w, s.nh, s.nx, s.nt, s.ny);
     w.u64(s.epoch);
+    enc_params(&mut w, &s.params);
     enc_scalars(&mut w, &s.scalars);
     enc_sessions(&mut w, &s.sessions);
     enc_learner(&mut w, &s.learner);
@@ -675,11 +849,12 @@ fn decode_full(buf: &[u8]) -> Result<Snapshot> {
     let mut r = LeReader::new(buf);
     let (nh, nx, nt, ny) = dec_shapes(&mut r)?;
     let epoch = r.u64()?;
-    let scalars = dec_scalars(&mut r, nh, nx, ny)?;
+    let params = dec_params(&mut r, nh, nx, ny)?;
+    let scalars = dec_scalars(&mut r, nx, ny)?;
     let sessions = dec_sessions(&mut r, nh, nt, nx)?;
     let learner = dec_learner(&mut r, nt, nx, ny)?;
     r.done()?;
-    Ok(Snapshot { nh, nx, nt, ny, epoch, scalars, sessions, learner })
+    Ok(Snapshot { nh, nx, nt, ny, epoch, params, scalars, sessions, learner })
 }
 
 fn encode_delta(d: &Delta) -> Vec<u8> {
@@ -687,6 +862,7 @@ fn encode_delta(d: &Delta) -> Vec<u8> {
     enc_shapes(&mut w, d.nh, d.nx, d.nt, d.ny);
     w.u64(d.epoch);
     w.u64(d.seq);
+    enc_params_delta(&mut w, &d.params);
     enc_scalars(&mut w, &d.scalars);
     w.u64s(&d.removed);
     enc_sessions(&mut w, &d.dirty_sessions);
@@ -699,17 +875,18 @@ fn decode_delta(buf: &[u8]) -> Result<Delta> {
     let (nh, nx, nt, ny) = dec_shapes(&mut r)?;
     let epoch = r.u64()?;
     let seq = r.u64()?;
-    let scalars = dec_scalars(&mut r, nh, nx, ny)?;
+    let params = dec_params_delta(&mut r, nh, nx, ny)?;
+    let scalars = dec_scalars(&mut r, nx, ny)?;
     let removed = r.u64s()?;
     let dirty_sessions = dec_sessions(&mut r, nh, nt, nx)?;
     let learner = dec_learner_delta(&mut r, nt, nx, ny)?;
     r.done()?;
-    Ok(Delta { nh, nx, nt, ny, epoch, seq, scalars, removed, dirty_sessions, learner })
+    Ok(Delta { nh, nx, nt, ny, epoch, seq, params, scalars, removed, dirty_sessions, learner })
 }
 
 // ---------------------------------------------------------------- envelope
 
-fn seal(magic: u32, payload: &[u8]) -> Vec<u8> {
+pub(crate) fn seal(magic: u32, payload: &[u8]) -> Vec<u8> {
     let mut f = LeWriter::from_vec(Vec::with_capacity(payload.len() + 24));
     f.u32(magic);
     f.u32(VERSION);
@@ -719,7 +896,7 @@ fn seal(magic: u32, payload: &[u8]) -> Vec<u8> {
     f.into_vec()
 }
 
-fn unseal(magic: u32, raw: &[u8]) -> Result<&[u8]> {
+pub(crate) fn unseal(magic: u32, raw: &[u8]) -> Result<&[u8]> {
     ensure!(raw.len() >= 24, "snapshot shorter than its header");
     let got = u32::from_le_bytes([raw[0], raw[1], raw[2], raw[3]]);
     ensure!(got == magic, "bad snapshot magic {got:#010x}");
@@ -822,8 +999,12 @@ fn purge_stale_deltas(dir: &Path, keep_epoch: u64) {
 
 // ---------------------------------------------------------------- chain
 
-/// Merge one delta into the (staged) base snapshot.
-fn merge_delta(snap: &mut Snapshot, d: Delta) -> Result<()> {
+/// Merge one delta into the (staged) base snapshot. `base_params` is
+/// the *original* full snapshot's weights: each delta's column set is
+/// cumulative against them, so the merged weights are reconstructed
+/// `base + columns` every time (a column missing from this delta holds
+/// its base value, even if an earlier delta changed it).
+fn merge_delta(snap: &mut Snapshot, d: Delta, base_params: &MiruParams) -> Result<()> {
     ensure!(
         d.nh == snap.nh && d.nx == snap.nx && d.nt == snap.nt && d.ny == snap.ny,
         "delta shapes do not match the base snapshot"
@@ -831,6 +1012,9 @@ fn merge_delta(snap: &mut Snapshot, d: Delta) -> Result<()> {
     ensure!(d.epoch == snap.epoch, "delta epoch does not match the base snapshot");
     // every scalar travels in every delta: replace them as one unit
     snap.scalars = d.scalars;
+    let mut params = base_params.clone();
+    apply_params_delta(&mut params, &d.params)?;
+    snap.params = params;
     // sessions: remove, then upsert the dirty ones; order by exact touch
     let mut by_id: BTreeMap<u64, SessionSnapshot> =
         std::mem::take(&mut snap.sessions).into_iter().map(|s| (s.id, s)).collect();
@@ -894,6 +1078,9 @@ fn apply_chain(snap: &mut Snapshot, dir: &Path) -> usize {
         }
     }
     seqs.sort_by_key(|(seq, _)| *seq);
+    // the base full snapshot's weights, against which every delta's
+    // cumulative column set is resolved
+    let base_params = snap.params.clone();
     let mut applied = 0;
     for (i, (seq, path)) in seqs.into_iter().enumerate() {
         if seq != i as u64 + 1 {
@@ -905,7 +1092,7 @@ fn apply_chain(snap: &mut Snapshot, dir: &Path) -> usize {
             break;
         }
         let mut staged = snap.clone();
-        if merge_delta(&mut staged, delta).is_err() {
+        if merge_delta(&mut staged, delta, &base_params).is_err() {
             break;
         }
         *snap = staged;
@@ -988,9 +1175,9 @@ pub fn try_restore(core: &mut ServeCore, dir: &Path) -> Result<RestoreOutcome> {
         });
     }
     let deltas = apply_chain(&mut snap, dir);
-    let Snapshot { scalars, sessions, learner, .. } = snap;
+    let Snapshot { params, scalars, sessions, learner, .. } = snap;
     let tick = scalars.tick;
-    core.restore_weights(scalars.params, scalars.wear)?;
+    core.restore_weights(params, scalars.wear)?;
     core.tick = scalars.tick;
     core.session_secret = scalars.session_secret;
     let wall = core.metrics.wall;
@@ -1317,6 +1504,85 @@ mod tests {
             b.metrics().signature(&b.store().stats),
             a.metrics().signature(&a.store().stats)
         );
+        let _ = std::fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn params_delta_diffs_and_applies_column_wise() {
+        let (nh, nx, ny) = (4usize, 3usize, 2usize);
+        let base = MiruParams {
+            wh: Mat::from_vec(nx, nh, (0..nx * nh).map(|i| i as f32 * 0.5).collect()),
+            uh: Mat::from_vec(nh, nh, (0..nh * nh).map(|i| i as f32 * 0.25).collect()),
+            bh: (0..nh).map(|i| i as f32).collect(),
+            wo: Mat::from_vec(nh, ny, (0..nh * ny).map(|i| i as f32 * 0.125).collect()),
+            bo: (0..ny).map(|i| i as f32).collect(),
+        };
+        // identical params diff to the empty delta
+        let empty = params_delta(&base, &base.clone());
+        assert_eq!(empty.cols(), 0, "no change must diff to no columns");
+        // touch hidden column 2 (one wh element) and readout column 1 (bo)
+        let mut cur = base.clone();
+        *cur.wh.at_mut(1, 2) += 1.0;
+        cur.bo[1] -= 3.0;
+        let d = params_delta(&base, &cur);
+        assert_eq!(d.hidden.len(), 1);
+        assert_eq!(d.hidden[0].0, 2);
+        assert_eq!(d.readout.len(), 1);
+        assert_eq!(d.readout[0].0, 1);
+        // applying onto a base clone reconstructs cur bitwise
+        let mut rebuilt = base.clone();
+        apply_params_delta(&mut rebuilt, &d).unwrap();
+        assert_eq!(rebuilt.wh.data, cur.wh.data);
+        assert_eq!(rebuilt.uh.data, cur.uh.data);
+        assert_eq!(rebuilt.bh, cur.bh);
+        assert_eq!(rebuilt.wo.data, cur.wo.data);
+        assert_eq!(rebuilt.bo, cur.bo);
+        // a column reverted bitwise to base drops out of the diff, and
+        // base + (empty diff) is the base — the cumulative contract
+        let reverted = params_delta(&base, &base.clone());
+        let mut back = base.clone();
+        apply_params_delta(&mut back, &reverted).unwrap();
+        assert_eq!(back.wh.data, base.wh.data);
+        // out-of-range columns are rejected, never a panic
+        let mut bad = ParamsDelta::default();
+        bad.readout.push((ny as u32, vec![0.0; nh], 0.0));
+        assert!(apply_params_delta(&mut base.clone(), &bad).is_err());
+    }
+
+    #[test]
+    fn frozen_weights_produce_empty_weight_deltas() {
+        // with online learning off the weights never change, so every
+        // delta's ζ-sparse weight section must be empty — the whole
+        // point of moving params out of the every-file scalars
+        let d = dir("frozen");
+        let net = NetConfig::SMALL;
+        let mut run = RunConfig::default();
+        run.seed = 11;
+        run.serve = ServeConfig {
+            max_batch: 4,
+            max_wait: 1,
+            capacity: 8,
+            update_every: 0,
+            ..ServeConfig::default()
+        };
+        let mut a = ServeCore::new(net, &run).unwrap();
+        let mut w = SyntheticWorkload::new(&net, 6, 11);
+        feed(&mut a, &mut w, 40);
+        save_checkpoint(&mut a, &d).unwrap();
+        feed(&mut a, &mut w, 40);
+        save_delta(&mut a, &d).unwrap();
+        let files = delta_files(&d);
+        assert_eq!(files.len(), 1);
+        let raw = std::fs::read(d.join(&files[0])).unwrap();
+        let delta = parse_delta(&raw).unwrap();
+        assert_eq!(delta.params.cols(), 0, "frozen weights must not ride in a delta");
+        // and the chain still restores bitwise
+        let mut b = ServeCore::new(net, &run).unwrap();
+        match try_restore(&mut b, &d).unwrap() {
+            RestoreOutcome::Restored { deltas, .. } => assert_eq!(deltas, 1),
+            other => panic!("expected restore, got {other:?}"),
+        }
+        assert_eq!(b.store().snapshot_slots(), a.store().snapshot_slots());
         let _ = std::fs::remove_dir_all(&d);
     }
 

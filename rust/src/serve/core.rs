@@ -34,7 +34,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
 use crate::backend::{BackendCtx, BackendRegistry};
 use crate::config::{NetConfig, RunConfig};
@@ -45,14 +45,16 @@ use crate::obs::{Histogram, Obs, Registry};
 
 use crate::backend::WearState;
 
+use crate::data::Example;
+
 use super::batcher::{DynamicBatcher, StepRequest};
 use super::checkpoint::{
-    random_epoch, Delta, Snapshot, SnapshotJob, SnapshotPolicy, SnapshotScalars,
+    params_delta, random_epoch, Delta, Snapshot, SnapshotJob, SnapshotPolicy, SnapshotScalars,
 };
 use super::commit::{Committer, Job, Outcome, SubstrateStatus, WeightSnapshot};
 use super::metrics::ServeMetrics;
 use super::online::{CommitBatch, OnlineLearner};
-use super::session::SessionStore;
+use super::session::{SessionSnapshot, SessionStore};
 
 /// One served request, reported back to the frontend for delivery.
 #[derive(Clone, Debug, PartialEq)]
@@ -158,6 +160,10 @@ pub struct ServeCore {
     /// synthetic driver turns this off unless it records steps, keeping
     /// the per-request cost of the benchmarked hot path flat.
     pub(crate) collect_logits: bool,
+    /// The weights of the chain's last *full* snapshot — the base the
+    /// ζ-sparse delta weight sections are diffed against (cumulative:
+    /// each delta carries every column changed since this base).
+    pub(crate) params_base: MiruParams,
     /// Snapshot-chain bookkeeping: the epoch of the last full snapshot
     /// (0 = none yet — the next snapshot must be full).
     pub(crate) chain_epoch: u64,
@@ -222,6 +228,7 @@ impl ServeCore {
         );
         let mut store = SessionStore::new(net.nh, net.nx, net.nt, cfg.capacity, cfg.ttl);
         store.set_recorder(obs.enabled().then(|| obs.recorder.clone()));
+        let params_base = weights.params.clone();
         Ok(ServeCore {
             stepper: ParallelEngine::new(read_fork, run.workers),
             committer,
@@ -240,6 +247,7 @@ impl ServeCore {
             tick: 0,
             session_secret: super::session::DEFAULT_SESSION_SECRET,
             collect_logits: true,
+            params_base,
             chain_epoch: 0,
             next_delta_seq: 1,
             snapshots_taken: 0,
@@ -674,7 +682,49 @@ impl ServeCore {
             }
         }
         self.weights = self.committer.load();
+        // restore starts a fresh chain (the next snapshot is full), but
+        // keep the base coherent with the adopted weights regardless
+        self.params_base = self.weights.params.clone();
         Ok(())
+    }
+
+    // ---------------------------------------------- session migration
+
+    /// Carve one session out of this core for a live migration: its
+    /// slab row, history ring, LRU recency and step counters, plus its
+    /// uncommitted pending-window examples from the online learner.
+    /// `Ok(None)` when the session is not resident. Refuses while the
+    /// batcher still holds queued steps for the session — the caller
+    /// (the router) quiesces the wave first; extracting under queued
+    /// work would reorder the per-session stream.
+    ///
+    /// The session's replay-buffer contributions stay behind by
+    /// contract (DESIGN.md §14): committed history is shard-local
+    /// training state, anonymous and quantized, not session state.
+    pub fn extract_session(
+        &mut self,
+        session: u64,
+    ) -> Result<Option<(SessionSnapshot, Vec<Example>)>> {
+        ensure!(
+            !self.batcher.queued().iter().any(|q| q.session == session),
+            "cannot extract session {session}: steps still queued for it"
+        );
+        let Some(snap) = self.store.extract(session) else { return Ok(None) };
+        let pending = self.learner.extract_pending(session);
+        Ok(Some((snap, pending)))
+    }
+
+    /// Install a migrated session: the slab/history snapshot goes into
+    /// the store (fresh LRU touch, same hidden state bit-for-bit) and
+    /// its uncommitted examples are appended to the learner's pending
+    /// window. They are *not* re-offered to the replay reservoir — each
+    /// example is reservoir-sampled exactly once fleet-wide, on the
+    /// shard where it was first observed.
+    pub fn inject_session(&mut self, snap: SessionSnapshot, pending: Vec<Example>) -> usize {
+        let id = snap.id;
+        let slot = self.store.inject(snap, self.tick);
+        self.learner.inject_pending(id, pending);
+        slot
     }
 
     // ---------------------------------------------- durable snapshots
@@ -740,7 +790,6 @@ impl ServeCore {
         metrics.latency_cursor = 0;
         metrics.latency_overwrites = 0;
         SnapshotScalars {
-            params: self.weights.params.clone(),
             wear,
             tick: self.tick,
             session_secret: self.session_secret,
@@ -763,10 +812,14 @@ impl ServeCore {
             nt: self.net.nt,
             ny: self.net.ny,
             epoch,
+            params: self.weights.params.clone(),
             scalars: self.scalars_state(wear),
             sessions: self.store.snapshot_slots(),
             learner: self.learner.snapshot(),
         };
+        // this full snapshot is the new base the chain's sparse weight
+        // deltas are diffed against
+        self.params_base = self.weights.params.clone();
         self.store.mark_clean();
         self.learner.mark_clean();
         state
@@ -784,6 +837,7 @@ impl ServeCore {
             ny: self.net.ny,
             epoch,
             seq,
+            params: params_delta(&self.params_base, &self.weights.params),
             scalars: self.scalars_state(wear),
             removed,
             dirty_sessions,
@@ -864,7 +918,7 @@ impl ServeCore {
                     self.obs_acc_window.push_back(preds[i] == label);
                 }
                 let seq = self.store.history_seq(slot);
-                if let Some(cb) = self.learner.observe(seq, label) {
+                if let Some(cb) = self.learner.observe(r.session, seq, label) {
                     self.enqueue_commit(cb)?;
                 }
             }

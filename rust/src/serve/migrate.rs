@@ -1,0 +1,225 @@
+//! Live session migration parcels (DESIGN.md §14): the unit of state a
+//! shard ships to another shard when the routing epoch moves a session.
+//!
+//! A parcel carries everything that makes a session *that* session —
+//! the slab row (hidden state), the history ring, the step counters and
+//! last-served tick, plus the session's uncommitted pending-window
+//! examples from the online learner — sealed in the checkpoint
+//! envelope (magic `"M2MG"`, version, length, FNV-1a 64 checksum) so a
+//! torn or corrupted transfer is refused at decode, never installed.
+//!
+//! Two canonicalizations make parcels *portable and comparable*:
+//!
+//! * `last_touch` rides as 0 — LRU recency is per-store bookkeeping,
+//!   not session state; the target assigns a fresh touch at inject.
+//!   (`last_tick` is preserved: the fleet shares one logical clock, so
+//!   idle-TTL age carries over.)
+//! * The id in the parcel is the *source* shard's session id; the
+//!   target overrides it with its own id for the session at inject
+//!   (remote shards key independent session-id spaces).
+//!
+//! Because of the first rule, extracting the same logical state twice —
+//! e.g. before shipping and again right after the target installed it —
+//! produces bitwise-identical parcels, which is the migration-fidelity
+//! law `tests/router_reshard.rs` pins.
+//!
+//! The session's replay-buffer contributions stay on the source shard
+//! by contract: committed examples are anonymous quantized training
+//! state, reservoir-sampled exactly once fleet-wide.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::codec::{LeReader, LeWriter};
+use crate::data::Example;
+
+use super::checkpoint::{
+    dec_examples, dec_sessions, dec_shapes, enc_examples, enc_sessions, enc_shapes, seal, unseal,
+};
+use super::core::ServeCore;
+use super::session::SessionSnapshot;
+
+/// Envelope magic of a sealed migration parcel.
+pub const MIGRATE_MAGIC: u32 = u32::from_le_bytes(*b"M2MG");
+
+/// One session's migratable state, decoded.
+#[derive(Clone, Debug)]
+pub struct MigrationParcel {
+    pub nh: usize,
+    pub nx: usize,
+    pub nt: usize,
+    pub ny: usize,
+    /// Slab row + history ring + counters (`last_touch` canonically 0).
+    pub session: SessionSnapshot,
+    /// The session's uncommitted pending-window examples, in
+    /// observation order.
+    pub pending: Vec<Example>,
+}
+
+/// Seal one session's state into a portable parcel. `last_touch` is
+/// canonicalized to 0 (see the module doc).
+pub fn encode_parcel(
+    nh: usize,
+    nx: usize,
+    nt: usize,
+    ny: usize,
+    mut session: SessionSnapshot,
+    pending: &[Example],
+) -> Vec<u8> {
+    session.last_touch = 0;
+    let mut w = LeWriter::new();
+    enc_shapes(&mut w, nh, nx, nt, ny);
+    enc_sessions(&mut w, std::slice::from_ref(&session));
+    enc_examples(&mut w, pending);
+    seal(MIGRATE_MAGIC, &w.into_vec())
+}
+
+/// Validate and decode a sealed parcel (magic, version, checksum,
+/// shapes, exactly one session, trailing bytes rejected).
+pub fn decode_parcel(raw: &[u8]) -> Result<MigrationParcel> {
+    let payload = unseal(MIGRATE_MAGIC, raw).context("unsealing migration parcel")?;
+    let mut r = LeReader::new(payload);
+    let (nh, nx, nt, ny) = dec_shapes(&mut r)?;
+    let mut sessions = dec_sessions(&mut r, nh, nt, nx)?;
+    ensure!(sessions.len() == 1, "a migration parcel holds exactly one session");
+    let pending = dec_examples(&mut r, nt, nx, ny)?;
+    r.done()?;
+    Ok(MigrationParcel { nh, nx, nt, ny, session: sessions.pop().unwrap(), pending })
+}
+
+/// Carve `session` out of `core` as a sealed parcel. `Ok(None)` when
+/// the session is not resident (nothing to ship — the target will
+/// create it on first touch). Errors while the batcher still holds
+/// queued steps for it (the caller quiesces first).
+pub fn extract_parcel(core: &mut ServeCore, session: u64) -> Result<Option<Vec<u8>>> {
+    let net = core.net();
+    let Some((snap, pending)) = core.extract_session(session)? else { return Ok(None) };
+    Ok(Some(encode_parcel(net.nh, net.nx, net.nt, net.ny, snap, &pending)))
+}
+
+/// Install a parcel into `core` under the *local* session id `session`
+/// (the parcel's embedded id is the source shard's — it is overridden,
+/// never trusted). Refuses shape mismatches. Returns the slot.
+pub fn inject_parcel(core: &mut ServeCore, session: u64, raw: &[u8]) -> Result<usize> {
+    let mut p = decode_parcel(raw)?;
+    let net = core.net();
+    ensure!(
+        p.nh == net.nh && p.nx == net.nx && p.nt == net.nt && p.ny == net.ny,
+        "migration parcel shapes (nh={}, nx={}, nt={}, ny={}) do not match net `{}`",
+        p.nh,
+        p.nx,
+        p.nt,
+        p.ny,
+        net.name
+    );
+    p.session.id = session;
+    Ok(core.inject_session(p.session, p.pending))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NetConfig, RunConfig, ServeConfig};
+    use crate::serve::{session_id_for_user, SyntheticWorkload};
+
+    fn learning_core(seed: u64) -> ServeCore {
+        let mut run = RunConfig::default();
+        run.seed = seed;
+        run.serve = ServeConfig {
+            max_batch: 4,
+            max_wait: 1,
+            capacity: 8,
+            update_every: 7,
+            ..ServeConfig::default()
+        };
+        ServeCore::new(NetConfig::SMALL, &run).unwrap()
+    }
+
+    fn feed(core: &mut ServeCore, w: &mut SyntheticWorkload, requests: u64) {
+        let mut issued = 0;
+        while issued < requests {
+            for _ in 0..4 {
+                if issued >= requests {
+                    break;
+                }
+                let (u, x, label) = w.next();
+                core.submit(session_id_for_user(u), x, label, 0);
+                issued += 1;
+            }
+            core.drain_ready().unwrap();
+            if issued >= requests {
+                core.flush_all().unwrap();
+            }
+            core.advance_tick();
+        }
+        core.sync_commits().unwrap();
+    }
+
+    #[test]
+    fn parcel_roundtrips_and_reextraction_is_bitwise_identical() {
+        let net = NetConfig::SMALL;
+        let mut a = learning_core(21);
+        let mut w = SyntheticWorkload::new(&net, 6, 21);
+        feed(&mut a, &mut w, 90);
+        let sid = session_id_for_user(2);
+        assert!(a.store().contains(sid));
+        let raw = extract_parcel(&mut a, sid).unwrap().expect("session resident");
+        assert!(!a.store().contains(sid), "extraction removes the session from the source");
+        let p = decode_parcel(&raw).unwrap();
+        assert_eq!((p.nh, p.nx, p.nt, p.ny), (net.nh, net.nx, net.nt, net.ny));
+        assert_eq!(p.session.id, sid);
+        assert_eq!(p.session.last_touch, 0, "recency is canonicalized out of the parcel");
+        assert_eq!(p.session.h.len(), net.nh);
+
+        // install on a different core under a different local id, then
+        // re-extract: the parcel must come back bit-for-bit (the
+        // migration-fidelity law — state survives the hop unchanged)
+        let mut b = learning_core(22);
+        let local = session_id_for_user(77);
+        inject_parcel(&mut b, local, &raw).unwrap();
+        assert!(b.store().contains(local));
+        let back = extract_parcel(&mut b, local).unwrap().expect("resident after inject");
+        let q = decode_parcel(&back).unwrap();
+        assert_eq!(q.session.id, local, "the id is the only field allowed to differ");
+        assert_eq!(q.session.h, p.session.h);
+        assert_eq!(q.session.hist, p.session.hist);
+        assert_eq!(q.session.hist_rows, p.session.hist_rows);
+        assert_eq!(q.session.hist_head, p.session.hist_head);
+        assert_eq!(q.session.last_tick, p.session.last_tick);
+        assert_eq!(q.session.steps, p.session.steps);
+        assert_eq!(q.pending.len(), p.pending.len());
+        for (x, y) in q.pending.iter().zip(&p.pending) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.features, y.features);
+        }
+    }
+
+    #[test]
+    fn corrupt_or_truncated_parcels_are_refused_never_installed() {
+        let net = NetConfig::SMALL;
+        let mut a = learning_core(5);
+        let mut w = SyntheticWorkload::new(&net, 4, 5);
+        feed(&mut a, &mut w, 40);
+        let sid = session_id_for_user(1);
+        let raw = extract_parcel(&mut a, sid).unwrap().unwrap();
+        // every single-byte corruption is caught by the checksum (or the
+        // header checks); every truncation by the length field
+        let mut bent = raw.clone();
+        bent[raw.len() / 2] ^= 0x40;
+        assert!(decode_parcel(&bent).is_err());
+        for cut in [0, 10, raw.len() - 1] {
+            assert!(decode_parcel(&raw[..cut]).is_err());
+        }
+        let mut b = learning_core(6);
+        assert!(inject_parcel(&mut b, 9, &bent).is_err());
+        assert!(!b.store().contains(9), "a refused parcel must install nothing");
+        // shape mismatch is refused before any state changes
+        let mut other = ServeCore::new(NetConfig::PMNIST100, &RunConfig::default()).unwrap();
+        assert!(inject_parcel(&mut other, 9, &raw).is_err());
+    }
+
+    #[test]
+    fn extracting_an_absent_session_is_none_not_an_error() {
+        let mut a = learning_core(8);
+        assert!(extract_parcel(&mut a, 424242).unwrap().is_none());
+    }
+}

@@ -33,6 +33,10 @@
 //!   incremental deltas, written off-thread by the committer; a killed
 //!   server restarts with every live session's hidden state bitwise
 //!   intact.
+//! * [`migrate`] — live session migration parcels (DESIGN.md §14): one
+//!   session's slab row, history ring, counters and uncommitted
+//!   pending examples, sealed in the checkpoint envelope for shipping
+//!   between shards at a routing-epoch cutover.
 //! * [`run_serve`] — the deterministic synthetic workload driver behind
 //!   `m2ru serve` (open loop) and `m2ru loadgen` (closed loop),
 //!   reporting throughput, p50/p99 latency, batch fill and eviction
@@ -52,6 +56,7 @@ mod commit;
 mod core;
 mod driver;
 mod metrics;
+pub mod migrate;
 mod online;
 mod session;
 mod workload;
@@ -63,6 +68,9 @@ pub use checkpoint::{
 };
 pub use commit::{SubstrateStatus, WeightSnapshot};
 pub use self::core::{CompletedStep, ServeCore};
+pub use migrate::{
+    decode_parcel, encode_parcel, extract_parcel, inject_parcel, MigrationParcel, MIGRATE_MAGIC,
+};
 pub use driver::{run_serve, ServeOptions, ServeReport};
 pub use metrics::{OutboxDrops, ServeMetrics};
 pub use online::{CommitBatch, LearnerDelta, LearnerState, OnlineLearner};

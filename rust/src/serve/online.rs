@@ -61,7 +61,11 @@ pub struct OnlineLearner {
     wear_ratio: f32,
     buffer: ReplayBuffer,
     rng: GaussianRng,
-    pending: Vec<Example>,
+    /// The not-yet-committed window, each entry tagged with the session
+    /// that produced it so a migration (DESIGN.md §14) can carve one
+    /// session's contribution out of the window without reordering the
+    /// rest.
+    pending: Vec<(u64, Example)>,
     pub observed: u64,
     /// Windows finalized (== commit generations enqueued).
     pub updates: u64,
@@ -80,7 +84,10 @@ pub struct LearnerState {
     pub observed: u64,
     pub updates: u64,
     pub rationed_cols: u64,
-    pub pending: Vec<Example>,
+    /// `(session, example)` — the window entries keep their producing
+    /// session's id across checkpoint/restore so migrations stay
+    /// possible after a restart.
+    pub pending: Vec<(u64, Example)>,
     pub rng_state: u64,
     pub rng_spare: Option<f32>,
     pub segments: Vec<Vec<QuantizedExample>>,
@@ -99,7 +106,7 @@ pub struct LearnerDelta {
     pub observed: u64,
     pub updates: u64,
     pub rationed_cols: u64,
-    pub pending: Vec<Example>,
+    pub pending: Vec<(u64, Example)>,
     pub rng_state: u64,
     pub rng_spare: Option<f32>,
     /// Full segment id order, oldest first.
@@ -201,10 +208,11 @@ impl OnlineLearner {
         );
     }
 
-    /// Record one labeled `nt*nx` sequence. Returns `Some(batch)` when
-    /// this observation filled the window: the finalized replay-mixed
-    /// commit batch, which the caller queues to the committer thread.
-    pub fn observe(&mut self, features: Vec<f32>, label: usize) -> Option<CommitBatch> {
+    /// Record one labeled `nt*nx` sequence produced by `session`.
+    /// Returns `Some(batch)` when this observation filled the window:
+    /// the finalized replay-mixed commit batch, which the caller queues
+    /// to the committer thread.
+    pub fn observe(&mut self, session: u64, features: Vec<f32>, label: usize) -> Option<CommitBatch> {
         debug_assert_eq!(features.len(), self.nt * self.nx);
         self.observed += 1;
         if self.update_every == 0 {
@@ -214,11 +222,46 @@ impl OnlineLearner {
         }
         let ex = Example { features, label };
         self.buffer.offer(&ex);
-        self.pending.push(ex);
+        self.pending.push((session, ex));
         if self.pending.len() < self.update_every {
             return None;
         }
         Some(self.roll_window())
+    }
+
+    /// Migration hook (DESIGN.md §14): carve `session`'s uncommitted
+    /// window entries out of `pending`, preserving the relative order of
+    /// both what leaves and what stays. Already-committed history is
+    /// baked into this shard's weights and reservoir and does not move —
+    /// the attributable contribution of a live session is exactly its
+    /// not-yet-committed examples.
+    pub fn extract_pending(&mut self, session: u64) -> Vec<Example> {
+        let mut moved = Vec::new();
+        self.pending.retain_mut(|(sid, ex)| {
+            if *sid == session {
+                moved.push(std::mem::replace(ex, Example { features: Vec::new(), label: 0 }));
+                false
+            } else {
+                true
+            }
+        });
+        moved
+    }
+
+    /// Migration hook: append a migrated session's uncommitted window
+    /// entries (in their original order) to this learner's window. They
+    /// are *not* re-offered to the reservoir — the reservoir is
+    /// shard-local history and the source shard already sampled them
+    /// (the determinism contract in DESIGN.md §14 pins this down). The
+    /// window finalizes at the next [`OnlineLearner::observe`] even if
+    /// the injection pushed it past `update_every`.
+    pub fn inject_pending(&mut self, session: u64, examples: Vec<Example>) {
+        if self.update_every == 0 {
+            return; // inference-only target: nothing will ever train
+        }
+        for ex in examples {
+            self.pending.push((session, ex));
+        }
     }
 
     /// Labeled sequences waiting for the next commit window to fill.
@@ -246,7 +289,7 @@ impl OnlineLearner {
         let replayed = self.buffer.sample_past(n_replay, &mut self.rng);
         let b = self.pending.len() + replayed.len();
         let mut sb = SeqBatch::zeros(b, self.nt, self.nx);
-        for (i, ex) in self.pending.iter().chain(replayed.iter()).enumerate() {
+        for (i, ex) in self.pending.iter().map(|(_, ex)| ex).chain(replayed.iter()).enumerate() {
             sb.sample_mut(i).copy_from_slice(&ex.features);
             sb.labels[i] = ex.label;
         }
@@ -294,7 +337,7 @@ mod tests {
         let mut commits = 0;
         for i in 0..12u64 {
             let label = (i % net.ny as u64) as usize;
-            if let Some(cb) = learner.observe(seq(&net, label, 100 + i), label) {
+            if let Some(cb) = learner.observe(i, seq(&net, label, 100 + i), label) {
                 apply(&mut eng, cb);
                 commits += 1;
             }
@@ -315,7 +358,7 @@ mod tests {
         for i in 0..(MAX_REPLAY_SEGMENTS as u64 + 20) {
             // windows finalize deterministically whether or not a
             // committer ever applies them
-            let _ = learner.observe(seq(&net, 0, i), 0);
+            let _ = learner.observe(i, seq(&net, 0, i), 0);
         }
         assert_eq!(learner.updates, MAX_REPLAY_SEGMENTS as u64 + 20);
         assert_eq!(learner.replay_segments(), MAX_REPLAY_SEGMENTS);
@@ -327,7 +370,7 @@ mod tests {
         let cfg = ServeConfig { update_every: 0, ..ServeConfig::default() };
         let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 2);
         for i in 0..10u64 {
-            assert!(learner.observe(seq(&net, 0, i), 0).is_none());
+            assert!(learner.observe(i, seq(&net, 0, i), 0).is_none());
         }
         assert_eq!(learner.updates, 0);
         assert_eq!(learner.pending(), 0, "inference-only mode must not accumulate windows");
@@ -341,7 +384,7 @@ mod tests {
         let mut a = OnlineLearner::new(net.nt, net.nx, &cfg, 11);
         let mut eng_a = engine(11);
         for i in 0..4u64 {
-            if let Some(cb) = a.observe(seq(&net, 0, 300 + i), 0) {
+            if let Some(cb) = a.observe(i, seq(&net, 0, 300 + i), 0) {
                 apply(&mut eng_a, cb);
             }
         }
@@ -356,8 +399,8 @@ mod tests {
         let mut eng_b = engine(11);
         eng_b.restore_params(&eng_a.backend().effective_params()).unwrap();
         for i in 4..7u64 {
-            let ca = a.observe(seq(&net, 1, 300 + i), 1);
-            let cb = b.observe(seq(&net, 1, 300 + i), 1);
+            let ca = a.observe(i, seq(&net, 1, 300 + i), 1);
+            let cb = b.observe(i, seq(&net, 1, 300 + i), 1);
             match (ca, cb) {
                 (Some(wa), Some(wb)) => {
                     assert_eq!(wa.batch.data, wb.batch.data, "windows diverge at observation {i}");
@@ -375,6 +418,36 @@ mod tests {
     }
 
     #[test]
+    fn extract_pending_carves_one_session_preserving_order() {
+        let net = NetConfig::SMALL;
+        let cfg = ServeConfig { update_every: 100, ..ServeConfig::default() };
+        let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 13);
+        // interleave two sessions: 7, 9, 7, 9, 7
+        for (i, sid) in [7u64, 9, 7, 9, 7].iter().enumerate() {
+            let _ = learner.observe(*sid, seq(&net, i % 2, 600 + i as u64), i % 2);
+        }
+        assert_eq!(learner.pending(), 5);
+        let moved = learner.extract_pending(7);
+        assert_eq!(moved.len(), 3, "exactly session 7's entries leave");
+        assert_eq!(learner.pending(), 2, "session 9's entries stay");
+        assert!(learner.extract_pending(7).is_empty(), "double extract finds nothing");
+        // inject into a fresh learner; the entries append in order and
+        // the window finalizes at the next observe
+        let cfg2 = ServeConfig { update_every: 4, ..ServeConfig::default() };
+        let mut target = OnlineLearner::new(net.nt, net.nx, &cfg2, 14);
+        target.inject_pending(7, moved);
+        assert_eq!(target.pending(), 3);
+        let cb = target.observe(7, seq(&net, 0, 700), 0);
+        assert!(cb.is_some(), "injection counts toward the window");
+        assert_eq!(cb.unwrap().batch.labels.len() >= 4, true);
+        // an inference-only target drops the contribution outright
+        let cfg3 = ServeConfig { update_every: 0, ..ServeConfig::default() };
+        let mut frozen = OnlineLearner::new(net.nt, net.nx, &cfg3, 15);
+        frozen.inject_pending(7, vec![Example { features: vec![0.0; net.nt * net.nx], label: 0 }]);
+        assert_eq!(frozen.pending(), 0);
+    }
+
+    #[test]
     fn merged_history_retains_oldest_windows() {
         let net = NetConfig::SMALL;
         // tiny replay segments force many rolls past the 16-segment cap
@@ -382,7 +455,7 @@ mod tests {
             ServeConfig { update_every: 1, replay_cap: 4, replay_mix: 0.0, ..ServeConfig::default() };
         let mut learner = OnlineLearner::new(net.nt, net.nx, &cfg, 5);
         for i in 0..(MAX_REPLAY_SEGMENTS as u64 + 8) {
-            let _ = learner.observe(seq(&net, 0, i), 0);
+            let _ = learner.observe(i, seq(&net, 0, i), 0);
         }
         assert_eq!(learner.replay_segments(), MAX_REPLAY_SEGMENTS, "cap still enforced");
     }
@@ -396,7 +469,7 @@ mod tests {
             let mut eng = engine(eng_seed);
             for i in 0..6u64 {
                 let label = (i % net.ny as u64) as usize;
-                if let Some(cb) = learner.observe(seq(&net, label, 50 + i), label) {
+                if let Some(cb) = learner.observe(i, seq(&net, label, 50 + i), label) {
                     apply(&mut eng, cb);
                 }
             }

@@ -170,6 +170,14 @@ impl SessionStore {
         self.index.contains_key(&id)
     }
 
+    /// Resident session ids, ascending — the deterministic iteration
+    /// order the reshard cutover builds its migration work list in.
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.index.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     fn slot(&self, idx: usize) -> &Slot {
         self.slots[idx].as_ref().expect("stale slot index")
     }
@@ -372,6 +380,82 @@ impl SessionStore {
     pub fn mark_clean(&mut self) {
         self.dirty.clear();
         self.removed.clear();
+    }
+
+    /// Migration hook (DESIGN.md §14): remove `id` from this store and
+    /// return its full durable state — slab row, history ring, recency
+    /// and step counters — exactly as a snapshot would capture it. The
+    /// removal is tracked like an eviction, so the source shard's next
+    /// delta snapshot records the departure.
+    pub fn extract(&mut self, id: u64) -> Option<SessionSnapshot> {
+        let idx = *self.index.get(&id)?;
+        let s = self.slot(idx);
+        let snap = SessionSnapshot {
+            id: s.id,
+            h: s.h.clone(),
+            hist: s.hist.clone(),
+            hist_rows: s.hist_rows,
+            hist_head: s.hist_head,
+            last_tick: s.last_tick,
+            last_touch: s.last_touch,
+            steps: s.steps,
+        };
+        self.event(snap.last_tick, "session_migrate_out", id);
+        self.remove_slot(idx);
+        Some(snap)
+    }
+
+    /// Migration hook: install a session shipped from another shard.
+    /// The hidden state, history ring, tick and step counters install
+    /// bitwise; the LRU touch is assigned *fresh* (the counter spaces of
+    /// two shards are unrelated, so the arriving session simply becomes
+    /// the most recently used — matching what a dedicated reference
+    /// server does when the same session is injected there). Evicts the
+    /// LRU victim when at capacity; replaces any existing state under
+    /// the same id. Returns the slot index.
+    pub fn inject(&mut self, snap: SessionSnapshot, now_tick: u64) -> usize {
+        assert_eq!(snap.h.len(), self.nh, "migrated hidden width mismatch");
+        assert_eq!(snap.hist.len(), self.nt * self.nx, "migrated history size mismatch");
+        if let Some(&idx) = self.index.get(&snap.id) {
+            self.remove_slot(idx);
+        }
+        if self.index.len() >= self.capacity {
+            let (&_, &victim) = self.lru.iter().next().expect("capacity >= 1 but LRU empty");
+            let victim_id = self.slot(victim).id;
+            self.remove_slot(victim);
+            self.stats.evicted_lru += 1;
+            self.event(now_tick, "session_evict_lru", victim_id);
+        }
+        self.touch_counter += 1;
+        let touch = self.touch_counter;
+        let slot = Slot {
+            id: snap.id,
+            h: snap.h,
+            hist: snap.hist,
+            hist_rows: snap.hist_rows.min(self.nt),
+            hist_head: snap.hist_head % self.nt.max(1),
+            last_touch: touch,
+            last_tick: snap.last_tick,
+            steps: snap.steps,
+        };
+        let idx = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(slot);
+                i
+            }
+            None => {
+                self.slots.push(Some(slot));
+                self.slots.len() - 1
+            }
+        };
+        self.index.insert(snap.id, idx);
+        self.lru.insert(touch, idx);
+        // the arrival is new state for the *target* shard's delta chain —
+        // and cancels any same-window removal record under this id
+        self.dirty.insert(snap.id);
+        self.removed.remove(&snap.id);
+        self.event(now_tick, "session_migrate_in", snap.id);
+        idx
     }
 
     /// Rebuild the store from checkpointed state, replacing any current
@@ -587,6 +671,63 @@ mod tests {
         assert_eq!(dump.matches("\"kind\":\"session_create\"").count(), 3);
         assert_eq!(dump.matches("\"kind\":\"session_evict_lru\"").count(), 1);
         assert_eq!(dump.matches("\"kind\":\"session_expire_ttl\"").count(), 2);
+    }
+
+    #[test]
+    fn extract_inject_moves_state_bitwise_between_stores() {
+        let mut a = store(3, 0);
+        let idx = a.get_or_create(42, 5);
+        a.set_hidden(idx, &[1.5, -2.0, 0.25, 7.0]);
+        for i in 1..=7 {
+            a.push_history(idx, &[i as f32, 0.0, -1.0]);
+        }
+        let want_seq = a.history_seq(idx);
+        let snap = a.extract(42).expect("session is live");
+        assert!(!a.contains(42), "extract removes the session from the source");
+        let (_, removed) = a.take_delta();
+        assert_eq!(removed, vec![42], "the departure is delta-tracked");
+        assert!(a.extract(42).is_none(), "double extract finds nothing");
+
+        let mut b = store(3, 0);
+        b.get_or_create(1, 0);
+        let j = b.inject(snap.clone(), 6);
+        assert_eq!(b.hidden(j), &snap.h[..], "hidden state installs bitwise");
+        assert_eq!(b.history_seq(j), want_seq, "history ring installs bitwise");
+        assert_eq!(b.steps(j), snap.steps);
+        // the arrival is the most recently used: an eviction takes the
+        // pre-existing session, never the migrant
+        b.get_or_create(2, 7);
+        b.get_or_create(3, 8);
+        assert!(b.contains(42) && !b.contains(1));
+        let (dirty, _) = b.take_delta();
+        assert!(dirty.iter().any(|d| d.id == 42), "the arrival is delta-tracked");
+    }
+
+    #[test]
+    fn inject_at_capacity_evicts_lru_and_replaces_same_id() {
+        let mut s = store(2, 0);
+        s.get_or_create(1, 0);
+        s.get_or_create(2, 1);
+        let snap = SessionSnapshot {
+            id: 9,
+            h: vec![1.0; 4],
+            hist: vec![0.5; 15],
+            hist_rows: 2,
+            hist_head: 2,
+            last_tick: 3,
+            last_touch: 999, // foreign counter value: must be ignored
+            steps: 11,
+        };
+        s.inject(snap.clone(), 3);
+        assert!(!s.contains(1), "LRU victim evicted to make room");
+        assert!(s.contains(2) && s.contains(9));
+        assert_eq!(s.stats.evicted_lru, 1);
+        // re-inject under the same id replaces, never duplicates
+        let mut newer = snap;
+        newer.h = vec![2.0; 4];
+        let j = s.inject(newer, 4);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.hidden(j), &[2.0; 4]);
     }
 
     #[test]

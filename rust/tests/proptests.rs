@@ -13,6 +13,7 @@ use m2ru::proptest::{assert_prop, ByteVec, F32In, Gen, Pair, U64Any, UsizeIn, Ve
 use m2ru::quant::{dequantize, stochastic_round, uniform_truncate, StochasticQuantizer};
 use m2ru::replay::{ReplayBuffer, ReservoirDecision, ReservoirSampler};
 use m2ru::rng::GaussianRng;
+use m2ru::serve::{decode_parcel, encode_parcel, SessionSnapshot};
 
 // --- replay / reservoir ----------------------------------------------------
 
@@ -420,15 +421,15 @@ impl Gen for MsgGen {
         let floats = |rng: &mut m2ru::rng::GaussianRng| -> Vec<f32> {
             (0..rng.below(9)).map(|_| rng.uniform_in(-2.0, 2.0)).collect()
         };
-        match rng.below(8) {
-            0 => Message::Hello { user: U64Any.generate(rng) },
+        match rng.below(11) {
+            0 => Message::Hello { user: U64Any.generate(rng), epoch: U64Any.generate(rng) },
             1 => Message::Step { session: U64Any.generate(rng), x: floats(rng) },
             2 => Message::StepLabeled {
                 session: U64Any.generate(rng),
                 label: rng.below(16) as u32,
                 x: floats(rng),
             },
-            3 => Message::Ack { value: U64Any.generate(rng) },
+            3 => Message::Ack { value: U64Any.generate(rng), epoch: U64Any.generate(rng) },
             4 => Message::Logits {
                 session: U64Any.generate(rng),
                 pred: rng.below(16) as u32,
@@ -438,6 +439,15 @@ impl Gen for MsgGen {
                 text: String::from_utf8_lossy(&ByteVec { max_len: 16 }.generate(rng)).into_owned(),
             },
             6 => Message::Shutdown,
+            7 => Message::Migrate {
+                session: U64Any.generate(rng),
+                payload: ByteVec { max_len: 24 }.generate(rng),
+            },
+            8 => Message::Drain { shard: rng.below(64) as u32 },
+            9 => Message::Epoch {
+                epoch: U64Any.generate(rng),
+                shards: rng.below(64) as u32,
+            },
             _ => Message::Nop,
         }
     }
@@ -480,6 +490,138 @@ fn prop_any_single_byte_corruption_decodes_to_error_or_valid_frame() {
             }
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_wire_frames_roundtrip_exactly() {
+    // ∀ messages (including the reshard-plane Migrate/Drain/Epoch
+    // frames) and flag combinations: encode → decode is the identity and
+    // consumes exactly the encoded bytes.
+    let gen = Pair(MsgGen, UsizeIn(0, 3));
+    assert_prop(26, 80, &gen, |(msg, flags_pick)| {
+        let flags = *flags_pick as u8;
+        let buf = encode_frame(flags, msg);
+        match decode_frame(&buf) {
+            Ok((frame, used)) if used == buf.len() && frame.flags == flags && &frame.msg == msg => {
+                Ok(())
+            }
+            Ok((frame, used)) => Err(format!(
+                "roundtrip changed the frame (used {used}/{}): {:?}",
+                buf.len(),
+                frame.msg
+            )),
+            Err(e) => Err(format!("decode failed on a valid frame: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_wire_frames_reject_any_truncation() {
+    // ∀ messages, ∀ cut points strictly inside the encoding: decoding
+    // the prefix must error (header or payload incomplete), never panic,
+    // never succeed.
+    let gen = Pair(MsgGen, UsizeIn(0, 1 << 16));
+    assert_prop(27, 80, &gen, |(msg, cut_seed)| {
+        let buf = encode_frame(0, msg);
+        let cut = cut_seed % buf.len();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            decode_frame(&buf[..cut]).map(|_| ())
+        }));
+        match res {
+            Err(_) => Err(format!("decode panicked at cut {cut}")),
+            Ok(Ok(())) => Err(format!("truncation at {cut}/{} decoded successfully", buf.len())),
+            Ok(Err(_)) => Ok(()),
+        }
+    });
+}
+
+// --- migration parcel codec (rust/src/serve/migrate.rs) ---------------------
+
+/// Consistent shapes + one session's migratable state: the input domain
+/// of the parcel codec.
+struct ParcelGen;
+
+impl Gen for ParcelGen {
+    type Value = (usize, usize, usize, usize, SessionSnapshot, Vec<Example>);
+    fn generate(&self, rng: &mut m2ru::rng::GaussianRng) -> Self::Value {
+        let nh = 1 + rng.below(6);
+        let nx = 1 + rng.below(4);
+        let nt = 1 + rng.below(4);
+        let ny = 1 + rng.below(5);
+        let snap = SessionSnapshot {
+            id: U64Any.generate(rng),
+            h: (0..nh).map(|_| rng.uniform_in(-2.0, 2.0)).collect(),
+            hist: (0..nt * nx).map(|_| rng.uniform_in(-2.0, 2.0)).collect(),
+            hist_rows: rng.below(nt + 1),
+            hist_head: rng.below(nt),
+            last_tick: U64Any.generate(rng),
+            last_touch: U64Any.generate(rng),
+            steps: U64Any.generate(rng),
+        };
+        let pending = (0..rng.below(4))
+            .map(|_| Example {
+                features: (0..nt * nx).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                label: rng.below(ny),
+            })
+            .collect();
+        (nh, nx, nt, ny, snap, pending)
+    }
+}
+
+#[test]
+fn prop_migration_parcel_roundtrips_and_canonicalizes_recency() {
+    // ∀ sessions: seal → decode preserves every field except
+    // `last_touch` (canonically 0), and re-sealing the decoded state is
+    // bitwise-identical — the migration-fidelity law's codec half.
+    assert_prop(28, 40, &ParcelGen, |(nh, nx, nt, ny, snap, pending)| {
+        let raw = encode_parcel(*nh, *nx, *nt, *ny, snap.clone(), pending);
+        let p = decode_parcel(&raw).map_err(|e| format!("decode failed: {e}"))?;
+        if p.session.last_touch != 0 {
+            return Err(format!("last_touch {} not canonicalized", p.session.last_touch));
+        }
+        if (p.nh, p.nx, p.nt, p.ny) != (*nh, *nx, *nt, *ny) {
+            return Err("shapes changed in flight".into());
+        }
+        if p.session.id != snap.id
+            || p.session.h != snap.h
+            || p.session.hist != snap.hist
+            || p.session.hist_rows != snap.hist_rows
+            || p.session.hist_head != snap.hist_head
+            || p.session.last_tick != snap.last_tick
+            || p.session.steps != snap.steps
+        {
+            return Err("session state changed in flight".into());
+        }
+        if p.pending.len() != pending.len()
+            || p.pending.iter().zip(pending).any(|(a, b)| a.label != b.label || a.features != b.features)
+        {
+            return Err("pending window changed in flight".into());
+        }
+        let again = encode_parcel(p.nh, p.nx, p.nt, p.ny, p.session.clone(), &p.pending);
+        if again != raw {
+            return Err("re-sealing the decoded parcel is not bitwise-identical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_migration_parcel_rejects_any_truncation() {
+    // ∀ parcels, ∀ cut points strictly inside the sealed bytes: decode
+    // must refuse (length field or checksum), never panic, never install.
+    let gen = Pair(ParcelGen, UsizeIn(0, 1 << 16));
+    assert_prop(29, 40, &gen, |((nh, nx, nt, ny, snap, pending), cut_seed)| {
+        let raw = encode_parcel(*nh, *nx, *nt, *ny, snap.clone(), pending);
+        let cut = cut_seed % raw.len();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            decode_parcel(&raw[..cut]).map(|_| ())
+        }));
+        match res {
+            Err(_) => Err(format!("decode panicked at cut {cut}")),
+            Ok(Ok(())) => Err(format!("truncation at {cut}/{} decoded successfully", raw.len())),
+            Ok(Err(_)) => Ok(()),
+        }
     });
 }
 

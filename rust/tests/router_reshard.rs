@@ -1,0 +1,564 @@
+//! Elastic-resharding equivalence harness (DESIGN.md §14), extending
+//! PR 5's cross-shard suite to live N→M cutovers. The claims under
+//! test:
+//!
+//! 1. **Inference invariance across cutovers** — with online learning
+//!    off, a 2-shard fleet that rebalances to 3 shards mid-stream and
+//!    later drains a shard produces per-session logits bitwise-identical
+//!    to one unsharded `ServeCore` fed the same schedule — in-process
+//!    and over loopback TCP, with zero client-visible errors.
+//! 2. **Learning equivalence across cutovers** — with online commits
+//!    on, the resharding fleet matches dedicated *epoch-aware* per-shard
+//!    references that migrate the same sessions with the same parcel
+//!    primitives at the same wave boundaries (commits, replay stream,
+//!    batching and logits all match).
+//! 3. **Migration fidelity** — every reference migration re-extracts
+//!    the parcel right after injecting it and asserts the post-cutover
+//!    state bitwise-equal to the pre-migration snapshot.
+//! 4. **Moved-set determinism** — the number of sessions each cutover
+//!    migrates equals the pure epoch arithmetic over the session ids
+//!    ([`RoutingEpoch::moved`]), in-process and remote.
+//!
+//! The same wave schedule drives every deployment: `ARRIVALS` requests
+//! per wave, one logical tick per wave on every shard, a tail flush at
+//! each phase end; cutovers land on flushed wave boundaries (the
+//! router quiesces the same way internally).
+
+use std::collections::HashMap;
+
+use m2ru::config::{NetConfig, RunConfig, ServeConfig};
+use m2ru::net::{
+    run_connect, ConnectOptions, NetClient, NetServeOptions, NetServer, RouterCore,
+    RouterServeOptions, RouterServer, RoutingEpoch,
+};
+use m2ru::serve::{
+    extract_parcel, inject_parcel, session_id_for_user, CompletedStep, ServeCore,
+    SyntheticWorkload,
+};
+
+const SESSIONS: usize = 12;
+const ARRIVALS: usize = 6;
+
+/// One request of the admission schedule: (user, features, label).
+type Req = (u64, Vec<f32>, Option<usize>);
+/// Per-session completion log: reference session id → (pred, logits)
+/// in completion order.
+type PerSession = HashMap<u64, Vec<(usize, Vec<f32>)>>;
+
+/// The shared operating point (PR 5's: capacity exceeds the user count
+/// so no deployment ever evicts — the invariance claims are about
+/// routing and migration, not eviction policy).
+fn run_cfg(seed: u64, update_every: usize, shards: usize, root: &str) -> RunConfig {
+    let mut run = RunConfig::default();
+    run.seed = seed;
+    run.backend = "dense".to_string();
+    run.serve = ServeConfig {
+        max_batch: 4,
+        max_wait: 1,
+        capacity: 16,
+        ttl: 0,
+        update_every,
+        replay_cap: 64,
+        replay_mix: 0.5,
+        ..ServeConfig::default()
+    };
+    run.router.shards = shards;
+    run.router.checkpoint_root = root.to_string();
+    run
+}
+
+/// The deterministic admission schedule: waves of `ARRIVALS` requests.
+fn schedule(seed: u64, requests: u64) -> Vec<Vec<Req>> {
+    let mut wl = SyntheticWorkload::new(&NetConfig::SMALL, SESSIONS, seed);
+    let mut waves = Vec::new();
+    let mut issued = 0u64;
+    while issued < requests {
+        let mut wave = Vec::new();
+        for _ in 0..ARRIVALS {
+            if issued >= requests {
+                break;
+            }
+            wave.push(wl.next());
+            issued += 1;
+        }
+        waves.push(wave);
+    }
+    waves
+}
+
+fn group_steps(steps: &[CompletedStep], out: &mut PerSession) {
+    for s in steps {
+        out.entry(s.session).or_default().push((s.pred, s.logits.clone()));
+    }
+}
+
+/// Drive an unsharded core over the whole schedule (the baseline),
+/// flushing after each wave index in `flush_at`, ticking every wave.
+fn drive_core(
+    core: &mut ServeCore,
+    waves: &[Vec<Req>],
+    flush_at: &[usize],
+    log: &mut PerSession,
+) {
+    for (i, wave) in waves.iter().enumerate() {
+        for (u, x, label) in wave {
+            core.submit(session_id_for_user(*u), x.clone(), *label, 0);
+        }
+        let mut done = core.drain_ready().unwrap();
+        if flush_at.contains(&i) {
+            done.extend(core.flush_all().unwrap());
+        }
+        group_steps(&done, log);
+        core.advance_tick();
+    }
+    core.sync_commits().unwrap();
+}
+
+/// Drive the in-process router over waves `lo..hi` (all users — routing
+/// is the router's job), appending per-session logs.
+fn drive_router(
+    rc: &mut RouterCore,
+    waves: &[Vec<Req>],
+    lo: usize,
+    hi: usize,
+    flush_at: &[usize],
+    log: &mut PerSession,
+) {
+    for i in lo..hi {
+        for (u, x, label) in &waves[i] {
+            let sid = rc.session_id(*u);
+            rc.submit(sid, x.clone(), *label, 0).unwrap();
+        }
+        let done = rc.wave(true, flush_at.contains(&i)).unwrap();
+        group_steps(&done, log);
+    }
+}
+
+fn assert_same(got: &PerSession, want: &PerSession, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: session sets differ");
+    for (sid, want_log) in want {
+        let got_log = got
+            .get(sid)
+            .unwrap_or_else(|| panic!("{ctx}: session {sid:#x} missing from the resharded run"));
+        assert_eq!(
+            got_log.len(),
+            want_log.len(),
+            "{ctx}: session {sid:#x} completed a different number of steps"
+        );
+        for (i, (g, w)) in got_log.iter().zip(want_log).enumerate() {
+            assert_eq!(g.0, w.0, "{ctx}: session {sid:#x} prediction differs at step {i}");
+            assert_eq!(
+                g.1, w.1,
+                "{ctx}: session {sid:#x} logits differ at step {i} (must be bitwise)"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------- epoch-aware references
+
+/// A reference fleet: one dedicated unsharded core per *physical*
+/// shard, routed by an explicit [`RoutingEpoch`] and cut over between
+/// epochs with the same parcel primitives — `extract_parcel` /
+/// `inject_parcel`, ascending routed-id order, at quiesced wave
+/// boundaries — the router itself uses. This is PR 5's
+/// `per_shard_references` generalized to a partition that changes
+/// mid-run.
+struct RefFleet {
+    cores: HashMap<usize, ServeCore>,
+    epoch: RoutingEpoch,
+}
+
+impl RefFleet {
+    fn new(run: &RunConfig, epoch: RoutingEpoch) -> RefFleet {
+        let mut cores = HashMap::new();
+        for &p in epoch.map() {
+            cores.insert(p as usize, ServeCore::new(NetConfig::SMALL, run).unwrap());
+        }
+        RefFleet { cores, epoch }
+    }
+
+    fn physicals(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self.cores.keys().copied().collect();
+        ks.sort_unstable();
+        ks
+    }
+
+    /// Drive waves `lo..hi`: each request goes to the core the current
+    /// epoch routes its *routing key* to (the key is the deployment's
+    /// session id for the user — identical to the reference id
+    /// in-process, the router's keyed id over TCP); every core ticks
+    /// every wave (the fleet shares one clock).
+    fn drive(
+        &mut self,
+        waves: &[Vec<Req>],
+        lo: usize,
+        hi: usize,
+        flush_at: &[usize],
+        key_of_user: &dyn Fn(u64) -> u64,
+        log: &mut PerSession,
+    ) {
+        let ks = self.physicals();
+        for i in lo..hi {
+            for (u, x, label) in &waves[i] {
+                let k = self.epoch.route(key_of_user(*u));
+                self.cores
+                    .get_mut(&k)
+                    .expect("schedule routed to a retired shard")
+                    .submit(session_id_for_user(*u), x.clone(), *label, 0);
+            }
+            for &k in &ks {
+                let core = self.cores.get_mut(&k).unwrap();
+                let mut done = core.drain_ready().unwrap();
+                if flush_at.contains(&i) {
+                    done.extend(core.flush_all().unwrap());
+                }
+                group_steps(&done, log);
+                core.advance_tick();
+            }
+        }
+    }
+
+    /// Cut over to `next`: quiesce (flush, clocks untouched), boot any
+    /// new physical fresh (the router's `revive_shard` boots from the
+    /// same run config, hence identical weights), migrate every
+    /// resident session whose route changes — in ascending routed-id
+    /// order, the router's order — and retire physicals the new map no
+    /// longer uses. Returns sessions migrated.
+    ///
+    /// Embeds the migration-fidelity law: after the inject, the session
+    /// is re-extracted and the parcel must equal the pre-migration
+    /// snapshot bit-for-bit (then it is re-injected and serving goes
+    /// on).
+    fn cutover(
+        &mut self,
+        next: RoutingEpoch,
+        run: &RunConfig,
+        key_of_sid: &HashMap<u64, u64>,
+    ) -> usize {
+        for k in self.physicals() {
+            let done = self.cores.get_mut(&k).unwrap().flush_all().unwrap();
+            assert!(done.is_empty(), "cutovers land on flushed wave boundaries");
+        }
+        for &p in next.map() {
+            self.cores
+                .entry(p as usize)
+                .or_insert_with(|| ServeCore::new(NetConfig::SMALL, run).unwrap());
+        }
+        let mut resident: Vec<(u64, u64)> = Vec::new(); // (routing key, ref sid)
+        for k in self.physicals() {
+            for sid in self.cores[&k].store().ids() {
+                let key = *key_of_sid.get(&sid).expect("resident session with no routing key");
+                resident.push((key, sid));
+            }
+        }
+        resident.sort_unstable();
+        let mut migrated = 0;
+        for (key, sid) in resident {
+            let (from, to) = (self.epoch.route(key), next.route(key));
+            if from == to {
+                continue;
+            }
+            let raw = extract_parcel(self.cores.get_mut(&from).unwrap(), sid)
+                .unwrap()
+                .expect("a resident session extracts");
+            inject_parcel(self.cores.get_mut(&to).unwrap(), sid, &raw).unwrap();
+            let back = extract_parcel(self.cores.get_mut(&to).unwrap(), sid)
+                .unwrap()
+                .expect("resident right after inject");
+            assert_eq!(
+                back, raw,
+                "post-cutover state must equal the pre-migration snapshot bitwise"
+            );
+            inject_parcel(self.cores.get_mut(&to).unwrap(), sid, &raw).unwrap();
+            migrated += 1;
+        }
+        let keep: Vec<usize> = next.map().iter().map(|&p| p as usize).collect();
+        self.cores.retain(|k, _| keep.contains(k));
+        self.epoch = next;
+        migrated
+    }
+}
+
+// --------------------------------------------------- in-process fleets
+
+#[test]
+fn in_process_rebalance_and_drain_match_the_unsharded_baseline() {
+    let seed = 41;
+    let waves = schedule(seed, 360); // 60 waves
+    let flushes = [19usize, 39, 59];
+    let run = run_cfg(seed, 0, 1, "");
+    let mut baseline = PerSession::new();
+    let mut core = ServeCore::new(NetConfig::SMALL, &run).unwrap();
+    drive_core(&mut core, &waves, &flushes, &mut baseline);
+    assert_eq!(baseline.values().map(Vec::len).sum::<usize>(), 360);
+
+    let run = run_cfg(seed, 0, 2, "");
+    let mut rc = RouterCore::new(NetConfig::SMALL, &run).unwrap();
+    let mut got = PerSession::new();
+    drive_router(&mut rc, &waves, 0, 20, &flushes, &mut got);
+
+    // grow 2 → 3 mid-stream: live sessions migrate onto the new shard
+    let (epoch, moved_up, steps) = rc.rebalance(3).unwrap();
+    assert!(steps.is_empty(), "the wave-19 flush already quiesced the fleet");
+    assert_eq!(epoch, 1);
+    assert_eq!(rc.epoch().map(), &[0, 1, 2]);
+    assert!(moved_up > 0, "some sessions must change route under 2→3");
+    drive_router(&mut rc, &waves, 20, 40, &flushes, &mut got);
+
+    // drain shard 0 mid-stream: its residents move to the survivors
+    let (epoch, moved_out, steps) = rc.drain(0).unwrap();
+    assert!(steps.is_empty());
+    assert_eq!(epoch, 2);
+    assert_eq!(rc.epoch().map(), &[1, 2]);
+    assert!(moved_out > 0, "shard 0's residents must move out");
+    drive_router(&mut rc, &waves, 40, waves.len(), &flushes, &mut got);
+
+    assert_eq!(rc.routed(), 360);
+    assert_eq!(rc.migrated() as usize, moved_up + moved_out);
+    assert_same(&got, &baseline, "2→3→drain(0) inference");
+    let (reports, tail) = rc.finish().unwrap();
+    assert!(tail.is_empty(), "the final wave already flushed");
+    assert_eq!(reports.len(), 2, "only the two survivors report at finish");
+}
+
+#[test]
+fn learning_cutovers_match_epoch_aware_per_shard_references() {
+    // online commits on (update_every=4): the resharding fleet must be
+    // bitwise-identical to epoch-aware references that migrate the same
+    // sessions with the same parcels at the same boundaries — weights,
+    // replay stream and batching included
+    let seed = 43;
+    let waves = schedule(seed, 360);
+    let flushes = [19usize, 39, 59];
+    let run = run_cfg(seed, 4, 2, "");
+
+    let e0 = RoutingEpoch::identity(2);
+    let e1 = e0.rebalanced(vec![0, 1, 2]).unwrap();
+    let e2 = e1.drained(0).unwrap();
+    // in-process fleets route by the reference id itself
+    let ident: HashMap<u64, u64> = (0..SESSIONS as u64)
+        .map(|u| {
+            let s = session_id_for_user(u);
+            (s, s)
+        })
+        .collect();
+
+    let mut fleet = RefFleet::new(&run, e0);
+    let mut expected = PerSession::new();
+    let key = |u: u64| session_id_for_user(u);
+    fleet.drive(&waves, 0, 20, &flushes, &key, &mut expected);
+    let ref_up = fleet.cutover(e1, &run, &ident);
+    fleet.drive(&waves, 20, 40, &flushes, &key, &mut expected);
+    let ref_out = fleet.cutover(e2, &run, &ident);
+    fleet.drive(&waves, 40, waves.len(), &flushes, &key, &mut expected);
+
+    let mut rc = RouterCore::new(NetConfig::SMALL, &run).unwrap();
+    let mut got = PerSession::new();
+    drive_router(&mut rc, &waves, 0, 20, &flushes, &mut got);
+    let (_, m_up, steps) = rc.rebalance(3).unwrap();
+    assert!(steps.is_empty());
+    drive_router(&mut rc, &waves, 20, 40, &flushes, &mut got);
+    let (_, m_out, steps) = rc.drain(0).unwrap();
+    assert!(steps.is_empty());
+    drive_router(&mut rc, &waves, 40, waves.len(), &flushes, &mut got);
+
+    assert_eq!(m_up, ref_up, "the 2→3 moved set is pure epoch arithmetic");
+    assert_eq!(m_out, ref_out, "the drain(0) moved set is pure epoch arithmetic");
+    assert_same(&got, &expected, "2→3→drain(0) learning");
+    let (reports, tail) = rc.finish().unwrap();
+    assert!(tail.is_empty());
+    let updates: u64 = reports.iter().map(|(_, r)| r.metrics.online_updates).sum();
+    assert!(updates > 0, "the equivalence must cover online commits");
+}
+
+// --------------------------------------------------- loopback TCP fleets
+
+fn spawn_shard(
+    run: RunConfig,
+    listen: &str,
+) -> (String, std::thread::JoinHandle<anyhow::Result<m2ru::net::NetServeReport>>) {
+    let server = NetServer::bind(NetServeOptions::new(NetConfig::SMALL, run, listen)).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+fn spawn_router(
+    run: RunConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<m2ru::net::RouterReport>>) {
+    let server = RouterServer::bind(RouterServeOptions { net: NetConfig::SMALL, run }).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+/// Group a connect report's completions into the reference id space
+/// (client session ids are keyed per deployment; users are the shared
+/// key).
+fn group_client(completed: &[(u64, u32, Vec<f32>)], session_ids: &[u64], out: &mut PerSession) {
+    let to_user: HashMap<u64, u64> =
+        session_ids.iter().enumerate().map(|(u, sid)| (*sid, u as u64)).collect();
+    for (sid, pred, logits) in completed {
+        let user = to_user[sid];
+        out.entry(session_id_for_user(user)).or_default().push((*pred as usize, logits.clone()));
+    }
+}
+
+/// The epoch sequence a 3-address TCP fleet walks in these tests:
+/// boot identity(3), shrink to {0,1} before traffic, grow to {0,1,2}
+/// mid-stream, drain shard 0. Remote rebalance targets must be
+/// configured addresses, which is why the fleet boots with three.
+fn tcp_epochs() -> (RoutingEpoch, RoutingEpoch, RoutingEpoch) {
+    let e1 = RoutingEpoch::identity(3).rebalanced(vec![0, 1]).unwrap();
+    let e2 = e1.rebalanced(vec![0, 1, 2]).unwrap();
+    let e3 = e2.drained(0).unwrap();
+    (e1, e2, e3)
+}
+
+/// Run the three client phases (120 requests each, 20 waves) against a
+/// live router, resharding between them: rebalance 2→3 after phase 1,
+/// drain shard 0 after phase 2. Returns the three connect reports.
+fn drive_tcp_phases(
+    addr: &str,
+    seed: u64,
+    admin: &mut NetClient,
+) -> (m2ru::net::ConnectReport, m2ru::net::ConnectReport, m2ru::net::ConnectReport) {
+    let phase = |skip: u64, shutdown: bool| {
+        let mut c = ConnectOptions::new(addr.to_string(), NetConfig::SMALL);
+        c.requests = 120;
+        c.sessions = SESSIONS;
+        c.arrivals = ARRIVALS;
+        c.seed = seed;
+        c.skip = skip;
+        c.shutdown = shutdown;
+        c
+    };
+    let rep1 = run_connect(&phase(0, false)).unwrap();
+    assert_eq!(rep1.completed.len(), 120, "phase 1 must see zero client-visible errors");
+    // grow 2 → 3 mid-stream; the ack blocks until the cutover commits
+    assert_eq!(admin.rebalance(3).unwrap(), (2, 3));
+    let rep2 = run_connect(&phase(120, false)).unwrap();
+    assert_eq!(rep2.completed.len(), 120, "phase 2 must see zero client-visible errors");
+    assert_eq!(rep2.session_ids, rep1.session_ids, "a cutover must not re-key sessions");
+    // drain shard 0: quiesce, migrate out, checkpoint, retire
+    assert_eq!(admin.drain(0).unwrap(), (3, 2));
+    assert_eq!(admin.epoch().unwrap(), (3, 2));
+    let rep3 = run_connect(&phase(240, true)).unwrap();
+    assert_eq!(rep3.completed.len(), 120, "phase 3 must see zero client-visible errors");
+    assert_eq!(rep3.session_ids, rep1.session_ids);
+    (rep1, rep2, rep3)
+}
+
+#[test]
+fn tcp_rebalance_and_drain_match_the_unsharded_baseline() {
+    // three real `serve --listen` shard processes behind a TCP router;
+    // inference-only, so the combined per-session logs must match the
+    // 1-process baseline bitwise across both cutovers
+    let seed = 47;
+    let shard_run = run_cfg(seed, 0, 1, "");
+    let (a0, s0) = spawn_shard(shard_run.clone(), "127.0.0.1:0");
+    let (a1, s1) = spawn_shard(shard_run.clone(), "127.0.0.1:0");
+    let (a2, s2) = spawn_shard(shard_run.clone(), "127.0.0.1:0");
+    let mut router_run = run_cfg(seed, 0, 1, "");
+    router_run.router.shard_addrs = vec![a0, a1, a2];
+    router_run.net.listen = "127.0.0.1:0".to_string();
+    let (addr, router) = spawn_router(router_run);
+
+    let mut admin = NetClient::connect(&addr).unwrap();
+    assert_eq!(admin.epoch().unwrap(), (0, 3));
+    assert_eq!(admin.rebalance(2).unwrap(), (1, 2), "shrink before traffic: nothing moves");
+
+    let (rep1, rep2, rep3) = drive_tcp_phases(&addr, seed, &mut admin);
+    // the drained shard checkpointed and exited mid-run
+    let t0 = s0.join().unwrap().unwrap();
+    let router_rep = router.join().unwrap().unwrap();
+    let t1 = s1.join().unwrap().unwrap();
+    let t2 = s2.join().unwrap().unwrap();
+    assert!(router_rep.remote);
+    assert_eq!(router_rep.routed, 360);
+    assert_eq!(router_rep.epoch, 3);
+    assert_eq!(
+        t0.report.metrics.requests + t1.report.metrics.requests + t2.report.metrics.requests,
+        360,
+        "every request reached exactly one shard"
+    );
+    // the migrated totals are pure epoch arithmetic over the fleet's
+    // keyed session ids — every session was mapped when each op ran
+    let (e1, e2, e3) = tcp_epochs();
+    let m_up = e1.moved(&e2, rep1.session_ids.iter().copied()).len();
+    let m_out = e2.moved(&e3, rep1.session_ids.iter().copied()).len();
+    assert!(m_up > 0 && m_out > 0, "both cutovers must actually move sessions");
+    assert_eq!(router_rep.migrated as usize, m_up + m_out);
+
+    let mut got = PerSession::new();
+    group_client(&rep1.completed, &rep1.session_ids, &mut got);
+    group_client(&rep2.completed, &rep2.session_ids, &mut got);
+    group_client(&rep3.completed, &rep3.session_ids, &mut got);
+    let waves = schedule(seed, 360);
+    let flushes = [19usize, 39, 59];
+    let run = run_cfg(seed, 0, 1, "");
+    let mut baseline = PerSession::new();
+    let mut core = ServeCore::new(NetConfig::SMALL, &run).unwrap();
+    drive_core(&mut core, &waves, &flushes, &mut baseline);
+    assert_same(&got, &baseline, "TCP fleet across a 2→3 rebalance and a shard-0 drain");
+}
+
+#[test]
+fn tcp_learning_cutovers_match_epoch_aware_references() {
+    // online commits on: the remote fleet's combined logs must match an
+    // epoch-aware reference fleet partitioned by the router's (random,
+    // per-boot) id space and migrated with the same parcel primitives
+    let seed = 53;
+    let shard_run = run_cfg(seed, 4, 1, "");
+    let (a0, s0) = spawn_shard(shard_run.clone(), "127.0.0.1:0");
+    let (a1, s1) = spawn_shard(shard_run.clone(), "127.0.0.1:0");
+    let (a2, s2) = spawn_shard(shard_run.clone(), "127.0.0.1:0");
+    let mut router_run = run_cfg(seed, 4, 1, "");
+    router_run.router.shard_addrs = vec![a0, a1, a2];
+    router_run.net.listen = "127.0.0.1:0".to_string();
+    let (addr, router) = spawn_router(router_run);
+
+    let mut admin = NetClient::connect(&addr).unwrap();
+    assert_eq!(admin.rebalance(2).unwrap(), (1, 2));
+
+    let (rep1, rep2, rep3) = drive_tcp_phases(&addr, seed, &mut admin);
+    let _ = s0.join().unwrap().unwrap();
+    let router_rep = router.join().unwrap().unwrap();
+    let _ = s1.join().unwrap().unwrap();
+    let _ = s2.join().unwrap().unwrap();
+    assert_eq!(router_rep.routed, 360);
+    assert_eq!(router_rep.epoch, 3);
+
+    // epoch-aware references, routed by the router's ids (its secret is
+    // random per boot — rep1.session_ids is the ground truth), driven
+    // and migrated exactly as the fleet was
+    let (e1, e2, e3) = tcp_epochs();
+    let keys: HashMap<u64, u64> = rep1
+        .session_ids
+        .iter()
+        .enumerate()
+        .map(|(u, rsid)| (session_id_for_user(u as u64), *rsid))
+        .collect();
+    let route_key = {
+        let ids = rep1.session_ids.clone();
+        move |u: u64| ids[u as usize]
+    };
+    let run = run_cfg(seed, 4, 1, "");
+    let waves = schedule(seed, 360);
+    let flushes = [19usize, 39, 59];
+    let mut fleet = RefFleet::new(&run, e1);
+    let mut expected = PerSession::new();
+    fleet.drive(&waves, 0, 20, &flushes, &route_key, &mut expected);
+    let ref_up = fleet.cutover(e2, &run, &keys);
+    fleet.drive(&waves, 20, 40, &flushes, &route_key, &mut expected);
+    let ref_out = fleet.cutover(e3, &run, &keys);
+    fleet.drive(&waves, 40, waves.len(), &flushes, &route_key, &mut expected);
+    assert!(ref_up > 0 && ref_out > 0, "both cutovers must actually move sessions");
+
+    let mut got = PerSession::new();
+    group_client(&rep1.completed, &rep1.session_ids, &mut got);
+    group_client(&rep2.completed, &rep2.session_ids, &mut got);
+    group_client(&rep3.completed, &rep3.session_ids, &mut got);
+    assert_same(&got, &expected, "TCP learning fleet across a 2→3 rebalance and a drain");
+}
