@@ -32,16 +32,17 @@ use m2ru::experiments::{
     run_fig4, run_fig5a, run_fig5b, run_fig5c, run_fig5d, run_headline, run_table1, Fig4Options,
     Fig5bOptions,
 };
-use m2ru::linalg::bitplane::{wbs_mac_bitloop, wbs_mac_packed, BitPlanes};
+use m2ru::linalg::bitplane::{wbs_mac_bitloop, wbs_mac_packed, wbs_mac_packed_i32, BitPlanes};
 use m2ru::linalg::{kernels, Mat};
 use m2ru::nn::SeqBatch;
+use m2ru::quant::QuantizedMat;
 use m2ru::replay::ReplayBuffer;
 use m2ru::rng::GaussianRng;
 use m2ru::net::{decode_frame, encode_frame, Message, RouterCore, FLAG_TICK};
 use m2ru::runtime::{ModelBundle, Runtime};
 use m2ru::serve::{
     run_serve, save_checkpoint, save_delta, session_id_for_user, DynamicBatcher, ServeCore,
-    ServeOptions, SessionStore, StepRequest, SyntheticWorkload,
+    ServeOptions, SessionStore, StepRequest, SyntheticWorkload, WeightSnapshot,
 };
 
 /// One benchmark result, serialized to `results/BENCH_serve.json`.
@@ -178,6 +179,22 @@ fn main() -> anyhow::Result<()> {
         }
         kernels::force("")?;
     }
+    if runs("matmul_i8_kernel") {
+        // the integer MAC under each forced kernel: the raw i8xi8->i32
+        // speedup the int8 serving path is built on (results are exactly
+        // identical — integer accumulation is associative)
+        let n = 256usize;
+        let a: Vec<i8> = (0..n * n).map(|i| ((i * 31) % 255) as i8).collect();
+        let b: Vec<i8> = (0..n * n).map(|i| ((i * 17) % 255) as i8).collect();
+        let mut out = vec![0i32; n * n];
+        for kern in ["scalar", "simd"] {
+            kernels::force(kern)?;
+            timeit(&mut recs, &format!("matmul_i8_kernel ({n}x{n}, kernel={kern})"), 20, || {
+                kernels::matmul_i8(&a, &b, &mut out, n, n, n);
+            });
+        }
+        kernels::force("")?;
+    }
     if runs("crossbar_mac") {
         // bit-serial WBS MAC at pmnist100 hidden-layer shape: the packed
         // bit-plane path (64 input bits per word, popcount-free row adds)
@@ -196,6 +213,15 @@ fn main() -> anyhow::Result<()> {
         timeit(&mut recs, "crossbar_mac_packed (128x100, nb=8, 100 macs)", 20, || {
             for _ in 0..100 {
                 let _ = wbs_mac_packed(&BitPlanes::pack(&xs, nb), &g);
+            }
+        });
+        // the int8 serving variant: the same packed planes folded over
+        // pre-quantized i8 columns in pure integer domain (one rescale
+        // at the end) — what the crossbar backend runs under int8
+        let q = QuantizedMat::from_mat(&g);
+        timeit(&mut recs, "crossbar_mac_packed_i32 (128x100, nb=8, 100 macs)", 20, || {
+            for _ in 0..100 {
+                let _ = wbs_mac_packed_i32(&BitPlanes::pack(&xs, nb), &q);
             }
         });
     }
@@ -345,6 +371,25 @@ fn main() -> anyhow::Result<()> {
             });
         }
         kernels::force("")?;
+    }
+    if runs("serve_step_int8") {
+        // the same padded dispatch through the int8 path: pre-quantized
+        // snapshot planes + i8xi8->i32 MACs (acceptance: the simd row
+        // must clear 1.5x the f32 simd serve_step row)
+        kernels::force_precision("int8")?;
+        for kern in ["scalar", "simd"] {
+            kernels::force(kern)?;
+            let be = registry.create("dense", &ctx)?;
+            let eng = ParallelEngine::new(be, 1);
+            let snap = WeightSnapshot::new(0, eng.backend().effective_params());
+            let h = Mat::zeros(32, cfg.nh);
+            let x = Mat::from_fn(32, cfg.nx, |r, c| ((r * 13 + c) % 9) as f32 * 0.1 - 0.4);
+            timeit(&mut recs, &format!("serve_step (dense, int8, b=32, kernel={kern})"), 50, || {
+                eng.step_sessions_snap(&snap, &h, &x).unwrap();
+            });
+        }
+        kernels::force("")?;
+        kernels::force_precision("")?;
     }
     if runs("net_encode") {
         // wire-codec encode cost per 1k Step frames at serving width

@@ -246,6 +246,66 @@ impl ComputeBackend for CrossbarBackend {
         Ok(wbs_vmm(x, &xbar.read_weights(), self.nb))
     }
 
+    /// The int8 serving step: WBS-digitized drive → packed bit-plane MAC
+    /// with i32 accumulation over the pre-quantized column planes
+    /// ([`crate::linalg::bitplane::wbs_mac_packed_i32`]) → shared ADC →
+    /// digital bias/tanh/interpolation. The ADC full-scales derive from
+    /// the L1 norms the committer stored alongside the planes, so the
+    /// dispatch path never re-reads the f32 weights.
+    fn step_hidden_int8(
+        &self,
+        p: &MiruParams,
+        q: &crate::quant::QuantizedParams,
+        h: &Mat,
+        x: &Mat,
+    ) -> Result<Mat> {
+        ensure!(x.cols == self.nx, "step nx {} != net nx {}", x.cols, self.nx);
+        ensure!(h.cols == self.nh, "step nh {} != net nh {}", h.cols, self.nh);
+        ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
+        let (lam, beta) = (self.hyper.lam, self.hyper.beta);
+        let vscale_h = (0.3 * q.hidden_l1max).max(1.0); // as `vscale_hidden`
+        let mut bh_scaled = h.clone();
+        bh_scaled.scale(beta);
+        let drive = Mat::hcat(x, &bh_scaled);
+        let mut acc = Mat::zeros(drive.rows, q.hidden.cols);
+        for r in 0..drive.rows {
+            let bp = crate::linalg::bitplane::BitPlanes::pack(drive.row(r), self.nb);
+            acc.row_mut(r)
+                .copy_from_slice(&crate::linalg::bitplane::wbs_mac_packed_i32(&bp, &q.hidden));
+        }
+        for v in &mut acc.data {
+            *v = adc_quantize(*v, self.adc_bits, vscale_h);
+        }
+        acc.add_row_bias(&p.bh);
+        let cand = acc.map(f32::tanh);
+        let mut h_new = h.clone();
+        h_new.scale(lam);
+        h_new.add_scaled(&cand, 1.0 - lam);
+        Ok(h_new)
+    }
+
+    fn readout_int8(
+        &self,
+        p: &MiruParams,
+        q: &crate::quant::QuantizedParams,
+        h: &Mat,
+    ) -> Result<Mat> {
+        ensure!(h.cols == self.nh, "readout nh {} != net nh {}", h.cols, self.nh);
+        let vscale_o = q.wo_l1max.max(1.0); // as `vscale_readout`
+        let mut logits = Mat::zeros(h.rows, q.wo.cols);
+        for r in 0..h.rows {
+            let bp = crate::linalg::bitplane::BitPlanes::pack(h.row(r), self.nb);
+            logits
+                .row_mut(r)
+                .copy_from_slice(&crate::linalg::bitplane::wbs_mac_packed_i32(&bp, &q.wo));
+        }
+        for v in &mut logits.data {
+            *v = adc_quantize(*v, self.adc_bits, vscale_o);
+        }
+        logits.add_row_bias(&p.bo);
+        Ok(logits)
+    }
+
     fn dfa_raw_grads_from(&self, p: &MiruParams, x: &SeqBatch) -> Result<DfaDeltas> {
         // DFA deltas from the weights the devices actually realize (`p`
         // should come from `effective_params`)
@@ -383,7 +443,12 @@ impl ComputeBackend for CrossbarBackend {
 
     fn stats(&self) -> Vec<String> {
         vec![
-            format!("wbs mac: packed bit-planes (nb={}, kernel={})", self.nb, kernels::active_name()),
+            format!(
+                "wbs mac: packed bit-planes (nb={}, kernel={}, precision={})",
+                self.nb,
+                kernels::active_name(),
+                kernels::precision_name()
+            ),
             format!(
                 "device writes: total={} mean/step={:.1} skipped={}",
                 self.programmer.total.writes,
@@ -472,6 +537,26 @@ mod tests {
             sparse.programmer.total.writes,
             dense.programmer.total.writes
         );
+    }
+
+    #[test]
+    fn int8_step_and_readout_track_f32() {
+        let be = CrossbarBackend::new(&quiet_ctx(11));
+        let p = be.effective_params();
+        let q = crate::quant::QuantizedParams::build(&p);
+        let h = Mat::from_fn(6, be.nh, |r, c| ((r * 3 + c) % 11) as f32 / 5.5 - 1.0);
+        let x = Mat::from_fn(6, be.nx, |r, c| ((r * 7 + c * 2) % 13) as f32 / 6.5 - 1.0);
+        let hf = be.step_hidden_from(&p, &h, &x).unwrap();
+        let hq = be.step_hidden_int8(&p, &q, &h, &x).unwrap();
+        for (a, b) in hq.data.iter().zip(&hf.data) {
+            // weight quantization on top of the WBS/ADC error budget
+            assert!((a - b).abs() < 0.1, "{a} vs {b}");
+        }
+        let lf = be.readout_from(&p, &hf).unwrap();
+        let lq = be.readout_int8(&p, &q, &hf).unwrap();
+        for (a, b) in lq.data.iter().zip(&lf.data) {
+            assert!((a - b).abs() < 0.15 * (1.0 + b.abs()), "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -99,6 +99,45 @@ impl ComputeBackend for DenseBackend {
         Ok(logits)
     }
 
+    /// The int8 serving step: the same `[x | βh] @ [W_h; U_h]` drive as
+    /// the f32 [`MiruParams::step`], but through the pre-quantized
+    /// per-column planes and the i8×i8→i32 kernel, with one rescale per
+    /// pre-activation. Bias add, tanh and the λ-interpolation stay f32.
+    fn step_hidden_int8(
+        &self,
+        p: &MiruParams,
+        q: &crate::quant::QuantizedParams,
+        h: &Mat,
+        x: &Mat,
+    ) -> Result<Mat> {
+        ensure!(x.cols == p.nx(), "step nx {} != net nx {}", x.cols, p.nx());
+        ensure!(h.cols == p.nh(), "step nh {} != net nh {}", h.cols, p.nh());
+        ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
+        let (lam, beta) = (self.hyper.lam, self.hyper.beta);
+        let mut bh_scaled = h.clone();
+        bh_scaled.scale(beta);
+        let drive = Mat::hcat(x, &bh_scaled);
+        let mut pre = crate::quant::matmul_i8_rowquant(&drive, &q.hidden);
+        pre.add_row_bias(&p.bh);
+        let cand = pre.map(f32::tanh);
+        let mut h_new = h.clone();
+        h_new.scale(lam);
+        h_new.add_scaled(&cand, 1.0 - lam);
+        Ok(h_new)
+    }
+
+    fn readout_int8(
+        &self,
+        p: &MiruParams,
+        q: &crate::quant::QuantizedParams,
+        h: &Mat,
+    ) -> Result<Mat> {
+        ensure!(h.cols == p.nh(), "readout nh {} != net nh {}", h.cols, p.nh());
+        let mut logits = crate::quant::matmul_i8_rowquant(h, &q.wo);
+        logits.add_row_bias(&p.bo);
+        Ok(logits)
+    }
+
     fn dfa_raw_grads_from(&self, p: &MiruParams, x: &SeqBatch) -> Result<DfaDeltas> {
         Ok(dfa_grads(p, x, self.hyper.lam, self.hyper.beta, 1.0, &self.psi, None))
     }
@@ -188,6 +227,25 @@ mod tests {
         be.train_dfa(&toy_batch(&net, 8, 4)).unwrap();
         assert_eq!(fork.forward(&x).unwrap().data, frozen.data);
         assert_ne!(be.forward(&x).unwrap().data, frozen.data);
+    }
+
+    #[test]
+    fn int8_step_and_readout_track_f32() {
+        let be = DenseBackend::new(&ctx());
+        let p = be.effective_params();
+        let q = crate::quant::QuantizedParams::build(&p);
+        let h = Mat::from_fn(9, p.nh(), |r, c| ((r * 3 + c) % 11) as f32 / 5.5 - 1.0);
+        let x = Mat::from_fn(9, p.nx(), |r, c| ((r * 7 + c * 2) % 13) as f32 / 6.5 - 1.0);
+        let hf = be.step_hidden_from(&p, &h, &x).unwrap();
+        let hq = be.step_hidden_int8(&p, &q, &h, &x).unwrap();
+        for (a, b) in hq.data.iter().zip(&hf.data) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        let lf = be.readout_from(&p, &hf).unwrap();
+        let lq = be.readout_int8(&p, &q, &hf).unwrap();
+        for (a, b) in lq.data.iter().zip(&lf.data) {
+            assert!((a - b).abs() < 0.1 * (1.0 + b.abs()), "{a} vs {b}");
+        }
     }
 
     #[test]

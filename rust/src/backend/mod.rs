@@ -205,6 +205,32 @@ pub trait ComputeBackend: Send + Sync {
         self.readout(h)
     }
 
+    /// [`ComputeBackend::step_hidden_from`] through the int8 serving
+    /// path: `q` holds the per-generation pre-quantized weight planes
+    /// built alongside `p` by the committer (DESIGN.md §15). Backends
+    /// without an integer datapath fall back to the f32 snapshot step —
+    /// the precision toggle can never break a substrate.
+    fn step_hidden_int8(
+        &self,
+        p: &MiruParams,
+        _q: &crate::quant::QuantizedParams,
+        h: &Mat,
+        x: &Mat,
+    ) -> Result<Mat> {
+        self.step_hidden_from(p, h, x)
+    }
+
+    /// [`ComputeBackend::readout_from`] through the int8 serving path
+    /// (see [`ComputeBackend::step_hidden_int8`]).
+    fn readout_int8(
+        &self,
+        p: &MiruParams,
+        _q: &crate::quant::QuantizedParams,
+        h: &Mat,
+    ) -> Result<Mat> {
+        self.readout_from(p, h)
+    }
+
     /// Dense unit-lr DFA deltas (`−g`) from an already-materialized
     /// weight snapshot. Pure (`&self`) so train shards can run on worker
     /// threads against one shared snapshot — the parallel engine reads

@@ -202,6 +202,14 @@ pub struct ServeConfig {
     /// and debugging knob, never a numerics one. Overrides the
     /// `M2RU_KERNEL` environment variable.
     pub kernel: String,
+    /// Serving-precision selection for the whole process: `""`/`f32`
+    /// (exact float path) or `int8` (pre-quantized i8 weight planes +
+    /// integer MAC kernels, DESIGN.md §15). Unlike `kernel`, this *is* a
+    /// numerics knob — int8 logits approximate f32 within the pinned
+    /// accuracy gate — but stays bitwise-reproducible across kernels
+    /// and worker counts. Overrides the `M2RU_PRECISION` environment
+    /// variable.
+    pub precision: String,
 }
 
 /// Network transport and durability policy of the TCP serving frontend
@@ -313,6 +321,7 @@ impl Default for ServeConfig {
             wear_ratio: 4.0,
             commit_queue_depth: 4,
             kernel: String::new(),
+            precision: String::new(),
         }
     }
 }
@@ -338,6 +347,11 @@ impl ServeConfig {
             matches!(self.kernel.as_str(), "" | "auto" | "scalar" | "simd"),
             "serve.kernel must be `auto`, `scalar` or `simd` (got `{}`)",
             self.kernel
+        );
+        anyhow::ensure!(
+            matches!(self.precision.as_str(), "" | "f32" | "int8"),
+            "serve.precision must be `f32` or `int8` (got `{}`)",
+            self.precision
         );
         Ok(())
     }
@@ -411,6 +425,10 @@ impl RunConfig {
                 "serve.commit_queue_depth" => self.serve.commit_queue_depth = iget()?,
                 "serve.kernel" => {
                     self.serve.kernel =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
+                "serve.precision" => {
+                    self.serve.precision =
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
                 }
                 "net.listen" => {
@@ -681,6 +699,20 @@ mod tests {
         }
         let bad = parse_toml("[serve]\nkernel = \"avx512\"\n").unwrap();
         assert!(RunConfig::default().apply(&bad).is_err(), "unknown kernel names are rejected");
+    }
+
+    #[test]
+    fn serve_precision_key_from_toml() {
+        let map = parse_toml("[serve]\nprecision = \"int8\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.serve.precision, "int8");
+        let map = parse_toml("[serve]\nprecision = \"f32\"\n").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.serve.precision, "f32");
+        let bad = parse_toml("[serve]\nprecision = \"fp16\"\n").unwrap();
+        assert!(RunConfig::default().apply(&bad).is_err(), "unknown precisions are rejected");
     }
 
     #[test]

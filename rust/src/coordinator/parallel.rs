@@ -118,12 +118,49 @@ impl ParallelEngine {
     /// substrate. Bitwise-identical to `step_sessions` when `snapshot`
     /// equals this backend's effective weights.
     pub fn step_sessions_at(&self, snapshot: &MiruParams, h: &Mat, x: &Mat) -> Result<(Mat, Mat)> {
+        self.shard_step(h, x, |backend, hs, xs| {
+            let hn = backend.step_hidden_from(snapshot, hs, xs)?;
+            let logits = backend.readout_from(snapshot, &hn)?;
+            Ok((hn, logits))
+        })
+    }
+
+    /// [`ParallelEngine::step_sessions_at`] against a full serve
+    /// snapshot, dispatching on its precision: a snapshot carrying
+    /// pre-quantized i8 planes routes through the backend's int8 step
+    /// and readout (DESIGN.md §15); an f32 snapshot takes the exact
+    /// path of `step_sessions_at`. Both are row-independent (activation
+    /// scales are per row, never per batch), so the merged result stays
+    /// identical for every worker count.
+    pub fn step_sessions_snap(
+        &self,
+        snap: &crate::serve::WeightSnapshot,
+        h: &Mat,
+        x: &Mat,
+    ) -> Result<(Mat, Mat)> {
+        match &snap.quant {
+            Some(q) => self.shard_step(h, x, |backend, hs, xs| {
+                let hn = backend.step_hidden_int8(&snap.params, q, hs, xs)?;
+                let logits = backend.readout_int8(&snap.params, q, &hn)?;
+                Ok((hn, logits))
+            }),
+            None => self.step_sessions_at(&snap.params, h, x),
+        }
+    }
+
+    /// The sharding scaffold behind the session-step entry points: run
+    /// `step` on the whole batch (no sharding) or on contiguous row
+    /// shards across scoped worker threads, merging rows in shard order.
+    /// `step` must be row-independent for the worker-count invariance
+    /// contract to hold.
+    fn shard_step<F>(&self, h: &Mat, x: &Mat, step: F) -> Result<(Mat, Mat)>
+    where
+        F: Fn(&dyn ComputeBackend, &Mat, &Mat) -> Result<(Mat, Mat)> + Sync,
+    {
         anyhow::ensure!(h.rows == x.rows, "state rows {} != input rows {}", h.rows, x.rows);
         let b = h.rows;
         if !self.use_sharding(b) {
-            let hn = self.backend.step_hidden_from(snapshot, h, x)?;
-            let logits = self.backend.readout_from(snapshot, &hn)?;
-            return Ok((hn, logits));
+            return step(&*self.backend, h, x);
         }
         let shards: Vec<(Mat, Mat)> = Self::shard_ranges(b, self.workers)
             .into_iter()
@@ -131,15 +168,10 @@ impl ParallelEngine {
             .collect();
         let results: Vec<Result<(Mat, Mat)>> = std::thread::scope(|s| {
             let backend: &dyn ComputeBackend = &*self.backend;
+            let step = &step;
             let handles: Vec<_> = shards
                 .iter()
-                .map(|(hs, xs)| {
-                    s.spawn(move || -> Result<(Mat, Mat)> {
-                        let hn = backend.step_hidden_from(snapshot, hs, xs)?;
-                        let logits = backend.readout_from(snapshot, &hn)?;
-                        Ok((hn, logits))
-                    })
-                })
+                .map(|(hs, xs)| s.spawn(move || step(backend, hs, xs)))
                 .collect();
             handles
                 .into_iter()
@@ -451,6 +483,43 @@ mod tests {
             let (hw, lw) = ew.step_sessions(&h0, &x).unwrap();
             assert_eq!(hw.data, h1.data, "hidden state, workers={workers}");
             assert_eq!(lw.data, l1.data, "logits, workers={workers}");
+        }
+    }
+
+    #[test]
+    fn snap_step_dispatches_on_precision_and_is_worker_invariant() {
+        use crate::serve::WeightSnapshot;
+        let net = NetConfig::SMALL;
+        let x = Mat::from_fn(16, net.nx, |r, c| ((r * 7 + c * 3) % 11) as f32 * 0.1 - 0.5);
+        let h0 = Mat::from_fn(16, net.nh, |r, c| ((r * 5 + c) % 9) as f32 * 0.1 - 0.4);
+        let e1 = engine(1, 21);
+        let params = e1.backend().effective_params();
+        // snapshots built directly (not via WeightSnapshot::new) so this
+        // test never touches the process-wide precision selection
+        let f32_snap = WeightSnapshot { gen: 0, params: params.clone(), quant: None };
+        let i8_snap = WeightSnapshot {
+            gen: 0,
+            params: params.clone(),
+            quant: Some(crate::quant::QuantizedParams::build(&params)),
+        };
+        let (hf, lf) = e1.step_sessions_snap(&f32_snap, &h0, &x).unwrap();
+        // f32 snapshot ≡ the plain snapshot step
+        let (hat, lat) = e1.step_sessions_at(&params, &h0, &x).unwrap();
+        assert_eq!(hf.data, hat.data);
+        assert_eq!(lf.data, lat.data);
+        // int8 engages a genuinely different path…
+        let (hq, lq) = e1.step_sessions_snap(&i8_snap, &h0, &x).unwrap();
+        assert_ne!(lq.data, lf.data, "int8 snapshot must take the integer path");
+        // …that stays close to f32…
+        for (a, b) in hq.data.iter().zip(&hf.data) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+        // …and is bitwise worker-count-invariant (per-row activation scales)
+        for workers in [2, 4] {
+            let ew = engine(workers, 21);
+            let (hw, lw) = ew.step_sessions_snap(&i8_snap, &h0, &x).unwrap();
+            assert_eq!(hw.data, hq.data, "hidden state, workers={workers}");
+            assert_eq!(lw.data, lq.data, "logits, workers={workers}");
         }
     }
 

@@ -229,6 +229,60 @@ pub fn wbs_mac_packed(bp: &BitPlanes, g: &Mat) -> Vec<f32> {
     out
 }
 
+/// Packed WBS MAC over **pre-quantized i8 weight planes** — the int8
+/// serving variant (DESIGN.md §15): per-plane partial sums accumulate
+/// the signed i8 codes in i32, planes fold with exact integer shifts
+/// into an i64 accumulator, and each bitline pays exactly one f32
+/// rescale (`2^-nb · scale_j`) at the end. Every operation before that
+/// rescale is exact integer arithmetic, so the result is identical
+/// regardless of kernel or traversal order — no dispatch needed.
+///
+/// Semantically this is [`wbs_mac_packed`] with `g` replaced by the
+/// dequantized codes (`codes[i][j] · scales[j]`); the tests below pin
+/// that equivalence against a naive per-bit reference.
+pub fn wbs_mac_packed_i32(bp: &BitPlanes, q: &crate::quant::QuantizedMat) -> Vec<f32> {
+    assert_eq!(bp.n, q.rows, "drive length {} vs crossbar rows {}", bp.n, q.rows);
+    let cols = q.cols;
+    let full = (1u32 << bp.nb) as f32;
+    // i64: a plane partial is bounded by n·127 (fits i32 comfortably),
+    // but the shifted fold (≤ 2^15 per plane, 16 planes) can overflow
+    // i32 for wide crossbars — accumulate the fold in i64
+    let mut acc = vec![0i64; cols];
+    let mut partial = vec![0i32; cols];
+    for b in 0..bp.nb {
+        partial.iter_mut().for_each(|v| *v = 0);
+        for (wi, &word) in bp.plane(b).iter().enumerate() {
+            if word == 0 {
+                continue; // 64 inputs skipped in one compare
+            }
+            let negw = bp.neg[wi];
+            let mut rest = word;
+            while rest != 0 {
+                let bit = rest.trailing_zeros();
+                rest &= rest - 1;
+                let i = wi * 64 + bit as usize;
+                let row = &q.codes[i * cols..(i + 1) * cols];
+                if (negw >> bit) & 1 == 1 {
+                    for (p, &c) in partial.iter_mut().zip(row) {
+                        *p -= i32::from(c);
+                    }
+                } else {
+                    for (p, &c) in partial.iter_mut().zip(row) {
+                        *p += i32::from(c);
+                    }
+                }
+            }
+        }
+        for (a, &p) in acc.iter_mut().zip(&partial) {
+            *a += i64::from(p) << b;
+        }
+    }
+    acc.iter()
+        .zip(&q.scales)
+        .map(|(&a, &s)| (a as f32 / full) * s)
+        .collect()
+}
+
 /// Digitize every row of `drive` and run the packed MAC against `g`:
 /// the batch crossbar VMM (`drive [r,n] × g [n,c] → [r,c]`).
 pub fn wbs_vmm(drive: &Mat, g: &Mat, nb: u32) -> Mat {
@@ -342,6 +396,56 @@ mod tests {
                 let packed = wbs_mac_packed(&BitPlanes::pack(&xs, nb), &g);
                 for (a, b) in bit.iter().zip(&packed) {
                     assert_eq!(a.to_bits(), b.to_bits(), "n={n} nb={nb}");
+                }
+            }
+        }
+    }
+
+    /// Naive reference for the i32 MAC: per bit, per input, per column,
+    /// exact i64 integer accumulation of the signed codes.
+    fn i32_mac_reference(xs: &[f32], q: &crate::quant::QuantizedMat, nb: u32) -> Vec<f32> {
+        let full = (1u32 << nb) as f32;
+        let mut acc = vec![0i64; q.cols];
+        for b in 0..nb {
+            for (i, &x) in xs.iter().enumerate() {
+                let (code, neg) = code_of(x, nb);
+                if (code >> b) & 1 == 0 {
+                    continue;
+                }
+                for (a, &c) in acc.iter_mut().zip(&q.codes[i * q.cols..(i + 1) * q.cols]) {
+                    let c = i64::from(c) << b;
+                    if neg {
+                        *a -= c;
+                    } else {
+                        *a += c;
+                    }
+                }
+            }
+        }
+        acc.iter().zip(&q.scales).map(|(&a, &s)| (a as f32 / full) * s).collect()
+    }
+
+    #[test]
+    fn packed_i32_mac_matches_reference_and_tracks_f32() {
+        let mut rng = GaussianRng::new(0x138);
+        for &n in &[63usize, 64, 65, 129] {
+            for nb in [1u32, 4, 8] {
+                let xs: Vec<f32> = (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                let g = Mat::from_fn(n, 13, |_, _| rng.uniform_in(-1.0, 1.0));
+                let q = crate::quant::QuantizedMat::from_mat(&g);
+                let bp = BitPlanes::pack(&xs, nb);
+                let got = wbs_mac_packed_i32(&bp, &q);
+                // bitwise against the naive integer reference: the fold
+                // is exact integers until one final rescale per column
+                let want = i32_mac_reference(&xs, &q, nb);
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} nb={nb}");
+                }
+                // value-close to the f32 packed MAC over the dequantized
+                // codes (same math, f32 vs integer association)
+                let approx = wbs_mac_packed(&bp, &q.dequantize());
+                for (a, b) in got.iter().zip(&approx) {
+                    assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()), "n={n} nb={nb}: {a} vs {b}");
                 }
             }
         }

@@ -192,6 +192,47 @@ unsafe fn matmul_tn_impl(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usi
     }
 }
 
+/// Integer MAC: i8×i8→i32, ikj order, vectorized across output columns
+/// only. Integer addition is exactly associative, so parity with the
+/// scalar floor is structural — but we keep the same loop discipline
+/// (ascending k, left-operand zero-skip, scalar column tail) anyway so
+/// the body reads like its f32 siblings and any future widening change
+/// stays reviewable against them.
+///
+/// # Safety
+/// AVX2 available; slices sized per the kernel contract.
+#[target_feature(enable = "avx2")]
+unsafe fn matmul_i8_impl(a: &[i8], b: &[i8], out: &mut [i32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let orow = out.as_mut_ptr().add(i * n);
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let va = _mm256_set1_epi32(av);
+            let brow = b.as_ptr().add(p * n);
+            let mut j = 0;
+            while j + LANES <= n {
+                // load 8 i8 codes, sign-extend to 8×i32, mul-accumulate
+                let b8 = _mm_loadl_epi64(brow.add(j) as *const __m128i);
+                let bv = _mm256_cvtepi8_epi32(b8);
+                let ov = _mm256_loadu_si256(orow.add(j) as *const __m256i);
+                _mm256_storeu_si256(
+                    orow.add(j) as *mut __m256i,
+                    _mm256_add_epi32(ov, _mm256_mullo_epi32(va, bv)),
+                );
+                j += LANES;
+            }
+            while j < n {
+                *orow.add(j) += av * *brow.add(j) as i32;
+                j += 1;
+            }
+        }
+    }
+}
+
 // ---- safe wrappers (the dispatcher's fn-table entries) ---------------------
 //
 // SAFETY: the dispatcher only installs this table after
@@ -211,6 +252,11 @@ pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize,
 pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
     debug_assert!(is_x86_feature_detected!("avx2"));
     unsafe { matmul_tn_impl(a, b, out, k, m, n) }
+}
+
+pub fn matmul_i8(a: &[i8], b: &[i8], out: &mut [i32], m: usize, k: usize, n: usize) {
+    debug_assert!(is_x86_feature_detected!("avx2"));
+    unsafe { matmul_i8_impl(a, b, out, m, k, n) }
 }
 
 pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {

@@ -71,6 +71,7 @@ struct Ops {
     matmul_ikj: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
     matmul_blocked: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
     matmul_tn: fn(&[f32], &[f32], &mut [f32], usize, usize, usize),
+    matmul_i8: fn(&[i8], &[i8], &mut [i32], usize, usize, usize),
     axpy: fn(&mut [f32], f32, &[f32]),
     add_assign: fn(&mut [f32], &[f32]),
     sub_assign: fn(&mut [f32], &[f32]),
@@ -80,6 +81,7 @@ static SCALAR_OPS: Ops = Ops {
     matmul_ikj: scalar::matmul_ikj,
     matmul_blocked: scalar::matmul_blocked,
     matmul_tn: scalar::matmul_tn,
+    matmul_i8: scalar::matmul_i8,
     axpy: scalar::axpy,
     add_assign: scalar::add_assign,
     sub_assign: scalar::sub_assign,
@@ -90,6 +92,7 @@ static AVX2_OPS: Ops = Ops {
     matmul_ikj: avx2::matmul_ikj,
     matmul_blocked: avx2::matmul_blocked,
     matmul_tn: avx2::matmul_tn,
+    matmul_i8: avx2::matmul_i8,
     axpy: avx2::axpy,
     add_assign: avx2::add_assign,
     sub_assign: avx2::sub_assign,
@@ -100,6 +103,7 @@ static NEON_OPS: Ops = Ops {
     matmul_ikj: neon::matmul_ikj,
     matmul_blocked: neon::matmul_blocked,
     matmul_tn: neon::matmul_tn,
+    matmul_i8: neon::matmul_i8,
     axpy: neon::axpy,
     add_assign: neon::add_assign,
     sub_assign: neon::sub_assign,
@@ -202,6 +206,96 @@ pub fn active_name() -> &'static str {
     active().name()
 }
 
+/// SIMD features this machine actually has, for smoke logs and
+/// `m2ru info` — independent of what was forced.
+pub fn cpu_features() -> &'static str {
+    match best_simd() {
+        Some(Kernel::Avx2) => "avx2",
+        Some(Kernel::Neon) => "neon",
+        _ => "none",
+    }
+}
+
+// ---- serving precision -----------------------------------------------------
+//
+// Selected exactly like the kernel: `force_precision` (the `[serve]
+// precision` config key / `--precision` flag) > `M2RU_PRECISION` > the
+// f32 default. The int8 path quantizes weights once per commit
+// generation ([`crate::serve::WeightSnapshot`]) and runs the serve-path
+// MACs through [`matmul_i8`]; training and every other code path stay
+// f32 regardless.
+
+/// Arithmetic precision of the serve hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 MACs — the default and the accuracy reference.
+    F32,
+    /// Pre-quantized per-column-symmetric i8 weights, i8×i8→i32 MACs,
+    /// one f32 rescale per output element.
+    Int8,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+const PCHOICE_UNSET: u8 = 0;
+const PCHOICE_F32: u8 = 1;
+const PCHOICE_INT8: u8 = 2;
+
+static FORCED_PRECISION: AtomicU8 = AtomicU8::new(PCHOICE_UNSET);
+
+fn parse_precision(name: &str) -> Result<u8> {
+    match name {
+        "" | "f32" => Ok(PCHOICE_F32),
+        "int8" => Ok(PCHOICE_INT8),
+        other => bail!("unknown precision `{other}` (expected f32|int8)"),
+    }
+}
+
+/// Force the serving precision for the whole process — the `[serve]
+/// precision` config key and `--precision` flag land here. Overrides
+/// `M2RU_PRECISION`. Passing `""` returns to env/default selection.
+pub fn force_precision(name: &str) -> Result<()> {
+    let choice = parse_precision(name)?;
+    FORCED_PRECISION.store(if name.is_empty() { PCHOICE_UNSET } else { choice }, Ordering::SeqCst);
+    Ok(())
+}
+
+/// `M2RU_PRECISION`, parsed once. An invalid value warns (once) and
+/// falls back to f32 rather than failing at the first dispatch.
+fn env_precision() -> u8 {
+    static ENV: OnceLock<u8> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("M2RU_PRECISION") {
+        Ok(v) => parse_precision(v.trim()).unwrap_or_else(|e| {
+            eprintln!("warning: M2RU_PRECISION ignored: {e}");
+            PCHOICE_F32
+        }),
+        Err(_) => PCHOICE_F32,
+    })
+}
+
+/// The serving precision in effect right now.
+pub fn active_precision() -> Precision {
+    let forced = FORCED_PRECISION.load(Ordering::SeqCst);
+    let choice = if forced != PCHOICE_UNSET { forced } else { env_precision() };
+    if choice == PCHOICE_INT8 {
+        Precision::Int8
+    } else {
+        Precision::F32
+    }
+}
+
+/// Name of the active precision (banners, stats, reports).
+pub fn precision_name() -> &'static str {
+    active_precision().name()
+}
+
 // ---- dispatched entry points ----------------------------------------------
 //
 // Shapes are the caller's contract (checked by `Mat`): `a` is `m×k`,
@@ -221,6 +315,14 @@ pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize,
 /// `k×n`, `out` is `m×n`.
 pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
     (ops(active()).matmul_tn)(a, b, out, k, m, n)
+}
+
+/// Integer MAC: `a` (`m×k` i8 codes) × `b` (`k×n` i8 codes) → `out`
+/// (`m×n` i32, zeroed). Exact in i32 for the serve shapes (k ≤ a few
+/// hundred, |code| ≤ 127), so every kernel is bitwise-identical by
+/// construction; the parity suite pins it anyway.
+pub fn matmul_i8(a: &[i8], b: &[i8], out: &mut [i32], m: usize, k: usize, n: usize) {
+    (ops(active()).matmul_i8)(a, b, out, m, k, n)
 }
 
 /// `out[j] += alpha * x[j]` (one rounded multiply + one rounded add per
@@ -257,6 +359,10 @@ pub fn matmul_tn_with(kern: Kernel, a: &[f32], b: &[f32], out: &mut [f32], k: us
     (ops(kern).matmul_tn)(a, b, out, k, m, n)
 }
 
+pub fn matmul_i8_with(kern: Kernel, a: &[i8], b: &[i8], out: &mut [i32], m: usize, k: usize, n: usize) {
+    (ops(kern).matmul_i8)(a, b, out, m, k, n)
+}
+
 pub fn axpy_with(kern: Kernel, out: &mut [f32], alpha: f32, x: &[f32]) {
     (ops(kern).axpy)(out, alpha, x)
 }
@@ -282,6 +388,38 @@ mod tests {
         force("auto").unwrap();
         assert!(force("sse9").is_err());
         force("").unwrap(); // back to env/auto
+    }
+
+    #[test]
+    fn precision_parse_rules() {
+        // parse only — setting int8 globally here would race with the
+        // serve unit tests sharing this binary (unlike the kernel
+        // choice, precision changes snapshot contents, not just
+        // association). The full force path runs in
+        // `tests/kernel_parity.rs` under its force lock.
+        assert_eq!(parse_precision("").unwrap(), PCHOICE_F32);
+        assert_eq!(parse_precision("f32").unwrap(), PCHOICE_F32);
+        assert_eq!(parse_precision("int8").unwrap(), PCHOICE_INT8);
+        assert!(parse_precision("fp16").is_err());
+        // an invalid force must not clobber the current choice
+        let before = active_precision();
+        assert!(force_precision("bf16").is_err());
+        assert_eq!(active_precision(), before);
+        assert_eq!(Precision::Int8.name(), "int8");
+        assert_eq!(Precision::F32.name(), "f32");
+    }
+
+    #[test]
+    fn matmul_i8_all_kernels_match_scalar() {
+        let a: Vec<i8> = (0..6).map(|v| (v as i8) - 3).collect();
+        let b: Vec<i8> = (0..6).map(|v| 20 * ((v as i8) - 2)).collect();
+        let mut want = [0i32; 4];
+        matmul_i8_with(Kernel::Scalar, &a, &b, &mut want, 2, 3, 2);
+        for k in [Kernel::Scalar].into_iter().chain(best_simd()) {
+            let mut out = [0i32; 4];
+            matmul_i8_with(k, &a, &b, &mut out, 2, 3, 2);
+            assert_eq!(out, want, "{k:?}");
+        }
     }
 
     #[test]

@@ -189,6 +189,45 @@ unsafe fn matmul_tn_impl(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usi
     }
 }
 
+/// Integer MAC: i8×i8→i32, ikj order, vectorized across output columns
+/// only. `vmull_s8` products are exact (|a|·|b| ≤ 127·127 fits i16) and
+/// integer addition is exactly associative, so parity with the scalar
+/// floor is structural; the loop keeps the same discipline (ascending
+/// k, left-operand zero-skip, scalar column tail) as its f32 siblings.
+///
+/// # Safety
+/// Slices sized per the kernel contract.
+#[target_feature(enable = "neon")]
+unsafe fn matmul_i8_impl(a: &[i8], b: &[i8], out: &mut [i32], m: usize, k: usize, n: usize) {
+    const ILANES: usize = 8; // one int8x8_t of codes per step
+    for i in 0..m {
+        let orow = out.as_mut_ptr().add(i * n);
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0 {
+                continue;
+            }
+            let va = vdup_n_s8(av);
+            let av = av as i32;
+            let brow = b.as_ptr().add(p * n);
+            let mut j = 0;
+            while j + ILANES <= n {
+                // 8 exact i16 products, widened-added into 2× i32x4
+                let prod = vmull_s8(va, vld1_s8(brow.add(j)));
+                let lo = vaddw_s16(vld1q_s32(orow.add(j)), vget_low_s16(prod));
+                let hi = vaddw_s16(vld1q_s32(orow.add(j + 4)), vget_high_s16(prod));
+                vst1q_s32(orow.add(j), lo);
+                vst1q_s32(orow.add(j + 4), hi);
+                j += ILANES;
+            }
+            while j < n {
+                *orow.add(j) += av * *brow.add(j) as i32;
+                j += 1;
+            }
+        }
+    }
+}
+
 // ---- safe wrappers (the dispatcher's fn-table entries) ---------------------
 //
 // SAFETY: NEON is part of the aarch64 baseline ISA, so a binary compiled
@@ -205,6 +244,10 @@ pub fn matmul_blocked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize,
 
 pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: usize) {
     unsafe { matmul_tn_impl(a, b, out, k, m, n) }
+}
+
+pub fn matmul_i8(a: &[i8], b: &[i8], out: &mut [i32], m: usize, k: usize, n: usize) {
+    unsafe { matmul_i8_impl(a, b, out, m, k, n) }
 }
 
 pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {

@@ -105,6 +105,30 @@ pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], k: usize, m: usize, n: u
     }
 }
 
+/// Integer MAC floor: i8×i8→i32, ikj loop order with a zero-skip on
+/// the left operand, accumulation in ascending k order per output row.
+/// `a` is `m×k` i8 codes, `b` is `k×n` i8 codes, `out` is `m×n` i32
+/// and zeroed. Integer addition is exactly associative, so any
+/// column-vectorized reordering of the inner loop stays bitwise equal
+/// to this floor — the parity contract the SIMD bodies are tested
+/// against.
+pub fn matmul_i8(a: &[i8], b: &[i8], out: &mut [i32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv as i32;
+            }
+        }
+    }
+}
+
 /// `out[j] += alpha * x[j]`.
 pub fn axpy(out: &mut [f32], alpha: f32, x: &[f32]) {
     for (o, &v) in out.iter_mut().zip(x) {

@@ -72,6 +72,9 @@ SUBCOMMANDS
                             weight commits + snapshot writes)            [4]
       --kernel NAME         compute kernel: auto|scalar|simd (bitwise-
                             identical; overrides M2RU_KERNEL env)       [auto]
+      --precision NAME      serving precision: f32|int8 (int8 serves from
+                            pre-quantized i8 weight planes; overrides
+                            M2RU_PRECISION env)                          [f32]
       --listen ADDR         serve real clients over TCP instead of the
                             synthetic driver (host:port; port 0 = auto).
                             Prints `listening on ADDR`, runs until a
@@ -160,6 +163,9 @@ fn apply_run_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
 
 fn cmd_info(rt: &Runtime, manifest: Option<&Manifest>) -> Result<()> {
     println!("platform: {}", rt.platform());
+    println!("kernel: {}", m2ru::linalg::kernels::active_name());
+    println!("precision: {}", m2ru::linalg::kernels::precision_name());
+    println!("cpu features: {}", m2ru::linalg::kernels::cpu_features());
     match manifest {
         Some(manifest) => {
             println!("artifacts: {} ({} configs, {} executables)", manifest.dir.display(),
@@ -344,6 +350,9 @@ fn apply_serve_net_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
     if let Some(kernel) = args.get_opt("kernel") {
         run.serve.kernel = kernel;
     }
+    if let Some(precision) = args.get_opt("precision") {
+        run.serve.precision = precision;
+    }
     if let Some(listen) = args.get_opt("listen") {
         run.net.listen = listen;
     }
@@ -383,7 +392,11 @@ fn cmd_serve(args: &mut Args, closed_loop: bool) -> Result<()> {
     if !run.serve.kernel.is_empty() {
         m2ru::linalg::kernels::force(&run.serve.kernel)?;
     }
+    if !run.serve.precision.is_empty() {
+        m2ru::linalg::kernels::force_precision(&run.serve.precision)?;
+    }
     println!("kernel: {}", m2ru::linalg::kernels::active_name());
+    println!("precision: {}", m2ru::linalg::kernels::precision_name());
 
     // transport-backed event loop: serve real clients over TCP
     if !closed_loop && !run.net.listen.is_empty() {
@@ -491,7 +504,11 @@ fn cmd_router(args: &mut Args) -> Result<()> {
     if !run.serve.kernel.is_empty() {
         m2ru::linalg::kernels::force(&run.serve.kernel)?;
     }
+    if !run.serve.precision.is_empty() {
+        m2ru::linalg::kernels::force_precision(&run.serve.precision)?;
+    }
     println!("kernel: {}", m2ru::linalg::kernels::active_name());
+    println!("precision: {}", m2ru::linalg::kernels::precision_name());
 
     let remote = !run.router.shard_addrs.is_empty();
     let server = RouterServer::bind(RouterServeOptions { net, run: run.clone() })?;

@@ -9,6 +9,8 @@
 //! * [`stochastic_round`] / [`uniform_truncate`] — the replay-path feature
 //!   compression of Eqs. (4)–(6) and its biased baseline (Fig. 5a).
 
+use crate::linalg::{kernels, Mat};
+use crate::nn::MiruParams;
 use crate::rng::Lfsr16;
 
 /// n_b-bit sign/magnitude digitization of an analog value in [-1, 1]:
@@ -92,6 +94,157 @@ impl StochasticQuantizer {
     }
 }
 
+// ---- int8 serving planes ---------------------------------------------------
+//
+// The serve-path weight quantization (DESIGN.md §15): per-column
+// symmetric scales, built once per commit generation by the committer
+// into the published `WeightSnapshot`, consumed by the i8×i8→i32 MAC
+// kernels. The same sign/magnitude idea as `wbs_input_quantize`, with
+// the scale carried per column instead of fixed at 1 so untrained and
+// well-trained weights both use the full code range.
+
+/// A weight matrix quantized to i8 codes with one symmetric scale per
+/// column: `w[r][c] ≈ codes[r*cols + c] * scales[c]`. Column-major
+/// scales match the MAC layout — every output column folds exactly one
+/// scale, after the integer accumulation.
+#[derive(Clone, Debug)]
+pub struct QuantizedMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major i8 codes, `rows × cols`, |code| ≤ 127.
+    pub codes: Vec<i8>,
+    /// Per-column dequantization scale (`max|col| / 127`; 0 for an
+    /// all-zero column, whose codes are all 0).
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedMat {
+    /// Quantize `m` with per-column symmetric scales.
+    pub fn from_mat(m: &Mat) -> QuantizedMat {
+        let mut scales = vec![0.0f32; m.cols];
+        for r in 0..m.rows {
+            for (c, s) in scales.iter_mut().enumerate() {
+                *s = s.max(m.at(r, c).abs());
+            }
+        }
+        for s in &mut scales {
+            *s /= 127.0;
+        }
+        let mut codes = vec![0i8; m.rows * m.cols];
+        for r in 0..m.rows {
+            let row = m.row(r);
+            let orow = &mut codes[r * m.cols..(r + 1) * m.cols];
+            for ((o, &w), &s) in orow.iter_mut().zip(row).zip(&scales) {
+                if s > 0.0 {
+                    *o = (w / s).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+        QuantizedMat { rows: m.rows, cols: m.cols, codes, scales }
+    }
+
+    /// The f32 matrix these codes represent (tests, error analysis).
+    pub fn dequantize(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| {
+            f32::from(self.codes[r * self.cols + c]) * self.scales[c]
+        })
+    }
+}
+
+/// Quantize one activation row to i8 with a symmetric per-row scale;
+/// returns the scale (`max|x| / 127`; 0 for an all-zero row, codes 0).
+/// Per-row (not per-batch) scales keep the serve math row-independent,
+/// so sharded dispatch stays bitwise-identical for every worker count.
+pub fn quantize_row_i8(row: &[f32], out: &mut [i8]) -> f32 {
+    let mut amax = 0.0f32;
+    for &x in row {
+        amax = amax.max(x.abs());
+    }
+    let scale = amax / 127.0;
+    if scale > 0.0 {
+        for (o, &x) in out.iter_mut().zip(row) {
+            *o = (x / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    } else {
+        for o in out.iter_mut() {
+            *o = 0;
+        }
+    }
+    scale
+}
+
+/// `a @ q` through the integer MAC: quantize each row of `a` to i8
+/// (per-row scale), run the kernel-dispatched i8×i8→i32 matmul against
+/// the pre-quantized codes, then rescale each output element once by
+/// `row_scale · column_scale`. The integer accumulation is exact, so
+/// the result is bitwise-identical across scalar/AVX2/NEON kernels.
+pub fn matmul_i8_rowquant(a: &Mat, q: &QuantizedMat) -> Mat {
+    assert_eq!(a.cols, q.rows, "matmul_i8 {}x{} @ {}x{}", a.rows, a.cols, q.rows, q.cols);
+    let mut acodes = vec![0i8; a.rows * a.cols];
+    let mut ascales = vec![0.0f32; a.rows];
+    for r in 0..a.rows {
+        ascales[r] = quantize_row_i8(a.row(r), &mut acodes[r * a.cols..(r + 1) * a.cols]);
+    }
+    let mut acc = vec![0i32; a.rows * q.cols];
+    kernels::matmul_i8(&acodes, &q.codes, &mut acc, a.rows, a.cols, q.cols);
+    let mut out = Mat::zeros(a.rows, q.cols);
+    for r in 0..a.rows {
+        let rs = ascales[r];
+        let orow = out.row_mut(r);
+        let arow = &acc[r * q.cols..(r + 1) * q.cols];
+        for ((o, &v), &cs) in orow.iter_mut().zip(arow).zip(&q.scales) {
+            *o = v as f32 * (rs * cs);
+        }
+    }
+    out
+}
+
+/// The per-generation int8 weight planes carried by a serve
+/// `WeightSnapshot`: the stacked hidden matrix `[W_h; U_h]`
+/// (`(nx+nh)×nh`, the same layout the crossbar drives) and the readout
+/// `W_o`, plus the L1 column norms of the *f32* weights so the crossbar
+/// backend derives its ADC full-scales without re-reading the floats on
+/// the hot path. Biases stay f32 (digital registers).
+#[derive(Clone, Debug)]
+pub struct QuantizedParams {
+    /// `[W_h; U_h]` stacked row-wise, quantized per column.
+    pub hidden: QuantizedMat,
+    /// `W_o`, quantized per column.
+    pub wo: QuantizedMat,
+    /// `max_c Σ_r |hidden[r][c]|` of the f32 weights.
+    pub hidden_l1max: f32,
+    /// `max_c Σ_r |wo[r][c]|` of the f32 weights.
+    pub wo_l1max: f32,
+}
+
+fn l1max(m: &Mat) -> f32 {
+    let mut best = 0.0f32;
+    for c in 0..m.cols {
+        let mut s = 0.0;
+        for r in 0..m.rows {
+            s += m.at(r, c).abs();
+        }
+        best = best.max(s);
+    }
+    best
+}
+
+impl QuantizedParams {
+    /// Build the serve planes from a full-precision snapshot — called
+    /// once per commit generation, never on the dispatch path.
+    pub fn build(p: &MiruParams) -> QuantizedParams {
+        let stacked = Mat::vcat(&p.wh, &p.uh);
+        let hidden_l1max = l1max(&stacked);
+        let wo_l1max = l1max(&p.wo);
+        QuantizedParams {
+            hidden: QuantizedMat::from_mat(&stacked),
+            wo: QuantizedMat::from_mat(&p.wo),
+            hidden_l1max,
+            wo_l1max,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +322,68 @@ mod tests {
             assert_eq!(uniform_truncate(x, 4), code);
             assert_eq!(stochastic_round(x, 0.99, 4), code);
         }
+    }
+
+    #[test]
+    fn quantized_mat_error_within_half_lsb_per_column() {
+        let m = Mat::from_fn(13, 7, |r, c| ((r * 7 + c * 3) % 19) as f32 / 9.0 - 1.0);
+        let q = QuantizedMat::from_mat(&m);
+        let d = q.dequantize();
+        for c in 0..m.cols {
+            let lsb = q.scales[c];
+            for r in 0..m.rows {
+                assert!(
+                    (m.at(r, c) - d.at(r, c)).abs() <= 0.5 * lsb + 1e-7,
+                    "({r},{c}): {} vs {}",
+                    m.at(r, c),
+                    d.at(r, c)
+                );
+            }
+        }
+        // the column max always maps to the full code
+        for c in 0..m.cols {
+            let maxcode = (0..m.rows).map(|r| q.codes[r * q.cols + c].unsigned_abs()).max();
+            assert_eq!(maxcode, Some(127), "col {c}");
+        }
+    }
+
+    #[test]
+    fn quantized_mat_zero_column_is_safe() {
+        let m = Mat::from_fn(4, 2, |r, c| if c == 0 { 0.0 } else { r as f32 - 1.5 });
+        let q = QuantizedMat::from_mat(&m);
+        assert_eq!(q.scales[0], 0.0);
+        assert!((0..4).all(|r| q.codes[r * 2] == 0));
+        let d = q.dequantize();
+        assert!((0..4).all(|r| d.at(r, 0) == 0.0));
+    }
+
+    #[test]
+    fn matmul_i8_rowquant_tracks_f32_matmul() {
+        let a = Mat::from_fn(5, 11, |r, c| ((r * 11 + c) % 13) as f32 / 6.5 - 1.0);
+        let w = Mat::from_fn(11, 4, |r, c| ((r * 4 + c * 5) % 17) as f32 / 8.5 - 1.0);
+        let q = QuantizedMat::from_mat(&w);
+        let got = matmul_i8_rowquant(&a, &q);
+        let want = a.matmul(&w);
+        for (g, wv) in got.data.iter().zip(&want.data) {
+            // two ~1% relative quantizations over k=11 terms
+            assert!((g - wv).abs() <= 0.05 * (1.0 + wv.abs()), "{g} vs {wv}");
+        }
+        // zero activation row must produce exactly zero
+        let z = Mat::zeros(1, 11);
+        assert!(matmul_i8_rowquant(&z, &q).data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantized_params_carries_l1_norms() {
+        let p = MiruParams::init(6, 8, 3, 42);
+        let q = QuantizedParams::build(&p);
+        assert_eq!(q.hidden.rows, 14);
+        assert_eq!(q.hidden.cols, 8);
+        assert_eq!(q.wo.rows, 8);
+        assert_eq!(q.wo.cols, 3);
+        let stacked = Mat::vcat(&p.wh, &p.uh);
+        assert_eq!(q.hidden_l1max, l1max(&stacked));
+        assert_eq!(q.wo_l1max, l1max(&p.wo));
+        assert!(q.hidden_l1max > 0.0 && q.wo_l1max > 0.0);
     }
 }

@@ -55,6 +55,26 @@ pub struct WeightSnapshot {
     pub gen: u64,
     /// The substrate's effective weights at that generation.
     pub params: MiruParams,
+    /// Pre-quantized i8 weight planes, built once per generation when
+    /// the int8 serving precision is active (DESIGN.md §15) — the
+    /// dispatch hot path reads these and pays zero quantization cost.
+    /// `None` under f32.
+    pub quant: Option<crate::quant::QuantizedParams>,
+}
+
+impl WeightSnapshot {
+    /// Assemble a snapshot, quantizing the weight planes iff the
+    /// process-wide serving precision is int8. Called on the committer
+    /// thread (and once at boot), never on the dispatch path.
+    pub fn new(gen: u64, params: MiruParams) -> WeightSnapshot {
+        let quant = match crate::linalg::kernels::active_precision() {
+            crate::linalg::kernels::Precision::Int8 => {
+                Some(crate::quant::QuantizedParams::build(&params))
+            }
+            crate::linalg::kernels::Precision::F32 => None,
+        };
+        WeightSnapshot { gen, params, quant }
+    }
 }
 
 /// Substrate-side facts the serve thread cannot read directly anymore
@@ -151,8 +171,7 @@ impl Committer {
         queue_depth: usize,
         snapshot_write_us: Option<Histogram>,
     ) -> (Committer, Arc<WeightSnapshot>, SubstrateStatus) {
-        let snap =
-            Arc::new(WeightSnapshot { gen: 0, params: engine.backend().effective_params() });
+        let snap = Arc::new(WeightSnapshot::new(0, engine.backend().effective_params()));
         let status = SubstrateStatus::of(engine.backend());
         let cell = Arc::new(WeightCell::new(snap.clone()));
         let (jtx, jrx) = sync_channel::<Job>(queue_depth.max(1));
@@ -237,10 +256,10 @@ fn committer_loop(
             Job::Commit { gen, batch, wear_ratio } => {
                 match engine.train_whole_guarded(&batch, wear_ratio) {
                     Ok((loss, rationed)) => {
-                        cell.store(Arc::new(WeightSnapshot {
+                        cell.store(Arc::new(WeightSnapshot::new(
                             gen,
-                            params: engine.backend().effective_params(),
-                        }));
+                            engine.backend().effective_params(),
+                        )));
                         let status = SubstrateStatus::of(engine.backend());
                         Outcome::Commit { gen, loss, rationed, status }
                     }
@@ -267,10 +286,10 @@ fn committer_loop(
                 }
                 match res {
                     Ok(()) => {
-                        cell.store(Arc::new(WeightSnapshot {
-                            gen: cell.gen(),
-                            params: engine.backend().effective_params(),
-                        }));
+                        cell.store(Arc::new(WeightSnapshot::new(
+                            cell.gen(),
+                            engine.backend().effective_params(),
+                        )));
                         Outcome::Restored { status: SubstrateStatus::of(engine.backend()) }
                     }
                     Err(e) => Outcome::Failed { what: "restore", error: e.to_string() },

@@ -105,10 +105,20 @@ impl ServeSpans {
                 "m2ru_batch_dispatch_us",
                 "wall microseconds of one padded-batch dispatch end to end",
             ),
-            kernel_step_us: reg.histogram(
-                "m2ru_kernel_step_us",
-                "wall microseconds of the batched recurrent kernel step",
-            ),
+            // labeled by the resolved serving precision (ServeCore::new
+            // forces the configured precision before registering spans),
+            // so f32 and int8 step timings land in distinct series —
+            // `m2ru_kernel_step_us` keeps its name on the f32 default
+            kernel_step_us: match crate::linalg::kernels::active_precision() {
+                crate::linalg::kernels::Precision::F32 => reg.histogram(
+                    "m2ru_kernel_step_us",
+                    "wall microseconds of the batched recurrent kernel step (f32)",
+                ),
+                crate::linalg::kernels::Precision::Int8 => reg.histogram(
+                    "m2ru_kernel_step_int8_us",
+                    "wall microseconds of the batched recurrent kernel step (int8 path)",
+                ),
+            },
             request_latency_us: reg.histogram(
                 "m2ru_request_latency_us",
                 "wall microseconds from request enqueue to completion",
@@ -205,6 +215,13 @@ impl ServeCore {
             // can never change serve results — DESIGN.md §12)
             crate::linalg::kernels::force(&cfg.kernel)
                 .with_context(|| format!("applying serve.kernel `{}`", cfg.kernel))?;
+        }
+        if !cfg.precision.is_empty() {
+            // process-wide, and resolved BEFORE the committer spawns so
+            // the generation-0 snapshot already carries the int8 weight
+            // planes when the int8 path is selected (DESIGN.md §15)
+            crate::linalg::kernels::force_precision(&cfg.precision)
+                .with_context(|| format!("applying serve.precision `{}`", cfg.precision))?;
         }
         let ctx = BackendCtx::from_run(net, run);
         let backend = BackendRegistry::with_defaults()
@@ -885,7 +902,7 @@ impl ServeCore {
             slots.push(slot);
         }
         let t_kernel = if sample { Some(Instant::now()) } else { None };
-        let (hn, logits) = self.stepper.step_sessions_at(&self.weights.params, &h, &x)?;
+        let (hn, logits) = self.stepper.step_sessions_snap(&self.weights, &h, &x)?;
         if let Some(t) = t_kernel {
             self.spans.kernel_step_us.observe(t.elapsed().as_micros() as u64);
         }

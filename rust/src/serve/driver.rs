@@ -97,10 +97,18 @@ impl ServeReport {
     /// wear/commit-pipeline lines replace the substrate's overlapping
     /// ad-hoc "device writes:" string (single source of truth).
     pub fn lines(&self) -> Vec<String> {
-        let mut out = vec![format!(
-            "serve: backend={} workers={} sessions={}",
-            self.backend, self.workers, self.sessions
-        )];
+        let mut out = vec![
+            format!(
+                "serve: backend={} workers={} sessions={}",
+                self.backend, self.workers, self.sessions
+            ),
+            format!(
+                "compute: kernel={} precision={} cpu_features={}",
+                crate::linalg::kernels::active_name(),
+                crate::linalg::kernels::precision_name(),
+                crate::linalg::kernels::cpu_features()
+            ),
+        ];
         out.extend(self.metrics.summary_lines(&self.store, &self.batcher));
         let from_registry = !self.obs_lines.is_empty();
         out.extend(
@@ -132,6 +140,9 @@ impl ServeReport {
         let mut out = vec![
             format!("backend={}", self.backend),
             format!("workers={}", self.workers),
+            format!("kernel={}", crate::linalg::kernels::active_name()),
+            format!("precision={}", crate::linalg::kernels::precision_name()),
+            format!("cpu_features={}", crate::linalg::kernels::cpu_features()),
             format!("sessions={}", self.sessions),
             format!("requests={}", m.requests),
             format!("batches={}", m.batches),

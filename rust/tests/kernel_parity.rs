@@ -295,6 +295,69 @@ fn serve_opts(backend: &str, requests: u64) -> ServeOptions {
     }
 }
 
+// ---- int8 integer MAC kernels (DESIGN.md §15) -------------------------------
+
+/// Deterministic i8 data with exact zeros sprinkled in (~20%) so the
+/// integer kernels' zero-skip fast paths are exercised.
+fn fill_i8(len: usize, seed: u64) -> Vec<i8> {
+    let mut rng = GaussianRng::new(seed);
+    (0..len)
+        .map(|_| if rng.below(5) == 0 { 0 } else { (rng.below(255) as i32 - 127) as i8 })
+        .collect()
+}
+
+/// One matmul_i8 parity case: scalar is the reference; every runnable
+/// kernel and the dispatched entry point must match it exactly (i32
+/// accumulation is associative, so "exactly" is the only tolerance).
+fn check_matmul_i8_parity(shape: &MatShape) -> Result<(), String> {
+    let seed = (shape.m as u64) << 32 | (shape.k as u64) << 16 | shape.n as u64;
+    let a = fill_i8(shape.m * shape.k, seed ^ 0x1A);
+    let b = fill_i8(shape.k * shape.n, seed ^ 0x1B);
+    let mut reference = vec![0i32; shape.m * shape.n];
+    kernels::matmul_i8_with(Kernel::Scalar, &a, &b, &mut reference, shape.m, shape.k, shape.n);
+    for kern in runnable_kernels() {
+        let mut out = vec![0i32; shape.m * shape.n];
+        kernels::matmul_i8_with(kern, &a, &b, &mut out, shape.m, shape.k, shape.n);
+        if out != reference {
+            return Err(format!("matmul_i8: {kern:?} != scalar at {shape:?}"));
+        }
+    }
+    let mut out = vec![0i32; shape.m * shape.n];
+    kernels::matmul_i8(&a, &b, &mut out, shape.m, shape.k, shape.n);
+    if out != reference {
+        return Err(format!("matmul_i8: dispatched != scalar at {shape:?}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn matmul_i8_exact_parity_over_random_shapes() {
+    assert_prop(0xAD4, 64, &SHAPES, check_matmul_i8_parity);
+}
+
+#[test]
+fn matmul_i8_exact_parity_at_ragged_widths() {
+    // column counts straddling the 8-lane vector width so every kernel
+    // takes its scalar-tail path at a different offset, plus saturating
+    // extremes (±127 everywhere) to rule out widening mistakes
+    for n in [1usize, 3, 7, 8, 9, 15, 16, 17, 31, 33, 63, 65, 127, 129] {
+        for (m, k) in [(1usize, 1usize), (3, 7), (5, 37), (9, 128), (4, 129)] {
+            check_matmul_i8_parity(&MatShape { m, k, n }).unwrap();
+        }
+    }
+    let (m, k, n) = (4usize, 96usize, 33usize);
+    let a = vec![127i8; m * k];
+    let b = vec![-127i8; k * n];
+    let mut reference = vec![0i32; m * n];
+    kernels::matmul_i8_with(Kernel::Scalar, &a, &b, &mut reference, m, k, n);
+    assert!(reference.iter().all(|&v| v == -127 * 127 * k as i32));
+    for kern in runnable_kernels() {
+        let mut out = vec![0i32; m * n];
+        kernels::matmul_i8_with(kern, &a, &b, &mut out, m, k, n);
+        assert_eq!(out, reference, "matmul_i8 saturating extremes: {kern:?}");
+    }
+}
+
 #[test]
 fn serve_signature_invariant_under_forced_kernels() {
     // the deterministic serve signature folds predictions, evictions and
@@ -312,4 +375,93 @@ fn serve_signature_invariant_under_forced_kernels() {
         assert_eq!(scalar.signature(), auto.signature(), "{name}: scalar vs auto");
         assert!(scalar.metrics.online_updates > 0, "{name}: must exercise online commits");
     }
+}
+
+// ---- int8 serving path under forced kernels ---------------------------------
+
+/// Holds [`FORCE_LOCK`] and restores auto kernel selection *and* f32
+/// precision when dropped — the int8 serve tests mutate both process
+/// globals.
+struct ForcedPrecisionSection<'a>(#[allow(dead_code)] MutexGuard<'a, ()>);
+
+impl<'a> ForcedPrecisionSection<'a> {
+    fn enter() -> ForcedPrecisionSection<'a> {
+        ForcedPrecisionSection(FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for ForcedPrecisionSection<'_> {
+    fn drop(&mut self) {
+        kernels::force("").expect("restoring auto kernel selection");
+        kernels::force_precision("").expect("restoring default precision");
+    }
+}
+
+#[test]
+fn int8_serve_signature_invariant_under_forced_kernels() {
+    // the int8 path quantizes activations per row and accumulates in
+    // i32, so its results — unlike f32 SIMD — are parity-safe *by
+    // construction*; this pins the claim end-to-end: the full serve
+    // signature (predictions, evictions, online commits against int8
+    // inferences) must be bitwise-identical across kernels
+    let _section = ForcedPrecisionSection::enter();
+    kernels::force_precision("int8").unwrap();
+    for name in ["dense", "crossbar"] {
+        kernels::force("scalar").unwrap();
+        let scalar = run_serve(&serve_opts(name, 300)).unwrap();
+        kernels::force("simd").unwrap();
+        let simd = run_serve(&serve_opts(name, 300)).unwrap();
+        assert_eq!(scalar.signature(), simd.signature(), "{name}: int8 scalar vs simd");
+        assert!(scalar.metrics.online_updates > 0, "{name}: must exercise online commits");
+    }
+}
+
+#[test]
+fn int8_logits_stay_within_accuracy_gate_of_f32() {
+    // inference-only (update_every = 0) so both precisions serve from
+    // the same generation-0 weights: any logit difference is pure
+    // quantization error, not a diverged training trajectory
+    let _section = ForcedPrecisionSection::enter();
+    let mut opts = serve_opts("dense", 200);
+    opts.run.serve.update_every = 0;
+    opts.record_steps = true;
+
+    kernels::force_precision("f32").unwrap();
+    let full = run_serve(&opts).unwrap();
+    kernels::force_precision("int8").unwrap();
+    let quant = run_serve(&opts).unwrap();
+
+    assert_eq!(full.completed.len(), 200);
+    assert_eq!(quant.completed.len(), 200);
+    let mut l1_num = 0.0f64;
+    let mut l1_den = 0.0f64;
+    let mut agree = 0usize;
+    let mut bit_identical = true;
+    for (f, q) in full.completed.iter().zip(&quant.completed) {
+        // the admission schedule is deterministic and precision cannot
+        // perturb it: both logs must walk the same sessions in order
+        assert_eq!(f.session, q.session, "completion logs diverged");
+        for (a, b) in f.logits.iter().zip(&q.logits) {
+            l1_num += (a - b).abs() as f64;
+            l1_den += a.abs() as f64;
+            if a.to_bits() != b.to_bits() {
+                bit_identical = false;
+            }
+        }
+        if f.pred == q.pred {
+            agree += 1;
+        }
+    }
+    assert!(!bit_identical, "int8 logits identical to f32 — the quantized path never engaged");
+    // the pinned accuracy gate (DESIGN.md §15): mean relative L1 logit
+    // error <= 10%, argmax agreement >= 80% over the 200-request run
+    // (gen-0 weights are untrained, so near-tie logits flip easily —
+    // the argmax bound is deliberately looser than the logit bound)
+    let rel_l1 = l1_num / l1_den.max(1e-12);
+    assert!(rel_l1 <= 0.10, "int8 relative L1 logit error {rel_l1:.4} exceeds the 0.10 gate");
+    let agreement = agree as f64 / 200.0;
+    assert!(
+        agreement >= 0.80,
+        "int8 argmax agreement {agreement:.3} below the 0.80 gate"
+    );
 }

@@ -166,9 +166,15 @@ fn loopback_signature_is_invariant_and_metrics_dump_is_consistent() {
             );
         } else {
             assert_histograms_consistent(&text);
+            // the kernel-step histogram is named per active precision
+            // (`m2ru_kernel_step_int8_us` under the int8 CI legs)
+            let kernel_series = match m2ru::linalg::kernels::precision_name() {
+                "int8" => "# TYPE m2ru_kernel_step_int8_us histogram",
+                _ => "# TYPE m2ru_kernel_step_us histogram",
+            };
             for series in [
                 "# TYPE m2ru_requests_total counter",
-                "# TYPE m2ru_kernel_step_us histogram",
+                kernel_series,
                 "# TYPE m2ru_batch_dispatch_us histogram",
                 "# TYPE m2ru_commit_lag_generations histogram",
                 "# TYPE m2ru_wear_device_writes_total counter",

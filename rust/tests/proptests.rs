@@ -10,7 +10,10 @@ use m2ru::linalg::Mat;
 use m2ru::net::{decode_frame, encode_frame, Message};
 use m2ru::nn::{kwta_inplace, kwta_keep_count};
 use m2ru::proptest::{assert_prop, ByteVec, F32In, Gen, Pair, U64Any, UsizeIn, VecF32, VecOf};
-use m2ru::quant::{dequantize, stochastic_round, uniform_truncate, StochasticQuantizer};
+use m2ru::quant::{
+    adc_quantize, dequantize, stochastic_round, uniform_truncate, wbs_input_quantize,
+    StochasticQuantizer,
+};
 use m2ru::replay::{ReplayBuffer, ReservoirDecision, ReservoirSampler};
 use m2ru::rng::GaussianRng;
 use m2ru::serve::{decode_parcel, encode_parcel, SessionSnapshot};
@@ -129,6 +132,96 @@ fn prop_quantizer_vec_matches_scalar_path() {
         let b: Vec<u8> = v.iter().map(|&x| q2.quantize(x)).collect();
         if a != b {
             return Err("vec path diverged from scalar path".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wbs_input_quantize_monotone_bounded_and_on_grid() {
+    // ∀ x ≤ y in [-1,1] and bit widths: quantization preserves order,
+    // stays within 1.5 LSB of the input, and lands exactly on the
+    // `dequantize` code grid (q/2^nb) — the WBS↔replay roundtrip law.
+    let gen = Pair(Pair(F32In(-1.0, 1.0), F32In(-1.0, 1.0)), UsizeIn(1, 8));
+    assert_prop(30, 300, &gen, |&((a, b), nb)| {
+        let nb = nb as u32;
+        let full = (1u32 << nb) as f32;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let (qlo, qhi) = (wbs_input_quantize(lo, nb), wbs_input_quantize(hi, nb));
+        if qlo > qhi {
+            return Err(format!("monotonicity broken: wbs({lo})={qlo} > wbs({hi})={qhi}"));
+        }
+        for (x, q) in [(lo, qlo), (hi, qhi)] {
+            // mag = round(|x|(2^nb-1)) is within 0.5 of |x|(2^nb-1), so
+            // |q - x| = |mag - |x| 2^nb| / 2^nb <= (0.5 + |x|) / 2^nb
+            if (q - x).abs() > 1.5 / full + 1e-6 {
+                return Err(format!("error bound broken: wbs({x}, {nb}) = {q}"));
+            }
+            // the implied code roundtrips through `dequantize` exactly
+            let code = (q.abs() * full).round();
+            if code > full - 1.0 {
+                return Err(format!("code {code} exceeds the {nb}-bit range"));
+            }
+            if dequantize(code as u8, nb) != q.abs() {
+                return Err(format!("wbs({x}, {nb}) = {q} is off the code grid"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adc_quantize_clips_to_vscale_and_stays_on_levels_grid() {
+    // ∀ v, bit widths >= 2 and positive scales: |adc(v)| <= vscale with
+    // exact ±vscale saturation outside the window, <= 0.5-step error
+    // inside it, and the output always an exact multiple of vscale/levels.
+    let gen = Pair(F32In(-8.0, 8.0), Pair(UsizeIn(2, 8), F32In(0.25, 4.0)));
+    assert_prop(31, 300, &gen, |&(v, (bits, vscale))| {
+        let bits = bits as u32;
+        let levels = ((1u32 << (bits - 1)) - 1) as f32;
+        let q = adc_quantize(v, bits, vscale);
+        if q.abs() > vscale + 1e-6 {
+            return Err(format!("adc({v}) = {q} escapes ±{vscale}"));
+        }
+        if v.abs() >= vscale && q != v.signum() * vscale {
+            return Err(format!("adc({v}) = {q} must saturate to ±{vscale} exactly"));
+        }
+        if v.abs() < vscale && (q - v).abs() > 0.5 * vscale / levels + 1e-6 {
+            return Err(format!("adc({v}, {bits}, {vscale}) = {q}: in-window error too large"));
+        }
+        let steps = q / vscale * levels;
+        if (steps - steps.round()).abs() > 1e-4 {
+            return Err(format!("adc({v}) = {q} is off the {levels}-level grid"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stochastic_quantizer_state_restores_mid_stream() {
+    // ∀ feature streams and split points: quantize the prefix, save the
+    // LFSR word, resume a *fresh* quantizer from it — the suffix codes
+    // must be identical to an uninterrupted run (the checkpoint/restore
+    // law the serve snapshot chain relies on).
+    let gen = Pair(VecF32 { max_len: 48, lo: 0.0, hi: 0.999 }, UsizeIn(0, 64));
+    assert_prop(32, 60, &gen, |(v, split_seed)| {
+        let split = split_seed % (v.len() + 1);
+        let mut whole = StochasticQuantizer::new(0xBEEF, 4);
+        let want = whole.quantize_vec(v);
+
+        let mut prefix = StochasticQuantizer::new(0xBEEF, 4);
+        let head = prefix.quantize_vec(&v[..split]);
+        let state = prefix.lfsr_state();
+        if state == 0 {
+            return Err("lfsr_state returned the dead all-zero word".into());
+        }
+        let mut resumed = StochasticQuantizer::new(0x0001, 4);
+        resumed.restore_lfsr(state);
+        let tail = resumed.quantize_vec(&v[split..]);
+
+        let got: Vec<u8> = head.into_iter().chain(tail).collect();
+        if got != want {
+            return Err(format!("restore at {split} diverged: {got:?} vs {want:?}"));
         }
         Ok(())
     });
