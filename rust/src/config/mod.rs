@@ -12,5 +12,7 @@ mod toml_lite;
 
 pub use manifest::{Manifest, ManifestArtifact};
 pub use netcfg::NetConfig;
-pub use runcfg::{FsyncPolicy, ObsConfig, RouterConfig, RunConfig, ServeConfig, TransportConfig};
+pub use runcfg::{
+    FsyncPolicy, ObsConfig, RouterConfig, RunConfig, ScenarioConfig, ServeConfig, TransportConfig,
+};
 pub use toml_lite::{parse_toml, TomlError, TomlValue};

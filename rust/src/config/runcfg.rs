@@ -46,6 +46,141 @@ pub struct RunConfig {
     pub router: RouterConfig,
     /// Serve-path observability policy (`rust/src/obs/`, DESIGN.md §13).
     pub obs: ObsConfig,
+    /// Traffic + domain-shift scenario policy (`rust/src/serve/scenario.rs`,
+    /// DESIGN.md §16).
+    pub scenario: ScenarioConfig,
+}
+
+/// Scenario policy: deterministic arrival-curve shaping, client-behavior
+/// mixes, and a permuted-task domain-shift schedule over the logical
+/// clock (DESIGN.md §16). Everything here is consumed by the synthetic
+/// workload and the serve report — a scenario run's per-session
+/// signature is a pure function of this config + the seed (enforced by
+/// `tests/scenario_shift.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioConfig {
+    /// Comma-separated arrival phases `kind:waves` cycled over the run
+    /// (the TOML subset has no arrays), e.g.
+    /// `"steady:20,flash:10,lull:10,churn:15"`. Kinds: `steady` (base
+    /// arrivals), `flash` (base × `flash_mult`), `lull`
+    /// (base ÷ `lull_div`, min 1), `churn` (base arrivals, and
+    /// reconnector users re-key their sessions each wave). Empty =
+    /// steady forever.
+    pub phases: String,
+    /// Arrival multiplier during `flash` phases.
+    pub flash_mult: usize,
+    /// Arrival divisor during `lull` phases (floor 1 request per wave).
+    pub lull_div: usize,
+    /// Comma-separated domain shifts `wave:task`, e.g. `"40:1,80:0"`:
+    /// from the given wave on, the workload's input/label mapping is the
+    /// seeded permutation for `task` (task 0 = the identity — the
+    /// pre-shift domain, enabling A→B→A revisits). Empty = no shifts.
+    pub shifts: String,
+    /// Fraction of users that are slow readers (emit on every other
+    /// wave only).
+    pub slow_frac: f32,
+    /// Fraction of users that reconnect under churn (their session ids
+    /// re-key each churn generation — old sessions go idle and churn
+    /// the LRU).
+    pub reconnect_frac: f32,
+    /// Fraction of users that abandon sequences mid-window (their
+    /// steps never complete a labeled window, so they never commit).
+    pub abandon_frac: f32,
+    /// Tenant classes for eviction-fairness reporting (`user %
+    /// tenant_classes`); 0 = off.
+    pub tenant_classes: usize,
+    /// A shift counts as recovered when windowed accuracy re-crosses
+    /// `recovery_threshold ×` the pre-shift windowed accuracy.
+    pub recovery_threshold: f32,
+    /// Labeled observations in the pre/post-shift accuracy window.
+    pub recovery_window: usize,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        Self {
+            phases: String::new(),
+            flash_mult: 4,
+            lull_div: 4,
+            shifts: String::new(),
+            slow_frac: 0.0,
+            reconnect_frac: 0.0,
+            abandon_frac: 0.0,
+            tenant_classes: 0,
+            recovery_threshold: 0.9,
+            recovery_window: 32,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Whether any scenario shaping is active (the report prints
+    /// scenario lines only when it is).
+    pub fn enabled(&self) -> bool {
+        !self.phases.is_empty()
+            || !self.shifts.is_empty()
+            || self.slow_frac > 0.0
+            || self.reconnect_frac > 0.0
+            || self.abandon_frac > 0.0
+            || self.tenant_classes > 0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.flash_mult >= 1, "scenario.flash_mult must be >= 1");
+        anyhow::ensure!(self.lull_div >= 1, "scenario.lull_div must be >= 1");
+        for (name, f) in [
+            ("scenario.slow_frac", self.slow_frac),
+            ("scenario.reconnect_frac", self.reconnect_frac),
+            ("scenario.abandon_frac", self.abandon_frac),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&f), "{name} must be in [0, 1]");
+        }
+        anyhow::ensure!(
+            self.slow_frac + self.reconnect_frac + self.abandon_frac <= 1.0 + 1e-6,
+            "scenario behavior fractions must sum to <= 1 (each user has one behavior)"
+        );
+        anyhow::ensure!(
+            self.recovery_threshold > 0.0 && self.recovery_threshold <= 1.0,
+            "scenario.recovery_threshold must be in (0, 1]"
+        );
+        anyhow::ensure!(self.recovery_window >= 1, "scenario.recovery_window must be >= 1");
+        // phase/shift list syntax (`kind:waves`, `wave:task`) is checked
+        // here too so a typo fails at config load, not at serve start
+        for item in self.phases.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, ticks) = item
+                .split_once(':')
+                .with_context(|| format!("scenario.phases item `{item}`: expected kind:waves"))?;
+            anyhow::ensure!(
+                matches!(kind.trim(), "steady" | "flash" | "lull" | "churn"),
+                "scenario.phases kind must be steady|flash|lull|churn (got `{kind}`)"
+            );
+            let n: u64 = ticks
+                .trim()
+                .parse()
+                .with_context(|| format!("scenario.phases item `{item}`: waves must be integer"))?;
+            anyhow::ensure!(n >= 1, "scenario.phases item `{item}`: waves must be >= 1");
+        }
+        let mut last_wave: Option<u64> = None;
+        for item in self.shifts.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (wave, task) = item
+                .split_once(':')
+                .with_context(|| format!("scenario.shifts item `{item}`: expected wave:task"))?;
+            let w: u64 = wave
+                .trim()
+                .parse()
+                .with_context(|| format!("scenario.shifts item `{item}`: wave must be integer"))?;
+            let _t: u64 = task
+                .trim()
+                .parse()
+                .with_context(|| format!("scenario.shifts item `{item}`: task must be integer"))?;
+            anyhow::ensure!(
+                last_wave.map_or(true, |p| w > p),
+                "scenario.shifts waves must be strictly increasing (got `{item}`)"
+            );
+            last_wave = Some(w);
+        }
+        Ok(())
+    }
 }
 
 /// Observability policy: how much the serve path records into the
@@ -381,6 +516,7 @@ impl Default for RunConfig {
             net: TransportConfig::default(),
             router: RouterConfig::default(),
             obs: ObsConfig::default(),
+            scenario: ScenarioConfig::default(),
         }
     }
 }
@@ -477,6 +613,24 @@ impl RunConfig {
                         v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
                 }
                 "obs.snapshot_every" => self.obs.snapshot_every = iget()? as u64,
+                "scenario.phases" => {
+                    self.scenario.phases =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
+                "scenario.flash_mult" => self.scenario.flash_mult = iget()?,
+                "scenario.lull_div" => self.scenario.lull_div = iget()?,
+                "scenario.shifts" => {
+                    self.scenario.shifts =
+                        v.as_str().with_context(|| format!("{k}: expected string"))?.to_string();
+                }
+                "scenario.slow_frac" => self.scenario.slow_frac = fget()? as f32,
+                "scenario.reconnect_frac" => self.scenario.reconnect_frac = fget()? as f32,
+                "scenario.abandon_frac" => self.scenario.abandon_frac = fget()? as f32,
+                "scenario.tenant_classes" => self.scenario.tenant_classes = iget()?,
+                "scenario.recovery_threshold" => {
+                    self.scenario.recovery_threshold = fget()? as f32;
+                }
+                "scenario.recovery_window" => self.scenario.recovery_window = iget()?,
                 other => anyhow::bail!("unknown config key `{other}`"),
             }
         }
@@ -503,7 +657,8 @@ impl RunConfig {
         self.serve.validate()?;
         self.net.validate()?;
         self.router.validate()?;
-        self.obs.validate()
+        self.obs.validate()?;
+        self.scenario.validate()
     }
 }
 
@@ -748,6 +903,49 @@ mod tests {
         // a snapshot cadence with nowhere to write is a config error
         let bad = parse_toml("[obs]\nsnapshot_every = 10\n").unwrap();
         assert!(RunConfig::default().apply(&bad).is_err());
+    }
+
+    #[test]
+    fn scenario_keys_from_toml() {
+        let map = parse_toml(
+            "[scenario]\nphases = \"steady:20,flash:10,lull:5,churn:15\"\nflash_mult = 3\nlull_div = 2\nshifts = \"40:1,80:0\"\nslow_frac = 0.25\nreconnect_frac = 0.25\nabandon_frac = 0.125\ntenant_classes = 4\nrecovery_threshold = 0.8\nrecovery_window = 48\n",
+        )
+        .unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.scenario.phases, "steady:20,flash:10,lull:5,churn:15");
+        assert_eq!(cfg.scenario.flash_mult, 3);
+        assert_eq!(cfg.scenario.lull_div, 2);
+        assert_eq!(cfg.scenario.shifts, "40:1,80:0");
+        assert_eq!(cfg.scenario.slow_frac, 0.25);
+        assert_eq!(cfg.scenario.reconnect_frac, 0.25);
+        assert_eq!(cfg.scenario.abandon_frac, 0.125);
+        assert_eq!(cfg.scenario.tenant_classes, 4);
+        assert_eq!(cfg.scenario.recovery_threshold, 0.8);
+        assert_eq!(cfg.scenario.recovery_window, 48);
+        assert!(cfg.scenario.enabled());
+        assert!(!ScenarioConfig::default().enabled());
+    }
+
+    #[test]
+    fn scenario_validation_rejects_bad_configs() {
+        for bad in [
+            "[scenario]\nphases = \"sleepy:10\"\n",
+            "[scenario]\nphases = \"flash\"\n",
+            "[scenario]\nphases = \"flash:0\"\n",
+            "[scenario]\nshifts = \"40\"\n",
+            "[scenario]\nshifts = \"40:1,30:2\"\n",
+            "[scenario]\nshifts = \"40:x\"\n",
+            "[scenario]\nflash_mult = 0\n",
+            "[scenario]\nlull_div = 0\n",
+            "[scenario]\nslow_frac = 1.5\n",
+            "[scenario]\nslow_frac = 0.6\nreconnect_frac = 0.6\n",
+            "[scenario]\nrecovery_threshold = 0\n",
+            "[scenario]\nrecovery_window = 0\n",
+        ] {
+            let map = parse_toml(bad).unwrap();
+            assert!(RunConfig::default().apply(&map).is_err(), "must reject: {bad}");
+        }
     }
 
     #[test]

@@ -98,6 +98,24 @@ SUBCOMMANDS
       --obs-snapshot PATH   periodically write the Prometheus exposition
                             to PATH (and flight events to PATH.jsonl)
       --obs-snapshot-every T  snapshot period in ticks (0 = never)        [0]
+      scenario simulation (traffic storms + domain shifts; DESIGN.md 16):
+      --scenario-phases L   arrival-curve phases cycled per wave, e.g.
+                            steady:20,flash:5,lull:10,churn:5 (one wave =
+                            one logical tick)
+      --scenario-flash-mult N / --scenario-lull-div N   flash multiplies
+                            the base arrivals, lull divides them     [4 / 4]
+      --scenario-shifts L   domain-shift schedule wave:task, e.g.
+                            40:1,80:0 (task 0 = identity; reusing a task
+                            id revisits that exact permuted domain)
+      --scenario-slow-frac F / --scenario-reconnect-frac F /
+      --scenario-abandon-frac F   client-behavior mix (fractions of the
+                            user population; the rest behave normally) [0]
+      --scenario-tenant-classes N  eviction-fairness classes (uid % N;
+                            0 disables the evictions_by_class report)  [0]
+      --scenario-recovery-threshold F / --scenario-recovery-window W
+                            a shift counts recovered when windowed
+                            accuracy over the last W labeled steps
+                            re-crosses F x pre-shift accuracy    [0.9 / 32]
       --config FILE --seed N --lr F --lam F --beta F
   loadgen                   closed-loop load generator (same flags as serve)
       --concurrency C       outstanding-request target                   [4*max-batch]
@@ -131,6 +149,10 @@ SUBCOMMANDS
                             seed/policy => bit-identical logits)
       --skip N              fast-forward the workload N requests (resume
                             against a server restored from a checkpoint)
+      --scenario-* ...      drive the scenario workload over the wire
+                            (same flags as serve; launch the server with
+                            the same schedule so its shift report and the
+                            client's traffic shaping line up)
       --keep-alive          do not send Shutdown when done
       --metrics             fetch and print the server's MetricsDump
                             (Prometheus text; a router answers with
@@ -330,6 +352,26 @@ fn cmd_train(artifacts: &str, args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// The `[scenario]` flag surface, shared by `serve`, `loadgen`, `router`
+/// (via the run config) and `connect` (via its own workload config).
+fn apply_scenario_flags(args: &mut Args, sc: &mut m2ru::config::ScenarioConfig) -> Result<()> {
+    if let Some(p) = args.get_opt("scenario-phases") {
+        sc.phases = p;
+    }
+    sc.flash_mult = args.get_parse("scenario-flash-mult", sc.flash_mult)?;
+    sc.lull_div = args.get_parse("scenario-lull-div", sc.lull_div)?;
+    if let Some(s) = args.get_opt("scenario-shifts") {
+        sc.shifts = s;
+    }
+    sc.slow_frac = args.get_parse("scenario-slow-frac", sc.slow_frac)?;
+    sc.reconnect_frac = args.get_parse("scenario-reconnect-frac", sc.reconnect_frac)?;
+    sc.abandon_frac = args.get_parse("scenario-abandon-frac", sc.abandon_frac)?;
+    sc.tenant_classes = args.get_parse("scenario-tenant-classes", sc.tenant_classes)?;
+    sc.recovery_threshold = args.get_parse("scenario-recovery-threshold", sc.recovery_threshold)?;
+    sc.recovery_window = args.get_parse("scenario-recovery-window", sc.recovery_window)?;
+    Ok(())
+}
+
 /// The `[serve]` policy + `[net]` transport flag surface shared by
 /// `serve`, `loadgen` and `router`.
 fn apply_serve_net_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
@@ -373,6 +415,7 @@ fn apply_serve_net_flags(args: &mut Args, run: &mut RunConfig) -> Result<()> {
         run.obs.snapshot_path = path;
     }
     run.obs.snapshot_every = args.get_parse("obs-snapshot-every", run.obs.snapshot_every)?;
+    apply_scenario_flags(args, &mut run.scenario)?;
     Ok(())
 }
 
@@ -560,6 +603,10 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     opts.skip = args.get_parse("skip", opts.skip)?;
     opts.shutdown = !args.get_bool("keep-alive")?;
     opts.metrics = args.get_bool("metrics")?;
+    // the client-side half of a scenario run: the server gets the same
+    // schedule via the serve-side flags, the client shapes the traffic
+    apply_scenario_flags(args, &mut opts.scenario)?;
+    opts.scenario.validate()?;
     args.finish()?;
     println!(
         "connect: {} requests over {} sessions to {} (arrivals {}, seed {})",

@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::NetConfig;
+use crate::config::{NetConfig, ScenarioConfig};
 use crate::serve::SyntheticWorkload;
 
 use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
@@ -212,6 +212,12 @@ pub struct ConnectOptions {
     pub shutdown: bool,
     /// Fetch a `MetricsDump` (Prometheus text) after the run.
     pub metrics: bool,
+    /// Scenario config for the client-side workload (default disabled).
+    /// Wave sizes then follow the arrival curve (`arrivals` is the
+    /// steady-phase base), behaviors/shifts apply, and reconnector churn
+    /// handshakes new sessions mid-run. Launch the server with the same
+    /// schedule so its shift tracker lines up with this traffic.
+    pub scenario: ScenarioConfig,
 }
 
 impl ConnectOptions {
@@ -226,6 +232,7 @@ impl ConnectOptions {
             skip: 0,
             shutdown: true,
             metrics: false,
+            scenario: ScenarioConfig::default(),
         }
     }
 }
@@ -299,8 +306,18 @@ pub fn run_connect(opts: &ConnectOptions) -> Result<ConnectReport> {
     for user in 0..opts.sessions as u64 {
         session_ids.push(client.hello(user)?);
     }
+    // reconnector uids are generation-bumped past the base population and
+    // appear mid-run (churn waves); each is handshaked on first sight —
+    // exactly what a reconnecting client does — and cached here
+    let mut extra_ids: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
 
-    let mut workload = SyntheticWorkload::new(&opts.net, opts.sessions, opts.seed);
+    let mut workload = SyntheticWorkload::with_scenario(
+        &opts.net,
+        opts.sessions,
+        opts.seed,
+        &opts.scenario,
+        opts.arrivals,
+    )?;
     workload.skip(opts.skip);
 
     let mut completed: Vec<(u64, u32, Vec<f32>)> = Vec::with_capacity(opts.requests as usize);
@@ -318,10 +335,33 @@ pub fn run_connect(opts: &ConnectOptions) -> Result<ConnectReport> {
     let start = Instant::now();
     let mut issued: u64 = 0;
     while issued < opts.requests {
-        let wave = (opts.arrivals as u64).min(opts.requests - issued) as usize;
+        // scenario runs size each wave from the arrival curve; plain
+        // runs keep the flat rate. Either way one wave = one server tick.
+        let quota = workload.wave_quota().unwrap_or(opts.arrivals) as u64;
+        let wave = quota.min(opts.requests - issued) as usize;
         for i in 0..wave {
             let (user, x, label) = workload.next();
-            let session = session_ids[user as usize];
+            let session = if (user as usize) < session_ids.len() {
+                session_ids[user as usize]
+            } else {
+                match extra_ids.get(&user) {
+                    Some(&sid) => sid,
+                    None => {
+                        // the Ack may arrive behind pipelined Logits from
+                        // earlier waves on the shared channel — keep
+                        // collecting those while waiting for it
+                        client.send(0, &Message::Hello { user, epoch: 0 })?;
+                        let sid = loop {
+                            match client.recv()? {
+                                Message::Ack { value, .. } => break value,
+                                other => collect(&mut completed, other)?,
+                            }
+                        };
+                        extra_ids.insert(user, sid);
+                        sid
+                    }
+                }
+            };
             if label.is_some() {
                 labeled += 1;
             }

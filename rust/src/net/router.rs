@@ -105,6 +105,9 @@ use super::wire::{self, Frame, Message, FLAG_FLUSH, FLAG_TICK};
 enum ShardCmd {
     /// One routed request at the current tick.
     Submit { session: u64, x: Vec<f32>, label: Option<usize>, tag: u64 },
+    /// Tag a session's tenant class for scenario eviction accounting
+    /// (fire-and-forget, reporting-plane only — dispatch ignores it).
+    Class { session: u64, class: usize },
     /// End of an admission wave: dispatch per policy (`tick`), force the
     /// tail flush (`flush`), reply with the completed steps, then
     /// advance the clock and run the checkpoint cadence (`tick` only).
@@ -163,6 +166,7 @@ fn shard_loop(
     for cmd in cmds {
         match cmd {
             ShardCmd::Submit { session, x, label, tag } => core.submit(session, x, label, tag),
+            ShardCmd::Class { session, class } => core.register_session_class(session, class),
             ShardCmd::Wave { tick, flush } => {
                 let res = (|| -> Result<Vec<CompletedStep>> {
                     let mut steps = if tick { core.drain_ready()? } else { Vec::new() };
@@ -461,6 +465,19 @@ impl RouterCore {
             .map_err(|_| anyhow!("shard {k} is down"))?;
         self.routed += 1;
         self.shard_routed[k] += 1;
+        Ok(())
+    }
+
+    /// Tag `session`'s tenant class on its owning shard so scenario
+    /// eviction-fairness accounting attributes its eviction there
+    /// (reporting plane only; a class tag does not survive a later
+    /// migration — by design, migrations are voluntary, not evictions).
+    pub fn register_session_class(&mut self, session: u64, class: usize) -> Result<()> {
+        let k = self.shard_of(session);
+        let h = self.shards[k].as_ref().with_context(|| format!("shard {k} is down"))?;
+        h.cmds
+            .send(ShardCmd::Class { session, class })
+            .map_err(|_| anyhow!("shard {k} is down"))?;
         Ok(())
     }
 
@@ -1302,6 +1319,9 @@ impl RouterServer {
         let ny = opts.net.ny;
         let client_admin = opts.run.net.client_admin;
         let bind_cap = opts.run.serve.capacity;
+        // scenario runs: class-of-user for eviction-fairness accounting
+        // (0 when scenarios are off — the register call is gated on it)
+        let scenario_classes = opts.run.scenario.tenant_classes as u64;
         // resharding state (DESIGN.md §14). `repoch` is the remote
         // fleet's routing epoch (an in-process fleet keeps its epoch
         // inside RouterCore); `active` marks remote physicals not yet
@@ -1433,13 +1453,24 @@ impl RouterServer {
                                 let sid = session_id_keyed(user, secret);
                                 match &mut mode {
                                     Mode::Local(core) => match table.bind(conn, sid, bind_cap) {
-                                        Ok(()) => table.send(
-                                            conn,
-                                            &Message::Ack {
-                                                value: sid,
-                                                epoch: core.epoch().epoch(),
-                                            },
-                                        ),
+                                        Ok(()) => {
+                                            if scenario_classes > 0 {
+                                                // tenant class is a pure
+                                                // function of the user key —
+                                                // tag the owning shard
+                                                core.register_session_class(
+                                                    sid,
+                                                    (user % scenario_classes) as usize,
+                                                )?;
+                                            }
+                                            table.send(
+                                                conn,
+                                                &Message::Ack {
+                                                    value: sid,
+                                                    epoch: core.epoch().epoch(),
+                                                },
+                                            )
+                                        }
                                         Err(reason) => table.drop_conn(conn, &reason),
                                     },
                                     Mode::Remote(remote) => {

@@ -355,6 +355,19 @@ impl NetServer {
                                 let sid = session_id_keyed(user, core.session_secret());
                                 match table.bind(conn, sid, bind_cap) {
                                     Ok(()) => {
+                                        // scenario runs: the tenant class is
+                                        // a pure function of the user key
+                                        // (reconnector uids stride by a
+                                        // multiple of the class count), so
+                                        // the server recovers it at Hello
+                                        // with no wire change
+                                        let classes = core.tenant_classes() as u64;
+                                        if classes > 0 {
+                                            core.register_session_class(
+                                                sid,
+                                                (user % classes) as usize,
+                                            );
+                                        }
                                         table.send(conn, &Message::Ack { value: sid, epoch: 0 });
                                     }
                                     Err(reason) => table.drop_conn(conn, &reason),

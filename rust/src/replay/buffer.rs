@@ -189,6 +189,24 @@ impl ReplayBuffer {
         true
     }
 
+    /// Restore the segment cap by merging oldest pairs until at most
+    /// `cap` segments remain (at least one always survives). A single
+    /// [`ReplayBuffer::merge_oldest_pair`] per finalized commit is not
+    /// enough under churn: a storm that finalizes segments faster than
+    /// one merge per commit would grow the list past the cap without
+    /// bound. Returns the number of merges performed.
+    pub fn enforce_segment_cap(&mut self, cap: usize, rng: &mut GaussianRng) -> usize {
+        let cap = cap.max(1);
+        let mut merges = 0;
+        while self.num_tasks() > cap {
+            if !self.merge_oldest_pair(rng) {
+                break;
+            }
+            merges += 1;
+        }
+        merges
+    }
+
     /// The stored segments, oldest first (checkpoint/restore hook).
     pub fn segments(&self) -> &[Vec<QuantizedExample>] {
         &self.segments
@@ -391,6 +409,30 @@ mod tests {
         assert!(!tiny.merge_oldest_pair(&mut rng), "no segments to merge");
         tiny.begin_task();
         assert!(!tiny.merge_oldest_pair(&mut rng), "one segment cannot merge");
+    }
+
+    #[test]
+    fn enforce_segment_cap_restores_the_cap_after_a_finalization_flood() {
+        // regression: a churn storm can finalize many segments between
+        // merge opportunities; one merge per commit leaves the list over
+        // the cap. The cap-restoring loop must close any backlog.
+        let mut buf = ReplayBuffer::new(4, 0.0, 1.0, 3);
+        for task in 0..40 {
+            buf.begin_task();
+            for _ in 0..4 {
+                buf.offer(&ex(&[0.2; 4], task % 3));
+            }
+        }
+        assert_eq!(buf.num_tasks(), 40);
+        let mut rng = GaussianRng::new(9);
+        let merges = buf.enforce_segment_cap(16, &mut rng);
+        assert_eq!(buf.num_tasks(), 16, "the cap must be restored in one call");
+        assert_eq!(merges, 24, "each merge removes exactly one segment");
+        // idempotent at the cap, and degenerate caps stay safe
+        assert_eq!(buf.enforce_segment_cap(16, &mut rng), 0);
+        buf.enforce_segment_cap(0, &mut rng);
+        assert_eq!(buf.num_tasks(), 1, "cap 0 clamps to one surviving segment");
+        assert!(buf.stored_examples() <= 4, "the survivor respects per-segment capacity");
     }
 
     #[test]

@@ -54,6 +54,7 @@ use super::checkpoint::{
 use super::commit::{Committer, Job, Outcome, SubstrateStatus, WeightSnapshot};
 use super::metrics::ServeMetrics;
 use super::online::{CommitBatch, OnlineLearner};
+use super::scenario::{ScenarioSchedule, ShiftTracker};
 use super::session::{SessionSnapshot, SessionStore};
 
 /// One served request, reported back to the frontend for delivery.
@@ -189,6 +190,16 @@ pub struct ServeCore {
     pub(crate) obs: Obs,
     /// Hot-path span instruments registered at boot.
     pub(crate) spans: ServeSpans,
+    /// Domain-shift tracker, present when `[scenario]` is active:
+    /// windowed accuracy around scheduled shifts, recovery ticks and
+    /// per-phase counters for the serve report. Reporting plane only —
+    /// dispatch never reads it — but its inputs are the deterministic
+    /// labeled-scoring stream, so its report is reproducible across
+    /// worker counts and shard layouts.
+    shift_tracker: Option<ShiftTracker>,
+    /// Tenant classes configured by the scenario (0 = fairness off);
+    /// frontends read this to decide whether to register classes.
+    scenario_classes: usize,
     /// Outcomes of recent labeled steps (sliding accuracy window for the
     /// `m2ru_labeled_accuracy_window` gauge). Observability state only.
     obs_acc_window: std::collections::VecDeque<bool>,
@@ -245,6 +256,17 @@ impl ServeCore {
         );
         let mut store = SessionStore::new(net.nh, net.nx, net.nt, cfg.capacity, cfg.ttl);
         store.set_recorder(obs.enabled().then(|| obs.recorder.clone()));
+        let (shift_tracker, scenario_classes) = if run.scenario.enabled() {
+            // the session count only shapes client-side behavior ranges;
+            // the server-side tracker needs just the shift schedule and
+            // the recovery policy, so bind the schedule with 0 sessions
+            let sched = ScenarioSchedule::from_config(&run.scenario, 0)
+                .context("building the scenario shift schedule")?;
+            store.set_tenant_classes(run.scenario.tenant_classes);
+            (Some(ShiftTracker::new(&sched)), run.scenario.tenant_classes)
+        } else {
+            (None, 0)
+        };
         let params_base = weights.params.clone();
         Ok(ServeCore {
             stepper: ParallelEngine::new(read_fork, run.workers),
@@ -271,6 +293,8 @@ impl ServeCore {
             last_snapshot_path: None,
             obs,
             spans,
+            shift_tracker,
+            scenario_classes,
             obs_acc_window: std::collections::VecDeque::with_capacity(OBS_ACC_WINDOW),
             obs_snapshot_path: run.obs.snapshot_path.clone(),
             obs_snapshot_every: run.obs.snapshot_every,
@@ -315,9 +339,31 @@ impl ServeCore {
     /// Advance the logical clock by one tick (end of a frontend wave).
     pub fn advance_tick(&mut self) {
         self.tick += 1;
+        // one wave == one tick in every scenario frontend, so a shift
+        // scheduled at wave w takes effect when the clock reaches w —
+        // exactly when the workload starts emitting permuted features
+        let fired = self.shift_tracker.as_mut().and_then(|tr| tr.on_tick(self.tick));
+        if let Some((task, pre_acc)) = fired {
+            self.obs.event(
+                self.tick,
+                "domain_shift",
+                vec![("task", format!("{task}")), ("pre_acc", format!("{pre_acc:.4}"))],
+            );
+        }
         if self.obs_snapshot_every > 0 && self.tick % self.obs_snapshot_every == 0 {
             self.write_obs_snapshot();
         }
+    }
+
+    /// Tenant classes configured by the scenario (0 = fairness off).
+    pub fn tenant_classes(&self) -> usize {
+        self.scenario_classes
+    }
+
+    /// Tag a session with its tenant class for eviction-fairness
+    /// accounting (no-op when the scenario configured no classes).
+    pub fn register_session_class(&mut self, session: u64, class: usize) {
+        self.store.register_class(session, class);
     }
 
     /// The network shapes this core serves.
@@ -410,6 +456,10 @@ impl ServeCore {
             completed: Vec::new(),
             outbox_drops: Default::default(),
             obs_lines,
+            scenario: self
+                .shift_tracker
+                .as_ref()
+                .map(|tr| tr.report(self.store.evictions_by_class().to_vec())),
         })
     }
 
@@ -518,6 +568,17 @@ impl ServeCore {
         if let Some(y) = self.status.lifespan_years {
             r.gauge("m2ru_projected_lifespan_years", "projected device lifespan @ 1 kHz commits")
                 .set(y);
+        }
+        if let Some(tr) = &self.shift_tracker {
+            r.counter("m2ru_shift_crossed_total", "domain shifts taken effect")
+                .set(tr.crossed().len() as u64);
+            r.counter("m2ru_shift_recovered_total", "domain shifts recovered past the threshold")
+                .set(tr.recovered() as u64);
+            r.gauge(
+                "m2ru_shift_window_accuracy",
+                "windowed labeled accuracy the shift tracker currently sees",
+            )
+            .set(tr.window_accuracy() as f64);
         }
         r.gauge("m2ru_tick", "logical serve tick").set(self.tick as f64);
         r.counter("m2ru_flight_events_dropped_total", "flight events evicted from the ring")
@@ -927,6 +988,9 @@ impl ServeCore {
                 self.metrics.labeled += 1;
                 if preds[i] == label {
                     self.metrics.labeled_correct += 1;
+                }
+                if let Some(tr) = self.shift_tracker.as_mut() {
+                    tr.observe(self.tick, preds[i] == label);
                 }
                 if self.obs.enabled() {
                     if self.obs_acc_window.len() == OBS_ACC_WINDOW {

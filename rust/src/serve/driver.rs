@@ -24,6 +24,7 @@ use crate::config::{NetConfig, RunConfig};
 use super::batcher::BatcherStats;
 use super::core::{CompletedStep, ServeCore};
 use super::metrics::{OutboxDrops, ServeMetrics};
+use super::scenario::ScenarioReport;
 use super::session::{session_id_for_user, SessionStats};
 use super::workload::SyntheticWorkload;
 
@@ -90,6 +91,10 @@ pub struct ServeReport {
     /// (populated when observability is on; they replace the overlapping
     /// ad-hoc substrate stat strings in [`ServeReport::lines`]).
     pub obs_lines: Vec<String>,
+    /// Scenario section (shifts crossed, recovery ticks, per-phase
+    /// accuracy, eviction fairness) — present only when `[scenario]` was
+    /// active, so non-scenario reports keep their exact historical shape.
+    pub scenario: Option<ScenarioReport>,
 }
 
 impl ServeReport {
@@ -125,6 +130,11 @@ impl ServeReport {
         if let Some(years) = self.lifespan_years {
             if years.is_finite() {
                 out.push(format!("projected lifespan: {years:.2} years @ 1 kHz commits"));
+            }
+        }
+        if let Some(sc) = &self.scenario {
+            for l in sc.kv_lines() {
+                out.push(format!("scenario: {l}"));
             }
         }
         out.push(format!("signature: {}", self.signature()));
@@ -175,6 +185,12 @@ impl ServeReport {
         if let Some(years) = self.lifespan_years {
             out.push(format!("lifespan_years={years:.4}"));
         }
+        // scenario keys slot in just before the signature so scrapers
+        // see them only on scenario runs; the non-scenario schema is
+        // byte-for-byte what it has always been
+        if let Some(sc) = &self.scenario {
+            out.extend(sc.kv_lines());
+        }
         out.push(format!("signature={}", self.signature()));
         out
     }
@@ -193,26 +209,38 @@ pub fn run_serve(opts: &ServeOptions) -> Result<ServeReport> {
     let mut core = ServeCore::new(opts.net, &opts.run)?;
     // without a step log, skip the per-request logits copy entirely
     core.set_collect_logits(opts.record_steps);
-    let mut workload = SyntheticWorkload::new(&opts.net, opts.sessions, opts.run.seed);
+    let mut workload = SyntheticWorkload::with_scenario(
+        &opts.net,
+        opts.sessions,
+        opts.run.seed,
+        &opts.run.scenario,
+        opts.arrivals.max(1),
+    )?;
+    let classes = workload.tenant_classes();
     let mut log: Vec<CompletedStep> = Vec::new();
 
     let start = Instant::now();
     let mut issued: u64 = 0;
     let mut completed: u64 = 0;
     while completed < opts.requests {
-        // admission: open loop admits a fixed arrival rate; closed loop
-        // tops outstanding requests back up to the concurrency target
+        // admission: open loop admits the scenario's per-wave quota (a
+        // flat arrival rate without one); closed loop tops outstanding
+        // requests back up to the concurrency target
         let want = if opts.concurrency > 0 {
             opts.concurrency.saturating_sub((issued - completed) as usize)
         } else {
-            opts.arrivals
+            workload.wave_quota().unwrap_or(opts.arrivals)
         };
         for _ in 0..want {
             if issued >= opts.requests {
                 break;
             }
             let (user, x, label) = workload.next();
-            core.submit(session_id_for_user(user), x, label, 0);
+            let sid = session_id_for_user(user);
+            if classes > 0 {
+                core.register_session_class(sid, workload.class_of(user));
+            }
+            core.submit(sid, x, label, 0);
             issued += 1;
         }
         let done = core.drain_ready()?;
@@ -347,6 +375,28 @@ mod tests {
         let plain = run_serve(&opts(1, "dense", 120)).unwrap();
         assert_eq!(rep.signature(), plain.signature());
         assert!(plain.completed.is_empty());
+    }
+
+    #[test]
+    fn scenario_report_keys_slot_in_before_the_signature() {
+        let mut o = opts(1, "dense", 200);
+        o.run.scenario.phases = "steady:4,flash:2".to_string();
+        o.run.scenario.shifts = "5:1".to_string();
+        o.run.scenario.tenant_classes = 2;
+        let rep = run_serve(&o).unwrap();
+        let sc = rep.scenario.as_ref().expect("scenario run must carry a scenario section");
+        assert_eq!(sc.shifts.len(), 1, "the wave-5 shift must be crossed");
+        assert_eq!(sc.evictions_by_class.len(), 2);
+        let kv = rep.kv_lines();
+        let idx = |k: &str| kv.iter().position(|l| l.starts_with(k)).unwrap();
+        assert!(idx("shifts=") < idx("signature="), "scenario keys precede the signature");
+        assert!(kv.iter().any(|l| l.starts_with("shift_recovery_ticks=")));
+        assert!(kv.iter().any(|l| l.starts_with("phase_accuracy=")));
+        assert!(kv.iter().any(|l| l.starts_with("evictions_by_class=")));
+        // non-scenario reports keep their exact historical schema
+        let plain = run_serve(&opts(1, "dense", 100)).unwrap();
+        assert!(plain.scenario.is_none());
+        assert!(plain.kv_lines().iter().all(|l| !l.starts_with("shifts=")));
     }
 
     #[test]

@@ -58,6 +58,7 @@ mod driver;
 mod metrics;
 pub mod migrate;
 mod online;
+pub mod scenario;
 mod session;
 mod workload;
 
@@ -74,6 +75,10 @@ pub use migrate::{
 pub use driver::{run_serve, ServeOptions, ServeReport};
 pub use metrics::{OutboxDrops, ServeMetrics};
 pub use online::{CommitBatch, LearnerDelta, LearnerState, OnlineLearner};
+pub use scenario::{
+    parse_phases, parse_shifts, task_permutation, Behavior, PhaseKind, ScenarioReport,
+    ScenarioSchedule, ShiftReport, ShiftTracker,
+};
 pub use session::{
     session_id_for_user, session_id_keyed, SessionSnapshot, SessionStats, SessionStore,
     DEFAULT_SESSION_SECRET,

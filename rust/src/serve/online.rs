@@ -294,9 +294,12 @@ impl OnlineLearner {
             sb.labels[i] = ex.label;
         }
         self.buffer.begin_task();
-        while self.buffer.num_tasks() > MAX_REPLAY_SEGMENTS {
-            self.buffer.merge_oldest_pair(&mut self.rng);
-        }
+        // A single merge per commit is not enough: a restore (or a
+        // migration flood) can hand this learner a buffer already far
+        // past the cap, and merging one pair per finalized window would
+        // leave it over-cap for many commits. `enforce_segment_cap`
+        // loops until the retention cap actually holds.
+        self.buffer.enforce_segment_cap(MAX_REPLAY_SEGMENTS, &mut self.rng);
         self.pending.clear();
         self.updates += 1;
         CommitBatch { batch: sb, wear_ratio: self.wear_ratio }

@@ -1,0 +1,551 @@
+//! Scenario layer: deterministic traffic shaping + domain-shift
+//! schedules over the serve loop's logical clock (DESIGN.md §16).
+//!
+//! A scenario is pure configuration ([`crate::config::ScenarioConfig`]):
+//! arrival phases (`steady`/`flash`/`lull`/`churn`) cycled over wave
+//! indexes, per-user behavior mixes (slow readers, reconnectors,
+//! abandoners — assigned by user-index range, so the assignment is a
+//! function of config alone), and a permuted-task shift schedule that
+//! rewrites the synthetic workload's input/label mapping at configured
+//! waves. One wave is one logical tick in both the in-process driver and
+//! `m2ru connect`, so "wave" and "tick" coincide everywhere a scenario
+//! runs.
+//!
+//! Everything here is consumed on the *client/workload* side except
+//! [`ShiftTracker`], which lives in `ServeCore` and turns the shift
+//! schedule into report material: pre/post-shift windowed accuracy,
+//! recovery ticks, per-phase accuracy. The tracker is reporting-plane
+//! only — nothing it computes feeds dispatch — but its inputs (the
+//! deterministic labeled-scoring stream) make its output reproducible
+//! across worker counts.
+
+use anyhow::{Context, Result};
+
+use crate::config::ScenarioConfig;
+use crate::rng::GaussianRng;
+
+/// Arrival-curve phase kinds (`scenario.phases`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Base arrivals per wave.
+    Steady,
+    /// Base × `flash_mult` arrivals (flash crowd).
+    Flash,
+    /// Base ÷ `lull_div` arrivals, floor 1 (diurnal trough).
+    Lull,
+    /// Base arrivals, and reconnector users re-key their sessions each
+    /// wave (session churn storm).
+    Churn,
+}
+
+impl PhaseKind {
+    fn parse(s: &str) -> Result<PhaseKind> {
+        match s {
+            "steady" => Ok(PhaseKind::Steady),
+            "flash" => Ok(PhaseKind::Flash),
+            "lull" => Ok(PhaseKind::Lull),
+            "churn" => Ok(PhaseKind::Churn),
+            other => anyhow::bail!("scenario phase kind must be steady|flash|lull|churn (got `{other}`)"),
+        }
+    }
+}
+
+/// Parse `scenario.phases` (`"steady:20,flash:10"`) into `(kind, waves)`
+/// pairs. Empty input parses to an empty schedule (steady forever).
+pub fn parse_phases(s: &str) -> Result<Vec<(PhaseKind, u64)>> {
+    let mut out = Vec::new();
+    for item in s.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (kind, waves) = item
+            .split_once(':')
+            .with_context(|| format!("scenario phase `{item}`: expected kind:waves"))?;
+        let n: u64 = waves
+            .trim()
+            .parse()
+            .with_context(|| format!("scenario phase `{item}`: waves must be an integer"))?;
+        anyhow::ensure!(n >= 1, "scenario phase `{item}`: waves must be >= 1");
+        out.push((PhaseKind::parse(kind.trim())?, n));
+    }
+    Ok(out)
+}
+
+/// Parse `scenario.shifts` (`"40:1,80:0"`) into strictly increasing
+/// `(wave, task)` pairs. Task 0 is the identity permutation — the
+/// pre-shift domain — so `"40:1,80:0"` is an A→B→A revisit.
+pub fn parse_shifts(s: &str) -> Result<Vec<(u64, u64)>> {
+    let mut out: Vec<(u64, u64)> = Vec::new();
+    for item in s.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let (wave, task) = item
+            .split_once(':')
+            .with_context(|| format!("scenario shift `{item}`: expected wave:task"))?;
+        let w: u64 = wave
+            .trim()
+            .parse()
+            .with_context(|| format!("scenario shift `{item}`: wave must be an integer"))?;
+        let t: u64 = task
+            .trim()
+            .parse()
+            .with_context(|| format!("scenario shift `{item}`: task must be an integer"))?;
+        anyhow::ensure!(
+            out.last().map_or(true, |&(p, _)| w > p),
+            "scenario shift waves must be strictly increasing (got `{item}`)"
+        );
+        out.push((w, t));
+    }
+    Ok(out)
+}
+
+/// The input permutation of a shift task: `None` for task 0 (identity),
+/// otherwise a seeded Fisher–Yates permutation of the `nx` feature
+/// columns — the same task id always yields the same permutation under
+/// the same seed, so a schedule can revisit a domain (the paper's
+/// replay ablation needs exactly that).
+pub fn task_permutation(seed: u64, task: u64, nx: usize) -> Option<Vec<usize>> {
+    if task == 0 {
+        return None;
+    }
+    let mut rng = GaussianRng::new(seed ^ 0x5C3A_0D15 ^ task.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    Some(rng.permutation(nx))
+}
+
+/// What a given user does to the serve fleet (`ScenarioSchedule::behavior`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Behavior {
+    Normal,
+    /// Emits only on even waves (a slow reader's think time).
+    Slow,
+    /// Re-keys its session id every churn wave (LRU churn + evictions).
+    Reconnect,
+    /// Never completes a labeled window (resets just before the label
+    /// step) — pure unlabeled load.
+    Abandon,
+}
+
+/// A parsed, sessions-bound scenario: everything the workload needs to
+/// shape arrivals, assign behaviors and apply shifts, derived once from
+/// config + session count (no RNG involved — the schedule itself is not
+/// random).
+#[derive(Clone, Debug)]
+pub struct ScenarioSchedule {
+    phases: Vec<(PhaseKind, u64)>,
+    shifts: Vec<(u64, u64)>,
+    flash_mult: usize,
+    lull_div: usize,
+    /// Behavior ranges over user indexes `0..sessions`:
+    /// `[0, slow)` slow, `[slow, reconnect)` reconnectors,
+    /// `[reconnect, abandon)` abandoners, the rest normal.
+    slow_end: usize,
+    reconnect_end: usize,
+    abandon_end: usize,
+    tenant_classes: usize,
+    /// Reconnector uid stride per churn generation: `sessions` rounded
+    /// up to a multiple of `tenant_classes`, so `uid % tenant_classes`
+    /// is stable across reconnects while the session id changes.
+    stride: u64,
+    recovery_threshold: f32,
+    recovery_window: usize,
+}
+
+impl ScenarioSchedule {
+    pub fn from_config(cfg: &ScenarioConfig, sessions: usize) -> Result<ScenarioSchedule> {
+        cfg.validate()?;
+        let count = |f: f32| ((f as f64) * (sessions as f64)).round() as usize;
+        let slow_end = count(cfg.slow_frac).min(sessions);
+        let reconnect_end = (slow_end + count(cfg.reconnect_frac)).min(sessions);
+        let abandon_end = (reconnect_end + count(cfg.abandon_frac)).min(sessions);
+        let tc = cfg.tenant_classes.max(1);
+        let stride = (sessions.div_ceil(tc) * tc).max(1) as u64;
+        Ok(ScenarioSchedule {
+            phases: parse_phases(&cfg.phases)?,
+            shifts: parse_shifts(&cfg.shifts)?,
+            flash_mult: cfg.flash_mult,
+            lull_div: cfg.lull_div,
+            slow_end,
+            reconnect_end,
+            abandon_end,
+            tenant_classes: cfg.tenant_classes,
+            stride,
+            recovery_threshold: cfg.recovery_threshold,
+            recovery_window: cfg.recovery_window,
+        })
+    }
+
+    /// The phase active on wave `w` (phases cycle; empty = steady).
+    pub fn phase_at(&self, w: u64) -> PhaseKind {
+        if self.phases.is_empty() {
+            return PhaseKind::Steady;
+        }
+        let cycle: u64 = self.phases.iter().map(|&(_, n)| n).sum();
+        let mut pos = w % cycle;
+        for &(kind, n) in &self.phases {
+            if pos < n {
+                return kind;
+            }
+            pos -= n;
+        }
+        unreachable!("pos < cycle by construction");
+    }
+
+    /// Arrivals for a wave in the given phase, from the base rate.
+    pub fn arrivals(&self, kind: PhaseKind, base: usize) -> usize {
+        match kind {
+            PhaseKind::Steady | PhaseKind::Churn => base.max(1),
+            PhaseKind::Flash => base.saturating_mul(self.flash_mult).max(1),
+            PhaseKind::Lull => (base / self.lull_div).max(1),
+        }
+    }
+
+    /// The shift (if any) scheduled exactly at wave `w`.
+    pub fn shift_at(&self, w: u64) -> Option<u64> {
+        self.shifts.iter().find(|&&(sw, _)| sw == w).map(|&(_, t)| t)
+    }
+
+    /// The full `(wave, task)` shift schedule.
+    pub fn shifts(&self) -> &[(u64, u64)] {
+        &self.shifts
+    }
+
+    pub fn behavior(&self, user: usize) -> Behavior {
+        if user < self.slow_end {
+            Behavior::Slow
+        } else if user < self.reconnect_end {
+            Behavior::Reconnect
+        } else if user < self.abandon_end {
+            Behavior::Abandon
+        } else {
+            Behavior::Normal
+        }
+    }
+
+    /// Tenant classes configured (0 = fairness reporting off).
+    pub fn tenant_classes(&self) -> usize {
+        self.tenant_classes
+    }
+
+    /// The tenant class of a (possibly generation-bumped) uid.
+    pub fn class_of(&self, uid: u64) -> usize {
+        if self.tenant_classes == 0 {
+            0
+        } else {
+            (uid % self.tenant_classes as u64) as usize
+        }
+    }
+
+    /// Reconnector uid for base user `u` at churn generation `gen`.
+    /// `uid % tenant_classes` equals `u % tenant_classes` for every
+    /// generation (the stride is a multiple of the class count), so
+    /// eviction-fairness accounting follows the user across reconnects.
+    pub fn reconnect_uid(&self, u: usize, gen: u64) -> u64 {
+        u as u64 + gen * self.stride
+    }
+
+    pub fn recovery_threshold(&self) -> f32 {
+        self.recovery_threshold
+    }
+
+    pub fn recovery_window(&self) -> usize {
+        self.recovery_window
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server-side shift tracking
+
+/// One crossed domain shift, as the serve report prints it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShiftReport {
+    /// The logical tick the shift took effect.
+    pub tick: u64,
+    /// The task id the domain shifted to.
+    pub task: u64,
+    /// Windowed accuracy just before the shift.
+    pub pre_acc: f32,
+    /// Ticks from the shift until windowed accuracy re-crossed
+    /// `recovery_threshold × pre_acc` (None = never within the run).
+    pub recovery_ticks: Option<u64>,
+}
+
+/// Scenario section of a serve report: crossed shifts with recovery
+/// times, per-phase accuracy (phase k = between shift k-1 and shift k),
+/// and evictions per tenant class (filled by the store's counters).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ScenarioReport {
+    pub shifts: Vec<ShiftReport>,
+    /// Labeled / correct counts per phase (`shifts.len() + 1` phases).
+    pub phase_labeled: Vec<u64>,
+    pub phase_correct: Vec<u64>,
+    /// Evictions (LRU + TTL) per tenant class (empty = fairness off).
+    pub evictions_by_class: Vec<u64>,
+}
+
+impl ScenarioReport {
+    /// Accuracy of phase `k` (0.0 when it saw no labels).
+    pub fn phase_accuracy(&self, k: usize) -> f32 {
+        let n = self.phase_labeled.get(k).copied().unwrap_or(0);
+        if n == 0 {
+            0.0
+        } else {
+            self.phase_correct[k] as f32 / n as f32
+        }
+    }
+
+    /// Deterministic `key=value` lines appended to
+    /// [`crate::serve::ServeReport::kv_lines`] when a scenario is active.
+    pub fn kv_lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        out.push(format!("shifts={}", self.shifts.len()));
+        let rec: Vec<String> = self
+            .shifts
+            .iter()
+            .map(|s| s.recovery_ticks.map_or_else(|| "-".to_string(), |t| t.to_string()))
+            .collect();
+        out.push(format!("shift_recovery_ticks={}", rec.join(",")));
+        let acc: Vec<String> =
+            (0..self.phase_labeled.len()).map(|k| format!("{:.4}", self.phase_accuracy(k))).collect();
+        out.push(format!("phase_accuracy={}", acc.join(",")));
+        if !self.evictions_by_class.is_empty() {
+            let ev: Vec<String> = self.evictions_by_class.iter().map(u64::to_string).collect();
+            out.push(format!("evictions_by_class={}", ev.join(",")));
+        }
+        out
+    }
+}
+
+/// Tracks the shift schedule against the serve core's labeled-scoring
+/// stream: windowed accuracy, shift boundaries, recovery detection, and
+/// per-phase counters. Reporting plane only — never consulted by
+/// dispatch — but fully deterministic (its input stream is).
+#[derive(Clone, Debug)]
+pub struct ShiftTracker {
+    /// Remaining scheduled shifts (front = next).
+    pending: Vec<(u64, u64)>,
+    threshold: f32,
+    window: usize,
+    /// Sliding outcome window (capped at `window`).
+    ring: std::collections::VecDeque<bool>,
+    crossed: Vec<ShiftReport>,
+    phase_labeled: Vec<u64>,
+    phase_correct: Vec<u64>,
+}
+
+impl ShiftTracker {
+    pub fn new(sched: &ScenarioSchedule) -> ShiftTracker {
+        ShiftTracker {
+            pending: sched.shifts().to_vec(),
+            threshold: sched.recovery_threshold(),
+            window: sched.recovery_window().max(1),
+            ring: std::collections::VecDeque::new(),
+            crossed: Vec::new(),
+            phase_labeled: vec![0],
+            phase_correct: vec![0],
+        }
+    }
+
+    fn windowed_accuracy(&self) -> f32 {
+        if self.ring.is_empty() {
+            return 0.0;
+        }
+        let correct = self.ring.iter().filter(|&&c| c).count();
+        correct as f32 / self.ring.len() as f32
+    }
+
+    /// Call after the logical clock advanced to `tick`. Returns the
+    /// `(task, pre_acc)` of a shift taking effect at this tick (for the
+    /// flight-recorder event), or None.
+    pub fn on_tick(&mut self, tick: u64) -> Option<(u64, f32)> {
+        if self.pending.first().map_or(true, |&(w, _)| w > tick) {
+            return None;
+        }
+        let (_, task) = self.pending.remove(0);
+        let pre_acc = self.windowed_accuracy();
+        self.crossed.push(ShiftReport { tick, task, pre_acc, recovery_ticks: None });
+        self.phase_labeled.push(0);
+        self.phase_correct.push(0);
+        // the window restarts: recovery is judged on purely post-shift
+        // evidence, a full window of it
+        self.ring.clear();
+        Some((task, pre_acc))
+    }
+
+    /// Record one labeled-scoring outcome at the given tick.
+    pub fn observe(&mut self, tick: u64, correct: bool) {
+        let k = self.crossed.len();
+        self.phase_labeled[k] += 1;
+        if correct {
+            self.phase_correct[k] += 1;
+        }
+        if self.ring.len() == self.window {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(correct);
+        if let Some(last) = self.crossed.last_mut() {
+            if last.recovery_ticks.is_none()
+                && self.ring.len() == self.window
+                && self.windowed_accuracy() + 1e-6 >= self.threshold * last.pre_acc
+            {
+                last.recovery_ticks = Some(tick.saturating_sub(last.tick));
+            }
+        }
+    }
+
+    /// Shifts crossed so far.
+    pub fn crossed(&self) -> &[ShiftReport] {
+        &self.crossed
+    }
+
+    /// Shifts crossed that have recovered.
+    pub fn recovered(&self) -> usize {
+        self.crossed.iter().filter(|s| s.recovery_ticks.is_some()).count()
+    }
+
+    /// Current windowed accuracy (gauge mirror material).
+    pub fn window_accuracy(&self) -> f32 {
+        self.windowed_accuracy()
+    }
+
+    /// Assemble the report section (evictions are filled by the caller,
+    /// which owns the session store).
+    pub fn report(&self, evictions_by_class: Vec<u64>) -> ScenarioReport {
+        ScenarioReport {
+            shifts: self.crossed.clone(),
+            phase_labeled: self.phase_labeled.clone(),
+            phase_correct: self.phase_correct.clone(),
+            evictions_by_class,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(phases: &str, shifts: &str) -> ScenarioConfig {
+        ScenarioConfig {
+            phases: phases.to_string(),
+            shifts: shifts.to_string(),
+            ..ScenarioConfig::default()
+        }
+    }
+
+    #[test]
+    fn phases_cycle_and_shape_arrivals() {
+        let sched = ScenarioSchedule::from_config(&cfg("steady:2,flash:1,lull:1", ""), 8).unwrap();
+        let kinds: Vec<PhaseKind> = (0..8).map(|w| sched.phase_at(w)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                PhaseKind::Steady,
+                PhaseKind::Steady,
+                PhaseKind::Flash,
+                PhaseKind::Lull,
+                PhaseKind::Steady,
+                PhaseKind::Steady,
+                PhaseKind::Flash,
+                PhaseKind::Lull,
+            ]
+        );
+        assert_eq!(sched.arrivals(PhaseKind::Steady, 8), 8);
+        assert_eq!(sched.arrivals(PhaseKind::Flash, 8), 32);
+        assert_eq!(sched.arrivals(PhaseKind::Lull, 8), 2);
+        assert_eq!(sched.arrivals(PhaseKind::Lull, 2), 1, "lull floors at one request");
+        // empty phase list = steady forever
+        let steady = ScenarioSchedule::from_config(&cfg("", ""), 8).unwrap();
+        assert_eq!(steady.phase_at(1_000_000), PhaseKind::Steady);
+    }
+
+    #[test]
+    fn behavior_ranges_partition_users() {
+        let c = ScenarioConfig {
+            slow_frac: 0.25,
+            reconnect_frac: 0.25,
+            abandon_frac: 0.25,
+            tenant_classes: 2,
+            ..ScenarioConfig::default()
+        };
+        let sched = ScenarioSchedule::from_config(&c, 8).unwrap();
+        let bs: Vec<Behavior> = (0..8).map(|u| sched.behavior(u)).collect();
+        assert_eq!(bs[..2], [Behavior::Slow, Behavior::Slow]);
+        assert_eq!(bs[2..4], [Behavior::Reconnect, Behavior::Reconnect]);
+        assert_eq!(bs[4..6], [Behavior::Abandon, Behavior::Abandon]);
+        assert_eq!(bs[6..], [Behavior::Normal, Behavior::Normal]);
+    }
+
+    #[test]
+    fn reconnect_uid_keeps_tenant_class_across_generations() {
+        let c = ScenarioConfig { tenant_classes: 3, ..ScenarioConfig::default() };
+        let sched = ScenarioSchedule::from_config(&c, 10).unwrap();
+        for u in 0..10usize {
+            for gen in 0..5u64 {
+                let uid = sched.reconnect_uid(u, gen);
+                assert_eq!(sched.class_of(uid), u % 3, "u={u} gen={gen} uid={uid}");
+                if gen > 0 {
+                    assert_ne!(uid, u as u64, "a reconnect generation must re-key the uid");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn task_permutations_are_stable_and_task0_is_identity() {
+        assert!(task_permutation(42, 0, 16).is_none());
+        let a = task_permutation(42, 3, 16).unwrap();
+        let b = task_permutation(42, 3, 16).unwrap();
+        assert_eq!(a, b, "same seed+task must yield the same permutation");
+        let c = task_permutation(42, 4, 16).unwrap();
+        assert_ne!(a, c, "different tasks must yield different permutations");
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<usize>>(), "must be a permutation");
+    }
+
+    #[test]
+    fn shift_tracker_detects_recovery_after_a_dip() {
+        let mut c = cfg("", "10:1");
+        c.recovery_window = 4;
+        c.recovery_threshold = 0.9;
+        let sched = ScenarioSchedule::from_config(&c, 8).unwrap();
+        let mut tr = ShiftTracker::new(&sched);
+        // pre-shift: perfect accuracy
+        for t in 0..10 {
+            assert!(tr.on_tick(t).is_none());
+            tr.observe(t, true);
+        }
+        let (task, pre) = tr.on_tick(10).expect("shift at tick 10");
+        assert_eq!(task, 1);
+        assert!((pre - 1.0).abs() < 1e-6);
+        // post-shift: a dip, then recovery
+        for t in 10..14 {
+            tr.observe(t, false);
+        }
+        assert_eq!(tr.recovered(), 0, "all-wrong window must not count as recovered");
+        for t in 14..18 {
+            tr.observe(t, true);
+        }
+        assert_eq!(tr.recovered(), 1);
+        let rep = tr.report(vec![]);
+        assert_eq!(rep.shifts.len(), 1);
+        assert_eq!(rep.shifts[0].recovery_ticks, Some(7), "window refills 4 ticks into 14..18");
+        assert_eq!(rep.phase_labeled, vec![10, 8]);
+        assert_eq!(rep.phase_correct, vec![10, 4]);
+        let lines = rep.kv_lines();
+        assert!(lines.contains(&"shifts=1".to_string()));
+        assert!(lines.contains(&"shift_recovery_ticks=7".to_string()));
+        assert!(lines.contains(&"phase_accuracy=1.0000,0.5000".to_string()));
+    }
+
+    #[test]
+    fn unrecovered_shift_prints_a_dash() {
+        let mut c = cfg("", "2:1");
+        c.recovery_window = 8;
+        let sched = ScenarioSchedule::from_config(&c, 4).unwrap();
+        let mut tr = ShiftTracker::new(&sched);
+        tr.observe(0, true);
+        tr.observe(1, true);
+        tr.on_tick(2).unwrap();
+        tr.observe(2, false);
+        let rep = tr.report(vec![3, 1]);
+        assert_eq!(rep.shifts[0].recovery_ticks, None);
+        let lines = rep.kv_lines();
+        assert!(lines.contains(&"shift_recovery_ticks=-".to_string()));
+        assert!(lines.contains(&"evictions_by_class=3,1".to_string()));
+    }
+}

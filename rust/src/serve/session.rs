@@ -119,6 +119,18 @@ pub struct SessionStore {
     /// / TTL expire). Timing-plane only: recording never changes a store
     /// decision, so attaching one cannot perturb the serve signature.
     recorder: Option<Arc<FlightRecorder>>,
+    /// Tenant classes for eviction-fairness accounting (scenario runs;
+    /// 0 disables). Reporting-plane only: the class of a session never
+    /// influences *which* session is evicted or expired, and none of
+    /// this state is checkpointed — [`SessionStats`] stays exactly the
+    /// serialized shape it has always been.
+    tenant_classes: usize,
+    /// session id → tenant class, registered by the frontend at bind
+    /// time (the store itself cannot derive a class from an opaque id).
+    class_of: BTreeMap<u64, usize>,
+    /// Involuntary removals (LRU evict + TTL expire + inject evict) per
+    /// tenant class, for the scenario report's fairness line.
+    evictions_by_class: Vec<u64>,
     pub stats: SessionStats,
 }
 
@@ -139,6 +151,9 @@ impl SessionStore {
             dirty: BTreeSet::new(),
             removed: BTreeSet::new(),
             recorder: None,
+            tenant_classes: 0,
+            class_of: BTreeMap::new(),
+            evictions_by_class: Vec::new(),
             stats: SessionStats::default(),
         }
     }
@@ -146,6 +161,40 @@ impl SessionStore {
     /// Attach (or detach) the flight recorder lifecycle events go to.
     pub fn set_recorder(&mut self, recorder: Option<Arc<FlightRecorder>>) {
         self.recorder = recorder;
+    }
+
+    /// Enable per-class eviction accounting over `n` tenant classes
+    /// (0 disables). Counters reset: the fairness report covers the run
+    /// that configured it.
+    pub fn set_tenant_classes(&mut self, n: usize) {
+        self.tenant_classes = n;
+        self.class_of.clear();
+        self.evictions_by_class = vec![0; n];
+    }
+
+    /// Tag `id` with its tenant class (ignored unless
+    /// [`SessionStore::set_tenant_classes`] enabled accounting and the
+    /// class is in range). Safe to call repeatedly — re-binding after an
+    /// eviction simply re-registers.
+    pub fn register_class(&mut self, id: u64, class: usize) {
+        if self.tenant_classes > 0 && class < self.tenant_classes {
+            self.class_of.insert(id, class);
+        }
+    }
+
+    /// Involuntary removals per tenant class since accounting was
+    /// enabled; empty when disabled.
+    pub fn evictions_by_class(&self) -> &[u64] {
+        &self.evictions_by_class
+    }
+
+    /// Account an involuntary removal against the victim's tenant class
+    /// (no-op for untagged sessions). Must run *before* the slot is
+    /// removed only by convention — it reads nothing from the slab.
+    fn note_eviction(&mut self, id: u64) {
+        if let Some(class) = self.class_of.remove(&id) {
+            self.evictions_by_class[class] += 1;
+        }
     }
 
     fn event(&self, tick: u64, kind: &'static str, id: u64) {
@@ -211,6 +260,14 @@ impl SessionStore {
     /// Expire sessions idle for more than `ttl` ticks. The LRU order is
     /// also last-tick order (touches are monotone in time), so only the
     /// map front needs scanning. No-op when TTL is disabled.
+    ///
+    /// Boundary invariant (pinned by `ttl_boundary_is_exact_*` below): a
+    /// session whose idle gap is *exactly* `ttl` survives; `ttl + 1`
+    /// expires. A session touched at the sweep's own tick has gap 0 and
+    /// can never expire, even when the clock jumped many ticks at once
+    /// (coalesced waves) — the `<=` comparison plus the front-only scan
+    /// is safe precisely because touches are monotone in tick order, so
+    /// the first survivor proves everything behind it survives too.
     pub fn expire_idle(&mut self, now_tick: u64) -> usize {
         if self.ttl == 0 {
             return 0;
@@ -221,6 +278,7 @@ impl SessionStore {
                 break;
             }
             let id = self.slot(idx).id;
+            self.note_eviction(id);
             self.remove_slot(idx);
             self.stats.expired_ttl += 1;
             self.event(now_tick, "session_expire_ttl", id);
@@ -245,6 +303,7 @@ impl SessionStore {
         if self.index.len() >= self.capacity {
             let (&_, &victim) = self.lru.iter().next().expect("capacity >= 1 but LRU empty");
             let victim_id = self.slot(victim).id;
+            self.note_eviction(victim_id);
             self.remove_slot(victim);
             self.stats.evicted_lru += 1;
             self.event(now_tick, "session_evict_lru", victim_id);
@@ -401,6 +460,9 @@ impl SessionStore {
             steps: s.steps,
         };
         self.event(snap.last_tick, "session_migrate_out", id);
+        // a migration is voluntary — it never counts against the
+        // session's tenant class, but the tag leaves with the session
+        self.class_of.remove(&id);
         self.remove_slot(idx);
         Some(snap)
     }
@@ -422,6 +484,7 @@ impl SessionStore {
         if self.index.len() >= self.capacity {
             let (&_, &victim) = self.lru.iter().next().expect("capacity >= 1 but LRU empty");
             let victim_id = self.slot(victim).id;
+            self.note_eviction(victim_id);
             self.remove_slot(victim);
             self.stats.evicted_lru += 1;
             self.event(now_tick, "session_evict_lru", victim_id);
@@ -473,6 +536,9 @@ impl SessionStore {
         self.lru.clear();
         self.dirty.clear();
         self.removed.clear();
+        // class tags are transport-layer attachments, not durable state:
+        // restored sessions re-register at their next bind
+        self.class_of.clear();
         self.stats = stats;
         let mut snaps = snaps;
         snaps.sort_by_key(|s| s.last_touch);
@@ -545,6 +611,92 @@ mod tests {
         assert_eq!(s.expire_idle(16), 1, "session 2 idle for 11 > 10 ticks");
         assert_eq!(s.stats.expired_ttl, 2);
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn ttl_boundary_is_exact_at_ttl_and_ttl_plus_one() {
+        // idle gap == ttl survives; == ttl + 1 expires; gap 0 (touched
+        // at the sweep's own tick) can never expire. This pins the `<=`
+        // in expire_idle against an off-by-one regression.
+        let mut s = store(8, 10);
+        s.get_or_create(1, 0);
+        assert_eq!(s.expire_idle(10), 0, "gap == ttl must survive");
+        assert!(s.contains(1));
+        assert_eq!(s.expire_idle(11), 1, "gap == ttl + 1 must expire");
+        s.get_or_create(2, 20);
+        assert_eq!(s.expire_idle(20), 0, "same-tick touch has gap 0");
+        assert!(s.contains(2));
+    }
+
+    #[test]
+    fn ttl_boundary_survives_coalesced_tick_jumps() {
+        // a flash crowd can coalesce many waves into one sweep: the clock
+        // jumps far past several sessions' deadlines at once. The
+        // front-only scan must still expire every stale session and must
+        // not touch a session refreshed at the jump tick itself.
+        let mut s = store(8, 10);
+        s.get_or_create(1, 0);
+        s.get_or_create(2, 3);
+        s.get_or_create(3, 5);
+        s.get_or_create(3, 40); // refreshed at the sweep tick
+        s.get_or_create(4, 40); // created at the sweep tick
+        assert_eq!(s.expire_idle(40), 2, "both stale sessions go in one sweep");
+        assert!(!s.contains(1) && !s.contains(2));
+        assert!(s.contains(3) && s.contains(4), "just-touched sessions never expire");
+        assert_eq!(s.stats.expired_ttl, 2);
+        // the early break is safe: a *refresh* moves the session to the
+        // LRU back, so the front-of-map survivor really does shield only
+        // younger-gap sessions behind it
+        let mut t = store(8, 10);
+        t.get_or_create(1, 0);
+        t.get_or_create(2, 1);
+        t.get_or_create(1, 9); // 1 created first but refreshed: now newest
+        assert_eq!(t.expire_idle(12), 1, "only 2 is stale");
+        assert!(t.contains(1) && !t.contains(2));
+    }
+
+    #[test]
+    fn evictions_are_counted_per_tenant_class() {
+        let mut s = store(2, 10);
+        s.set_tenant_classes(2);
+        s.get_or_create(10, 0);
+        s.register_class(10, 0);
+        s.get_or_create(20, 1);
+        s.register_class(20, 1);
+        s.get_or_create(30, 2); // LRU-evicts 10 (class 0)
+        s.register_class(30, 0);
+        assert_eq!(s.evictions_by_class(), &[1, 0]);
+        s.get_or_create(30, 15);
+        // 20 idle 24 > 10 expires (class 1); 30 idle exactly 10 survives
+        s.expire_idle(25);
+        assert_eq!(s.evictions_by_class(), &[1, 1]);
+        // inject-evict counts too: 40 arrives at capacity, 30 (class 0)
+        // is the LRU victim
+        s.get_or_create(99, 27); // untagged: its eviction counts nowhere
+        let snap = SessionSnapshot {
+            id: 40,
+            h: vec![0.0; 4],
+            hist: vec![0.0; 15],
+            hist_rows: 0,
+            hist_head: 0,
+            last_tick: 27,
+            last_touch: 0,
+            steps: 0,
+        };
+        s.inject(snap, 28); // evicts 30 (class 0)
+        assert_eq!(s.evictions_by_class(), &[2, 1]);
+        // out-of-range class and disabled accounting are inert
+        s.register_class(40, 7);
+        let mut off = store(2, 0);
+        off.register_class(1, 0);
+        assert!(off.evictions_by_class().is_empty());
+        // migration out is voluntary: no class is charged
+        let mut m = store(2, 0);
+        m.set_tenant_classes(1);
+        m.get_or_create(5, 0);
+        m.register_class(5, 0);
+        let _ = m.extract(5);
+        assert_eq!(m.evictions_by_class(), &[0]);
     }
 
     #[test]

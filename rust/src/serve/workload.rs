@@ -8,9 +8,21 @@
 //! the same seed produces the same request sequence whether the requests
 //! travel through a function call or a socket — the property the
 //! loopback-equivalence test (`tests/net_roundtrip.rs`) asserts.
+//!
+//! With a scenario attached ([`SyntheticWorkload::with_scenario`],
+//! DESIGN.md §16) the stream additionally carries arrival-curve shaping,
+//! client-behavior mixes and a permuted-task domain-shift schedule — all
+//! of it folded into the same deterministic state machine, so
+//! [`SyntheticWorkload::skip`] remains exactly `n` discarded calls to
+//! [`SyntheticWorkload::next`] (phase, shift and churn state fast-forward
+//! with the RNG streams; pinned by a proptest in `tests/proptests.rs`).
 
-use crate::config::NetConfig;
+use anyhow::Result;
+
+use crate::config::{NetConfig, ScenarioConfig};
 use crate::rng::{GaussianRng, SplitMix64};
+
+use super::scenario::{task_permutation, Behavior, PhaseKind, ScenarioSchedule};
 
 /// `sessions` synthetic users, each streaming timestep rows of a
 /// class-conditional pattern (the class is the user's fixed label). Every
@@ -23,12 +35,30 @@ pub struct SyntheticWorkload {
     pick_rng: GaussianRng,
     nt: usize,
     nx: usize,
+    scenario: Option<ScenarioState>,
 }
 
 struct UserState {
     label: usize,
     rng: GaussianRng,
     step_in_seq: usize,
+}
+
+/// Scenario position: which wave we are in, how many requests it still
+/// admits, the active input permutation, and the churn generation. Pure
+/// function of (config, seed, requests issued) — no hidden randomness.
+struct ScenarioState {
+    sched: ScenarioSchedule,
+    seed: u64,
+    base_arrivals: usize,
+    wave: u64,
+    issued_in_wave: usize,
+    quota: usize,
+    /// Active input permutation (None = identity / task 0).
+    perm: Option<Vec<usize>>,
+    /// Churn generation: bumped on entry to each churn wave;
+    /// reconnectors' uids re-key with it.
+    gen: u64,
 }
 
 impl SyntheticWorkload {
@@ -50,27 +80,148 @@ impl SyntheticWorkload {
             pick_rng: GaussianRng::new(seed ^ 0x71CC_E7),
             nt: net.nt,
             nx: net.nx,
+            scenario: None,
         }
+    }
+
+    /// A workload with a scenario attached. `base_arrivals` is the
+    /// steady-phase wave size the arrival curve shapes (`flash` waves
+    /// multiply it, `lull` waves divide it). With a default (disabled)
+    /// scenario config this is exactly [`SyntheticWorkload::new`].
+    pub fn with_scenario(
+        net: &NetConfig,
+        sessions: usize,
+        seed: u64,
+        cfg: &ScenarioConfig,
+        base_arrivals: usize,
+    ) -> Result<SyntheticWorkload> {
+        let mut w = SyntheticWorkload::new(net, sessions, seed);
+        if cfg.enabled() {
+            let sched = ScenarioSchedule::from_config(cfg, sessions)?;
+            let quota = sched.arrivals(sched.phase_at(0), base_arrivals);
+            let perm = sched.shift_at(0).and_then(|task| task_permutation(seed, task, net.nx));
+            w.scenario = Some(ScenarioState {
+                sched,
+                seed,
+                base_arrivals: base_arrivals.max(1),
+                wave: 0,
+                issued_in_wave: 0,
+                quota,
+                perm,
+                gen: 0,
+            });
+        }
+        Ok(w)
+    }
+
+    /// Requests the current wave still admits (None = no scenario; use
+    /// the caller's flat arrival rate). The in-process driver and
+    /// `m2ru connect` size each wave from this, so the arrival curve and
+    /// the workload's internal wave position cannot drift apart.
+    pub fn wave_quota(&self) -> Option<usize> {
+        self.scenario.as_ref().map(|sc| sc.quota - sc.issued_in_wave)
+    }
+
+    /// Tenant classes configured on the scenario (0 = fairness off).
+    pub fn tenant_classes(&self) -> usize {
+        self.scenario.as_ref().map_or(0, |sc| sc.sched.tenant_classes())
+    }
+
+    /// The tenant class of a uid this workload returned (0 when
+    /// fairness reporting is off).
+    pub fn class_of(&self, uid: u64) -> usize {
+        self.scenario.as_ref().map_or(0, |sc| sc.sched.class_of(uid))
+    }
+
+    /// Draw the next user index, honoring slow readers: a slow user
+    /// emits only on even waves, so on odd waves their draws are
+    /// redrawn. The redraw loop is bounded (a config where *every* user
+    /// is slow would otherwise never terminate on odd waves) — past the
+    /// bound the draw is accepted as-is, deterministically.
+    fn pick_user(&mut self) -> usize {
+        let n = self.users.len();
+        let Some(sc) = &self.scenario else { return self.pick_rng.below(n) };
+        let odd_wave = sc.wave % 2 == 1;
+        for _ in 0..8 * n {
+            let u = self.pick_rng.below(n);
+            if odd_wave && sc.sched.behavior(u) == Behavior::Slow {
+                continue;
+            }
+            return u;
+        }
+        self.pick_rng.below(n)
     }
 
     /// Next request: a uniformly drawn user streams one timestep; the
     /// user's label rides along on the final step of each nt-window.
-    /// Returns `(user index, features, label)`.
+    /// Returns `(user id, features, label)` — with a scenario attached
+    /// the user id may be a reconnector's generation-bumped uid, the
+    /// features pass through the active task permutation, and abandoners
+    /// never complete a labeled window.
     pub fn next(&mut self) -> (u64, Vec<f32>, Option<usize>) {
-        let u = self.pick_rng.below(self.users.len());
+        let u = self.pick_user();
+        let behavior =
+            self.scenario.as_ref().map_or(Behavior::Normal, |sc| sc.sched.behavior(u));
+        let uid = match (&self.scenario, behavior) {
+            (Some(sc), Behavior::Reconnect) => sc.sched.reconnect_uid(u, sc.gen),
+            _ => u as u64,
+        };
         let user = &mut self.users[u];
         let proto = &self.protos[user.label];
-        let x: Vec<f32> = (0..self.nx)
+        let mut x: Vec<f32> = (0..self.nx)
             .map(|j| (0.25 * user.rng.normal() + 0.75 * proto[j]).clamp(-1.0, 1.0))
             .collect();
         user.step_in_seq += 1;
-        let label = (user.step_in_seq % self.nt == 0).then_some(user.label);
-        (u as u64, x, label)
+        let mut label = (user.step_in_seq % self.nt == 0).then_some(user.label);
+        if behavior == Behavior::Abandon && label.is_some() {
+            // abandons just before completing the window: the step goes
+            // out unlabeled and the next step starts a fresh sequence
+            label = None;
+            user.step_in_seq = 0;
+        }
+        if let Some(sc) = &self.scenario {
+            if let Some(perm) = &sc.perm {
+                x = perm.iter().map(|&j| x[j]).collect();
+            }
+        }
+        self.account_issued();
+        (uid, x, label)
+    }
+
+    /// Count one issued request against the current wave; on exhausting
+    /// the wave's quota, enter the next wave (new quota, any scheduled
+    /// shift, churn-generation bump).
+    fn account_issued(&mut self) {
+        let Some(sc) = &mut self.scenario else { return };
+        sc.issued_in_wave += 1;
+        if sc.issued_in_wave < sc.quota {
+            return;
+        }
+        sc.wave += 1;
+        sc.issued_in_wave = 0;
+        let kind = sc.sched.phase_at(sc.wave);
+        sc.quota = sc.sched.arrivals(kind, sc.base_arrivals);
+        if let Some(task) = sc.sched.shift_at(sc.wave) {
+            sc.perm = task_permutation(sc.seed, task, self.nx);
+        }
+        if kind == PhaseKind::Churn {
+            sc.gen += 1;
+            // reconnected users start fresh sequences in their new
+            // sessions — their old windows died with the old session
+            for u in 0..self.users.len() {
+                if sc.sched.behavior(u) == Behavior::Reconnect {
+                    self.users[u].step_in_seq = 0;
+                }
+            }
+        }
     }
 
     /// Fast-forward the generator past `n` requests, discarding them —
     /// how a load generator resumes a workload against a server restarted
-    /// from a checkpoint (`m2ru connect --skip N`).
+    /// from a checkpoint (`m2ru connect --skip N`). Scenario state (wave
+    /// position, active shift permutation, churn generation) advances
+    /// with the RNG streams, since each discarded request goes through
+    /// the full [`SyntheticWorkload::next`] path.
     pub fn skip(&mut self, n: u64) {
         for _ in 0..n {
             let _ = self.next();
@@ -117,5 +268,127 @@ mod tests {
             per_user_steps[u as usize] += 1;
             assert_eq!(label.is_some(), per_user_steps[u as usize] % net.nt == 0);
         }
+    }
+
+    fn scenario_cfg() -> ScenarioConfig {
+        ScenarioConfig {
+            phases: "steady:4,flash:2,lull:2,churn:3".to_string(),
+            shifts: "6:1,12:0".to_string(),
+            slow_frac: 0.25,
+            reconnect_frac: 0.25,
+            abandon_frac: 0.125,
+            tenant_classes: 2,
+            ..ScenarioConfig::default()
+        }
+    }
+
+    #[test]
+    fn disabled_scenario_is_exactly_the_plain_workload() {
+        let net = NetConfig::SMALL;
+        let mut plain = SyntheticWorkload::new(&net, 8, 11);
+        let mut scen =
+            SyntheticWorkload::with_scenario(&net, 8, 11, &ScenarioConfig::default(), 4).unwrap();
+        assert!(scen.wave_quota().is_none());
+        for _ in 0..60 {
+            assert_eq!(plain.next(), scen.next());
+        }
+    }
+
+    #[test]
+    fn scenario_same_seed_same_stream() {
+        let net = NetConfig::SMALL;
+        let cfg = scenario_cfg();
+        let mut a = SyntheticWorkload::with_scenario(&net, 8, 42, &cfg, 4).unwrap();
+        let mut b = SyntheticWorkload::with_scenario(&net, 8, 42, &cfg, 4).unwrap();
+        for _ in 0..200 {
+            assert_eq!(a.wave_quota(), b.wave_quota());
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn scenario_skip_equals_discarding() {
+        let net = NetConfig::SMALL;
+        let cfg = scenario_cfg();
+        let mut a = SyntheticWorkload::with_scenario(&net, 8, 7, &cfg, 4).unwrap();
+        let mut b = SyntheticWorkload::with_scenario(&net, 8, 7, &cfg, 4).unwrap();
+        for _ in 0..57 {
+            let _ = a.next();
+        }
+        b.skip(57);
+        assert_eq!(a.wave_quota(), b.wave_quota(), "skip must fast-forward wave state");
+        for _ in 0..40 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn arrival_curve_follows_the_phase_schedule() {
+        let net = NetConfig::SMALL;
+        let cfg = ScenarioConfig {
+            phases: "steady:2,flash:1,lull:1".to_string(),
+            flash_mult: 3,
+            lull_div: 2,
+            ..ScenarioConfig::default()
+        };
+        let mut w = SyntheticWorkload::with_scenario(&net, 8, 5, &cfg, 4).unwrap();
+        let mut quotas = Vec::new();
+        for _ in 0..8 {
+            let q = w.wave_quota().unwrap();
+            quotas.push(q);
+            for _ in 0..q {
+                let _ = w.next();
+            }
+        }
+        assert_eq!(quotas, vec![4, 4, 12, 2, 4, 4, 12, 2], "the phase cycle repeats");
+    }
+
+    #[test]
+    fn shift_permutes_features_and_returning_to_task0_restores_identity() {
+        let net = NetConfig::SMALL;
+        // one user, quota 1 per wave: wave index == request index
+        let cfg = ScenarioConfig { shifts: "3:1,6:0".to_string(), ..ScenarioConfig::default() };
+        let mut plain = SyntheticWorkload::new(&net, 1, 9);
+        let mut scen = SyntheticWorkload::with_scenario(&net, 1, 9, &cfg, 1).unwrap();
+        let perm = crate::serve::scenario::task_permutation(9, 1, net.nx).unwrap();
+        for i in 0..9u64 {
+            let (_, base_x, l1) = plain.next();
+            let (_, x, l2) = scen.next();
+            assert_eq!(l1, l2);
+            if (3..6).contains(&i) {
+                let want: Vec<f32> = perm.iter().map(|&j| base_x[j]).collect();
+                assert_eq!(x, want, "wave {i} must be task-1 permuted");
+                assert_ne!(x, base_x, "the permutation must actually move features");
+            } else {
+                assert_eq!(x, base_x, "wave {i} must be the identity domain");
+            }
+        }
+    }
+
+    #[test]
+    fn abandoners_never_emit_labels_and_reconnectors_rekey_under_churn() {
+        let net = NetConfig::SMALL;
+        let cfg = ScenarioConfig {
+            phases: "churn:4".to_string(),
+            reconnect_frac: 0.5,
+            abandon_frac: 0.5,
+            ..ScenarioConfig::default()
+        };
+        let sessions = 8;
+        let mut w = SyntheticWorkload::with_scenario(&net, sessions, 3, &cfg, 4).unwrap();
+        let mut uids = std::collections::BTreeSet::new();
+        for _ in 0..200 {
+            let (uid, _, label) = w.next();
+            // users [4, 8) are abandoners (behavior ranges: reconnectors
+            // first), and abandoners keep their base uid
+            if (4..8).contains(&uid) {
+                assert_eq!(label, None, "abandoners must never complete a window");
+            }
+            uids.insert(uid);
+        }
+        assert!(
+            uids.iter().any(|&u| u >= sessions as u64),
+            "churn waves must produce generation-bumped reconnector uids: {uids:?}"
+        );
     }
 }

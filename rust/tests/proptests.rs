@@ -4,6 +4,7 @@
 //! mini-framework (seeded generators + shrinking).
 
 use m2ru::codec::{LeReader, LeWriter};
+use m2ru::config::{NetConfig, ScenarioConfig};
 use m2ru::coordinator::{make_eval_batches, make_seq_batch, TileScheduler, TrainBatcher};
 use m2ru::data::Example;
 use m2ru::linalg::Mat;
@@ -16,7 +17,7 @@ use m2ru::quant::{
 };
 use m2ru::replay::{ReplayBuffer, ReservoirDecision, ReservoirSampler};
 use m2ru::rng::GaussianRng;
-use m2ru::serve::{decode_parcel, encode_parcel, SessionSnapshot};
+use m2ru::serve::{decode_parcel, encode_parcel, SessionSnapshot, SyntheticWorkload};
 
 // --- replay / reservoir ----------------------------------------------------
 
@@ -82,6 +83,76 @@ fn prop_replay_roundtrip_error_bounded_by_lsb() {
         for (a, b) in e.features.iter().zip(v) {
             if (a - b).abs() > 1.0 / 16.0 + 1e-5 {
                 return Err(format!("roundtrip err {} vs {}", a, b));
+            }
+        }
+        Ok(())
+    });
+}
+
+// --- scenario workload -------------------------------------------------------
+
+/// A random (but always valid) scenario config plus a session count,
+/// seed and skip point — the input domain of the skip≡discard law.
+struct ScenarioGen;
+
+impl Gen for ScenarioGen {
+    type Value = (ScenarioConfig, usize, u64, usize);
+    fn generate(&self, rng: &mut GaussianRng) -> Self::Value {
+        let phases = [
+            "",
+            "steady:3,flash:2",
+            "steady:2,lull:2,churn:3",
+            "flash:1,churn:2",
+            "steady:4,flash:2,lull:2,churn:3",
+        ];
+        let shifts = ["", "5:1", "4:1,9:0", "3:2,7:1,12:0"];
+        let cfg = ScenarioConfig {
+            phases: phases[rng.below(phases.len())].to_string(),
+            shifts: shifts[rng.below(shifts.len())].to_string(),
+            flash_mult: 1 + rng.below(4),
+            lull_div: 1 + rng.below(4),
+            // fractions sum to at most 1.0 by construction
+            slow_frac: 0.25 * rng.below(3) as f32,
+            reconnect_frac: 0.25 * rng.below(2) as f32,
+            abandon_frac: 0.25 * rng.below(2) as f32,
+            tenant_classes: rng.below(4),
+            ..ScenarioConfig::default()
+        };
+        (cfg, 2 + rng.below(9), U64Any.generate(rng), rng.below(120))
+    }
+}
+
+#[test]
+fn prop_scenario_skip_equals_discarding_nexts() {
+    // ∀ scenario configs, seeds and skip points: `skip(n)` leaves the
+    // workload in exactly the state `n` discarded `next()` calls do —
+    // wave position, quota, shift permutation and churn generation
+    // included — so a resumed load generator (`m2ru connect --skip N`)
+    // continues any storm where an uninterrupted one would be.
+    assert_prop(33, 40, &ScenarioGen, |(cfg, sessions, seed, skip)| {
+        let net = NetConfig::SMALL;
+        let mk = || {
+            SyntheticWorkload::with_scenario(&net, *sessions, *seed, cfg, 4)
+                .map_err(|e| format!("config rejected: {e}"))
+        };
+        let mut a = mk()?;
+        let mut b = mk()?;
+        for _ in 0..*skip {
+            let _ = a.next();
+        }
+        b.skip(*skip as u64);
+        for i in 0..40 {
+            if a.wave_quota() != b.wave_quota() {
+                return Err(format!(
+                    "wave state diverged {} steps past the skip: {:?} vs {:?}",
+                    i,
+                    a.wave_quota(),
+                    b.wave_quota()
+                ));
+            }
+            let (x, y) = (a.next(), b.next());
+            if x != y {
+                return Err(format!("stream diverged {i} steps past the skip"));
             }
         }
         Ok(())

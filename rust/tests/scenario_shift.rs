@@ -1,0 +1,274 @@
+//! Scenario-fleet pins (DESIGN.md §16): the domain-shift + traffic-storm
+//! layer must be a pure function of (config, seed) — the same scenario
+//! run yields the same per-session response streams and the same report
+//! section no matter how many workers or shards serve it — and the
+//! replay buffer must be what makes a revisited domain survive the
+//! interlude. Plus regression pins for the churn bugfixes that rode
+//! along: the replay segment cap under a task flood, the TTL sweep's
+//! exact boundary under coalesced tick jumps, and `skip(n)` fast-
+//! forwarding the scenario state machine.
+
+use m2ru::config::{NetConfig, RunConfig, ScenarioConfig, ServeConfig};
+use m2ru::net::{run_connect, ConnectOptions, NetServeOptions, NetServer, RouterServeOptions, RouterServer};
+use m2ru::replay::ReplayBuffer;
+use m2ru::rng::GaussianRng;
+use m2ru::serve::{run_serve, ServeOptions, SessionStore, SyntheticWorkload};
+
+const SESSIONS: usize = 12;
+const ARRIVALS: usize = 6;
+
+/// The full storm: every phase kind, every behavior, a shift revisit,
+/// and tenant classes — the scenario the invariance claims are pinned
+/// against.
+fn storm() -> ScenarioConfig {
+    ScenarioConfig {
+        phases: "steady:3,flash:2,lull:2,churn:3".to_string(),
+        shifts: "8:1,20:0".to_string(),
+        slow_frac: 0.25,
+        reconnect_frac: 0.25,
+        abandon_frac: 0.125,
+        tenant_classes: 3,
+        recovery_threshold: 0.7,
+        recovery_window: 10,
+        ..ScenarioConfig::default()
+    }
+}
+
+fn run_cfg(seed: u64, update_every: usize, capacity: usize) -> RunConfig {
+    let mut run = RunConfig::default();
+    run.seed = seed;
+    run.backend = "dense".to_string();
+    run.serve = ServeConfig {
+        max_batch: 8,
+        max_wait: 1,
+        capacity,
+        ttl: 0,
+        update_every,
+        replay_cap: 64,
+        replay_mix: 0.5,
+        ..ServeConfig::default()
+    };
+    run
+}
+
+// ------------------------------------------------ determinism invariance
+
+#[test]
+fn scenario_signature_is_invariant_across_worker_counts() {
+    // learning on, evictions on (capacity 8 < the churned uid
+    // population): the serve signature and the whole scenario report
+    // section must not depend on the worker count
+    let mut reference = None;
+    for workers in [1usize, 2, 4] {
+        let mut run = run_cfg(9, 4, 8);
+        run.workers = workers;
+        run.scenario = storm();
+        let opts = ServeOptions {
+            requests: 400,
+            sessions: SESSIONS,
+            arrivals: ARRIVALS,
+            ..ServeOptions::new(NetConfig::SMALL, run)
+        };
+        let rep = run_serve(&opts).unwrap();
+        let sc = rep.scenario.clone().expect("scenario section must be present");
+        assert_eq!(sc.shifts.len(), 2, "both scheduled shifts must be crossed");
+        assert_eq!(sc.evictions_by_class.len(), 3);
+        assert!(
+            sc.evictions_by_class.iter().sum::<u64>() > 0,
+            "capacity 8 under churn must evict someone: {:?}",
+            sc.evictions_by_class
+        );
+        match &reference {
+            None => reference = Some((rep.signature(), sc)),
+            Some((sig, want_sc)) => {
+                assert_eq!(&rep.signature(), sig, "workers={workers} changed the signature");
+                assert_eq!(&sc, want_sc, "workers={workers} changed the scenario section");
+            }
+        }
+    }
+}
+
+#[test]
+fn scenario_run_is_invariant_across_shard_counts_over_tcp() {
+    // frozen weights (update_every=0), no evictions (capacity 64): the
+    // client-side per-session signature must be identical against one
+    // plain server and against a 2-shard in-process router fleet, and
+    // repeatable run-to-run — the CI smoke leg's contract.
+    let seed = 13;
+    let connect = |addr: String| {
+        let mut c = ConnectOptions::new(addr, NetConfig::SMALL);
+        c.requests = 240;
+        c.sessions = SESSIONS;
+        c.arrivals = ARRIVALS;
+        c.seed = seed;
+        c.scenario = storm();
+        run_connect(&c).unwrap()
+    };
+    let serve_run = || {
+        let mut run = run_cfg(seed, 0, 64);
+        run.scenario = storm();
+        run.net.listen = "127.0.0.1:0".to_string();
+        run
+    };
+
+    let mut sigs = Vec::new();
+    for round in 0..2 {
+        let server = NetServer::bind(NetServeOptions::new(
+            NetConfig::SMALL,
+            serve_run(),
+            "127.0.0.1:0",
+        ))
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.run());
+        let rep = connect(addr);
+        assert_eq!(rep.completed.len(), 240);
+        assert!(
+            rep.stats_text.contains("shift_recovery_ticks="),
+            "round {round}: scenario keys must reach the Stats frame:\n{}",
+            rep.stats_text
+        );
+        assert!(rep.stats_text.contains("evictions_by_class=0,0,0"));
+        handle.join().unwrap().unwrap();
+        sigs.push(rep.session_signature());
+    }
+    assert_eq!(sigs[0], sigs[1], "two identical scenario runs must sign identically");
+
+    let mut router_run = serve_run();
+    router_run.router.shards = 2;
+    let server = RouterServer::bind(RouterServeOptions {
+        net: NetConfig::SMALL,
+        run: router_run,
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    let rep = connect(addr);
+    assert_eq!(rep.completed.len(), 240);
+    assert!(
+        rep.stats_text.contains("shift_recovery_ticks="),
+        "the fleet Stats rollup must carry the scenario keys:\n{}",
+        rep.stats_text
+    );
+    let router_rep = handle.join().unwrap().unwrap();
+    assert!(
+        router_rep.shard_routed.iter().filter(|&&r| r > 0).count() > 1,
+        "the storm must actually spread across shards: {:?}",
+        router_rep.shard_routed
+    );
+    assert_eq!(
+        rep.session_signature(),
+        sigs[0],
+        "a 2-shard fleet must serve the storm bitwise-identically to one server"
+    );
+}
+
+// ------------------------------------------------ accuracy under shift
+
+#[test]
+fn replay_is_what_retains_a_revisited_domain() {
+    // A→B→A: learn the identity domain, shift to the permuted task, then
+    // return. With replay mixed into every online commit the A-return
+    // phase inherits retained competence; with replay off the B
+    // interlude overwrites it (catastrophic forgetting) and the final
+    // phase scores strictly worse. Both runs are deterministic, so this
+    // is a fixed-point gate, not a statistical one.
+    let ablate = |replay_mix: f32| {
+        let mut run = run_cfg(21, 2, 64);
+        run.serve.replay_mix = replay_mix;
+        run.scenario = ScenarioConfig {
+            shifts: "40:1,80:0".to_string(),
+            recovery_threshold: 0.7,
+            recovery_window: 10,
+            ..ScenarioConfig::default()
+        };
+        let opts = ServeOptions {
+            requests: 960, // 120 waves of 8
+            sessions: 8,
+            arrivals: 8,
+            ..ServeOptions::new(NetConfig::SMALL, run)
+        };
+        let rep = run_serve(&opts).unwrap();
+        rep.scenario.clone().expect("scenario section must be present")
+    };
+    let with_replay = ablate(0.5);
+    let without = ablate(0.0);
+    assert_eq!(with_replay.shifts.len(), 2);
+    assert_eq!(without.shifts.len(), 2);
+    let on = with_replay.phase_accuracy(2);
+    let off = without.phase_accuracy(2);
+    assert!(
+        on > off,
+        "the A-return phase must score strictly better with replay on \
+         (replay={on:.4} ablated={off:.4})"
+    );
+    assert!(
+        with_replay.phase_accuracy(0) > 0.25,
+        "the learner must beat chance on the first domain before any shift \
+         (got {:.4})",
+        with_replay.phase_accuracy(0)
+    );
+}
+
+// ------------------------------------------------ churn bugfix regressions
+
+#[test]
+fn replay_segment_cap_holds_under_a_task_flood() {
+    // regression: one merge per commit cannot keep up with a churn storm
+    // that finalizes segments faster than it commits — the cap must be
+    // enforced by looping merges, and must hold immediately
+    let mut buf = ReplayBuffer::new(8, 0.0, 1.0, 7);
+    let mut rng = GaussianRng::new(7);
+    for _ in 0..40 {
+        buf.begin_task();
+    }
+    assert_eq!(buf.num_tasks(), 40);
+    let merges = buf.enforce_segment_cap(16, &mut rng);
+    assert_eq!(buf.num_tasks(), 16, "the cap must hold after one enforcement pass");
+    assert_eq!(merges, 24, "each merge folds two segments into one");
+    assert_eq!(buf.enforce_segment_cap(16, &mut rng), 0, "enforcement is idempotent");
+}
+
+#[test]
+fn ttl_sweep_boundary_is_exact_under_coalesced_tick_jumps() {
+    // regression pin: a session idle for exactly `ttl` ticks survives
+    // the sweep; `ttl + 1` expires it — including when the logical clock
+    // jumps several ticks at once (a lull phase coalesces waves)
+    let ttl = 10u64;
+    let mut s = SessionStore::new(4, 4, 4, 8, ttl);
+    s.get_or_create(1, 0);
+    s.get_or_create(2, 3);
+    assert_eq!(s.expire_idle(10), 0, "gap == ttl must survive");
+    assert!(s.contains(1) && s.contains(2));
+    // a coalesced jump lands past session 1's deadline but exactly on
+    // session 2's gap == ttl boundary
+    assert_eq!(s.expire_idle(13), 1, "gap 13 > ttl expires session 1 only");
+    assert!(!s.contains(1) && s.contains(2));
+    assert_eq!(s.expire_idle(14), 1, "one more tick expires session 2");
+    assert!(s.is_empty());
+    // gap 0 (created and swept on the same tick) never expires
+    s.get_or_create(3, 20);
+    assert_eq!(s.expire_idle(20), 0);
+    assert!(s.contains(3));
+}
+
+#[test]
+fn scenario_skip_is_exactly_n_discarded_nexts() {
+    // regression pin: `skip(n)` fast-forwards the whole scenario state
+    // machine (wave position, quota, active permutation, churn
+    // generation) — a resumed load generator continues the storm at the
+    // same point an uninterrupted one reaches
+    let cfg = storm();
+    let net = NetConfig::SMALL;
+    let mut a = SyntheticWorkload::with_scenario(&net, SESSIONS, 31, &cfg, ARRIVALS).unwrap();
+    let mut b = SyntheticWorkload::with_scenario(&net, SESSIONS, 31, &cfg, ARRIVALS).unwrap();
+    for _ in 0..93 {
+        let _ = a.next();
+    }
+    b.skip(93);
+    assert_eq!(a.wave_quota(), b.wave_quota(), "wave state must fast-forward");
+    for i in 0..60 {
+        assert_eq!(a.wave_quota(), b.wave_quota(), "drift at step {i}");
+        assert_eq!(a.next(), b.next(), "drift at step {i}");
+    }
+}
